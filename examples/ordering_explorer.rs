@@ -1,0 +1,86 @@
+//! Ordering explorer: interactively reproduce Table 1 cells — map a
+//! td-dimensional stencil onto a pd-dimensional torus with each SFC
+//! ordering and report AverageHops.
+//!
+//! ```bash
+//! cargo run --release --example ordering_explorer -- --td 2 --pd 3 --log2 12
+//! cargo run --release --example ordering_explorer -- --small   # quick sweep
+//! ```
+
+use taskmap::coordinator::table1::{average_hops_cell, Connectivity};
+use taskmap::sfc::PartOrdering;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    if args.iter().any(|a| a == "--small") || args.is_empty() {
+        // A quick sweep over interesting (td, pd) shapes.
+        println!(
+            "{:>4} {:>4} {:>8} | {:>8} {:>8} {:>8} {:>8}",
+            "td", "pd", "tasks", "H", "Z", "FZ", "MFZ"
+        );
+        for (td, pd) in [(1, 2), (2, 1), (2, 3), (3, 2), (2, 4), (3, 3), (1, 5)] {
+            let l = lcm(td, pd).max(10).next_multiple_of(lcm(td, pd));
+            let n = 1usize << l;
+            print!("{td:>4} {pd:>4} {n:>8} |");
+            for o in [
+                PartOrdering::Hilbert,
+                PartOrdering::Z,
+                PartOrdering::FZ,
+                PartOrdering::MFZ,
+            ] {
+                let v = average_hops_cell(n, pd, td, Connectivity::MeshToTorus, o);
+                print!(" {v:>8.2}");
+            }
+            println!();
+        }
+        println!("\n(MeshToTorus connectivity; MFZ uses task-side lower-half flips)");
+        return;
+    }
+    let td = get("--td", 2);
+    let pd = get("--pd", 3);
+    let l = get("--log2", 12) as u32;
+    let n = 1usize << l;
+    println!("mapping a {td}D stencil of {n} tasks onto a {pd}D block of {n} nodes\n");
+    println!("{:>14} {:>10} {:>10} {:>10}", "connectivity", "ordering", "AvgHops", "vs best");
+    for conn in Connectivity::ALL {
+        let mut results = Vec::new();
+        for o in [
+            PartOrdering::Hilbert,
+            PartOrdering::Z,
+            PartOrdering::FZ,
+            PartOrdering::MFZ,
+        ] {
+            results.push((o, average_hops_cell(n, pd, td, conn, o)));
+        }
+        let best = results
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(f64::INFINITY, f64::min);
+        for (o, v) in results {
+            println!(
+                "{:>14} {:>10} {:>10.2} {:>10.2}",
+                conn.name(),
+                o.name(),
+                v,
+                v / best
+            );
+        }
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    let gcd = |mut a: usize, mut b: usize| {
+        while b != 0 {
+            (a, b) = (b, a % b);
+        }
+        a
+    };
+    a / gcd(a, b) * b
+}

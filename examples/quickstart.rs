@@ -1,0 +1,69 @@
+//! Quickstart: map a 3D stencil application onto a sparse Cray XK7
+//! allocation and compare the geometric mapping against the default rank
+//! order.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use taskmap::apps::stencil::stencil_graph;
+use taskmap::machine::{cray_xk7, SparseAllocator};
+use taskmap::mapping::pipeline::{z2_map, Z2Config};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::metrics::eval_full;
+use taskmap::simulate::{comm_time, CommModel};
+
+fn main() {
+    // 1. The application: an 8x8x8 task grid, 7-point stencil, 1 MB faces.
+    let graph = stencil_graph(&[8, 8, 8], false, 1.0e6);
+    println!(
+        "application: {} tasks, {} edges, {:.1} MB total per exchange",
+        graph.num_tasks,
+        graph.edges.len(),
+        graph.total_volume() / 1e6
+    );
+
+    // 2. The machine: an 8x8x8 Gemini torus, 2 nodes per router, 16 cores
+    //    per node, 35% occupied by other jobs. Ask ALPS for 32 nodes.
+    let allocator = SparseAllocator {
+        machine: cray_xk7(&[8, 8, 8]),
+        nodes_per_router: 2,
+        ranks_per_node: 16,
+        occupancy: 0.35,
+    };
+    let alloc = allocator.allocate(512 / 16, 42);
+    println!(
+        "allocation: {} nodes / {} ranks on a {:?} torus",
+        alloc.num_nodes(),
+        alloc.num_ranks(),
+        alloc.torus.sizes
+    );
+
+    // 3. Map: default (task i -> rank i) vs the geometric Z2 mapper.
+    let default: Vec<u32> = (0..graph.num_tasks as u32).collect();
+    let z2 = z2_map(&graph, &graph.coords, &alloc, &Z2Config::z2_1(), &NativeBackend);
+
+    // 4. Compare metrics (Section 3) and simulated communication time.
+    let model = CommModel::default();
+    println!("\n{:<22} {:>12} {:>12}", "metric", "default", "Z2 (geometric)");
+    let md = eval_full(&graph, &default, &alloc);
+    let mz = eval_full(&graph, &z2, &alloc);
+    println!("{:<22} {:>12.2} {:>12.2}", "AverageHops", md.avg_hops, mz.avg_hops);
+    println!(
+        "{:<22} {:>12.3e} {:>12.3e}",
+        "WeightedHops", md.weighted_hops, mz.weighted_hops
+    );
+    let (ld, lz) = (md.link.unwrap(), mz.link.unwrap());
+    println!("{:<22} {:>12.3e} {:>12.3e}", "Data(M) bytes", ld.max_data, lz.max_data);
+    println!(
+        "{:<22} {:>12.3e} {:>12.3e}",
+        "Latency(M)", ld.max_latency, lz.max_latency
+    );
+    let td = comm_time(&graph, &default, &alloc, &model);
+    let tz = comm_time(&graph, &z2, &alloc, &model);
+    println!("{:<22} {:>12.4} {:>12.4}", "comm time (s)", td.total, tz.total);
+    println!(
+        "\ngeometric mapping reduces simulated communication time by {:.0}%",
+        (1.0 - tz.total / td.total) * 100.0
+    );
+}

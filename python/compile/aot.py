@@ -1,0 +1,69 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the rust coordinator loads the
+text with `HloModuleProto::from_text_file` and compiles it on the PJRT CPU
+client. HLO text — NOT `.serialize()` — is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are written to --outdir together with manifest.json describing
+the padded shapes, so the rust runtime can pick the smallest artifact that
+fits a request and pad up to it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .model import lower_batched_weighted_hops
+
+# (R candidates, E padded edges, D padded machine dims).
+#   - r36_* serves the full 3D rotation sweep (3! x 3! = 36 candidates).
+#   - r8_*  serves chunked sweeps and the +E / reduced-dimension variants.
+#   - r2_e1024 is the cheap smoke/test artifact.
+# D = 6 covers every machine in the paper (3D Gemini boxed to 6D by the
+# Z2_3 transform, 5D BG/Q + 1 padding dim).
+SHAPES = [
+    (2, 1024, 6),
+    (8, 16384, 6),
+    (36, 32768, 6),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"kernel": "batched_weighted_hops", "artifacts": []}
+    for r, e, d in SHAPES:
+        name = f"whops_r{r}_e{e}_d{d}.hlo.txt"
+        path = os.path.join(args.outdir, name)
+        text = to_hlo_text(lower_batched_weighted_hops(r, e, d))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"file": name, "r": r, "e": e, "d": d})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: batched weighted torus-hop reduction.
+
+This is the numeric hot spot of the paper's rotation sweep (Section 4.3):
+for each candidate mapping (a "rotation"), every task-graph edge is scored
+by the shortest-path hop distance between the routers its endpoints were
+mapped to, weighted by the message volume (Eqn. 3, WeightedHops).
+
+Inputs (per artifact, fixed shapes — rust pads to these):
+  src  : f32[R, E, D]  router coordinates of the edge source, per candidate
+  dst  : f32[R, E, D]  router coordinates of the edge destination
+  w    : f32[E]        message volume per edge (0 for padding edges)
+  dims : f32[D]        torus extent per machine dimension (1 for padding dims)
+  wrap : f32[D]        1.0 if the dimension has wraparound links, else 0.0
+Output:
+  out  : f32[R]        WeightedHops per candidate mapping
+
+Hop distance per dimension: mesh |d|, torus min(|d|, dims - |d|), selected
+per dimension by `wrap` so a single artifact serves mesh, torus, and mixed
+(e.g. BG/Q E-dimension) machines.
+
+TPU shaping notes (see DESIGN.md §Hardware-Adaptation): the edge list is
+streamed through VMEM in (1, BLOCK_E, D) blocks; the computation is a pure
+VPU elementwise + reduction (no MXU), so the kernel is bandwidth-bound and
+the only structural knob is the block size. The accumulator lives in the
+output ref; grid iteration over the E axis is sequential, which makes the
+`when(pid==0) zero; o += partial` accumulation pattern safe. Coordinates are
+small integers held in f32 (exact below 2^24).
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness is validated against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the edge axis. 1024 edges x 6 dims x 4 B x 2 operands
+# = 48 KiB of VMEM per block plus 4 KiB of weights: comfortably inside a
+# 16 MiB VMEM budget with double-buffering headroom (DESIGN.md section 7).
+# Perf note (EXPERIMENTS.md §Perf): A/B-measured against BLOCK_E=4096 on
+# the CPU-PJRT path (102 ms vs 112 ms for the r36/e32768 artifact) — the
+# smaller block wins there and keeps the TPU VMEM footprint minimal, so
+# 1024 stays.
+BLOCK_E = 1024
+
+
+def _whops_block_kernel(dims_ref, wrap_ref, src_ref, dst_ref, w_ref, o_ref):
+    """One (candidate r, edge-block e) grid step: o[r] += sum(w * hops)."""
+    delta = src_ref[...] - dst_ref[...]          # [1, BLOCK_E, D]
+    ad = jnp.abs(delta)
+    dims = dims_ref[...]                          # [D] broadcast over block
+    wrap = wrap_ref[...]
+    torus_hop = jnp.minimum(ad, dims - ad)
+    hop = jnp.where(wrap > 0.0, torus_hop, ad)    # [1, BLOCK_E, D]
+    hops = jnp.sum(hop, axis=-1)                  # [1, BLOCK_E]
+    partial = jnp.sum(w_ref[...] * hops[0])       # scalar
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_e",))
+def whops_pallas(src, dst, w, dims, wrap, *, block_e: int = BLOCK_E):
+    """Batched WeightedHops via the Pallas kernel.
+
+    Shapes: src/dst f32[R,E,D], w f32[E], dims/wrap f32[D] -> f32[R].
+    E must be a multiple of `block_e` (rust pads edges with w=0).
+    """
+    r, e, d = src.shape
+    if e % block_e != 0:
+        raise ValueError(f"E={e} must be a multiple of block_e={block_e}")
+    grid = (r, e // block_e)
+    return pl.pallas_call(
+        _whops_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i, j: (0,)),            # dims
+            pl.BlockSpec((d,), lambda i, j: (0,)),            # wrap
+            pl.BlockSpec((1, block_e, d), lambda i, j: (i, j, 0)),  # src
+            pl.BlockSpec((1, block_e, d), lambda i, j: (i, j, 0)),  # dst
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),      # w
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(dims, wrap, src, dst, w)

@@ -1,0 +1,47 @@
+"""L2 JAX model: the batched mapping-quality evaluator.
+
+The rust coordinator's rotation sweep (Section 4.3 of the paper) produces a
+batch of candidate mappings; each candidate determines, for every task-graph
+edge, the router coordinates of the two endpoints. This module is the
+compute graph that scores the whole batch in one call — it wraps the L1
+Pallas kernel (kernels/whops.py) so that both lower into the same HLO
+module.
+
+`aot.py` lowers `batched_weighted_hops` at a fixed set of padded shapes and
+writes HLO text artifacts; rust/src/runtime/ loads and executes them via
+PJRT with zero Python on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels.whops import whops_pallas, BLOCK_E
+
+
+def batched_weighted_hops(src, dst, w, dims, wrap):
+    """WeightedHops for a batch of candidate mappings.
+
+    src, dst : f32[R, E, D] mapped router coordinates per edge endpoint
+    w        : f32[E]       message volumes (0 = padding edge)
+    dims     : f32[D]       machine extent per dimension (1 = padding dim)
+    wrap     : f32[D]       1.0 where the dimension is a torus ring
+    returns  : f32[R]
+    """
+    block_e = BLOCK_E if src.shape[1] % BLOCK_E == 0 else src.shape[1]
+    return (whops_pallas(src, dst, w, dims, wrap, block_e=block_e),)
+
+
+def lower_batched_weighted_hops(r: int, e: int, d: int):
+    """jax.jit(...).lower at a concrete padded shape (AOT entry point)."""
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(batched_weighted_hops).lower(
+        spec((r, e, d), f32),
+        spec((r, e, d), f32),
+        spec((e,), f32),
+        spec((d,), f32),
+        spec((d,), f32),
+    )

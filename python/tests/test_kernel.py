@@ -1,0 +1,103 @@
+"""L1 correctness: the Pallas whops kernel vs the pure-jnp oracle.
+
+This is the core build-time correctness signal for the kernel layer:
+hypothesis sweeps shapes and coordinate/weight contents, and the kernel must
+match kernels/ref.py to f32 tolerance for every case.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import weighted_hops_ref, hop_distance_ref
+from compile.kernels.whops import whops_pallas
+
+
+def _rand_case(rng, r, e, d, max_extent=16, torus=True):
+    dims = rng.integers(1, max_extent + 1, size=d).astype(np.float32)
+    src = (rng.integers(0, 1 << 20, size=(r, e, d)) % dims).astype(np.float32)
+    dst = (rng.integers(0, 1 << 20, size=(r, e, d)) % dims).astype(np.float32)
+    w = rng.uniform(0.0, 8.0, size=e).astype(np.float32)
+    wrap = (
+        np.ones(d, dtype=np.float32)
+        if torus
+        else rng.integers(0, 2, size=d).astype(np.float32)
+    )
+    return src, dst, w, dims, wrap
+
+
+def _check(src, dst, w, dims, wrap, block_e):
+    got = np.asarray(whops_pallas(src, dst, w, dims, wrap, block_e=block_e))
+    want = np.asarray(weighted_hops_ref(src, dst, w, dims, wrap))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("r,e,d,block_e", [
+    (1, 64, 1, 64),
+    (2, 128, 3, 64),
+    (4, 256, 6, 128),
+    (36, 512, 6, 256),
+    (3, 1024, 5, 1024),
+])
+def test_kernel_matches_ref_fixed(r, e, d, block_e):
+    rng = np.random.default_rng(42 + r + e + d)
+    _check(*_rand_case(rng, r, e, d), block_e=block_e)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 8),
+    eb=st.integers(1, 8),
+    d=st.integers(1, 6),
+    torus=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(r, eb, d, torus, seed):
+    rng = np.random.default_rng(seed)
+    e = eb * 32
+    src, dst, w, dims, wrap = _rand_case(rng, r, e, d, torus=torus)
+    _check(src, dst, w, dims, wrap, block_e=32)
+
+
+def test_padding_edges_contribute_zero():
+    """Padding contract: w=0 edges must not change the result."""
+    rng = np.random.default_rng(7)
+    src, dst, w, dims, wrap = _rand_case(rng, 3, 128, 4)
+    base = np.asarray(whops_pallas(src, dst, w, dims, wrap, block_e=64))
+    src2 = np.concatenate([src, rng.uniform(0, 5, (3, 64, 4)).astype(np.float32)], axis=1)
+    dst2 = np.concatenate([dst, rng.uniform(0, 5, (3, 64, 4)).astype(np.float32)], axis=1)
+    w2 = np.concatenate([w, np.zeros(64, np.float32)])
+    padded = np.asarray(whops_pallas(src2, dst2, w2, dims, wrap, block_e=64))
+    np.testing.assert_allclose(padded, base, rtol=1e-6)
+
+
+def test_padding_dims_contribute_zero():
+    """Padding contract: size-1 torus dims add zero hops."""
+    rng = np.random.default_rng(8)
+    src, dst, w, dims, wrap = _rand_case(rng, 2, 128, 3)
+    base = np.asarray(whops_pallas(src, dst, w, dims, wrap, block_e=128))
+    pad = lambda a: np.concatenate([a, np.zeros(a.shape[:-1] + (2,), np.float32)], axis=-1)
+    dims2 = np.concatenate([dims, np.ones(2, np.float32)])
+    wrap2 = np.concatenate([wrap, np.ones(2, np.float32)])
+    padded = np.asarray(whops_pallas(pad(src), pad(dst), w, dims2, wrap2, block_e=128))
+    np.testing.assert_allclose(padded, base, rtol=1e-6)
+
+
+def test_torus_vs_mesh_distance():
+    """Known-answer: on a ring of 8, dist(0,7) is 1 (torus) vs 7 (mesh)."""
+    src = np.zeros((1, 32, 1), np.float32)
+    dst = np.full((1, 32, 1), 7.0, np.float32)
+    w = np.ones(32, np.float32)
+    dims = np.array([8.0], np.float32)
+    got_t = np.asarray(whops_pallas(src, dst, w, dims, np.ones(1, np.float32), block_e=32))
+    got_m = np.asarray(whops_pallas(src, dst, w, dims, np.zeros(1, np.float32), block_e=32))
+    assert got_t[0] == pytest.approx(32.0)
+    assert got_m[0] == pytest.approx(224.0)
+
+
+def test_hop_distance_ref_symmetry():
+    rng = np.random.default_rng(11)
+    src, dst, _, dims, wrap = _rand_case(rng, 1, 256, 5)
+    a = np.asarray(hop_distance_ref(src, dst, dims, wrap))
+    b = np.asarray(hop_distance_ref(dst, src, dims, wrap))
+    np.testing.assert_allclose(a, b)

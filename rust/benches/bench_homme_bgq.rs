@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 2 and Figs 8-9 (HOMME on BG/Q). Small scale by
+//! default; `--full` for the paper's 98,304-element / 32K-rank runs.
+
+use taskmap::coordinator::{experiments, Ctx};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ctx = Ctx::new(full, 42, false);
+    eprintln!("backend: {}", ctx.backend_name());
+    for id in ["table2", "fig8", "fig9"] {
+        let t0 = std::time::Instant::now();
+        for t in experiments::run(id, &ctx).unwrap() {
+            println!("{}", t.markdown());
+        }
+        println!("[{id}] regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Figs 10-12 (HOMME on Titan, sparse allocations).
+//! Small scale by default; `--full` for the 86,400-element / 86K-proc runs.
+
+use taskmap::coordinator::{experiments, Ctx};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ctx = Ctx::new(full, 42, false);
+    eprintln!("backend: {}", ctx.backend_name());
+    for id in ["fig10", "fig11", "fig12"] {
+        let t0 = std::time::Instant::now();
+        for t in experiments::run(id, &ctx).unwrap() {
+            println!("{}", t.markdown());
+        }
+        println!("[{id}] regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,31 @@
+//! Microbenchmarks: metric evaluation (hop counting, routing + link
+//! accumulation) — the other L3 hot path.
+
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::machine::{cray_xk7, SparseAllocator};
+use taskmap::metrics::{eval_full, eval_hops};
+use taskmap::testutil::bench::bench;
+
+fn main() {
+    println!("== metrics engine ==");
+    for (procs, dims) in [(4_096usize, [16usize, 16, 16]), (32_768, [32, 32, 32])] {
+        let mg = MiniGhost::weak_scaling(dims);
+        let graph = mg.graph();
+        let allocator = SparseAllocator {
+            machine: cray_xk7(&[16, 12, 16]),
+            nodes_per_router: 2,
+            ranks_per_node: 16,
+            occupancy: 0.3,
+        };
+        let alloc = allocator.allocate(procs / 16, 42);
+        let mapping = mg.default_order();
+        bench(
+            &format!("eval_hops   minighost procs={procs} edges={}", graph.edges.len()),
+            || eval_hops(&graph, &mapping, &alloc),
+        );
+        bench(
+            &format!("eval_full   minighost procs={procs} edges={}", graph.edges.len()),
+            || eval_full(&graph, &mapping, &alloc),
+        );
+    }
+}

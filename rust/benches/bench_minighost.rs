@@ -1,0 +1,17 @@
+//! Bench: regenerate Figs 13-15 (MiniGhost weak scaling on the Cray XK7
+//! model). Small scale by default; `--full` for 8K-128K procs.
+
+use taskmap::coordinator::{experiments, Ctx};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ctx = Ctx::new(full, 42, false);
+    eprintln!("backend: {}", ctx.backend_name());
+    for id in ["fig13", "fig14", "fig15"] {
+        let t0 = std::time::Instant::now();
+        for t in experiments::run(id, &ctx).unwrap() {
+            println!("{}", t.markdown());
+        }
+        println!("[{id}] regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+}

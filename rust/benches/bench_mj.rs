@@ -1,0 +1,55 @@
+//! Microbenchmarks: the MJ partitioner (the L3 hot path of Algorithm 1)
+//! across sizes, orderings, and cut-selection policies.
+
+use taskmap::geom::Coords;
+use taskmap::mj::{mj_partition, MjConfig};
+use taskmap::sfc::hilbert::hilbert_sort_f64;
+use taskmap::sfc::PartOrdering;
+use taskmap::testutil::bench::bench;
+use taskmap::testutil::Rng;
+
+fn random_coords(n: usize, dim: usize, seed: u64) -> Coords {
+    let mut rng = Rng::new(seed);
+    let mut c = Coords::with_capacity(dim, n);
+    let mut p = vec![0f64; dim];
+    for _ in 0..n {
+        for x in p.iter_mut() {
+            *x = rng.below(1 << 16) as f64;
+        }
+        c.push(&p);
+    }
+    c
+}
+
+fn main() {
+    println!("== MJ partitioner ==");
+    for &n in &[4_096usize, 65_536, 262_144] {
+        let c = random_coords(n, 3, 42);
+        let cfg = MjConfig::default();
+        bench(&format!("mj_partition FZ longest n={n} p={n}"), || {
+            mj_partition(&c, n, &cfg)
+        });
+    }
+    let c = random_coords(65_536, 3, 42);
+    for ordering in [PartOrdering::Z, PartOrdering::Gray, PartOrdering::FZ] {
+        let cfg = MjConfig {
+            ordering,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        bench(
+            &format!("mj_partition {} alternating n=65536", ordering.name()),
+            || mj_partition(&c, 65_536, &cfg),
+        );
+    }
+    // Coarse partitions (tnum >> parts): the simultaneous map+partition
+    // case.
+    let cfg = MjConfig::default();
+    bench("mj_partition FZ n=262144 p=1024", || {
+        mj_partition(&random_coords(262_144, 3, 7), 1_024, &cfg)
+    });
+    // Hilbert ranking for comparison (the H ordering path).
+    bench("hilbert_sort_f64 n=65536 d=3", || {
+        hilbert_sort_f64(&c, 16)
+    });
+}

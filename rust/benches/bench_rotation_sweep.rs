@@ -1,0 +1,78 @@
+//! The rotation sweep (Section 4.3): native vs PJRT WeightedHops scoring —
+//! the L1/L2/runtime integration hot path.
+
+use taskmap::apps::stencil::stencil_graph;
+use taskmap::machine::{Allocation, Torus};
+use taskmap::mapping::rotations::{
+    rotation_sweep, score_mappings, NativeBackend, SweepConfig, WhopsBackend,
+};
+use taskmap::mapping::MapConfig;
+use taskmap::metrics::native::batched_weighted_hops_native;
+use taskmap::runtime::PjrtBackend;
+use taskmap::testutil::bench::{bench, bench_quick};
+use taskmap::testutil::Rng;
+
+fn main() {
+    println!("== rotation sweep / WeightedHops backends ==");
+    // Raw kernel comparison at the main artifact shape.
+    let (r, e, d) = (36usize, 32_768usize, 6usize);
+    let mut rng = Rng::new(1);
+    let dims: Vec<f32> = (0..d).map(|_| 16.0).collect();
+    let wrap = vec![1f32; d];
+    let src: Vec<f32> = (0..r * e * d).map(|_| rng.below(16) as f32).collect();
+    let dst: Vec<f32> = (0..r * e * d).map(|_| rng.below(16) as f32).collect();
+    let w: Vec<f32> = (0..e).map(|_| 1.0).collect();
+    bench(&format!("native whops r={r} e={e} d={d}"), || {
+        batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d)
+    });
+    if let Some(backend) = PjrtBackend::try_default() {
+        bench_quick(&format!("pjrt   whops r={r} e={e} d={d}"), || {
+            backend.eval_batch(&src, &dst, &w, &dims, &wrap, r, e, d)
+        });
+    } else {
+        println!("(pjrt artifacts not built; run `make artifacts` for the PJRT rows)");
+    }
+
+    // End-to-end sweep on a 16x16x16 stencil -> 4096-node torus.
+    let g = stencil_graph(&[16, 16, 16], false, 1.0);
+    let torus = Torus::torus(&[16, 16, 16]);
+    let alloc = Allocation {
+        torus,
+        core_router: (0..4096u32).collect(),
+        core_node: (0..4096u32).collect(),
+        ranks_per_node: 1,
+    };
+    let p = alloc.proc_coords();
+    let sweep = SweepConfig {
+        max_candidates: 12,
+        ..Default::default()
+    };
+    bench_quick("rotation_sweep 12 candidates, 4096 tasks (native)", || {
+        rotation_sweep(
+            &g,
+            &g.coords,
+            &p,
+            &alloc,
+            &MapConfig::default(),
+            &sweep,
+            &NativeBackend,
+        )
+    });
+    // Scoring only (mapping excluded) to separate partition vs evaluation.
+    let mappings: Vec<Vec<u32>> = (0..12)
+        .map(|s| {
+            let mut m: Vec<u32> = (0..4096).collect();
+            let mut rng = Rng::new(s);
+            rng.shuffle(&mut m);
+            m
+        })
+        .collect();
+    bench("score 12 mappings x 11k edges (native)", || {
+        score_mappings(&g, &mappings, &alloc, &NativeBackend, 32768)
+    });
+    if let Some(backend) = PjrtBackend::try_default() {
+        bench_quick("score 12 mappings x 11k edges (pjrt)", || {
+            score_mappings(&g, &mappings, &alloc, &backend, 32768)
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Table 1 (AverageHops per SFC ordering). Small scale by
+//! default; `--full` for the paper's sizes.
+
+use taskmap::coordinator::{table1, Ctx};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ctx = Ctx::new(full, 42, true);
+    let t0 = std::time::Instant::now();
+    for t in table1::run(&ctx) {
+        println!("{}", t.markdown());
+    }
+    println!("table1 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,353 @@
+//! E3SM/HOMME atmospheric dynamical core (Sections 5.2–5.3.1): a spectral
+//! element mesh on the cube-sphere.
+//!
+//! The sphere is projected onto a cube with six `ne x ne` faces of
+//! quadrilateral surface elements; each element is a vertical atmosphere
+//! column and one task. Tasks communicate with edge-adjacent elements
+//! (including across cube-face boundaries).
+//!
+//! Coordinate representations (Fig. 7):
+//! * `sphere` — 3D element centroids on the unit sphere,
+//! * `cube`   — 3D centroids on the cube surface (before normalization),
+//! * `face2d` — the cube unfolded: the four equatorial faces form a ring in
+//!   x (which connects the furthest elements along x, matching the torus
+//!   wraparound exploited by the mapper), with the polar faces above/below
+//!   face 0.
+//!
+//! The default HOMME partition/mapping uses per-face Hilbert SFCs
+//! (Section 5.2, "SFC").
+
+use super::{Edge, TaskGraph};
+use crate::geom::Coords;
+use crate::sfc::hilbert::hilbert_index;
+use std::collections::HashMap;
+
+/// Which geometric representation of the elements to expose as task
+/// coordinates (Fig. 7 and the "Application Specific Optimizations" of
+/// Section 5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HommeCoords {
+    Sphere,
+    Cube,
+    Face2D,
+}
+
+impl HommeCoords {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HommeCoords::Sphere => "Sphere",
+            HommeCoords::Cube => "Cube",
+            HommeCoords::Face2D => "2DFace",
+        }
+    }
+}
+
+/// HOMME cube-sphere workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Homme {
+    /// Elements along each edge of each cube face (paper: 128 on Mira,
+    /// 120 on Titan).
+    pub ne: usize,
+    /// Message volume per element-edge exchange, bytes. HOMME's halo
+    /// exchanges carry np x nlev spectral data for several fields; the
+    /// paper's operative fact is that messages are *large* (Section 5.3.1),
+    /// so the default is 64 KiB per element edge.
+    pub edge_bytes: f64,
+}
+
+/// Face axes: (center, u-tangent, v-tangent) of each cube face. The four
+/// equatorial faces 0..3 ring the equator west-to-east; 4 is the north pole,
+/// 5 the south.
+const FACES: [([f64; 3], [f64; 3], [f64; 3]); 6] = [
+    ([1., 0., 0.], [0., 1., 0.], [0., 0., 1.]),   // +X
+    ([0., 1., 0.], [-1., 0., 0.], [0., 0., 1.]),  // +Y
+    ([-1., 0., 0.], [0., -1., 0.], [0., 0., 1.]), // -X
+    ([0., -1., 0.], [1., 0., 0.], [0., 0., 1.]),  // -Y
+    ([0., 0., 1.], [0., 1., 0.], [-1., 0., 0.]),  // +Z (north)
+    ([0., 0., -1.], [0., 1., 0.], [1., 0., 0.]),  // -Z (south)
+];
+
+impl Homme {
+    pub fn new(ne: usize) -> Self {
+        Homme {
+            ne,
+            edge_bytes: 65536.0,
+        }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        6 * self.ne * self.ne
+    }
+
+    #[inline]
+    fn elem_id(&self, face: usize, i: usize, j: usize) -> usize {
+        (face * self.ne + j) * self.ne + i
+    }
+
+    /// 3D cube-surface position of the center of element `(face, i, j)`,
+    /// scaled by `2*ne` so all element centers and edge midpoints are exact
+    /// integers (used for watertight cross-face adjacency).
+    fn cube_center_scaled(&self, face: usize, i: usize, j: usize) -> [i64; 3] {
+        // Local coordinates in (-ne, ne): center of cell (i,j) is at
+        // (2i+1-ne, 2j+1-ne); the face itself is at +/- ne along its axis.
+        let (c, u, v) = (FACES[face].0, FACES[face].1, FACES[face].2);
+        let a = (2 * i as i64 + 1) - self.ne as i64;
+        let b = (2 * j as i64 + 1) - self.ne as i64;
+        let ne = self.ne as i64;
+        let mut p = [0i64; 3];
+        for k in 0..3 {
+            p[k] = (c[k] as i64) * ne + a * (u[k] as i64) + b * (v[k] as i64);
+        }
+        p
+    }
+
+    /// The four edge-midpoints of element `(face, i, j)` on the scaled cube
+    /// surface. Elements sharing an edge — within a face or across faces —
+    /// share exactly one midpoint, which makes adjacency a hash join rather
+    /// than a per-face-pair orientation table.
+    fn edge_midpoints_scaled(&self, face: usize, i: usize, j: usize) -> [[i64; 3]; 4] {
+        let (c, u, v) = (FACES[face].0, FACES[face].1, FACES[face].2);
+        let ne = self.ne as i64;
+        let a = (2 * i as i64 + 1) - ne;
+        let b = (2 * j as i64 + 1) - ne;
+        let mk = |da: i64, db: i64| -> [i64; 3] {
+            let mut p = [0i64; 3];
+            for k in 0..3 {
+                p[k] = (c[k] as i64) * ne + (a + da) * (u[k] as i64) + (b + db) * (v[k] as i64);
+            }
+            // Clamp to the cube surface: midpoints on a face edge stick out
+            // along the tangent; project them onto the cube (|coord| <= ne).
+            for x in &mut p {
+                *x = (*x).clamp(-ne, ne);
+            }
+            p
+        };
+        [mk(-1, 0), mk(1, 0), mk(0, -1), mk(0, 1)]
+    }
+
+    /// Build the element communication graph (edge-adjacent elements).
+    pub fn graph(&self) -> TaskGraph {
+        let ne = self.ne;
+        let mut mid_owner: HashMap<[i64; 3], u32> = HashMap::with_capacity(self.num_tasks() * 2);
+        let mut edges = Vec::with_capacity(self.num_tasks() * 2);
+        for face in 0..6 {
+            for j in 0..ne {
+                for i in 0..ne {
+                    let id = self.elem_id(face, i, j) as u32;
+                    for mid in self.edge_midpoints_scaled(face, i, j) {
+                        match mid_owner.entry(mid) {
+                            std::collections::hash_map::Entry::Occupied(o) => {
+                                let other = *o.get();
+                                debug_assert_ne!(other, id);
+                                edges.push(Edge {
+                                    u: other.min(id),
+                                    v: other.max(id),
+                                    w: self.edge_bytes,
+                                });
+                            }
+                            std::collections::hash_map::Entry::Vacant(s) => {
+                                s.insert(id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        TaskGraph {
+            num_tasks: self.num_tasks(),
+            edges,
+            coords: self.coords(HommeCoords::Sphere),
+        }
+    }
+
+    /// Task coordinates under the chosen representation.
+    pub fn coords(&self, which: HommeCoords) -> Coords {
+        let ne = self.ne;
+        match which {
+            HommeCoords::Cube | HommeCoords::Sphere => {
+                let mut c = Coords::with_capacity(3, self.num_tasks());
+                for face in 0..6 {
+                    for j in 0..ne {
+                        for i in 0..ne {
+                            let p = self.cube_center_scaled(face, i, j);
+                            let mut v = [
+                                p[0] as f64 / (2 * ne) as f64,
+                                p[1] as f64 / (2 * ne) as f64,
+                                p[2] as f64 / (2 * ne) as f64,
+                            ];
+                            if which == HommeCoords::Sphere {
+                                let norm =
+                                    (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+                                for x in &mut v {
+                                    *x /= norm;
+                                }
+                            }
+                            c.push(&v);
+                        }
+                    }
+                }
+                c
+            }
+            HommeCoords::Face2D => {
+                // Unfold: equatorial faces 0..3 side by side (x ring of
+                // extent 4*ne); polar faces above/below face 0.
+                let mut c = Coords::with_capacity(2, self.num_tasks());
+                for face in 0..6 {
+                    for j in 0..ne {
+                        for i in 0..ne {
+                            let (x, y) = match face {
+                                0..=3 => ((face * ne + i) as f64, j as f64),
+                                4 => (i as f64, (ne + j) as f64), // north above
+                                _ => (i as f64, -((ne - j) as f64)), // south below
+                            };
+                            c.push(&[x, y]);
+                        }
+                    }
+                }
+                c
+            }
+        }
+    }
+
+    /// HOMME's default partition+mapping: per-face Hilbert SFC. Elements are
+    /// ordered face by face, Hilbert within the face; the order is chopped
+    /// into `num_parts` contiguous chunks; rank = chunk index (Section 5.2,
+    /// "the mapping is the output part number from the SFC").
+    ///
+    /// Returns `part_of_task` (which is also `rank_of_task` when one part
+    /// per rank).
+    pub fn sfc_partition(&self, num_parts: usize) -> Vec<u32> {
+        let ne = self.ne;
+        let n = self.num_tasks();
+        assert!(num_parts >= 1 && num_parts <= n);
+        let bits = 1 + (ne as u64).next_power_of_two().trailing_zeros();
+        // Global element order: faces in sequence, Hilbert within each.
+        let mut order = Vec::with_capacity(n);
+        for face in 0..6 {
+            let mut keyed: Vec<(u128, usize)> = Vec::with_capacity(ne * ne);
+            for j in 0..ne {
+                for i in 0..ne {
+                    keyed.push((
+                        hilbert_index(&[i as u64, j as u64], bits),
+                        self.elem_id(face, i, j),
+                    ));
+                }
+            }
+            keyed.sort_unstable();
+            order.extend(keyed.into_iter().map(|(_, id)| id));
+        }
+        // Chop into equal chunks (remainder spread over the first chunks).
+        let mut part_of = vec![0u32; n];
+        let base = n / num_parts;
+        let extra = n % num_parts;
+        let mut pos = 0usize;
+        for p in 0..num_parts {
+            let len = base + usize::from(p < extra);
+            for _ in 0..len {
+                part_of[order[pos]] = p as u32;
+                pos += 1;
+            }
+        }
+        part_of
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_count() {
+        let h = Homme::new(8);
+        assert_eq!(h.num_tasks(), 384);
+    }
+
+    #[test]
+    fn graph_is_4_regular() {
+        // Every cube-sphere element has exactly 4 edge neighbors (closed
+        // surface, no boundary).
+        let h = Homme::new(6);
+        let g = h.graph();
+        g.validate().unwrap();
+        let deg = g.degrees();
+        assert!(
+            deg.iter().all(|&d| d == 4),
+            "degrees: min {} max {}",
+            deg.iter().min().unwrap(),
+            deg.iter().max().unwrap()
+        );
+        // Closed surface: |E| = 2 * |V|.
+        assert_eq!(g.edges.len(), 2 * g.num_tasks);
+    }
+
+    #[test]
+    fn no_duplicate_edges() {
+        let h = Homme::new(4);
+        let g = h.graph();
+        let mut seen = std::collections::HashSet::new();
+        for e in &g.edges {
+            assert!(seen.insert((e.u, e.v)), "dup edge {:?}", (e.u, e.v));
+        }
+    }
+
+    #[test]
+    fn sphere_coords_unit_norm() {
+        let h = Homme::new(4);
+        let c = h.coords(HommeCoords::Sphere);
+        for i in 0..c.len() {
+            let p = c.point_vec(i);
+            let n = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cube_coords_on_surface() {
+        let h = Homme::new(4);
+        let c = h.coords(HommeCoords::Cube);
+        for i in 0..c.len() {
+            let p = c.point_vec(i);
+            let m = p.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            assert!((m - 0.5).abs() < 1e-12, "not on cube surface: {p:?}");
+        }
+    }
+
+    #[test]
+    fn face2d_ring_extent() {
+        let h = Homme::new(8);
+        let c = h.coords(HommeCoords::Face2D);
+        let bb = c.bbox();
+        assert_eq!(bb.hi[0] - bb.lo[0] + 1.0, 32.0); // 4*ne ring
+    }
+
+    #[test]
+    fn sfc_partition_balanced() {
+        let h = Homme::new(8);
+        let parts = h.sfc_partition(16);
+        let mut counts = vec![0usize; 16];
+        for &p in &parts {
+            counts[p as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 384 / 16));
+    }
+
+    #[test]
+    fn sfc_partition_is_connected_within_face() {
+        // Parts from a Hilbert SFC on one face should be compact: the
+        // average intra-part spread must be far below random assignment.
+        let h = Homme::new(16);
+        let parts = h.sfc_partition(96); // 16 elements per part
+        let g = h.graph();
+        // Count cut edges; SFC partition should cut far fewer than half.
+        let cut = g
+            .edges
+            .iter()
+            .filter(|e| parts[e.u as usize] != parts[e.v as usize])
+            .count();
+        assert!(
+            (cut as f64) < 0.35 * g.edges.len() as f64,
+            "cut fraction {}",
+            cut as f64 / g.edges.len() as f64
+        );
+    }
+}

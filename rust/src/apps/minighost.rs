@@ -1,0 +1,156 @@
+//! MiniGhost proxy application (Section 5.3.2): a 3D seven-point-stencil
+//! finite-difference mini-app with explicit time stepping.
+//!
+//! Tasks own `cells^3`-cell subgrids of a `tx x ty x tz` task grid; subgrids
+//! are assigned to tasks sweeping x first, then y, then z, so task `i`
+//! communicates with `i±1`, `i±tx`, `i±tx·ty` (non-periodic boundaries).
+//! Per exchange, a face of `cells^2` points for each of `nvars` variables is
+//! sent (8-byte values): with the paper's 60^3 / 40-variable configuration
+//! that is 60·60·8·40 = 1.152 MB — the "about 1 MB" messages of
+//! Section 5.3.2.
+
+use super::{stencil::stencil_graph, TaskGraph};
+
+/// MiniGhost workload configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MiniGhost {
+    /// Task grid extents (tnum_x, tnum_y, tnum_z).
+    pub tdims: [usize; 3],
+    /// Cells per task per dimension (paper: 60).
+    pub cells: usize,
+    /// Variables per grid point (paper: 40).
+    pub nvars: usize,
+}
+
+impl MiniGhost {
+    /// The paper's weak-scaling configuration for a given task count:
+    /// 60x60x60 cells per task, 40 variables.
+    pub fn weak_scaling(tdims: [usize; 3]) -> Self {
+        MiniGhost {
+            tdims,
+            cells: 60,
+            nvars: 40,
+        }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tdims.iter().product()
+    }
+
+    /// Face-exchange message volume in bytes.
+    pub fn face_bytes(&self) -> f64 {
+        (self.cells * self.cells * self.nvars * 8) as f64
+    }
+
+    /// The task communication graph: 3D mesh stencil (non-periodic), task
+    /// coordinates = subgrid indices (the subgrid center in units of
+    /// subgrids — identical geometry, cheaper numbers).
+    pub fn graph(&self) -> TaskGraph {
+        stencil_graph(&self.tdims, false, self.face_bytes())
+    }
+
+    /// Default MiniGhost mapping: task `i` is performed by rank `i`.
+    pub fn default_order(&self) -> Vec<u32> {
+        (0..self.num_tasks() as u32).collect()
+    }
+
+    /// MiniGhost's application-specific `Group` mapping for multicore nodes
+    /// (Section 5.3.2): tasks are reordered into 2x2x4 blocks so the 16
+    /// tasks of a block land on the 16 cores of one node.
+    ///
+    /// Returns `rank_of_task`: task `t` runs on rank `group[t]`.
+    pub fn group_order(&self) -> Vec<u32> {
+        self.block_order([2, 2, 4])
+    }
+
+    /// General block reorder: tasks are visited block-by-block (blocks in
+    /// x-then-y-then-z order, tasks within a block likewise) and assigned
+    /// consecutive ranks. Handles non-divisible extents with partial edge
+    /// blocks.
+    pub fn block_order(&self, block: [usize; 3]) -> Vec<u32> {
+        let [tx, ty, tz] = self.tdims;
+        let nb = [tx.div_ceil(block[0]), ty.div_ceil(block[1]), tz.div_ceil(block[2])];
+        let mut rank_of_task = vec![0u32; self.num_tasks()];
+        let mut next_rank = 0u32;
+        for bz in 0..nb[2] {
+            for by in 0..nb[1] {
+                for bx in 0..nb[0] {
+                    for z in (bz * block[2])..((bz * block[2] + block[2]).min(tz)) {
+                        for y in (by * block[1])..((by * block[1] + block[1]).min(ty)) {
+                            for x in (bx * block[0])..((bx * block[0] + block[0]).min(tx)) {
+                                let task = x + tx * (y + ty * z);
+                                rank_of_task[task] = next_rank;
+                                next_rank += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        rank_of_task
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_message_size() {
+        let mg = MiniGhost::weak_scaling([8, 8, 8]);
+        assert_eq!(mg.face_bytes(), 1_152_000.0); // ~1 MB, as in the paper
+    }
+
+    #[test]
+    fn graph_shape() {
+        let mg = MiniGhost::weak_scaling([4, 4, 2]);
+        let g = mg.graph();
+        assert_eq!(g.num_tasks, 32);
+        g.validate().unwrap();
+        // Interior tasks have 6 neighbors, corners 3.
+        let deg = g.degrees();
+        assert_eq!(deg[0], 3);
+    }
+
+    #[test]
+    fn default_order_is_identity() {
+        let mg = MiniGhost::weak_scaling([2, 2, 2]);
+        assert_eq!(mg.default_order(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn group_order_is_permutation() {
+        let mg = MiniGhost::weak_scaling([4, 4, 8]);
+        let order = mg.group_order();
+        let mut s = order.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..mg.num_tasks() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn group_blocks_are_rank_contiguous() {
+        // The 16 tasks of the first 2x2x4 block must get ranks 0..16.
+        let mg = MiniGhost::weak_scaling([4, 4, 8]);
+        let order = mg.group_order();
+        let mut block_ranks = Vec::new();
+        for z in 0..4 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    let task = x + 4 * (y + 4 * z);
+                    block_ranks.push(order[task]);
+                }
+            }
+        }
+        block_ranks.sort_unstable();
+        assert_eq!(block_ranks, (0..16).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn group_handles_non_divisible() {
+        let mg = MiniGhost::weak_scaling([3, 3, 5]);
+        let order = mg.group_order();
+        let mut s = order.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..45u32).collect::<Vec<_>>());
+    }
+}

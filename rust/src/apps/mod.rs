@@ -1,0 +1,76 @@
+//! Application workload generators: the task-communication graphs and task
+//! coordinates (Section 3's `G_t` plus the geometric representation of
+//! Section 4) for the paper's workloads.
+//!
+//! * `stencil` — generic td-dimensional mesh/torus nearest-neighbor graphs
+//!   (the Table 1 workloads).
+//! * `minighost` — the MiniGhost proxy app: 3D 7-point stencil, x-then-y-
+//!   then-z task numbering, `Group` 2x2x4 reordering (Section 5.3.2).
+//! * `homme` — E3SM/HOMME: cube-sphere spectral-element mesh, sphere/cube/
+//!   2D-face coordinates (Fig. 7), default Hilbert SFC partition
+//!   (Sections 5.2–5.3.1).
+
+pub mod homme;
+pub mod minighost;
+pub mod stencil;
+
+use crate::geom::Coords;
+
+/// An undirected communication edge between two tasks with a message volume
+/// (bytes per exchange, the `w(t1,t2)` of Section 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+    pub w: f64,
+}
+
+/// The task communication graph `G_t` plus task coordinates.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    pub num_tasks: usize,
+    pub edges: Vec<Edge>,
+    /// Task coordinates (`tcoords` of Algorithm 1): the centroid of each
+    /// task's application domain.
+    pub coords: Coords,
+}
+
+impl TaskGraph {
+    /// Validate internal consistency (debug/test helper).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.coords.len() != self.num_tasks {
+            return Err(format!(
+                "coords len {} != num_tasks {}",
+                self.coords.len(),
+                self.num_tasks
+            ));
+        }
+        for e in &self.edges {
+            if e.u as usize >= self.num_tasks || e.v as usize >= self.num_tasks {
+                return Err(format!("edge ({}, {}) out of range", e.u, e.v));
+            }
+            if e.u == e.v {
+                return Err(format!("self-loop at {}", e.u));
+            }
+            if !(e.w > 0.0) {
+                return Err(format!("non-positive weight {} on ({},{})", e.w, e.u, e.v));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total communication volume (sum of edge weights).
+    pub fn total_volume(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+
+    /// Degree of each task.
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_tasks];
+        for e in &self.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        deg
+    }
+}

@@ -1,0 +1,158 @@
+//! Generic td-dimensional stencil task graphs (the Table 1 workloads):
+//! tasks on a regular grid, each communicating with its immediate neighbors
+//! along every dimension; optional wraparound ("torus-connected tasks").
+
+use super::{Edge, TaskGraph};
+use crate::geom::Coords;
+
+/// Build a td-dimensional stencil graph over a `dims` grid. Tasks are
+/// numbered mixed-radix with dimension 0 fastest. If `torus`, tasks on the
+/// boundary also communicate with their wraparound neighbor (unless the
+/// dimension has extent <= 2, where the wrap edge would duplicate the mesh
+/// edge). All messages have volume `weight`.
+pub fn stencil_graph(dims: &[usize], torus: bool, weight: f64) -> TaskGraph {
+    let d = dims.len();
+    let n: usize = dims.iter().product();
+    let mut coords = Coords::with_capacity(d, n);
+    let mut idx = vec![0usize; d];
+    let mut point = vec![0f64; d];
+    for _ in 0..n {
+        for k in 0..d {
+            point[k] = idx[k] as f64;
+        }
+        coords.push(&point);
+        for k in 0..d {
+            idx[k] += 1;
+            if idx[k] < dims[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    // Edges: +1 neighbor per dimension (each undirected pair once).
+    let mut edges = Vec::with_capacity(n * d);
+    let mut strides = vec![1usize; d];
+    for k in 1..d {
+        strides[k] = strides[k - 1] * dims[k - 1];
+    }
+    let mut idx = vec![0usize; d];
+    for t in 0..n {
+        for k in 0..d {
+            if idx[k] + 1 < dims[k] {
+                edges.push(Edge {
+                    u: t as u32,
+                    v: (t + strides[k]) as u32,
+                    w: weight,
+                });
+            } else if torus && dims[k] > 2 {
+                // wrap edge from the last cell back to the first
+                let v = t - (dims[k] - 1) * strides[k];
+                edges.push(Edge {
+                    u: v as u32,
+                    v: t as u32,
+                    w: weight,
+                });
+            }
+        }
+        for k in 0..d {
+            idx[k] += 1;
+            if idx[k] < dims[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    TaskGraph {
+        num_tasks: n,
+        edges,
+        coords,
+    }
+}
+
+/// Equal-extent grid helper: `k` cells along each of `d` dimensions.
+pub fn cube_dims(d: usize, total: usize) -> Vec<usize> {
+    let k = (total as f64).powf(1.0 / d as f64).round() as usize;
+    assert_eq!(
+        k.pow(d as u32),
+        total,
+        "total {total} is not a perfect {d}-th power"
+    );
+    vec![k; d]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_edge_count_1d() {
+        let g = stencil_graph(&[8], false, 1.0);
+        assert_eq!(g.num_tasks, 8);
+        assert_eq!(g.edges.len(), 7);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn torus_edge_count_1d() {
+        let g = stencil_graph(&[8], true, 1.0);
+        assert_eq!(g.edges.len(), 8);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mesh_edge_count_3d() {
+        // 4x4x4 mesh: 3 * 4*4*3 = 144 edges.
+        let g = stencil_graph(&[4, 4, 4], false, 1.0);
+        assert_eq!(g.edges.len(), 144);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn torus_edge_count_3d() {
+        // 4x4x4 torus: 3 * 64 = 192 edges.
+        let g = stencil_graph(&[4, 4, 4], true, 1.0);
+        assert_eq!(g.edges.len(), 192);
+    }
+
+    #[test]
+    fn no_duplicate_wrap_for_extent_2() {
+        // Extent-2 ring: wrap edge == mesh edge, must not duplicate.
+        let g = stencil_graph(&[2], true, 1.0);
+        assert_eq!(g.edges.len(), 1);
+    }
+
+    #[test]
+    fn interior_degree_is_2d() {
+        let g = stencil_graph(&[5, 5], false, 1.0);
+        let deg = g.degrees();
+        // Center task (2,2) = 2 + 2*5 = 12 has degree 4.
+        assert_eq!(deg[12], 4);
+        // Corner has degree 2.
+        assert_eq!(deg[0], 2);
+    }
+
+    #[test]
+    fn torus_degree_uniform() {
+        let g = stencil_graph(&[4, 4, 4], true, 1.0);
+        let deg = g.degrees();
+        assert!(deg.iter().all(|&d| d == 6), "every task has 6 neighbors");
+    }
+
+    #[test]
+    fn coords_match_task_numbering() {
+        let g = stencil_graph(&[3, 2], false, 1.0);
+        // task 4 = (1, 1)
+        assert_eq!(g.coords.point_vec(4), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn cube_dims_exact() {
+        assert_eq!(cube_dims(3, 4096), vec![16, 16, 16]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cube_dims_rejects_non_power() {
+        cube_dims(3, 100);
+    }
+}

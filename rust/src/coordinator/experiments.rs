@@ -1,0 +1,28 @@
+//! Experiment registry: name -> runner, used by the CLI and the smoke
+//! tests. Every table and figure of the paper's evaluation section appears
+//! here (DESIGN.md section 4 is the index).
+
+use super::report::Table;
+use super::{homme_exp, minighost_exp, table1, Ctx};
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
+    match id {
+        "table1" => Some(table1::run(ctx)),
+        "table2" => Some(homme_exp::table2(ctx)),
+        "fig8" => Some(homme_exp::fig8(ctx)),
+        "fig9" => Some(homme_exp::fig9(ctx)),
+        "fig10" => Some(homme_exp::fig10(ctx)),
+        "fig11" => Some(homme_exp::fig11(ctx)),
+        "fig12" => Some(homme_exp::fig12(ctx)),
+        "fig13" => Some(minighost_exp::fig13(ctx)),
+        "fig14" => Some(minighost_exp::fig14(ctx)),
+        "fig15" => Some(minighost_exp::fig15(ctx)),
+        _ => None,
+    }
+}

@@ -1,0 +1,447 @@
+//! HOMME experiments: Table 2 and Fig. 8/9 (BG/Q, contiguous blocks) and
+//! Figs 10–12 (Titan, sparse allocations).
+
+use super::report::{f2, f3, sci, Table};
+use super::Ctx;
+use crate::apps::homme::{Homme, HommeCoords};
+use crate::apps::TaskGraph;
+use crate::machine::{bgq_block, cray_xk7, titan_full, Allocation, SparseAllocator};
+use crate::mapping::pipeline::{sfc_plus_z2, z2_map, Z2Config};
+use crate::metrics::{eval_full, Metrics};
+use crate::simulate::{comm_time, CommModel, CommTime};
+
+/// BG/Q experiment shape.
+struct BgqSetup {
+    ne: usize,
+    /// (ranks, ranks_per_node) per scaling point.
+    points: Vec<(usize, usize)>,
+}
+
+fn bgq_setup(full: bool, hybrid: bool) -> BgqSetup {
+    if full {
+        if hybrid {
+            // Fig 8: 1024..8192 nodes, 4 ranks/node.
+            BgqSetup {
+                ne: 128,
+                points: vec![(4096, 4), (8192, 4), (16384, 4), (32768, 4)],
+            }
+        } else {
+            // Table 2: MPI-only, 16 ranks/node.
+            BgqSetup {
+                ne: 128,
+                points: vec![(8192, 16), (16384, 16), (32768, 16)],
+            }
+        }
+    } else if hybrid {
+        BgqSetup {
+            ne: 32,
+            points: vec![(256, 4), (512, 4), (1024, 4), (2048, 4)],
+        }
+    } else {
+        BgqSetup {
+            ne: 32,
+            points: vec![(512, 16), (1024, 16), (2048, 16)],
+        }
+    }
+}
+
+fn bgq_alloc(ranks: usize, ranks_per_node: usize) -> Allocation {
+    let nodes = ranks / ranks_per_node;
+    Allocation::bgq(bgq_block(nodes), ranks_per_node, "ABCDET")
+}
+
+/// Rotation cap: the full td!*pd! sweep is expensive at paper scale; the
+/// paper itself spreads it over process groups. 12 candidates keep the
+/// rotation benefit with tractable single-core runtime.
+const ROT: usize = 12;
+
+fn z2_cfg_bgq(plus_e: bool) -> Z2Config {
+    let mut cfg = Z2Config::z2_1();
+    cfg.max_rotations = ROT;
+    // BG/Q links are uniform: no bandwidth scaling or box transform.
+    if plus_e {
+        cfg = cfg.plus_e();
+    }
+    cfg
+}
+
+/// Simulated communication time for a HOMME mapping on an allocation.
+fn homme_time(graph: &TaskGraph, mapping: &[u32], alloc: &Allocation) -> CommTime {
+    // HOMME exchanges boundaries many times per simulated day; rounds only
+    // scales absolute values (results are reported normalized).
+    let model = CommModel {
+        rounds: 100.0,
+        ..Default::default()
+    };
+    comm_time(graph, mapping, alloc, &model)
+}
+
+/// All strategy mappings for one BG/Q configuration. Returns
+/// (label, task_to_rank).
+fn bgq_mappings(
+    ctx: &Ctx,
+    homme: &Homme,
+    graph: &TaskGraph,
+    alloc: &Allocation,
+    variants: &[(HommeCoords, bool)],
+    include_all: bool,
+) -> Vec<(String, Vec<u32>)> {
+    let nranks = alloc.num_ranks();
+    let mut out = Vec::new();
+    // SFC: HOMME's own Hilbert partition; rank = part number under the
+    // machine's default ABCDET ordering.
+    let sfc = homme.sfc_partition(nranks);
+    out.push(("SFC".to_string(), sfc.clone()));
+    for &(coords, plus_e) in variants {
+        let tcoords = homme.coords(coords);
+        let cfg = z2_cfg_bgq(plus_e);
+        let e_tag = if plus_e { "+E" } else { "" };
+        if include_all {
+            let m = sfc_plus_z2(graph, &tcoords, &sfc, nranks, alloc, &cfg, ctx.backend());
+            out.push((format!("SFC+Z2 {}{e_tag}", coords.name()), m));
+        }
+        let m = z2_map(graph, &tcoords, alloc, &cfg, ctx.backend());
+        out.push((format!("Z2 {}{e_tag}", coords.name()), m));
+    }
+    out
+}
+
+const ALL_VARIANTS: [(HommeCoords, bool); 6] = [
+    (HommeCoords::Sphere, false),
+    (HommeCoords::Sphere, true),
+    (HommeCoords::Cube, false),
+    (HommeCoords::Cube, true),
+    (HommeCoords::Face2D, false),
+    (HommeCoords::Face2D, true),
+];
+
+/// Table 2: MPI-only HOMME on BG/Q, all strategy/transform variants,
+/// normalized to SFC at the smallest rank count.
+pub fn table2(ctx: &Ctx) -> Vec<Table> {
+    let setup = bgq_setup(ctx.full, false);
+    let homme = Homme::new(setup.ne);
+    let graph = homme.graph();
+    let mut rows: Vec<(usize, Vec<(String, f64)>)> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    for &(ranks, rpn) in &setup.points {
+        let alloc = bgq_alloc(ranks, rpn);
+        let maps = bgq_mappings(ctx, &homme, &graph, &alloc, &ALL_VARIANTS, true);
+        let times: Vec<(String, f64)> = maps
+            .iter()
+            .map(|(label, m)| (label.clone(), homme_time(&graph, m, &alloc).total))
+            .collect();
+        if labels.is_empty() {
+            labels = times.iter().map(|(l, _)| l.clone()).collect();
+        }
+        rows.push((ranks, times));
+    }
+    let reference = rows[0].1[0].1; // SFC at the smallest count
+    let mut headers: Vec<&str> = vec!["ranks"];
+    let owned: Vec<String> = labels.clone();
+    headers.extend(owned.iter().map(|s| s.as_str()));
+    let mut t = Table::new(
+        "Table 2: HOMME BG/Q communication time (normalized to SFC at smallest scale)",
+        &headers,
+    );
+    for (ranks, times) in &rows {
+        let mut row = vec![ranks.to_string()];
+        row.extend(times.iter().map(|(_, v)| f2(v / reference)));
+        t.push_row(row);
+    }
+    vec![t]
+}
+
+/// Fig 8: hybrid HOMME (4 ranks/node), best variants only, normalized to
+/// SFC at the smallest scale.
+pub fn fig8(ctx: &Ctx) -> Vec<Table> {
+    let setup = bgq_setup(ctx.full, true);
+    let homme = Homme::new(setup.ne);
+    let graph = homme.graph();
+    // Best variants per the paper: SFC+Z2 uses Cube+E, Z2 uses 2DFace+E.
+    let mut t = Table::new(
+        "Fig 8: Hybrid HOMME BG/Q communication time (normalized to SFC at smallest scale)",
+        &["ranks", "SFC", "SFC+Z2 Cube+E", "Z2 2DFace+E", "SFC_seconds"],
+    );
+    let mut reference = None;
+    for &(ranks, rpn) in &setup.points {
+        let alloc = bgq_alloc(ranks, rpn);
+        let nranks = alloc.num_ranks();
+        let sfc = homme.sfc_partition(nranks);
+        let t_sfc = homme_time(&graph, &sfc, &alloc).total;
+        let cube = homme.coords(HommeCoords::Cube);
+        let face = homme.coords(HommeCoords::Face2D);
+        let m_sfcz2 = sfc_plus_z2(
+            &graph,
+            &cube,
+            &sfc,
+            nranks,
+            &alloc,
+            &z2_cfg_bgq(true),
+            ctx.backend(),
+        );
+        let m_z2 = z2_map(&graph, &face, &alloc, &z2_cfg_bgq(true), ctx.backend());
+        let t_sfcz2 = homme_time(&graph, &m_sfcz2, &alloc).total;
+        let t_z2 = homme_time(&graph, &m_z2, &alloc).total;
+        let reference = *reference.get_or_insert(t_sfc);
+        t.push_row(vec![
+            ranks.to_string(),
+            f2(t_sfc / reference),
+            f2(t_sfcz2 / reference),
+            f2(t_z2 / reference),
+            f3(t_sfc),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 9: max and average link Data per BG/Q dimension (A..E) at the
+/// largest hybrid scale.
+pub fn fig9(ctx: &Ctx) -> Vec<Table> {
+    let setup = bgq_setup(ctx.full, true);
+    let homme = Homme::new(setup.ne);
+    let graph = homme.graph();
+    let &(ranks, rpn) = setup.points.last().unwrap();
+    let alloc = bgq_alloc(ranks, rpn);
+    let nranks = alloc.num_ranks();
+    let sfc = homme.sfc_partition(nranks);
+    let cube = homme.coords(HommeCoords::Cube);
+    let face = homme.coords(HommeCoords::Face2D);
+    let strategies: Vec<(&str, Vec<u32>)> = vec![
+        ("SFC", sfc.clone()),
+        (
+            "SFC+Z2",
+            sfc_plus_z2(
+                &graph,
+                &cube,
+                &sfc,
+                nranks,
+                &alloc,
+                &z2_cfg_bgq(true),
+                ctx.backend(),
+            ),
+        ),
+        (
+            "Z2",
+            z2_map(&graph, &face, &alloc, &z2_cfg_bgq(true), ctx.backend()),
+        ),
+    ];
+    let dims = ["A", "B", "C", "D", "E"];
+    let mut tmax = Table::new(
+        "Fig 9a: Max link Data per BG/Q dimension (bytes)",
+        &["strategy", "A", "B", "C", "D", "E", "Data(M)"],
+    );
+    let mut tavg = Table::new(
+        "Fig 9b: Avg link Data per BG/Q dimension (bytes)",
+        &["strategy", "A", "B", "C", "D", "E"],
+    );
+    for (name, m) in &strategies {
+        let metrics = eval_full(&graph, m, &alloc);
+        let lm = metrics.link.unwrap();
+        let mut row_max = vec![name.to_string()];
+        let mut row_avg = vec![name.to_string()];
+        for d in 0..dims.len() {
+            let mx = lm.per_dim[d][0].max_data.max(lm.per_dim[d][1].max_data);
+            let av = 0.5 * (lm.per_dim[d][0].avg_data + lm.per_dim[d][1].avg_data);
+            row_max.push(sci(mx));
+            row_avg.push(sci(av));
+        }
+        row_max.push(sci(lm.max_data));
+        tmax.push_row(row_max);
+        tavg.push_row(row_avg);
+    }
+    vec![tmax, tavg]
+}
+
+// ---------------------------------------------------------------------------
+// Titan (Figs 10-12)
+// ---------------------------------------------------------------------------
+
+struct TitanSetup {
+    ne: usize,
+    proc_counts: Vec<usize>,
+    allocator: SparseAllocator,
+    seeds: Vec<u64>,
+}
+
+fn titan_setup(ctx: &Ctx) -> TitanSetup {
+    if ctx.full {
+        TitanSetup {
+            ne: 120, // 86,400 surface elements, the paper's Titan case
+            proc_counts: vec![10_800, 21_600, 43_200, 86_400],
+            allocator: titan_full(),
+            seeds: vec![ctx.seed, ctx.seed + 1, ctx.seed + 2],
+        }
+    } else {
+        TitanSetup {
+            ne: 24, // 3,456 elements
+            proc_counts: vec![432, 864, 1728, 3456],
+            allocator: SparseAllocator {
+                machine: cray_xk7(&[10, 8, 10]),
+                nodes_per_router: 2,
+                ranks_per_node: 16,
+                occupancy: 0.4,
+            },
+            seeds: vec![ctx.seed, ctx.seed + 1],
+        }
+    }
+}
+
+fn titan_z2_cfgs() -> Vec<(&'static str, Z2Config)> {
+    let mut z1 = Z2Config::z2_1();
+    z1.max_rotations = ROT;
+    let mut z2 = Z2Config::z2_2();
+    z2.max_rotations = ROT;
+    let mut z3 = Z2Config::z2_3();
+    z3.max_rotations = ROT;
+    vec![("Z2_1", z1), ("Z2_2", z2), ("Z2_3", z3)]
+}
+
+struct TitanRun {
+    procs: usize,
+    seed: u64,
+    /// (strategy, comm time, metrics)
+    results: Vec<(String, f64, Metrics)>,
+}
+
+fn titan_runs(ctx: &Ctx) -> (Homme, Vec<TitanRun>) {
+    let setup = titan_setup(ctx);
+    let homme = Homme::new(setup.ne);
+    let graph = homme.graph();
+    // Cube-projected task coordinates: Section 5.2 found that slicing raw
+    // sphere coordinates partitions poorly; the cube projection is the
+    // transform HOMME itself uses before its SFC.
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let mut runs = Vec::new();
+    for &procs in &setup.proc_counts {
+        let nodes = procs / setup.allocator.ranks_per_node;
+        for &seed in &setup.seeds {
+            let alloc = setup.allocator.allocate(nodes, seed);
+            let mut results = Vec::new();
+            // SFC: HOMME's Hilbert partition onto the ALPS default order.
+            let sfc = homme.sfc_partition(procs);
+            let t = homme_time(&graph, &sfc, &alloc);
+            results.push((
+                "SFC".to_string(),
+                t.total,
+                eval_full(&graph, &sfc, &alloc),
+            ));
+            for (name, cfg) in titan_z2_cfgs() {
+                let m = z2_map(&graph, &tcoords, &alloc, &cfg, ctx.backend());
+                let t = homme_time(&graph, &m, &alloc);
+                results.push((name.to_string(), t.total, eval_full(&graph, &m, &alloc)));
+            }
+            runs.push(TitanRun {
+                procs,
+                seed,
+                results,
+            });
+        }
+    }
+    (homme, runs)
+}
+
+/// Fig 10: HOMME Titan communication time per strategy, normalized to SFC
+/// within each allocation; averaged across allocations per proc count.
+pub fn fig10(ctx: &Ctx) -> Vec<Table> {
+    let (_, runs) = titan_runs(ctx);
+    let labels: Vec<String> = runs[0].results.iter().map(|(l, _, _)| l.clone()).collect();
+    let mut headers: Vec<&str> = vec!["procs", "allocs"];
+    let owned = labels.clone();
+    headers.extend(owned.iter().map(|s| s.as_str()));
+    headers.push("SFC_seconds");
+    let mut t = Table::new(
+        "Fig 10: HOMME Titan communication time (normalized to SFC per allocation)",
+        &headers,
+    );
+    let mut procs_seen: Vec<usize> = runs.iter().map(|r| r.procs).collect();
+    procs_seen.dedup();
+    for procs in procs_seen {
+        let group: Vec<&TitanRun> = runs.iter().filter(|r| r.procs == procs).collect();
+        let mut row = vec![procs.to_string(), group.len().to_string()];
+        for (i, _) in labels.iter().enumerate() {
+            let avg: f64 = group
+                .iter()
+                .map(|r| r.results[i].1 / r.results[0].1)
+                .sum::<f64>()
+                / group.len() as f64;
+            row.push(f2(avg));
+        }
+        let sfc_avg: f64 =
+            group.iter().map(|r| r.results[0].1).sum::<f64>() / group.len() as f64;
+        row.push(f3(sfc_avg));
+        t.push_row(row);
+    }
+    vec![t]
+}
+
+/// Fig 11: Z2_3's communication metrics normalized to SFC, per allocation.
+pub fn fig11(ctx: &Ctx) -> Vec<Table> {
+    let (_, runs) = titan_runs(ctx);
+    let mut t = Table::new(
+        "Fig 11: HOMME Titan Z2_3 metrics normalized to SFC",
+        &["procs", "seed", "WH", "TM", "Data(M)", "Latency(M)"],
+    );
+    for run in &runs {
+        let sfc = &run.results[0].2;
+        let z3 = &run
+            .results
+            .iter()
+            .find(|(l, _, _)| l == "Z2_3")
+            .unwrap()
+            .2;
+        let (sl, zl) = (sfc.link.as_ref().unwrap(), z3.link.as_ref().unwrap());
+        t.push_row(vec![
+            run.procs.to_string(),
+            run.seed.to_string(),
+            f2(z3.weighted_hops / sfc.weighted_hops),
+            f2(z3.total_messages as f64 / sfc.total_messages as f64),
+            f2(zl.max_data / sl.max_data),
+            f2(zl.max_latency / sl.max_latency),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 12: per-dimension (X+..Z-) Data and Latency for SFC and Z2_3 at the
+/// largest proc count, normalized to SFC X+.
+pub fn fig12(ctx: &Ctx) -> Vec<Table> {
+    let (_, runs) = titan_runs(ctx);
+    let last_procs = runs.last().unwrap().procs;
+    let run = runs.iter().find(|r| r.procs == last_procs).unwrap();
+    let mut tables = Vec::new();
+    for (metric, pick) in [
+        ("Data", 0usize),
+        ("Latency", 1usize),
+    ] {
+        let mut t = Table::new(
+            &format!("Fig 12: HOMME Titan per-dimension {metric} (normalized to SFC X+)"),
+            &["strategy", "X+", "X-", "Y+", "Y-", "Z+", "Z-"],
+        );
+        let sfc_lm = run.results[0].2.link.as_ref().unwrap();
+        let norm = if pick == 0 {
+            sfc_lm.per_dim[0][0].max_data
+        } else {
+            sfc_lm.per_dim[0][0].max_latency
+        };
+        for (label, _, metrics) in &run.results {
+            if label != "SFC" && label != "Z2_3" {
+                continue;
+            }
+            let lm = metrics.link.as_ref().unwrap();
+            let mut row = vec![label.clone()];
+            for d in 0..3 {
+                for dir in 0..2 {
+                    let v = if pick == 0 {
+                        lm.per_dim[d][dir].max_data
+                    } else {
+                        lm.per_dim[d][dir].max_latency
+                    };
+                    row.push(f2(v / norm));
+                }
+            }
+            t.push_row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}

@@ -1,0 +1,211 @@
+//! MiniGhost weak-scaling experiments on the Cray XK7 model
+//! (Section 5.3.2): Figs 13 (communication time), 14 (AverageHops and
+//! Latency), and 15 (per-dimension time).
+
+use super::report::{f2, sci, Table};
+use super::Ctx;
+use crate::apps::minighost::MiniGhost;
+use crate::machine::{cray_xk7, titan_full, SparseAllocator};
+use crate::mapping::pipeline::{z2_map, Z2Config};
+use crate::metrics::eval_full;
+use crate::simulate::{comm_time, CommModel, CommTime};
+
+struct Setup {
+    /// (procs, task grid dims).
+    points: Vec<(usize, [usize; 3])>,
+    allocator: SparseAllocator,
+    seeds: Vec<u64>,
+}
+
+fn setup(ctx: &Ctx) -> Setup {
+    if ctx.full {
+        Setup {
+            points: vec![
+                (8_192, [32, 16, 16]),
+                (16_384, [32, 32, 16]),
+                (32_768, [32, 32, 32]),
+                (65_536, [64, 32, 32]),
+                (131_072, [64, 64, 32]),
+            ],
+            allocator: titan_full(),
+            seeds: vec![ctx.seed, ctx.seed + 1],
+        }
+    } else {
+        Setup {
+            points: vec![
+                (512, [8, 8, 8]),
+                (1_024, [16, 8, 8]),
+                (2_048, [16, 16, 8]),
+                (4_096, [16, 16, 16]),
+            ],
+            allocator: SparseAllocator {
+                machine: cray_xk7(&[10, 8, 10]),
+                nodes_per_router: 2,
+                ranks_per_node: 16,
+                occupancy: 0.4,
+            },
+            seeds: vec![ctx.seed, ctx.seed + 1],
+        }
+    }
+}
+
+/// MiniGhost simulation model: 20 timesteps per run (the paper's
+/// configuration).
+fn model() -> CommModel {
+    CommModel {
+        rounds: 20.0,
+        ..Default::default()
+    }
+}
+
+const ROT: usize = 12;
+
+fn strategies() -> Vec<(&'static str, Option<Z2Config>)> {
+    let mut z1 = Z2Config::z2_1();
+    z1.max_rotations = ROT;
+    let mut z2 = Z2Config::z2_2();
+    z2.max_rotations = ROT;
+    let mut z3 = Z2Config::z2_3();
+    z3.max_rotations = ROT;
+    vec![
+        ("Default", None),
+        ("Group", None),
+        ("Z2_1", Some(z1)),
+        ("Z2_2", Some(z2)),
+        ("Z2_3", Some(z3)),
+    ]
+}
+
+pub struct MgRun {
+    pub procs: usize,
+    pub seed: u64,
+    /// (strategy, comm time breakdown, metrics).
+    pub results: Vec<(String, CommTime, crate::metrics::Metrics)>,
+}
+
+/// Run every strategy on every (scale, allocation) pair.
+pub fn runs(ctx: &Ctx) -> Vec<MgRun> {
+    let setup = setup(ctx);
+    let mut out = Vec::new();
+    for &(procs, tdims) in &setup.points {
+        let mg = MiniGhost::weak_scaling(tdims);
+        assert_eq!(mg.num_tasks(), procs);
+        let graph = mg.graph();
+        let nodes = procs / setup.allocator.ranks_per_node;
+        for &seed in &setup.seeds {
+            let alloc = setup.allocator.allocate(nodes, seed);
+            let mut results = Vec::new();
+            for (name, cfg) in strategies() {
+                let mapping = match (name, &cfg) {
+                    ("Default", _) => mg.default_order(),
+                    ("Group", _) => mg.group_order(),
+                    (_, Some(cfg)) => z2_map(&graph, &graph.coords, &alloc, cfg, ctx.backend()),
+                    _ => unreachable!(),
+                };
+                let t = comm_time(&graph, &mapping, &alloc, &model());
+                let m = eval_full(&graph, &mapping, &alloc);
+                results.push((name.to_string(), t, m));
+            }
+            out.push(MgRun {
+                procs,
+                seed,
+                results,
+            });
+        }
+    }
+    out
+}
+
+fn labels(runs: &[MgRun]) -> Vec<String> {
+    runs[0].results.iter().map(|(l, _, _)| l.clone()).collect()
+}
+
+/// Fig 13: maximum communication time (seconds) per strategy, averaged over
+/// allocations per weak-scaling point.
+pub fn fig13(ctx: &Ctx) -> Vec<Table> {
+    let runs = runs(ctx);
+    let labels = labels(&runs);
+    let mut headers: Vec<&str> = vec!["procs", "allocs"];
+    headers.extend(labels.iter().map(|s| s.as_str()));
+    let mut t = Table::new(
+        "Fig 13: MiniGhost max communication time, seconds (weak scaling)",
+        &headers,
+    );
+    let mut procs_seen: Vec<usize> = runs.iter().map(|r| r.procs).collect();
+    procs_seen.dedup();
+    for procs in procs_seen {
+        let group: Vec<&MgRun> = runs.iter().filter(|r| r.procs == procs).collect();
+        let mut row = vec![procs.to_string(), group.len().to_string()];
+        for i in 0..labels.len() {
+            let avg: f64 =
+                group.iter().map(|r| r.results[i].1.total).sum::<f64>() / group.len() as f64;
+            row.push(format!("{avg:.4}"));
+        }
+        t.push_row(row);
+    }
+    vec![t]
+}
+
+/// Fig 14: AverageHops and Latency(M) per strategy per scale.
+pub fn fig14(ctx: &Ctx) -> Vec<Table> {
+    let runs = runs(ctx);
+    let labels = labels(&runs);
+    let mut tables = Vec::new();
+    for which in ["AverageHops", "Latency"] {
+        let mut headers: Vec<&str> = vec!["procs"];
+        headers.extend(labels.iter().map(|s| s.as_str()));
+        let mut t = Table::new(
+            &format!("Fig 14: MiniGhost {which} (weak scaling)"),
+            &headers,
+        );
+        let mut procs_seen: Vec<usize> = runs.iter().map(|r| r.procs).collect();
+        procs_seen.dedup();
+        for procs in procs_seen {
+            let group: Vec<&MgRun> = runs.iter().filter(|r| r.procs == procs).collect();
+            let mut row = vec![procs.to_string()];
+            for i in 0..labels.len() {
+                let avg: f64 = group
+                    .iter()
+                    .map(|r| {
+                        if which == "AverageHops" {
+                            r.results[i].2.avg_hops
+                        } else {
+                            r.results[i].2.link.as_ref().unwrap().max_latency
+                        }
+                    })
+                    .sum::<f64>()
+                    / group.len() as f64;
+                row.push(if which == "AverageHops" {
+                    f2(avg)
+                } else {
+                    sci(avg)
+                });
+            }
+            t.push_row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 15: average per-dimension communication time at the largest scale.
+pub fn fig15(ctx: &Ctx) -> Vec<Table> {
+    let runs = runs(ctx);
+    let last_procs = runs.last().unwrap().procs;
+    let run = runs.iter().find(|r| r.procs == last_procs).unwrap();
+    let mut t = Table::new(
+        "Fig 15: MiniGhost per-dimension communication time, seconds (largest scale)",
+        &["strategy", "X_serial", "Y_serial", "Z_serial", "X_msg", "Y_msg", "Z_msg"],
+    );
+    for (label, time, _) in &run.results {
+        let mut row = vec![label.clone()];
+        for d in 0..3 {
+            row.push(sci(time.per_dim_serial[d][0].max(time.per_dim_serial[d][1])));
+        }
+        for d in 0..3 {
+            row.push(sci(time.per_dim_msg[d]));
+        }
+        t.push_row(row);
+    }
+    vec![t]
+}

@@ -1,0 +1,63 @@
+//! Experiment coordinator: definitions of every table and figure in the
+//! paper's evaluation (Section 5), the report renderer, and the mapping
+//! service.
+//!
+//! Each experiment is a pure function from a config (+ seed) to [`report::Table`]s,
+//! so `repro <experiment>` output is exactly reproducible. DESIGN.md §4
+//! maps each experiment id to the paper artifact it regenerates.
+
+pub mod experiments;
+pub mod homme_exp;
+pub mod minighost_exp;
+pub mod report;
+pub mod service;
+pub mod table1;
+
+use crate::mapping::rotations::{NativeBackend, WhopsBackend};
+use crate::runtime::PjrtBackend;
+
+/// Shared experiment context.
+pub struct Ctx {
+    /// Paper-scale (`--full`) or laptop-scale (default) workloads.
+    pub full: bool,
+    /// Base RNG seed for allocations.
+    pub seed: u64,
+    /// WeightedHops backend: PJRT artifacts when available, else native.
+    backend: Backend,
+}
+
+enum Backend {
+    Pjrt(PjrtBackend),
+    Native(NativeBackend),
+}
+
+impl Ctx {
+    /// Build a context; loads PJRT artifacts when present unless
+    /// `force_native`.
+    pub fn new(full: bool, seed: u64, force_native: bool) -> Self {
+        let backend = if force_native {
+            Backend::Native(NativeBackend)
+        } else {
+            match PjrtBackend::try_default() {
+                Some(b) => Backend::Pjrt(b),
+                None => Backend::Native(NativeBackend),
+            }
+        };
+        Ctx {
+            full,
+            seed,
+            backend,
+        }
+    }
+
+    pub fn backend(&self) -> &dyn WhopsBackend {
+        match &self.backend {
+            Backend::Pjrt(b) => b,
+            Backend::Native(b) => b,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend().name()
+    }
+}

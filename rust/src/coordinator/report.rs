@@ -1,0 +1,133 @@
+//! Report tables: the textual equivalent of the paper's tables/figures.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rendered experiment result.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "ragged row in {}", self.title);
+        self.rows.push(row);
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([h.len()])
+                    .max()
+                    .unwrap_or(1)
+            })
+            .collect();
+        let line = |cells: &[String], out: &mut String| {
+            let _ = write!(out, "|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, " {:>w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        };
+        line(&self.headers, &mut out);
+        let _ = writeln!(
+            out,
+            "|{}",
+            widths
+                .iter()
+                .map(|w| format!("{:-<w$}|", "", w = w + 2))
+                .collect::<String>()
+        );
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+
+    /// Tab-separated rendering (for plotting scripts).
+    pub fn tsv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let _ = writeln!(out, "{}", self.headers.join("\t"));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join("\t"));
+        }
+        out
+    }
+
+    /// Write TSV to `dir/<slug>.tsv`.
+    pub fn write_tsv(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect::<String>()
+            .split('_')
+            .filter(|s| !s.is_empty())
+            .collect::<Vec<_>>()
+            .join("_");
+        std::fs::write(dir.join(format!("{slug}.tsv")), self.tsv())
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn sci(x: f64) -> String {
+    format!("{x:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2.50".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | 2.50 |"));
+    }
+
+    #[test]
+    fn tsv_renders() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.tsv(), "# Demo\na\tb\n1\t2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_rejected() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+}

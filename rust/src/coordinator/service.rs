@@ -1,0 +1,292 @@
+//! Mapping service: the library exposed as a long-running daemon.
+//!
+//! Real deployments call the mapper from job launch scripts; this service
+//! mirrors that: a thread-per-connection TCP server speaking
+//! newline-delimited JSON (the offline vendor set has no tokio; the event
+//! loop is std::net + threads).
+//!
+//! Protocol (one JSON object per line):
+//! ```json
+//! {"op":"map","tcoords":[[0,0],[0,1]],"pcoords":[[3,3],[3,4]],
+//!  "ordering":"FZ","longest_dim":true,"uneven_prime":false}
+//! -> {"ok":true,"map":[0,1]}
+//! {"op":"ping"} -> {"ok":true,"pong":true}
+//! ```
+
+use crate::geom::Coords;
+use crate::mapping::{map_tasks, MapConfig};
+use crate::sfc::PartOrdering;
+use crate::testutil::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server handle: the bound address and a shutdown flag.
+pub struct Service {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Bind and serve in background threads. Pass port 0 for an ephemeral
+    /// port (tests).
+    pub fn start<A: ToSocketAddrs>(addr: A) -> std::io::Result<Service> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Detached: the worker exits when its client
+                        // disconnects (read_line returns 0). Joining here
+                        // would deadlock shutdown on long-lived clients.
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Service {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = handle_request(trimmed);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn err(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Handle one request line (exposed for direct unit testing).
+pub fn handle_request(line: &str) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(&format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("map") => handle_map(&req),
+        Some(op) => err(&format!("unknown op {op}")),
+        None => err("missing op"),
+    }
+}
+
+fn parse_coords(v: &Json) -> Result<Coords, String> {
+    let rows = v.as_arr().ok_or("coords must be an array")?;
+    if rows.is_empty() {
+        return Err("empty coords".into());
+    }
+    let dim = rows[0].as_arr().ok_or("coord rows must be arrays")?.len();
+    if dim == 0 {
+        return Err("zero-dimensional coords".into());
+    }
+    let mut coords = Coords::with_capacity(dim, rows.len());
+    let mut buf = vec![0f64; dim];
+    for row in rows {
+        let vals = row.as_arr().ok_or("coord rows must be arrays")?;
+        if vals.len() != dim {
+            return Err("ragged coords".into());
+        }
+        for (k, x) in vals.iter().enumerate() {
+            buf[k] = x.as_f64().ok_or("coords must be numbers")?;
+        }
+        coords.push(&buf);
+    }
+    Ok(coords)
+}
+
+fn handle_map(req: &Json) -> Json {
+    let tcoords = match req.get("tcoords").map(parse_coords) {
+        Some(Ok(c)) => c,
+        Some(Err(e)) => return err(&format!("tcoords: {e}")),
+        None => return err("missing tcoords"),
+    };
+    let pcoords = match req.get("pcoords").map(parse_coords) {
+        Some(Ok(c)) => c,
+        Some(Err(e)) => return err(&format!("pcoords: {e}")),
+        None => return err("missing pcoords"),
+    };
+    let ordering = req
+        .get("ordering")
+        .and_then(|o| o.as_str())
+        .and_then(PartOrdering::parse)
+        .unwrap_or(PartOrdering::FZ);
+    let cfg = MapConfig {
+        task_ordering: ordering,
+        proc_ordering: ordering,
+        longest_dim: req
+            .get("longest_dim")
+            .map(|b| b == &Json::Bool(true))
+            .unwrap_or(true),
+        uneven_prime: req
+            .get("uneven_prime")
+            .map(|b| b == &Json::Bool(true))
+            .unwrap_or(false),
+    };
+    let mapping = map_tasks(&tcoords, &pcoords, &cfg);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "map",
+            Json::Arr(mapping.into_iter().map(|r| Json::Num(r as f64)).collect()),
+        ),
+    ])
+}
+
+/// Simple blocking client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, req: &Json) -> std::io::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    /// Map tasks to ranks over the wire.
+    pub fn map(
+        &mut self,
+        tcoords: &[Vec<f64>],
+        pcoords: &[Vec<f64>],
+        ordering: PartOrdering,
+    ) -> std::io::Result<Vec<u32>> {
+        let mk = |rows: &[Vec<f64>]| {
+            Json::Arr(
+                rows.iter()
+                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
+                    .collect(),
+            )
+        };
+        let req = Json::obj(vec![
+            ("op", Json::Str("map".into())),
+            ("tcoords", mk(tcoords)),
+            ("pcoords", mk(pcoords)),
+            ("ordering", Json::Str(ordering.name().into())),
+        ]);
+        let resp = self.request(&req)?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(std::io::Error::other(
+                resp.get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("unknown error")
+                    .to_string(),
+            ));
+        }
+        Ok(resp
+            .get("map")
+            .and_then(|m| m.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect())
+            .unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let resp = handle_request(r#"{"op":"ping"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn bad_json_is_an_error() {
+        let resp = handle_request("{nope");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn map_request_roundtrip() {
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0,0],[0,1],[1,0],[1,1]],
+                "pcoords":[[5,5],[5,6],[6,5],[6,6]],"ordering":"FZ"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m = resp.get("map").unwrap().as_arr().unwrap();
+        assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn ragged_coords_rejected() {
+        let resp =
+            handle_request(r#"{"op":"map","tcoords":[[0,0],[1]],"pcoords":[[0,0],[1,1]]}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let svc = Service::start("127.0.0.1:0").unwrap();
+        let mut client = Client::connect(svc.addr).unwrap();
+        let t: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64]).collect();
+        let p: Vec<Vec<f64>> = (0..8).map(|i| vec![(7 - i) as f64]).collect();
+        let m = client.map(&t, &p, PartOrdering::FZ).unwrap();
+        // Both sides are 1D lines: the mapping must pair them monotonically
+        // (reversed proc coordinates => task i -> rank 7-i).
+        assert_eq!(m, vec![7, 6, 5, 4, 3, 2, 1, 0]);
+        svc.stop();
+    }
+}

@@ -1,0 +1,285 @@
+//! Table 1: AverageHops of geometric mapping under different SFC orderings
+//! (Hilbert, Z, FZ, MFZ) for td-dimensional stencil tasks one-to-one mapped
+//! onto pd-dimensional block-allocated nodes, for mesh->mesh, mesh->torus,
+//! and torus->torus connectivity.
+
+use super::report::{f2, Table};
+use super::Ctx;
+use crate::apps::stencil::stencil_graph;
+use crate::machine::{Allocation, Torus};
+use crate::mapping::{map_tasks, MapConfig};
+use crate::metrics::eval_hops;
+use crate::sfc::PartOrdering;
+
+/// The (num_tasks, pd, td) rows of the paper's Table 1.
+pub const PAPER_ROWS: &[(usize, usize, usize)] = &[
+    (262_144, 1, 2),
+    (32_768, 1, 3),
+    (1_048_576, 1, 4),
+    (32_768, 1, 5),
+    (262_144, 1, 6),
+    (65_536, 1, 8),
+    (262_144, 2, 1),
+    (262_144, 2, 3),
+    (1_048_576, 2, 4),
+    (1_048_576, 2, 5),
+    (262_144, 2, 6),
+    (65_536, 2, 8),
+    (32_768, 3, 1),
+    (262_144, 3, 2),
+    (4_096, 3, 4),
+    (32_768, 3, 5),
+    (262_144, 3, 6),
+    (262_144, 3, 9),
+    (1_048_576, 4, 1),
+    (1_048_576, 4, 2),
+    (4_096, 4, 3),
+    (1_048_576, 4, 5),
+    (4_096, 4, 6),
+    (65_536, 4, 8),
+    (32_768, 5, 1),
+    (1_048_576, 5, 2),
+    (32_768, 5, 3),
+    (1_048_576, 5, 4),
+    (1_048_576, 5, 10),
+    (262_144, 6, 1),
+    (262_144, 6, 2),
+    (262_144, 6, 3),
+    (4_096, 6, 4),
+    (262_144, 6, 9),
+    (65_536, 8, 1),
+    (65_536, 8, 2),
+    (65_536, 8, 4),
+    (262_144, 9, 1),
+    (262_144, 9, 2),
+    (262_144, 9, 3),
+    (262_144, 9, 6),
+    (1_048_576, 10, 1),
+    (1_048_576, 10, 2),
+    (1_048_576, 10, 4),
+    (1_048_576, 10, 5),
+];
+
+/// Distribute `l` total log2-extent over `d` dimensions as evenly as
+/// possible (first `l mod d` dims get one extra bit).
+pub fn grid_dims(l: u32, d: usize) -> Vec<usize> {
+    let base = l as usize / d;
+    let extra = l as usize % d;
+    (0..d)
+        .map(|k| 1usize << (base + usize::from(k < extra)))
+        .collect()
+}
+
+/// Connectivity of tasks and nodes for one column group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Connectivity {
+    MeshToMesh,
+    MeshToTorus,
+    TorusToTorus,
+}
+
+impl Connectivity {
+    pub const ALL: [Connectivity; 3] = [
+        Connectivity::MeshToMesh,
+        Connectivity::MeshToTorus,
+        Connectivity::TorusToTorus,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Connectivity::MeshToMesh => "MeshToMesh",
+            Connectivity::MeshToTorus => "MeshToTorus",
+            Connectivity::TorusToTorus => "TorusToTorus",
+        }
+    }
+
+    fn tasks_torus(&self) -> bool {
+        matches!(self, Connectivity::TorusToTorus)
+    }
+
+    fn nodes_torus(&self) -> bool {
+        !matches!(self, Connectivity::MeshToMesh)
+    }
+}
+
+/// Compute AverageHops for one (size, pd, td, connectivity, ordering) cell.
+pub fn average_hops_cell(
+    num_tasks: usize,
+    pd: usize,
+    td: usize,
+    conn: Connectivity,
+    ordering: PartOrdering,
+) -> f64 {
+    let l = num_tasks.trailing_zeros();
+    assert_eq!(1usize << l, num_tasks, "Table 1 sizes are powers of two");
+    let tdims = grid_dims(l, td);
+    let pdims = grid_dims(l, pd);
+    let graph = stencil_graph(&tdims, conn.tasks_torus(), 1.0);
+    let torus = if conn.nodes_torus() {
+        Torus::torus(&pdims)
+    } else {
+        Torus::mesh(&pdims)
+    };
+    let n = torus.num_routers();
+    let alloc = Allocation {
+        torus,
+        core_router: (0..n as u32).collect(),
+        core_node: (0..n as u32).collect(),
+        ranks_per_node: 1,
+    };
+    // MFZ: tasks numbered MFZ, nodes FZ — the paper applies the
+    // modification to one coordinate set only (Section 4.3), and only when
+    // pd is a multiple of td (otherwise MFZ == FZ).
+    let cfg = match ordering {
+        PartOrdering::MFZ => MapConfig {
+            task_ordering: PartOrdering::MFZ,
+            proc_ordering: PartOrdering::FZ,
+            longest_dim: false,
+            uneven_prime: false,
+        },
+        o => MapConfig {
+            task_ordering: o,
+            proc_ordering: o,
+            longest_dim: false,
+            uneven_prime: false,
+        },
+    };
+    let mapping = map_tasks(&graph.coords, &alloc.proc_coords(), &cfg);
+    eval_hops(&graph, &mapping, &alloc).avg_hops
+}
+
+/// Run Table 1. Small mode uses 2^12-task rows (same td/pd combinations);
+/// full mode uses the paper's sizes.
+pub fn run(ctx: &Ctx) -> Vec<Table> {
+    let orderings = [
+        PartOrdering::Hilbert,
+        PartOrdering::Z,
+        PartOrdering::FZ,
+        PartOrdering::MFZ,
+    ];
+    let mut headers: Vec<String> = vec!["#task".into(), "pd".into(), "td".into()];
+    for conn in Connectivity::ALL {
+        for o in orderings {
+            headers.push(format!("{}:{}", conn.name(), o.name()));
+        }
+    }
+    let mut table = Table::new(
+        if ctx.full {
+            "Table 1: AverageHops by SFC ordering (paper sizes)"
+        } else {
+            "Table 1: AverageHops by SFC ordering (small sizes)"
+        },
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    // Geomean accumulators per column.
+    let ncols = Connectivity::ALL.len() * orderings.len();
+    let mut log_sums = vec![0f64; ncols];
+    let mut counts = vec![0usize; ncols];
+
+    for &(paper_n, pd, td) in PAPER_ROWS {
+        let n = if ctx.full {
+            paper_n
+        } else {
+            1usize << 12 // 4096 tasks: every row fast, same structure
+        };
+        let mut row = vec![n.to_string(), pd.to_string(), td.to_string()];
+        let mut col = 0usize;
+        for conn in Connectivity::ALL {
+            for o in orderings {
+                // MFZ differs from FZ only when pd % td == 0 (paper note).
+                let is_mfz_case = pd % td == 0 && pd != td;
+                let v = if o == PartOrdering::MFZ && !is_mfz_case {
+                    f64::NAN // shown blank, like the paper
+                } else {
+                    average_hops_cell(n, pd, td, conn, o)
+                };
+                if v.is_nan() {
+                    row.push(String::new());
+                } else {
+                    row.push(f2(v));
+                    log_sums[col] += v.max(1e-12).ln();
+                    counts[col] += 1;
+                }
+                col += 1;
+            }
+        }
+        table.push_row(row);
+    }
+    // Geomean row (per column, over the rows where the ordering applies).
+    let mut geo_row = vec!["GEOMEAN".into(), String::new(), String::new()];
+    for c in 0..ncols {
+        geo_row.push(if counts[c] > 0 {
+            f2((log_sums[c] / counts[c] as f64).exp())
+        } else {
+            String::new()
+        });
+    }
+    table.push_row(geo_row);
+    vec![table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dims_splits_bits() {
+        assert_eq!(grid_dims(12, 3), vec![16, 16, 16]);
+        assert_eq!(grid_dims(12, 5), vec![8, 8, 4, 4, 4]);
+        assert_eq!(
+            grid_dims(12, 5).iter().product::<usize>(),
+            4096
+        );
+    }
+
+    #[test]
+    fn paper_rows_are_consistent_powers() {
+        for &(n, pd, td) in PAPER_ROWS {
+            let l = n.trailing_zeros() as usize;
+            assert_eq!(1usize << l, n);
+            // Paper sizes give equal extents along every dimension.
+            assert_eq!(l % pd, 0, "row ({n},{pd},{td})");
+            assert_eq!(l % td, 0, "row ({n},{pd},{td})");
+        }
+    }
+
+    #[test]
+    fn identity_case_td_eq_pd_unit_hops() {
+        // td == pd == 2, same grid: Z mapping is identity-like; every
+        // neighbor pair lands on adjacent nodes => AverageHops == 1.
+        let v = average_hops_cell(256, 2, 2, Connectivity::MeshToMesh, PartOrdering::Z);
+        assert!((v - 1.0).abs() < 1e-9, "got {v}");
+    }
+
+    #[test]
+    fn hilbert_1d_tasks_unit_hops() {
+        // Paper: Hilbert is continuous, so 1D tasks onto anything give
+        // AverageHops 1.00.
+        for pd in [2usize, 3] {
+            let v = average_hops_cell(
+                4096,
+                pd,
+                1,
+                Connectivity::MeshToMesh,
+                PartOrdering::Hilbert,
+            );
+            assert!((v - 1.0).abs() < 1e-9, "pd={pd}: {v}");
+        }
+    }
+
+    #[test]
+    fn z_1d_tasks_two_hops() {
+        // Paper Table 1: Z ordering of 1D tasks gives AverageHops ~2.
+        let v = average_hops_cell(4096, 2, 1, Connectivity::MeshToMesh, PartOrdering::Z);
+        assert!((v - 2.0).abs() < 0.1, "got {v}");
+    }
+
+    #[test]
+    fn fz_beats_z_on_mismatched_dims() {
+        // td=2, pd=3 (neither divides the other): FZ < Z, the paper's
+        // headline ordering result.
+        let z = average_hops_cell(4096, 3, 2, Connectivity::MeshToTorus, PartOrdering::Z);
+        let fz = average_hops_cell(4096, 3, 2, Connectivity::MeshToTorus, PartOrdering::FZ);
+        assert!(fz < z, "FZ {fz} !< Z {z}");
+    }
+}

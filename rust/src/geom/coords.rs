@@ -1,0 +1,264 @@
+//! Structure-of-arrays coordinate sets.
+
+use super::MAX_DIM;
+
+/// A set of `n` points in `dim` dimensions, one contiguous array per axis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coords {
+    axes: Vec<Vec<f64>>,
+}
+
+impl Coords {
+    /// Empty coordinate set of a given dimensionality.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1 && dim <= MAX_DIM, "dim {dim} out of range");
+        Coords {
+            axes: vec![Vec::new(); dim],
+        }
+    }
+
+    /// Pre-allocated empty set.
+    pub fn with_capacity(dim: usize, n: usize) -> Self {
+        assert!(dim >= 1 && dim <= MAX_DIM, "dim {dim} out of range");
+        Coords {
+            axes: vec![Vec::with_capacity(n); dim],
+        }
+    }
+
+    /// Build from per-axis arrays (all must be equal length).
+    pub fn from_axes(axes: Vec<Vec<f64>>) -> Self {
+        assert!(!axes.is_empty() && axes.len() <= MAX_DIM);
+        let n = axes[0].len();
+        assert!(axes.iter().all(|a| a.len() == n), "ragged axes");
+        Coords { axes }
+    }
+
+    /// Build from a point iterator (row-major).
+    pub fn from_points<I>(dim: usize, points: I) -> Self
+    where
+        I: IntoIterator<Item = Vec<f64>>,
+    {
+        let mut c = Coords::new(dim);
+        for p in points {
+            c.push(&p);
+        }
+        c
+    }
+
+    pub fn dim(&self) -> usize {
+        self.axes.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.axes[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.dim());
+        for (axis, &v) in self.axes.iter_mut().zip(p) {
+            axis.push(v);
+        }
+    }
+
+    #[inline]
+    pub fn axis(&self, d: usize) -> &[f64] {
+        &self.axes[d]
+    }
+
+    #[inline]
+    pub fn axis_mut(&mut self, d: usize) -> &mut [f64] {
+        &mut self.axes[d]
+    }
+
+    #[inline]
+    pub fn get(&self, d: usize, i: usize) -> f64 {
+        self.axes[d][i]
+    }
+
+    /// Copy point `i` into a fixed-size buffer, returning the filled slice.
+    pub fn point<'a>(&self, i: usize, buf: &'a mut [f64; MAX_DIM]) -> &'a [f64] {
+        for (d, axis) in self.axes.iter().enumerate() {
+            buf[d] = axis[i];
+        }
+        &buf[..self.dim()]
+    }
+
+    /// Point as a fresh Vec (convenience for tests / examples).
+    pub fn point_vec(&self, i: usize) -> Vec<f64> {
+        self.axes.iter().map(|a| a[i]).collect()
+    }
+
+    /// Reorder axes: output axis `d` = input axis `perm[d]`.
+    pub fn permute_axes(&self, perm: &[usize]) -> Coords {
+        assert_eq!(perm.len(), self.dim());
+        Coords {
+            axes: perm.iter().map(|&p| self.axes[p].clone()).collect(),
+        }
+    }
+
+    /// Keep only the listed axes (used by the "+E" optimization, which drops
+    /// the BG/Q E dimension before partitioning the processors).
+    pub fn select_axes(&self, keep: &[usize]) -> Coords {
+        assert!(!keep.is_empty());
+        Coords {
+            axes: keep.iter().map(|&d| self.axes[d].clone()).collect(),
+        }
+    }
+
+    /// Append extra axes (used by the Z2_3 box transform, 3D -> 6D).
+    pub fn extend_axes(&mut self, extra: Vec<Vec<f64>>) {
+        for a in &extra {
+            assert_eq!(a.len(), self.len());
+        }
+        self.axes.extend(extra);
+        assert!(self.dim() <= MAX_DIM);
+    }
+
+    /// Multiply every coordinate of axis `d` by `s`.
+    pub fn scale_axis(&mut self, d: usize, s: f64) {
+        for v in &mut self.axes[d] {
+            *v *= s;
+        }
+    }
+
+    /// Map axis `d` through a monotone table: `v -> table[v as usize]`.
+    /// Used by bandwidth scaling, where integer router coordinates become
+    /// cumulative 1/bandwidth path costs.
+    pub fn remap_axis(&mut self, d: usize, table: &[f64]) {
+        for v in &mut self.axes[d] {
+            let idx = *v as usize;
+            debug_assert!(idx < table.len(), "coordinate {v} outside table");
+            *v = table[idx.min(table.len() - 1)];
+        }
+    }
+
+    /// Axis-aligned bounding box.
+    pub fn bbox(&self) -> BoundingBox {
+        let dim = self.dim();
+        let mut lo = vec![f64::INFINITY; dim];
+        let mut hi = vec![f64::NEG_INFINITY; dim];
+        for d in 0..dim {
+            for &v in &self.axes[d] {
+                if v < lo[d] {
+                    lo[d] = v;
+                }
+                if v > hi[d] {
+                    hi[d] = v;
+                }
+            }
+        }
+        BoundingBox { lo, hi }
+    }
+
+    /// Gather a subset of points by index.
+    pub fn gather(&self, idx: &[usize]) -> Coords {
+        Coords {
+            axes: self
+                .axes
+                .iter()
+                .map(|a| idx.iter().map(|&i| a[i]).collect())
+                .collect(),
+        }
+    }
+}
+
+/// Axis-aligned bounding box.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundingBox {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl BoundingBox {
+    pub fn extent(&self, d: usize) -> f64 {
+        self.hi[d] - self.lo[d]
+    }
+
+    /// Dimension with the largest extent (ties: lowest index), the
+    /// "longest dimension" rule of Section 4.3.
+    pub fn longest_dim(&self) -> usize {
+        let mut best = 0;
+        let mut best_ext = f64::NEG_INFINITY;
+        for d in 0..self.lo.len() {
+            let e = self.extent(d);
+            if e > best_ext {
+                best_ext = e;
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid2x3() -> Coords {
+        // points (x,y): (0,0),(1,0),(2,0),(0,1),(1,1),(2,1)
+        Coords::from_axes(vec![
+            vec![0., 1., 2., 0., 1., 2.],
+            vec![0., 0., 0., 1., 1., 1.],
+        ])
+    }
+
+    #[test]
+    fn push_and_get() {
+        let mut c = Coords::new(3);
+        c.push(&[1.0, 2.0, 3.0]);
+        c.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1, 0), 2.0);
+        assert_eq!(c.point_vec(1), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn bbox_and_longest_dim() {
+        let c = grid2x3();
+        let bb = c.bbox();
+        assert_eq!(bb.lo, vec![0.0, 0.0]);
+        assert_eq!(bb.hi, vec![2.0, 1.0]);
+        assert_eq!(bb.longest_dim(), 0);
+    }
+
+    #[test]
+    fn permute_axes_swaps() {
+        let c = grid2x3();
+        let p = c.permute_axes(&[1, 0]);
+        assert_eq!(p.axis(0), c.axis(1));
+        assert_eq!(p.axis(1), c.axis(0));
+    }
+
+    #[test]
+    fn select_axes_drops() {
+        let c = grid2x3();
+        let s = c.select_axes(&[1]);
+        assert_eq!(s.dim(), 1);
+        assert_eq!(s.axis(0), c.axis(1));
+    }
+
+    #[test]
+    fn remap_axis_applies_table() {
+        let mut c = grid2x3();
+        c.remap_axis(0, &[0.0, 10.0, 15.0]);
+        assert_eq!(c.axis(0), &[0.0, 10.0, 15.0, 0.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn gather_subset() {
+        let c = grid2x3();
+        let g = c.gather(&[5, 0]);
+        assert_eq!(g.point_vec(0), vec![2.0, 1.0]);
+        assert_eq!(g.point_vec(1), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_axes_rejected() {
+        Coords::from_axes(vec![vec![0.0], vec![]]);
+    }
+}

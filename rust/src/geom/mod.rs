@@ -1,0 +1,14 @@
+//! Geometric primitives: multi-dimensional point sets in structure-of-arrays
+//! layout, axis transforms (permute / flip / scale), and bounding boxes.
+//!
+//! The paper's algorithms (MJ partitioning, coordinate shifting, rotations,
+//! bandwidth scaling, box transforms) all operate per-axis, so coordinates
+//! are stored one contiguous `Vec<f64>` per axis.
+
+pub mod coords;
+
+pub use coords::{BoundingBox, Coords};
+
+/// Maximum supported dimensionality. Table 1 of the paper uses up to
+/// 10-dimensional task/processor sets.
+pub const MAX_DIM: usize = 16;

@@ -1,0 +1,33 @@
+//! # taskmap — geometric partitioning and ordering strategies for task
+//! mapping on parallel computers
+//!
+//! A full reproduction of Deveci et al., *"Geometric Partitioning and
+//! Ordering Strategies for Task Mapping on Parallel Computers"* (2018) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the geometric task mapper (Multi-Jagged
+//!   partitioning, Z/Gray/FZ/MFZ/Hilbert orderings, the Z2 strategy
+//!   pipelines), machine models for Cray XK7 Gemini and IBM BG/Q toruses,
+//!   allocation simulators, the Section 3 metrics, a communication-time
+//!   model, and the experiment coordinator that regenerates every table and
+//!   figure of the paper.
+//! * **L2/L1 (python, build-time only)** — the batched WeightedHops
+//!   evaluator (`python/compile/model.py`) wrapping a Pallas kernel
+//!   (`python/compile/kernels/whops.py`), AOT-lowered to HLO text.
+//! * **Runtime** — [`runtime`] loads those artifacts via the PJRT CPU
+//!   client; the rotation sweep scores candidate mappings through it with
+//!   no Python on the request path.
+//!
+//! Quick start: see `examples/quickstart.rs`; experiments: `repro --help`.
+
+pub mod apps;
+pub mod coordinator;
+pub mod geom;
+pub mod machine;
+pub mod mapping;
+pub mod metrics;
+pub mod mj;
+pub mod runtime;
+pub mod sfc;
+pub mod simulate;
+pub mod testutil;

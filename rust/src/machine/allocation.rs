@@ -1,0 +1,253 @@
+//! Job allocations: the set of nodes (and their routers) a job runs on, in
+//! default rank order.
+//!
+//! An `Allocation` is the bridge between the machine model and the mapping
+//! algorithm: it provides each MPI rank's router coordinates (the "machine
+//! coordinates" of Section 4) and records node boundaries so metrics can
+//! distinguish intra-node from network communication.
+
+use super::rank_order::{bgq_rank_placement, gemini_curve_order};
+use super::torus::Torus;
+use crate::geom::Coords;
+use crate::testutil::Rng;
+
+/// A job's processor allocation. Ranks are indexed `0..num_ranks()` in the
+/// platform's **default rank order** (ALPS placement order on Cray; the
+/// chosen `ABCDET` permutation on BG/Q), so "default mapping" means
+/// `task i -> rank i`.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// The machine (or job block) network.
+    pub torus: Torus,
+    /// Router id per rank.
+    pub core_router: Vec<u32>,
+    /// Node id per rank (nodes may share a router: 2 nodes/Gemini on XK7).
+    pub core_node: Vec<u32>,
+    /// Ranks per node.
+    pub ranks_per_node: usize,
+}
+
+impl Allocation {
+    pub fn num_ranks(&self) -> usize {
+        self.core_router.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_ranks() / self.ranks_per_node
+    }
+
+    /// Router coordinates of every rank as f64 points — the `pcoords` input
+    /// of Algorithm 1. Ranks in the same node share coordinates; MJ's
+    /// deterministic tie-breaking keeps them in the same part.
+    pub fn proc_coords(&self) -> Coords {
+        let dim = self.torus.dim();
+        let mut axes = vec![Vec::with_capacity(self.num_ranks()); dim];
+        let mut buf = vec![0usize; dim];
+        for &r in &self.core_router {
+            self.torus.coords_into(r as usize, &mut buf);
+            for d in 0..dim {
+                axes[d].push(buf[d] as f64);
+            }
+        }
+        Coords::from_axes(axes)
+    }
+
+    /// Contiguous BG/Q block allocation (the whole job block is a complete
+    /// torus — Section 2) with the given rank-order permutation.
+    pub fn bgq(block: [usize; 5], ranks_per_node: usize, perm: &str) -> Allocation {
+        let routers = bgq_rank_placement(&block, ranks_per_node, perm);
+        let torus = Torus::torus(&block);
+        // On BG/Q one compute node attaches to each router.
+        let core_node = routers.iter().map(|&r| r as u32).collect();
+        Allocation {
+            torus,
+            core_router: routers.iter().map(|&r| r as u32).collect(),
+            core_node,
+            ranks_per_node,
+        }
+    }
+}
+
+/// ALPS-style sparse allocator for Cray systems (Section 2): available nodes
+/// are selected in space-filling-curve order; other jobs' nodes fragment the
+/// allocation. `occupancy` is the fraction of the machine already in use.
+#[derive(Clone, Debug)]
+pub struct SparseAllocator {
+    pub machine: Torus,
+    pub nodes_per_router: usize,
+    pub ranks_per_node: usize,
+    /// Fraction of machine nodes held by other jobs (0.0 = empty machine =>
+    /// contiguous-ish allocation; higher = sparser).
+    pub occupancy: f64,
+}
+
+impl SparseAllocator {
+    /// Allocate `num_nodes` nodes for a job. Deterministic per seed.
+    pub fn allocate(&self, num_nodes: usize, seed: u64) -> Allocation {
+        let mut rng = Rng::new(seed);
+        let curve = gemini_curve_order(&self.machine);
+        // Node slots in curve order: nodes attached to the same router are
+        // consecutive (ALPS assigns both Gemini nodes together).
+        let total_nodes = curve.len() * self.nodes_per_router;
+        assert!(
+            num_nodes <= total_nodes,
+            "requested {num_nodes} nodes > machine capacity {total_nodes}"
+        );
+        // Mark pre-occupied nodes. We occupy in contiguous curve runs (jobs
+        // are curve-contiguous), which is what fragments real allocations.
+        let mut occupied = vec![false; total_nodes];
+        let target_occupied =
+            ((total_nodes as f64) * self.occupancy).round() as usize;
+        let mut occupied_count = 0usize;
+        while occupied_count < target_occupied {
+            // Random job: curve-contiguous run of 4..=256 nodes.
+            let len = 4usize << rng.below(7); // 4..256
+            let start = rng.below(total_nodes);
+            for i in 0..len.min(target_occupied - occupied_count + len) {
+                let slot = (start + i) % total_nodes;
+                if !occupied[slot] {
+                    occupied[slot] = true;
+                    occupied_count += 1;
+                    if occupied_count >= target_occupied {
+                        break;
+                    }
+                }
+            }
+        }
+        // Allocate our job: first free nodes in curve order from a random
+        // start offset (ALPS scans from its current position, not 0).
+        let start = rng.below(total_nodes);
+        let mut node_slots = Vec::with_capacity(num_nodes);
+        for i in 0..total_nodes {
+            let slot = (start + i) % total_nodes;
+            if !occupied[slot] {
+                node_slots.push(slot);
+                if node_slots.len() == num_nodes {
+                    break;
+                }
+            }
+        }
+        assert_eq!(
+            node_slots.len(),
+            num_nodes,
+            "machine too full: only {} of {num_nodes} nodes free",
+            node_slots.len()
+        );
+        let mut core_router = Vec::with_capacity(num_nodes * self.ranks_per_node);
+        let mut core_node = Vec::with_capacity(num_nodes * self.ranks_per_node);
+        for (node_idx, &slot) in node_slots.iter().enumerate() {
+            let router = curve[slot / self.nodes_per_router];
+            for _ in 0..self.ranks_per_node {
+                core_router.push(router as u32);
+                core_node.push(node_idx as u32);
+            }
+        }
+        Allocation {
+            torus: self.machine.clone(),
+            core_router,
+            core_node,
+            ranks_per_node: self.ranks_per_node,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bgq_allocation_shape() {
+        let a = Allocation::bgq([2, 2, 2, 4, 2], 4, "ABCDET");
+        assert_eq!(a.num_ranks(), 64 * 4);
+        assert_eq!(a.num_nodes(), 64);
+        assert_eq!(a.proc_coords().dim(), 5);
+        assert_eq!(a.proc_coords().len(), 256);
+    }
+
+    #[test]
+    fn bgq_consecutive_ranks_share_node() {
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 8, "ABCDET");
+        for r in 0..8 {
+            assert_eq!(a.core_node[r], a.core_node[0]);
+        }
+        assert_ne!(a.core_node[8], a.core_node[0]);
+    }
+
+    #[test]
+    fn sparse_allocation_deterministic() {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[8, 8, 8]),
+            nodes_per_router: 2,
+            ranks_per_node: 4,
+            occupancy: 0.4,
+        };
+        let a = alloc.allocate(100, 42);
+        let b = alloc.allocate(100, 42);
+        assert_eq!(a.core_router, b.core_router);
+        let c = alloc.allocate(100, 43);
+        assert_ne!(a.core_router, c.core_router);
+    }
+
+    #[test]
+    fn sparse_allocation_distinct_nodes() {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[6, 4, 8]),
+            nodes_per_router: 2,
+            ranks_per_node: 2,
+            occupancy: 0.3,
+        };
+        let a = alloc.allocate(50, 7);
+        assert_eq!(a.num_nodes(), 50);
+        assert_eq!(a.num_ranks(), 100);
+        // Nodes ids are 0..50 in order; each appears ranks_per_node times.
+        for (i, &n) in a.core_node.iter().enumerate() {
+            assert_eq!(n as usize, i / 2);
+        }
+    }
+
+    #[test]
+    fn zero_occupancy_is_curve_contiguous() {
+        let machine = Torus::torus(&[8, 8, 8]);
+        let alloc = SparseAllocator {
+            machine: machine.clone(),
+            nodes_per_router: 2,
+            ranks_per_node: 1,
+            occupancy: 0.0,
+        };
+        let a = alloc.allocate(64, 1);
+        // With an empty machine the allocation is a contiguous curve run, so
+        // consecutive allocated routers stay close.
+        let mut total = 0u64;
+        let mut cnt = 0u64;
+        for w in a.core_router.windows(2) {
+            if w[0] != w[1] {
+                total += machine.hop_dist_ids(w[0] as usize, w[1] as usize);
+                cnt += 1;
+            }
+        }
+        assert!((total as f64 / cnt as f64) < 3.0);
+    }
+
+    #[test]
+    fn higher_occupancy_spreads_allocation() {
+        let machine = Torus::torus(&[12, 8, 12]);
+        let mk = |occ: f64| SparseAllocator {
+            machine: machine.clone(),
+            nodes_per_router: 2,
+            ranks_per_node: 1,
+            occupancy: occ,
+        };
+        let spread = |a: &Allocation| -> f64 {
+            let mut total = 0u64;
+            for w in a.core_router.windows(2) {
+                total += machine.hop_dist_ids(w[0] as usize, w[1] as usize);
+            }
+            total as f64 / (a.core_router.len() - 1) as f64
+        };
+        // Average over seeds to avoid flakiness.
+        let avg = |occ: f64| -> f64 {
+            (0..5).map(|s| spread(&mk(occ).allocate(128, s))).sum::<f64>() / 5.0
+        };
+        assert!(avg(0.6) > avg(0.0), "sparse allocation should spread");
+    }
+}

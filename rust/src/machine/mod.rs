@@ -1,0 +1,25 @@
+//! Machine models: mesh/torus interconnection networks, link-bandwidth
+//! models (uniform BG/Q, heterogeneous Cray Gemini), node allocation
+//! simulators (contiguous BG/Q blocks, ALPS-style sparse SFC allocations),
+//! dimension-ordered routing, and default MPI rank orderings.
+//!
+//! The paper (Section 2) describes machine topology exclusively through
+//! router coordinates plus per-link bandwidths; these modules reproduce that
+//! information for the two target platforms:
+//!
+//! * **Cray XK7 (Titan)** — 3D Gemini torus, 2 compute nodes per router,
+//!   16 cores per node, heterogeneous links (X cables 75 GB/s; Y mezzanine
+//!   75 / Y cable 37.5; Z backplane 120 / Z cable 75), sparse ALPS
+//!   allocations ordered by a space-filling curve.
+//! * **IBM BG/Q (Mira)** — 5D torus, uniform links, E dimension of length 2,
+//!   contiguous power-of-two block allocations, configurable `ABCDET`-style
+//!   rank orderings.
+
+pub mod allocation;
+pub mod presets;
+pub mod rank_order;
+pub mod torus;
+
+pub use allocation::{Allocation, SparseAllocator};
+pub use presets::{bgq_block, cray_xk7, titan_full};
+pub use torus::{BwModel, Torus};

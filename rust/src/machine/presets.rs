@@ -1,0 +1,95 @@
+//! Machine presets for the paper's two platforms.
+
+use super::allocation::SparseAllocator;
+use super::torus::{BwModel, Torus};
+
+/// A Cray XK7 Gemini torus of the given shape (wrapped in all dimensions,
+/// heterogeneous Gemini link bandwidths).
+pub fn cray_xk7(sizes: &[usize; 3]) -> Torus {
+    Torus::new(sizes.to_vec(), vec![true; 3], BwModel::Gemini)
+}
+
+/// Titan's full Gemini torus: 25 x 16 x 24 routers = 9600 Geminis, 2 nodes
+/// each = 19,200 node slots (18,688 compute nodes in the real machine; the
+/// difference is service nodes, which the allocator's occupancy absorbs).
+pub fn titan_full() -> SparseAllocator {
+    SparseAllocator {
+        machine: cray_xk7(&[25, 16, 24]),
+        nodes_per_router: 2,
+        ranks_per_node: 16,
+        occupancy: 0.45,
+    }
+}
+
+/// BG/Q block dimensions for a node count, following Mira's convention
+/// (Section 5.2): complete 5D sub-toruses, power-of-two extents, E = 2.
+/// 512 nodes -> 4x4x4x4x2 and 2048 -> 4x4x4x16x2, as the paper states.
+pub fn bgq_block(num_nodes: usize) -> [usize; 5] {
+    match num_nodes {
+        128 => [2, 4, 4, 2, 2],
+        256 => [4, 4, 4, 2, 2],
+        512 => [4, 4, 4, 4, 2],
+        1024 => [4, 4, 4, 8, 2],
+        2048 => [4, 4, 4, 16, 2],
+        4096 => [4, 4, 8, 16, 2],
+        8192 => [4, 8, 8, 16, 2],
+        16384 => [8, 8, 8, 16, 2],
+        _ => {
+            // General: split powers of two across A..D greedily, E = 2.
+            assert!(
+                num_nodes.is_power_of_two() && num_nodes >= 32,
+                "BG/Q blocks are power-of-two node counts >= 32, got {num_nodes}"
+            );
+            let mut rem = num_nodes / 2;
+            let mut dims = [1usize; 5];
+            dims[4] = 2;
+            let mut d = 3;
+            while rem > 1 {
+                if dims[d] < 16 {
+                    dims[d] *= 2;
+                    rem /= 2;
+                }
+                d = if d == 0 { 3 } else { d - 1 };
+            }
+            dims
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_block_shapes() {
+        assert_eq!(bgq_block(512), [4, 4, 4, 4, 2]);
+        assert_eq!(bgq_block(2048), [4, 4, 4, 16, 2]);
+    }
+
+    #[test]
+    fn block_product_matches() {
+        for n in [128usize, 256, 512, 1024, 2048, 4096, 8192, 16384] {
+            assert_eq!(bgq_block(n).iter().product::<usize>(), n);
+        }
+    }
+
+    #[test]
+    fn generic_block_product_matches() {
+        for n in [32usize, 64, 32768] {
+            assert_eq!(bgq_block(n).iter().product::<usize>(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn titan_shape() {
+        let t = titan_full();
+        assert_eq!(t.machine.num_routers(), 9600);
+        assert_eq!(t.machine.dim(), 3);
+    }
+
+    #[test]
+    fn xk7_links_are_gemini() {
+        let t = cray_xk7(&[4, 4, 4]);
+        assert_eq!(t.bw.bandwidth(2, 0), 120.0);
+    }
+}

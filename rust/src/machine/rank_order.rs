@@ -1,0 +1,182 @@
+//! Default MPI rank orderings.
+//!
+//! * BG/Q `ABCDET`-style built-in orderings: a permutation string over the
+//!   five torus dimensions A–E plus T (ranks within a node); the **last**
+//!   letter varies fastest. The machine default `ABCDET` therefore places
+//!   consecutive ranks within a node first, then along E, D, C, B, A
+//!   (Section 1 and 5.2).
+//! * Cray Gemini / ALPS placement curve: ALPS orders the allocated nodes
+//!   along a space-filling curve that traverses a small `a x 2 x 4` box of
+//!   routers before crossing slow Y links (Section 5.3.1). We reproduce it
+//!   as: routers grouped into 2x2x4 boxes, boxes visited in Hilbert order
+//!   over the box grid, routers within a box in x-fastest order.
+
+use super::torus::Torus;
+use crate::sfc::hilbert::hilbert_index;
+
+/// Enumerate BG/Q rank placements for a job block.
+///
+/// `block` are the A,B,C,D,E extents of the allocated block; `t` is the
+/// number of ranks per node; `perm` is a string over {A,B,C,D,E,T} whose
+/// last letter varies fastest (e.g. the default `"ABCDET"`).
+///
+/// Returns, for each rank, the router id (in the block torus, dimension
+/// order A,B,C,D,E with A *slowest*; we store coords as [a,b,c,d,e] and use
+/// `Torus::id_of` with dimension 0 = A fastest-varying id convention — the
+/// mapping is internally consistent).
+pub fn bgq_rank_placement(block: &[usize; 5], t: usize, perm: &str) -> Vec<usize> {
+    let perm = perm.as_bytes();
+    assert_eq!(perm.len(), 6, "perm must be 6 letters over ABCDET");
+    // Extent per letter.
+    let extent = |ch: u8| -> usize {
+        match ch {
+            b'A' => block[0],
+            b'B' => block[1],
+            b'C' => block[2],
+            b'D' => block[3],
+            b'E' => block[4],
+            b'T' => t,
+            _ => panic!("bad rank-order letter {}", ch as char),
+        }
+    };
+    let total: usize = block.iter().product::<usize>() * t;
+    let torus = Torus::torus(block);
+    let mut out = Vec::with_capacity(total);
+    // Odometer over the permutation letters, last letter fastest.
+    let radices: Vec<usize> = perm.iter().map(|&c| extent(c)).collect();
+    let mut digits = vec![0usize; 6];
+    for _ in 0..total {
+        // Translate digits -> (a,b,c,d,e) coords; T digit selects the rank
+        // slot within the node and does not affect the router.
+        let mut coords = [0usize; 5];
+        for (li, &letter) in perm.iter().enumerate() {
+            let v = digits[li];
+            match letter {
+                b'A' => coords[0] = v,
+                b'B' => coords[1] = v,
+                b'C' => coords[2] = v,
+                b'D' => coords[3] = v,
+                b'E' => coords[4] = v,
+                b'T' => {}
+                _ => unreachable!(),
+            }
+        }
+        out.push(torus.id_of(&coords));
+        // Increment odometer (last letter fastest).
+        for li in (0..6).rev() {
+            digits[li] += 1;
+            if digits[li] < radices[li] {
+                break;
+            }
+            digits[li] = 0;
+        }
+    }
+    out
+}
+
+/// ALPS-style placement curve over a 3D Gemini torus: the order in which the
+/// scheduler considers routers when assigning nodes to jobs.
+pub fn gemini_curve_order(torus: &Torus) -> Vec<usize> {
+    assert_eq!(torus.dim(), 3, "gemini curve is defined for 3D");
+    let (sx, sy, sz) = (torus.sizes[0], torus.sizes[1], torus.sizes[2]);
+    let (bx, by, bz) = (2usize, 2usize, 4usize);
+    let nbx = sx.div_ceil(bx);
+    let nby = sy.div_ceil(by);
+    let nbz = sz.div_ceil(bz);
+    let bits = 1 + (nbx.max(nby).max(nbz) as u64).next_power_of_two().trailing_zeros();
+    // Order boxes by Hilbert index over the box grid.
+    let mut boxes: Vec<(u128, usize, usize, usize)> = Vec::with_capacity(nbx * nby * nbz);
+    for gz in 0..nbz {
+        for gy in 0..nby {
+            for gx in 0..nbx {
+                let h = hilbert_index(&[gx as u64, gy as u64, gz as u64], bits);
+                boxes.push((h, gx, gy, gz));
+            }
+        }
+    }
+    boxes.sort_unstable();
+    let mut order = Vec::with_capacity(torus.num_routers());
+    for (_, gx, gy, gz) in boxes {
+        // Within a box: x fastest (cheap links first), then y, then z.
+        for z in (gz * bz)..((gz * bz + bz).min(sz)) {
+            for y in (gy * by)..((gy * by + by).min(sy)) {
+                for x in (gx * bx)..((gx * bx + bx).min(sx)) {
+                    order.push(torus.id_of(&[x, y, z]));
+                }
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bgq_default_places_within_node_first() {
+        let block = [2, 2, 2, 2, 2];
+        let ranks = bgq_rank_placement(&block, 4, "ABCDET");
+        // First 4 ranks share a router (T fastest), next 4 differ only in E.
+        assert_eq!(ranks[0], ranks[1]);
+        assert_eq!(ranks[0], ranks[3]);
+        assert_ne!(ranks[3], ranks[4]);
+        let t = Torus::torus(&block);
+        let c0 = t.coords_of(ranks[0]);
+        let c4 = t.coords_of(ranks[4]);
+        assert_eq!(c0[..4], c4[..4]); // A..D equal
+        assert_ne!(c0[4], c4[4]); // E differs
+    }
+
+    #[test]
+    fn bgq_placement_covers_all_ranks() {
+        let block = [2, 2, 4, 4, 2];
+        let t = 4;
+        let ranks = bgq_rank_placement(&block, t, "ABCDET");
+        assert_eq!(ranks.len(), 2 * 2 * 4 * 4 * 2 * t);
+        // Every router appears exactly t times.
+        let mut counts = vec![0usize; 2 * 2 * 4 * 4 * 2];
+        for &r in &ranks {
+            counts[r] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == t));
+    }
+
+    #[test]
+    fn bgq_tabcde_strides_through_nodes() {
+        // TABCDE: T slowest -> first num_nodes ranks all hit distinct
+        // routers.
+        let block = [2, 2, 2, 2, 2];
+        let ranks = bgq_rank_placement(&block, 2, "TABCDE");
+        let nodes = 32;
+        let mut seen: Vec<usize> = ranks[..nodes].to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), nodes);
+    }
+
+    #[test]
+    fn gemini_curve_is_permutation() {
+        let t = Torus::torus(&[6, 4, 8]);
+        let order = gemini_curve_order(&t);
+        let mut s = order.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), t.num_routers());
+    }
+
+    #[test]
+    fn gemini_curve_keeps_box_locality() {
+        // Consecutive routers in curve order should usually be close: the
+        // average hop distance between consecutive entries must be far below
+        // random placement.
+        let t = Torus::torus(&[8, 8, 8]);
+        let order = gemini_curve_order(&t);
+        let mut total = 0u64;
+        for w in order.windows(2) {
+            total += t.hop_dist_ids(w[0], w[1]);
+        }
+        let avg = total as f64 / (order.len() - 1) as f64;
+        assert!(avg < 2.5, "curve locality poor: avg consecutive dist {avg}");
+    }
+}

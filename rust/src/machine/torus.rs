@@ -1,0 +1,296 @@
+//! Mesh/torus network topology with per-link bandwidths and
+//! dimension-ordered routing.
+
+/// Per-link bandwidth model (GB/s). Links are identified by the dimension
+/// they run along and the coordinate of their lower endpoint in that
+/// dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BwModel {
+    /// All links identical (IBM BG/Q: "the links have uniform bandwidth
+    /// along all dimensions").
+    Uniform(f64),
+    /// One bandwidth per dimension.
+    PerDim(Vec<f64>),
+    /// Cray Gemini XK7 heterogeneity (Section 2): X cables 75 GB/s;
+    /// Y alternates mezzanine traces (75) and cables (37.5); Z is backplane
+    /// traces (120) within 8-router backplanes and cables (75) between them.
+    Gemini,
+}
+
+impl BwModel {
+    /// Bandwidth of the link along `dim` whose lower endpoint has coordinate
+    /// `coord` in that dimension.
+    #[inline]
+    pub fn bandwidth(&self, dim: usize, coord: usize) -> f64 {
+        match self {
+            BwModel::Uniform(b) => *b,
+            BwModel::PerDim(bs) => bs[dim],
+            BwModel::Gemini => match dim {
+                0 => 75.0,
+                1 => {
+                    if coord % 2 == 0 {
+                        75.0 // mezzanine trace
+                    } else {
+                        37.5 // Y cable
+                    }
+                }
+                2 => {
+                    if coord % 8 == 7 {
+                        75.0 // Z cable between backplanes
+                    } else {
+                        120.0 // backplane trace
+                    }
+                }
+                _ => 75.0,
+            },
+        }
+    }
+}
+
+/// A d-dimensional mesh/torus of routers. Router ids are mixed-radix linear
+/// indices with dimension 0 fastest-varying.
+#[derive(Clone, Debug)]
+pub struct Torus {
+    pub sizes: Vec<usize>,
+    pub wrap: Vec<bool>,
+    pub bw: BwModel,
+}
+
+impl Torus {
+    pub fn new(sizes: Vec<usize>, wrap: Vec<bool>, bw: BwModel) -> Self {
+        assert_eq!(sizes.len(), wrap.len());
+        assert!(!sizes.is_empty() && sizes.iter().all(|&s| s >= 1));
+        Torus { sizes, wrap, bw }
+    }
+
+    /// Fully-wrapped torus with uniform bandwidth 1.
+    pub fn torus(sizes: &[usize]) -> Self {
+        Torus::new(sizes.to_vec(), vec![true; sizes.len()], BwModel::Uniform(1.0))
+    }
+
+    /// Unwrapped mesh with uniform bandwidth 1.
+    pub fn mesh(sizes: &[usize]) -> Self {
+        Torus::new(sizes.to_vec(), vec![false; sizes.len()], BwModel::Uniform(1.0))
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn num_routers(&self) -> usize {
+        self.sizes.iter().product()
+    }
+
+    /// Linear id of a coordinate vector (dimension 0 fastest).
+    #[inline]
+    pub fn id_of(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.dim());
+        let mut id = 0usize;
+        for d in (0..self.dim()).rev() {
+            debug_assert!(coords[d] < self.sizes[d]);
+            id = id * self.sizes[d] + coords[d];
+        }
+        id
+    }
+
+    /// Coordinates of a linear id.
+    #[inline]
+    pub fn coords_of(&self, mut id: usize) -> Vec<usize> {
+        let mut c = vec![0usize; self.dim()];
+        for d in 0..self.dim() {
+            c[d] = id % self.sizes[d];
+            id /= self.sizes[d];
+        }
+        c
+    }
+
+    /// Write coordinates of `id` into `out` without allocating.
+    #[inline]
+    pub fn coords_into(&self, mut id: usize, out: &mut [usize]) {
+        for d in 0..self.dim() {
+            out[d] = id % self.sizes[d];
+            id /= self.sizes[d];
+        }
+    }
+
+    /// Shortest signed step count from `a` to `b` along `dim` (wraps if the
+    /// dimension is a torus ring; ties broken toward positive direction).
+    #[inline]
+    pub fn signed_dist(&self, dim: usize, a: usize, b: usize) -> i64 {
+        let s = self.sizes[dim] as i64;
+        let fwd = (b as i64 - a as i64).rem_euclid(s);
+        if !self.wrap[dim] {
+            return b as i64 - a as i64;
+        }
+        if fwd * 2 <= s {
+            fwd
+        } else {
+            fwd - s
+        }
+    }
+
+    /// Hop distance (shortest path length) between two routers.
+    #[inline]
+    pub fn hop_dist(&self, a: &[usize], b: &[usize]) -> u64 {
+        let mut h = 0u64;
+        for d in 0..self.dim() {
+            h += self.signed_dist(d, a[d], b[d]).unsigned_abs();
+        }
+        h
+    }
+
+    /// Hop distance between two linear router ids.
+    pub fn hop_dist_ids(&self, a: usize, b: usize) -> u64 {
+        let mut h = 0u64;
+        let (mut a, mut b) = (a, b);
+        for d in 0..self.dim() {
+            let (ca, cb) = (a % self.sizes[d], b % self.sizes[d]);
+            a /= self.sizes[d];
+            b /= self.sizes[d];
+            h += self.signed_dist(d, ca, cb).unsigned_abs();
+        }
+        h
+    }
+
+    /// Bandwidth of the directed link leaving the router at `coords` along
+    /// `dim` in direction `dir` (+1/-1). Links are full-duplex; each
+    /// direction sees the full link bandwidth.
+    #[inline]
+    pub fn link_bandwidth(&self, coords: &[usize], dim: usize, dir: i64) -> f64 {
+        // Identify the undirected link by its lower endpoint along `dim`.
+        let size = self.sizes[dim];
+        let lower = if dir > 0 {
+            coords[dim]
+        } else {
+            (coords[dim] + size - 1) % size
+        };
+        self.bw.bandwidth(dim, lower)
+    }
+
+    /// Walk the dimension-ordered route from `a` to `b`, invoking
+    /// `visit(link_router_id, dim, dir)` for every directed link traversed.
+    /// `dir` is 0 for + and 1 for -. The `link_router_id` is the id of the
+    /// router the message *leaves* over that link.
+    pub fn route<F: FnMut(usize, usize, usize)>(&self, a: &[usize], b: &[usize], mut visit: F) {
+        let mut cur: Vec<usize> = a.to_vec();
+        for d in 0..self.dim() {
+            let steps = self.signed_dist(d, a[d], b[d]);
+            let dir = if steps >= 0 { 0usize } else { 1usize };
+            let s = self.sizes[d];
+            for _ in 0..steps.unsigned_abs() {
+                let id = self.id_of(&cur);
+                visit(id, d, dir);
+                cur[d] = if dir == 0 {
+                    (cur[d] + 1) % s
+                } else {
+                    (cur[d] + s - 1) % s
+                };
+            }
+            debug_assert_eq!(cur[d], b[d]);
+        }
+    }
+
+    /// Total number of directed links (each router has one outgoing link per
+    /// dimension per direction on a torus; mesh boundary routers lack the
+    /// outward link, but we index densely and never route over missing
+    /// links).
+    pub fn num_directed_links(&self) -> usize {
+        self.num_routers() * self.dim() * 2
+    }
+
+    /// Dense index of a directed link.
+    #[inline]
+    pub fn link_index(&self, router_id: usize, dim: usize, dir: usize) -> usize {
+        (router_id * self.dim() + dim) * 2 + dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_coord_roundtrip() {
+        let t = Torus::torus(&[3, 4, 5]);
+        for id in 0..t.num_routers() {
+            assert_eq!(t.id_of(&t.coords_of(id)), id);
+        }
+    }
+
+    #[test]
+    fn torus_distance_wraps() {
+        let t = Torus::torus(&[8]);
+        assert_eq!(t.hop_dist(&[0], &[7]), 1);
+        assert_eq!(t.hop_dist(&[0], &[4]), 4);
+        assert_eq!(t.hop_dist(&[1], &[6]), 3);
+    }
+
+    #[test]
+    fn mesh_distance_does_not_wrap() {
+        let m = Torus::mesh(&[8]);
+        assert_eq!(m.hop_dist(&[0], &[7]), 7);
+    }
+
+    #[test]
+    fn three_hop_diagonal() {
+        // Section 2: (i,j,k) to (i+1,j+1,k+1) is a three-hop path.
+        let t = Torus::torus(&[4, 4, 4]);
+        assert_eq!(t.hop_dist(&[1, 1, 1], &[2, 2, 2]), 3);
+    }
+
+    #[test]
+    fn route_length_equals_hop_dist() {
+        let t = Torus::torus(&[4, 3, 5]);
+        let a = [3, 0, 1];
+        let b = [0, 2, 4];
+        let mut hops = 0;
+        t.route(&a, &b, |_, _, _| hops += 1);
+        assert_eq!(hops, t.hop_dist(&a, &b));
+    }
+
+    #[test]
+    fn route_takes_wrap_shortcut() {
+        let t = Torus::torus(&[8]);
+        let mut links = Vec::new();
+        t.route(&[7], &[0], |id, d, dir| links.push((id, d, dir)));
+        assert_eq!(links, vec![(7, 0, 0)]); // one +X hop across the seam
+    }
+
+    #[test]
+    fn route_is_dimension_ordered() {
+        let t = Torus::torus(&[4, 4]);
+        let mut dims = Vec::new();
+        t.route(&[0, 0], &[2, 2], |_, d, _| dims.push(d));
+        assert_eq!(dims, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn gemini_bandwidths() {
+        let bw = BwModel::Gemini;
+        assert_eq!(bw.bandwidth(0, 3), 75.0);
+        assert_eq!(bw.bandwidth(1, 0), 75.0); // mezzanine
+        assert_eq!(bw.bandwidth(1, 1), 37.5); // Y cable
+        assert_eq!(bw.bandwidth(2, 0), 120.0); // backplane
+        assert_eq!(bw.bandwidth(2, 7), 75.0); // Z cable
+    }
+
+    #[test]
+    fn hop_dist_ids_matches_coords() {
+        let t = Torus::torus(&[3, 5, 2, 4]);
+        let n = t.num_routers();
+        for a in (0..n).step_by(7) {
+            for b in (0..n).step_by(11) {
+                assert_eq!(
+                    t.hop_dist_ids(a, b),
+                    t.hop_dist(&t.coords_of(a), &t.coords_of(b))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signed_dist_tie_breaks_positive() {
+        let t = Torus::torus(&[4]);
+        assert_eq!(t.signed_dist(0, 0, 2), 2); // exactly half: positive
+    }
+}

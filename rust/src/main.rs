@@ -1,0 +1,110 @@
+//! `repro` — the experiment launcher: regenerates every table and figure of
+//! the paper (see DESIGN.md §4 for the index) and hosts the mapping
+//! service.
+//!
+//! ```text
+//! repro <experiment|all> [--full] [--seed N] [--native] [--out DIR]
+//! repro serve [--addr HOST:PORT]
+//! repro list
+//! ```
+
+use taskmap::coordinator::{experiments, service::Service, Ctx};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <experiment|all|list|serve> [options]\n\
+         \n\
+         experiments: {}\n\
+         \n\
+         options:\n\
+           --full        paper-scale workloads (default: small/laptop scale)\n\
+           --seed N      allocation seed (default 42)\n\
+           --native      force the native WeightedHops backend (skip PJRT)\n\
+           --out DIR     also write TSV tables into DIR\n\
+           --addr A      serve: bind address (default 127.0.0.1:7777)",
+        experiments::ALL.join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args[0].as_str();
+    let mut full = false;
+    let mut seed = 42u64;
+    let mut native = false;
+    let mut out: Option<String> = None;
+    let mut addr = "127.0.0.1:7777".to_string();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--full" => full = true,
+            "--native" => native = true,
+            "--seed" => {
+                i += 1;
+                seed = args.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--out" => {
+                i += 1;
+                out = Some(args.get(i).cloned().unwrap_or_else(|| usage()));
+            }
+            "--addr" => {
+                i += 1;
+                addr = args.get(i).cloned().unwrap_or_else(|| usage());
+            }
+            other => {
+                eprintln!("unknown option {other}");
+                usage();
+            }
+        }
+        i += 1;
+    }
+
+    match cmd {
+        "list" => {
+            for id in experiments::ALL {
+                println!("{id}");
+            }
+        }
+        "serve" => {
+            let svc = Service::start(addr.as_str()).expect("bind service");
+            println!("mapping service listening on {}", svc.addr);
+            println!("protocol: newline-delimited JSON; see coordinator/service.rs");
+            // Serve until killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "all" => {
+            let ctx = Ctx::new(full, seed, native);
+            eprintln!("backend: {}", ctx.backend_name());
+            for id in experiments::ALL {
+                run_one(id, &ctx, out.as_deref());
+            }
+        }
+        id => {
+            if !experiments::ALL.contains(&id) {
+                eprintln!("unknown experiment {id}");
+                usage();
+            }
+            let ctx = Ctx::new(full, seed, native);
+            eprintln!("backend: {}", ctx.backend_name());
+            run_one(id, &ctx, out.as_deref());
+        }
+    }
+}
+
+fn run_one(id: &str, ctx: &Ctx, out: Option<&str>) {
+    let start = std::time::Instant::now();
+    let tables = experiments::run(id, ctx).expect("registered experiment");
+    for t in &tables {
+        println!("{}", t.markdown());
+        if let Some(dir) = out {
+            t.write_tsv(std::path::Path::new(dir)).expect("write tsv");
+        }
+    }
+    eprintln!("[{id}] done in {:.1}s", start.elapsed().as_secs_f64());
+}

@@ -1,0 +1,107 @@
+//! Closest-subset selection for the `tnum < pnum` case (Section 4.2,
+//! case 3): when there are more ranks than tasks, choose the most compact
+//! subset of `k` ranks and leave the rest idle.
+//!
+//! The paper cites a modified K-means (Hartigan–Wong): we iterate
+//! "pick the k points nearest the current centroid; recenter on the picked
+//! set" to convergence, which is exactly 1-means with a cardinality
+//! constraint.
+
+use crate::geom::Coords;
+
+/// Indices of the `k` most compact points. Deterministic.
+pub fn closest_subset(coords: &Coords, k: usize, max_iters: usize) -> Vec<usize> {
+    let n = coords.len();
+    let dim = coords.dim();
+    assert!(k >= 1 && k <= n);
+    if k == n {
+        return (0..n).collect();
+    }
+    // Start from the global centroid.
+    let mut centroid: Vec<f64> = (0..dim)
+        .map(|d| coords.axis(d).iter().sum::<f64>() / n as f64)
+        .collect();
+    let mut chosen: Vec<usize> = Vec::new();
+    for _ in 0..max_iters {
+        // k nearest to the centroid (squared Euclidean; ties by index).
+        let mut keyed: Vec<(f64, usize)> = (0..n)
+            .map(|i| {
+                let mut d2 = 0.0;
+                for d in 0..dim {
+                    let dx = coords.get(d, i) - centroid[d];
+                    d2 += dx * dx;
+                }
+                (d2, i)
+            })
+            .collect();
+        keyed.select_nth_unstable_by(k - 1, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let mut next: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+        next.sort_unstable();
+        if next == chosen {
+            break;
+        }
+        // Recenter on the chosen subset.
+        for d in 0..dim {
+            centroid[d] =
+                next.iter().map(|&i| coords.get(d, i)).sum::<f64>() / k as f64;
+        }
+        chosen = next;
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_tight_cluster() {
+        // 5 points near the origin, 5 far away: k=5 must pick the cluster.
+        let mut c = Coords::new(2);
+        for i in 0..5 {
+            c.push(&[i as f64 * 0.1, 0.0]);
+        }
+        for i in 0..5 {
+            c.push(&[100.0 + i as f64, 50.0]);
+        }
+        let s = closest_subset(&c, 5, 20);
+        assert_eq!(s, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn k_equals_n_returns_all() {
+        let c = Coords::from_axes(vec![vec![0.0, 1.0, 2.0]]);
+        assert_eq!(closest_subset(&c, 3, 5), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = Coords::from_axes(vec![
+            (0..50).map(|i| ((i * 37) % 50) as f64).collect(),
+            (0..50).map(|i| ((i * 13) % 50) as f64).collect(),
+        ]);
+        assert_eq!(closest_subset(&c, 10, 20), closest_subset(&c, 10, 20));
+    }
+
+    #[test]
+    fn subset_is_compact() {
+        // On a 10x10 grid, the best 25-subset has spread ~5; accept <= 7.
+        let mut c = Coords::new(2);
+        for y in 0..10 {
+            for x in 0..10 {
+                c.push(&[x as f64, y as f64]);
+            }
+        }
+        let s = closest_subset(&c, 25, 20);
+        assert_eq!(s.len(), 25);
+        let xs: Vec<f64> = s.iter().map(|&i| c.get(0, i)).collect();
+        let ys: Vec<f64> = s.iter().map(|&i| c.get(1, i)).collect();
+        let ext = |v: &[f64]| {
+            v.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                - v.iter().cloned().fold(f64::INFINITY, f64::min)
+        };
+        assert!(ext(&xs) <= 7.0 && ext(&ys) <= 7.0);
+    }
+}

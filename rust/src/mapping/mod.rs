@@ -1,0 +1,266 @@
+//! Task mapping (Section 4.2, Algorithm 1): partition task coordinates and
+//! processor coordinates into the same number of parts, then assign tasks
+//! to the ranks holding the same part number.
+//!
+//! Submodules implement the quality improvements of Section 4.3:
+//! * [`shift`] — torus wraparound coordinate shifting,
+//! * [`rotations`] — the td!·pd! rotation sweep scored by WeightedHops,
+//! * [`transforms`] — bandwidth scaling, Z2_3 box transform, axis dropping,
+//! * [`kmeans`] — core-subset selection for the `tnum < pnum` case,
+//! * [`pipeline`] — the named Z2 strategy bundles (Z2_1/Z2_2/Z2_3, +E).
+
+pub mod kmeans;
+pub mod pipeline;
+pub mod rotations;
+pub mod shift;
+pub mod transforms;
+
+use crate::geom::Coords;
+use crate::mj::{mj_partition, MjConfig};
+use crate::sfc::hilbert::hilbert_sort_f64;
+use crate::sfc::PartOrdering;
+
+/// Configuration for Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct MapConfig {
+    /// Part numbering for the task partition.
+    pub task_ordering: PartOrdering,
+    /// Part numbering for the processor partition.
+    pub proc_ordering: PartOrdering,
+    /// Longest-dimension cut selection (Section 4.3).
+    pub longest_dim: bool,
+    /// Uneven bisection by largest prime divisor (Z2_2/Z2_3).
+    pub uneven_prime: bool,
+}
+
+impl Default for MapConfig {
+    fn default() -> Self {
+        MapConfig {
+            task_ordering: PartOrdering::FZ,
+            proc_ordering: PartOrdering::FZ,
+            longest_dim: true,
+            uneven_prime: false,
+        }
+    }
+}
+
+impl MapConfig {
+    /// Uniform ordering on both sides.
+    pub fn with_ordering(ordering: PartOrdering) -> Self {
+        MapConfig {
+            task_ordering: ordering,
+            proc_ordering: ordering,
+            ..Default::default()
+        }
+    }
+
+    fn mj(&self, ordering: PartOrdering) -> MjConfig {
+        MjConfig {
+            ordering,
+            longest_dim: self.longest_dim,
+            uneven_prime: self.uneven_prime,
+        }
+    }
+}
+
+/// Partition a coordinate set into `np` parts under the given ordering.
+/// `Hilbert` ranks points along the Hilbert curve and chops the order into
+/// balanced chunks; everything else is an MJ bisection numbering.
+pub fn partition_ordered(
+    coords: &Coords,
+    np: usize,
+    ordering: PartOrdering,
+    cfg: &MapConfig,
+) -> Vec<u32> {
+    match ordering {
+        PartOrdering::Hilbert => {
+            let bits = (128 / coords.dim().max(1)).min(16) as u32;
+            let order = hilbert_sort_f64(coords, bits);
+            let n = coords.len();
+            let base = n / np;
+            let extra = n % np;
+            let mut part = vec![0u32; n];
+            let mut pos = 0usize;
+            for p in 0..np {
+                let len = base + usize::from(p < extra);
+                for _ in 0..len {
+                    part[order[pos]] = p as u32;
+                    pos += 1;
+                }
+            }
+            part
+        }
+        _ => mj_partition(coords, np, &cfg.mj(ordering)),
+    }
+}
+
+/// Algorithm 1: map `tnum` tasks onto `pnum` ranks. Returns
+/// `task_to_rank`. Handles all three cardinality cases:
+///
+/// 1. `tnum == pnum` — one-to-one;
+/// 2. `tnum >  pnum` — both sides are split into `pnum` parts; every task
+///    in a part is assigned to that part's rank (simultaneous partitioning
+///    and mapping);
+/// 3. `tnum <  pnum` — a closest subset of `tnum` ranks is selected by
+///    k-means (Section 4.2 case 3) and the one-to-one mapping runs within
+///    the subset; remaining ranks are idle.
+pub fn map_tasks(tcoords: &Coords, pcoords: &Coords, cfg: &MapConfig) -> Vec<u32> {
+    let tnum = tcoords.len();
+    let pnum = pcoords.len();
+    assert!(tnum > 0 && pnum > 0);
+    if tnum < pnum {
+        let subset = kmeans::closest_subset(pcoords, tnum, 20);
+        let sub_coords = pcoords.gather(&subset);
+        let sub_map = map_tasks(tcoords, &sub_coords, cfg);
+        return sub_map
+            .into_iter()
+            .map(|r| subset[r as usize] as u32)
+            .collect();
+    }
+    let np = pnum;
+    let task_part = partition_ordered(tcoords, np, cfg.task_ordering, cfg);
+    let proc_part = partition_ordered(pcoords, np, cfg.proc_ordering, cfg);
+    get_mapping_arrays(&task_part, &proc_part, np)
+}
+
+/// GetMappingArrays (Algorithm 1): join task parts and processor parts on
+/// part number. Within a part, tasks and ranks are paired in index order;
+/// when a part holds several tasks per rank they are distributed
+/// round-robin.
+pub fn get_mapping_arrays(task_part: &[u32], proc_part: &[u32], np: usize) -> Vec<u32> {
+    // Bucket ranks by part (counting sort, index order preserved).
+    let mut rank_count = vec![0u32; np];
+    for &p in proc_part {
+        rank_count[p as usize] += 1;
+    }
+    let mut rank_off = vec![0u32; np + 1];
+    for p in 0..np {
+        rank_off[p + 1] = rank_off[p] + rank_count[p];
+    }
+    let mut ranks_by_part = vec![0u32; proc_part.len()];
+    let mut cursor = rank_off.clone();
+    for (rank, &p) in proc_part.iter().enumerate() {
+        ranks_by_part[cursor[p as usize] as usize] = rank as u32;
+        cursor[p as usize] += 1;
+    }
+    // Assign tasks.
+    let mut task_to_rank = vec![0u32; task_part.len()];
+    let mut next_in_part = vec![0u32; np];
+    for (task, &p) in task_part.iter().enumerate() {
+        let p = p as usize;
+        let nranks = rank_count[p];
+        assert!(nranks > 0, "part {p} has tasks but no ranks");
+        let slot = next_in_part[p] % nranks;
+        task_to_rank[task] = ranks_by_part[(rank_off[p] + slot) as usize];
+        next_in_part[p] += 1;
+    }
+    task_to_rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+
+    fn grid(dims: &[usize]) -> Coords {
+        stencil_graph(dims, false, 1.0).coords
+    }
+
+    #[test]
+    fn one_to_one_is_bijection() {
+        let t = grid(&[8, 8]);
+        let p = grid(&[4, 4, 4]);
+        let m = map_tasks(&t, &p, &MapConfig::default());
+        let mut s = m.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_tasks_than_ranks_balances() {
+        let t = grid(&[16, 16]); // 256 tasks
+        let p = grid(&[4, 4]); // 16 ranks
+        let m = map_tasks(&t, &p, &MapConfig::default());
+        let mut loads = vec![0usize; 16];
+        for &r in &m {
+            loads[r as usize] += 1;
+        }
+        assert!(loads.iter().all(|&l| l == 16), "{loads:?}");
+    }
+
+    #[test]
+    fn more_tasks_keeps_locality() {
+        // Tasks assigned to one rank must be spatially compact: the average
+        // intra-rank spread should be near the 4x4 block ideal.
+        let t = grid(&[16, 16]);
+        let p = grid(&[4, 4]);
+        let m = map_tasks(&t, &p, &MapConfig::default());
+        for rank in 0..16u32 {
+            let pts: Vec<usize> = (0..256).filter(|&i| m[i] == rank).collect();
+            let xs: Vec<f64> = pts.iter().map(|&i| t.get(0, i)).collect();
+            let ys: Vec<f64> = pts.iter().map(|&i| t.get(1, i)).collect();
+            let ext = |v: &[f64]| {
+                v.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                    - v.iter().cloned().fold(f64::INFINITY, f64::min)
+            };
+            assert!(ext(&xs) <= 4.0 && ext(&ys) <= 4.0, "rank {rank} spread");
+        }
+    }
+
+    #[test]
+    fn fewer_tasks_than_ranks_uses_subset() {
+        let t = grid(&[4, 4]); // 16 tasks
+        let p = grid(&[8, 8]); // 64 ranks
+        let m = map_tasks(&t, &p, &MapConfig::default());
+        // 16 distinct ranks used.
+        let mut used = m.clone();
+        used.sort_unstable();
+        used.dedup();
+        assert_eq!(used.len(), 16);
+        // The chosen subset is compact (k-means "closest subset"): max
+        // pairwise L1 distance bounded well below the full grid spread.
+        let mut maxd = 0.0f64;
+        for &a in &used {
+            for &b in &used {
+                let (pa, pb) = (p.point_vec(a as usize), p.point_vec(b as usize));
+                let d = (pa[0] - pb[0]).abs() + (pa[1] - pb[1]).abs();
+                maxd = maxd.max(d);
+            }
+        }
+        assert!(maxd <= 8.0, "subset spread {maxd}");
+    }
+
+    #[test]
+    fn hilbert_ordering_both_sides() {
+        let t = grid(&[8, 8]);
+        let p = grid(&[8, 8]);
+        let cfg = MapConfig::with_ordering(PartOrdering::Hilbert);
+        let m = map_tasks(&t, &p, &cfg);
+        let mut s = m.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64u32).collect::<Vec<_>>());
+        // Identical geometry + identical curve => identity-ish mapping:
+        // every task maps to the rank at its own grid position.
+        for i in 0..64usize {
+            assert_eq!(t.point_vec(i), p.point_vec(m[i] as usize));
+        }
+    }
+
+    #[test]
+    fn get_mapping_arrays_round_robin() {
+        // 2 parts, 2 ranks each, 8 tasks: 2 tasks per rank.
+        let task_part = [0, 0, 0, 0, 1, 1, 1, 1].map(|x| x as u32);
+        let proc_part = [0, 1, 0, 1].map(|x| x as u32);
+        let m = get_mapping_arrays(&task_part, &proc_part, 2);
+        assert_eq!(m, vec![0, 2, 0, 2, 1, 3, 1, 3]);
+    }
+
+    #[test]
+    fn mapping_deterministic() {
+        let t = grid(&[9, 9]);
+        let p = grid(&[3, 27]);
+        let a = map_tasks(&t, &p, &MapConfig::default());
+        let b = map_tasks(&t, &p, &MapConfig::default());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,304 @@
+//! Named mapping strategies: the Z2 variants evaluated in Section 5.
+//!
+//! * **Z2_1** — the base geometric mapper: FZ ordering, longest-dimension
+//!   cuts, torus shift, rotation sweep (Section 5.3.1).
+//! * **Z2_2** — Z2_1 + uneven bisection by largest prime divisor + link-
+//!   bandwidth coordinate scaling.
+//! * **Z2_3** — Z2_2 + the 2x2x8 box transform lifting 3D router
+//!   coordinates to 6D so cuts happen between boxes first.
+//! * **SFC+Z2** — keep the application's own partition (e.g. HOMME's
+//!   Hilbert SFC) and use the geometric mapper only to place parts on
+//!   nodes (Section 5.2).
+//!
+//! The "+E" architecture optimization (ignore the BG/Q E dimension when
+//! partitioning processors) is `drop_proc_dims: vec![4]`.
+
+use super::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
+use super::shift::shift_torus_coords;
+use super::transforms::{bandwidth_scale, box_transform};
+use super::MapConfig;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::machine::Allocation;
+use crate::sfc::PartOrdering;
+
+/// Full strategy configuration.
+#[derive(Clone, Debug)]
+pub struct Z2Config {
+    pub ordering: PartOrdering,
+    pub longest_dim: bool,
+    /// Uneven bisection by largest prime divisor (Z2_2/Z2_3).
+    pub uneven_prime: bool,
+    /// Scale machine coordinates by cumulative 1/bandwidth (Z2_2/Z2_3).
+    pub bw_scale: bool,
+    /// Lift 3D router coordinates to 6D box coordinates (Z2_3):
+    /// (box extents, outer scale).
+    pub box_transform: Option<([usize; 3], f64)>,
+    /// Processor dimensions to ignore while partitioning ("+E" on BG/Q).
+    pub drop_proc_dims: Vec<usize>,
+    /// Torus wraparound shift of the machine coordinates.
+    pub shift: bool,
+    /// Rotation-sweep candidate cap (1 = identity rotation only).
+    pub max_rotations: usize,
+}
+
+impl Z2Config {
+    /// Z2_1 of Section 5.3.1 (also the plain "Z2" of Section 5.2).
+    pub fn z2_1() -> Self {
+        Z2Config {
+            ordering: PartOrdering::FZ,
+            longest_dim: true,
+            uneven_prime: false,
+            bw_scale: false,
+            box_transform: None,
+            drop_proc_dims: vec![],
+            shift: true,
+            max_rotations: 36,
+        }
+    }
+
+    /// Z2_2: uneven prime bisection + bandwidth scaling.
+    pub fn z2_2() -> Self {
+        Z2Config {
+            uneven_prime: true,
+            bw_scale: true,
+            ..Z2Config::z2_1()
+        }
+    }
+
+    /// Z2_3: Z2_2 + the 2x2x8 box transform.
+    pub fn z2_3() -> Self {
+        Z2Config {
+            box_transform: Some(([2, 2, 8], 8.0)),
+            ..Z2Config::z2_2()
+        }
+    }
+
+    /// Add the "+E" optimization (BG/Q: ignore dimension 4).
+    pub fn plus_e(mut self) -> Self {
+        self.drop_proc_dims = vec![4];
+        self
+    }
+
+    fn map_cfg(&self) -> MapConfig {
+        MapConfig {
+            task_ordering: self.ordering,
+            proc_ordering: self.ordering,
+            longest_dim: self.longest_dim,
+            uneven_prime: self.uneven_prime,
+        }
+    }
+}
+
+/// Prepare processor coordinates per the strategy: box transform or
+/// (shift + bandwidth scale), then axis dropping.
+pub fn prepare_proc_coords(alloc: &Allocation, cfg: &Z2Config) -> Coords {
+    let torus = &alloc.torus;
+    let mut pcoords = alloc.proc_coords();
+    if let Some((boxes, outer_scale)) = cfg.box_transform {
+        // Box transform consumes raw integer coordinates; the box grid
+        // already encodes the machine hierarchy, so no shift on top.
+        pcoords = box_transform(&pcoords, boxes, outer_scale);
+    } else {
+        if cfg.shift {
+            shift_torus_coords(&mut pcoords, &torus.sizes, &torus.wrap);
+        }
+        if cfg.bw_scale {
+            bandwidth_scale(&mut pcoords, torus, None);
+        }
+    }
+    if !cfg.drop_proc_dims.is_empty() {
+        let keep: Vec<usize> = (0..pcoords.dim())
+            .filter(|d| !cfg.drop_proc_dims.contains(d))
+            .collect();
+        pcoords = pcoords.select_axes(&keep);
+    }
+    pcoords
+}
+
+/// Run the strategy: returns `task_to_rank`.
+pub fn z2_map(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    cfg: &Z2Config,
+    backend: &dyn WhopsBackend,
+) -> Vec<u32> {
+    let pcoords = prepare_proc_coords(alloc, cfg);
+    let map_cfg = cfg.map_cfg();
+    if cfg.max_rotations <= 1 {
+        return super::map_tasks(tcoords, &pcoords, &map_cfg);
+    }
+    let sweep = SweepConfig {
+        max_candidates: cfg.max_rotations,
+        ..Default::default()
+    };
+    rotation_sweep(graph, tcoords, &pcoords, alloc, &map_cfg, &sweep, backend).task_to_rank
+}
+
+/// SFC+Z2 (Section 5.2): keep an existing application partition
+/// (`part_of_task`, `num_parts` parts) and geometrically map *parts* to
+/// ranks. Part coordinates are the centroids of their tasks' coordinates.
+/// Returns `task_to_rank`.
+pub fn sfc_plus_z2(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    part_of_task: &[u32],
+    num_parts: usize,
+    alloc: &Allocation,
+    cfg: &Z2Config,
+    backend: &dyn WhopsBackend,
+) -> Vec<u32> {
+    assert_eq!(alloc.num_ranks(), num_parts, "SFC+Z2 maps one part per rank");
+    let centroids = part_centroids(tcoords, part_of_task, num_parts);
+    // Build the part-level quotient graph for scoring the rotation sweep.
+    let mut pg_edges: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
+    for e in &graph.edges {
+        let (pu, pv) = (part_of_task[e.u as usize], part_of_task[e.v as usize]);
+        if pu != pv {
+            let key = (pu.min(pv), pu.max(pv));
+            *pg_edges.entry(key).or_insert(0.0) += e.w;
+        }
+    }
+    let part_graph = TaskGraph {
+        num_tasks: num_parts,
+        edges: pg_edges
+            .into_iter()
+            .map(|((u, v), w)| crate::apps::Edge { u, v, w })
+            .collect(),
+        coords: centroids.clone(),
+    };
+    let part_to_rank = z2_map(&part_graph, &centroids, alloc, cfg, backend);
+    part_of_task
+        .iter()
+        .map(|&p| part_to_rank[p as usize])
+        .collect()
+}
+
+/// Centroid coordinates of each part.
+pub fn part_centroids(coords: &Coords, part_of: &[u32], num_parts: usize) -> Coords {
+    let dim = coords.dim();
+    let mut sums = vec![vec![0f64; num_parts]; dim];
+    let mut counts = vec![0usize; num_parts];
+    for (i, &p) in part_of.iter().enumerate() {
+        counts[p as usize] += 1;
+        for d in 0..dim {
+            sums[d][p as usize] += coords.get(d, i);
+        }
+    }
+    for p in 0..num_parts {
+        assert!(counts[p] > 0, "empty part {p}");
+        for axis in sums.iter_mut() {
+            axis[p] /= counts[p] as f64;
+        }
+    }
+    Coords::from_axes(sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::{Allocation, SparseAllocator, Torus};
+    use crate::mapping::rotations::NativeBackend;
+    use crate::metrics::eval_hops;
+
+    fn toy_alloc() -> Allocation {
+        SparseAllocator {
+            machine: Torus::torus(&[8, 8, 8]),
+            nodes_per_router: 2,
+            ranks_per_node: 4,
+            occupancy: 0.3,
+        }
+        .allocate(16, 11)
+    }
+
+    #[test]
+    fn z2_variants_produce_bijections() {
+        let alloc = toy_alloc(); // 64 ranks
+        let g = stencil_graph(&[4, 4, 4], false, 1.0);
+        for cfg in [Z2Config::z2_1(), Z2Config::z2_2(), Z2Config::z2_3()] {
+            let mut cfg = cfg;
+            cfg.max_rotations = 4; // keep the test quick
+            let m = z2_map(&g, &g.coords, &alloc, &cfg, &NativeBackend);
+            let mut s = m.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..64u32).collect::<Vec<_>>(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn z2_beats_random_mapping() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[4, 4, 4], false, 1.0);
+        let mut cfg = Z2Config::z2_1();
+        cfg.max_rotations = 8;
+        let m = z2_map(&g, &g.coords, &alloc, &cfg, &NativeBackend);
+        let good = eval_hops(&g, &m, &alloc);
+        // Scrambled mapping for comparison.
+        let mut rng = crate::testutil::Rng::new(5);
+        let mut bad: Vec<u32> = (0..64).collect();
+        rng.shuffle(&mut bad);
+        let rand = eval_hops(&g, &bad, &alloc);
+        assert!(
+            good.weighted_hops < rand.weighted_hops,
+            "Z2 {} !< random {}",
+            good.weighted_hops,
+            rand.weighted_hops
+        );
+    }
+
+    #[test]
+    fn plus_e_drops_dimension() {
+        let cfg = Z2Config::z2_1().plus_e();
+        let alloc = Allocation::bgq([2, 2, 2, 2, 2], 2, "ABCDET");
+        let p = prepare_proc_coords(&alloc, &cfg);
+        assert_eq!(p.dim(), 4);
+    }
+
+    #[test]
+    fn box_transform_lifts_to_6d() {
+        let cfg = Z2Config::z2_3();
+        let alloc = toy_alloc();
+        let p = prepare_proc_coords(&alloc, &cfg);
+        assert_eq!(p.dim(), 6);
+    }
+
+    #[test]
+    fn part_centroids_average() {
+        let coords = Coords::from_axes(vec![vec![0.0, 2.0, 10.0], vec![1.0, 3.0, 5.0]]);
+        let parts = [0u32, 0, 1];
+        let c = part_centroids(&coords, &parts, 2);
+        assert_eq!(c.point_vec(0), vec![1.0, 2.0]);
+        assert_eq!(c.point_vec(1), vec![10.0, 5.0]);
+    }
+
+    #[test]
+    fn sfc_plus_z2_respects_partition() {
+        // Tasks in the same SFC part must land on the same rank.
+        let g = stencil_graph(&[8, 8], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[4, 4]),
+            core_router: (0..16u32).collect(),
+            core_node: (0..16u32).collect(),
+            ranks_per_node: 1,
+        };
+        // Simple 16-part partition: 2x2 blocks.
+        let part_of: Vec<u32> = (0..64)
+            .map(|i| {
+                let (x, y) = (i % 8, i / 8);
+                ((x / 2) * 4 + y / 2) as u32
+            })
+            .collect();
+        let mut cfg = Z2Config::z2_1();
+        cfg.max_rotations = 2;
+        let m = sfc_plus_z2(&g, &g.coords, &part_of, 16, &alloc, &cfg, &NativeBackend);
+        for i in 0..64 {
+            for j in 0..64 {
+                if part_of[i] == part_of[j] {
+                    assert_eq!(m[i], m[j]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Rotation sweep (Section 4.3, "Rotating the machine and task
+//! coordinates"): the quality of an MJ mapping depends on the order the cut
+//! dimensions are visited, so up to `td!·pd!` axis-permutation candidates
+//! are generated and the one with the lowest WeightedHops (Eqn. 3) wins.
+//!
+//! In the paper each MPI process computes one rotation and an Allreduce
+//! picks the winner; here the sweep is a batch: candidate mappings are
+//! scored together by the `batched_weighted_hops` kernel — either the AOT
+//! PJRT artifact (`runtime::PjrtBackend`) or the bit-equivalent native
+//! fallback.
+
+use super::MapConfig;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::machine::Allocation;
+use crate::metrics::native::batched_weighted_hops_native;
+
+/// Backend for batched WeightedHops evaluation. Implementations: the
+/// in-process native evaluator (below) and the PJRT artifact executor
+/// (`crate::runtime::PjrtBackend`).
+pub trait WhopsBackend {
+    /// `src`/`dst`: `[r*e*d]` candidate-major coordinate arrays; `w`: `[e]`;
+    /// `dims`/`wrap`: `[d]`. Returns one score per candidate.
+    fn eval_batch(
+        &self,
+        src: &[f32],
+        dst: &[f32],
+        w: &[f32],
+        dims: &[f32],
+        wrap: &[f32],
+        r: usize,
+        e: usize,
+        d: usize,
+    ) -> Vec<f32>;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pure-rust backend (always available; arbiter in tests).
+pub struct NativeBackend;
+
+impl WhopsBackend for NativeBackend {
+    fn eval_batch(
+        &self,
+        src: &[f32],
+        dst: &[f32],
+        w: &[f32],
+        dims: &[f32],
+        wrap: &[f32],
+        r: usize,
+        e: usize,
+        d: usize,
+    ) -> Vec<f32> {
+        batched_weighted_hops_native(src, dst, w, dims, wrap, r, e, d)
+    }
+}
+
+/// All permutations of `0..d` in lexicographic order.
+pub fn axis_permutations(d: usize) -> Vec<Vec<usize>> {
+    assert!(d >= 1 && d <= 7, "d={d} would generate too many permutations");
+    let mut perms = Vec::new();
+    let mut cur: Vec<usize> = (0..d).collect();
+    loop {
+        perms.push(cur.clone());
+        // next_permutation
+        let Some(i) = (0..d - 1).rev().find(|&i| cur[i] < cur[i + 1]) else {
+            break;
+        };
+        let j = (i + 1..d).rev().find(|&j| cur[j] > cur[i]).unwrap();
+        cur.swap(i, j);
+        cur[i + 1..].reverse();
+    }
+    perms
+}
+
+/// Sweep configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    /// Cap on the number of (task-perm, proc-perm) candidates. The full
+    /// product is subsampled with a deterministic stride when it exceeds
+    /// the cap (the paper's sweep is naturally capped by the process-group
+    /// size `rp`).
+    pub max_candidates: usize,
+    /// Edge-chunk size for batched scoring (bounds peak memory and matches
+    /// the AOT artifact padding).
+    pub chunk_edges: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            max_candidates: 36,
+            chunk_edges: 32768,
+        }
+    }
+}
+
+/// Result of a rotation sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub task_to_rank: Vec<u32>,
+    /// Index of the winning candidate.
+    pub chosen: usize,
+    /// WeightedHops score per candidate.
+    pub scores: Vec<f64>,
+    /// The (task_perm, proc_perm) of each candidate.
+    pub candidates: Vec<(Vec<usize>, Vec<usize>)>,
+}
+
+/// Enumerate capped (tperm, pperm) candidate pairs deterministically.
+pub fn candidate_rotations(td: usize, pd: usize, cap: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let tperms = axis_permutations(td);
+    let pperms = axis_permutations(pd);
+    let total = tperms.len() * pperms.len();
+    let take = total.min(cap.max(1));
+    // Stride subsample over the full product, always including index 0
+    // (the identity rotation).
+    let mut out = Vec::with_capacity(take);
+    for k in 0..take {
+        let idx = k * total / take;
+        out.push((
+            tperms[idx / pperms.len()].clone(),
+            pperms[idx % pperms.len()].clone(),
+        ));
+    }
+    out
+}
+
+/// Score a set of candidate mappings by WeightedHops on the allocation's
+/// network. Returns f64 accumulations of the backend's per-chunk f32 sums.
+pub fn score_mappings(
+    graph: &TaskGraph,
+    mappings: &[Vec<u32>],
+    alloc: &Allocation,
+    backend: &dyn WhopsBackend,
+    chunk_edges: usize,
+) -> Vec<f64> {
+    let r = mappings.len();
+    let d = alloc.torus.dim();
+    let ne = graph.edges.len();
+    let dims: Vec<f32> = alloc.torus.sizes.iter().map(|&s| s as f32).collect();
+    let wrap: Vec<f32> = alloc
+        .torus
+        .wrap
+        .iter()
+        .map(|&w| if w { 1.0 } else { 0.0 })
+        .collect();
+    // Per-rank router coordinates, f32, rank-major.
+    let nranks = alloc.num_ranks();
+    let mut rank_coords = vec![0f32; nranks * d];
+    let mut buf = vec![0usize; d];
+    for rank in 0..nranks {
+        alloc
+            .torus
+            .coords_into(alloc.core_router[rank] as usize, &mut buf);
+        for k in 0..d {
+            rank_coords[rank * d + k] = buf[k] as f32;
+        }
+    }
+    let mut scores = vec![0f64; r];
+    let chunk = chunk_edges.max(1);
+    let mut src = vec![0f32; r * chunk * d];
+    let mut dst = vec![0f32; r * chunk * d];
+    let mut w = vec![0f32; chunk];
+    let mut lo = 0usize;
+    while lo < ne {
+        let hi = (lo + chunk).min(ne);
+        let len = hi - lo;
+        // Zero-fill the padding region (w=0 edges contribute nothing).
+        w[len..].fill(0.0);
+        for (k, e) in graph.edges[lo..hi].iter().enumerate() {
+            w[k] = e.w as f32;
+        }
+        for (ri, m) in mappings.iter().enumerate() {
+            let base = ri * chunk * d;
+            for (k, e) in graph.edges[lo..hi].iter().enumerate() {
+                let ra = m[e.u as usize] as usize;
+                let rb = m[e.v as usize] as usize;
+                src[base + k * d..base + (k + 1) * d]
+                    .copy_from_slice(&rank_coords[ra * d..(ra + 1) * d]);
+                dst[base + k * d..base + (k + 1) * d]
+                    .copy_from_slice(&rank_coords[rb * d..(rb + 1) * d]);
+            }
+            // Padding coords can stay stale: their weights are zero.
+        }
+        let part = backend.eval_batch(&src, &dst, &w, &dims, &wrap, r, chunk, d);
+        for (ri, &p) in part.iter().enumerate() {
+            scores[ri] += p as f64;
+        }
+        lo = hi;
+    }
+    scores
+}
+
+/// The full rotation sweep: generate candidates, map, score, pick the best.
+/// `pcoords` are the (possibly transformed) processor coordinates used for
+/// partitioning; scoring always uses the true router coordinates from
+/// `alloc`.
+pub fn rotation_sweep(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    pcoords: &Coords,
+    alloc: &Allocation,
+    map_cfg: &MapConfig,
+    sweep: &SweepConfig,
+    backend: &dyn WhopsBackend,
+) -> SweepResult {
+    let candidates = candidate_rotations(tcoords.dim(), pcoords.dim(), sweep.max_candidates);
+    let mappings: Vec<Vec<u32>> = candidates
+        .iter()
+        .map(|(tp, pp)| {
+            super::map_tasks(&tcoords.permute_axes(tp), &pcoords.permute_axes(pp), map_cfg)
+        })
+        .collect();
+    let scores = score_mappings(graph, &mappings, alloc, backend, sweep.chunk_edges);
+    let chosen = scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+        .map(|(i, _)| i)
+        .unwrap();
+    SweepResult {
+        task_to_rank: mappings.into_iter().nth(chosen).unwrap(),
+        chosen,
+        scores,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::{Allocation, Torus};
+    use crate::metrics::eval_hops;
+
+    fn line_alloc(n: usize) -> Allocation {
+        Allocation {
+            torus: Torus::torus(&[n]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        }
+    }
+
+    #[test]
+    fn permutation_count() {
+        assert_eq!(axis_permutations(1).len(), 1);
+        assert_eq!(axis_permutations(3).len(), 6);
+        assert_eq!(axis_permutations(5).len(), 120);
+        assert_eq!(axis_permutations(3)[0], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn candidates_capped_and_include_identity() {
+        let c = candidate_rotations(3, 3, 10);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c[0], ((0..3).collect::<Vec<_>>(), (0..3).collect()));
+        let full = candidate_rotations(3, 3, 100);
+        assert_eq!(full.len(), 36);
+    }
+
+    #[test]
+    fn scores_match_eval_hops_weighted() {
+        // score_mappings must agree with the metrics engine on WeightedHops
+        // (for one-rank-per-node allocations where intra-node never
+        // triggers).
+        let g = stencil_graph(&[4, 4], false, 3.0);
+        let alloc = line_alloc(16);
+        let m: Vec<u32> = (0..16u32).rev().collect();
+        let scores = score_mappings(&g, &[m.clone()], &alloc, &NativeBackend, 7);
+        let metric = eval_hops(&g, &m, &alloc);
+        assert!(
+            (scores[0] - metric.weighted_hops).abs() < 1e-3,
+            "{} vs {}",
+            scores[0],
+            metric.weighted_hops
+        );
+    }
+
+    #[test]
+    fn chunking_invariant() {
+        let g = stencil_graph(&[8, 8], false, 1.5);
+        let alloc = line_alloc(64);
+        let m: Vec<u32> = (0..64u32).map(|i| (i * 7) % 64).collect();
+        let a = score_mappings(&g, &[m.clone()], &alloc, &NativeBackend, 1000);
+        let b = score_mappings(&g, &[m.clone()], &alloc, &NativeBackend, 13);
+        assert!((a[0] - b[0]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn sweep_picks_minimum() {
+        // 2D tasks onto a 2D grid of ranks: the sweep must return the
+        // candidate whose score equals the min of all scores.
+        let g = stencil_graph(&[4, 8], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[8, 4]),
+            core_router: (0..32u32).collect(),
+            core_node: (0..32u32).collect(),
+            ranks_per_node: 1,
+        };
+        let t = g.coords.clone();
+        let p = alloc.proc_coords();
+        let res = rotation_sweep(
+            &g,
+            &t,
+            &p,
+            &alloc,
+            &MapConfig::default(),
+            &SweepConfig::default(),
+            &NativeBackend,
+        );
+        let min = res.scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(res.scores[res.chosen], min);
+        // And the returned mapping really has that WeightedHops.
+        let m = eval_hops(&g, &res.task_to_rank, &alloc);
+        assert!((m.weighted_hops - min).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sweep_beats_worst_rotation() {
+        // On an anisotropic problem the best rotation must strictly beat
+        // the worst one (otherwise the sweep is pointless).
+        let g = stencil_graph(&[2, 16], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[16, 2]),
+            core_router: (0..32u32).collect(),
+            core_node: (0..32u32).collect(),
+            ranks_per_node: 1,
+        };
+        let res = rotation_sweep(
+            &g,
+            &g.coords,
+            &alloc.proc_coords(),
+            &alloc,
+            &MapConfig {
+                longest_dim: false, // make rotation matter
+                ..Default::default()
+            },
+            &SweepConfig::default(),
+            &NativeBackend,
+        );
+        let max = res.scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(res.scores[res.chosen] < max);
+    }
+}

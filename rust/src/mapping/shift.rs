@@ -1,0 +1,129 @@
+//! Torus coordinate shifting (Section 4.3, "Shifting the machine
+//! coordinates").
+//!
+//! MJ sees only coordinates, not wraparound links, so an allocation that
+//! straddles the torus seam looks torn apart. The fix: per dimension, find
+//! the largest cyclic gap in the occupied coordinates and, if it is larger
+//! than one, translate the coordinates on the low side of the gap by the
+//! dimension extent — making the occupied set contiguous.
+
+use crate::geom::Coords;
+
+/// Shift one dimension's coordinates in place. `size` is the torus extent.
+/// Returns the gap (start, length) that was opened at the seam, if any
+/// shift was applied.
+pub fn shift_dim(values: &mut [f64], size: usize) -> Option<(usize, usize)> {
+    // Occupied integer coordinates.
+    let mut present = vec![false; size];
+    for &v in values.iter() {
+        let c = v as usize;
+        assert!(c < size && v.fract() == 0.0, "shift_dim needs integer coords < size");
+        present[c] = true;
+    }
+    // Largest cyclic run of absent coordinates.
+    let occupied: Vec<usize> = (0..size).filter(|&c| present[c]).collect();
+    if occupied.is_empty() || occupied.len() == size {
+        return None;
+    }
+    let mut best_len = 0usize;
+    let mut best_after = 0usize; // occupied coordinate preceding the gap
+    for (k, &c) in occupied.iter().enumerate() {
+        let next = occupied[(k + 1) % occupied.len()];
+        let gap = (next + size - c - 1) % size;
+        if gap > best_len {
+            best_len = gap;
+            best_after = c;
+        }
+    }
+    if best_len <= 1 {
+        return None; // paper: only shift when the largest gap exceeds one
+    }
+    // Translate everything at or below `best_after` up by `size`, so the
+    // occupied set becomes contiguous starting just after the gap.
+    for v in values.iter_mut() {
+        if (*v as usize) <= best_after {
+            *v += size as f64;
+        }
+    }
+    Some((best_after + 1, best_len))
+}
+
+/// Shift every dimension of a machine coordinate set (wrapped dims only).
+pub fn shift_torus_coords(coords: &mut Coords, sizes: &[usize], wrap: &[bool]) {
+    assert_eq!(coords.dim(), sizes.len());
+    for d in 0..coords.dim() {
+        if wrap[d] {
+            shift_dim(coords.axis_mut(d), sizes[d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifts_seam_straddling_set() {
+        // Occupied {6,7,0,1} on a ring of 8: gap 2..5 (len 4). After the
+        // shift, {6,7,8,9} — contiguous.
+        let mut v = vec![6.0, 7.0, 0.0, 1.0];
+        let got = shift_dim(&mut v, 8);
+        assert_eq!(got, Some((2, 4)));
+        assert_eq!(v, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn no_shift_when_contiguous() {
+        let mut v = vec![2.0, 3.0, 4.0];
+        let orig = v.clone();
+        // Gap is 5..1 cyclically (len 6) — the shift translates 2,3,4 up.
+        // Wait: occupied {2,3,4}: gap after 4 wraps to 2, len 5 > 1 => shift
+        // of everything <= 4 ... which is the whole set: a pure translation.
+        let got = shift_dim(&mut v, 8);
+        assert!(got.is_some());
+        // A pure translation preserves pairwise distances.
+        for i in 0..v.len() {
+            for j in 0..v.len() {
+                assert_eq!(v[i] - v[j], orig[i] - orig[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_cyclic_adjacency() {
+        // After shifting, torus-adjacent occupied coords must be adjacent
+        // in the shifted (linear) coordinates.
+        let mut v = vec![7.0, 0.0];
+        shift_dim(&mut v, 8);
+        assert_eq!((v[1] - v[0]).abs(), 1.0);
+    }
+
+    #[test]
+    fn no_shift_for_full_ring() {
+        let mut v: Vec<f64> = (0..8).map(|x| x as f64).collect();
+        assert_eq!(shift_dim(&mut v, 8), None);
+        assert_eq!(v, (0..8).map(|x| x as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gap_of_one_not_shifted() {
+        // Occupied {0,1,2,3,5,6,7}: the only gap is {4}, length 1.
+        let mut v = vec![0.0, 1.0, 2.0, 3.0, 5.0, 6.0, 7.0];
+        assert_eq!(shift_dim(&mut v, 8), None);
+    }
+
+    #[test]
+    fn shift_torus_coords_only_wrapped_dims() {
+        let mut c = Coords::from_axes(vec![vec![7.0, 0.0], vec![7.0, 0.0]]);
+        shift_torus_coords(&mut c, &[8, 8], &[true, false]);
+        assert_eq!(c.axis(0), &[7.0, 8.0]); // shifted
+        assert_eq!(c.axis(1), &[7.0, 0.0]); // mesh dim untouched
+    }
+
+    #[test]
+    fn duplicate_coords_shift_together() {
+        let mut v = vec![7.0, 7.0, 0.0, 0.0, 1.0];
+        shift_dim(&mut v, 8);
+        assert_eq!(v, vec![7.0, 7.0, 8.0, 8.0, 9.0]);
+    }
+}

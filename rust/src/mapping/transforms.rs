@@ -1,0 +1,142 @@
+//! Coordinate transforms that specialize the mapper to an architecture or
+//! application (Sections 4.3, 5.2, 5.3.1).
+
+use crate::geom::Coords;
+use crate::machine::Torus;
+
+/// Bandwidth scaling (Z2_2, Section 5.3.1): replace integer router
+/// coordinates with cumulative path costs, so nodes across fast links
+/// appear closer together. The cost of moving from coordinate `c` to `c+1`
+/// along dimension `d` is `ref_bw / bw(d, c)` (normalized so a
+/// reference-speed link costs 1).
+///
+/// The returned table covers `0..2*size` so it can be applied after a torus
+/// shift (shifted coordinates extend past `size`; the cost keeps
+/// accumulating around the ring).
+pub fn bandwidth_table(torus: &Torus, dim: usize, ref_bw: f64) -> Vec<f64> {
+    let size = torus.sizes[dim];
+    let mut table = Vec::with_capacity(2 * size);
+    let mut acc = 0.0;
+    table.push(0.0);
+    for c in 0..(2 * size - 1) {
+        acc += ref_bw / torus.bw.bandwidth(dim, c % size);
+        table.push(acc);
+    }
+    table
+}
+
+/// Apply bandwidth scaling to every dimension of a machine coordinate set.
+/// `ref_bw` defaults to the maximum link bandwidth so all costs are >= 1.
+pub fn bandwidth_scale(coords: &mut Coords, torus: &Torus, ref_bw: Option<f64>) {
+    let rb = ref_bw.unwrap_or_else(|| {
+        let mut m: f64 = 0.0;
+        for d in 0..torus.dim() {
+            for c in 0..torus.sizes[d] {
+                m = m.max(torus.bw.bandwidth(d, c));
+            }
+        }
+        m
+    });
+    for d in 0..coords.dim().min(torus.dim()) {
+        let table = bandwidth_table(torus, d, rb);
+        coords.remap_axis(d, &table);
+    }
+}
+
+/// The Z2_3 box transform (Section 5.3.1): group routers into
+/// `bx x by x bz` boxes and lift 3D coordinates to 6D — three in-box
+/// coordinates plus three box coordinates scaled by `outer_scale`, guiding
+/// the partitioner to cut between boxes before cutting within them.
+///
+/// Expects raw integer router coordinates (applied before any shift).
+pub fn box_transform(coords: &Coords, boxes: [usize; 3], outer_scale: f64) -> Coords {
+    assert_eq!(coords.dim(), 3, "box transform is defined for 3D routers");
+    let n = coords.len();
+    let mut axes: Vec<Vec<f64>> = vec![Vec::with_capacity(n); 6];
+    for i in 0..n {
+        for d in 0..3 {
+            let c = coords.get(d, i);
+            debug_assert!(c.fract() == 0.0 && c >= 0.0);
+            let c = c as usize;
+            axes[d].push((c % boxes[d]) as f64);
+            axes[d + 3].push((c / boxes[d]) as f64 * outer_scale);
+        }
+    }
+    Coords::from_axes(axes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::BwModel;
+
+    #[test]
+    fn bandwidth_table_uniform_is_identity_spacing() {
+        let t = Torus::new(vec![8], vec![true], BwModel::Uniform(4.0));
+        let table = bandwidth_table(&t, 0, 4.0);
+        for (c, &v) in table.iter().enumerate() {
+            assert!((v - c as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bandwidth_table_slow_links_stretch() {
+        // Gemini Y: mezzanine (75) then cable (37.5) alternating. With
+        // ref_bw 75, steps cost 1, 2, 1, 2, ...
+        let t = Torus::new(vec![4], vec![true], BwModel::PerDim(vec![75.0]));
+        let _ = t; // (PerDim has no position dependence; use Gemini dim 1)
+        let g = Torus::new(vec![4, 4, 4], vec![true; 3], BwModel::Gemini);
+        let table = bandwidth_table(&g, 1, 75.0);
+        assert_eq!(table[0], 0.0);
+        assert!((table[1] - 1.0).abs() < 1e-12); // mezzanine step
+        assert!((table[2] - 3.0).abs() < 1e-12); // + cable step (2x)
+        assert!((table[3] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_scale_makes_fast_dims_shorter() {
+        // Z backplane links (120) are faster than X cables (75): after
+        // scaling with ref 120, the Z extent shrinks relative to X.
+        let g = Torus::new(vec![8, 8, 8], vec![true; 3], BwModel::Gemini);
+        let mut c = Coords::from_axes(vec![
+            vec![0.0, 7.0],
+            vec![0.0, 0.0],
+            vec![0.0, 7.0],
+        ]);
+        bandwidth_scale(&mut c, &g, Some(120.0));
+        let x_ext = c.get(0, 1) - c.get(0, 0);
+        let z_ext = c.get(2, 1) - c.get(2, 0);
+        assert!(z_ext < x_ext, "z {z_ext} !< x {x_ext}");
+    }
+
+    #[test]
+    fn box_transform_shape() {
+        let c = Coords::from_axes(vec![
+            vec![0.0, 3.0, 5.0],
+            vec![0.0, 1.0, 3.0],
+            vec![0.0, 9.0, 15.0],
+        ]);
+        let b = box_transform(&c, [2, 2, 8], 10.0);
+        assert_eq!(b.dim(), 6);
+        // Point 1 = (3,1,9): in-box (1,1,1), box (1,0,1)*10.
+        assert_eq!(b.point_vec(1), vec![1.0, 1.0, 1.0, 10.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn box_transform_separates_boxes_strongly() {
+        // Two routers in the same box are closer (in the lifted space) than
+        // two in different boxes.
+        let c = Coords::from_axes(vec![
+            vec![0.0, 1.0, 2.0],
+            vec![0.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+        ]);
+        let b = box_transform(&c, [2, 2, 8], 10.0);
+        let d = |i: usize, j: usize| -> f64 {
+            (0..6)
+                .map(|k| (b.get(k, i) - b.get(k, j)).abs())
+                .sum::<f64>()
+        };
+        assert!(d(0, 1) < d(1, 2)); // same box vs. box boundary
+    }
+}

@@ -1,0 +1,294 @@
+//! Mapping-quality metrics (Section 3, Eqns 1–7): hops, weighted hops,
+//! per-link data, serialization latency, and per-dimension breakdowns.
+//!
+//! Evaluation takes a task graph, a task-to-rank assignment, and an
+//! `Allocation` (which ties ranks to nodes and routers). Messages between
+//! ranks in the same node never enter the network (zero hops, no link
+//! data); messages between nodes follow dimension-ordered shortest-path
+//! routing (static routing, single path — the Section 3 assumptions).
+
+pub mod native;
+
+use crate::apps::TaskGraph;
+use crate::machine::Allocation;
+
+/// Scalar metrics of a mapping (Eqns 1–7).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Eqn 1: total hops over all task-graph edges.
+    pub total_hops: f64,
+    /// Eqn 2: `total_hops / |E_t|`.
+    pub avg_hops: f64,
+    /// Eqn 3: volume-weighted hops.
+    pub weighted_hops: f64,
+    /// Number of inter-node messages (each communicating pair exchanges a
+    /// message in both directions).
+    pub total_messages: u64,
+    pub num_edges: usize,
+    /// Link-level metrics (only when evaluated with routing).
+    pub link: Option<LinkMetrics>,
+}
+
+/// Per-link data/latency aggregates (Eqns 4–7) plus per-dimension stats.
+#[derive(Clone, Debug, Default)]
+pub struct LinkMetrics {
+    /// Eqn 5: max data over any directed link.
+    pub max_data: f64,
+    /// Mean data over all directed links that exist in the topology.
+    pub avg_data: f64,
+    /// Eqn 7: max `Data(e)/bw(e)` over links (seconds when data is bytes
+    /// and bw is bytes/s; the machine presets use GB/s so callers scale).
+    pub max_latency: f64,
+    /// Per (dimension, direction): [dim][0]=+, [dim][1]=-.
+    pub per_dim: Vec<[DimStats; 2]>,
+}
+
+/// Aggregates for one (dimension, direction) link class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DimStats {
+    pub max_data: f64,
+    pub avg_data: f64,
+    pub max_latency: f64,
+    pub avg_latency: f64,
+}
+
+/// Evaluate hop metrics only (cheap: no routing, no link arrays).
+pub fn eval_hops(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) -> Metrics {
+    assert_eq!(task_to_rank.len(), graph.num_tasks);
+    let torus = &alloc.torus;
+    let dim = torus.dim();
+    let mut ca = vec![0usize; dim];
+    let mut cb = vec![0usize; dim];
+    let mut total_hops = 0f64;
+    let mut weighted_hops = 0f64;
+    let mut messages = 0u64;
+    for e in &graph.edges {
+        let ra = task_to_rank[e.u as usize] as usize;
+        let rb = task_to_rank[e.v as usize] as usize;
+        if alloc.core_node[ra] == alloc.core_node[rb] {
+            continue; // intra-node: zero hops, no network message
+        }
+        messages += 2;
+        let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
+        torus.coords_into(qa, &mut ca);
+        torus.coords_into(qb, &mut cb);
+        let h = torus.hop_dist(&ca, &cb) as f64;
+        total_hops += h;
+        weighted_hops += e.w * h;
+    }
+    Metrics {
+        total_hops,
+        avg_hops: total_hops / graph.edges.len().max(1) as f64,
+        weighted_hops,
+        total_messages: messages,
+        num_edges: graph.edges.len(),
+        link: None,
+    }
+}
+
+/// Evaluate all metrics, including per-link data and latency via
+/// dimension-ordered routing. Each inter-node edge contributes its volume in
+/// both directions (both endpoints send).
+pub fn eval_full(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) -> Metrics {
+    let mut m = eval_hops(graph, task_to_rank, alloc);
+    let torus = &alloc.torus;
+    let dim = torus.dim();
+    let mut load = vec![0f64; torus.num_directed_links()];
+    let mut ca = vec![0usize; dim];
+    let mut cb = vec![0usize; dim];
+    for e in &graph.edges {
+        let ra = task_to_rank[e.u as usize] as usize;
+        let rb = task_to_rank[e.v as usize] as usize;
+        if alloc.core_node[ra] == alloc.core_node[rb] {
+            continue;
+        }
+        let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
+        torus.coords_into(qa, &mut ca);
+        torus.coords_into(qb, &mut cb);
+        torus.route(&ca, &cb, |id, d, dir| {
+            load[torus.link_index(id, d, dir)] += e.w;
+        });
+        torus.route(&cb, &ca, |id, d, dir| {
+            load[torus.link_index(id, d, dir)] += e.w;
+        });
+    }
+    m.link = Some(summarize_links(torus, &load));
+    m
+}
+
+/// Reduce a per-directed-link load array into `LinkMetrics`.
+pub fn summarize_links(torus: &crate::machine::Torus, load: &[f64]) -> LinkMetrics {
+    let dim = torus.dim();
+    let nr = torus.num_routers();
+    let mut lm = LinkMetrics {
+        per_dim: vec![[DimStats::default(); 2]; dim],
+        ..Default::default()
+    };
+    let mut total = 0f64;
+    let mut counts = vec![[0usize; 2]; dim];
+    let mut sums = vec![[0f64; 2]; dim];
+    let mut lat_sums = vec![[0f64; 2]; dim];
+    let mut coords = vec![0usize; dim];
+    for router in 0..nr {
+        torus.coords_into(router, &mut coords);
+        for d in 0..dim {
+            for dir in 0..2 {
+                // Mesh boundaries: the outward link does not exist.
+                if !torus.wrap[d] {
+                    let c = coords[d];
+                    if (dir == 0 && c + 1 == torus.sizes[d]) || (dir == 1 && c == 0) {
+                        continue;
+                    }
+                }
+                let data = load[torus.link_index(router, d, dir)];
+                let bw = torus.link_bandwidth(&coords, d, if dir == 0 { 1 } else { -1 });
+                let lat = data / bw;
+                let s = &mut lm.per_dim[d][dir];
+                if data > s.max_data {
+                    s.max_data = data;
+                }
+                if lat > s.max_latency {
+                    s.max_latency = lat;
+                }
+                sums[d][dir] += data;
+                lat_sums[d][dir] += lat;
+                counts[d][dir] += 1;
+                total += data;
+                if data > lm.max_data {
+                    lm.max_data = data;
+                }
+                if lat > lm.max_latency {
+                    lm.max_latency = lat;
+                }
+            }
+        }
+    }
+    let total_links: usize = counts.iter().map(|c| c[0] + c[1]).sum();
+    lm.avg_data = total / total_links.max(1) as f64;
+    for d in 0..dim {
+        for dir in 0..2 {
+            let n = counts[d][dir].max(1) as f64;
+            lm.per_dim[d][dir].avg_data = sums[d][dir] / n;
+            lm.per_dim[d][dir].avg_latency = lat_sums[d][dir] / n;
+        }
+    }
+    lm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::{Allocation, Torus};
+
+    /// One rank per router on a ring of `n`, identity placement.
+    fn ring_alloc(n: usize) -> Allocation {
+        Allocation {
+            torus: Torus::torus(&[n]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        }
+    }
+
+    #[test]
+    fn identity_ring_mapping_metrics() {
+        // 8 tasks on an 8-ring, identity mapping: every edge is 1 hop.
+        let g = stencil_graph(&[8], true, 2.0);
+        let alloc = ring_alloc(8);
+        let ranks: Vec<u32> = (0..8).collect();
+        let m = eval_hops(&g, &ranks, &alloc);
+        assert_eq!(m.total_hops, 8.0);
+        assert_eq!(m.avg_hops, 1.0);
+        assert_eq!(m.weighted_hops, 16.0);
+        assert_eq!(m.total_messages, 16);
+    }
+
+    #[test]
+    fn reversed_mapping_still_one_hop_on_ring() {
+        // Reversal is an isometry of the ring.
+        let g = stencil_graph(&[8], true, 1.0);
+        let alloc = ring_alloc(8);
+        let ranks: Vec<u32> = (0..8u32).rev().collect();
+        let m = eval_hops(&g, &ranks, &alloc);
+        assert_eq!(m.avg_hops, 1.0);
+    }
+
+    #[test]
+    fn intra_node_edges_are_free() {
+        // Two ranks per node: tasks 0,1 in node 0 communicate for free.
+        let g = stencil_graph(&[4], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[2]),
+            core_router: vec![0, 0, 1, 1],
+            core_node: vec![0, 0, 1, 1],
+            ranks_per_node: 2,
+        };
+        let ranks: Vec<u32> = (0..4).collect();
+        let m = eval_hops(&g, &ranks, &alloc);
+        // Edges (0,1) and (2,3) intra-node; (1,2) inter-node 1 hop.
+        assert_eq!(m.total_hops, 1.0);
+        assert_eq!(m.total_messages, 2);
+    }
+
+    #[test]
+    fn link_data_accumulates_both_directions() {
+        // Ring of 4, tasks 0-1 communicate: 0->1 uses router 0's + link,
+        // 1->0 uses router 1's - link. (A 2-ring would route both ways
+        // through + because wrap ties break positive.)
+        let g = stencil_graph(&[2], false, 3.0);
+        let alloc = ring_alloc(4);
+        let m = eval_full(&g, &[0, 1], &alloc);
+        let lm = m.link.unwrap();
+        assert_eq!(lm.max_data, 3.0);
+        assert_eq!(lm.per_dim[0][0].max_data, 3.0);
+        assert_eq!(lm.per_dim[0][1].max_data, 3.0);
+    }
+
+    #[test]
+    fn latency_uses_bandwidth() {
+        use crate::machine::BwModel;
+        let torus = Torus::new(vec![4], vec![true], BwModel::Uniform(2.0));
+        let alloc = Allocation {
+            torus,
+            core_router: vec![0, 1, 2, 3],
+            core_node: vec![0, 1, 2, 3],
+            ranks_per_node: 1,
+        };
+        let g = stencil_graph(&[4], true, 10.0);
+        let m = eval_full(&g, &[0, 1, 2, 3], &alloc);
+        let lm = m.link.unwrap();
+        assert_eq!(lm.max_latency, lm.max_data / 2.0);
+    }
+
+    #[test]
+    fn mesh_boundary_links_excluded_from_avg() {
+        // 1D mesh of 4 routers: 3 undirected = 6 directed links exist.
+        let torus = Torus::mesh(&[4]);
+        let alloc = Allocation {
+            torus,
+            core_router: vec![0, 1, 2, 3],
+            core_node: vec![0, 1, 2, 3],
+            ranks_per_node: 1,
+        };
+        let g = stencil_graph(&[4], false, 1.0);
+        let m = eval_full(&g, &[0, 1, 2, 3], &alloc);
+        let lm = m.link.unwrap();
+        // Every existing directed link carries exactly 1.0.
+        assert!((lm.avg_data - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn congestion_detected_on_bad_mapping() {
+        // Map a ring's communicating neighbors maximally far apart:
+        // hop metrics must be strictly worse than identity.
+        let g = stencil_graph(&[8], true, 1.0);
+        let alloc = ring_alloc(8);
+        let identity: Vec<u32> = (0..8).collect();
+        let shuffle: Vec<u32> = vec![0, 4, 1, 5, 2, 6, 3, 7]; // stride-2 interleave
+        let mi = eval_full(&g, &identity, &alloc);
+        let ms = eval_full(&g, &shuffle, &alloc);
+        assert!(ms.total_hops > mi.total_hops);
+        assert!(ms.link.unwrap().max_data >= mi.link.unwrap().max_data);
+    }
+}

@@ -1,0 +1,144 @@
+//! Native (pure-rust) twin of the L1/L2 `batched_weighted_hops` artifact.
+//!
+//! Same contract as `python/compile/model.py::batched_weighted_hops`: f32
+//! arithmetic, identical padding semantics (zero-weight edges and size-1
+//! torus dims contribute nothing). Used as (a) the arbiter the PJRT path is
+//! tested against, and (b) the fallback when no artifact fits a request.
+
+/// Batched WeightedHops over flat arrays.
+///
+/// * `src`, `dst`: `[r * e * d]` router coordinates, candidate-major.
+/// * `w`: `[e]` message volumes shared across candidates.
+/// * `dims`: `[d]` extents; `wrap`: `[d]` 1.0 = torus ring.
+///
+/// Returns one f32 sum per candidate, accumulated in f32 to mirror the
+/// kernel exactly.
+pub fn batched_weighted_hops_native(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    r: usize,
+    e: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), r * e * d);
+    assert_eq!(dst.len(), r * e * d);
+    assert_eq!(w.len(), e);
+    assert_eq!(dims.len(), d);
+    assert_eq!(wrap.len(), d);
+    // Dispatch to const-D bodies for the common dimensionalities so LLVM
+    // can unroll + vectorize the inner loop (EXPERIMENTS.md §Perf: ~3x on
+    // the rotation-sweep hot path vs the dynamic-D loop).
+    match d {
+        1 => whops_const::<1>(src, dst, w, dims, wrap, r, e),
+        2 => whops_const::<2>(src, dst, w, dims, wrap, r, e),
+        3 => whops_const::<3>(src, dst, w, dims, wrap, r, e),
+        4 => whops_const::<4>(src, dst, w, dims, wrap, r, e),
+        5 => whops_const::<5>(src, dst, w, dims, wrap, r, e),
+        6 => whops_const::<6>(src, dst, w, dims, wrap, r, e),
+        _ => whops_dyn(src, dst, w, dims, wrap, r, e, d),
+    }
+}
+
+fn whops_const<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    r: usize,
+    e: usize,
+) -> Vec<f32> {
+    let mut dims_a = [0f32; D];
+    let mut mesh = [false; D];
+    for k in 0..D {
+        dims_a[k] = dims[k];
+        mesh[k] = wrap[k] <= 0.0;
+    }
+    let mut out = vec![0f32; r];
+    for (ri, o) in out.iter_mut().enumerate() {
+        let base = ri * e * D;
+        let s = &src[base..base + e * D];
+        let t = &dst[base..base + e * D];
+        let mut acc = 0f32;
+        for ei in 0..e {
+            let off = ei * D;
+            let mut hops = 0f32;
+            for k in 0..D {
+                let ad = (s[off + k] - t[off + k]).abs();
+                let th = ad.min(dims_a[k] - ad);
+                hops += if mesh[k] { ad } else { th };
+            }
+            acc += w[ei] * hops;
+        }
+        *o = acc;
+    }
+    out
+}
+
+fn whops_dyn(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    r: usize,
+    e: usize,
+    d: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; r];
+    for ri in 0..r {
+        let base = ri * e * d;
+        let mut acc = 0f32;
+        for ei in 0..e {
+            let off = base + ei * d;
+            let mut hops = 0f32;
+            for di in 0..d {
+                let ad = (src[off + di] - dst[off + di]).abs();
+                let th = ad.min(dims[di] - ad);
+                hops += if wrap[di] > 0.0 { th } else { ad };
+            }
+            acc += w[ei] * hops;
+        }
+        out[ri] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_distance() {
+        // 0 -> 7 on a ring of 8: 1 hop (torus), 7 (mesh).
+        let src = vec![0f32];
+        let dst = vec![7f32];
+        let w = vec![1f32];
+        let t = batched_weighted_hops_native(&src, &dst, &w, &[8.0], &[1.0], 1, 1, 1);
+        assert_eq!(t, vec![1.0]);
+        let m = batched_weighted_hops_native(&src, &dst, &w, &[8.0], &[0.0], 1, 1, 1);
+        assert_eq!(m, vec![7.0]);
+    }
+
+    #[test]
+    fn padding_contract() {
+        // Zero-weight edges and size-1 wrapped dims contribute nothing.
+        let src = vec![3.0, 0.0, 1.0, 0.0];
+        let dst = vec![5.0, 0.0, 9.0, 0.0];
+        let w = vec![2.0, 0.0];
+        let out = batched_weighted_hops_native(&src, &dst, &w, &[16.0, 1.0], &[1.0, 1.0], 1, 2, 2);
+        assert_eq!(out, vec![4.0]); // only edge 0, |3-5| = 2, w=2
+    }
+
+    #[test]
+    fn batch_candidates_independent() {
+        let src = vec![0.0, 0.0];
+        let dst = vec![1.0, 3.0];
+        let w = vec![1.0];
+        let out = batched_weighted_hops_native(&src, &dst, &w, &[8.0], &[1.0], 2, 1, 1);
+        assert_eq!(out, vec![1.0, 3.0]);
+    }
+}

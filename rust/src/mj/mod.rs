@@ -1,0 +1,421 @@
+//! Multi-Jagged (MJ) geometric partitioning (Section 4.1, Algorithm 2).
+//!
+//! MJ recursively partitions a coordinate set along one dimension at a
+//! time. Used as the sequential kernel of the task-mapping algorithm
+//! (Section 4.2): the partition runs over both the task coordinates and the
+//! processor coordinates, and part numbers — assigned by a space-filling
+//! ordering (Z, Gray, FZ, MFZ) — tie the two together.
+//!
+//! Two modes:
+//! * [`mj_partition`] — recursive (possibly uneven) **bisection** with the
+//!   SFC part numbering of Algorithm 2. This is the mapping path.
+//! * [`mj_multisection`] — the general multisection form with an explicit
+//!   per-level part-count vector (`P = Π P_i`, Fig. 1), Z numbering.
+//!
+//! Cuts are found by exact selection (`select_nth_unstable`) on
+//! (coordinate, index) keys: deterministic, tie-stable, O(n) per level.
+//! Points with identical coordinates are only separated when a cut lands
+//! inside their run, and subtree part numbers are contiguous — so e.g. the
+//! ranks of one multicore node (identical router coordinates) always
+//! receive a contiguous range of part numbers.
+
+pub mod multisection;
+
+pub use multisection::mj_multisection;
+
+use crate::geom::Coords;
+use crate::sfc::PartOrdering;
+
+/// MJ configuration for the bisection/mapping path.
+#[derive(Clone, Copy, Debug)]
+pub struct MjConfig {
+    /// Part-numbering ordering (Algorithm 2). `Hilbert` is not an MJ flip
+    /// rule and is rejected here (handled by the mapping layer).
+    pub ordering: PartOrdering,
+    /// Cut perpendicular to the longest dimension of the current region
+    /// (Section 4.3) instead of strictly alternating dimensions.
+    pub longest_dim: bool,
+    /// Uneven bisection by the largest prime divisor of the part count
+    /// (the Z2_2/Z2_3 optimization of Section 5.3.1): splitting 10,800
+    /// parts as 6,480 + 4,320 instead of 5,400 + 5,400 keeps nodes intact
+    /// deeper into the hierarchy.
+    pub uneven_prime: bool,
+}
+
+impl Default for MjConfig {
+    fn default() -> Self {
+        MjConfig {
+            ordering: PartOrdering::FZ,
+            longest_dim: true,
+            uneven_prime: false,
+        }
+    }
+}
+
+/// Partition `coords` into `num_parts` parts; returns the part id of every
+/// point. Part sizes are balanced: `n mod num_parts` low-numbered parts get
+/// one extra point.
+pub fn mj_partition(coords: &Coords, num_parts: usize, cfg: &MjConfig) -> Vec<u32> {
+    assert!(num_parts >= 1);
+    assert!(
+        cfg.ordering != PartOrdering::Hilbert,
+        "Hilbert is not an MJ part numbering; use mapping::hilbert_mapping"
+    );
+    let n = coords.len();
+    assert!(
+        num_parts <= n,
+        "cannot make {num_parts} nonempty parts from {n} points"
+    );
+    let dim = coords.dim();
+    // Working copies: MJ's orderings flip coordinates in place (Alg. 2).
+    let mut axes: Vec<Vec<f64>> = (0..dim).map(|d| coords.axis(d).to_vec()).collect();
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let mut part = vec![0u32; n];
+    let extra = n % num_parts;
+    let base = n / num_parts;
+    let mut st = State {
+        axes: &mut axes,
+        part: &mut part,
+        base,
+        extra,
+        cfg,
+        dim,
+    };
+    bisect(&mut st, &mut idx, 0, num_parts, 0);
+    part
+}
+
+struct State<'a> {
+    axes: &'a mut Vec<Vec<f64>>,
+    part: &'a mut Vec<u32>,
+    /// Global part-size rule: part `p` holds `base + (p < extra)` points.
+    base: usize,
+    extra: usize,
+    cfg: &'a MjConfig,
+    dim: usize,
+}
+
+/// Number of points owned by parts `[offset, offset + np)`.
+fn span_count(st: &State, offset: usize, np: usize) -> usize {
+    let extra_here = st.extra.saturating_sub(offset).min(np);
+    np * st.base + extra_here
+}
+
+/// Largest prime factor (num_parts in this codebase is at most ~2^21, so
+/// trial division is instantaneous).
+pub fn largest_prime_factor(mut n: usize) -> usize {
+    let mut largest = 1;
+    let mut f = 2;
+    while f * f <= n {
+        while n % f == 0 {
+            largest = f;
+            n /= f;
+        }
+        f += 1;
+    }
+    if n > 1 {
+        largest = n;
+    }
+    largest
+}
+
+/// How to split `np` parts between the two sides of a bisection.
+fn split_parts(np: usize, uneven_prime: bool) -> (usize, usize) {
+    if uneven_prime {
+        let p = largest_prime_factor(np);
+        let np_l = np / p * p.div_ceil(2);
+        (np_l, np - np_l)
+    } else {
+        (np.div_ceil(2), np / 2)
+    }
+}
+
+fn bisect(st: &mut State, idx: &mut [u32], offset: usize, np: usize, level: usize) {
+    if np == 1 {
+        for &i in idx.iter() {
+            st.part[i as usize] = offset as u32;
+        }
+        return;
+    }
+    // Dimension to cut.
+    let d = if st.cfg.longest_dim {
+        longest_dim_of(st, idx)
+    } else {
+        level % st.dim
+    };
+    let (np_l, np_r) = split_parts(np, st.cfg.uneven_prime);
+    let count_l = span_count(st, offset, np_l);
+    debug_assert!(count_l >= 1 && count_l < idx.len() + 1);
+    // Exact selection on (coordinate, point index): deterministic ties.
+    {
+        let axis: &Vec<f64> = &st.axes[d];
+        idx.select_nth_unstable_by(count_l - 1, |&a, &b| {
+            let (ca, cb) = (axis[a as usize], axis[b as usize]);
+            ca.partial_cmp(&cb).unwrap().then(a.cmp(&b))
+        });
+    }
+    let (left, right) = idx.split_at_mut(count_l);
+    // Algorithm 2 flip rules.
+    match st.cfg.ordering {
+        PartOrdering::Z => {}
+        PartOrdering::Gray => {
+            for &i in right.iter() {
+                for axis in st.axes.iter_mut() {
+                    axis[i as usize] = -axis[i as usize];
+                }
+            }
+        }
+        PartOrdering::FZ => {
+            for &i in right.iter() {
+                st.axes[d][i as usize] = -st.axes[d][i as usize];
+            }
+        }
+        PartOrdering::MFZ => {
+            // MFZ flips the LOWER half instead (Section 4.3).
+            for &i in left.iter() {
+                st.axes[d][i as usize] = -st.axes[d][i as usize];
+            }
+        }
+        PartOrdering::Hilbert => unreachable!(),
+    }
+    bisect(st, left, offset, np_l, level + 1);
+    bisect(st, right, offset + np_l, np_r, level + 1);
+}
+
+fn longest_dim_of(st: &State, idx: &[u32]) -> usize {
+    let mut best = 0usize;
+    let mut best_ext = f64::NEG_INFINITY;
+    for d in 0..st.dim {
+        let axis = &st.axes[d];
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &i in idx {
+            let v = axis[i as usize];
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        let ext = hi - lo;
+        if ext > best_ext {
+            best_ext = ext;
+            best = d;
+        }
+    }
+    best
+}
+
+/// Part sizes produced by [`mj_partition`] for `n` points into `np` parts.
+pub fn part_sizes(n: usize, np: usize) -> Vec<usize> {
+    let base = n / np;
+    let extra = n % np;
+    (0..np).map(|p| base + usize::from(p < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+
+    fn grid(nx: usize, ny: usize) -> Coords {
+        stencil_graph(&[nx, ny], false, 1.0).coords
+    }
+
+    fn counts(parts: &[u32], np: usize) -> Vec<usize> {
+        let mut c = vec![0usize; np];
+        for &p in parts {
+            c[p as usize] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn balanced_power_of_two() {
+        let c = grid(8, 8);
+        for ord in [PartOrdering::Z, PartOrdering::Gray, PartOrdering::FZ, PartOrdering::MFZ] {
+            let cfg = MjConfig {
+                ordering: ord,
+                longest_dim: false,
+                uneven_prime: false,
+            };
+            let parts = mj_partition(&c, 16, &cfg);
+            assert_eq!(counts(&parts, 16), vec![4; 16], "{ord:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_non_power_of_two() {
+        let c = grid(10, 10);
+        let parts = mj_partition(&c, 7, &MjConfig::default());
+        let sizes = counts(&parts, 7);
+        assert_eq!(sizes, part_sizes(100, 7));
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn one_part_trivial() {
+        let c = grid(4, 4);
+        let parts = mj_partition(&c, 1, &MjConfig::default());
+        assert!(parts.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn one_point_per_part() {
+        let c = grid(4, 4);
+        let parts = mj_partition(&c, 16, &MjConfig::default());
+        let mut s: Vec<u32> = parts.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..16).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn z_order_on_square_grid_matches_morton() {
+        // 4x4 grid into 16 parts, alternating dims starting with x, Z
+        // ordering: part number = Morton(y, x) with x cut first.
+        let c = grid(4, 4);
+        let cfg = MjConfig {
+            ordering: PartOrdering::Z,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let parts = mj_partition(&c, 16, &cfg);
+        for y in 0..4usize {
+            for x in 0..4usize {
+                let i = y * 4 + x;
+                // First cut on x (bit 3), then y (bit 2), then x (bit 1),
+                // then y (bit 0).
+                let expect = ((x >> 1) << 3) | ((y >> 1) << 2) | ((x & 1) << 1) | (y & 1);
+                assert_eq!(parts[i] as usize, expect, "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn parts_are_spatially_contiguous_z() {
+        // Each part of an 8x8 grid into 4 parts must be a 4x4 quadrant.
+        let c = grid(8, 8);
+        let cfg = MjConfig {
+            ordering: PartOrdering::Z,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let parts = mj_partition(&c, 4, &cfg);
+        for y in 0..8usize {
+            for x in 0..8usize {
+                let expect = (x / 4) * 2 + y / 4;
+                assert_eq!(parts[y * 8 + x] as usize, expect, "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn fz_differs_from_z_in_numbering_not_membership() {
+        // FZ flips coordinates, which changes which *numbers* parts get but
+        // (for one level) not the cut membership.
+        let c = grid(8, 8);
+        let mk = |ordering| MjConfig {
+            ordering,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let z = mj_partition(&c, 64, &mk(PartOrdering::Z));
+        let fz = mj_partition(&c, 64, &mk(PartOrdering::FZ));
+        assert_ne!(z, fz);
+        // Same multiset of sizes.
+        assert_eq!(counts(&z, 64), counts(&fz, 64));
+    }
+
+    #[test]
+    fn uneven_prime_split() {
+        assert_eq!(split_parts(10800, true), (6480, 4320)); // paper's example
+        assert_eq!(split_parts(8, true), (4, 4));
+        assert_eq!(split_parts(6, true), (4, 2)); // p=3: 2/3 | 1/3
+        assert_eq!(split_parts(7, true), (4, 3));
+        assert_eq!(split_parts(10800, false), (5400, 5400));
+    }
+
+    #[test]
+    fn largest_prime_factor_basic() {
+        assert_eq!(largest_prime_factor(10800), 5);
+        assert_eq!(largest_prime_factor(8), 2);
+        assert_eq!(largest_prime_factor(7), 7);
+        assert_eq!(largest_prime_factor(1), 1);
+        assert_eq!(largest_prime_factor(97 * 4), 97);
+    }
+
+    #[test]
+    fn identical_points_get_contiguous_parts() {
+        // 4 ranks per "node" with identical coordinates: each node's ranks
+        // must occupy a contiguous part-number range.
+        let mut c = Coords::new(2);
+        for node in 0..4 {
+            for _ in 0..4 {
+                c.push(&[(node % 2) as f64, (node / 2) as f64]);
+            }
+        }
+        let parts = mj_partition(&c, 16, &MjConfig::default());
+        for node in 0..4 {
+            let mut ps: Vec<u32> = (0..4).map(|r| parts[node * 4 + r]).collect();
+            ps.sort_unstable();
+            for w in ps.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "node {node} parts not contiguous: {ps:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn longest_dim_cuts_the_long_axis_first() {
+        // 16x2 grid into 2 parts: longest-dim must cut x, giving 8x2 halves.
+        let c = grid(16, 2);
+        let cfg = MjConfig {
+            ordering: PartOrdering::Z,
+            longest_dim: true,
+            uneven_prime: false,
+        };
+        let parts = mj_partition(&c, 2, &cfg);
+        for y in 0..2 {
+            for x in 0..16 {
+                let expect = u32::from(x >= 8);
+                assert_eq!(parts[y * 16 + x], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_longest_dim() {
+        // Fig. 2: on a 16x4 grid, three levels of longest-dimension
+        // partitioning cut x, x, then x again (extent 16 -> 8 -> 4 = y-ext
+        // tie broken toward x) — whereas strictly alternating cuts x, y, x.
+        // The observable effect: with alternating cuts the 8 parts are
+        // 4x2 blocks; with longest-dim they are 2x4 columns.
+        let c = grid(16, 4);
+        let alt = MjConfig {
+            ordering: PartOrdering::Z,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let lng = MjConfig {
+            ordering: PartOrdering::Z,
+            longest_dim: true,
+            uneven_prime: false,
+        };
+        let pa = mj_partition(&c, 8, &alt);
+        let pl = mj_partition(&c, 8, &lng);
+        // Alternating: part of (x,y) constant on 4x2 blocks.
+        assert_eq!(pa[0], pa[3 + 16]); // (0,0) and (3,1) same 4x2 block
+        assert_ne!(pa[0], pa[2 * 16]); // (0,2) different y-half
+        // Longest-dim: columns of width 2 spanning all y.
+        assert_eq!(pl[0], pl[1 + 3 * 16]); // (0,0) and (1,3) same column
+        assert_ne!(pl[0], pl[2]); // (2,0) next column
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let c = grid(16, 16);
+        let a = mj_partition(&c, 13, &MjConfig::default());
+        let b = mj_partition(&c, 13, &MjConfig::default());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,209 @@
+//! General multisection MJ (Section 4.1, Fig. 1): partition into
+//! `P = Π P_i` parts in `RD = len(counts)` levels, `P_i` parts per level
+//! with `P_i - 1` parallel cuts, alternating (or longest) dimensions.
+//! Part numbers are assigned lexicographically per level (Z-style).
+
+use crate::geom::Coords;
+
+/// Multisection configuration: parts per recursion level.
+#[derive(Clone, Debug)]
+pub struct MultisectionConfig {
+    /// `P_i` per level; the total part count is the product.
+    pub counts: Vec<usize>,
+    /// Cut along the longest dimension of each region instead of cycling.
+    pub longest_dim: bool,
+}
+
+impl MultisectionConfig {
+    /// Equal split of `p` into `rd` levels: factors as close to `p^(1/rd)`
+    /// as possible (requires `p` to be a perfect power when uniform);
+    /// falls back to greedy factorization.
+    pub fn levels(p: usize, rd: usize) -> Self {
+        assert!(rd >= 1);
+        let target = (p as f64).powf(1.0 / rd as f64).round() as usize;
+        let mut counts = Vec::with_capacity(rd);
+        let mut rem = p;
+        for level in 0..rd {
+            if level == rd - 1 {
+                counts.push(rem);
+                rem = 1;
+            } else {
+                // Largest divisor of rem that is <= target (>= 2).
+                let mut f = target.max(2).min(rem);
+                while rem % f != 0 {
+                    f -= 1;
+                }
+                counts.push(f.max(1));
+                rem /= f.max(1);
+            }
+        }
+        assert_eq!(counts.iter().product::<usize>(), p);
+        MultisectionConfig {
+            counts,
+            longest_dim: false,
+        }
+    }
+
+    pub fn total_parts(&self) -> usize {
+        self.counts.iter().product()
+    }
+}
+
+/// Partition into `Π counts` parts. Returns part id per point.
+pub fn mj_multisection(coords: &Coords, cfg: &MultisectionConfig) -> Vec<u32> {
+    let n = coords.len();
+    let p = cfg.total_parts();
+    assert!(p >= 1 && p <= n);
+    let dim = coords.dim();
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let mut part = vec![0u32; n];
+    // (slice range, level, part offset, points per part handled by global
+    // balanced sizing as in the bisection path)
+    let base = n / p;
+    let extra = n % p;
+    // Count of points owned by parts [offset, offset+k).
+    let span = |offset: usize, k: usize| -> usize {
+        k * base + extra.saturating_sub(offset).min(k)
+    };
+    fn rec(
+        coords: &Coords,
+        idx: &mut [u32],
+        part: &mut [u32],
+        cfg: &MultisectionConfig,
+        span: &dyn Fn(usize, usize) -> usize,
+        level: usize,
+        offset: usize,
+        dim: usize,
+    ) {
+        if level == cfg.counts.len() {
+            for &i in idx.iter() {
+                part[i as usize] = offset as u32;
+            }
+            return;
+        }
+        let pi = cfg.counts[level];
+        // Parts remaining below this level.
+        let below: usize = cfg.counts[level + 1..].iter().product();
+        let d = if cfg.longest_dim {
+            let mut best = 0;
+            let mut ext_best = f64::NEG_INFINITY;
+            for dd in 0..dim {
+                let axis = coords.axis(dd);
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for &i in idx.iter() {
+                    let v = axis[i as usize];
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                if hi - lo > ext_best {
+                    ext_best = hi - lo;
+                    best = dd;
+                }
+            }
+            best
+        } else {
+            level % dim
+        };
+        // Multisection: slice off the first `span` points pi-1 times.
+        let axis = coords.axis(d);
+        let mut rest = idx;
+        let mut off = offset;
+        for s in 0..pi {
+            let take = if s + 1 == pi {
+                rest.len()
+            } else {
+                span(off, below)
+            };
+            if take < rest.len() {
+                rest.select_nth_unstable_by(take - 1, |&a, &b| {
+                    axis[a as usize]
+                        .partial_cmp(&axis[b as usize])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            }
+            let (chunk, r) = rest.split_at_mut(take);
+            rec(coords, chunk, part, cfg, span, level + 1, off, dim);
+            rest = r;
+            off += below;
+        }
+    }
+    rec(coords, &mut idx, &mut part, cfg, &span, 0, 0, dim);
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+
+    fn grid(nx: usize, ny: usize) -> Coords {
+        stencil_graph(&[nx, ny], false, 1.0).coords
+    }
+
+    #[test]
+    fn fig1_rd3_is_4x4x4_jagged() {
+        // 64 parts in 3 levels of 4 over a 16x16 grid (Fig. 1 left).
+        let c = grid(16, 16);
+        let cfg = MultisectionConfig {
+            counts: vec![4, 4, 4],
+            longest_dim: false,
+        };
+        let parts = mj_multisection(&c, &cfg);
+        let mut sizes = vec![0usize; 64];
+        for &p in &parts {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s == 4), "{sizes:?}");
+        // Level-1 cuts are vertical: parts 0..15 occupy x in [0,4).
+        for (i, &p) in parts.iter().enumerate() {
+            let x = i % 16;
+            assert_eq!((p / 16) as usize, x / 4, "point ({x},{}) part {p}", i / 16);
+        }
+    }
+
+    #[test]
+    fn fig1_rd6_equals_rcb_sizes() {
+        // RD = log2(P): multisection degenerates to bisection (Fig. 1
+        // right); sizes stay balanced.
+        let c = grid(16, 16);
+        let cfg = MultisectionConfig {
+            counts: vec![2; 6],
+            longest_dim: false,
+        };
+        let parts = mj_multisection(&c, &cfg);
+        let mut sizes = vec![0usize; 64];
+        for &p in &parts {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s == 4));
+    }
+
+    #[test]
+    fn levels_factorization() {
+        let cfg = MultisectionConfig::levels(64, 3);
+        assert_eq!(cfg.counts.iter().product::<usize>(), 64);
+        assert_eq!(cfg.counts, vec![4, 4, 4]);
+        let cfg = MultisectionConfig::levels(64, 6);
+        assert_eq!(cfg.counts, vec![2; 6]);
+        let cfg = MultisectionConfig::levels(360, 3);
+        assert_eq!(cfg.counts.iter().product::<usize>(), 360);
+    }
+
+    #[test]
+    fn uneven_total_distributes_remainder() {
+        let c = grid(10, 7); // 70 points
+        let cfg = MultisectionConfig {
+            counts: vec![3, 4],
+            longest_dim: false,
+        };
+        let parts = mj_multisection(&c, &cfg);
+        let mut sizes = vec![0usize; 12];
+        for &p in &parts {
+            sizes[p as usize] += 1;
+        }
+        // 70 = 12*5 + 10: ten parts of 6, two of 5.
+        assert_eq!(sizes.iter().sum::<usize>(), 70);
+        assert!(sizes.iter().all(|&s| s == 5 || s == 6), "{sizes:?}");
+    }
+}

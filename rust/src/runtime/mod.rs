@@ -1,0 +1,211 @@
+//! PJRT runtime: loads the AOT-compiled `batched_weighted_hops` HLO-text
+//! artifacts produced by `python/compile/aot.py` and executes them on the
+//! PJRT CPU client from the L3 hot path. Python never runs at request time.
+//!
+//! Artifacts have fixed padded shapes `(R, E, D)`; requests are chunked
+//! over candidates and edges and padded per the kernel's contract
+//! (zero-weight edges and size-1 wrapped dims contribute nothing).
+
+use crate::mapping::rotations::WhopsBackend;
+use crate::metrics::native::batched_weighted_hops_native;
+use crate::testutil::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One compiled artifact.
+struct Artifact {
+    r: usize,
+    e: usize,
+    d: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT evaluator: a CPU client plus the compiled artifact set.
+pub struct PjrtRuntime {
+    _client: xla::PjRtClient,
+    artifacts: Vec<Artifact>,
+    /// Number of PJRT executions performed (telemetry for benches/tests).
+    pub executions: Mutex<u64>,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact listed in `dir/manifest.json` (written by
+    /// `make artifacts`) and compile them once.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = Vec::new();
+        let entries = manifest
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest.json: missing artifacts array")?;
+        for entry in entries {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .context("artifact entry missing file")?;
+            let (r, e, d) = (
+                entry.get("r").and_then(|x| x.as_usize()).context("r")?,
+                entry.get("e").and_then(|x| x.as_usize()).context("e")?,
+                entry.get("d").and_then(|x| x.as_usize()).context("d")?,
+            );
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.push(Artifact { r, e, d, exe });
+        }
+        if artifacts.is_empty() {
+            bail!("no artifacts in {dir:?}");
+        }
+        Ok(PjrtRuntime {
+            _client: client,
+            artifacts,
+            executions: Mutex::new(0),
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the repo
+    /// root (or `$TASKMAP_ARTIFACTS`).
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("TASKMAP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Pick the artifact minimizing padded work for an `(r, e, d)` request.
+    fn pick(&self, r: usize, e: usize, d: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.d >= d)
+            .min_by_key(|a| {
+                let chunks = r.div_ceil(a.r) * e.div_ceil(a.e);
+                chunks * a.r * a.e * a.d
+            })
+    }
+
+    /// Batched WeightedHops via PJRT. Errors if no artifact can serve `d`.
+    pub fn eval(
+        &self,
+        src: &[f32],
+        dst: &[f32],
+        w: &[f32],
+        dims: &[f32],
+        wrap: &[f32],
+        r: usize,
+        e: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let art = self
+            .pick(r, e, d)
+            .with_context(|| format!("no artifact with D >= {d}"))?;
+        let (ar, ae, ad) = (art.r, art.e, art.d);
+        // Padded dims/wrap: size-1 torus dims are inert.
+        let mut pdims = vec![1f32; ad];
+        let mut pwrap = vec![1f32; ad];
+        pdims[..d].copy_from_slice(dims);
+        pwrap[..d].copy_from_slice(wrap);
+        let dims_lit = xla::Literal::vec1(&pdims).reshape(&[ad as i64])?;
+        let wrap_lit = xla::Literal::vec1(&pwrap).reshape(&[ad as i64])?;
+
+        let mut out = vec![0f32; r];
+        let mut psrc = vec![0f32; ar * ae * ad];
+        let mut pdst = vec![0f32; ar * ae * ad];
+        let mut pw = vec![0f32; ae];
+        for e_lo in (0..e).step_by(ae) {
+            let e_hi = (e_lo + ae).min(e);
+            let elen = e_hi - e_lo;
+            pw.fill(0.0);
+            pw[..elen].copy_from_slice(&w[e_lo..e_hi]);
+            let w_lit = xla::Literal::vec1(&pw).reshape(&[ae as i64])?;
+            for r_lo in (0..r).step_by(ar) {
+                let r_hi = (r_lo + ar).min(r);
+                let rlen = r_hi - r_lo;
+                psrc.fill(0.0);
+                pdst.fill(0.0);
+                for ri in 0..rlen {
+                    for ei in 0..elen {
+                        let s = ((r_lo + ri) * e + (e_lo + ei)) * d;
+                        let t = (ri * ae + ei) * ad;
+                        psrc[t..t + d].copy_from_slice(&src[s..s + d]);
+                        pdst[t..t + d].copy_from_slice(&dst[s..s + d]);
+                    }
+                }
+                let src_lit =
+                    xla::Literal::vec1(&psrc).reshape(&[ar as i64, ae as i64, ad as i64])?;
+                let dst_lit =
+                    xla::Literal::vec1(&pdst).reshape(&[ar as i64, ae as i64, ad as i64])?;
+                let result = art.exe.execute::<xla::Literal>(&[
+                    src_lit,
+                    dst_lit,
+                    w_lit.clone(),
+                    dims_lit.clone(),
+                    wrap_lit.clone(),
+                ])?[0][0]
+                    .to_literal_sync()?;
+                // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+                let values = result.to_tuple1()?.to_vec::<f32>()?;
+                *self.executions.lock().unwrap() += 1;
+                for ri in 0..rlen {
+                    out[r_lo + ri] += values[ri];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `WhopsBackend` adapter: PJRT with transparent fallback to the native
+/// evaluator if execution fails (e.g. dimensionality beyond any artifact).
+pub struct PjrtBackend {
+    pub runtime: PjrtRuntime,
+    /// Count of requests that fell back to the native path.
+    pub fallbacks: Mutex<u64>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        PjrtBackend {
+            runtime,
+            fallbacks: Mutex::new(0),
+        }
+    }
+
+    /// Try to load artifacts; `None` if unavailable (callers then use
+    /// `NativeBackend`).
+    pub fn try_default() -> Option<Self> {
+        PjrtRuntime::load_default().ok().map(Self::new)
+    }
+}
+
+impl WhopsBackend for PjrtBackend {
+    fn eval_batch(
+        &self,
+        src: &[f32],
+        dst: &[f32],
+        w: &[f32],
+        dims: &[f32],
+        wrap: &[f32],
+        r: usize,
+        e: usize,
+        d: usize,
+    ) -> Vec<f32> {
+        match self.runtime.eval(src, dst, w, dims, wrap, r, e, d) {
+            Ok(v) => v,
+            Err(_) => {
+                *self.fallbacks.lock().unwrap() += 1;
+                batched_weighted_hops_native(src, dst, w, dims, wrap, r, e, d)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

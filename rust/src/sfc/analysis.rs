@@ -1,0 +1,202 @@
+//! Closed-form hop analysis of Appendix A.
+//!
+//! For one-to-one mappings of `2^n` td-dimensional stencil tasks onto a
+//! pd-dimensional mesh (consistent, strictly-alternating cut order), the
+//! appendix derives the number of hops between task neighbors separated by
+//! the `j`-th cut of task dimension `i`:
+//!
+//! * Eqn 10/11 — `NHZ`: Z ordering (exact per-pair).
+//! * Eqn 12/13 — `NHF`: FZ ordering (average over pairs).
+//! * Eqn 19/23 — `TotalHopsZ/F`: totals across one task dimension when
+//!   `pd = 2·td`.
+//!
+//! These are used by `rust/tests/appendix_formulas.rs` to validate the MJ +
+//! ordering implementation against the paper's math: the measured hops of
+//! actual mappings must reproduce these formulas.
+
+/// sign(a, b) from Eqn 10: -1 if a == b, +1 otherwise.
+#[inline]
+fn sign(a: u64, b: u64) -> i64 {
+    if a == b {
+        -1
+    } else {
+        1
+    }
+}
+
+/// Eqn 10: hops between Z-ordered task neighbors separated by cut `j` along
+/// task dimension `i`, mapped onto a pd-dimensional mesh.
+pub fn nhz(td: u64, pd: u64, i: u64, j: u64) -> i64 {
+    assert!(i < td);
+    let b = (td * j + i) % pd;
+    let mut hops: i64 = 1i64 << ((td * j + i) / pd);
+    for k in 0..j {
+        hops += (1i64 << ((td * k + i) / pd)) * sign((td * k + i) % pd, b);
+    }
+    hops
+}
+
+/// Eqn 12: *average* hops between FZ-ordered task neighbors separated by
+/// cut `j` along task dimension `i`.
+pub fn nhf(td: u64, pd: u64, i: u64, j: u64) -> i64 {
+    assert!(i < td);
+    let pos = (td * j + i) / pd;
+    if td == pd {
+        1
+    } else if pd % td == 0 {
+        (1i64 << (pos + 1)) - 1
+    } else {
+        1i64 << pos
+    }
+}
+
+/// Eqn 8/9 specialization used in A.3: number of neighbor pairs separated by
+/// cut `j` of a `C`-cut dimension in the 1D sub-problem: `2^(C-j)`.
+pub fn nn1d(c: u64, j: u64) -> u64 {
+    1u64 << (c - j)
+}
+
+/// Eqn 19: total hops across all cuts of one task dimension for Z ordering
+/// when `pd = 2 td` (m = 2), with `C` cuts in that dimension.
+pub fn total_hops_z_m2(c: u64) -> i64 {
+    let c_i = c as i64;
+    if c % 2 == 0 {
+        (1i64 << (c_i + 2)) - 4 * (1i64 << (c_i / 2))
+    } else {
+        (1i64 << (c_i + 2)) - 3 * (1i64 << ((c_i + 1) / 2))
+    }
+}
+
+/// Eqn 23: total hops for FZ when `pd = 2 td`.
+pub fn total_hops_f_m2(c: u64) -> i64 {
+    let c_i = c as i64;
+    if c % 2 == 0 {
+        (1i64 << (c_i + 2)) - 6 * (1i64 << (c_i / 2)) + 2
+    } else {
+        (1i64 << (c_i + 2)) - 4 * (1i64 << ((c_i + 1) / 2)) + 2
+    }
+}
+
+/// Eqn 15: NHZ for the m = 2 case in its simplified form.
+pub fn nhz_m2(j: u64) -> i64 {
+    if j % 2 == 0 {
+        1i64 << (j / 2)
+    } else {
+        1i64 << ((j - 1) / 2 + 1)
+    }
+}
+
+/// Eqn 13: NHF when pd mod td == 0 with m = pd/td.
+pub fn nhf_mod0(m: u64, j: u64) -> i64 {
+    (1i64 << (j / m + 1)) - 1
+}
+
+/// Eqn 14: NHZ when pd mod td == 0 with m = pd/td (general form).
+pub fn nhz_mod0(m: u64, j: u64) -> i64 {
+    let pos = (j / m) as i64;
+    let m = m as i64;
+    let jm = (j as i64) % m;
+    (1i64 << pos) * jm + (m - 1) * (1i64 << pos) + 2 - m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nhz_equals_one_when_td_eq_pd() {
+        // Eqn 11 first case: td == pd => 1 hop for every cut.
+        for td in 1..=4u64 {
+            for j in 0..5 {
+                for i in 0..td {
+                    assert_eq!(nhz(td, td, i, j), 1, "td=pd={td} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nhf_equals_nhz_when_td_eq_pd() {
+        for td in 1..=4u64 {
+            for j in 0..5 {
+                assert_eq!(nhf(td, td, 0, j), nhz(td, td, 0, j));
+            }
+        }
+    }
+
+    #[test]
+    fn nhz_m2_matches_general_form() {
+        // Eqn 15 is the m=2 specialization of Eqn 14.
+        for j in 0..10u64 {
+            assert_eq!(nhz_m2(j), nhz_mod0(2, j), "j={j}");
+            // ... and of the fully general Eqn 10 with td=1, pd=2, i=0.
+            assert_eq!(nhz_m2(j), nhz(1, 2, 0, j), "eqn10 j={j}");
+        }
+    }
+
+    #[test]
+    fn nhf_mod0_matches_eqn12() {
+        for m in 2..=4u64 {
+            for j in 0..8 {
+                assert_eq!(nhf_mod0(m, j), nhf(1, m, 0, j), "m={m} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn totals_match_per_cut_sums_m2() {
+        // Eqns 19/23 must equal the explicit sums over cuts of
+        // NN1D(j) * NH(j) — this is how the appendix derives them.
+        for c in 1..=12u64 {
+            let mut tz = 0i64;
+            let mut tf = 0i64;
+            for j in 0..c {
+                let nn = nn1d(c, j) as i64;
+                tz += nn * nhz_m2(j);
+                tf += nn * nhf_mod0(2, j);
+            }
+            assert_eq!(tz, total_hops_z_m2(c), "Z total C={c}");
+            assert_eq!(tf, total_hops_f_m2(c), "F total C={c}");
+        }
+    }
+
+    #[test]
+    fn fz_beats_z_for_m2_totals() {
+        // Appendix A.3's conclusion: FZ obtains fewer total hops when
+        // pd = 2·td.
+        for c in 2..=16u64 {
+            assert!(
+                total_hops_f_m2(c) < total_hops_z_m2(c),
+                "C={c}: F={} Z={}",
+                total_hops_f_m2(c),
+                total_hops_z_m2(c)
+            );
+        }
+    }
+
+    #[test]
+    fn fz_beats_z_when_pd_not_factor() {
+        // Eqn 11 vs Eqn 12, third cases: NHF < NHZ whenever neither divides
+        // the other (e.g. td=2, pd=3).
+        for j in 1..6u64 {
+            for i in 0..2 {
+                let z = nhz(2, 3, i, j);
+                let f = nhf(2, 3, i, j);
+                assert!(f <= z, "td=2 pd=3 i={i} j={j}: F={f} Z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn z_beats_fz_when_td_multiple_of_pd() {
+        // Eqn 11 second case: td mod pd == 0 favors Z (e.g. 2D tasks on 1D
+        // processors, td=2, pd=1).
+        let mut z_total = 0i64;
+        let mut f_total = 0i64;
+        for j in 1..6u64 {
+            z_total += nhz(2, 1, 0, j);
+            f_total += nhf(2, 1, 0, j);
+        }
+        assert!(z_total < f_total, "Z={z_total} F={f_total}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Gray-code utilities (Appendix A uses the binary-reflected Gray code to
+//! analyze FZ ordering; Table 3 of the paper lists the first 32 values).
+
+/// Binary-reflected Gray code of `x`.
+#[inline]
+pub fn to_gray(x: u64) -> u64 {
+    x ^ (x >> 1)
+}
+
+/// Inverse Gray code: the rank of Gray value `g`.
+#[inline]
+pub fn from_gray(g: u64) -> u64 {
+    let mut x = g;
+    let mut shift = 1;
+    while shift < 64 {
+        x ^= x >> shift;
+        shift <<= 1;
+    }
+    x
+}
+
+/// FZ rank (the "FZ" column of Table 3): the part number whose Gray code is
+/// the binary representation of the rank — i.e. `from_gray` applied to the
+/// binary index gives the order in which FZ visits 1D cells.
+///
+/// Table 3 lists, for each decimal index, the FZ value such that
+/// `to_gray(index) == binary(FZ column)`; equivalently the FZ sequence is
+/// the Gray-code permutation.
+#[inline]
+pub fn fz_rank_1d(index: u64) -> u64 {
+    to_gray(index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_roundtrip() {
+        for x in 0..4096u64 {
+            assert_eq!(from_gray(to_gray(x)), x);
+        }
+    }
+
+    #[test]
+    fn gray_neighbors_differ_one_bit() {
+        for x in 0..4095u64 {
+            let d = to_gray(x) ^ to_gray(x + 1);
+            assert_eq!(d.count_ones(), 1, "gray({x}) vs gray({}) differ in >1 bit", x + 1);
+        }
+    }
+
+    #[test]
+    fn table3_first_values() {
+        // Paper Table 3: decimal -> FZ (Gray-code) values.
+        let expect = [
+            (0u64, 0u64),
+            (1, 1),
+            (2, 3),
+            (3, 2),
+            (4, 6),
+            (5, 7),
+            (6, 5),
+            (7, 4),
+            (8, 12),
+            (9, 13),
+            (10, 15),
+            (11, 14),
+            (12, 10),
+            (13, 11),
+            (14, 9),
+            (15, 8),
+            (16, 24),
+            (17, 25),
+            (24, 20),
+            (27, 22),
+        ];
+        for (dec, fz) in expect {
+            assert_eq!(to_gray(dec), fz, "Table 3 row {dec}");
+        }
+        // Note: the paper's Table 3 rows 28-31 contain typos — the decimal
+        // FZ column disagrees with the table's own Gray-code binary column
+        // (e.g. row 28 lists FZ=22 but binary 10010=18). The binary column
+        // matches to_gray; we follow it.
+        assert_eq!(to_gray(28), 0b10010);
+        assert_eq!(to_gray(31), 0b10000);
+    }
+
+    #[test]
+    fn gray_cyclic_property() {
+        // Torus-friendliness: the last and first Gray codes also differ in
+        // exactly one bit (for a full 2^k ring).
+        for k in 1..12u32 {
+            let n = 1u64 << k;
+            let d = to_gray(0) ^ to_gray(n - 1);
+            assert_eq!(d.count_ones(), 1);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! d-dimensional Hilbert curve via Skilling's transpose algorithm
+//! ("Programming the Hilbert curve", AIP 2004).
+//!
+//! Used for (1) the H columns of Table 1, (2) HOMME's default per-face SFC
+//! partition, and (3) the ALPS-style sparse-allocation simulator (Cray's
+//! scheduler selects nodes along a space-filling curve, Section 2).
+
+/// Hilbert index of a point with `bits`-bit coordinates in `axes.len()`
+/// dimensions. `axes.len() * bits` must be <= 128.
+pub fn hilbert_index(axes: &[u64], bits: u32) -> u128 {
+    let n = axes.len();
+    assert!(n >= 1 && (n as u32) * bits <= 128, "n={n} bits={bits}");
+    if n == 1 {
+        return axes[0] as u128; // 1D Hilbert is the identity
+    }
+    let mut x: Vec<u64> = axes.to_vec();
+    axes_to_transpose(&mut x, bits);
+    // Interleave bits: most significant bit of each axis first.
+    let mut index: u128 = 0;
+    for b in (0..bits).rev() {
+        for xi in &x {
+            index = (index << 1) | (((xi >> b) & 1) as u128);
+        }
+    }
+    index
+}
+
+/// Inverse: point on the curve at `index`.
+pub fn hilbert_point(index: u128, ndims: usize, bits: u32) -> Vec<u64> {
+    assert!(ndims >= 1 && (ndims as u32) * bits <= 128);
+    if ndims == 1 {
+        return vec![index as u64];
+    }
+    // De-interleave into transpose form.
+    let mut x = vec![0u64; ndims];
+    let total = ndims as u32 * bits;
+    for pos in 0..total {
+        let bit = (index >> (total - 1 - pos)) & 1;
+        let axis = (pos as usize) % ndims;
+        let level = bits - 1 - (pos / ndims as u32);
+        x[axis] |= (bit as u64) << level;
+    }
+    transpose_to_axes(&mut x, bits);
+    x
+}
+
+/// Skilling: map axis coordinates to "transpose" Hilbert form, in place.
+fn axes_to_transpose(x: &mut [u64], bits: u32) {
+    let n = x.len();
+    let m = 1u64 << (bits - 1);
+    // Inverse undo
+    let mut q = m;
+    while q > 1 {
+        let p = q - 1;
+        for i in 0..n {
+            if x[i] & q != 0 {
+                x[0] ^= p;
+            } else {
+                let t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q >>= 1;
+    }
+    // Gray encode
+    for i in 1..n {
+        x[i] ^= x[i - 1];
+    }
+    let mut t = 0u64;
+    let mut q = m;
+    while q > 1 {
+        if x[n - 1] & q != 0 {
+            t ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for xi in x.iter_mut() {
+        *xi ^= t;
+    }
+}
+
+/// Skilling: inverse of `axes_to_transpose`.
+fn transpose_to_axes(x: &mut [u64], bits: u32) {
+    let n = x.len();
+    let m = 2u64 << (bits - 1);
+    // Gray decode by H ^= H/2
+    let mut t = x[n - 1] >> 1;
+    for i in (1..n).rev() {
+        x[i] ^= x[i - 1];
+    }
+    x[0] ^= t;
+    // Undo excess work
+    let mut q = 2u64;
+    while q != m {
+        let p = q - 1;
+        for i in (0..n).rev() {
+            if x[i] & q != 0 {
+                x[0] ^= p;
+            } else {
+                t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q <<= 1;
+    }
+}
+
+/// Rank all points of a quantized integer grid by Hilbert index: returns a
+/// permutation `order` such that `order[k]` is the point index visited k-th.
+pub fn hilbert_sort(points: &[Vec<u64>], bits: u32) -> Vec<usize> {
+    let mut keyed: Vec<(u128, usize)> = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (hilbert_index(p, bits), i))
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Quantize f64 coordinates (per-axis min/max) to a `bits`-bit grid and rank
+/// by Hilbert index. Points are NOT assumed to be on an integer grid.
+pub fn hilbert_sort_f64(coords: &crate::geom::Coords, bits: u32) -> Vec<usize> {
+    let n = coords.len();
+    let dim = coords.dim();
+    let bb = coords.bbox();
+    let scale: Vec<f64> = (0..dim)
+        .map(|d| {
+            let ext = bb.extent(d);
+            if ext > 0.0 {
+                (((1u64 << bits) - 1) as f64) / ext
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut q = vec![0u64; dim];
+    let mut keyed: Vec<(u128, usize)> = (0..n)
+        .map(|i| {
+            for d in 0..dim {
+                q[d] = ((coords.get(d, i) - bb.lo[d]) * scale[d]).round() as u64;
+            }
+            (hilbert_index(&q, bits), i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        for bits in 1..6u32 {
+            let size = 1u64 << bits;
+            for x in 0..size {
+                for y in 0..size {
+                    let idx = hilbert_index(&[x, y], bits);
+                    assert_eq!(hilbert_point(idx, 2, bits), vec![x, y]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_4d() {
+        let bits = 3;
+        for i in 0..(1u128 << (4 * bits)) {
+            let p = hilbert_point(i, 4, bits as u32);
+            assert_eq!(hilbert_index(&p, bits as u32), i);
+        }
+    }
+
+    #[test]
+    fn curve_is_continuous_2d() {
+        // Consecutive Hilbert indices are grid neighbors (L1 distance 1).
+        let bits = 4;
+        let total = 1u128 << (2 * bits);
+        let mut prev = hilbert_point(0, 2, bits);
+        for i in 1..total {
+            let p = hilbert_point(i, 2, bits);
+            let dist: u64 = p
+                .iter()
+                .zip(&prev)
+                .map(|(a, b)| a.abs_diff(*b))
+                .sum();
+            assert_eq!(dist, 1, "jump at index {i}: {prev:?} -> {p:?}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn curve_is_continuous_3d() {
+        let bits = 3;
+        let total = 1u128 << (3 * bits);
+        let mut prev = hilbert_point(0, 3, bits);
+        for i in 1..total {
+            let p = hilbert_point(i, 3, bits);
+            let dist: u64 = p.iter().zip(&prev).map(|(a, b)| a.abs_diff(*b)).sum();
+            assert_eq!(dist, 1, "jump at index {i}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn curve_visits_all_cells() {
+        let bits = 3;
+        let total = 1u128 << (2 * bits);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..total {
+            let p = hilbert_point(i, 2, bits);
+            assert!(seen.insert(p.clone()), "revisited {p:?}");
+        }
+        assert_eq!(seen.len() as u128, total);
+    }
+
+    #[test]
+    fn hilbert_sort_orders_by_index() {
+        let pts: Vec<Vec<u64>> = (0..8)
+            .flat_map(|x| (0..8).map(move |y| vec![x, y]))
+            .collect();
+        let order = hilbert_sort(&pts, 3);
+        let mut prev_idx = None;
+        for &i in &order {
+            let idx = hilbert_index(&pts[i], 3);
+            if let Some(p) = prev_idx {
+                assert!(idx >= p);
+            }
+            prev_idx = Some(idx);
+        }
+    }
+
+    #[test]
+    fn one_d_is_identity() {
+        for i in 0..64u64 {
+            assert_eq!(hilbert_index(&[i], 6), i as u128);
+            assert_eq!(hilbert_point(i as u128, 1, 6), vec![i]);
+        }
+    }
+
+    #[test]
+    fn hilbert_sort_f64_matches_integer_grid() {
+        use crate::geom::Coords;
+        let mut c = Coords::new(2);
+        let mut pts = Vec::new();
+        for x in 0..8u64 {
+            for y in 0..8u64 {
+                c.push(&[x as f64, y as f64]);
+                pts.push(vec![x, y]);
+            }
+        }
+        // bits=3 exactly represents an 8x8 grid.
+        assert_eq!(hilbert_sort_f64(&c, 3), hilbert_sort(&pts, 3));
+    }
+}

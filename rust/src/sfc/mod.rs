@@ -1,0 +1,54 @@
+//! Space-filling-curve machinery: part-numbering orderings for the MJ
+//! partitioner (Z, Gray, Flipped-Z, Modified-Flipped-Z — Algorithm 2 of the
+//! paper), d-dimensional Hilbert curves, Gray-code utilities, and the
+//! closed-form hop analysis of Appendix A.
+
+pub mod analysis;
+pub mod gray;
+pub mod hilbert;
+
+/// Part-numbering scheme applied during recursive bisection (Section 4.3,
+/// Algorithm 2). Determines which coordinates are flipped for points on one
+/// side of each cut:
+///
+/// * `Z`    — no flips; lower part numbers below the cut (Morton order).
+/// * `Gray` — flip **all** coordinates of the upper half.
+/// * `FZ`   — flip only the **cut dimension** of the upper half (the
+///   paper's new Flipped-Z ordering).
+/// * `MFZ`  — like FZ but flips the **lower** half instead; applied to one
+///   coordinate set only, when `pd mod td == 0`, to cancel the conflict-bit
+///   penalty (Section 4.3, "MFZ" paragraph).
+/// * `Hilbert` — not an MJ flip rule: parts are numbered by the Hilbert
+///   index of their quantized coordinates (used for the H columns of
+///   Table 1 and as HOMME's default SFC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartOrdering {
+    Z,
+    Gray,
+    FZ,
+    MFZ,
+    Hilbert,
+}
+
+impl PartOrdering {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartOrdering::Z => "Z",
+            PartOrdering::Gray => "G",
+            PartOrdering::FZ => "FZ",
+            PartOrdering::MFZ => "MFZ",
+            PartOrdering::Hilbert => "H",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "Z" => Some(PartOrdering::Z),
+            "G" | "GRAY" => Some(PartOrdering::Gray),
+            "FZ" => Some(PartOrdering::FZ),
+            "MFZ" => Some(PartOrdering::MFZ),
+            "H" | "HILBERT" => Some(PartOrdering::Hilbert),
+            _ => None,
+        }
+    }
+}

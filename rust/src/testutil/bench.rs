@@ -1,0 +1,105 @@
+//! Minimal benchmark harness (no `criterion` in the vendor set): adaptive
+//! iteration count, warmup, median-of-samples reporting. Used by the
+//! `harness = false` bench targets.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_sample as f64
+    }
+
+    pub fn report(&self) {
+        let ns = self.per_iter_ns();
+        let (val, unit) = if ns >= 1e9 {
+            (ns / 1e9, "s")
+        } else if ns >= 1e6 {
+            (ns / 1e6, "ms")
+        } else if ns >= 1e3 {
+            (ns / 1e3, "us")
+        } else {
+            (ns, "ns")
+        };
+        println!(
+            "{:<52} {:>10.3} {:<3} (min {:.3e} ns, max {:.3e} ns, {} x {} iters)",
+            self.name,
+            val,
+            unit,
+            self.min.as_nanos() as f64 / self.iters_per_sample as f64,
+            self.max.as_nanos() as f64 / self.iters_per_sample as f64,
+            self.samples,
+            self.iters_per_sample
+        );
+    }
+}
+
+/// Benchmark a closure: warm up, pick an iteration count targeting
+/// ~`target_ms` per sample, run `samples` samples, report the median.
+/// The closure's return value is black-boxed to prevent dead-code
+/// elimination.
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, 5, 200.0, &mut f)
+}
+
+/// Quick variant for expensive end-to-end benches.
+pub fn bench_quick<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, 3, 300.0, &mut f)
+}
+
+fn bench_cfg<T, F: FnMut() -> T>(
+    name: &str,
+    samples: usize,
+    target_ms: f64,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((target_ms * 1e6) / once.as_nanos() as f64)
+        .clamp(1.0, 1e7) as u64;
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        times.push(t.elapsed());
+    }
+    times.sort_unstable();
+    let result = BenchResult {
+        name: name.to_string(),
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+        samples,
+        iters_per_sample: iters,
+    };
+    result.report();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_cfg("noop-ish", 3, 1.0, &mut || {
+            std::hint::black_box((0..100u64).sum::<u64>())
+        });
+        assert!(r.per_iter_ns() > 0.0);
+        assert!(r.iters_per_sample >= 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Test/bench support: seeded PRNG, a tiny property-testing harness, and a
+//! minimal JSON writer.
+//!
+//! The offline vendor set has no `rand`, `proptest`, `criterion` or `serde`,
+//! so the handful of primitives the library and its tests need live here.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,76 @@
+//! Minimal property-testing harness (no `proptest` in the vendor set).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases` seeded
+//! random inputs; on failure it reports the failing case seed so the exact
+//! input can be replayed with `replay(seed, f)`. There is no shrinking —
+//! generators in this codebase are parameterized small enough that raw
+//! failing seeds are debuggable.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministically-derived seeds. Each invocation gets
+/// a fresh `Rng`; `f` returns `Err(msg)` to fail the property.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000 ^ case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two floats are within relative-or-absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let tol = atol + rtol * a.abs().max(b.abs());
+    if diff <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (diff {diff:.3e} > tol {tol:.3e})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("x+0==x", 20, |rng| {
+            let x = rng.next_u64();
+            if x.wrapping_add(0) == x {
+                Ok(())
+            } else {
+                Err("arithmetic broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failures() {
+        check("always-fails", 1, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(approx_eq(1.0, 1.1, 1e-6, 0.0).is_err());
+        assert!(approx_eq(0.0, 1e-9, 0.0, 1e-6).is_ok());
+    }
+}

@@ -1,0 +1,102 @@
+//! Smoke tests: every registered experiment runs end-to-end at small scale
+//! and produces well-formed tables with the paper's qualitative shape.
+
+use taskmap::coordinator::{experiments, Ctx};
+
+fn ctx() -> Ctx {
+    Ctx::new(false, 42, true) // small scale, native backend (fast, no I/O)
+}
+
+fn parse(cell: &str) -> f64 {
+    cell.parse().unwrap_or(f64::NAN)
+}
+
+#[test]
+fn all_experiments_run_and_render() {
+    let ctx = ctx();
+    for id in experiments::ALL {
+        let tables = experiments::run(id, &ctx).expect("registered");
+        assert!(!tables.is_empty(), "{id}: no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{id}: empty table {}", t.title);
+            let md = t.markdown();
+            assert!(md.contains('|'), "{id}: markdown broken");
+            for row in &t.rows {
+                assert_eq!(row.len(), t.headers.len(), "{id}: ragged row");
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_experiment_is_none() {
+    assert!(experiments::run("fig99", &ctx()).is_none());
+}
+
+#[test]
+fn table1_fz_geomean_beats_z() {
+    // The paper's ordering conclusion: FZ's geomean AverageHops is below
+    // Z's in every connectivity group.
+    let tables = experiments::run("table1", &ctx()).unwrap();
+    let t = &tables[0];
+    let geo = t.rows.last().unwrap();
+    assert_eq!(geo[0], "GEOMEAN");
+    // Columns: 3 key cols then per group [H, Z, FZ, MFZ].
+    for group in 0..3 {
+        let base = 3 + group * 4;
+        let z = parse(&geo[base + 1]);
+        let fz = parse(&geo[base + 2]);
+        assert!(
+            fz < z,
+            "group {group}: FZ geomean {fz} !< Z geomean {z}"
+        );
+    }
+}
+
+#[test]
+fn table1_mfz_improves_on_fz_geomean() {
+    let tables = experiments::run("table1", &ctx()).unwrap();
+    let geo = tables[0].rows.last().unwrap().clone();
+    for group in 0..3 {
+        let base = 3 + group * 4;
+        let fz = parse(&geo[base + 2]);
+        let mfz = parse(&geo[base + 3]);
+        // MFZ geomean is over the subset of rows where it applies, so
+        // compare loosely: it must not be dramatically worse.
+        assert!(
+            mfz < fz * 1.15,
+            "group {group}: MFZ {mfz} much worse than FZ {fz}"
+        );
+    }
+}
+
+#[test]
+fn fig13_z2_beats_default_at_scale() {
+    let tables = experiments::run("fig13", &ctx()).unwrap();
+    let t = &tables[0];
+    // Headers: procs, allocs, Default, Group, Z2_1, Z2_2, Z2_3.
+    let last = t.rows.last().unwrap();
+    let default = parse(&last[2]);
+    let z2_1 = parse(&last[4]);
+    assert!(
+        z2_1 < default,
+        "Z2_1 {z2_1} !< Default {default} at the largest scale"
+    );
+}
+
+#[test]
+fn fig10_normalizes_sfc_to_one() {
+    let tables = experiments::run("fig10", &ctx()).unwrap();
+    for row in &tables[0].rows {
+        let sfc = parse(&row[2]);
+        assert!((sfc - 1.0).abs() < 1e-9, "SFC column must be 1.00");
+    }
+}
+
+#[test]
+fn fig14_reports_both_metrics() {
+    let tables = experiments::run("fig14", &ctx()).unwrap();
+    assert_eq!(tables.len(), 2);
+    assert!(tables[0].title.contains("AverageHops"));
+    assert!(tables[1].title.contains("Latency"));
+}

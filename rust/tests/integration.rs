@@ -1,0 +1,283 @@
+//! Cross-module integration tests: workloads x machines x strategies x
+//! metrics, exercising the same paths as the paper experiments (at small
+//! scale).
+
+use taskmap::apps::homme::{Homme, HommeCoords};
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::apps::stencil::stencil_graph;
+use taskmap::machine::{cray_xk7, Allocation, SparseAllocator, Torus};
+use taskmap::mapping::pipeline::{sfc_plus_z2, z2_map, Z2Config};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::mapping::{map_tasks, MapConfig};
+use taskmap::metrics::{eval_full, eval_hops};
+use taskmap::sfc::PartOrdering;
+use taskmap::simulate::{comm_time, CommModel};
+
+fn titan_small() -> SparseAllocator {
+    SparseAllocator {
+        machine: cray_xk7(&[8, 8, 8]),
+        nodes_per_router: 2,
+        ranks_per_node: 16,
+        occupancy: 0.35,
+    }
+}
+
+#[test]
+fn minighost_z2_beats_default_on_sparse_allocation() {
+    // The paper's headline MiniGhost result, in miniature: on a sparse
+    // allocation, the geometric mapping must beat the default task order
+    // both in metrics and in simulated communication time.
+    let mg = MiniGhost::weak_scaling([8, 8, 8]);
+    let graph = mg.graph();
+    let alloc = titan_small().allocate(512 / 16, 7);
+    let default = mg.default_order();
+    let mut cfg = Z2Config::z2_1();
+    cfg.max_rotations = 8;
+    let z2 = z2_map(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+    let model = CommModel {
+        rounds: 20.0,
+        ..Default::default()
+    };
+    let t_default = comm_time(&graph, &default, &alloc, &model);
+    let t_z2 = comm_time(&graph, &z2, &alloc, &model);
+    let m_default = eval_hops(&graph, &default, &alloc);
+    let m_z2 = eval_hops(&graph, &z2, &alloc);
+    assert!(
+        m_z2.avg_hops < m_default.avg_hops,
+        "hops: Z2 {} !< default {}",
+        m_z2.avg_hops,
+        m_default.avg_hops
+    );
+    assert!(
+        t_z2.total < t_default.total,
+        "time: Z2 {} !< default {}",
+        t_z2.total,
+        t_default.total
+    );
+}
+
+#[test]
+fn minighost_group_between_default_and_z2() {
+    // Paper Fig 13: Group improves on Default; Z2 improves on Group.
+    let mg = MiniGhost::weak_scaling([16, 8, 8]);
+    let graph = mg.graph();
+    let alloc = titan_small().allocate(1024 / 16, 3);
+    let model = CommModel {
+        rounds: 20.0,
+        ..Default::default()
+    };
+    let t = |m: &[u32]| comm_time(&graph, m, &alloc, &model).total;
+    let t_default = t(&mg.default_order());
+    let t_group = t(&mg.group_order());
+    let mut cfg = Z2Config::z2_1();
+    cfg.max_rotations = 8;
+    let t_z2 = t(&z2_map(&graph, &graph.coords, &alloc, &cfg, &NativeBackend));
+    assert!(t_group < t_default, "group {t_group} !< default {t_default}");
+    assert!(t_z2 < t_group, "z2 {t_z2} !< group {t_group}");
+}
+
+#[test]
+fn homme_bgq_z2_reduces_data_at_scale() {
+    // Section 5.2's mechanism: SFC over-uses D/E links on BG/Q; Z2
+    // distributes data across dimensions, lowering Data(M).
+    let homme = Homme::new(16); // 1536 elements
+    let graph = homme.graph();
+    let alloc = Allocation::bgq([4, 4, 4, 2, 2], 4, "ABCDET"); // 512 ranks
+    let sfc = homme.sfc_partition(alloc.num_ranks());
+    let mut cfg = Z2Config::z2_1().plus_e();
+    cfg.max_rotations = 6;
+    let face = homme.coords(HommeCoords::Face2D);
+    let z2 = z2_map(&graph, &face, &alloc, &cfg, &NativeBackend);
+    let m_sfc = eval_full(&graph, &sfc, &alloc);
+    let m_z2 = eval_full(&graph, &z2, &alloc);
+    // At this toy scale the paper reports no decisive Data(M) win (Table 2
+    // shows none at 8K either); the *mechanism* must hold though: SFC
+    // concentrates traffic on few dimensions while Z2 balances it.
+    let imbalance = |m: &taskmap::metrics::Metrics| {
+        let lm = m.link.as_ref().unwrap();
+        let avgs: Vec<f64> = (0..5)
+            .map(|d| 0.5 * (lm.per_dim[d][0].avg_data + lm.per_dim[d][1].avg_data))
+            .collect();
+        let mean = avgs.iter().sum::<f64>() / 5.0;
+        avgs.iter().cloned().fold(0.0, f64::max) / mean
+    };
+    let (i_sfc, i_z2) = (imbalance(&m_sfc), imbalance(&m_z2));
+    assert!(
+        i_z2 < i_sfc,
+        "link-utilization imbalance: Z2 {i_z2:.2} !< SFC {i_sfc:.2}"
+    );
+    // And Data(M) must at least stay in the same ballpark (< 1.5x).
+    let d_sfc = m_sfc.link.unwrap().max_data;
+    let d_z2 = m_z2.link.unwrap().max_data;
+    assert!(d_z2 < 1.5 * d_sfc, "Data(M): Z2 {d_z2} way above SFC {d_sfc}");
+}
+
+#[test]
+fn homme_sfc_plus_z2_preserves_parts() {
+    let homme = Homme::new(8);
+    let graph = homme.graph();
+    let alloc = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET"); // 128 ranks
+    let parts = homme.sfc_partition(alloc.num_ranks());
+    let mut cfg = Z2Config::z2_1();
+    cfg.max_rotations = 4;
+    let m = sfc_plus_z2(
+        &graph,
+        &homme.coords(HommeCoords::Cube),
+        &parts,
+        alloc.num_ranks(),
+        &alloc,
+        &cfg,
+        &NativeBackend,
+    );
+    // Same part -> same rank; mapping is a bijection over ranks.
+    let mut rank_of_part = vec![None; alloc.num_ranks()];
+    for t in 0..graph.num_tasks {
+        let p = parts[t] as usize;
+        match rank_of_part[p] {
+            None => rank_of_part[p] = Some(m[t]),
+            Some(r) => assert_eq!(r, m[t]),
+        }
+    }
+    let mut ranks: Vec<u32> = rank_of_part.into_iter().map(|r| r.unwrap()).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    assert_eq!(ranks.len(), alloc.num_ranks());
+}
+
+#[test]
+fn shifted_mapping_improves_seam_straddling_allocation() {
+    // Build an allocation hugging the torus seam; with shifting the mapper
+    // must see it as contiguous and produce a mapping at least as good as
+    // without shifting.
+    let machine = Torus::torus(&[16]);
+    // Routers 14,15,0,1 around the seam; 4 ranks per router-node.
+    let routers = [14u32, 15, 0, 1];
+    let alloc = Allocation {
+        torus: machine,
+        core_router: routers.iter().flat_map(|&r| [r; 4]).collect(),
+        core_node: (0..4u32).flat_map(|n| [n; 4]).collect(),
+        ranks_per_node: 4,
+    };
+    let graph = stencil_graph(&[16], false, 1.0);
+    let run = |shift: bool| {
+        let cfg = Z2Config {
+            shift,
+            max_rotations: 1,
+            ..Z2Config::z2_1()
+        };
+        let m = z2_map(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+        eval_hops(&graph, &m, &alloc).weighted_hops
+    };
+    assert!(run(true) <= run(false));
+}
+
+#[test]
+fn table1_style_mapping_all_orderings_bijective() {
+    // 2D tasks onto 3D nodes, 512 each, every ordering.
+    let tg = stencil_graph(&[32, 16], false, 1.0);
+    let nodes = Torus::torus(&[8, 8, 8]);
+    let alloc = Allocation {
+        torus: nodes,
+        core_router: (0..512u32).collect(),
+        core_node: (0..512u32).collect(),
+        ranks_per_node: 1,
+    };
+    for ord in [
+        PartOrdering::Z,
+        PartOrdering::Gray,
+        PartOrdering::FZ,
+        PartOrdering::Hilbert,
+    ] {
+        let cfg = MapConfig {
+            task_ordering: ord,
+            proc_ordering: ord,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let m = map_tasks(&tg.coords, &alloc.proc_coords(), &cfg);
+        let mut s = m.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..512u32).collect::<Vec<_>>(), "{ord:?}");
+        // Sanity: AverageHops bounded by the network diameter.
+        let hops = eval_hops(&tg, &m, &alloc);
+        assert!(hops.avg_hops <= 12.0, "{ord:?}: {}", hops.avg_hops);
+    }
+}
+
+#[test]
+fn uneven_prime_avoids_splitting_nodes_early() {
+    // 48 ranks = 3 nodes x 16: prime bisection (p=3 at the top) must not
+    // split any node across the first cut; every node's ranks then map to
+    // tasks forming one contiguous cluster.
+    let machine = Torus::torus(&[8, 1, 1]);
+    let alloc = Allocation {
+        torus: machine,
+        core_router: (0..3u32).flat_map(|r| [r; 16]).collect(),
+        core_node: (0..3u32).flat_map(|n| [n; 16]).collect(),
+        ranks_per_node: 16,
+    };
+    let graph = stencil_graph(&[48], false, 1.0);
+    let run = |uneven: bool| {
+        let cfg = Z2Config {
+            uneven_prime: uneven,
+            shift: false,
+            max_rotations: 1,
+            ..Z2Config::z2_1()
+        };
+        let m = z2_map(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+        // Count inter-node task edges: fewer = nodes own contiguous blocks.
+        graph
+            .edges
+            .iter()
+            .filter(|e| {
+                alloc.core_node[m[e.u as usize] as usize]
+                    != alloc.core_node[m[e.v as usize] as usize]
+            })
+            .count()
+    };
+    let uneven = run(true);
+    let even = run(false);
+    assert!(uneven <= even, "uneven {uneven} !<= even {even}");
+    assert_eq!(uneven, 2, "3 contiguous blocks of 16 have exactly 2 cut edges");
+}
+
+#[test]
+fn metrics_consistent_between_eval_paths() {
+    let mg = MiniGhost::weak_scaling([8, 8, 4]);
+    let graph = mg.graph();
+    let alloc = titan_small().allocate(16, 9);
+    let m = mg.group_order();
+    let cheap = eval_hops(&graph, &m, &alloc);
+    let full = eval_full(&graph, &m, &alloc);
+    assert_eq!(cheap.total_hops, full.total_hops);
+    assert_eq!(cheap.total_messages, full.total_messages);
+    assert!(full.link.is_some());
+}
+
+#[test]
+fn weak_scaling_z2_hops_stay_flat() {
+    // Fig 14's claim: AverageHops under Z2 stays nearly constant as the
+    // job grows, while Default's grows.
+    let allocator = titan_small();
+    let mut z2_hops = Vec::new();
+    let mut default_hops = Vec::new();
+    for (procs, dims) in [(256usize, [4usize, 8, 8]), (2048, [16, 16, 8])] {
+        let mg = MiniGhost::weak_scaling(dims);
+        let graph = mg.graph();
+        let alloc = allocator.allocate(procs / 16, 21);
+        let mut cfg = Z2Config::z2_1();
+        cfg.max_rotations = 6;
+        let z2 = z2_map(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+        z2_hops.push(eval_hops(&graph, &z2, &alloc).avg_hops);
+        default_hops.push(eval_hops(&graph, &mg.default_order(), &alloc).avg_hops);
+    }
+    // Absolute hop growth under weak scaling: Z2's increase must stay
+    // below Default's, and Z2 must stay below Default at every scale.
+    let z2_growth = z2_hops[1] - z2_hops[0];
+    let default_growth = default_hops[1] - default_hops[0];
+    assert!(
+        z2_growth < default_growth,
+        "z2 growth {z2_growth} !< default growth {default_growth} ({z2_hops:?} vs {default_hops:?})"
+    );
+    assert!(z2_hops[0] < default_hops[0] && z2_hops[1] < default_hops[1]);
+}

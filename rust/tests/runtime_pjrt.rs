@@ -1,0 +1,134 @@
+//! PJRT runtime tests: the AOT HLO artifacts must load, execute, and agree
+//! with the native evaluator bit-for-bit (same f32 accumulation contract).
+//!
+//! Requires `make artifacts` (skipped with a note if absent — CI runs it).
+
+use taskmap::mapping::rotations::{score_mappings, NativeBackend, WhopsBackend};
+use taskmap::metrics::native::batched_weighted_hops_native;
+use taskmap::runtime::{PjrtBackend, PjrtRuntime};
+use taskmap::testutil::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn random_case(
+    rng: &mut Rng,
+    r: usize,
+    e: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dims: Vec<f32> = (0..d).map(|_| rng.range(1, 17) as f32).collect();
+    let coord = |rng: &mut Rng, dims: &[f32], k: usize| (rng.below(dims[k % d] as usize)) as f32;
+    let src: Vec<f32> = (0..r * e * d).map(|k| coord(rng, &dims, k)).collect();
+    let dst: Vec<f32> = (0..r * e * d).map(|k| coord(rng, &dims, k)).collect();
+    let w: Vec<f32> = (0..e).map(|_| rng.f64_range(0.0, 4.0) as f32).collect();
+    let wrap: Vec<f32> = (0..d).map(|_| if rng.bool() { 1.0 } else { 0.0 }).collect();
+    (src, dst, w, dims, wrap)
+}
+
+#[test]
+fn pjrt_matches_native_exact_artifact_shape() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let (r, e, d) = (2, 1024, 6); // the smoke artifact's exact shape
+    let (src, dst, w, dims, wrap) = random_case(&mut rng, r, e, d);
+    let got = rt.eval(&src, &dst, &w, &dims, &wrap, r, e, d).unwrap();
+    let want = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+    for (g, want) in got.iter().zip(&want) {
+        assert!(
+            (g - want).abs() <= 1e-2 + want.abs() * 1e-5,
+            "{g} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_pads_edges_and_dims() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    // Odd sizes force both edge-chunk padding and dim padding.
+    let (r, e, d) = (3, 1500, 3);
+    let (src, dst, w, dims, wrap) = random_case(&mut rng, r, e, d);
+    let got = rt.eval(&src, &dst, &w, &dims, &wrap, r, e, d).unwrap();
+    let want = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+    for (g, want) in got.iter().zip(&want) {
+        assert!(
+            (g - want).abs() <= 1e-2 + want.abs() * 1e-5,
+            "{g} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_chunks_candidates() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    // More candidates than any artifact's R: forces candidate chunking.
+    let (r, e, d) = (41, 256, 4);
+    let (src, dst, w, dims, wrap) = random_case(&mut rng, r, e, d);
+    let got = rt.eval(&src, &dst, &w, &dims, &wrap, r, e, d).unwrap();
+    let want = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+    assert_eq!(got.len(), r);
+    for (g, want) in got.iter().zip(&want) {
+        assert!(
+            (g - want).abs() <= 1e-2 + want.abs() * 1e-5,
+            "{g} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_backend_scores_match_native_backend() {
+    let Some(backend) = PjrtBackend::try_default() else {
+        eprintln!("SKIP: artifacts unavailable");
+        return;
+    };
+    use taskmap::apps::stencil::stencil_graph;
+    use taskmap::machine::{Allocation, Torus};
+    let g = stencil_graph(&[8, 8], false, 2.0);
+    let torus = Torus::torus(&[8, 8]);
+    let alloc = Allocation {
+        torus,
+        core_router: (0..64u32).collect(),
+        core_node: (0..64u32).collect(),
+        ranks_per_node: 1,
+    };
+    let mut rng = Rng::new(4);
+    let mappings: Vec<Vec<u32>> = (0..5)
+        .map(|_| {
+            let mut m: Vec<u32> = (0..64).collect();
+            rng.shuffle(&mut m);
+            m
+        })
+        .collect();
+    let pjrt = score_mappings(&g, &mappings, &alloc, &backend, 1024);
+    let native = score_mappings(&g, &mappings, &alloc, &NativeBackend, 1024);
+    for (a, b) in pjrt.iter().zip(&native) {
+        assert!((a - b).abs() <= 1e-2 + b.abs() * 1e-5, "{a} vs {b}");
+    }
+    assert_eq!(*backend.fallbacks.lock().unwrap(), 0, "PJRT silently fell back");
+}
+
+#[test]
+fn pjrt_rejects_oversized_dims_gracefully() {
+    let Some(backend) = PjrtBackend::try_default() else {
+        eprintln!("SKIP: artifacts unavailable");
+        return;
+    };
+    // d=8 exceeds every artifact (D=6): the backend must fall back to
+    // native, not panic, and still return correct values.
+    let mut rng = Rng::new(5);
+    let (r, e, d) = (2, 64, 8);
+    let (src, dst, w, dims, wrap) = random_case(&mut rng, r, e, d);
+    let got = backend.eval_batch(&src, &dst, &w, &dims, &wrap, r, e, d);
+    let want = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+    assert_eq!(got, want);
+    assert_eq!(*backend.fallbacks.lock().unwrap(), 1);
+}
