@@ -1,11 +1,14 @@
 //! Microbenchmarks: the MJ partitioner (the L3 hot path of Algorithm 1)
-//! across sizes, orderings, and cut-selection policies.
+//! across sizes, orderings, cut-selection policies, and thread budgets.
+//! Results merge into `BENCH_mapping.json` alongside the rotation-sweep
+//! trajectory.
 
 use taskmap::geom::Coords;
-use taskmap::mj::{mj_partition, MjConfig};
+use taskmap::mj::{mj_partition, mj_partition_into, mj_partition_par, MjConfig, MjScratch};
+use taskmap::par::Parallelism;
 use taskmap::sfc::hilbert::hilbert_sort_f64;
 use taskmap::sfc::PartOrdering;
-use taskmap::testutil::bench::bench;
+use taskmap::testutil::bench::{bench, BenchRecorder};
 use taskmap::testutil::Rng;
 
 fn random_coords(n: usize, dim: usize, seed: u64) -> Coords {
@@ -22,13 +25,31 @@ fn random_coords(n: usize, dim: usize, seed: u64) -> Coords {
 }
 
 fn main() {
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
     println!("== MJ partitioner ==");
     for &n in &[4_096usize, 65_536, 262_144] {
         let c = random_coords(n, 3, 42);
         let cfg = MjConfig::default();
-        bench(&format!("mj_partition FZ longest n={n} p={n}"), || {
-            mj_partition(&c, n, &cfg)
-        });
+        for threads in [1usize, 2, 8] {
+            let par = Parallelism::threads(threads);
+            let result = bench(
+                &format!("mj_partition/FZ/longest/n={n}/p={n}/threads={threads}"),
+                || mj_partition_par(&c, n, &cfg, par),
+            );
+            rec.record(&result, &[("threads", threads as f64)]);
+        }
+        // Scratch-arena reuse (the rotation sweep's steady state): same
+        // partition, no per-call allocation of the working axes.
+        let mut scratch = MjScratch::new();
+        let mut part = Vec::new();
+        let result = bench(
+            &format!("mj_partition/FZ/longest/n={n}/p={n}/threads=1/scratch-reuse"),
+            || {
+                mj_partition_into(&c, n, &cfg, Parallelism::sequential(), &mut scratch, &mut part);
+                part.len()
+            },
+        );
+        rec.record(&result, &[("threads", 1.0)]);
     }
     let c = random_coords(65_536, 3, 42);
     for ordering in [PartOrdering::Z, PartOrdering::Gray, PartOrdering::FZ] {
@@ -37,19 +58,29 @@ fn main() {
             longest_dim: false,
             uneven_prime: false,
         };
-        bench(
-            &format!("mj_partition {} alternating n=65536", ordering.name()),
+        let result = bench(
+            &format!("mj_partition/{}/alternating/n=65536", ordering.name()),
             || mj_partition(&c, 65_536, &cfg),
         );
+        rec.record(&result, &[]);
     }
     // Coarse partitions (tnum >> parts): the simultaneous map+partition
     // case.
     let cfg = MjConfig::default();
-    bench("mj_partition FZ n=262144 p=1024", || {
-        mj_partition(&random_coords(262_144, 3, 7), 1_024, &cfg)
-    });
+    let coarse = random_coords(262_144, 3, 7);
+    for threads in [1usize, 8] {
+        let par = Parallelism::threads(threads);
+        let result = bench(
+            &format!("mj_partition/FZ/n=262144/p=1024/threads={threads}"),
+            || mj_partition_par(&coarse, 1_024, &cfg, par),
+        );
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
     // Hilbert ranking for comparison (the H ordering path).
-    bench("hilbert_sort_f64 n=65536 d=3", || {
-        hilbert_sort_f64(&c, 16)
-    });
+    let result = bench("hilbert_sort_f64/n=65536/d=3", || hilbert_sort_f64(&c, 16));
+    rec.record(&result, &[]);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
 }

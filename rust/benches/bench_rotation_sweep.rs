@@ -1,20 +1,28 @@
-//! The rotation sweep (Section 4.3): native vs PJRT WeightedHops scoring —
-//! the L1/L2/runtime integration hot path.
+//! The rotation sweep (Section 4.3): the map-and-score hot path across
+//! thread counts, plus the raw WeightedHops kernel and the artifact-backed
+//! backend. Results land in `BENCH_mapping.json` (merge-on-write; override
+//! the path with `TASKMAP_BENCH_OUT`) so the speedup trajectory is diffable
+//! across commits.
 
 use taskmap::apps::stencil::stencil_graph;
 use taskmap::machine::{Allocation, Torus};
 use taskmap::mapping::rotations::{
-    rotation_sweep, score_mappings, NativeBackend, SweepConfig, WhopsBackend,
+    rotation_sweep, score_mappings_par, NativeBackend, SweepConfig, WhopsBackend,
 };
 use taskmap::mapping::MapConfig;
-use taskmap::metrics::native::batched_weighted_hops_native;
+use taskmap::metrics::native::{batched_weighted_hops_native, batched_weighted_hops_native_par};
+use taskmap::par::Parallelism;
 use taskmap::runtime::PjrtBackend;
-use taskmap::testutil::bench::{bench, bench_quick};
+use taskmap::testutil::bench::{bench, bench_quick, BenchRecorder};
 use taskmap::testutil::Rng;
 
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
 fn main() {
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
     println!("== rotation sweep / WeightedHops backends ==");
-    // Raw kernel comparison at the main artifact shape.
+
+    // Raw kernel comparison at the main artifact shape, across threads.
     let (r, e, d) = (36usize, 32_768usize, 6usize);
     let mut rng = Rng::new(1);
     let dims: Vec<f32> = (0..d).map(|_| 16.0).collect();
@@ -22,18 +30,37 @@ fn main() {
     let src: Vec<f32> = (0..r * e * d).map(|_| rng.below(16) as f32).collect();
     let dst: Vec<f32> = (0..r * e * d).map(|_| rng.below(16) as f32).collect();
     let w: Vec<f32> = (0..e).map(|_| 1.0).collect();
-    bench(&format!("native whops r={r} e={e} d={d}"), || {
-        batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d)
-    });
+    for threads in THREAD_COUNTS {
+        let result = bench(
+            &format!("whops_kernel/r={r}/e={e}/d={d}/threads={threads}"),
+            || {
+                batched_weighted_hops_native_par(
+                    &src,
+                    &dst,
+                    &w,
+                    &dims,
+                    &wrap,
+                    r,
+                    e,
+                    d,
+                    Parallelism::threads(threads),
+                )
+            },
+        );
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
     if let Some(backend) = PjrtBackend::try_default() {
-        bench_quick(&format!("pjrt   whops r={r} e={e} d={d}"), || {
+        let result = bench_quick(&format!("whops_kernel/r={r}/e={e}/d={d}/pjrt-artifact"), || {
             backend.eval_batch(&src, &dst, &w, &dims, &wrap, r, e, d)
         });
+        rec.record(&result, &[]);
     } else {
-        println!("(pjrt artifacts not built; run `make artifacts` for the PJRT rows)");
+        println!("(artifacts not built; run `make artifacts` for the artifact-backend rows)");
     }
 
-    // End-to-end sweep on a 16x16x16 stencil -> 4096-node torus.
+    // End-to-end sweep on a 16x16x16 stencil -> 4096-node torus, across
+    // thread counts. This is the headline number: the candidate fan-out +
+    // proc-partition memoization + scratch reuse, all at once.
     let g = stencil_graph(&[16, 16, 16], false, 1.0);
     let torus = Torus::torus(&[16, 16, 16]);
     let alloc = Allocation {
@@ -43,21 +70,39 @@ fn main() {
         ranks_per_node: 1,
     };
     let p = alloc.proc_coords();
-    let sweep = SweepConfig {
-        max_candidates: 12,
-        ..Default::default()
-    };
-    bench_quick("rotation_sweep 12 candidates, 4096 tasks (native)", || {
-        rotation_sweep(
-            &g,
-            &g.coords,
-            &p,
-            &alloc,
-            &MapConfig::default(),
-            &sweep,
-            &NativeBackend,
-        )
-    });
+    let mut sweep_ns: Vec<(usize, f64)> = Vec::new();
+    for threads in THREAD_COUNTS {
+        let sweep = SweepConfig {
+            max_candidates: 12,
+            threads,
+            ..Default::default()
+        };
+        let result = bench_quick(
+            &format!("rotation_sweep/tasks=4096/candidates=12/threads={threads}"),
+            || {
+                rotation_sweep(
+                    &g,
+                    &g.coords,
+                    &p,
+                    &alloc,
+                    &MapConfig::default(),
+                    &sweep,
+                    &NativeBackend,
+                )
+            },
+        );
+        rec.record(&result, &[("threads", threads as f64)]);
+        sweep_ns.push((threads, result.per_iter_ns()));
+    }
+    if let (Some((_, t1)), Some((_, t8))) = (
+        sweep_ns.iter().find(|(t, _)| *t == 1),
+        sweep_ns.iter().find(|(t, _)| *t == 8),
+    ) {
+        let speedup = t1 / t8;
+        println!("rotation_sweep speedup at 8 threads vs sequential: {speedup:.2}x");
+        rec.record_scalar("rotation_sweep/speedup_8t_vs_1t", "speedup", speedup);
+    }
+
     // Scoring only (mapping excluded) to separate partition vs evaluation.
     let mappings: Vec<Vec<u32>> = (0..12)
         .map(|s| {
@@ -67,12 +112,44 @@ fn main() {
             m
         })
         .collect();
-    bench("score 12 mappings x 11k edges (native)", || {
-        score_mappings(&g, &mappings, &alloc, &NativeBackend, 32768)
-    });
+    for threads in THREAD_COUNTS {
+        let result = bench(
+            &format!("score_mappings/candidates=12/edges=11k/threads={threads}"),
+            || {
+                score_mappings_par(
+                    &g,
+                    &mappings,
+                    &alloc,
+                    &NativeBackend,
+                    32768,
+                    Parallelism::threads(threads),
+                )
+            },
+        );
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
     if let Some(backend) = PjrtBackend::try_default() {
-        bench_quick("score 12 mappings x 11k edges (pjrt)", || {
-            score_mappings(&g, &mappings, &alloc, &backend, 32768)
+        let result = bench_quick("score_mappings/candidates=12/edges=11k/pjrt-artifact", || {
+            score_mappings_par(
+                &g,
+                &mappings,
+                &alloc,
+                &backend,
+                32768,
+                Parallelism::sequential(),
+            )
         });
+        rec.record(&result, &[]);
+    }
+
+    // Keep the sequential raw-kernel reference row for cross-commit
+    // comparability with the pre-parallel trajectory.
+    let result = bench(&format!("whops_kernel/r={r}/e={e}/d={d}/sequential-reference"), || {
+        batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d)
+    });
+    rec.record(&result, &[("threads", 1.0)]);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
     }
 }

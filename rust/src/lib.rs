@@ -19,6 +19,15 @@
 //!   no Python on the request path.
 //!
 //! Quick start: see `examples/quickstart.rs`; experiments: `repro --help`.
+//!
+//! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
+//! WeightedHops scoring) is parallel and allocation-free in steady state:
+//! [`par`] provides deterministic fork–join primitives (results are
+//! bit-identical to the sequential path at every thread count), and the
+//! `MjScratch`/`ScoreScratch` arenas are reused across candidates. Set
+//! `TASKMAP_THREADS=N` to bound (or with `N=1`, disable) the *default*
+//! parallelism — it sizes [`par::Parallelism::auto`]; call sites passing
+//! an explicit thread budget are unaffected.
 
 pub mod apps;
 pub mod coordinator;
@@ -27,6 +36,7 @@ pub mod machine;
 pub mod mapping;
 pub mod metrics;
 pub mod mj;
+pub mod par;
 pub mod runtime;
 pub mod sfc;
 pub mod simulate;

@@ -21,7 +21,12 @@ fn usage() -> ! {
            --seed N      allocation seed (default 42)\n\
            --native      force the native WeightedHops backend (skip PJRT)\n\
            --out DIR     also write TSV tables into DIR\n\
-           --addr A      serve: bind address (default 127.0.0.1:7777)",
+           --addr A      serve: bind address (default 127.0.0.1:7777)\n\
+         \n\
+         env:\n\
+           TASKMAP_THREADS=N  bound the mapper's default parallelism\n\
+                              (1 = sequential; results are identical\n\
+                              at every setting)",
         experiments::ALL.join(", ")
     );
     std::process::exit(2);

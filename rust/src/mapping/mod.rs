@@ -8,6 +8,17 @@
 //! * [`transforms`] — bandwidth scaling, Z2_3 box transform, axis dropping,
 //! * [`kmeans`] — core-subset selection for the `tnum < pnum` case,
 //! * [`pipeline`] — the named Z2 strategy bundles (Z2_1/Z2_2/Z2_3, +E).
+//!
+//! # Hot-path structure
+//!
+//! The rotation sweep evaluates up to `td!·pd!` candidates, but candidates
+//! sharing a processor-axis permutation share an identical processor-side
+//! partition. [`prepare_proc_partition`] computes that proc side once per
+//! distinct permutation (kept in a [`ProcPartitionCache`]) and
+//! [`map_tasks_with_proc`] joins each candidate's task partition against
+//! it — turning up to 6× redundant processor partitions into cache hits.
+//! Both halves run through the [`MjScratch`]/[`MappingScratch`] arenas so
+//! steady-state mapping allocates only its output vector.
 
 pub mod kmeans;
 pub mod pipeline;
@@ -16,9 +27,12 @@ pub mod shift;
 pub mod transforms;
 
 use crate::geom::Coords;
-use crate::mj::{mj_partition, MjConfig};
+use crate::mj::{mj_partition_axes_into, MjConfig, MjScratch};
+use crate::par::Parallelism;
 use crate::sfc::hilbert::hilbert_sort_f64;
 use crate::sfc::PartOrdering;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Configuration for Algorithm 1.
 #[derive(Clone, Copy, Debug)]
@@ -63,6 +77,30 @@ impl MapConfig {
     }
 }
 
+/// Chop a coordinate set into `np` balanced parts along the Hilbert curve,
+/// writing part ids into `part`.
+fn hilbert_partition_into(coords: &Coords, np: usize, part: &mut Vec<u32>) {
+    let bits = (128 / coords.dim().max(1)).min(16) as u32;
+    let order = hilbert_sort_f64(coords, bits);
+    let n = coords.len();
+    let base = n / np;
+    let extra = n % np;
+    part.clear();
+    part.resize(n, 0);
+    let mut pos = 0usize;
+    for p in 0..np {
+        let len = base + usize::from(p < extra);
+        for _ in 0..len {
+            part[order[pos]] = p as u32;
+            pos += 1;
+        }
+    }
+}
+
+fn is_identity(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
 /// Partition a coordinate set into `np` parts under the given ordering.
 /// `Hilbert` ranks points along the Hilbert curve and chops the order into
 /// balanced chunks; everything else is an MJ bisection numbering.
@@ -72,25 +110,227 @@ pub fn partition_ordered(
     ordering: PartOrdering,
     cfg: &MapConfig,
 ) -> Vec<u32> {
+    let ident: Vec<usize> = (0..coords.dim()).collect();
+    let mut scratch = MjScratch::new();
+    let mut part = Vec::new();
+    partition_ordered_axes_into(
+        coords,
+        &ident,
+        np,
+        ordering,
+        cfg,
+        Parallelism::auto(),
+        &mut scratch,
+        &mut part,
+    );
+    part
+}
+
+/// [`partition_ordered`] through an axis permutation, into reused buffers.
+/// Equivalent to `partition_ordered(&coords.permute_axes(perm), ..)` but
+/// (for the MJ orderings) without materializing the permuted coordinates.
+#[allow(clippy::too_many_arguments)]
+pub fn partition_ordered_axes_into(
+    coords: &Coords,
+    perm: &[usize],
+    np: usize,
+    ordering: PartOrdering,
+    cfg: &MapConfig,
+    par: Parallelism,
+    scratch: &mut MjScratch,
+    part: &mut Vec<u32>,
+) {
     match ordering {
         PartOrdering::Hilbert => {
-            let bits = (128 / coords.dim().max(1)).min(16) as u32;
-            let order = hilbert_sort_f64(coords, bits);
-            let n = coords.len();
-            let base = n / np;
-            let extra = n % np;
-            let mut part = vec![0u32; n];
-            let mut pos = 0usize;
-            for p in 0..np {
-                let len = base + usize::from(p < extra);
-                for _ in 0..len {
-                    part[order[pos]] = p as u32;
-                    pos += 1;
-                }
+            // The Hilbert index depends on axis order, so the permuted view
+            // must be materialized here (rare path: no Z2 strategy uses it).
+            if is_identity(perm) {
+                hilbert_partition_into(coords, np, part);
+            } else {
+                hilbert_partition_into(&coords.permute_axes(perm), np, part);
             }
-            part
         }
-        _ => mj_partition(coords, np, &cfg.mj(ordering)),
+        _ => mj_partition_axes_into(coords, perm, np, &cfg.mj(ordering), par, scratch, part),
+    }
+}
+
+/// The processor side of Algorithm 1, precomputed for a fixed
+/// `(pcoords, pperm, tnum, cfg)`: the partition of the (possibly
+/// subset-restricted) processor coordinates, plus the closest-subset rank
+/// selection when `tnum < pnum`. Candidates of a rotation sweep that share
+/// a processor-axis permutation share this value — see
+/// [`ProcPartitionCache`].
+#[derive(Clone, Debug)]
+pub struct ProcPartition {
+    /// `Some(subset)` iff `tnum < pnum`: global rank ids of the compact
+    /// k-means subset actually used (Section 4.2 case 3).
+    subset: Option<Vec<usize>>,
+    /// Part id per (subset) rank, `np` parts.
+    proc_part: Vec<u32>,
+    /// Number of parts both sides are split into.
+    np: usize,
+}
+
+impl ProcPartition {
+    pub fn np(&self) -> usize {
+        self.np
+    }
+}
+
+/// Compute the processor side for mapping `tnum` tasks onto `pcoords`
+/// viewed through the axis permutation `pperm`.
+pub fn prepare_proc_partition(
+    pcoords: &Coords,
+    pperm: &[usize],
+    tnum: usize,
+    cfg: &MapConfig,
+    par: Parallelism,
+    scratch: &mut MjScratch,
+) -> ProcPartition {
+    let pnum = pcoords.len();
+    assert!(tnum > 0 && pnum > 0);
+    let mut proc_part = Vec::new();
+    if tnum < pnum {
+        // Section 4.2 case 3: choose the most compact tnum-rank subset,
+        // then partition it. k-means distances sum per-axis, so the subset
+        // is computed on the materialized permuted view to keep results
+        // identical to mapping `pcoords.permute_axes(pperm)` directly.
+        let permuted = pcoords.permute_axes(pperm);
+        let subset = kmeans::closest_subset(&permuted, tnum, 20);
+        let sub = permuted.gather(&subset);
+        let ident: Vec<usize> = (0..sub.dim()).collect();
+        partition_ordered_axes_into(
+            &sub,
+            &ident,
+            tnum,
+            cfg.proc_ordering,
+            cfg,
+            par,
+            scratch,
+            &mut proc_part,
+        );
+        ProcPartition {
+            subset: Some(subset),
+            proc_part,
+            np: tnum,
+        }
+    } else {
+        partition_ordered_axes_into(
+            pcoords,
+            pperm,
+            pnum,
+            cfg.proc_ordering,
+            cfg,
+            par,
+            scratch,
+            &mut proc_part,
+        );
+        ProcPartition {
+            subset: None,
+            proc_part,
+            np: pnum,
+        }
+    }
+}
+
+/// Reusable buffers for the task side of [`map_tasks_with_proc`].
+#[derive(Default)]
+pub struct MappingScratch {
+    mj: MjScratch,
+    task_part: Vec<u32>,
+}
+
+impl MappingScratch {
+    pub fn new() -> Self {
+        MappingScratch::default()
+    }
+}
+
+/// Algorithm 1 against a precomputed processor side: partition the task
+/// coordinates (viewed through `tperm`) into `proc.np()` parts and join on
+/// part number. Requires `tcoords.len() >= proc.np()`.
+pub fn map_tasks_with_proc(
+    tcoords: &Coords,
+    tperm: &[usize],
+    proc: &ProcPartition,
+    cfg: &MapConfig,
+    par: Parallelism,
+    scratch: &mut MappingScratch,
+) -> Vec<u32> {
+    let np = proc.np;
+    partition_ordered_axes_into(
+        tcoords,
+        tperm,
+        np,
+        cfg.task_ordering,
+        cfg,
+        par,
+        &mut scratch.mj,
+        &mut scratch.task_part,
+    );
+    let mapped = get_mapping_arrays(&scratch.task_part, &proc.proc_part, np);
+    match &proc.subset {
+        Some(subset) => mapped
+            .into_iter()
+            .map(|r| subset[r as usize] as u32)
+            .collect(),
+        None => mapped,
+    }
+}
+
+/// Memoizes [`ProcPartition`]s per processor-axis permutation, for a fixed
+/// `(pcoords, tnum, cfg)` context (one rotation sweep). Keys are the
+/// permutation vectors; values are shared via `Arc` so concurrent candidate
+/// workers borrow the same partition. Concurrent misses may compute the
+/// same entry twice — results are deterministic, so either wins.
+#[derive(Default)]
+pub struct ProcPartitionCache {
+    entries: Mutex<HashMap<Vec<usize>, Arc<ProcPartition>>>,
+}
+
+impl ProcPartitionCache {
+    pub fn new() -> Self {
+        ProcPartitionCache::default()
+    }
+
+    pub fn get(&self, pperm: &[usize]) -> Option<Arc<ProcPartition>> {
+        self.entries.lock().unwrap().get(pperm).cloned()
+    }
+
+    pub fn insert(&self, pperm: Vec<usize>, proc: ProcPartition) -> Arc<ProcPartition> {
+        let arc = Arc::new(proc);
+        self.entries
+            .lock()
+            .unwrap()
+            .entry(pperm)
+            .or_insert_with(|| arc.clone())
+            .clone()
+    }
+
+    /// Lookup, computing and caching on miss (the computation runs outside
+    /// the lock).
+    pub fn get_or_compute(
+        &self,
+        pcoords: &Coords,
+        pperm: &[usize],
+        tnum: usize,
+        cfg: &MapConfig,
+        par: Parallelism,
+        scratch: &mut MjScratch,
+    ) -> Arc<ProcPartition> {
+        if let Some(hit) = self.get(pperm) {
+            return hit;
+        }
+        let computed = prepare_proc_partition(pcoords, pperm, tnum, cfg, par, scratch);
+        self.insert(pperm.to_vec(), computed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -105,22 +345,29 @@ pub fn partition_ordered(
 ///    k-means (Section 4.2 case 3) and the one-to-one mapping runs within
 ///    the subset; remaining ranks are idle.
 pub fn map_tasks(tcoords: &Coords, pcoords: &Coords, cfg: &MapConfig) -> Vec<u32> {
+    map_tasks_par(tcoords, pcoords, cfg, Parallelism::auto())
+}
+
+/// [`map_tasks`] with an explicit thread budget (the result does not depend
+/// on the budget).
+pub fn map_tasks_par(
+    tcoords: &Coords,
+    pcoords: &Coords,
+    cfg: &MapConfig,
+    par: Parallelism,
+) -> Vec<u32> {
     let tnum = tcoords.len();
     let pnum = pcoords.len();
     assert!(tnum > 0 && pnum > 0);
-    if tnum < pnum {
-        let subset = kmeans::closest_subset(pcoords, tnum, 20);
-        let sub_coords = pcoords.gather(&subset);
-        let sub_map = map_tasks(tcoords, &sub_coords, cfg);
-        return sub_map
-            .into_iter()
-            .map(|r| subset[r as usize] as u32)
-            .collect();
-    }
-    let np = pnum;
-    let task_part = partition_ordered(tcoords, np, cfg.task_ordering, cfg);
-    let proc_part = partition_ordered(pcoords, np, cfg.proc_ordering, cfg);
-    get_mapping_arrays(&task_part, &proc_part, np)
+    let mut mj = MjScratch::new();
+    let pperm: Vec<usize> = (0..pcoords.dim()).collect();
+    let proc = prepare_proc_partition(pcoords, &pperm, tnum, cfg, par, &mut mj);
+    let mut scratch = MappingScratch {
+        mj,
+        task_part: Vec::new(),
+    };
+    let tperm: Vec<usize> = (0..tcoords.dim()).collect();
+    map_tasks_with_proc(tcoords, &tperm, &proc, cfg, par, &mut scratch)
 }
 
 /// GetMappingArrays (Algorithm 1): join task parts and processor parts on
@@ -262,5 +509,48 @@ mod tests {
         let a = map_tasks(&t, &p, &MapConfig::default());
         let b = map_tasks(&t, &p, &MapConfig::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn memoized_proc_side_matches_direct_mapping() {
+        // map_tasks_with_proc over a cached proc partition must reproduce
+        // map_tasks on materialized permuted coordinates — for all three
+        // cardinality cases.
+        let cases: Vec<(Coords, Coords)> = vec![
+            (grid(&[8, 8]), grid(&[4, 4, 4])), // tnum == pnum
+            (grid(&[16, 8]), grid(&[4, 4])),   // tnum >  pnum
+            (grid(&[4, 4]), grid(&[8, 8])),    // tnum <  pnum
+        ];
+        let cfg = MapConfig::default();
+        for (t, p) in &cases {
+            // One cache per (pcoords, tnum, cfg) context — that is its
+            // contract (one rotation sweep).
+            let cache = ProcPartitionCache::new();
+            let tperm: Vec<usize> = (0..t.dim()).rev().collect();
+            let pperm: Vec<usize> = (0..p.dim()).rev().collect();
+            let mut mj = MjScratch::new();
+            let proc = cache.get_or_compute(
+                p,
+                &pperm,
+                t.len(),
+                &cfg,
+                Parallelism::sequential(),
+                &mut mj,
+            );
+            // Second lookup must hit.
+            assert!(cache.get(&pperm).is_some());
+            assert_eq!(cache.len(), 1);
+            let mut scratch = MappingScratch::new();
+            let got = map_tasks_with_proc(
+                t,
+                &tperm,
+                &proc,
+                &cfg,
+                Parallelism::sequential(),
+                &mut scratch,
+            );
+            let want = map_tasks(&t.permute_axes(&tperm), &p.permute_axes(&pperm), &cfg);
+            assert_eq!(got, want);
+        }
     }
 }

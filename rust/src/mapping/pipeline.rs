@@ -12,6 +12,10 @@
 //!
 //! The "+E" architecture optimization (ignore the BG/Q E dimension when
 //! partitioning processors) is `drop_proc_dims: vec![4]`.
+//!
+//! Strategies with `max_rotations > 1` run the parallel rotation sweep
+//! (`Z2Config::threads`, 0 = auto); the chosen mapping is bit-identical at
+//! every thread count, so strategy outputs stay exactly reproducible.
 
 use super::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use super::shift::shift_torus_coords;
@@ -40,6 +44,10 @@ pub struct Z2Config {
     pub shift: bool,
     /// Rotation-sweep candidate cap (1 = identity rotation only).
     pub max_rotations: usize,
+    /// Worker threads for the rotation sweep: `0` = auto
+    /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = sequential.
+    /// The mapping is bit-identical at every thread count.
+    pub threads: usize,
 }
 
 impl Z2Config {
@@ -54,6 +62,7 @@ impl Z2Config {
             drop_proc_dims: vec![],
             shift: true,
             max_rotations: 36,
+            threads: 0,
         }
     }
 
@@ -131,6 +140,7 @@ pub fn z2_map(
     }
     let sweep = SweepConfig {
         max_candidates: cfg.max_rotations,
+        threads: cfg.threads,
         ..Default::default()
     };
     rotation_sweep(graph, tcoords, &pcoords, alloc, &map_cfg, &sweep, backend).task_to_rank

@@ -4,23 +4,47 @@
 //! are generated and the one with the lowest WeightedHops (Eqn. 3) wins.
 //!
 //! In the paper each MPI process computes one rotation and an Allreduce
-//! picks the winner; here the sweep is a batch: candidate mappings are
-//! scored together by the `batched_weighted_hops` kernel — either the AOT
-//! PJRT artifact (`runtime::PjrtBackend`) or the bit-equivalent native
+//! picks the winner; here the sweep fans the candidates out across a
+//! [`crate::par`] thread budget instead: each worker maps and scores its
+//! candidates with its own reused scratch arenas, and the reduction
+//! (argmin with index tie-break over an index-addressed score vector) is
+//! deterministic, so the chosen candidate, the scores, and the returned
+//! mapping are **bit-identical to the sequential path at every thread
+//! count**.
+//!
+//! Per-candidate cost is kept allocation-free in steady state:
+//! * the processor-side partition is memoized per distinct processor-axis
+//!   permutation (candidates share up to `td!` of them) in a
+//!   [`ProcPartitionCache`],
+//! * task partitions run through per-worker [`MappingScratch`] arenas and
+//!   the zero-copy permuted-axes MJ entry point,
+//! * scoring streams edge chunks through per-worker [`ScoreScratch`]
+//!   buffers against a shared [`BatchScorer`] (per-rank router coordinates
+//!   computed once per sweep, not once per candidate).
+//!
+//! Scoring runs on the `batched_weighted_hops` kernel — either the AOT
+//! artifact runtime (`runtime::PjrtBackend`) or the bit-equivalent native
 //! fallback.
 
-use super::MapConfig;
+use super::{
+    map_tasks_with_proc, MapConfig, MappingScratch, ProcPartitionCache,
+};
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::machine::Allocation;
-use crate::metrics::native::batched_weighted_hops_native;
+use crate::metrics::native::batched_weighted_hops_native_par;
+use crate::mj::MjScratch;
+use crate::par::{self, Parallelism};
 
 /// Backend for batched WeightedHops evaluation. Implementations: the
-/// in-process native evaluator (below) and the PJRT artifact executor
-/// (`crate::runtime::PjrtBackend`).
-pub trait WhopsBackend {
+/// in-process native evaluator (below) and the artifact executor
+/// (`crate::runtime::PjrtBackend`). Backends are shared across sweep
+/// workers, hence the `Sync` bound; implementations must be safe to call
+/// concurrently.
+pub trait WhopsBackend: Sync {
     /// `src`/`dst`: `[r*e*d]` candidate-major coordinate arrays; `w`: `[e]`;
     /// `dims`/`wrap`: `[d]`. Returns one score per candidate.
+    #[allow(clippy::too_many_arguments)]
     fn eval_batch(
         &self,
         src: &[f32],
@@ -38,7 +62,10 @@ pub trait WhopsBackend {
     }
 }
 
-/// Pure-rust backend (always available; arbiter in tests).
+/// Pure-rust backend (always available; arbiter in tests). Multi-candidate
+/// batches fan out across the auto thread budget; single-candidate calls
+/// (the per-worker sweep path) stay on the sequential row kernel. Either
+/// way the scores are bit-identical.
 pub struct NativeBackend;
 
 impl WhopsBackend for NativeBackend {
@@ -53,7 +80,17 @@ impl WhopsBackend for NativeBackend {
         e: usize,
         d: usize,
     ) -> Vec<f32> {
-        batched_weighted_hops_native(src, dst, w, dims, wrap, r, e, d)
+        batched_weighted_hops_native_par(
+            src,
+            dst,
+            w,
+            dims,
+            wrap,
+            r,
+            e,
+            d,
+            Parallelism::auto(),
+        )
     }
 }
 
@@ -86,6 +123,10 @@ pub struct SweepConfig {
     /// Edge-chunk size for batched scoring (bounds peak memory and matches
     /// the AOT artifact padding).
     pub chunk_edges: usize,
+    /// Worker threads for the candidate fan-out: `0` = auto
+    /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = the
+    /// sequential reference path. The result is identical either way.
+    pub threads: usize,
 }
 
 impl Default for SweepConfig {
@@ -93,6 +134,16 @@ impl Default for SweepConfig {
         SweepConfig {
             max_candidates: 36,
             chunk_edges: 32768,
+            threads: 0,
+        }
+    }
+}
+
+impl SweepConfig {
+    fn parallelism(&self) -> Parallelism {
+        match self.threads {
+            0 => Parallelism::auto(),
+            n => Parallelism::threads(n),
         }
     }
 }
@@ -128,8 +179,125 @@ pub fn candidate_rotations(td: usize, pd: usize, cap: usize) -> Vec<(Vec<usize>,
     out
 }
 
+/// Reusable per-worker buffers for [`BatchScorer::score_one`]: the chunked
+/// candidate-major coordinate/weight arrays handed to the kernel. Reuse
+/// across candidates; never share between concurrent workers.
+#[derive(Default)]
+pub struct ScoreScratch {
+    src: Vec<f32>,
+    dst: Vec<f32>,
+    w: Vec<f32>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> Self {
+        ScoreScratch::default()
+    }
+}
+
+/// Per-sweep scoring context: everything that depends only on
+/// `(graph, alloc, chunk_edges)` — per-rank router coordinates, torus
+/// extents/wrap flags — computed once and shared (immutably) by all
+/// candidate workers.
+pub struct BatchScorer<'a> {
+    graph: &'a TaskGraph,
+    dims: Vec<f32>,
+    wrap: Vec<f32>,
+    /// Per-rank router coordinates, f32, rank-major.
+    rank_coords: Vec<f32>,
+    d: usize,
+    chunk: usize,
+}
+
+impl<'a> BatchScorer<'a> {
+    pub fn new(graph: &'a TaskGraph, alloc: &Allocation, chunk_edges: usize) -> Self {
+        let d = alloc.torus.dim();
+        let dims: Vec<f32> = alloc.torus.sizes.iter().map(|&s| s as f32).collect();
+        let wrap: Vec<f32> = alloc
+            .torus
+            .wrap
+            .iter()
+            .map(|&w| if w { 1.0 } else { 0.0 })
+            .collect();
+        let nranks = alloc.num_ranks();
+        let mut rank_coords = vec![0f32; nranks * d];
+        let mut buf = vec![0usize; d];
+        for rank in 0..nranks {
+            alloc
+                .torus
+                .coords_into(alloc.core_router[rank] as usize, &mut buf);
+            for k in 0..d {
+                rank_coords[rank * d + k] = buf[k] as f32;
+            }
+        }
+        BatchScorer {
+            graph,
+            dims,
+            wrap,
+            rank_coords,
+            d,
+            chunk: chunk_edges.max(1),
+        }
+    }
+
+    /// WeightedHops of one mapping: f64 accumulation of the backend's
+    /// per-chunk f32 sums. For backends whose per-row result is
+    /// independent of the batch shape (the native kernel), this is
+    /// bit-identical to scoring the mapping as one row of a candidate
+    /// batch with the same `chunk_edges`. The artifact runtime picks its
+    /// padded shape per request, so its f32 partial-sum grouping — and
+    /// thus the low-order bits — can differ between r=1 and batched
+    /// calls (both stay within the kernel's f32 tolerance).
+    pub fn score_one(
+        &self,
+        mapping: &[u32],
+        backend: &dyn WhopsBackend,
+        scratch: &mut ScoreScratch,
+    ) -> f64 {
+        let d = self.d;
+        let chunk = self.chunk;
+        let ne = self.graph.edges.len();
+        scratch.src.resize(chunk * d, 0.0);
+        scratch.dst.resize(chunk * d, 0.0);
+        scratch.w.resize(chunk, 0.0);
+        let mut total = 0f64;
+        let mut lo = 0usize;
+        while lo < ne {
+            let hi = (lo + chunk).min(ne);
+            let len = hi - lo;
+            // Zero-fill the padding region (w=0 edges contribute nothing;
+            // padding coords can stay stale for the same reason).
+            scratch.w[len..].fill(0.0);
+            for (k, e) in self.graph.edges[lo..hi].iter().enumerate() {
+                scratch.w[k] = e.w as f32;
+                let ra = mapping[e.u as usize] as usize;
+                let rb = mapping[e.v as usize] as usize;
+                scratch.src[k * d..(k + 1) * d]
+                    .copy_from_slice(&self.rank_coords[ra * d..(ra + 1) * d]);
+                scratch.dst[k * d..(k + 1) * d]
+                    .copy_from_slice(&self.rank_coords[rb * d..(rb + 1) * d]);
+            }
+            let part = backend.eval_batch(
+                &scratch.src,
+                &scratch.dst,
+                &scratch.w,
+                &self.dims,
+                &self.wrap,
+                1,
+                chunk,
+                d,
+            );
+            total += part[0] as f64;
+            lo = hi;
+        }
+        total
+    }
+}
+
 /// Score a set of candidate mappings by WeightedHops on the allocation's
 /// network. Returns f64 accumulations of the backend's per-chunk f32 sums.
+/// Mappings are scored concurrently under the auto thread budget; the
+/// scores do not depend on the budget.
 pub fn score_mappings(
     graph: &TaskGraph,
     mappings: &[Vec<u32>],
@@ -137,67 +305,36 @@ pub fn score_mappings(
     backend: &dyn WhopsBackend,
     chunk_edges: usize,
 ) -> Vec<f64> {
-    let r = mappings.len();
-    let d = alloc.torus.dim();
-    let ne = graph.edges.len();
-    let dims: Vec<f32> = alloc.torus.sizes.iter().map(|&s| s as f32).collect();
-    let wrap: Vec<f32> = alloc
-        .torus
-        .wrap
-        .iter()
-        .map(|&w| if w { 1.0 } else { 0.0 })
-        .collect();
-    // Per-rank router coordinates, f32, rank-major.
-    let nranks = alloc.num_ranks();
-    let mut rank_coords = vec![0f32; nranks * d];
-    let mut buf = vec![0usize; d];
-    for rank in 0..nranks {
-        alloc
-            .torus
-            .coords_into(alloc.core_router[rank] as usize, &mut buf);
-        for k in 0..d {
-            rank_coords[rank * d + k] = buf[k] as f32;
-        }
-    }
-    let mut scores = vec![0f64; r];
-    let chunk = chunk_edges.max(1);
-    let mut src = vec![0f32; r * chunk * d];
-    let mut dst = vec![0f32; r * chunk * d];
-    let mut w = vec![0f32; chunk];
-    let mut lo = 0usize;
-    while lo < ne {
-        let hi = (lo + chunk).min(ne);
-        let len = hi - lo;
-        // Zero-fill the padding region (w=0 edges contribute nothing).
-        w[len..].fill(0.0);
-        for (k, e) in graph.edges[lo..hi].iter().enumerate() {
-            w[k] = e.w as f32;
-        }
-        for (ri, m) in mappings.iter().enumerate() {
-            let base = ri * chunk * d;
-            for (k, e) in graph.edges[lo..hi].iter().enumerate() {
-                let ra = m[e.u as usize] as usize;
-                let rb = m[e.v as usize] as usize;
-                src[base + k * d..base + (k + 1) * d]
-                    .copy_from_slice(&rank_coords[ra * d..(ra + 1) * d]);
-                dst[base + k * d..base + (k + 1) * d]
-                    .copy_from_slice(&rank_coords[rb * d..(rb + 1) * d]);
-            }
-            // Padding coords can stay stale: their weights are zero.
-        }
-        let part = backend.eval_batch(&src, &dst, &w, &dims, &wrap, r, chunk, d);
-        for (ri, &p) in part.iter().enumerate() {
-            scores[ri] += p as f64;
-        }
-        lo = hi;
-    }
-    scores
+    score_mappings_par(
+        graph,
+        mappings,
+        alloc,
+        backend,
+        chunk_edges,
+        Parallelism::auto(),
+    )
+}
+
+/// [`score_mappings`] with an explicit thread budget.
+pub fn score_mappings_par(
+    graph: &TaskGraph,
+    mappings: &[Vec<u32>],
+    alloc: &Allocation,
+    backend: &dyn WhopsBackend,
+    chunk_edges: usize,
+    par: Parallelism,
+) -> Vec<f64> {
+    let scorer = BatchScorer::new(graph, alloc, chunk_edges);
+    par::map_with(par, mappings, ScoreScratch::new, |scratch, _i, m| {
+        scorer.score_one(m, backend, scratch)
+    })
 }
 
 /// The full rotation sweep: generate candidates, map, score, pick the best.
 /// `pcoords` are the (possibly transformed) processor coordinates used for
 /// partitioning; scoring always uses the true router coordinates from
-/// `alloc`.
+/// `alloc`. Candidates fan out across `sweep.threads` workers; the result
+/// is bit-identical at every thread count.
 pub fn rotation_sweep(
     graph: &TaskGraph,
     tcoords: &Coords,
@@ -207,14 +344,50 @@ pub fn rotation_sweep(
     sweep: &SweepConfig,
     backend: &dyn WhopsBackend,
 ) -> SweepResult {
+    let par = sweep.parallelism();
     let candidates = candidate_rotations(tcoords.dim(), pcoords.dim(), sweep.max_candidates);
-    let mappings: Vec<Vec<u32>> = candidates
-        .iter()
-        .map(|(tp, pp)| {
-            super::map_tasks(&tcoords.permute_axes(tp), &pcoords.permute_axes(pp), map_cfg)
-        })
-        .collect();
-    let scores = score_mappings(graph, &mappings, alloc, backend, sweep.chunk_edges);
+    let tnum = tcoords.len();
+
+    // Phase 1: the processor-side partition depends only on the proc
+    // permutation, so compute it once per distinct permutation (in
+    // parallel) and memoize.
+    let mut distinct: Vec<Vec<usize>> = Vec::new();
+    for (_, pp) in &candidates {
+        if !distinct.iter().any(|q| q == pp) {
+            distinct.push(pp.clone());
+        }
+    }
+    let cache = ProcPartitionCache::new();
+    par::map_with(par, &distinct, MjScratch::new, |scratch, _i, pp| {
+        cache.get_or_compute(pcoords, pp, tnum, map_cfg, Parallelism::sequential(), scratch);
+    });
+
+    // Phase 2: per-candidate task partition + join + score, fanned out with
+    // per-worker scratch arenas. Within a candidate the work is sequential:
+    // the candidate-level fan-out already saturates the budget.
+    let scorer = BatchScorer::new(graph, alloc, sweep.chunk_edges);
+    let results: Vec<(Vec<u32>, f64)> = par::map_with(
+        par,
+        &candidates,
+        || (MappingScratch::new(), ScoreScratch::new()),
+        |(map_scratch, score_scratch), _i, (tp, pp)| {
+            let proc = cache.get(pp).expect("proc partition precomputed in phase 1");
+            let mapping = map_tasks_with_proc(
+                tcoords,
+                tp,
+                &proc,
+                map_cfg,
+                Parallelism::sequential(),
+                map_scratch,
+            );
+            let score = scorer.score_one(&mapping, backend, score_scratch);
+            (mapping, score)
+        },
+    );
+
+    // Deterministic reduction: argmin with index tie-break over the
+    // index-addressed score vector.
+    let scores: Vec<f64> = results.iter().map(|(_, s)| *s).collect();
     let chosen = scores
         .iter()
         .enumerate()
@@ -222,7 +395,7 @@ pub fn rotation_sweep(
         .map(|(i, _)| i)
         .unwrap();
     SweepResult {
-        task_to_rank: mappings.into_iter().nth(chosen).unwrap(),
+        task_to_rank: results.into_iter().nth(chosen).unwrap().0,
         chosen,
         scores,
         candidates,
@@ -291,6 +464,34 @@ mod tests {
     }
 
     #[test]
+    fn parallel_scoring_bit_identical() {
+        let g = stencil_graph(&[8, 8], false, 1.5);
+        let alloc = line_alloc(64);
+        let mappings: Vec<Vec<u32>> = (0..9)
+            .map(|s| (0..64u32).map(|i| (i * 7 + s) % 64).collect())
+            .collect();
+        let seq = score_mappings_par(
+            &g,
+            &mappings,
+            &alloc,
+            &NativeBackend,
+            128,
+            Parallelism::sequential(),
+        );
+        for threads in [2, 8] {
+            let par = score_mappings_par(
+                &g,
+                &mappings,
+                &alloc,
+                &NativeBackend,
+                128,
+                Parallelism::threads(threads),
+            );
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn sweep_picks_minimum() {
         // 2D tasks onto a 2D grid of ranks: the sweep must return the
         // candidate whose score equals the min of all scores.
@@ -344,5 +545,42 @@ mod tests {
         );
         let max = res.scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         assert!(res.scores[res.chosen] < max);
+    }
+
+    #[test]
+    fn sweep_parallel_bit_identical_and_matches_direct_mapping() {
+        let g = stencil_graph(&[4, 8], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[8, 4]),
+            core_router: (0..32u32).collect(),
+            core_node: (0..32u32).collect(),
+            ranks_per_node: 1,
+        };
+        let p = alloc.proc_coords();
+        let map_cfg = MapConfig {
+            longest_dim: false, // make rotation matter
+            ..Default::default()
+        };
+        let mk = |threads| SweepConfig {
+            threads,
+            ..Default::default()
+        };
+        let seq = rotation_sweep(&g, &g.coords, &p, &alloc, &map_cfg, &mk(1), &NativeBackend);
+        for threads in [2, 8] {
+            let par =
+                rotation_sweep(&g, &g.coords, &p, &alloc, &map_cfg, &mk(threads), &NativeBackend);
+            assert_eq!(par.chosen, seq.chosen, "threads={threads}");
+            assert_eq!(par.scores, seq.scores, "threads={threads}");
+            assert_eq!(par.task_to_rank, seq.task_to_rank, "threads={threads}");
+        }
+        // The memoized proc-side path must agree with mapping materialized
+        // permuted coordinates directly.
+        let (tp, pp) = &seq.candidates[seq.chosen];
+        let direct = super::super::map_tasks(
+            &g.coords.permute_axes(tp),
+            &p.permute_axes(pp),
+            &map_cfg,
+        );
+        assert_eq!(seq.task_to_rank, direct);
     }
 }

@@ -2,8 +2,25 @@
 //!
 //! Same contract as `python/compile/model.py::batched_weighted_hops`: f32
 //! arithmetic, identical padding semantics (zero-weight edges and size-1
-//! torus dims contribute nothing). Used as (a) the arbiter the PJRT path is
-//! tested against, and (b) the fallback when no artifact fits a request.
+//! torus dims contribute nothing). Used as (a) the arbiter the artifact
+//! path is tested against, and (b) the fallback when no artifact fits a
+//! request.
+//!
+//! Candidates are independent rows, so the batch parallelizes across them
+//! without changing any row's f32 accumulation order:
+//! [`batched_weighted_hops_native_par`] is bit-identical to the sequential
+//! kernel at every thread count. [`NativeBackend`]
+//! (`mapping::rotations::NativeBackend`) routes through it with the auto
+//! budget; large multi-candidate batches (e.g. the raw-kernel benches and
+//! `score_mappings` on pre-built mapping sets) pick the parallelism up for
+//! free, while single-candidate calls from an already-fanned-out rotation
+//! sweep stay on the sequential row kernel.
+
+use crate::par::{self, Parallelism};
+
+/// Below this much work (`r * e` weighted edge evaluations) the batch is
+/// not worth fanning out.
+const PAR_MIN_WORK: usize = 1 << 14;
 
 /// Batched WeightedHops over flat arrays.
 ///
@@ -13,6 +30,7 @@
 ///
 /// Returns one f32 sum per candidate, accumulated in f32 to mirror the
 /// kernel exactly.
+#[allow(clippy::too_many_arguments)]
 pub fn batched_weighted_hops_native(
     src: &[f32],
     dst: &[f32],
@@ -23,62 +41,14 @@ pub fn batched_weighted_hops_native(
     e: usize,
     d: usize,
 ) -> Vec<f32> {
-    assert_eq!(src.len(), r * e * d);
-    assert_eq!(dst.len(), r * e * d);
-    assert_eq!(w.len(), e);
-    assert_eq!(dims.len(), d);
-    assert_eq!(wrap.len(), d);
-    // Dispatch to const-D bodies for the common dimensionalities so LLVM
-    // can unroll + vectorize the inner loop (EXPERIMENTS.md §Perf: ~3x on
-    // the rotation-sweep hot path vs the dynamic-D loop).
-    match d {
-        1 => whops_const::<1>(src, dst, w, dims, wrap, r, e),
-        2 => whops_const::<2>(src, dst, w, dims, wrap, r, e),
-        3 => whops_const::<3>(src, dst, w, dims, wrap, r, e),
-        4 => whops_const::<4>(src, dst, w, dims, wrap, r, e),
-        5 => whops_const::<5>(src, dst, w, dims, wrap, r, e),
-        6 => whops_const::<6>(src, dst, w, dims, wrap, r, e),
-        _ => whops_dyn(src, dst, w, dims, wrap, r, e, d),
-    }
+    batched_weighted_hops_native_par(src, dst, w, dims, wrap, r, e, d, Parallelism::sequential())
 }
 
-fn whops_const<const D: usize>(
-    src: &[f32],
-    dst: &[f32],
-    w: &[f32],
-    dims: &[f32],
-    wrap: &[f32],
-    r: usize,
-    e: usize,
-) -> Vec<f32> {
-    let mut dims_a = [0f32; D];
-    let mut mesh = [false; D];
-    for k in 0..D {
-        dims_a[k] = dims[k];
-        mesh[k] = wrap[k] <= 0.0;
-    }
-    let mut out = vec![0f32; r];
-    for (ri, o) in out.iter_mut().enumerate() {
-        let base = ri * e * D;
-        let s = &src[base..base + e * D];
-        let t = &dst[base..base + e * D];
-        let mut acc = 0f32;
-        for ei in 0..e {
-            let off = ei * D;
-            let mut hops = 0f32;
-            for k in 0..D {
-                let ad = (s[off + k] - t[off + k]).abs();
-                let th = ad.min(dims_a[k] - ad);
-                hops += if mesh[k] { ad } else { th };
-            }
-            acc += w[ei] * hops;
-        }
-        *o = acc;
-    }
-    out
-}
-
-fn whops_dyn(
+/// [`batched_weighted_hops_native`] with candidate rows fanned out across a
+/// thread budget. Each row's accumulation is untouched, so the result is
+/// bit-identical to the sequential kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_weighted_hops_native_par(
     src: &[f32],
     dst: &[f32],
     w: &[f32],
@@ -87,24 +57,101 @@ fn whops_dyn(
     r: usize,
     e: usize,
     d: usize,
+    par: Parallelism,
 ) -> Vec<f32> {
-    let mut out = vec![0f32; r];
-    for ri in 0..r {
-        let base = ri * e * d;
-        let mut acc = 0f32;
-        for ei in 0..e {
-            let off = base + ei * d;
-            let mut hops = 0f32;
-            for di in 0..d {
-                let ad = (src[off + di] - dst[off + di]).abs();
-                let th = ad.min(dims[di] - ad);
-                hops += if wrap[di] > 0.0 { th } else { ad };
-            }
-            acc += w[ei] * hops;
-        }
-        out[ri] = acc;
+    assert_eq!(src.len(), r * e * d);
+    assert_eq!(dst.len(), r * e * d);
+    assert_eq!(w.len(), e);
+    assert_eq!(dims.len(), d);
+    assert_eq!(wrap.len(), d);
+    if par.num_threads() < 2 || r < 2 || r * e < PAR_MIN_WORK {
+        // Sequential fast path: no fan-out machinery. This is the shape
+        // the rotation sweep's per-worker r=1 chunk calls take, so it must
+        // stay free of per-call allocation beyond the output vector.
+        return (0..r).map(|ri| score_row(src, dst, w, dims, wrap, ri, e, d)).collect();
     }
-    out
+    let rows: Vec<usize> = (0..r).collect();
+    par::map(par, &rows, |_, &ri| score_row(src, dst, w, dims, wrap, ri, e, d))
+}
+
+/// One candidate row, dispatched to a const-D body for the common
+/// dimensionalities so LLVM can unroll + vectorize the inner loop
+/// (EXPERIMENTS.md §Perf: ~3x on the rotation-sweep hot path vs the
+/// dynamic-D loop).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn score_row(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    ri: usize,
+    e: usize,
+    d: usize,
+) -> f32 {
+    let base = ri * e * d;
+    let (s, t) = (&src[base..base + e * d], &dst[base..base + e * d]);
+    match d {
+        1 => whops_row::<1>(s, t, w, dims, wrap, e),
+        2 => whops_row::<2>(s, t, w, dims, wrap, e),
+        3 => whops_row::<3>(s, t, w, dims, wrap, e),
+        4 => whops_row::<4>(s, t, w, dims, wrap, e),
+        5 => whops_row::<5>(s, t, w, dims, wrap, e),
+        6 => whops_row::<6>(s, t, w, dims, wrap, e),
+        _ => whops_row_dyn(s, t, w, dims, wrap, e, d),
+    }
+}
+
+fn whops_row<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    e: usize,
+) -> f32 {
+    let mut dims_a = [0f32; D];
+    let mut mesh = [false; D];
+    for k in 0..D {
+        dims_a[k] = dims[k];
+        mesh[k] = wrap[k] <= 0.0;
+    }
+    let mut acc = 0f32;
+    for ei in 0..e {
+        let off = ei * D;
+        let mut hops = 0f32;
+        for k in 0..D {
+            let ad = (src[off + k] - dst[off + k]).abs();
+            let th = ad.min(dims_a[k] - ad);
+            hops += if mesh[k] { ad } else { th };
+        }
+        acc += w[ei] * hops;
+    }
+    acc
+}
+
+fn whops_row_dyn(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    e: usize,
+    d: usize,
+) -> f32 {
+    let mut acc = 0f32;
+    for ei in 0..e {
+        let off = ei * d;
+        let mut hops = 0f32;
+        for di in 0..d {
+            let ad = (src[off + di] - dst[off + di]).abs();
+            let th = ad.min(dims[di] - ad);
+            hops += if wrap[di] > 0.0 { th } else { ad };
+        }
+        acc += w[ei] * hops;
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -140,5 +187,31 @@ mod tests {
         let w = vec![1.0];
         let out = batched_weighted_hops_native(&src, &dst, &w, &[8.0], &[1.0], 2, 1, 1);
         assert_eq!(out, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn parallel_batch_bit_identical() {
+        // Large enough to clear the work threshold; wrap + mesh dims mixed.
+        let (r, e, d) = (8usize, 4096usize, 3usize);
+        let src: Vec<f32> = (0..r * e * d).map(|k| ((k * 7) % 13) as f32).collect();
+        let dst: Vec<f32> = (0..r * e * d).map(|k| ((k * 5) % 13) as f32).collect();
+        let w: Vec<f32> = (0..e).map(|k| ((k % 4) as f32) * 0.5).collect();
+        let dims = vec![13.0, 13.0, 13.0];
+        let wrap = vec![1.0, 0.0, 1.0];
+        let seq = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+        for threads in [2, 8] {
+            let par = batched_weighted_hops_native_par(
+                &src,
+                &dst,
+                &w,
+                &dims,
+                &wrap,
+                r,
+                e,
+                d,
+                Parallelism::threads(threads),
+            );
+            assert_eq!(par, seq, "threads={threads}");
+        }
     }
 }

@@ -18,12 +18,29 @@
 //! inside their run, and subtree part numbers are contiguous — so e.g. the
 //! ranks of one multicore node (identical router coordinates) always
 //! receive a contiguous range of part numbers.
+//!
+//! # Threading model and scratch reuse
+//!
+//! The recursion is a fork–join over disjoint index sets: after each cut the
+//! two sides own disjoint point indices, so they partition concurrently via
+//! [`crate::par::join`] once a region holds at least `par.grain()` points
+//! and the thread budget allows. Every sub-problem is deterministic and the
+//! sides are data-disjoint, so **the parallel result is bit-identical to
+//! the sequential one at every thread count** (pinned by property tests).
+//!
+//! Steady-state callers (the rotation sweep maps up to 36 candidates per
+//! request) avoid per-call allocation with an [`MjScratch`] arena holding
+//! the working axis copies and the index permutation. The contract:
+//! a scratch may be reused across any sequence of `*_into` calls (they
+//! resize and overwrite it), but must not be shared between concurrent
+//! calls — use one scratch per worker (see `par::map_with`).
 
 pub mod multisection;
 
-pub use multisection::mj_multisection;
+pub use multisection::{mj_multisection, mj_multisection_into, mj_multisection_par};
 
 use crate::geom::Coords;
+use crate::par::{self, Parallelism, SharedSlice};
 use crate::sfc::PartOrdering;
 
 /// MJ configuration for the bisection/mapping path.
@@ -52,10 +69,71 @@ impl Default for MjConfig {
     }
 }
 
+/// Reusable working buffers for [`mj_partition_into`]: the mutable per-axis
+/// coordinate copies (MJ's orderings flip coordinates in place, Alg. 2) and
+/// the point-index permutation. Reuse across calls to keep the hot path
+/// allocation-free; never share one scratch between concurrent calls.
+#[derive(Default)]
+pub struct MjScratch {
+    axes: Vec<Vec<f64>>,
+    idx: Vec<u32>,
+}
+
+impl MjScratch {
+    pub fn new() -> Self {
+        MjScratch::default()
+    }
+}
+
 /// Partition `coords` into `num_parts` parts; returns the part id of every
 /// point. Part sizes are balanced: `n mod num_parts` low-numbered parts get
-/// one extra point.
+/// one extra point. Runs with the auto thread budget
+/// ([`Parallelism::auto`]); the result does not depend on the budget.
 pub fn mj_partition(coords: &Coords, num_parts: usize, cfg: &MjConfig) -> Vec<u32> {
+    mj_partition_par(coords, num_parts, cfg, Parallelism::auto())
+}
+
+/// [`mj_partition`] with an explicit thread budget.
+pub fn mj_partition_par(
+    coords: &Coords,
+    num_parts: usize,
+    cfg: &MjConfig,
+    par: Parallelism,
+) -> Vec<u32> {
+    let mut scratch = MjScratch::new();
+    let mut part = Vec::new();
+    mj_partition_into(coords, num_parts, cfg, par, &mut scratch, &mut part);
+    part
+}
+
+/// Zero-allocation (in steady state) form: writes part ids into `part`,
+/// reusing `scratch` for the working axes and index permutation.
+pub fn mj_partition_into(
+    coords: &Coords,
+    num_parts: usize,
+    cfg: &MjConfig,
+    par: Parallelism,
+    scratch: &mut MjScratch,
+    part: &mut Vec<u32>,
+) {
+    let ident: Vec<usize> = (0..coords.dim()).collect();
+    mj_partition_axes_into(coords, &ident, num_parts, cfg, par, scratch, part);
+}
+
+/// Like [`mj_partition_into`], but partitions the coordinates viewed through
+/// an axis permutation (working axis `d` reads `coords.axis(perm[d])`)
+/// without materializing the permuted `Coords`. This is the rotation
+/// sweep's zero-copy path: equivalent to
+/// `mj_partition(&coords.permute_axes(perm), ..)`.
+pub fn mj_partition_axes_into(
+    coords: &Coords,
+    perm: &[usize],
+    num_parts: usize,
+    cfg: &MjConfig,
+    par: Parallelism,
+    scratch: &mut MjScratch,
+    part: &mut Vec<u32>,
+) {
     assert!(num_parts >= 1);
     assert!(
         cfg.ordering != PartOrdering::Hilbert,
@@ -67,38 +145,54 @@ pub fn mj_partition(coords: &Coords, num_parts: usize, cfg: &MjConfig) -> Vec<u3
         "cannot make {num_parts} nonempty parts from {n} points"
     );
     let dim = coords.dim();
-    // Working copies: MJ's orderings flip coordinates in place (Alg. 2).
-    let mut axes: Vec<Vec<f64>> = (0..dim).map(|d| coords.axis(d).to_vec()).collect();
-    let mut idx: Vec<u32> = (0..n as u32).collect();
-    let mut part = vec![0u32; n];
-    let extra = n % num_parts;
-    let base = n / num_parts;
-    let mut st = State {
-        axes: &mut axes,
-        part: &mut part,
-        base,
-        extra,
-        cfg,
+    assert_eq!(perm.len(), dim, "axis permutation length != dim");
+    // Fill the scratch: working axis copies (flipped in place by the
+    // orderings) in permuted order, the identity index permutation, and the
+    // zeroed output.
+    scratch.axes.resize_with(dim, Vec::new);
+    for (d, axis) in scratch.axes.iter_mut().enumerate() {
+        axis.clear();
+        axis.extend_from_slice(coords.axis(perm[d]));
+    }
+    scratch.idx.clear();
+    scratch.idx.extend(0..n as u32);
+    part.clear();
+    part.resize(n, 0);
+
+    let MjScratch { axes, idx } = scratch;
+    let shared = Shared {
+        axes: axes
+            .iter_mut()
+            .map(|a| SharedSlice::new(a.as_mut_slice()))
+            .collect(),
+        part: SharedSlice::new(part.as_mut_slice()),
+        base: n / num_parts,
+        extra: n % num_parts,
+        cfg: *cfg,
         dim,
     };
-    bisect(&mut st, &mut idx, 0, num_parts, 0);
-    part
+    bisect(&shared, idx, 0, num_parts, 0, par);
 }
 
-struct State<'a> {
-    axes: &'a mut Vec<Vec<f64>>,
-    part: &'a mut Vec<u32>,
+/// Buffers shared across the two sides of a recursion split. Safety: every
+/// `bisect` call owns exactly the point indices in its `idx` sub-slice, the
+/// two sides of a split receive disjoint `idx` halves, and all axis/part
+/// accesses are indexed by owned point indices only — so concurrent
+/// accesses never alias.
+struct Shared<'a> {
+    axes: Vec<SharedSlice<'a, f64>>,
+    part: SharedSlice<'a, u32>,
     /// Global part-size rule: part `p` holds `base + (p < extra)` points.
     base: usize,
     extra: usize,
-    cfg: &'a MjConfig,
+    cfg: MjConfig,
     dim: usize,
 }
 
 /// Number of points owned by parts `[offset, offset + np)`.
-fn span_count(st: &State, offset: usize, np: usize) -> usize {
-    let extra_here = st.extra.saturating_sub(offset).min(np);
-    np * st.base + extra_here
+fn span_count(sh: &Shared, offset: usize, np: usize) -> usize {
+    let extra_here = sh.extra.saturating_sub(offset).min(np);
+    np * sh.base + extra_here
 }
 
 /// Largest prime factor (num_parts in this codebase is at most ~2^21, so
@@ -130,67 +224,85 @@ fn split_parts(np: usize, uneven_prime: bool) -> (usize, usize) {
     }
 }
 
-fn bisect(st: &mut State, idx: &mut [u32], offset: usize, np: usize, level: usize) {
+fn bisect(sh: &Shared, idx: &mut [u32], offset: usize, np: usize, level: usize, par: Parallelism) {
     if np == 1 {
         for &i in idx.iter() {
-            st.part[i as usize] = offset as u32;
+            // SAFETY: this call owns point index `i` (it is in our `idx`).
+            unsafe { sh.part.set(i as usize, offset as u32) };
         }
         return;
     }
     // Dimension to cut.
-    let d = if st.cfg.longest_dim {
-        longest_dim_of(st, idx)
+    let d = if sh.cfg.longest_dim {
+        longest_dim_of(sh, idx)
     } else {
-        level % st.dim
+        level % sh.dim
     };
-    let (np_l, np_r) = split_parts(np, st.cfg.uneven_prime);
-    let count_l = span_count(st, offset, np_l);
+    let (np_l, np_r) = split_parts(np, sh.cfg.uneven_prime);
+    let count_l = span_count(sh, offset, np_l);
     debug_assert!(count_l >= 1 && count_l < idx.len() + 1);
     // Exact selection on (coordinate, point index): deterministic ties.
     {
-        let axis: &Vec<f64> = &st.axes[d];
+        let axis = &sh.axes[d];
         idx.select_nth_unstable_by(count_l - 1, |&a, &b| {
-            let (ca, cb) = (axis[a as usize], axis[b as usize]);
+            // SAFETY: `a` and `b` are owned point indices.
+            let (ca, cb) = unsafe { (axis.get(a as usize), axis.get(b as usize)) };
             ca.partial_cmp(&cb).unwrap().then(a.cmp(&b))
         });
     }
     let (left, right) = idx.split_at_mut(count_l);
     // Algorithm 2 flip rules.
-    match st.cfg.ordering {
+    match sh.cfg.ordering {
         PartOrdering::Z => {}
         PartOrdering::Gray => {
             for &i in right.iter() {
-                for axis in st.axes.iter_mut() {
-                    axis[i as usize] = -axis[i as usize];
+                for axis in sh.axes.iter() {
+                    // SAFETY: `i` is owned by this call.
+                    unsafe { axis.set(i as usize, -axis.get(i as usize)) };
                 }
             }
         }
         PartOrdering::FZ => {
+            let axis = &sh.axes[d];
             for &i in right.iter() {
-                st.axes[d][i as usize] = -st.axes[d][i as usize];
+                // SAFETY: `i` is owned by this call.
+                unsafe { axis.set(i as usize, -axis.get(i as usize)) };
             }
         }
         PartOrdering::MFZ => {
             // MFZ flips the LOWER half instead (Section 4.3).
+            let axis = &sh.axes[d];
             for &i in left.iter() {
-                st.axes[d][i as usize] = -st.axes[d][i as usize];
+                // SAFETY: `i` is owned by this call.
+                unsafe { axis.set(i as usize, -axis.get(i as usize)) };
             }
         }
         PartOrdering::Hilbert => unreachable!(),
     }
-    bisect(st, left, offset, np_l, level + 1);
-    bisect(st, right, offset + np_l, np_r, level + 1);
+    // Fork–join split: both sides own disjoint point-index sets, so they
+    // may run concurrently; below the grain (or out of budget) recurse
+    // sequentially. Either way the result is identical.
+    if par.num_threads() >= 2 && left.len().min(right.len()) >= par.grain() {
+        par::join(
+            par,
+            move |p| bisect(sh, left, offset, np_l, level + 1, p),
+            move |p| bisect(sh, right, offset + np_l, np_r, level + 1, p),
+        );
+    } else {
+        bisect(sh, left, offset, np_l, level + 1, par);
+        bisect(sh, right, offset + np_l, np_r, level + 1, par);
+    }
 }
 
-fn longest_dim_of(st: &State, idx: &[u32]) -> usize {
+fn longest_dim_of(sh: &Shared, idx: &[u32]) -> usize {
     let mut best = 0usize;
     let mut best_ext = f64::NEG_INFINITY;
-    for d in 0..st.dim {
-        let axis = &st.axes[d];
+    for (d, axis) in sh.axes.iter().enumerate() {
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         for &i in idx {
-            let v = axis[i as usize];
+            // SAFETY: `i` is owned by the calling `bisect`.
+            let v = unsafe { axis.get(i as usize) };
             if v < lo {
                 lo = v;
             }
@@ -417,5 +529,72 @@ mod tests {
         let a = mj_partition(&c, 13, &MjConfig::default());
         let b = mj_partition(&c, 13, &MjConfig::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_bit_identical_to_sequential() {
+        // Tiny grain forces real recursion splits even on this small input.
+        let c = grid(32, 32);
+        for ord in [PartOrdering::Z, PartOrdering::Gray, PartOrdering::FZ, PartOrdering::MFZ] {
+            for np in [2usize, 13, 64, 1024] {
+                let cfg = MjConfig {
+                    ordering: ord,
+                    longest_dim: np % 2 == 0,
+                    uneven_prime: np == 13,
+                };
+                let seq = mj_partition_par(&c, np, &cfg, Parallelism::sequential());
+                for threads in [2, 8] {
+                    let par = mj_partition_par(
+                        &c,
+                        np,
+                        &cfg,
+                        Parallelism::threads(threads).with_grain(8),
+                    );
+                    assert_eq!(par, seq, "{ord:?} np={np} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axes_permutation_matches_materialized_permute() {
+        let c = grid(16, 8);
+        let cfg = MjConfig {
+            ordering: PartOrdering::FZ,
+            longest_dim: false,
+            uneven_prime: false,
+        };
+        let perm = [1usize, 0];
+        let mut scratch = MjScratch::new();
+        let mut part = Vec::new();
+        mj_partition_axes_into(
+            &c,
+            &perm,
+            16,
+            &cfg,
+            Parallelism::sequential(),
+            &mut scratch,
+            &mut part,
+        );
+        let want = mj_partition(&c.permute_axes(&perm), 16, &cfg);
+        assert_eq!(part, want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls() {
+        let mut scratch = MjScratch::new();
+        let mut part = Vec::new();
+        let a = grid(8, 8);
+        let b = grid(5, 3);
+        let cfg = MjConfig::default();
+        mj_partition_into(&a, 16, &cfg, Parallelism::sequential(), &mut scratch, &mut part);
+        assert_eq!(part.len(), 64);
+        let first = part.clone();
+        // Smaller problem next: the scratch shrinks/overwrites cleanly.
+        mj_partition_into(&b, 5, &cfg, Parallelism::sequential(), &mut scratch, &mut part);
+        assert_eq!(part.len(), 15);
+        // And the original result is reproducible after reuse.
+        mj_partition_into(&a, 16, &cfg, Parallelism::sequential(), &mut scratch, &mut part);
+        assert_eq!(part, first);
     }
 }

@@ -2,8 +2,17 @@
 //! `P = Π P_i` parts in `RD = len(counts)` levels, `P_i` parts per level
 //! with `P_i - 1` parallel cuts, alternating (or longest) dimensions.
 //! Part numbers are assigned lexicographically per level (Z-style).
+//!
+//! Unlike the bisection path, multisection never flips coordinates, so the
+//! recursion reads `Coords` directly (no working axis copies) and only the
+//! index permutation and output buffer live in the [`MjScratch`] arena. The
+//! per-level slices own disjoint point-index sets, so they recurse
+//! concurrently under the same determinism guarantee as `mj_partition`:
+//! bit-identical output at every thread count.
 
+use super::MjScratch;
 use crate::geom::Coords;
+use crate::par::{self, Parallelism, SharedSlice};
 
 /// Multisection configuration: parts per recursion level.
 #[derive(Clone, Debug)]
@@ -49,87 +58,141 @@ impl MultisectionConfig {
     }
 }
 
-/// Partition into `Π counts` parts. Returns part id per point.
+/// Partition into `Π counts` parts. Returns part id per point. Runs with
+/// the auto thread budget; the result does not depend on the budget.
 pub fn mj_multisection(coords: &Coords, cfg: &MultisectionConfig) -> Vec<u32> {
+    mj_multisection_par(coords, cfg, Parallelism::auto())
+}
+
+/// [`mj_multisection`] with an explicit thread budget.
+pub fn mj_multisection_par(
+    coords: &Coords,
+    cfg: &MultisectionConfig,
+    par: Parallelism,
+) -> Vec<u32> {
+    let mut scratch = MjScratch::new();
+    let mut part = Vec::new();
+    mj_multisection_into(coords, cfg, par, &mut scratch, &mut part);
+    part
+}
+
+/// Zero-allocation (in steady state) form: writes part ids into `part`,
+/// reusing `scratch` for the index permutation.
+pub fn mj_multisection_into(
+    coords: &Coords,
+    cfg: &MultisectionConfig,
+    par: Parallelism,
+    scratch: &mut MjScratch,
+    part: &mut Vec<u32>,
+) {
     let n = coords.len();
     let p = cfg.total_parts();
     assert!(p >= 1 && p <= n);
     let dim = coords.dim();
-    let mut idx: Vec<u32> = (0..n as u32).collect();
-    let mut part = vec![0u32; n];
-    // (slice range, level, part offset, points per part handled by global
-    // balanced sizing as in the bisection path)
-    let base = n / p;
-    let extra = n % p;
-    // Count of points owned by parts [offset, offset+k).
-    let span = |offset: usize, k: usize| -> usize {
-        k * base + extra.saturating_sub(offset).min(k)
+    scratch.idx.clear();
+    scratch.idx.extend(0..n as u32);
+    part.clear();
+    part.resize(n, 0);
+    let ctx = MsCtx {
+        coords,
+        part: SharedSlice::new(part.as_mut_slice()),
+        counts: &cfg.counts,
+        longest_dim: cfg.longest_dim,
+        // Global balanced sizing as in the bisection path.
+        base: n / p,
+        extra: n % p,
+        dim,
     };
-    fn rec(
-        coords: &Coords,
-        idx: &mut [u32],
-        part: &mut [u32],
-        cfg: &MultisectionConfig,
-        span: &dyn Fn(usize, usize) -> usize,
-        level: usize,
-        offset: usize,
-        dim: usize,
-    ) {
-        if level == cfg.counts.len() {
-            for &i in idx.iter() {
-                part[i as usize] = offset as u32;
-            }
-            return;
+    rec(&ctx, &mut scratch.idx, 0, 0, par);
+}
+
+/// Shared recursion context. Safety: as in `mj::bisect`, each `rec` call
+/// owns the point indices in its `idx` sub-slice and only writes `part` at
+/// those indices; sibling slices are disjoint.
+struct MsCtx<'a> {
+    coords: &'a Coords,
+    part: SharedSlice<'a, u32>,
+    counts: &'a [usize],
+    longest_dim: bool,
+    base: usize,
+    extra: usize,
+    dim: usize,
+}
+
+impl MsCtx<'_> {
+    /// Count of points owned by parts `[offset, offset + k)`.
+    fn span(&self, offset: usize, k: usize) -> usize {
+        k * self.base + self.extra.saturating_sub(offset).min(k)
+    }
+}
+
+fn rec(cx: &MsCtx, idx: &mut [u32], level: usize, offset: usize, par: Parallelism) {
+    if level == cx.counts.len() {
+        for &i in idx.iter() {
+            // SAFETY: this call owns point index `i`.
+            unsafe { cx.part.set(i as usize, offset as u32) };
         }
-        let pi = cfg.counts[level];
-        // Parts remaining below this level.
-        let below: usize = cfg.counts[level + 1..].iter().product();
-        let d = if cfg.longest_dim {
-            let mut best = 0;
-            let mut ext_best = f64::NEG_INFINITY;
-            for dd in 0..dim {
-                let axis = coords.axis(dd);
-                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
-                for &i in idx.iter() {
-                    let v = axis[i as usize];
-                    lo = lo.min(v);
-                    hi = hi.max(v);
-                }
-                if hi - lo > ext_best {
-                    ext_best = hi - lo;
-                    best = dd;
-                }
+        return;
+    }
+    let region_len = idx.len();
+    let pi = cx.counts[level];
+    // Parts remaining below this level.
+    let below: usize = cx.counts[level + 1..].iter().product();
+    let d = if cx.longest_dim {
+        let mut best = 0;
+        let mut ext_best = f64::NEG_INFINITY;
+        for dd in 0..cx.dim {
+            let axis = cx.coords.axis(dd);
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &i in idx.iter() {
+                let v = axis[i as usize];
+                lo = lo.min(v);
+                hi = hi.max(v);
             }
-            best
+            if hi - lo > ext_best {
+                ext_best = hi - lo;
+                best = dd;
+            }
+        }
+        best
+    } else {
+        level % cx.dim
+    };
+    // Multisection: slice off the first `span` points pi-1 times. The
+    // slicing itself is sequential (each cut orders the remainder), but the
+    // resulting sibling slices recurse concurrently.
+    let axis = cx.coords.axis(d);
+    let mut chunks: Vec<(&mut [u32], usize)> = Vec::with_capacity(pi);
+    let mut rest = idx;
+    let mut off = offset;
+    for s in 0..pi {
+        let take = if s + 1 == pi {
+            rest.len()
         } else {
-            level % dim
+            cx.span(off, below)
         };
-        // Multisection: slice off the first `span` points pi-1 times.
-        let axis = coords.axis(d);
-        let mut rest = idx;
-        let mut off = offset;
-        for s in 0..pi {
-            let take = if s + 1 == pi {
-                rest.len()
-            } else {
-                span(off, below)
-            };
-            if take < rest.len() {
-                rest.select_nth_unstable_by(take - 1, |&a, &b| {
-                    axis[a as usize]
-                        .partial_cmp(&axis[b as usize])
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
-            }
-            let (chunk, r) = rest.split_at_mut(take);
-            rec(coords, chunk, part, cfg, span, level + 1, off, dim);
-            rest = r;
-            off += below;
+        if take < rest.len() {
+            rest.select_nth_unstable_by(take - 1, |&a, &b| {
+                axis[a as usize]
+                    .partial_cmp(&axis[b as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        }
+        let (chunk, r) = std::mem::take(&mut rest).split_at_mut(take);
+        chunks.push((chunk, off));
+        rest = r;
+        off += below;
+    }
+    if par.num_threads() >= 2 && region_len >= par.grain() {
+        par::for_each_vec(par, chunks, &|p, (chunk, off)| {
+            rec(cx, chunk, level + 1, off, p)
+        });
+    } else {
+        for (chunk, off) in chunks {
+            rec(cx, chunk, level + 1, off, par);
         }
     }
-    rec(coords, &mut idx, &mut part, cfg, &span, 0, 0, dim);
-    part
 }
 
 #[cfg(test)]
@@ -205,5 +268,34 @@ mod tests {
         // 70 = 12*5 + 10: ten parts of 6, two of 5.
         assert_eq!(sizes.iter().sum::<usize>(), 70);
         assert!(sizes.iter().all(|&s| s == 5 || s == 6), "{sizes:?}");
+    }
+
+    #[test]
+    fn parallel_bit_identical_to_sequential() {
+        let c = grid(24, 18);
+        for cfg in [
+            MultisectionConfig {
+                counts: vec![4, 4, 4],
+                longest_dim: false,
+            },
+            MultisectionConfig {
+                counts: vec![3, 4],
+                longest_dim: true,
+            },
+            MultisectionConfig {
+                counts: vec![2; 6],
+                longest_dim: false,
+            },
+        ] {
+            let seq = mj_multisection_par(&c, &cfg, Parallelism::sequential());
+            for threads in [2, 8] {
+                let par = mj_multisection_par(
+                    &c,
+                    &cfg,
+                    Parallelism::threads(threads).with_grain(8),
+                );
+                assert_eq!(par, seq, "{cfg:?} threads={threads}");
+            }
+        }
     }
 }

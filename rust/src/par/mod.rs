@@ -1,0 +1,417 @@
+//! Deterministic fork–join parallelism for the mapping hot path.
+//!
+//! The offline vendor set has no `rayon`, so this module provides the three
+//! rayon-style primitives the partitioner and the rotation sweep need —
+//! budgeted [`join`], a chunked [`map_with`] fan-out with per-worker scratch
+//! state, and a consuming [`for_each_vec`] — built on `std::thread::scope`.
+//!
+//! # Threading model
+//!
+//! * A [`Parallelism`] value is an explicit *thread budget* carried down the
+//!   call tree. [`join`] splits the budget between its two halves and only
+//!   spawns while at least two threads remain, so a computation started with
+//!   `Parallelism::threads(8)` never runs more than ~8 worker threads at
+//!   once, no matter how deep the recursion — no global pool, no global
+//!   state, no oversubscription when sweeps nest inside sweeps.
+//! * `Parallelism::auto()` sizes the budget from the `TASKMAP_THREADS`
+//!   environment variable when set, else `std::thread::available_parallelism`.
+//! * The `grain` is the smallest sub-problem (in items/points) worth
+//!   splitting; below it callers recurse sequentially. Tests shrink it to
+//!   force splits on tiny inputs.
+//!
+//! # Determinism guarantee
+//!
+//! Every primitive here assigns work to workers by *index*, not by arrival
+//! order, and writes results into pre-assigned slots. Combined with
+//! deterministic sequential kernels this makes all parallel results
+//! **bit-identical to the sequential path at every thread count** — the
+//! property tests in `tests/properties.rs` pin this for `mj_partition`,
+//! `mj_multisection`, and `rotation_sweep`.
+
+use std::marker::PhantomData;
+use std::sync::OnceLock;
+
+/// Default smallest sub-problem (points/items) worth splitting.
+pub const DEFAULT_GRAIN: usize = 8192;
+
+/// An explicit thread budget plus split granularity, passed down the call
+/// tree (see the module docs for the model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+    grain: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded: the reference path all parallel results must match.
+    pub fn sequential() -> Self {
+        Parallelism {
+            threads: 1,
+            grain: DEFAULT_GRAIN,
+        }
+    }
+
+    /// A budget of `n` worker threads (clamped to at least 1).
+    pub fn threads(n: usize) -> Self {
+        Parallelism {
+            threads: n.max(1),
+            grain: DEFAULT_GRAIN,
+        }
+    }
+
+    /// Budget from `TASKMAP_THREADS` (if set) or the machine's available
+    /// parallelism. The lookup is cached for the process lifetime.
+    pub fn auto() -> Self {
+        static AUTO: OnceLock<usize> = OnceLock::new();
+        let n = *AUTO.get_or_init(|| {
+            std::env::var("TASKMAP_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                })
+        });
+        Parallelism::threads(n)
+    }
+
+    /// Override the split granularity (tests use tiny grains to force
+    /// parallel splits on small inputs).
+    pub fn with_grain(mut self, grain: usize) -> Self {
+        self.grain = grain.max(1);
+        self
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn grain(&self) -> usize {
+        self.grain
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Split the budget for the two sides of a `join` (left gets the larger
+    /// half).
+    pub fn split(&self) -> (Parallelism, Parallelism) {
+        let left = self.threads.div_ceil(2);
+        let right = (self.threads - left).max(1);
+        (
+            Parallelism {
+                threads: left,
+                grain: self.grain,
+            },
+            Parallelism {
+                threads: right,
+                grain: self.grain,
+            },
+        )
+    }
+}
+
+/// Run `a` and `b`, possibly concurrently, handing each its share of the
+/// budget. With fewer than two threads both run sequentially on the caller's
+/// thread. Results are returned in `(a, b)` order regardless of scheduling.
+pub fn join<RA, RB, A, B>(par: Parallelism, a: A, b: B) -> (RA, RB)
+where
+    RA: Send,
+    RB: Send,
+    A: FnOnce(Parallelism) -> RA + Send,
+    B: FnOnce(Parallelism) -> RB + Send,
+{
+    if par.threads < 2 {
+        let seq = Parallelism::sequential().with_grain(par.grain);
+        return (a(seq), b(seq));
+    }
+    let (pa, pb) = par.split();
+    std::thread::scope(|scope| {
+        let hb = scope.spawn(move || b(pb));
+        let ra = a(pa);
+        let rb = match hb.join() {
+            Ok(v) => v,
+            Err(e) => std::panic::resume_unwind(e),
+        };
+        (ra, rb)
+    })
+}
+
+/// Map `f` over `items` with up to `par.num_threads()` workers, giving every
+/// worker its own scratch state from `init`. Items are assigned to workers
+/// in contiguous index ranges and results land in input order, so the output
+/// is identical at every thread count.
+pub fn map_with<T, R, S, I, F>(par: Parallelism, items: &[T], init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = par.threads.min(n).max(1);
+    if workers < 2 {
+        let mut state = init();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut state, i, t))
+            .collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let bounds: Vec<usize> = (0..=workers).map(|w| w * n / workers).collect();
+    {
+        // Pre-split the output into one disjoint chunk per worker.
+        let mut chunks: Vec<&mut [Option<R>]> = Vec::with_capacity(workers);
+        let mut rest: &mut [Option<R>] = &mut out;
+        for w in 0..workers {
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut(bounds[w + 1] - bounds[w]);
+            chunks.push(chunk);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            let f = &f;
+            let init = &init;
+            // Spawn workers 1.. first, then run worker 0 inline.
+            for (w, chunk) in chunks.into_iter().enumerate().rev() {
+                let lo = bounds[w];
+                let run = move || {
+                    let mut state = init();
+                    for (k, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(f(&mut state, lo + k, &items[lo + k]));
+                    }
+                };
+                if w == 0 {
+                    run();
+                } else {
+                    scope.spawn(run);
+                }
+            }
+        });
+    }
+    out.into_iter()
+        .map(|r| r.expect("every slot filled by its worker"))
+        .collect()
+}
+
+/// Stateless [`map_with`].
+pub fn map<T, R, F>(par: Parallelism, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    map_with(par, items, || (), |_, i, t| f(i, t))
+}
+
+/// Consume `items`, running `f` on each with a share of the budget. Used
+/// where items hold `&mut` borrows (e.g. disjoint index slices of one
+/// partition buffer) that cannot be handed out through `&[T]`.
+pub fn for_each_vec<T, F>(par: Parallelism, mut items: Vec<T>, f: &F)
+where
+    T: Send,
+    F: Fn(Parallelism, T) + Sync,
+{
+    match items.len() {
+        0 => {}
+        1 => f(par, items.pop().unwrap()),
+        _ if par.threads >= 2 => {
+            let right = items.split_off(items.len() / 2);
+            join(
+                par,
+                move |p| for_each_vec(p, items, f),
+                move |p| for_each_vec(p, right, f),
+            );
+        }
+        _ => {
+            let seq = Parallelism::sequential().with_grain(par.grain);
+            for item in items {
+                f(seq, item);
+            }
+        }
+    }
+}
+
+/// A raw view of a `&mut [T]` that can be shared across the two sides of a
+/// fork–join split when the caller guarantees the sides touch **disjoint
+/// index sets** (MJ's recursion owns exactly the point indices in its `idx`
+/// sub-slice; see `mj::bisect`).
+///
+/// All access is `unsafe`: the caller, not the type system, upholds the
+/// disjointness invariant. Bounds are checked in debug builds.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the slice's element type moves between threads only by value, and
+// the disjoint-index contract (documented above) prevents aliased access.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// No concurrent writer may target index `i`.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// No concurrent reader or writer may target index `i`.
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_budget_conserved() {
+        let p = Parallelism::threads(8);
+        let (l, r) = p.split();
+        assert_eq!(l.num_threads(), 4);
+        assert_eq!(r.num_threads(), 4);
+        let (l, r) = Parallelism::threads(3).split();
+        assert_eq!((l.num_threads(), r.num_threads()), (2, 1));
+        let (l, r) = Parallelism::threads(2).split();
+        assert_eq!((l.num_threads(), r.num_threads()), (1, 1));
+    }
+
+    #[test]
+    fn join_returns_in_order() {
+        for threads in [1, 2, 8] {
+            let (a, b) = join(Parallelism::threads(threads), |_| "left", |_| "right");
+            assert_eq!((a, b), ("left", "right"));
+        }
+    }
+
+    #[test]
+    fn join_nests() {
+        let (a, (b, c)) = join(
+            Parallelism::threads(4),
+            |p| join(p, |_| 1, |_| 2),
+            |p| join(p, |_| 3, |_| 4),
+        );
+        assert_eq!((a, (b, c)), ((1, 2), (3, 4)));
+    }
+
+    #[test]
+    fn map_matches_sequential_at_every_thread_count() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq = map(Parallelism::sequential(), &items, |i, &x| x * 3 + i as u64);
+        for threads in [2, 3, 8, 64] {
+            let par = map(Parallelism::threads(threads), &items, |i, &x| {
+                x * 3 + i as u64
+            });
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_with_reuses_worker_state() {
+        // Each worker's scratch must be isolated: the per-worker counter
+        // resets per worker but results stay index-addressed.
+        let items: Vec<usize> = (0..100).collect();
+        let out = map_with(
+            Parallelism::threads(4),
+            &items,
+            || 0usize,
+            |count, i, &x| {
+                *count += 1;
+                (i, x, *count >= 1)
+            },
+        );
+        for (i, &(oi, ox, counted)) in out.iter().enumerate() {
+            assert_eq!((oi, ox), (i, i));
+            assert!(counted);
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(map(Parallelism::threads(8), &empty, |_, &x| x).is_empty());
+        assert_eq!(map(Parallelism::threads(8), &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn for_each_vec_visits_all() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let total = AtomicU64::new(0);
+        let items: Vec<u64> = (1..=100).collect();
+        for_each_vec(Parallelism::threads(8), items, &|_, x| {
+            total.fetch_add(x, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 5050);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut buf = vec![0u32; 64];
+        {
+            let shared = SharedSlice::new(&mut buf);
+            let shared = &shared;
+            let idx: Vec<usize> = (0..64).collect();
+            let (left, right) = idx.split_at(32);
+            join(
+                Parallelism::threads(2),
+                move |_| {
+                    for &i in left {
+                        unsafe { shared.set(i, i as u32) }
+                    }
+                },
+                move |_| {
+                    for &i in right {
+                        unsafe { shared.set(i, i as u32 * 2) }
+                    }
+                },
+            );
+        }
+        for i in 0..32 {
+            assert_eq!(buf[i], i as u32);
+        }
+        for i in 32..64 {
+            assert_eq!(buf[i], i as u32 * 2);
+        }
+    }
+
+    #[test]
+    fn auto_has_at_least_one_thread() {
+        assert!(Parallelism::auto().num_threads() >= 1);
+    }
+}

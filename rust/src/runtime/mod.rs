@@ -1,72 +1,113 @@
-//! PJRT runtime: loads the AOT-compiled `batched_weighted_hops` HLO-text
-//! artifacts produced by `python/compile/aot.py` and executes them on the
-//! PJRT CPU client from the L3 hot path. Python never runs at request time.
+//! Artifact runtime: loads the AOT-compiled `batched_weighted_hops`
+//! HLO-text artifacts produced by `python/compile/aot.py` and executes
+//! their contract from the L3 hot path. Python never runs at request time.
 //!
 //! Artifacts have fixed padded shapes `(R, E, D)`; requests are chunked
 //! over candidates and edges and padded per the kernel's contract
 //! (zero-weight edges and size-1 wrapped dims contribute nothing).
+//!
+//! Execution: the offline vendor set carries no PJRT FFI crate, so the
+//! runtime executes each padded artifact-shaped chunk through the native
+//! kernel twin (`metrics::native`), which is pinned bit-for-bit against the
+//! Pallas kernel's f32 accumulation contract by `tests/runtime_pjrt.rs`
+//! and the L2 tests. Linking the real PJRT CPU client back in is a ROADMAP
+//! item; every seam (manifest, shapes, chunking, padding, the
+//! `executions`/`fallbacks` telemetry) is preserved so only the
+//! execute-one-chunk call changes.
+//!
+//! The runtime is shared across rotation-sweep workers: `eval` takes
+//! `&self` and the telemetry counters are mutex-guarded, so concurrent
+//! scoring is safe.
 
 use crate::mapping::rotations::WhopsBackend;
 use crate::metrics::native::batched_weighted_hops_native;
 use crate::testutil::json::Json;
-use anyhow::{bail, Context, Result};
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-/// One compiled artifact.
+/// Runtime loading/execution error (message-carrying; the offline vendor
+/// set has no `anyhow`).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
+
+type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// One compiled artifact: its padded shape and the HLO text location.
 struct Artifact {
     r: usize,
     e: usize,
     d: usize,
-    exe: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)]
+    path: PathBuf,
 }
 
-/// The PJRT evaluator: a CPU client plus the compiled artifact set.
+/// The artifact evaluator: the loaded artifact set plus execution telemetry.
 pub struct PjrtRuntime {
-    _client: xla::PjRtClient,
     artifacts: Vec<Artifact>,
-    /// Number of PJRT executions performed (telemetry for benches/tests).
+    /// Number of artifact executions performed (telemetry for
+    /// benches/tests).
     pub executions: Mutex<u64>,
 }
 
 impl PjrtRuntime {
     /// Load every artifact listed in `dir/manifest.json` (written by
-    /// `make artifacts`) and compile them once.
+    /// `make artifacts`) and validate the files exist.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
-        let manifest =
-            Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut artifacts = Vec::new();
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            err(format!(
+                "reading {manifest_path:?} (run `make artifacts`): {e}"
+            ))
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| err(format!("bad manifest.json: {e}")))?;
         let entries = manifest
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .context("manifest.json: missing artifacts array")?;
+            .ok_or_else(|| err("manifest.json: missing artifacts array"))?;
+        let mut artifacts = Vec::new();
         for entry in entries {
             let file = entry
                 .get("file")
                 .and_then(|f| f.as_str())
-                .context("artifact entry missing file")?;
-            let (r, e, d) = (
-                entry.get("r").and_then(|x| x.as_usize()).context("r")?,
-                entry.get("e").and_then(|x| x.as_usize()).context("e")?,
-                entry.get("d").and_then(|x| x.as_usize()).context("d")?,
-            );
+                .ok_or_else(|| err("artifact entry missing file"))?;
+            let r = entry
+                .get("r")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| err("artifact entry missing r"))?;
+            let e = entry
+                .get("e")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| err("artifact entry missing e"))?;
+            let d = entry
+                .get("d")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| err("artifact entry missing d"))?;
+            if r == 0 || e == 0 || d == 0 {
+                return Err(err(format!("artifact {file}: degenerate shape ({r},{e},{d})")));
+            }
             let path: PathBuf = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            artifacts.push(Artifact { r, e, d, exe });
+            if !path.is_file() {
+                return Err(err(format!("artifact file missing: {path:?}")));
+            }
+            artifacts.push(Artifact { r, e, d, path });
         }
         if artifacts.is_empty() {
-            bail!("no artifacts in {dir:?}");
+            return Err(err(format!("no artifacts in {dir:?}")));
         }
         Ok(PjrtRuntime {
-            _client: client,
             artifacts,
             executions: Mutex::new(0),
         })
@@ -81,16 +122,15 @@ impl PjrtRuntime {
 
     /// Pick the artifact minimizing padded work for an `(r, e, d)` request.
     fn pick(&self, r: usize, e: usize, d: usize) -> Option<&Artifact> {
-        self.artifacts
-            .iter()
-            .filter(|a| a.d >= d)
-            .min_by_key(|a| {
-                let chunks = r.div_ceil(a.r) * e.div_ceil(a.e);
-                chunks * a.r * a.e * a.d
-            })
+        self.artifacts.iter().filter(|a| a.d >= d).min_by_key(|a| {
+            let chunks = r.div_ceil(a.r) * e.div_ceil(a.e);
+            chunks * a.r * a.e * a.d
+        })
     }
 
-    /// Batched WeightedHops via PJRT. Errors if no artifact can serve `d`.
+    /// Batched WeightedHops through the artifact contract. Errors if no
+    /// artifact can serve `d`.
+    #[allow(clippy::too_many_arguments)]
     pub fn eval(
         &self,
         src: &[f32],
@@ -104,15 +144,13 @@ impl PjrtRuntime {
     ) -> Result<Vec<f32>> {
         let art = self
             .pick(r, e, d)
-            .with_context(|| format!("no artifact with D >= {d}"))?;
+            .ok_or_else(|| err(format!("no artifact with D >= {d}")))?;
         let (ar, ae, ad) = (art.r, art.e, art.d);
         // Padded dims/wrap: size-1 torus dims are inert.
         let mut pdims = vec![1f32; ad];
         let mut pwrap = vec![1f32; ad];
         pdims[..d].copy_from_slice(dims);
         pwrap[..d].copy_from_slice(wrap);
-        let dims_lit = xla::Literal::vec1(&pdims).reshape(&[ad as i64])?;
-        let wrap_lit = xla::Literal::vec1(&pwrap).reshape(&[ad as i64])?;
 
         let mut out = vec![0f32; r];
         let mut psrc = vec![0f32; ar * ae * ad];
@@ -123,7 +161,6 @@ impl PjrtRuntime {
             let elen = e_hi - e_lo;
             pw.fill(0.0);
             pw[..elen].copy_from_slice(&w[e_lo..e_hi]);
-            let w_lit = xla::Literal::vec1(&pw).reshape(&[ae as i64])?;
             for r_lo in (0..r).step_by(ar) {
                 let r_hi = (r_lo + ar).min(r);
                 let rlen = r_hi - r_lo;
@@ -137,20 +174,10 @@ impl PjrtRuntime {
                         pdst[t..t + d].copy_from_slice(&dst[s..s + d]);
                     }
                 }
-                let src_lit =
-                    xla::Literal::vec1(&psrc).reshape(&[ar as i64, ae as i64, ad as i64])?;
-                let dst_lit =
-                    xla::Literal::vec1(&pdst).reshape(&[ar as i64, ae as i64, ad as i64])?;
-                let result = art.exe.execute::<xla::Literal>(&[
-                    src_lit,
-                    dst_lit,
-                    w_lit.clone(),
-                    dims_lit.clone(),
-                    wrap_lit.clone(),
-                ])?[0][0]
-                    .to_literal_sync()?;
-                // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-                let values = result.to_tuple1()?.to_vec::<f32>()?;
+                // Execute one padded artifact-shaped chunk (see module docs:
+                // the native twin stands in for the PJRT executable).
+                let values =
+                    batched_weighted_hops_native(&psrc, &pdst, &pw, &pdims, &pwrap, ar, ae, ad);
                 *self.executions.lock().unwrap() += 1;
                 for ri in 0..rlen {
                     out[r_lo + ri] += values[ri];
@@ -161,8 +188,9 @@ impl PjrtRuntime {
     }
 }
 
-/// `WhopsBackend` adapter: PJRT with transparent fallback to the native
-/// evaluator if execution fails (e.g. dimensionality beyond any artifact).
+/// `WhopsBackend` adapter: the artifact runtime with transparent fallback
+/// to the direct native evaluator if execution fails (e.g. dimensionality
+/// beyond any artifact).
 pub struct PjrtBackend {
     pub runtime: PjrtRuntime,
     /// Count of requests that fell back to the native path.
@@ -206,6 +234,80 @@ impl WhopsBackend for PjrtBackend {
     }
 
     fn name(&self) -> &'static str {
-        "pjrt"
+        "pjrt-artifact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!("{{\"artifacts\":[{entries}]}}"),
+        )
+        .unwrap();
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("taskmap-runtime-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_rejects_missing_manifest() {
+        let dir = temp_dir("nomanifest");
+        assert!(PjrtRuntime::load(&dir).is_err());
+    }
+
+    #[test]
+    fn load_rejects_missing_artifact_file() {
+        let dir = temp_dir("nofile");
+        write_manifest(&dir, r#"{"file":"whops.hlo","r":2,"e":8,"d":3}"#);
+        let e = match PjrtRuntime::load(&dir) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-file error"),
+        };
+        assert!(e.0.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn eval_matches_native_across_chunking() {
+        let dir = temp_dir("eval");
+        std::fs::write(dir.join("whops.hlo"), "HloModule whops (stub)").unwrap();
+        write_manifest(&dir, r#"{"file":"whops.hlo","r":2,"e":8,"d":3}"#);
+        let rt = PjrtRuntime::load(&dir).unwrap();
+        // (r=5, e=19, d=2): forces candidate chunking, edge chunking, and
+        // dim padding against the (2, 8, 3) artifact.
+        let (r, e, d) = (5usize, 19usize, 2usize);
+        let src: Vec<f32> = (0..r * e * d).map(|k| ((k * 3) % 7) as f32).collect();
+        let dst: Vec<f32> = (0..r * e * d).map(|k| ((k * 5) % 7) as f32).collect();
+        let w: Vec<f32> = (0..e).map(|k| (k % 3) as f32).collect();
+        let dims = vec![7.0, 7.0];
+        let wrap = vec![1.0, 0.0];
+        let got = rt.eval(&src, &dst, &w, &dims, &wrap, r, e, d).unwrap();
+        let want = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d);
+        assert_eq!(got, want);
+        // ceil(5/2) candidate chunks x ceil(19/8) edge chunks = 9 executions.
+        assert_eq!(*rt.executions.lock().unwrap(), 9);
+    }
+
+    #[test]
+    fn backend_falls_back_on_oversized_d() {
+        let dir = temp_dir("fallback");
+        std::fs::write(dir.join("whops.hlo"), "HloModule whops (stub)").unwrap();
+        write_manifest(&dir, r#"{"file":"whops.hlo","r":2,"e":8,"d":3}"#);
+        let backend = PjrtBackend::new(PjrtRuntime::load(&dir).unwrap());
+        let (r, e, d) = (1usize, 2usize, 5usize); // d=5 > artifact D=3
+        let src = vec![0f32; r * e * d];
+        let dst = vec![1f32; r * e * d];
+        let w = vec![1f32; e];
+        let out = backend.eval_batch(&src, &dst, &w, &[4.0; 5], &[1.0; 5], r, e, d);
+        assert_eq!(out.len(), 1);
+        assert_eq!(*backend.fallbacks.lock().unwrap(), 1);
     }
 }

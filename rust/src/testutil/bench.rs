@@ -1,7 +1,16 @@
 //! Minimal benchmark harness (no `criterion` in the vendor set): adaptive
 //! iteration count, warmup, median-of-samples reporting. Used by the
 //! `harness = false` bench targets.
+//!
+//! [`BenchRecorder`] additionally persists results as machine-readable JSON
+//! (default `BENCH_mapping.json`, override with `TASKMAP_BENCH_OUT`) so the
+//! bench trajectory — e.g. the rotation-sweep speedup per thread count —
+//! is diffable across commits. Writes merge with the existing file, so the
+//! bench binaries compose into one trajectory file.
 
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -90,6 +99,68 @@ fn bench_cfg<T, F: FnMut() -> T>(
     result
 }
 
+/// Machine-readable bench-trajectory writer (see module docs).
+pub struct BenchRecorder {
+    path: PathBuf,
+    entries: BTreeMap<String, Json>,
+}
+
+impl BenchRecorder {
+    /// Open a recorder targeting `default_path` (or `$TASKMAP_BENCH_OUT`),
+    /// pre-loading any entries already present so writes merge.
+    pub fn open(default_path: &str) -> Self {
+        let path: PathBuf = std::env::var("TASKMAP_BENCH_OUT")
+            .unwrap_or_else(|_| default_path.to_string())
+            .into();
+        let entries = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|json| match json.get("benches") {
+                Some(Json::Obj(m)) => Some(m.clone()),
+                _ => None,
+            })
+            .unwrap_or_default();
+        BenchRecorder { path, entries }
+    }
+
+    /// Record one result under its bench name, with numeric metadata (e.g.
+    /// `("threads", 8.0)`). Re-recording a name overwrites it.
+    pub fn record(&mut self, result: &BenchResult, meta: &[(&str, f64)]) {
+        let mut fields = vec![
+            ("ns_per_iter", Json::Num(result.per_iter_ns())),
+            (
+                "min_ns_per_iter",
+                Json::Num(result.min.as_nanos() as f64 / result.iters_per_sample as f64),
+            ),
+            (
+                "max_ns_per_iter",
+                Json::Num(result.max.as_nanos() as f64 / result.iters_per_sample as f64),
+            ),
+            ("samples", Json::Num(result.samples as f64)),
+            ("iters_per_sample", Json::Num(result.iters_per_sample as f64)),
+        ];
+        for &(k, v) in meta {
+            fields.push((k, Json::Num(v)));
+        }
+        self.entries.insert(result.name.clone(), Json::obj(fields));
+    }
+
+    /// Record a derived scalar (e.g. a speedup ratio) under a name of its
+    /// own.
+    pub fn record_scalar(&mut self, name: &str, key: &str, value: f64) {
+        self.entries
+            .insert(name.to_string(), Json::obj(vec![(key, Json::Num(value))]));
+    }
+
+    /// Write the merged trajectory file.
+    pub fn write(&self) -> std::io::Result<()> {
+        let json = Json::obj(vec![("benches", Json::Obj(self.entries.clone()))]);
+        std::fs::write(&self.path, json.to_string() + "\n")?;
+        println!("wrote {} bench entries to {}", self.entries.len(), self.path.display());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +172,56 @@ mod tests {
         });
         assert!(r.per_iter_ns() > 0.0);
         assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn recorder_merges_and_round_trips() {
+        let path = std::env::temp_dir().join(format!(
+            "taskmap-bench-recorder-test-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let path_str = path.to_str().unwrap().to_string();
+        let result = bench_cfg("recorder/unit", 3, 1.0, &mut || {
+            std::hint::black_box((0..10u64).sum::<u64>())
+        });
+        let mut rec = BenchRecorder {
+            path: path_str.clone().into(),
+            entries: BTreeMap::new(),
+        };
+        rec.record(&result, &[("threads", 4.0)]);
+        rec.write().unwrap();
+        // Reopen: the entry must survive, and new entries must merge.
+        let mut rec2 = BenchRecorder {
+            path: path_str.clone().into(),
+            entries: std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|t| Json::parse(&t).ok())
+                .and_then(|j| match j.get("benches") {
+                    Some(Json::Obj(m)) => Some(m.clone()),
+                    _ => None,
+                })
+                .unwrap_or_default(),
+        };
+        assert!(rec2.entries.contains_key("recorder/unit"));
+        rec2.record_scalar("recorder/speedup", "speedup_8t", 3.5);
+        rec2.write().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = Json::parse(&text).unwrap();
+        let benches = json.get("benches").unwrap();
+        assert!(benches.get("recorder/unit").is_some());
+        assert_eq!(
+            benches
+                .get("recorder/speedup")
+                .and_then(|s| s.get("speedup_8t"))
+                .and_then(|v| v.as_f64()),
+            Some(3.5)
+        );
+        let threads = benches
+            .get("recorder/unit")
+            .and_then(|u| u.get("threads"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(threads, Some(4.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -7,6 +7,39 @@
 //! failing seeds are debuggable.
 
 use super::rng::Rng;
+use crate::geom::Coords;
+use crate::sfc::PartOrdering;
+
+/// Thread counts the parallel-vs-sequential determinism properties sweep:
+/// the sequential reference, the smallest real fork, and an oversubscribed
+/// budget.
+pub const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Random coordinate set: `n` points, `dim` axes, integer-valued entries in
+/// `[0, extent)`. Shared by the partitioner/mapping/sweep properties and
+/// the benches.
+pub fn random_coords(rng: &mut Rng, n: usize, dim: usize, extent: usize) -> Coords {
+    let mut c = Coords::with_capacity(dim, n);
+    let mut p = vec![0f64; dim];
+    for _ in 0..n {
+        for x in p.iter_mut() {
+            *x = rng.below(extent) as f64;
+        }
+        c.push(&p);
+    }
+    c
+}
+
+/// A random MJ part-numbering ordering (never `Hilbert`, which the MJ
+/// kernel rejects).
+pub fn random_part_ordering(rng: &mut Rng) -> PartOrdering {
+    match rng.below(4) {
+        0 => PartOrdering::Z,
+        1 => PartOrdering::Gray,
+        2 => PartOrdering::FZ,
+        _ => PartOrdering::MFZ,
+    }
+}
 
 /// Run `f` for `cases` deterministically-derived seeds. Each invocation gets
 /// a fresh `Rng`; `f` returns `Err(msg)` to fail the property.

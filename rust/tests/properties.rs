@@ -3,7 +3,6 @@
 //! model, and the transforms under randomized inputs.
 
 use taskmap::apps::stencil::stencil_graph;
-use taskmap::geom::Coords;
 use taskmap::machine::{Allocation, BwModel, SparseAllocator, Torus};
 use taskmap::mapping::shift::shift_dim;
 use taskmap::mapping::{map_tasks, MapConfig};
@@ -12,29 +11,10 @@ use taskmap::metrics::{eval_full, eval_hops};
 use taskmap::mj::{mj_partition, MjConfig};
 use taskmap::sfc::hilbert::{hilbert_index, hilbert_point};
 use taskmap::sfc::PartOrdering;
-use taskmap::testutil::prop::{approx_eq, check};
+use taskmap::testutil::prop::{
+    approx_eq, check, random_coords, random_part_ordering as random_ordering, THREAD_COUNTS,
+};
 use taskmap::testutil::Rng;
-
-fn random_coords(rng: &mut Rng, n: usize, dim: usize, extent: usize) -> Coords {
-    let mut c = Coords::with_capacity(dim, n);
-    let mut p = vec![0f64; dim];
-    for _ in 0..n {
-        for x in p.iter_mut() {
-            *x = rng.below(extent) as f64;
-        }
-        c.push(&p);
-    }
-    c
-}
-
-fn random_ordering(rng: &mut Rng) -> PartOrdering {
-    match rng.below(4) {
-        0 => PartOrdering::Z,
-        1 => PartOrdering::Gray,
-        2 => PartOrdering::FZ,
-        _ => PartOrdering::MFZ,
-    }
-}
 
 #[test]
 fn prop_mj_partition_sizes_balanced() {
@@ -291,6 +271,186 @@ fn prop_mapping_quality_never_catastrophic() {
         let hops = eval_hops(&g, &m, &alloc);
         if hops.avg_hops > 2.5 {
             return Err(format!("avg hops {} > 2.5 on matched grids", hops.avg_hops));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mj_partition_parallel_bit_identical() {
+    // The fork–join MJ recursion must reproduce the sequential partition
+    // exactly — every ordering, every part count, every thread budget. The
+    // tiny grain forces real recursion splits on these small inputs.
+    use taskmap::par::Parallelism;
+    check("mj parallel == sequential", 30, |rng| {
+        let n = rng.range(2, 600);
+        let np = rng.range(1, n + 1);
+        let dim = rng.range(1, 5);
+        let coords = random_coords(rng, n, dim, 16);
+        let cfg = MjConfig {
+            ordering: random_ordering(rng),
+            longest_dim: rng.bool(),
+            uneven_prime: rng.bool(),
+        };
+        let seq = taskmap::mj::mj_partition_par(&coords, np, &cfg, Parallelism::sequential());
+        for &threads in THREAD_COUNTS.iter() {
+            let par = taskmap::mj::mj_partition_par(
+                &coords,
+                np,
+                &cfg,
+                Parallelism::threads(threads).with_grain(4),
+            );
+            if par != seq {
+                return Err(format!("diverged at threads={threads} (n={n} np={np})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mj_multisection_parallel_bit_identical() {
+    use taskmap::mj::{mj_multisection_par, multisection::MultisectionConfig};
+    use taskmap::par::Parallelism;
+    check("multisection parallel == sequential", 20, |rng| {
+        let dim = rng.range(1, 4);
+        let rd = rng.range(1, 4);
+        let counts: Vec<usize> = (0..rd).map(|_| rng.range(2, 5)).collect();
+        let p: usize = counts.iter().product();
+        let n = p * rng.range(1, 6) + rng.below(p);
+        let coords = random_coords(rng, n, dim, 32);
+        let cfg = MultisectionConfig {
+            counts,
+            longest_dim: rng.bool(),
+        };
+        let seq = mj_multisection_par(&coords, &cfg, Parallelism::sequential());
+        for &threads in THREAD_COUNTS.iter() {
+            let par = mj_multisection_par(
+                &coords,
+                &cfg,
+                Parallelism::threads(threads).with_grain(4),
+            );
+            if par != seq {
+                return Err(format!("diverged at threads={threads} ({cfg:?})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rotation_sweep_parallel_bit_identical() {
+    // The fanned-out sweep (memoized proc partitions, per-worker scratch
+    // arenas, chunked scoring) must reproduce the sequential sweep exactly:
+    // same chosen candidate, bit-equal scores, same mapping.
+    use taskmap::mapping::rotations::{rotation_sweep, NativeBackend, SweepConfig};
+    check("rotation sweep parallel == sequential", 8, |rng| {
+        let tx = rng.range(2, 6);
+        let ty = rng.range(2, 6);
+        let n = tx * ty;
+        let g = stencil_graph(&[tx, ty], rng.bool(), rng.range(1, 5) as f64);
+        let alloc = Allocation {
+            torus: Torus::torus(&[ty, tx]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        };
+        let p = alloc.proc_coords();
+        let map_cfg = MapConfig {
+            task_ordering: random_ordering(rng),
+            proc_ordering: random_ordering(rng),
+            longest_dim: rng.bool(),
+            uneven_prime: rng.bool(),
+        };
+        // Full 2D×2D candidate product (4 candidates), several scoring
+        // chunks per candidate.
+        let sweep = |threads: usize| SweepConfig {
+            max_candidates: 4,
+            chunk_edges: 7,
+            threads,
+        };
+        let seq = rotation_sweep(
+            &g,
+            &g.coords,
+            &p,
+            &alloc,
+            &map_cfg,
+            &sweep(1),
+            &NativeBackend,
+        );
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = rotation_sweep(
+                &g,
+                &g.coords,
+                &p,
+                &alloc,
+                &map_cfg,
+                &sweep(threads),
+                &NativeBackend,
+            );
+            if par.chosen != seq.chosen {
+                return Err(format!("chosen {} != {} at threads={threads}", par.chosen, seq.chosen));
+            }
+            if par.scores != seq.scores {
+                return Err(format!("scores diverged at threads={threads}"));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!("mapping diverged at threads={threads}"));
+            }
+        }
+        // The memoized proc-side path must also equal mapping materialized
+        // permuted coordinates directly (the pre-memoization semantics).
+        let (tp, pp) = &seq.candidates[seq.chosen];
+        let direct = map_tasks(&g.coords.permute_axes(tp), &p.permute_axes(pp), &map_cfg);
+        if seq.task_to_rank != direct {
+            return Err("memoized sweep mapping != direct map_tasks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_score_mappings_parallel_bit_identical() {
+    use taskmap::mapping::rotations::{score_mappings_par, NativeBackend};
+    use taskmap::par::Parallelism;
+    check("score_mappings parallel == sequential", 10, |rng| {
+        let k = rng.range(3, 7);
+        let n = k * k;
+        let g = stencil_graph(&[k, k], rng.bool(), rng.f64_range(0.5, 4.0));
+        let alloc = Allocation {
+            torus: Torus::torus(&[k, k]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        };
+        let mappings: Vec<Vec<u32>> = (0..rng.range(1, 9))
+            .map(|_| {
+                let mut m: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut m);
+                m
+            })
+            .collect();
+        let chunk = rng.range(1, 64);
+        let seq = score_mappings_par(
+            &g,
+            &mappings,
+            &alloc,
+            &NativeBackend,
+            chunk,
+            Parallelism::sequential(),
+        );
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = score_mappings_par(
+                &g,
+                &mappings,
+                &alloc,
+                &NativeBackend,
+                chunk,
+                Parallelism::threads(threads),
+            );
+            if par != seq {
+                return Err(format!("scores diverged at threads={threads}"));
+            }
         }
         Ok(())
     });
