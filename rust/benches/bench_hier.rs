@@ -1,0 +1,125 @@
+//! Bench: the hierarchical node→core mapper — wall time across thread
+//! budgets, plus the hierarchical-vs-flat quality comparison on the
+//! MiniGhost and HOMME presets. Results append to `BENCH_mapping.json`
+//! (override with `TASKMAP_BENCH_OUT`).
+//!
+//! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
+//! entries are recorded under `.../smoke` names so they never clobber the
+//! full trajectory rows.
+
+use taskmap::apps::homme::{Homme, HommeCoords};
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::apps::TaskGraph;
+use taskmap::geom::Coords;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{cray_xk7, Allocation, SparseAllocator};
+use taskmap::mapping::pipeline::{z2_map, Z2Config};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::metrics::eval_full;
+use taskmap::testutil::bench::{bench_quick, BenchRecorder};
+
+const ROT: usize = 12;
+
+fn allocator(ranks_per_node: usize) -> SparseAllocator {
+    SparseAllocator {
+        machine: cray_xk7(&[10, 8, 10]),
+        nodes_per_router: 2,
+        ranks_per_node,
+        occupancy: 0.4,
+    }
+}
+
+fn hier_cfg(threads: usize) -> HierConfig {
+    HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: ROT,
+        threads,
+        ..HierConfig::default()
+    }
+}
+
+/// Record flat-vs-hier quality (WeightedHops and Data(M) ratios, hier/flat:
+/// < 1.0 = the hierarchy wins) for one preset.
+fn record_quality(
+    rec: &mut BenchRecorder,
+    tag: &str,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+) {
+    let mut flat_cfg = Z2Config::z2_1();
+    flat_cfg.max_rotations = ROT;
+    let flat = z2_map(graph, tcoords, alloc, &flat_cfg, &NativeBackend);
+    let hier = map_hierarchical(graph, tcoords, alloc, &hier_cfg(0), &NativeBackend);
+    let mf = eval_full(graph, &flat, alloc);
+    let mh = eval_full(graph, &hier.task_to_rank, alloc);
+    let (lf, lh) = (mf.link.unwrap(), mh.link.unwrap());
+    let wh_ratio = mh.weighted_hops / mf.weighted_hops;
+    let data_ratio = lh.max_data / lf.max_data;
+    let swaps = hier.swaps_applied;
+    println!(
+        "{tag}: hier/flat WeightedHops {wh_ratio:.3}, Data(M) {data_ratio:.3}, {swaps} swaps"
+    );
+    rec.record_scalar(&format!("hier/{tag}/whops_vs_flat"), "ratio", wh_ratio);
+    rec.record_scalar(&format!("hier/{tag}/maxdata_vs_flat"), "ratio", data_ratio);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    println!("== hierarchical node-core mapper ==");
+    let suffix = if smoke { "/smoke" } else { "" };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    // MiniGhost preset.
+    let (tdims, rpn) = if smoke {
+        ([4usize, 4, 4], 16)
+    } else {
+        ([16usize, 16, 8], 16)
+    };
+    let mg = MiniGhost::weak_scaling(tdims);
+    let graph = mg.graph();
+    let alloc = allocator(rpn).allocate(mg.num_tasks() / rpn, 42);
+    for &threads in thread_counts {
+        let cfg = hier_cfg(threads);
+        let name = format!(
+            "hier_map/minighost/tasks={}/threads={threads}{suffix}",
+            mg.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    record_quality(
+        &mut rec,
+        &format!("minighost{suffix}"),
+        &graph,
+        &graph.coords,
+        &alloc,
+    );
+
+    // HOMME preset (one rank per element: bijective mapping).
+    let ne = if smoke { 8 } else { 24 };
+    let homme = Homme::new(ne);
+    let graph = homme.graph();
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let rpn = 16;
+    let alloc = allocator(rpn).allocate(homme.num_tasks() / rpn, 42);
+    for &threads in thread_counts {
+        let cfg = hier_cfg(threads);
+        let name = format!(
+            "hier_map/homme/tasks={}/threads={threads}{suffix}",
+            homme.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &tcoords, &alloc, &cfg, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    record_quality(&mut rec, &format!("homme{suffix}"), &graph, &tcoords, &alloc);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Hierarchical-vs-flat mapping experiment (`hier`): the two-level
+//! node→core mapper of [`crate::hier`] against the paper's flat Z2_1
+//! strategy, on the MiniGhost (Cray XK7) and HOMME (Titan) presets.
+//!
+//! Both mappers see the same task graph, coordinates, allocation, and
+//! rotation budget; the tables report the Section 3 metrics that the
+//! hierarchy targets — inter-node WeightedHops, Data(M), Latency(M) — with
+//! per-row ratios against the flat mapper (< 1.00 = hierarchical wins).
+
+use super::report::{f2, sci, Table};
+use super::Ctx;
+use crate::apps::homme::{Homme, HommeCoords};
+use crate::apps::minighost::MiniGhost;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::hier::{map_hierarchical, place_within_nodes, refine, HierConfig, IntraNodeStrategy};
+use crate::machine::{cray_xk7, titan_full, Allocation, SparseAllocator};
+use crate::mapping::pipeline::{z2_map, Z2Config};
+use crate::metrics::{eval_full, Metrics};
+use crate::par::Parallelism;
+
+const ROT: usize = 12;
+const PASSES: usize = 4;
+
+/// Run all strategies on one (graph, coords, allocation) case and append
+/// rows to `table`. The flat strategy is row 0 and the ratio denominator.
+/// The three hierarchical variants share one node-level rotation sweep
+/// (the dominant cost — identical by construction) and differ only in
+/// refinement and intra-node placement.
+fn run_case(
+    ctx: &Ctx,
+    table: &mut Table,
+    case: &str,
+    seed: u64,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+) {
+    let mut flat_cfg = Z2Config::z2_1();
+    flat_cfg.max_rotations = ROT;
+    let flat_map = z2_map(graph, tcoords, alloc, &flat_cfg, ctx.backend());
+
+    let hcfg = HierConfig {
+        intra: IntraNodeStrategy::DefaultOrder,
+        max_rotations: ROT,
+        ..HierConfig::default()
+    };
+    let base = map_hierarchical(graph, tcoords, alloc, &hcfg, ctx.backend());
+    let par = Parallelism::auto();
+    let sfc_map = place_within_nodes(
+        tcoords,
+        &base.task_to_node,
+        alloc,
+        IntraNodeStrategy::SfcOrder,
+        par,
+    );
+    let mut refined = base.task_to_node.clone();
+    refine::min_volume_refine(
+        graph,
+        &mut refined,
+        &alloc.node_routers(),
+        &alloc.torus,
+        PASSES,
+        par,
+    );
+    let minvol_map =
+        place_within_nodes(tcoords, &refined, alloc, IntraNodeStrategy::DefaultOrder, par);
+
+    let rows: [(&str, &[u32]); 4] = [
+        ("Flat Z2_1", &flat_map),
+        ("Hier default", &base.task_to_rank),
+        ("Hier sfc", &sfc_map),
+        ("Hier minvol", &minvol_map),
+    ];
+    let mut flat: Option<Metrics> = None;
+    for (name, mapping) in rows {
+        let m = eval_full(graph, mapping, alloc);
+        let lm = m.link.clone().expect("eval_full computes link metrics");
+        let denom = flat.get_or_insert_with(|| m.clone());
+        let denom_lm = denom.link.clone().unwrap();
+        table.push_row(vec![
+            case.to_string(),
+            seed.to_string(),
+            name.to_string(),
+            f2(m.weighted_hops),
+            sci(lm.max_data),
+            sci(lm.max_latency),
+            f2(m.weighted_hops / denom.weighted_hops),
+            f2(lm.max_data / denom_lm.max_data),
+            f2(lm.max_latency / denom_lm.max_latency),
+        ]);
+    }
+}
+
+fn headers() -> [&'static str; 9] {
+    [
+        "case",
+        "seed",
+        "strategy",
+        "WH",
+        "Data(M)",
+        "Latency(M)",
+        "WH/flat",
+        "Data/flat",
+        "Lat/flat",
+    ]
+}
+
+/// The `hier` experiment: one table per preset.
+pub fn run(ctx: &Ctx) -> Vec<Table> {
+    let mut mg_table = Table::new(
+        "Hier: MiniGhost XK7, hierarchical node-core mapping vs flat Z2_1",
+        &headers(),
+    );
+    let allocator = if ctx.full {
+        titan_full()
+    } else {
+        SparseAllocator {
+            machine: cray_xk7(&[10, 8, 10]),
+            nodes_per_router: 2,
+            ranks_per_node: 16,
+            occupancy: 0.4,
+        }
+    };
+    let mg_points: Vec<(usize, [usize; 3])> = if ctx.full {
+        vec![(8_192, [32, 16, 16]), (32_768, [32, 32, 32])]
+    } else {
+        vec![(512, [8, 8, 8]), (2_048, [16, 16, 8])]
+    };
+    for &(procs, tdims) in &mg_points {
+        let mg = MiniGhost::weak_scaling(tdims);
+        let graph = mg.graph();
+        let nodes = procs / allocator.ranks_per_node;
+        for seed in [ctx.seed, ctx.seed + 1] {
+            let alloc = allocator.allocate(nodes, seed);
+            run_case(
+                ctx,
+                &mut mg_table,
+                &format!("mg-{procs}"),
+                seed,
+                &graph,
+                &graph.coords,
+                &alloc,
+            );
+        }
+    }
+
+    let mut homme_table = Table::new(
+        "Hier: HOMME Titan, hierarchical node-core mapping vs flat Z2_1",
+        &headers(),
+    );
+    // One rank per element so the mapping is a bijection (the paper's
+    // largest Titan point does the same: 86,400 ranks for ne=120).
+    let ne = if ctx.full { 120 } else { 24 };
+    let homme = Homme::new(ne);
+    let graph = homme.graph();
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let procs = homme.num_tasks();
+    let nodes = procs / allocator.ranks_per_node;
+    for seed in [ctx.seed, ctx.seed + 1] {
+        let alloc = allocator.allocate(nodes, seed);
+        run_case(
+            ctx,
+            &mut homme_table,
+            &format!("homme-{procs}"),
+            seed,
+            &graph,
+            &tcoords,
+            &alloc,
+        );
+    }
+    vec![mg_table, homme_table]
+}

@@ -7,6 +7,7 @@
 //! maps each experiment id to the paper artifact it regenerates.
 
 pub mod experiments;
+pub mod hier_exp;
 pub mod homme_exp;
 pub mod minighost_exp;
 pub mod report;

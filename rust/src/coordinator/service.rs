@@ -12,9 +12,37 @@
 //! -> {"ok":true,"map":[0,1]}
 //! {"op":"ping"} -> {"ok":true,"pong":true}
 //! ```
+//!
+//! **Hierarchical mapping** — add a `"hier"` object to `"map"`. `pcoords`
+//! are then per-rank integer router coordinates on a torus (sizes derived
+//! as per-axis max+1, or given explicitly as `"torus":[..]`), consecutive
+//! `ranks_per_node` ranks form a node, and the optional `"edges"` array
+//! (`[u,v,weight]` rows) supplies the task graph the node-level sweep and
+//! `MinVolume` refinement score against:
+//! ```json
+//! {"op":"map","tcoords":[[0,0],[0,1],[1,0],[1,1]],
+//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],
+//!  "edges":[[0,1,2.5],[2,3,1.0]],
+//!  "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":4}}
+//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1]}
+//! ```
+//!
+//! **Evaluation** — `{"op":"eval"}` scores a submitted mapping with the
+//! Section 3 metrics engine (same allocation encoding as hierarchical
+//! map):
+//! ```json
+//! {"op":"eval","map":[0,1,2,3],"edges":[[0,1,2.5]],
+//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],"ranks_per_node":2}
+//! -> {"ok":true,"total_hops":0,"weighted_hops":0,...}
+//! ```
 
+use crate::apps::{Edge, TaskGraph};
 use crate::geom::Coords;
+use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use crate::machine::{Allocation, Torus};
+use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
+use crate::metrics::eval_full;
 use crate::sfc::PartOrdering;
 use crate::testutil::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -39,9 +67,14 @@ impl Service {
         let stop2 = stop.clone();
         listener.set_nonblocking(true)?;
         let handle = std::thread::spawn(move || {
+            // Idle backoff: start responsive (1 ms), double up to 50 ms
+            // while no clients arrive, reset on every accept. Bounds both
+            // the idle CPU burn and the shutdown-flag poll latency.
+            let mut idle_ms = 1u64;
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        idle_ms = 1;
                         // Detached: the worker exits when its client
                         // disconnects (read_line returns 0). Joining here
                         // would deadlock shutdown on long-lived clients.
@@ -50,7 +83,8 @@ impl Service {
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        std::thread::sleep(std::time::Duration::from_millis(idle_ms));
+                        idle_ms = (idle_ms * 2).min(50);
                     }
                     Err(_) => break,
                 }
@@ -113,6 +147,7 @@ pub fn handle_request(line: &str) -> Json {
     match req.get("op").and_then(|o| o.as_str()) {
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         Some("map") => handle_map(&req),
+        Some("eval") => handle_eval(&req),
         Some(op) => err(&format!("unknown op {op}")),
         None => err("missing op"),
     }
@@ -140,6 +175,266 @@ fn parse_coords(v: &Json) -> Result<Coords, String> {
         coords.push(&buf);
     }
     Ok(coords)
+}
+
+/// Strict non-negative integer from a JSON number: rejects fractional
+/// values instead of truncating them (`Json::as_usize` truncates, which
+/// would make malformed requests succeed with silently different
+/// semantics).
+fn as_index(v: &Json) -> Option<usize> {
+    let x = v.as_f64()?;
+    if x >= 0.0 && x.fract() == 0.0 && x < 9e15 {
+        Some(x as usize)
+    } else {
+        None
+    }
+}
+
+/// Parse `[u, v, weight]` edge rows (weight optional, default 1.0) into a
+/// task graph over `num_tasks` tasks. Metrics and the node-level sweep only
+/// read edges, so task coordinates are supplied by the caller (or dummy).
+fn parse_edges(v: &Json, num_tasks: usize) -> Result<Vec<Edge>, String> {
+    let rows = v.as_arr().ok_or("edges must be an array")?;
+    let mut edges = Vec::with_capacity(rows.len());
+    for row in rows {
+        let cells = row.as_arr().ok_or("edge rows must be arrays")?;
+        if cells.len() < 2 || cells.len() > 3 {
+            return Err("edge rows must be [u, v] or [u, v, weight]".into());
+        }
+        let u = as_index(&cells[0]).ok_or("edge endpoints must be integer indices")?;
+        let v = as_index(&cells[1]).ok_or("edge endpoints must be integer indices")?;
+        if u >= num_tasks || v >= num_tasks || u == v {
+            return Err(format!("bad edge ({u}, {v}) over {num_tasks} tasks"));
+        }
+        let w = match cells.get(2) {
+            Some(c) => c.as_f64().ok_or("edge weight must be a number")?,
+            None => 1.0,
+        };
+        if !(w > 0.0) {
+            return Err(format!("non-positive edge weight {w}"));
+        }
+        edges.push(Edge {
+            u: u as u32,
+            v: v as u32,
+            w,
+        });
+    }
+    Ok(edges)
+}
+
+/// Build an `Allocation` from per-rank integer router coordinates
+/// (`pcoords`), an optional explicit `"torus"` size array, and
+/// `ranks_per_node` (consecutive ranks share a node). Used by the
+/// hierarchical map extension and `op:eval`.
+fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Allocation, String> {
+    let nranks = pcoords.len();
+    let dim = pcoords.dim();
+    if ranks_per_node == 0 || nranks % ranks_per_node != 0 {
+        return Err(format!(
+            "ranks_per_node {ranks_per_node} must divide the {nranks} ranks"
+        ));
+    }
+    let sizes: Vec<usize> = match req.get("torus") {
+        Some(v) => {
+            let arr = v.as_arr().ok_or("torus must be a size array")?;
+            if arr.len() != dim {
+                return Err(format!("torus has {} sizes for {dim}-d pcoords", arr.len()));
+            }
+            arr.iter()
+                .map(|s| {
+                    as_index(s)
+                        .filter(|&x| x >= 1)
+                        .ok_or("torus sizes must be integers >= 1")
+                })
+                .collect::<Result<_, _>>()?
+        }
+        None => (0..dim)
+            .map(|d| {
+                pcoords
+                    .axis(d)
+                    .iter()
+                    .fold(0f64, |m, &v| m.max(v))
+                    .round() as usize
+                    + 1
+            })
+            .collect(),
+    };
+    let torus = Torus::torus(&sizes);
+    let mut core_router = Vec::with_capacity(nranks);
+    let mut buf = vec![0usize; dim];
+    for i in 0..nranks {
+        for (d, slot) in buf.iter_mut().enumerate() {
+            let v = pcoords.get(d, i);
+            let q = v.round();
+            if q < 0.0 || (q - v).abs() > 1e-9 || q as usize >= sizes[d] {
+                return Err(format!(
+                    "pcoords[{i}][{d}] = {v} is not an integer router coordinate in [0, {})",
+                    sizes[d]
+                ));
+            }
+            *slot = q as usize;
+        }
+        core_router.push(torus.id_of(&buf) as u32);
+    }
+    // The Allocation invariant (and what makes intra-node edges free): all
+    // ranks of a node sit on one router. Reject inconsistent groupings
+    // instead of silently zeroing real network traffic.
+    for node in 0..(nranks / ranks_per_node) {
+        let base = core_router[node * ranks_per_node];
+        for r in 1..ranks_per_node {
+            if core_router[node * ranks_per_node + r] != base {
+                return Err(format!(
+                    "ranks of node {node} have different router coordinates; \
+                     every ranks_per_node consecutive ranks must share a router"
+                ));
+            }
+        }
+    }
+    let core_node: Vec<u32> = (0..nranks).map(|i| (i / ranks_per_node) as u32).collect();
+    Ok(Allocation {
+        torus,
+        core_router,
+        core_node,
+        ranks_per_node,
+    })
+}
+
+/// The `"hier"` extension of `op:map`: two-level node→core mapping. The
+/// top-level `ordering`/`longest_dim`/`uneven_prime` knobs (already parsed
+/// into `map_cfg`) configure the node-level partition.
+fn handle_map_hier(
+    req: &Json,
+    hier: &Json,
+    tcoords: &Coords,
+    pcoords: &Coords,
+    map_cfg: MapConfig,
+) -> Json {
+    let rpn = match hier.get("ranks_per_node").map(as_index) {
+        Some(Some(r)) => r,
+        Some(None) => return err("hier.ranks_per_node must be a positive integer"),
+        None => 1,
+    };
+    let alloc = match parse_alloc(pcoords, req, rpn) {
+        Ok(a) => a,
+        Err(e) => return err(&format!("hier: {e}")),
+    };
+    let mut cfg = HierConfig {
+        node_map: map_cfg,
+        ..HierConfig::default()
+    };
+    if let Some(s) = hier.get("strategy") {
+        match s.as_str().and_then(IntraNodeStrategy::parse) {
+            Some(intra) => cfg.intra = intra,
+            None => return err("hier.strategy must be default|sfc|minvol"),
+        }
+    }
+    if let Some(v) = hier.get("passes") {
+        match as_index(v) {
+            // Only MinVolume refines; passes is a harmless no-op otherwise.
+            Some(p) => {
+                if let IntraNodeStrategy::MinVolume { .. } = cfg.intra {
+                    cfg.intra = IntraNodeStrategy::MinVolume { passes: p };
+                }
+            }
+            None => return err("hier.passes must be a non-negative integer"),
+        }
+    }
+    if let Some(v) = hier.get("rotations") {
+        match as_index(v) {
+            Some(r) => cfg.max_rotations = r.max(1),
+            None => return err("hier.rotations must be a non-negative integer"),
+        }
+    }
+    let edges = match req.get("edges") {
+        Some(v) => match parse_edges(v, tcoords.len()) {
+            Ok(e) => e,
+            Err(e) => return err(&format!("edges: {e}")),
+        },
+        None => Vec::new(),
+    };
+    let graph = TaskGraph {
+        num_tasks: tcoords.len(),
+        edges,
+        coords: tcoords.clone(),
+    };
+    let m = map_hierarchical(&graph, tcoords, &alloc, &cfg, &NativeBackend);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "map",
+            Json::Arr(m.task_to_rank.iter().map(|&r| Json::Num(r as f64)).collect()),
+        ),
+        (
+            "nodes",
+            Json::Arr(m.task_to_node.iter().map(|&n| Json::Num(n as f64)).collect()),
+        ),
+        ("swaps", Json::Num(m.swaps_applied as f64)),
+    ])
+}
+
+/// `op:eval`: Section 3 metrics scalars for a submitted mapping.
+fn handle_eval(req: &Json) -> Json {
+    let mapping: Vec<u32> = match req.get("map").and_then(|m| m.as_arr()) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for v in arr {
+                // Range-check before the u32 cast: values >= 2^32 must
+                // error, not wrap around into valid ranks.
+                match as_index(v) {
+                    Some(r) if r <= u32::MAX as usize => out.push(r as u32),
+                    _ => return err("map entries must be integer rank indices"),
+                }
+            }
+            out
+        }
+        None => return err("missing map"),
+    };
+    if mapping.is_empty() {
+        return err("empty map");
+    }
+    let pcoords = match req.get("pcoords").map(parse_coords) {
+        Some(Ok(c)) => c,
+        Some(Err(e)) => return err(&format!("pcoords: {e}")),
+        None => return err("missing pcoords"),
+    };
+    let rpn = match req.get("ranks_per_node").map(as_index) {
+        Some(Some(r)) => r,
+        Some(None) => return err("ranks_per_node must be a positive integer"),
+        None => 1,
+    };
+    let alloc = match parse_alloc(&pcoords, req, rpn) {
+        Ok(a) => a,
+        Err(e) => return err(&e),
+    };
+    if let Some(&r) = mapping.iter().find(|&&r| r as usize >= alloc.num_ranks()) {
+        return err(&format!("map rank {r} out of range {}", alloc.num_ranks()));
+    }
+    let num_tasks = mapping.len();
+    let edges = match req.get("edges") {
+        Some(v) => match parse_edges(v, num_tasks) {
+            Ok(e) => e,
+            Err(e) => return err(&format!("edges: {e}")),
+        },
+        None => return err("missing edges"),
+    };
+    let graph = TaskGraph {
+        num_tasks,
+        edges,
+        coords: Coords::from_axes(vec![vec![0.0; num_tasks]]),
+    };
+    let m = eval_full(&graph, &mapping, &alloc);
+    let lm = m.link.as_ref().expect("eval_full computes link metrics");
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("total_hops", Json::Num(m.total_hops)),
+        ("avg_hops", Json::Num(m.avg_hops)),
+        ("weighted_hops", Json::Num(m.weighted_hops)),
+        ("total_messages", Json::Num(m.total_messages as f64)),
+        ("num_edges", Json::Num(m.num_edges as f64)),
+        ("max_data", Json::Num(lm.max_data)),
+        ("avg_data", Json::Num(lm.avg_data)),
+        ("max_latency", Json::Num(lm.max_latency)),
+    ])
 }
 
 fn handle_map(req: &Json) -> Json {
@@ -170,6 +465,12 @@ fn handle_map(req: &Json) -> Json {
             .map(|b| b == &Json::Bool(true))
             .unwrap_or(false),
     };
+    if let Some(h) = req.get("hier") {
+        if !matches!(h, Json::Obj(_)) {
+            return err("hier must be an object");
+        }
+        return handle_map_hier(req, h, &tcoords, &pcoords, cfg);
+    }
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
     Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -268,6 +569,142 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
         let m = resp.get("map").unwrap().as_arr().unwrap();
         assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn hier_map_round_trip() {
+        // 8 tasks on a chain, 4 ranks on 2 nodes (2 ranks each) at routers
+        // 0 and 1 of a 2-ring: the hierarchical mapper must fill each node
+        // with 4 tasks round-robin over its 2 ranks.
+        let resp = handle_request(
+            r#"{"op":"map",
+                "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+                "pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
+                "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m: Vec<usize> = resp
+            .get("map")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let nodes: Vec<usize> = resp
+            .get("nodes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(m.len(), 8);
+        assert_eq!(nodes.len(), 8);
+        // Node assignment respects the rank mapping (ranks 0,1 = node 0).
+        for t in 0..8 {
+            assert_eq!(m[t] / 2, nodes[t]);
+        }
+        // Chain halves should stay together: exactly one cut edge.
+        let cuts = (0..7).filter(|&t| nodes[t] != nodes[t + 1]).count();
+        assert_eq!(cuts, 1, "nodes: {nodes:?}");
+    }
+
+    #[test]
+    fn hier_rejects_bad_strategy_and_rpn() {
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "hier":{"strategy":"bogus"}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // A non-object hier value must error, not silently enable
+        // hierarchical mode with defaults.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],"hier":"minvol"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1],[2]],
+                "hier":{"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn eval_round_trip() {
+        // Two ranks per node on a 4-ring: edge (0,1) is intra-node (free),
+        // edge (1,2) crosses routers 0 -> 1 (1 hop, weight 3).
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("total_hops").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            resp.get("weighted_hops").and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert_eq!(
+            resp.get("total_messages").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        assert_eq!(resp.get("max_data").and_then(|v| v.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    fn strict_integer_and_node_grouping_validation() {
+        // Fractional ranks_per_node must not silently truncate.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "pcoords":[[0],[0]],"ranks_per_node":1.7}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Ranks grouped into one node must share a router: routers 0 and 1
+        // in one "node" would silently zero real network traffic.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "pcoords":[[0],[1]],"ranks_per_node":2}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Fractional edge endpoints rejected too.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0.5,1]],"pcoords":[[0],[1]]}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Malformed hier tuning knobs error instead of silently using
+        // defaults.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "hier":{"strategy":"minvol","passes":2.5}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "hier":{"rotations":-3}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn eval_rejects_bad_requests() {
+        // Missing edges.
+        let resp =
+            handle_request(r#"{"op":"eval","map":[0,1],"pcoords":[[0],[1]]}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Rank out of range.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,9],"edges":[[0,1]],"pcoords":[[0],[1]]}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Non-integer router coordinate.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0.5],[1]]}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Hierarchical node→core task mapping: the two-level mapper.
+//!
+//! The flat mapper (Section 4.2) partitions tasks straight down to ranks,
+//! but the paper's own Section 3 model prices intra-node messages at zero —
+//! ranks of one node share a router, so placement *within* a node never
+//! touches the network. On 16–32 ranks/node machines that is most of every
+//! rank's neighbor set, and two-level node→PE mapping (Schulz & Träff,
+//! arXiv:1702.04164; Schulz & Woydt, arXiv:2504.01726) exploits it
+//! directly. This subsystem does the geometric version:
+//!
+//! 1. **Node level** — the MJ rotation sweep runs over **node** coordinates
+//!    (one point per node, from [`crate::machine::Allocation::node_coords`])
+//!    instead of rank coordinates, producing a balanced task→node
+//!    assignment: with `tnum == num_ranks`, every node receives exactly its
+//!    `ranks_per_node` tasks. Scoring reuses the WeightedHops kernel
+//!    against node routers, which prices intra-node edges at zero by
+//!    construction.
+//! 2. **Refinement** (the [`IntraNodeStrategy::MinVolume`] strategy) —
+//!    greedy boundary-task swaps ([`refine`]) directly minimize the
+//!    inter-node weighted communication volume the geometric cut only
+//!    bounds implicitly.
+//! 3. **Core level** — each node's tasks are placed on its ranks by the
+//!    pluggable [`IntraNodeStrategy`]: platform order, or a Hilbert-curve
+//!    order over the node's task coordinates (cheap cache/NUMA locality;
+//!    network metrics are unaffected by construction).
+//!
+//! # The two-level contract
+//!
+//! For any input where `tnum == alloc.num_ranks()`, [`map_hierarchical`]
+//! returns a **bijection** task→rank that respects the node assignment:
+//! `alloc.core_node[rank(t)] == task_to_node[t]` for every task. With
+//! `tnum > num_ranks` tasks are distributed round-robin over their node's
+//! ranks (the flat mapper's convention); with `tnum < num_nodes` a compact
+//! node subset is selected (Section 4.2 case 3) and the remaining nodes
+//! idle.
+//!
+//! # Parallelism and determinism
+//!
+//! Every level runs through the [`crate::par`] budget — the node-level
+//! sweep fans candidates out exactly like the flat sweep (reusing
+//! `MjScratch`/`MappingScratch`/`ScoreScratch` arenas per worker), the
+//! refinement proposes swaps in parallel over nodes, and the core-level
+//! placement maps over nodes with per-worker Hilbert key scratch. All
+//! three are index-addressed, so the full hierarchical mapping is
+//! **bit-identical to the sequential path at every thread count** (pinned
+//! by property tests in `tests/properties.rs`).
+
+pub mod refine;
+
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::machine::Allocation;
+use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
+use crate::mapping::shift::shift_torus_coords;
+use crate::mapping::MapConfig;
+use crate::par::{self, Parallelism};
+use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
+
+/// How each node's tasks are placed on its ranks (and, for `MinVolume`,
+/// how the node assignment itself is polished first).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntraNodeStrategy {
+    /// Tasks in index order onto ranks in the platform's default order.
+    DefaultOrder,
+    /// Tasks ordered along the Hilbert curve over their coordinates, then
+    /// onto ranks in order — consecutive ranks get curve-adjacent tasks.
+    SfcOrder,
+    /// [`refine::min_volume_refine`] boundary swaps on the node assignment
+    /// (up to `passes` passes), then default-order placement within nodes.
+    MinVolume {
+        passes: usize,
+    },
+}
+
+impl IntraNodeStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntraNodeStrategy::DefaultOrder => "default",
+            IntraNodeStrategy::SfcOrder => "sfc",
+            IntraNodeStrategy::MinVolume { .. } => "minvol",
+        }
+    }
+
+    /// Parse a strategy name (the service protocol and CLI use these).
+    pub fn parse(s: &str) -> Option<IntraNodeStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "default" => Some(IntraNodeStrategy::DefaultOrder),
+            "sfc" => Some(IntraNodeStrategy::SfcOrder),
+            "minvol" | "minvolume" => Some(IntraNodeStrategy::MinVolume { passes: 4 }),
+            _ => None,
+        }
+    }
+}
+
+/// Hierarchical mapper configuration.
+#[derive(Clone, Debug)]
+pub struct HierConfig {
+    /// MJ configuration for the node-level partition (both sides).
+    pub node_map: MapConfig,
+    /// Intra-node placement strategy.
+    pub intra: IntraNodeStrategy,
+    /// Torus wraparound shift of the node coordinates before partitioning.
+    pub shift: bool,
+    /// Node-coordinate dimensions to ignore while partitioning ("+E").
+    pub drop_node_dims: Vec<usize>,
+    /// Node-level rotation-sweep candidate cap (1 = identity rotation).
+    pub max_rotations: usize,
+    /// Edge-chunk size for sweep scoring (see [`SweepConfig`]).
+    pub chunk_edges: usize,
+    /// Worker threads: `0` = auto, `1` = the sequential reference path.
+    /// The mapping is bit-identical at every thread count.
+    pub threads: usize,
+}
+
+impl Default for HierConfig {
+    fn default() -> Self {
+        HierConfig {
+            node_map: MapConfig::default(),
+            intra: IntraNodeStrategy::MinVolume { passes: 4 },
+            shift: true,
+            drop_node_dims: vec![],
+            max_rotations: 12,
+            chunk_edges: 32768,
+            threads: 0,
+        }
+    }
+}
+
+impl HierConfig {
+    fn parallelism(&self) -> Parallelism {
+        match self.threads {
+            0 => Parallelism::auto(),
+            n => Parallelism::threads(n),
+        }
+    }
+}
+
+/// Result of a hierarchical mapping.
+#[derive(Clone, Debug)]
+pub struct HierMapping {
+    /// Final task→rank assignment.
+    pub task_to_rank: Vec<u32>,
+    /// Task→node assignment (post-refinement).
+    pub task_to_node: Vec<u32>,
+    /// Inter-node WeightedHops of the chosen node-level sweep candidate,
+    /// **before** refinement (the sweep's own f32-accumulated score).
+    pub node_score: f64,
+    /// Boundary swaps applied by `MinVolume` refinement (0 otherwise).
+    pub swaps_applied: usize,
+}
+
+/// Prepare the node coordinates per the config: optional torus shift, then
+/// axis dropping. (Node-level partitioning always works on raw router
+/// coordinates — bandwidth scaling and the box transform are rank-level
+/// concerns of the flat pipeline.)
+pub fn prepare_node_coords(alloc: &Allocation, cfg: &HierConfig) -> Coords {
+    let mut ncoords = alloc.node_coords();
+    if cfg.shift {
+        shift_torus_coords(&mut ncoords, &alloc.torus.sizes, &alloc.torus.wrap);
+    }
+    if !cfg.drop_node_dims.is_empty() {
+        let keep: Vec<usize> = (0..ncoords.dim())
+            .filter(|d| !cfg.drop_node_dims.contains(d))
+            .collect();
+        ncoords = ncoords.select_axes(&keep);
+    }
+    ncoords
+}
+
+/// The node-level allocation: one pseudo-rank per node, placed on the
+/// node's router. Sweep scoring against it computes exactly the inter-node
+/// WeightedHops of the induced task→node assignment.
+fn node_level_alloc(alloc: &Allocation) -> Allocation {
+    let node_routers = alloc.node_routers();
+    let nn = node_routers.len();
+    Allocation {
+        torus: alloc.torus.clone(),
+        core_router: node_routers,
+        core_node: (0..nn as u32).collect(),
+        ranks_per_node: 1,
+    }
+}
+
+/// Run the two-level mapper. `tcoords` are the task coordinates handed to
+/// the node-level partition (HOMME passes its cube projection here, like
+/// the flat pipeline); scoring always uses the true router coordinates
+/// from `alloc`.
+pub fn map_hierarchical(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    cfg: &HierConfig,
+    backend: &dyn WhopsBackend,
+) -> HierMapping {
+    assert_eq!(tcoords.len(), graph.num_tasks);
+    let par = cfg.parallelism();
+    let node_alloc = node_level_alloc(alloc);
+    let node_routers = &node_alloc.core_router;
+    let ncoords = prepare_node_coords(alloc, cfg);
+
+    // Level 1: the rotation sweep over node coordinates. Its "ranks" are
+    // nodes, so the winning mapping *is* the task→node assignment.
+    let sweep_cfg = SweepConfig {
+        max_candidates: cfg.max_rotations.max(1),
+        chunk_edges: cfg.chunk_edges,
+        threads: cfg.threads,
+    };
+    let sweep = rotation_sweep(
+        graph,
+        tcoords,
+        &ncoords,
+        &node_alloc,
+        &cfg.node_map,
+        &sweep_cfg,
+        backend,
+    );
+    let node_score = sweep.scores[sweep.chosen];
+    let mut task_to_node = sweep.task_to_rank;
+
+    // Level 1.5: MinVolume boundary refinement.
+    let swaps_applied = match cfg.intra {
+        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine(
+            graph,
+            &mut task_to_node,
+            node_routers,
+            &alloc.torus,
+            passes,
+            par,
+        ),
+        _ => 0,
+    };
+
+    // Level 2: place each node's tasks on its ranks, in parallel over
+    // nodes with per-worker Hilbert scratch.
+    let task_to_rank = place_within_nodes(tcoords, &task_to_node, alloc, cfg.intra, par);
+    HierMapping {
+        task_to_rank,
+        task_to_node,
+        node_score,
+        swaps_applied,
+    }
+}
+
+/// Level 2: intra-node placement. Tasks of node `n` (ascending task index)
+/// are ordered by the strategy and assigned round-robin to the node's
+/// ranks (ascending rank index). Parallel over nodes; index-addressed, so
+/// the result is identical at every thread count.
+pub fn place_within_nodes(
+    tcoords: &Coords,
+    task_to_node: &[u32],
+    alloc: &Allocation,
+    strategy: IntraNodeStrategy,
+    par: Parallelism,
+) -> Vec<u32> {
+    let nn = alloc.num_nodes();
+    let ranks_by_node = alloc.ranks_by_node();
+    let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+    for (t, &n) in task_to_node.iter().enumerate() {
+        tasks_by_node[n as usize].push(t as u32);
+    }
+    if strategy == IntraNodeStrategy::SfcOrder {
+        // Hilbert resolution: enough bits to separate distinct coordinates
+        // without overflowing the 128-bit index (same policy as the Hilbert
+        // partition path in `mapping`). Only SfcOrder reorders within a
+        // node; the other strategies keep task-index order and skip the
+        // fan-out entirely.
+        let bits = (128 / tcoords.dim().max(1)).min(16) as u32;
+        let node_ids: Vec<u32> = (0..nn as u32).collect();
+        let sorted: Vec<Vec<u32>> = par::map_with(
+            par,
+            &node_ids,
+            Vec::new,
+            |keys: &mut Vec<(u128, u32)>, _i, &n| {
+                let mut tasks = tasks_by_node[n as usize].clone();
+                hilbert_sort_f64_subset_into(tcoords, &mut tasks, bits, keys);
+                tasks
+            },
+        );
+        tasks_by_node = sorted;
+    }
+    let mut task_to_rank = vec![0u32; task_to_node.len()];
+    for (n, tasks) in tasks_by_node.iter().enumerate() {
+        let ranks = &ranks_by_node[n];
+        if tasks.is_empty() {
+            continue;
+        }
+        assert!(!ranks.is_empty(), "node {n} has tasks but no ranks");
+        for (k, &t) in tasks.iter().enumerate() {
+            task_to_rank[t as usize] = ranks[k % ranks.len()];
+        }
+    }
+    task_to_rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::{SparseAllocator, Torus};
+    use crate::mapping::rotations::NativeBackend;
+    use crate::metrics::eval_hops;
+
+    fn toy_alloc() -> Allocation {
+        SparseAllocator {
+            machine: Torus::torus(&[6, 6, 6]),
+            nodes_per_router: 2,
+            ranks_per_node: 8,
+            occupancy: 0.3,
+        }
+        .allocate(16, 5) // 128 ranks
+    }
+
+    fn cfg(intra: IntraNodeStrategy) -> HierConfig {
+        HierConfig {
+            intra,
+            max_rotations: 4,
+            threads: 1,
+            ..HierConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_strategies_produce_node_respecting_bijections() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
+        for intra in [
+            IntraNodeStrategy::DefaultOrder,
+            IntraNodeStrategy::SfcOrder,
+            IntraNodeStrategy::MinVolume { passes: 2 },
+        ] {
+            let m = map_hierarchical(&g, &g.coords, &alloc, &cfg(intra), &NativeBackend);
+            let mut s = m.task_to_rank.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..128u32).collect::<Vec<_>>(), "{intra:?}");
+            // The rank-level mapping must respect the node assignment.
+            for t in 0..128 {
+                assert_eq!(
+                    alloc.core_node[m.task_to_rank[t] as usize],
+                    m.task_to_node[t],
+                    "{intra:?}: task {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn node_assignment_is_balanced() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let m = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::DefaultOrder),
+            &NativeBackend,
+        );
+        let mut sizes = vec![0usize; alloc.num_nodes()];
+        for &n in &m.task_to_node {
+            sizes[n as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s == 8), "{sizes:?}");
+    }
+
+    #[test]
+    fn minvolume_never_worse_than_default_on_internode_whops() {
+        // Refinement applies only strictly-improving swaps on exactly this
+        // objective, starting from the same node-level sweep result.
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let dflt = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::DefaultOrder),
+            &NativeBackend,
+        );
+        let minv = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::MinVolume { passes: 4 }),
+            &NativeBackend,
+        );
+        let wh = |m: &HierMapping| eval_hops(&g, &m.task_to_rank, &alloc).weighted_hops;
+        let (wd, wm) = (wh(&dflt), wh(&minv));
+        assert!(wm <= wd * (1.0 + 1e-9) + 1e-9, "minvol {wm} > default {wd}");
+    }
+
+    #[test]
+    fn intra_node_placement_does_not_change_network_metrics() {
+        // SfcOrder permutes only within nodes, so hop metrics must equal
+        // DefaultOrder's exactly.
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let dflt = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::DefaultOrder),
+            &NativeBackend,
+        );
+        let sfc = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::SfcOrder),
+            &NativeBackend,
+        );
+        assert_eq!(dflt.task_to_node, sfc.task_to_node);
+        let (md, ms) = (
+            eval_hops(&g, &dflt.task_to_rank, &alloc),
+            eval_hops(&g, &sfc.task_to_rank, &alloc),
+        );
+        assert_eq!(md.total_hops, ms.total_hops);
+        assert_eq!(md.weighted_hops, ms.weighted_hops);
+        assert_eq!(md.total_messages, ms.total_messages);
+    }
+
+    #[test]
+    fn more_tasks_than_ranks_round_robins_within_nodes() {
+        let alloc = toy_alloc(); // 128 ranks, 16 nodes
+        let g = stencil_graph(&[8, 8, 4], false, 1.0); // 256 tasks
+        let m = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::DefaultOrder),
+            &NativeBackend,
+        );
+        let mut loads = vec![0usize; 128];
+        for &r in &m.task_to_rank {
+            loads[r as usize] += 1;
+        }
+        assert!(loads.iter().all(|&l| l == 2), "{loads:?}");
+    }
+
+    #[test]
+    fn fewer_tasks_than_nodes_uses_subset() {
+        let alloc = toy_alloc(); // 16 nodes
+        let g = stencil_graph(&[2, 4], false, 1.0); // 8 tasks
+        let m = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::DefaultOrder),
+            &NativeBackend,
+        );
+        let mut nodes_used: Vec<u32> = m.task_to_node.clone();
+        nodes_used.sort_unstable();
+        nodes_used.dedup();
+        assert_eq!(nodes_used.len(), 8);
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in ["default", "sfc", "minvol"] {
+            assert_eq!(IntraNodeStrategy::parse(s).unwrap().name(), s);
+        }
+        assert!(IntraNodeStrategy::parse("nope").is_none());
+    }
+}

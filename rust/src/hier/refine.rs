@@ -1,0 +1,358 @@
+//! MinVolume refinement: greedy boundary swaps on the task→node
+//! assignment.
+//!
+//! The node-level geometric partition minimizes cut volume only implicitly
+//! (compact parts have small boundaries); this pass attacks it directly.
+//! The objective is the inter-node **weighted hops** of the assignment —
+//! `Σ_e w(e) · hops(node(u), node(v))` over the task graph, which is
+//! exactly the Section 3 WeightedHops metric of any mapping that respects
+//! the assignment (intra-node edges cost zero, and every rank of a node
+//! shares its router). A swap of two tasks in different nodes preserves
+//! per-node task counts, so refinement never breaks the balance the
+//! bijection relies on.
+//!
+//! # Determinism
+//!
+//! Each pass has two phases:
+//! 1. **Propose** (parallel over nodes, [`crate::par::map`]): for every
+//!    boundary task, find the best swap partner among the tasks of its
+//!    neighboring nodes against the *frozen* pass-start assignment.
+//!    Proposals are pure functions of that snapshot and land in
+//!    index-addressed slots, so they do not depend on the thread budget.
+//! 2. **Apply** (sequential): walk proposals in (node, task) order,
+//!    re-evaluate each gain against the *current* assignment, and apply it
+//!    only if still strictly improving.
+//!
+//! Both phases are deterministic, so refinement — like every other level
+//! of the hierarchical mapper — is bit-identical at every thread count.
+
+use crate::apps::TaskGraph;
+use crate::machine::Torus;
+use crate::par::{self, Parallelism};
+
+/// Compressed adjacency of the task graph (both directions per edge).
+pub(crate) struct Adjacency {
+    off: Vec<u32>,
+    nbr: Vec<u32>,
+    w: Vec<f64>,
+}
+
+impl Adjacency {
+    pub(crate) fn build(graph: &TaskGraph) -> Adjacency {
+        let n = graph.num_tasks;
+        let mut deg = vec![0u32; n];
+        for e in &graph.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let mut off = vec![0u32; n + 1];
+        for t in 0..n {
+            off[t + 1] = off[t] + deg[t];
+        }
+        let total = off[n] as usize;
+        let mut nbr = vec![0u32; total];
+        let mut w = vec![0f64; total];
+        let mut cursor = off.clone();
+        for e in &graph.edges {
+            let (u, v) = (e.u as usize, e.v as usize);
+            nbr[cursor[u] as usize] = e.v;
+            w[cursor[u] as usize] = e.w;
+            cursor[u] += 1;
+            nbr[cursor[v] as usize] = e.u;
+            w[cursor[v] as usize] = e.w;
+            cursor[v] += 1;
+        }
+        Adjacency { off, nbr, w }
+    }
+
+    #[inline]
+    fn neighbors(&self, t: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (lo, hi) = (self.off[t] as usize, self.off[t + 1] as usize);
+        self.nbr[lo..hi].iter().copied().zip(self.w[lo..hi].iter().copied())
+    }
+}
+
+/// Node-pair hop distances: a dense table while `nn²` stays cheap (the
+/// common case — the whole point of the hierarchy is `nn << nranks`), else
+/// computed on the fly from the torus.
+struct NodeHops<'a> {
+    nn: usize,
+    table: Option<Vec<f64>>,
+    torus: &'a Torus,
+    routers: &'a [u32],
+}
+
+/// Largest dense table: 4M entries (32 MB). Beyond that (only the very
+/// largest `--full` sweeps) distances are recomputed per lookup.
+const MAX_TABLE_ENTRIES: usize = 1 << 22;
+
+impl<'a> NodeHops<'a> {
+    fn build(torus: &'a Torus, routers: &'a [u32]) -> NodeHops<'a> {
+        let nn = routers.len();
+        let table = if nn * nn <= MAX_TABLE_ENTRIES {
+            let mut hops = vec![0f64; nn * nn];
+            for a in 0..nn {
+                for b in (a + 1)..nn {
+                    let h =
+                        torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64;
+                    hops[a * nn + b] = h;
+                    hops[b * nn + a] = h;
+                }
+            }
+            Some(hops)
+        } else {
+            None
+        };
+        NodeHops {
+            nn,
+            table,
+            torus,
+            routers,
+        }
+    }
+
+    #[inline]
+    fn get(&self, a: u32, b: u32) -> f64 {
+        match &self.table {
+            Some(t) => t[a as usize * self.nn + b as usize],
+            None => self
+                .torus
+                .hop_dist_ids(self.routers[a as usize] as usize, self.routers[b as usize] as usize)
+                as f64,
+        }
+    }
+}
+
+/// One proposed swap, produced by the parallel phase.
+#[derive(Clone, Copy, Debug)]
+struct Swap {
+    u: u32,
+    b: u32,
+}
+
+/// Cost of placing task `t` on node `x`: Σ over t's edges of
+/// `w · hops(x, node(neighbor))`.
+#[inline]
+fn move_cost(adj: &Adjacency, hops: &NodeHops<'_>, node_of: &[u32], t: usize, x: u32) -> f64 {
+    let mut c = 0f64;
+    for (n, w) in adj.neighbors(t) {
+        c += w * hops.get(x, node_of[n as usize]);
+    }
+    c
+}
+
+/// Gain (strictly positive = improvement) of swapping task `u` (on node
+/// `a`) with task `b` (on node `bn`). The `2·w(u,b)·hops(a,bn)` correction
+/// accounts for a direct edge between the pair, whose cost is unchanged by
+/// the swap but double-counted by the two move costs.
+fn swap_gain(
+    adj: &Adjacency,
+    hops: &NodeHops<'_>,
+    node_of: &[u32],
+    u: usize,
+    a: u32,
+    b: usize,
+    bn: u32,
+) -> f64 {
+    let mut direct = 0f64;
+    for (n, w) in adj.neighbors(u) {
+        if n as usize == b {
+            direct += w;
+        }
+    }
+    move_cost(adj, hops, node_of, u, a) + move_cost(adj, hops, node_of, b, bn)
+        - move_cost(adj, hops, node_of, u, bn)
+        - move_cost(adj, hops, node_of, b, a)
+        - 2.0 * direct * hops.get(a, bn)
+}
+
+/// Inter-node weighted hops of an assignment (the refinement objective;
+/// exposed for tests and experiment reporting).
+pub fn internode_weighted_hops(
+    graph: &TaskGraph,
+    node_of: &[u32],
+    node_routers: &[u32],
+    torus: &Torus,
+) -> f64 {
+    let mut total = 0f64;
+    for e in &graph.edges {
+        let (a, b) = (node_of[e.u as usize], node_of[e.v as usize]);
+        if a != b {
+            let h = torus.hop_dist_ids(
+                node_routers[a as usize] as usize,
+                node_routers[b as usize] as usize,
+            ) as f64;
+            total += e.w * h;
+        }
+    }
+    total
+}
+
+/// Run up to `passes` refinement passes over `node_of` (task→node, modified
+/// in place). Returns the number of swaps applied. Deterministic and
+/// independent of the thread budget (see the module docs).
+pub fn min_volume_refine(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    passes: usize,
+    par: Parallelism,
+) -> usize {
+    assert_eq!(node_of.len(), graph.num_tasks);
+    let nn = node_routers.len();
+    if nn < 2 || graph.edges.is_empty() {
+        return 0;
+    }
+    let adj = Adjacency::build(graph);
+    let hops = NodeHops::build(torus, node_routers);
+    let node_ids: Vec<u32> = (0..nn as u32).collect();
+    let mut applied_total = 0usize;
+    for _pass in 0..passes {
+        // Tasks grouped by node against the pass-start snapshot.
+        let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+        for (t, &x) in node_of.iter().enumerate() {
+            tasks_by_node[x as usize].push(t as u32);
+        }
+        // Phase 1: propose, in parallel over nodes, against the frozen
+        // snapshot. &*node_of reborrows immutably for the scope of the map.
+        let snapshot: &[u32] = node_of;
+        let proposals: Vec<Vec<Swap>> = par::map(par, &node_ids, |_, &a| {
+            let mut out = Vec::new();
+            for &u in &tasks_by_node[a as usize] {
+                // Candidate target nodes: distinct nodes of u's neighbors,
+                // ascending, excluding u's own.
+                let mut targets: Vec<u32> = adj
+                    .neighbors(u as usize)
+                    .map(|(n, _)| snapshot[n as usize])
+                    .filter(|&x| x != a)
+                    .collect();
+                if targets.is_empty() {
+                    continue;
+                }
+                targets.sort_unstable();
+                targets.dedup();
+                let mut best: Option<(f64, u32)> = None;
+                // Hoist the partner-independent halves of the gain:
+                // cost(u, a) per boundary task, cost(u, bn) per target
+                // node. The summation order below matches `swap_gain`
+                // term-for-term, so phase 2's re-check recomputes the
+                // exact same f64.
+                let cost_u_a = move_cost(&adj, &hops, snapshot, u as usize, a);
+                for &bn in &targets {
+                    let cost_u_bn = move_cost(&adj, &hops, snapshot, u as usize, bn);
+                    let h_ab = hops.get(a, bn);
+                    for &b in &tasks_by_node[bn as usize] {
+                        let mut direct = 0f64;
+                        for (n, w) in adj.neighbors(u as usize) {
+                            if n == b {
+                                direct += w;
+                            }
+                        }
+                        let g = cost_u_a + move_cost(&adj, &hops, snapshot, b as usize, bn)
+                            - cost_u_bn
+                            - move_cost(&adj, &hops, snapshot, b as usize, a)
+                            - 2.0 * direct * h_ab;
+                        let better = match best {
+                            None => g > 0.0,
+                            // Strictly-greater gain wins; ties keep the
+                            // earlier (smaller) partner index.
+                            Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
+                        };
+                        if better && g > 0.0 {
+                            best = Some((g, b));
+                        }
+                    }
+                }
+                if let Some((_, b)) = best {
+                    out.push(Swap { u, b });
+                }
+            }
+            out
+        });
+        // Phase 2: apply sequentially in (node, task) order, re-checking
+        // each gain against the current assignment.
+        let mut applied_this_pass = 0usize;
+        for Swap { u, b } in proposals.into_iter().flatten() {
+            let (a, bn) = (node_of[u as usize], node_of[b as usize]);
+            if a == bn {
+                continue;
+            }
+            let g = swap_gain(&adj, &hops, node_of, u as usize, a, b as usize, bn);
+            if g > 0.0 {
+                node_of[u as usize] = bn;
+                node_of[b as usize] = a;
+                applied_this_pass += 1;
+            }
+        }
+        applied_total += applied_this_pass;
+        if applied_this_pass == 0 {
+            break;
+        }
+    }
+    applied_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::Torus;
+
+    #[test]
+    fn refine_reduces_objective_and_preserves_balance() {
+        // 1D chain of 16 tasks, 4 nodes on a 4-ring; scrambled assignment.
+        let g = stencil_graph(&[16], false, 1.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        // Stride assignment: maximally non-contiguous.
+        let mut node_of: Vec<u32> = (0..16).map(|t| (t % 4) as u32).collect();
+        let before = internode_weighted_hops(&g, &node_of, &routers, &torus);
+        let swaps =
+            min_volume_refine(&g, &mut node_of, &routers, &torus, 8, Parallelism::sequential());
+        let after = internode_weighted_hops(&g, &node_of, &routers, &torus);
+        assert!(swaps > 0, "no swaps applied on a scrambled assignment");
+        assert!(after < before, "objective {after} !< {before}");
+        let mut sizes = [0usize; 4];
+        for &x in &node_of {
+            sizes[x as usize] += 1;
+        }
+        assert_eq!(sizes, [4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn refine_is_thread_count_invariant() {
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        let mut seq = start.clone();
+        min_volume_refine(&g, &mut seq, &routers, &torus, 4, Parallelism::sequential());
+        for threads in [2, 8] {
+            let mut par_assign = start.clone();
+            min_volume_refine(
+                &g,
+                &mut par_assign,
+                &routers,
+                &torus,
+                4,
+                Parallelism::threads(threads).with_grain(1),
+            );
+            assert_eq!(par_assign, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn refine_leaves_optimal_assignment_alone() {
+        // Contiguous blocks of a chain on a line of nodes: already optimal.
+        let g = stencil_graph(&[16], false, 1.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        let mut node_of: Vec<u32> = (0..16).map(|t| (t / 4) as u32).collect();
+        let before = node_of.clone();
+        let swaps =
+            min_volume_refine(&g, &mut node_of, &routers, &torus, 4, Parallelism::sequential());
+        assert_eq!(swaps, 0);
+        assert_eq!(node_of, before);
+    }
+}

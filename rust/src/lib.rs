@@ -20,6 +20,13 @@
 //!
 //! Quick start: see `examples/quickstart.rs`; experiments: `repro --help`.
 //!
+//! Beyond the paper's flat mapper, [`hier`] adds a two-level node→core
+//! mapping subsystem: an MJ rotation sweep over *node* coordinates picks a
+//! balanced task→node assignment, pluggable intra-node strategies place
+//! tasks on cores (platform order, Hilbert-curve order, or greedy
+//! `MinVolume` boundary refinement of the node assignment), and intra-node
+//! messages stay off the network per the Section 3 model.
+//!
 //! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
 //! WeightedHops scoring) is parallel and allocation-free in steady state:
 //! [`par`] provides deterministic fork–join primitives (results are
@@ -32,6 +39,7 @@
 pub mod apps;
 pub mod coordinator;
 pub mod geom;
+pub mod hier;
 pub mod machine;
 pub mod mapping;
 pub mod metrics;

@@ -52,6 +52,53 @@ impl Allocation {
         Coords::from_axes(axes)
     }
 
+    /// Router id of every node. Node ids must be dense in
+    /// `0..num_nodes()` (both allocators uphold this); all ranks of a node
+    /// share a router, so the first rank encountered defines it.
+    pub fn node_routers(&self) -> Vec<u32> {
+        let nn = self.num_nodes();
+        let mut routers = vec![u32::MAX; nn];
+        for (rank, &node) in self.core_node.iter().enumerate() {
+            let slot = &mut routers[node as usize];
+            if *slot == u32::MAX {
+                *slot = self.core_router[rank];
+            }
+        }
+        assert!(
+            routers.iter().all(|&r| r != u32::MAX),
+            "node ids must be dense in 0..num_nodes"
+        );
+        routers
+    }
+
+    /// Router coordinates of every **node** as f64 points — the machine
+    /// side of the hierarchical (node-level) mapper, one point per node
+    /// instead of one per rank.
+    pub fn node_coords(&self) -> Coords {
+        let dim = self.torus.dim();
+        let routers = self.node_routers();
+        let mut axes = vec![Vec::with_capacity(routers.len()); dim];
+        let mut buf = vec![0usize; dim];
+        for &r in &routers {
+            self.torus.coords_into(r as usize, &mut buf);
+            for d in 0..dim {
+                axes[d].push(buf[d] as f64);
+            }
+        }
+        Coords::from_axes(axes)
+    }
+
+    /// Ranks grouped by node, each group in ascending rank order. Rank
+    /// order within a node is the platform's default order, which is what
+    /// the hierarchical mapper's intra-node strategies permute against.
+    pub fn ranks_by_node(&self) -> Vec<Vec<u32>> {
+        let mut by_node = vec![Vec::with_capacity(self.ranks_per_node); self.num_nodes()];
+        for (rank, &node) in self.core_node.iter().enumerate() {
+            by_node[node as usize].push(rank as u32);
+        }
+        by_node
+    }
+
     /// Contiguous BG/Q block allocation (the whole job block is a complete
     /// torus — Section 2) with the given rank-order permutation.
     pub fn bgq(block: [usize; 5], ranks_per_node: usize, perm: &str) -> Allocation {
@@ -171,6 +218,61 @@ mod tests {
             assert_eq!(a.core_node[r], a.core_node[0]);
         }
         assert_ne!(a.core_node[8], a.core_node[0]);
+    }
+
+    #[test]
+    fn node_views_are_consistent() {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[6, 6, 6]),
+            nodes_per_router: 2,
+            ranks_per_node: 4,
+            occupancy: 0.3,
+        }
+        .allocate(20, 13);
+        let routers = alloc.node_routers();
+        let coords = alloc.node_coords();
+        let groups = alloc.ranks_by_node();
+        assert_eq!(routers.len(), 20);
+        assert_eq!(coords.len(), 20);
+        assert_eq!(coords.dim(), 3);
+        assert_eq!(groups.len(), 20);
+        for (node, group) in groups.iter().enumerate() {
+            assert_eq!(group.len(), 4, "node {node}");
+            for &rank in group {
+                assert_eq!(alloc.core_node[rank as usize] as usize, node);
+                assert_eq!(alloc.core_router[rank as usize], routers[node]);
+            }
+            // Ascending rank order within the node.
+            for w in group.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            // Node coordinates are the router's torus coordinates.
+            let want: Vec<f64> = alloc
+                .torus
+                .coords_of(routers[node] as usize)
+                .into_iter()
+                .map(|c| c as f64)
+                .collect();
+            assert_eq!(coords.point_vec(node), want);
+        }
+    }
+
+    #[test]
+    fn node_views_cover_bgq_permuted_orders() {
+        // With T first in the permutation, the ranks of one node are not
+        // contiguous; the node views must still group them correctly.
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "TABCDE");
+        let groups = a.ranks_by_node();
+        assert_eq!(groups.len(), a.num_nodes());
+        let mut seen = 0usize;
+        for (node, group) in groups.iter().enumerate() {
+            assert_eq!(group.len(), 4, "node {node}");
+            seen += group.len();
+            for &rank in group {
+                assert_eq!(a.core_node[rank as usize] as usize, node);
+            }
+        }
+        assert_eq!(seen, a.num_ranks());
     }
 
     #[test]

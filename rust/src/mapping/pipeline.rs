@@ -48,6 +48,14 @@ pub struct Z2Config {
     /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = sequential.
     /// The mapping is bit-identical at every thread count.
     pub threads: usize,
+    /// Hierarchical node→core mode: when set, the strategy runs the
+    /// two-level [`crate::hier`] mapper (node-level MJ sweep + the given
+    /// intra-node strategy) instead of the flat rank-level partition.
+    /// `ordering`/`longest_dim`/`uneven_prime`/`shift`/`drop_proc_dims`/
+    /// `max_rotations`/`threads` all carry over to the node level;
+    /// `bw_scale` and `box_transform` are rank-level transforms and are
+    /// ignored in hierarchical mode.
+    pub hier: Option<crate::hier::IntraNodeStrategy>,
 }
 
 impl Z2Config {
@@ -63,6 +71,7 @@ impl Z2Config {
             shift: true,
             max_rotations: 36,
             threads: 0,
+            hier: None,
         }
     }
 
@@ -125,7 +134,8 @@ pub fn prepare_proc_coords(alloc: &Allocation, cfg: &Z2Config) -> Coords {
     pcoords
 }
 
-/// Run the strategy: returns `task_to_rank`.
+/// Run the strategy: returns `task_to_rank`. With `cfg.hier` set, the
+/// two-level hierarchical mapper runs instead of the flat partition.
 pub fn z2_map(
     graph: &TaskGraph,
     tcoords: &Coords,
@@ -133,6 +143,19 @@ pub fn z2_map(
     cfg: &Z2Config,
     backend: &dyn WhopsBackend,
 ) -> Vec<u32> {
+    if let Some(intra) = cfg.hier {
+        let hcfg = crate::hier::HierConfig {
+            node_map: cfg.map_cfg(),
+            intra,
+            shift: cfg.shift,
+            drop_node_dims: cfg.drop_proc_dims.clone(),
+            max_rotations: cfg.max_rotations,
+            threads: cfg.threads,
+            ..crate::hier::HierConfig::default()
+        };
+        return crate::hier::map_hierarchical(graph, tcoords, alloc, &hcfg, backend)
+            .task_to_rank;
+    }
     let pcoords = prepare_proc_coords(alloc, cfg);
     let map_cfg = cfg.map_cfg();
     if cfg.max_rotations <= 1 {
@@ -256,6 +279,29 @@ mod tests {
             good.weighted_hops,
             rand.weighted_hops
         );
+    }
+
+    #[test]
+    fn hier_mode_routes_to_two_level_mapper() {
+        // The hierarchical variant must produce a bijection that keeps
+        // intra-node communication off the network at least as well as the
+        // default order does.
+        let alloc = toy_alloc(); // 64 ranks, 16 nodes of 4
+        let g = stencil_graph(&[4, 4, 4], false, 1.0);
+        let mut cfg = Z2Config::z2_1();
+        cfg.max_rotations = 4;
+        cfg.hier = Some(crate::hier::IntraNodeStrategy::MinVolume { passes: 2 });
+        let m = z2_map(&g, &g.coords, &alloc, &cfg, &NativeBackend);
+        let mut s = m.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64u32).collect::<Vec<_>>());
+        // Every node's 4 tasks communicate over at most the node boundary:
+        // the task count per node is exact.
+        let mut per_node = vec![0usize; alloc.num_nodes()];
+        for &r in &m {
+            per_node[alloc.core_node[r as usize] as usize] += 1;
+        }
+        assert!(per_node.iter().all(|&c| c == 4), "{per_node:?}");
     }
 
     #[test]

@@ -6,14 +6,32 @@
 //! ranks in the same node never enter the network (zero hops, no link
 //! data); messages between nodes follow dimension-ordered shortest-path
 //! routing (static routing, single path — the Section 3 assumptions).
+//!
+//! # Parallel evaluation
+//!
+//! [`eval_full`] processes edges in fixed-size chunks
+//! ([`EVAL_CHUNK_EDGES`]) fanned out over the [`crate::par`] budget via
+//! `map_with`: each worker accumulates routed link loads into its own
+//! dense per-worker buffer, emits them as a sparse per-chunk partial, and
+//! the partials merge in chunk order. Because the chunk boundaries — and
+//! therefore the floating-point reduction structure — depend only on the
+//! edge count, **the result is bit-identical at every thread count**
+//! (pinned by a property test). Graphs smaller than one chunk reduce in
+//! plain edge order, exactly like the scalar [`eval_hops`] loop.
 
 pub mod native;
 
 use crate::apps::TaskGraph;
 use crate::machine::Allocation;
+use crate::par::{self, Parallelism};
+
+/// Default edge-chunk size for [`eval_full`]'s parallel fan-out. The chunk
+/// grid is fixed by the edge count alone so results never depend on the
+/// thread budget.
+pub const EVAL_CHUNK_EDGES: usize = 8192;
 
 /// Scalar metrics of a mapping (Eqns 1–7).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
     /// Eqn 1: total hops over all task-graph edges.
     pub total_hops: f64,
@@ -30,7 +48,7 @@ pub struct Metrics {
 }
 
 /// Per-link data/latency aggregates (Eqns 4–7) plus per-dimension stats.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LinkMetrics {
     /// Eqn 5: max data over any directed link.
     pub max_data: f64,
@@ -44,7 +62,7 @@ pub struct LinkMetrics {
 }
 
 /// Aggregates for one (dimension, direction) link class.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DimStats {
     pub max_data: f64,
     pub avg_data: f64,
@@ -88,32 +106,141 @@ pub fn eval_hops(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) ->
 
 /// Evaluate all metrics, including per-link data and latency via
 /// dimension-ordered routing. Each inter-node edge contributes its volume in
-/// both directions (both endpoints send).
+/// both directions (both endpoints send). Runs under the auto thread budget
+/// ([`Parallelism::auto`]); the result does not depend on the budget.
 pub fn eval_full(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) -> Metrics {
-    let mut m = eval_hops(graph, task_to_rank, alloc);
+    eval_full_par(graph, task_to_rank, alloc, Parallelism::auto())
+}
+
+/// [`eval_full`] with an explicit thread budget.
+pub fn eval_full_par(
+    graph: &TaskGraph,
+    task_to_rank: &[u32],
+    alloc: &Allocation,
+    par: Parallelism,
+) -> Metrics {
+    eval_full_chunked(graph, task_to_rank, alloc, par, EVAL_CHUNK_EDGES)
+}
+
+/// Per-chunk partial sums of the parallel metrics engine.
+struct EvalPartial {
+    hops: f64,
+    weighted_hops: f64,
+    messages: u64,
+    /// Sparse routed link loads: `(link index, data)`, each link at most
+    /// once per chunk.
+    load: Vec<(u32, f64)>,
+}
+
+/// Per-worker scratch: coordinate buffers plus the dense link accumulator
+/// that turns each chunk's routed loads into a sparse partial.
+struct EvalScratch {
+    ca: Vec<usize>,
+    cb: Vec<usize>,
+    dense: Vec<f64>,
+    touched: Vec<u32>,
+}
+
+/// [`eval_full`] with an explicit chunk size (tests force small chunks to
+/// exercise the merge on small graphs). The chunk grid is fixed by
+/// `(edge count, chunk_edges)` alone, so for a given chunk size the result
+/// is bit-identical at every thread count.
+pub fn eval_full_chunked(
+    graph: &TaskGraph,
+    task_to_rank: &[u32],
+    alloc: &Allocation,
+    par: Parallelism,
+    chunk_edges: usize,
+) -> Metrics {
+    assert_eq!(task_to_rank.len(), graph.num_tasks);
     let torus = &alloc.torus;
     let dim = torus.dim();
-    let mut load = vec![0f64; torus.num_directed_links()];
-    let mut ca = vec![0usize; dim];
-    let mut cb = vec![0usize; dim];
-    for e in &graph.edges {
-        let ra = task_to_rank[e.u as usize] as usize;
-        let rb = task_to_rank[e.v as usize] as usize;
-        if alloc.core_node[ra] == alloc.core_node[rb] {
-            continue;
+    let nlinks = torus.num_directed_links();
+    let ne = graph.edges.len();
+    let chunk = chunk_edges.max(1);
+    let chunks: Vec<usize> = (0..ne.div_ceil(chunk)).collect();
+    let partials: Vec<EvalPartial> = par::map_with(
+        par,
+        &chunks,
+        || EvalScratch {
+            ca: vec![0usize; dim],
+            cb: vec![0usize; dim],
+            dense: vec![0f64; nlinks],
+            touched: Vec::new(),
+        },
+        |s, _i, &c| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(ne);
+            let mut p = EvalPartial {
+                hops: 0.0,
+                weighted_hops: 0.0,
+                messages: 0,
+                load: Vec::new(),
+            };
+            let EvalScratch {
+                ca,
+                cb,
+                dense,
+                touched,
+            } = s;
+            touched.clear();
+            for e in &graph.edges[lo..hi] {
+                let ra = task_to_rank[e.u as usize] as usize;
+                let rb = task_to_rank[e.v as usize] as usize;
+                if alloc.core_node[ra] == alloc.core_node[rb] {
+                    continue; // intra-node: zero hops, no network message
+                }
+                p.messages += 2;
+                let (qa, qb) =
+                    (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
+                torus.coords_into(qa, ca);
+                torus.coords_into(qb, cb);
+                let h = torus.hop_dist(ca, cb) as f64;
+                p.hops += h;
+                p.weighted_hops += e.w * h;
+                let mut visit = |id: usize, d: usize, dir: usize| {
+                    let l = torus.link_index(id, d, dir);
+                    if dense[l] == 0.0 {
+                        touched.push(l as u32);
+                    }
+                    dense[l] += e.w;
+                };
+                torus.route(ca, cb, &mut visit);
+                torus.route(cb, ca, &mut visit);
+            }
+            // Extract the chunk's sparse loads and reset the dense buffer
+            // for the worker's next chunk. Edge weights are positive, so
+            // `dense[l] == 0.0` marks exactly the untouched links.
+            p.load.reserve(touched.len());
+            for &l in touched.iter() {
+                p.load.push((l, dense[l as usize]));
+                dense[l as usize] = 0.0;
+            }
+            p
+        },
+    );
+    // Merge in chunk order: per-link sums accumulate partials in ascending
+    // chunk index, so the reduction tree is independent of the budget.
+    let mut total_hops = 0f64;
+    let mut weighted_hops = 0f64;
+    let mut messages = 0u64;
+    let mut load = vec![0f64; nlinks];
+    for p in &partials {
+        total_hops += p.hops;
+        weighted_hops += p.weighted_hops;
+        messages += p.messages;
+        for &(l, v) in &p.load {
+            load[l as usize] += v;
         }
-        let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
-        torus.coords_into(qa, &mut ca);
-        torus.coords_into(qb, &mut cb);
-        torus.route(&ca, &cb, |id, d, dir| {
-            load[torus.link_index(id, d, dir)] += e.w;
-        });
-        torus.route(&cb, &ca, |id, d, dir| {
-            load[torus.link_index(id, d, dir)] += e.w;
-        });
     }
-    m.link = Some(summarize_links(torus, &load));
-    m
+    Metrics {
+        total_hops,
+        avg_hops: total_hops / ne.max(1) as f64,
+        weighted_hops,
+        total_messages: messages,
+        num_edges: ne,
+        link: Some(summarize_links(torus, &load)),
+    }
 }
 
 /// Reduce a per-directed-link load array into `LinkMetrics`.
@@ -229,6 +356,59 @@ mod tests {
         // Edges (0,1) and (2,3) intra-node; (1,2) inter-node 1 hop.
         assert_eq!(m.total_hops, 1.0);
         assert_eq!(m.total_messages, 2);
+    }
+
+    #[test]
+    fn parallel_eval_full_bit_identical() {
+        // Tiny chunks force a real multi-chunk merge; the result must be
+        // bitwise equal at every thread budget.
+        use crate::par::Parallelism;
+        let g = stencil_graph(&[6, 6], true, 1.7);
+        let alloc = Allocation {
+            torus: Torus::torus(&[6, 6]),
+            core_router: (0..36u32).collect(),
+            core_node: (0..36u32).collect(),
+            ranks_per_node: 1,
+        };
+        let m: Vec<u32> = (0..36u32).map(|i| (i * 7) % 36).collect();
+        let seq = eval_full_chunked(&g, &m, &alloc, Parallelism::sequential(), 5);
+        for threads in [2, 8] {
+            let par = eval_full_chunked(&g, &m, &alloc, Parallelism::threads(threads), 5);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn intra_node_edges_leave_no_trace_in_link_metrics() {
+        // Node-boundary coverage: ranks sharing a node must report zero
+        // hops, zero messages, and zero link data — the assumption the
+        // hierarchical mapper exploits.
+        let g = stencil_graph(&[4], false, 9.0); // chain 0-1-2-3
+        let alloc = Allocation {
+            torus: Torus::torus(&[4]),
+            core_router: vec![0, 0, 2, 2],
+            core_node: vec![0, 0, 1, 1],
+            ranks_per_node: 2,
+        };
+        // Map tasks so every edge stays inside a node except (1,2).
+        let m = eval_full(&g, &[0, 1, 2, 3], &alloc);
+        assert_eq!(m.total_messages, 2); // only edge (1,2) crosses
+        assert_eq!(m.total_hops, 2.0); // routers 0 -> 2 on a 4-ring
+        // Now collapse everything into single nodes: all metrics vanish.
+        let all_intra = Allocation {
+            torus: Torus::torus(&[4]),
+            core_router: vec![0, 0, 0, 0],
+            core_node: vec![0, 0, 0, 0],
+            ranks_per_node: 4,
+        };
+        let z = eval_full(&g, &[0, 1, 2, 3], &all_intra);
+        assert_eq!(z.total_hops, 0.0);
+        assert_eq!(z.weighted_hops, 0.0);
+        assert_eq!(z.total_messages, 0);
+        let lm = z.link.unwrap();
+        assert_eq!(lm.max_data, 0.0);
+        assert_eq!(lm.avg_data, 0.0);
+        assert_eq!(lm.max_latency, 0.0);
     }
 
     #[test]

@@ -148,6 +148,61 @@ pub fn hilbert_sort_f64(coords: &crate::geom::Coords, bits: u32) -> Vec<usize> {
     keyed.into_iter().map(|(_, i)| i).collect()
 }
 
+/// Sort a subset of an f64 coordinate set (given as point indices in `idx`)
+/// along the Hilbert curve, in place, reusing a caller-provided key buffer.
+/// Quantization uses the subset's own bounding box; ties (including the
+/// degenerate all-equal subset) break by point index, so the order is fully
+/// deterministic. This is the per-node ordering kernel of the hierarchical
+/// mapper's `SfcOrder` strategy — `keys` is per-worker scratch there.
+pub fn hilbert_sort_f64_subset_into(
+    coords: &crate::geom::Coords,
+    idx: &mut [u32],
+    bits: u32,
+    keys: &mut Vec<(u128, u32)>,
+) {
+    let dim = coords.dim();
+    if idx.len() <= 1 {
+        return;
+    }
+    // Subset bounding box.
+    let mut lo = vec![f64::INFINITY; dim];
+    let mut hi = vec![f64::NEG_INFINITY; dim];
+    for &i in idx.iter() {
+        for d in 0..dim {
+            let v = coords.get(d, i as usize);
+            if v < lo[d] {
+                lo[d] = v;
+            }
+            if v > hi[d] {
+                hi[d] = v;
+            }
+        }
+    }
+    let scale: Vec<f64> = (0..dim)
+        .map(|d| {
+            let ext = hi[d] - lo[d];
+            if ext > 0.0 {
+                (((1u64 << bits) - 1) as f64) / ext
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    keys.clear();
+    keys.reserve(idx.len());
+    let mut q = vec![0u64; dim];
+    for &i in idx.iter() {
+        for d in 0..dim {
+            q[d] = ((coords.get(d, i as usize) - lo[d]) * scale[d]).round() as u64;
+        }
+        keys.push((hilbert_index(&q, bits), i));
+    }
+    keys.sort_unstable();
+    for (slot, &(_, i)) in idx.iter_mut().zip(keys.iter()) {
+        *slot = i;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +309,32 @@ mod tests {
         }
         // bits=3 exactly represents an 8x8 grid.
         assert_eq!(hilbert_sort_f64(&c, 3), hilbert_sort(&pts, 3));
+    }
+
+    #[test]
+    fn subset_sort_matches_full_sort_on_full_subset() {
+        use crate::geom::Coords;
+        let mut c = Coords::new(2);
+        for x in 0..8u64 {
+            for y in 0..8u64 {
+                c.push(&[x as f64, y as f64]);
+            }
+        }
+        let mut idx: Vec<u32> = (0..64).collect();
+        let mut keys = Vec::new();
+        hilbert_sort_f64_subset_into(&c, &mut idx, 3, &mut keys);
+        let want: Vec<u32> = hilbert_sort_f64(&c, 3).into_iter().map(|i| i as u32).collect();
+        assert_eq!(idx, want);
+    }
+
+    #[test]
+    fn subset_sort_degenerate_subset_orders_by_index() {
+        use crate::geom::Coords;
+        // All points identical: ties must break by point index.
+        let c = Coords::from_axes(vec![vec![5.0; 6], vec![1.0; 6]]);
+        let mut idx: Vec<u32> = vec![4, 1, 5, 0, 3, 2];
+        let mut keys = Vec::new();
+        hilbert_sort_f64_subset_into(&c, &mut idx, 4, &mut keys);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
     }
 }

@@ -100,3 +100,40 @@ fn fig14_reports_both_metrics() {
     assert!(tables[0].title.contains("AverageHops"));
     assert!(tables[1].title.contains("Latency"));
 }
+
+#[test]
+fn hier_compares_both_presets_against_flat() {
+    let tables = experiments::run("hier", &ctx()).unwrap();
+    assert_eq!(tables.len(), 2);
+    assert!(tables[0].title.contains("MiniGhost"));
+    assert!(tables[1].title.contains("HOMME"));
+    for t in &tables {
+        // Four strategies per (case, seed); flat rows normalize to 1.00.
+        assert_eq!(t.rows.len() % 4, 0, "{}", t.title);
+        for chunk in t.rows.chunks(4) {
+            assert_eq!(chunk[0][2], "Flat Z2_1");
+            assert_eq!(chunk[0][6], "1.00");
+            assert_eq!(chunk[3][2], "Hier minvol");
+            // Every ratio parses to a finite positive number.
+            for row in chunk {
+                for col in [6, 7, 8] {
+                    let v = parse(&row[col]);
+                    assert!(
+                        v.is_finite() && v > 0.0,
+                        "{}: bad ratio {v} in {row:?}",
+                        t.title
+                    );
+                }
+            }
+            // The refined hierarchy must not lose badly to the flat mapper
+            // on its own objective (typically it wins outright).
+            let wh_ratio = parse(&chunk[3][6]);
+            assert!(
+                wh_ratio < 1.25,
+                "{}: hier minvol WH ratio {wh_ratio} way above flat ({:?})",
+                t.title,
+                chunk[3]
+            );
+        }
+    }
+}

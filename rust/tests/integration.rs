@@ -5,6 +5,7 @@
 use taskmap::apps::homme::{Homme, HommeCoords};
 use taskmap::apps::minighost::MiniGhost;
 use taskmap::apps::stencil::stencil_graph;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
 use taskmap::machine::{cray_xk7, Allocation, SparseAllocator, Torus};
 use taskmap::mapping::pipeline::{sfc_plus_z2, z2_map, Z2Config};
 use taskmap::mapping::rotations::NativeBackend;
@@ -239,6 +240,63 @@ fn uneven_prime_avoids_splitting_nodes_early() {
     let even = run(false);
     assert!(uneven <= even, "uneven {uneven} !<= even {even}");
     assert_eq!(uneven, 2, "3 contiguous blocks of 16 have exactly 2 cut edges");
+}
+
+#[test]
+fn hier_bijective_and_beats_default_on_minighost() {
+    // The two-level contract end-to-end: bijection, node-respecting, and
+    // (with MinVolume refinement) better inter-node metrics than the
+    // application's default order on a sparse allocation.
+    let mg = MiniGhost::weak_scaling([8, 8, 8]);
+    let graph = mg.graph();
+    let alloc = titan_small().allocate(512 / 16, 7);
+    let cfg = HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: 8,
+        ..HierConfig::default()
+    };
+    let m = map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+    let mut s = m.task_to_rank.clone();
+    s.sort_unstable();
+    assert_eq!(s, (0..512u32).collect::<Vec<_>>());
+    for t in 0..512 {
+        assert_eq!(
+            alloc.core_node[m.task_to_rank[t] as usize],
+            m.task_to_node[t]
+        );
+    }
+    let m_hier = eval_hops(&graph, &m.task_to_rank, &alloc);
+    let m_default = eval_hops(&graph, &mg.default_order(), &alloc);
+    assert!(
+        m_hier.weighted_hops < m_default.weighted_hops,
+        "hier {} !< default {}",
+        m_hier.weighted_hops,
+        m_default.weighted_hops
+    );
+}
+
+#[test]
+fn hier_homme_bijective_on_titan_preset() {
+    // One rank per element (the experiment's HOMME configuration).
+    let homme = Homme::new(8); // 384 elements
+    let graph = homme.graph();
+    let alloc = titan_small().allocate(384 / 16, 3);
+    let cfg = HierConfig {
+        intra: IntraNodeStrategy::SfcOrder,
+        max_rotations: 6,
+        ..HierConfig::default()
+    };
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let m = map_hierarchical(&graph, &tcoords, &alloc, &cfg, &NativeBackend);
+    let mut s = m.task_to_rank.clone();
+    s.sort_unstable();
+    assert_eq!(s, (0..384u32).collect::<Vec<_>>());
+    // Every node holds exactly ranks_per_node tasks.
+    let mut per_node = vec![0usize; alloc.num_nodes()];
+    for &n in &m.task_to_node {
+        per_node[n as usize] += 1;
+    }
+    assert!(per_node.iter().all(|&c| c == 16), "{per_node:?}");
 }
 
 #[test]

@@ -457,6 +457,134 @@ fn prop_score_mappings_parallel_bit_identical() {
 }
 
 #[test]
+fn prop_eval_full_parallel_bit_identical() {
+    // The chunked metrics engine must be bitwise-equal at every thread
+    // budget for a fixed chunk size — including multi-chunk merges forced
+    // by tiny chunks.
+    use taskmap::metrics::eval_full_chunked;
+    use taskmap::par::Parallelism;
+    check("eval_full parallel == sequential", 15, |rng| {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[rng.range(3, 7), rng.range(3, 7), rng.range(3, 7)]),
+            nodes_per_router: 2,
+            ranks_per_node: rng.range(1, 5),
+            occupancy: rng.f64_range(0.0, 0.4),
+        }
+        .allocate(rng.range(2, 10), rng.next_u64());
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], rng.bool(), rng.f64_range(0.5, 5.0));
+        let mut mapping: Vec<u32> = (0..nt as u32).collect();
+        rng.shuffle(&mut mapping);
+        let chunk = rng.range(1, 32);
+        let seq = eval_full_chunked(&graph, &mapping, &alloc, Parallelism::sequential(), chunk);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par =
+                eval_full_chunked(&graph, &mapping, &alloc, Parallelism::threads(threads), chunk);
+            if par != seq {
+                return Err(format!("metrics diverged at threads={threads} chunk={chunk}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hier_mapping_parallel_bit_identical_and_bijective() {
+    // The full two-level mapper — node sweep, MinVolume refinement,
+    // intra-node placement — must reproduce the sequential result exactly
+    // at every thread budget, and produce a bijection when tnum == ranks.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::mapping::rotations::NativeBackend;
+    check("hier parallel == sequential", 8, |rng| {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[5, 5, 5]),
+            nodes_per_router: 2,
+            ranks_per_node: rng.range(2, 5),
+            occupancy: rng.f64_range(0.0, 0.3),
+        }
+        .allocate(rng.range(3, 9), rng.next_u64());
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let intra = match rng.below(3) {
+            0 => IntraNodeStrategy::DefaultOrder,
+            1 => IntraNodeStrategy::SfcOrder,
+            _ => IntraNodeStrategy::MinVolume { passes: 3 },
+        };
+        let mk = |threads: usize| HierConfig {
+            intra,
+            max_rotations: 4,
+            threads,
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if par.task_to_node != seq.task_to_node {
+                return Err(format!("node assignment diverged at threads={threads}"));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!("rank mapping diverged at threads={threads}"));
+            }
+        }
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err(format!("not a bijection ({intra:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_intra_node_edges_cost_nothing() {
+    // Node-boundary contract: any graph whose edges connect only ranks of
+    // the same node reports zero hops, zero messages, and zero link data,
+    // for both eval paths.
+    use taskmap::apps::{Edge, TaskGraph};
+    use taskmap::geom::Coords;
+    check("intra-node edges are free", 20, |rng| {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[rng.range(3, 7), rng.range(3, 7), rng.range(3, 7)]),
+            nodes_per_router: 2,
+            ranks_per_node: rng.range(2, 9),
+            occupancy: rng.f64_range(0.0, 0.4),
+        }
+        .allocate(rng.range(2, 12), rng.next_u64());
+        let nt = alloc.num_ranks();
+        // Random edges drawn within nodes only (identity mapping).
+        let mut edges = Vec::new();
+        for group in alloc.ranks_by_node() {
+            for w in group.windows(2) {
+                edges.push(Edge {
+                    u: w[0],
+                    v: w[1],
+                    w: rng.f64_range(0.5, 10.0),
+                });
+            }
+        }
+        let graph = TaskGraph {
+            num_tasks: nt,
+            edges,
+            coords: Coords::from_axes(vec![vec![0.0; nt]]),
+        };
+        let mapping: Vec<u32> = (0..nt as u32).collect();
+        let cheap = eval_hops(&graph, &mapping, &alloc);
+        let full = eval_full(&graph, &mapping, &alloc);
+        if cheap.total_hops != 0.0 || cheap.weighted_hops != 0.0 || cheap.total_messages != 0 {
+            return Err(format!("eval_hops saw network traffic: {cheap:?}"));
+        }
+        if full.total_hops != 0.0 || full.total_messages != 0 {
+            return Err(format!("eval_full saw network traffic: {full:?}"));
+        }
+        let lm = full.link.as_ref().unwrap();
+        if lm.max_data != 0.0 || lm.avg_data != 0.0 || lm.max_latency != 0.0 {
+            return Err(format!("link data on intra-node edges: {lm:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_sparse_allocation_ranks_consistent() {
     check("allocation consistency", 20, |rng| {
         let alloc = SparseAllocator {
