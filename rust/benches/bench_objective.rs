@@ -1,0 +1,120 @@
+//! Bench: the pluggable objective layer — WeightedHops-vs-MaxLinkLoad
+//! quality ratios, congestion-objective mapper wall time across thread
+//! budgets, and the unrolled `whops_row` kernel microbenchmark. Results
+//! append to `BENCH_mapping.json` (override with `TASKMAP_BENCH_OUT`) so
+//! the trajectory is diffable across commits.
+//!
+//! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
+//! entries are recorded under `.../smoke` names so they never clobber the
+//! full trajectory rows.
+
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{cray_xk7, SparseAllocator};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::metrics::eval_full;
+use taskmap::metrics::native::batched_weighted_hops_native;
+use taskmap::objective::ObjectiveKind;
+use taskmap::testutil::bench::{bench, bench_quick, BenchRecorder};
+
+const ROT: usize = 12;
+
+fn hier_cfg(threads: usize, objective: ObjectiveKind) -> HierConfig {
+    HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: ROT,
+        threads,
+        objective,
+        ..HierConfig::default()
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    let suffix = if smoke { "/smoke" } else { "" };
+    println!("== objective layer ==");
+
+    // MiniGhost preset on the XK7 model.
+    let tdims = if smoke {
+        [4usize, 4, 4]
+    } else {
+        [16usize, 16, 8]
+    };
+    let rpn = 16usize;
+    let mg = MiniGhost::weak_scaling(tdims);
+    let graph = mg.graph();
+    let alloc = SparseAllocator {
+        machine: cray_xk7(&[10, 8, 10]),
+        nodes_per_router: 2,
+        ranks_per_node: rpn,
+        occupancy: 0.4,
+    }
+    .allocate(mg.num_tasks() / rpn, 42);
+
+    // Quality: the same hierarchical mapper under each objective, judged on
+    // both metrics. maxload/whops WH-ratio > 1 and Lat-ratio < 1 is the
+    // expected trade.
+    let mut results = Vec::new();
+    for kind in ObjectiveKind::ALL {
+        let m = map_hierarchical(&graph, &graph.coords, &alloc, &hier_cfg(0, kind), &NativeBackend);
+        let full = eval_full(&graph, &m.task_to_rank, &alloc);
+        let lat = full.link.as_ref().unwrap().max_latency;
+        results.push((kind, full.weighted_hops, lat));
+    }
+    let (_, wh0, lat0) = results[0];
+    for &(kind, wh, lat) in &results[1..] {
+        let (wh_ratio, lat_ratio) = (wh / wh0, lat / lat0);
+        println!(
+            "hier {}/whops: WeightedHops {wh_ratio:.3}, MaxLinkLatency {lat_ratio:.3}",
+            kind.name()
+        );
+        rec.record_scalar(
+            &format!("objective/{}{suffix}/whops_vs_whops_obj", kind.name()),
+            "ratio",
+            wh_ratio,
+        );
+        rec.record_scalar(
+            &format!("objective/{}{suffix}/maxlat_vs_whops_obj", kind.name()),
+            "ratio",
+            lat_ratio,
+        );
+    }
+
+    // Thread scaling of the congestion-objective mapper (sweep + routed
+    // scoring + incremental MinVolume refinement).
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &threads in thread_counts {
+        let cfg = hier_cfg(threads, ObjectiveKind::MaxLinkLoad);
+        let name = format!(
+            "objective_map/maxload/tasks={}/threads={threads}{suffix}",
+            mg.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+
+    // The unrolled whops_row kernel (manual 8-lane accumulators): ns/iter
+    // here is the before/after trajectory for the SIMD roadmap item.
+    let (r, e, d) = if smoke {
+        (2usize, 4096usize, 3usize)
+    } else {
+        (4usize, 65536usize, 3usize)
+    };
+    let src: Vec<f32> = (0..r * e * d).map(|k| ((k * 7) % 13) as f32).collect();
+    let dst: Vec<f32> = (0..r * e * d).map(|k| ((k * 5) % 13) as f32).collect();
+    let w: Vec<f32> = (0..e).map(|k| 0.5 + (k % 3) as f32).collect();
+    let dims = vec![13.0f32; d];
+    let wrap = vec![1.0f32, 0.0, 1.0];
+    let name = format!("whops_row/unrolled/r={r}/e={e}/d={d}{suffix}");
+    let result = bench(&name, || {
+        batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, r, e, d)
+    });
+    rec.record(&result, &[("edges", (r * e) as f64)]);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

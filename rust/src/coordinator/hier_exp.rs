@@ -127,12 +127,27 @@ pub fn run(ctx: &Ctx) -> Vec<Table> {
     } else {
         vec![(512, [8, 8, 8]), (2_048, [16, 16, 8])]
     };
-    for &(procs, tdims) in &mg_points {
+    let seeds = [ctx.seed, ctx.seed + 1];
+    // One rank per element so the mapping is a bijection (the paper's
+    // largest Titan point does the same: 86,400 ranks for ne=120).
+    let ne = if ctx.full { 120 } else { 24 };
+    let homme = Homme::new(ne);
+    // Allocation simulator runs for *both* presets, fanned out over the
+    // par budget (deterministic per seed => thread-count-invariant). Order:
+    // mg points x seeds, then homme x seeds.
+    let rpn = allocator.ranks_per_node;
+    let jobs: Vec<(usize, u64)> = mg_points
+        .iter()
+        .map(|&(procs, _)| procs)
+        .chain([homme.num_tasks()])
+        .flat_map(|procs| seeds.iter().map(move |&seed| (procs / rpn, seed)))
+        .collect();
+    let allocs: Vec<Allocation> = allocator.allocate_batch(&jobs, Parallelism::auto());
+
+    for (pi, &(procs, tdims)) in mg_points.iter().enumerate() {
         let mg = MiniGhost::weak_scaling(tdims);
         let graph = mg.graph();
-        let nodes = procs / allocator.ranks_per_node;
-        for seed in [ctx.seed, ctx.seed + 1] {
-            let alloc = allocator.allocate(nodes, seed);
+        for (si, &seed) in seeds.iter().enumerate() {
             run_case(
                 ctx,
                 &mut mg_table,
@@ -140,7 +155,7 @@ pub fn run(ctx: &Ctx) -> Vec<Table> {
                 seed,
                 &graph,
                 &graph.coords,
-                &alloc,
+                &allocs[pi * seeds.len() + si],
             );
         }
     }
@@ -149,16 +164,10 @@ pub fn run(ctx: &Ctx) -> Vec<Table> {
         "Hier: HOMME Titan, hierarchical node-core mapping vs flat Z2_1",
         &headers(),
     );
-    // One rank per element so the mapping is a bijection (the paper's
-    // largest Titan point does the same: 86,400 ranks for ne=120).
-    let ne = if ctx.full { 120 } else { 24 };
-    let homme = Homme::new(ne);
     let graph = homme.graph();
     let tcoords = homme.coords(HommeCoords::Cube);
     let procs = homme.num_tasks();
-    let nodes = procs / allocator.ranks_per_node;
-    for seed in [ctx.seed, ctx.seed + 1] {
-        let alloc = allocator.allocate(nodes, seed);
+    for (si, &seed) in seeds.iter().enumerate() {
         run_case(
             ctx,
             &mut homme_table,
@@ -166,7 +175,7 @@ pub fn run(ctx: &Ctx) -> Vec<Table> {
             seed,
             &graph,
             &tcoords,
-            &alloc,
+            &allocs[mg_points.len() * seeds.len() + si],
         );
     }
     vec![mg_table, homme_table]

@@ -311,31 +311,42 @@ fn titan_runs(ctx: &Ctx) -> (Homme, Vec<TitanRun>) {
     // sphere coordinates partitions poorly; the cube projection is the
     // transform HOMME itself uses before its SFC.
     let tcoords = homme.coords(HommeCoords::Cube);
+    // The allocation simulator runs (one per (procs, seed), expensive on
+    // the --full Titan machine) fan out over the par budget; each is
+    // deterministic per seed, so the sweep is thread-count-invariant.
+    let cases: Vec<(usize, u64)> = setup
+        .proc_counts
+        .iter()
+        .flat_map(|&procs| setup.seeds.iter().map(move |&seed| (procs, seed)))
+        .collect();
+    let jobs: Vec<(usize, u64)> = cases
+        .iter()
+        .map(|&(procs, seed)| (procs / setup.allocator.ranks_per_node, seed))
+        .collect();
+    let allocs: Vec<Allocation> = setup
+        .allocator
+        .allocate_batch(&jobs, crate::par::Parallelism::auto());
     let mut runs = Vec::new();
-    for &procs in &setup.proc_counts {
-        let nodes = procs / setup.allocator.ranks_per_node;
-        for &seed in &setup.seeds {
-            let alloc = setup.allocator.allocate(nodes, seed);
-            let mut results = Vec::new();
-            // SFC: HOMME's Hilbert partition onto the ALPS default order.
-            let sfc = homme.sfc_partition(procs);
-            let t = homme_time(&graph, &sfc, &alloc);
-            results.push((
-                "SFC".to_string(),
-                t.total,
-                eval_full(&graph, &sfc, &alloc),
-            ));
-            for (name, cfg) in titan_z2_cfgs() {
-                let m = z2_map(&graph, &tcoords, &alloc, &cfg, ctx.backend());
-                let t = homme_time(&graph, &m, &alloc);
-                results.push((name.to_string(), t.total, eval_full(&graph, &m, &alloc)));
-            }
-            runs.push(TitanRun {
-                procs,
-                seed,
-                results,
-            });
+    for (&(procs, seed), alloc) in cases.iter().zip(&allocs) {
+        let mut results = Vec::new();
+        // SFC: HOMME's Hilbert partition onto the ALPS default order.
+        let sfc = homme.sfc_partition(procs);
+        let t = homme_time(&graph, &sfc, alloc);
+        results.push((
+            "SFC".to_string(),
+            t.total,
+            eval_full(&graph, &sfc, alloc),
+        ));
+        for (name, cfg) in titan_z2_cfgs() {
+            let m = z2_map(&graph, &tcoords, alloc, &cfg, ctx.backend());
+            let t = homme_time(&graph, &m, alloc);
+            results.push((name.to_string(), t.total, eval_full(&graph, &m, alloc)));
         }
+        runs.push(TitanRun {
+            procs,
+            seed,
+            results,
+        });
     }
     (homme, runs)
 }

@@ -86,24 +86,38 @@ pub struct MgRun {
 /// Run every strategy on every (scale, allocation) pair.
 pub fn runs(ctx: &Ctx) -> Vec<MgRun> {
     let setup = setup(ctx);
+    // Fan the allocation simulator out over the par budget: one
+    // deterministic allocation per (point, seed), results in input order,
+    // so the sweep is thread-count-invariant (the --full Titan machine
+    // makes each allocate a real cost). Jobs iterate seeds innermost,
+    // matching the loop below.
+    let rpn = setup.allocator.ranks_per_node;
+    let jobs: Vec<(usize, u64)> = setup
+        .points
+        .iter()
+        .flat_map(|&(procs, _)| setup.seeds.iter().map(move |&seed| (procs / rpn, seed)))
+        .collect();
+    let allocs = setup
+        .allocator
+        .allocate_batch(&jobs, crate::par::Parallelism::auto());
     let mut out = Vec::new();
-    for &(procs, tdims) in &setup.points {
+    for (pi, &(procs, tdims)) in setup.points.iter().enumerate() {
         let mg = MiniGhost::weak_scaling(tdims);
         assert_eq!(mg.num_tasks(), procs);
         let graph = mg.graph();
-        let nodes = procs / setup.allocator.ranks_per_node;
-        for &seed in &setup.seeds {
-            let alloc = setup.allocator.allocate(nodes, seed);
+        for (si, &seed) in setup.seeds.iter().enumerate() {
+            // jobs iterate seeds innermost, so this is that flat index.
+            let alloc = &allocs[pi * setup.seeds.len() + si];
             let mut results = Vec::new();
             for (name, cfg) in strategies() {
                 let mapping = match (name, &cfg) {
                     ("Default", _) => mg.default_order(),
                     ("Group", _) => mg.group_order(),
-                    (_, Some(cfg)) => z2_map(&graph, &graph.coords, &alloc, cfg, ctx.backend()),
+                    (_, Some(cfg)) => z2_map(&graph, &graph.coords, alloc, cfg, ctx.backend()),
                     _ => unreachable!(),
                 };
-                let t = comm_time(&graph, &mapping, &alloc, &model());
-                let m = eval_full(&graph, &mapping, &alloc);
+                let t = comm_time(&graph, &mapping, alloc, &model());
+                let m = eval_full(&graph, &mapping, alloc);
                 results.push((name.to_string(), t, m));
             }
             out.push(MgRun {

@@ -1,0 +1,156 @@
+//! Objective-comparison experiment (`objective`): the same mapper run
+//! under each [`crate::objective::ObjectiveKind`], reporting WeightedHops
+//! and the routed bottleneck latency **side by side** for every run.
+//!
+//! Per (case, seed, strategy) the WeightedHops-objective run is the ratio
+//! denominator, so the table reads as "what does optimizing congestion
+//! cost in hops, and what does it buy on the bottleneck link" — the
+//! trade-off arXiv:1702.04164 and arXiv:2005.10413 show diverges
+//! materially from hop-based scoring. Strategies: the flat Z2_1 rotation
+//! sweep and the hierarchical mapper with `MinVolume` refinement, both
+//! scoring/refining under the row's objective end to end.
+
+use super::report::{f2, sci, Table};
+use super::Ctx;
+use crate::apps::homme::{Homme, HommeCoords};
+use crate::apps::minighost::MiniGhost;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use crate::machine::{cray_xk7, titan_full, Allocation, SparseAllocator};
+use crate::mapping::pipeline::{z2_map, Z2Config};
+use crate::metrics::eval_full;
+use crate::objective::ObjectiveKind;
+use crate::par::Parallelism;
+
+const ROT: usize = 8;
+const PASSES: usize = 4;
+
+fn headers() -> [&'static str; 9] {
+    [
+        "case",
+        "seed",
+        "strategy",
+        "objective",
+        "WH",
+        "Lat(M)",
+        "WH/whops",
+        "Lat/whops",
+        "swaps",
+    ]
+}
+
+/// Run both strategies under every objective on one case; rows normalize
+/// against the same strategy's WeightedHops-objective run.
+fn run_case(
+    ctx: &Ctx,
+    table: &mut Table,
+    case: &str,
+    seed: u64,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+) {
+    for strategy in ["flat", "hier-minvol"] {
+        let mut denom: Option<(f64, f64)> = None;
+        for kind in ObjectiveKind::ALL {
+            let (mapping, swaps) = match strategy {
+                "flat" => {
+                    let mut cfg = Z2Config::z2_1();
+                    cfg.max_rotations = ROT;
+                    cfg.objective = kind;
+                    (z2_map(graph, tcoords, alloc, &cfg, ctx.backend()), None)
+                }
+                _ => {
+                    let cfg = HierConfig {
+                        intra: IntraNodeStrategy::MinVolume { passes: PASSES },
+                        max_rotations: ROT,
+                        objective: kind,
+                        ..HierConfig::default()
+                    };
+                    let m = map_hierarchical(graph, tcoords, alloc, &cfg, ctx.backend());
+                    (m.task_to_rank, Some(m.swaps_applied))
+                }
+            };
+            let m = eval_full(graph, &mapping, alloc);
+            let lat = m.link.as_ref().unwrap().max_latency;
+            let (wh0, lat0) = *denom.get_or_insert((m.weighted_hops, lat));
+            table.push_row(vec![
+                case.to_string(),
+                seed.to_string(),
+                strategy.to_string(),
+                kind.name().to_string(),
+                f2(m.weighted_hops),
+                sci(lat),
+                f2(m.weighted_hops / wh0),
+                f2(lat / lat0),
+                swaps.map_or_else(|| "-".to_string(), |s| s.to_string()),
+            ]);
+        }
+    }
+}
+
+/// The `objective` experiment: MiniGhost and HOMME cases on the XK7 model.
+pub fn run(ctx: &Ctx) -> Vec<Table> {
+    let mut table = Table::new(
+        "Objective: WeightedHops vs routed congestion objectives (XK7)",
+        &headers(),
+    );
+    let allocator = if ctx.full {
+        titan_full()
+    } else {
+        SparseAllocator {
+            machine: cray_xk7(&[10, 8, 10]),
+            nodes_per_router: 2,
+            ranks_per_node: 16,
+            occupancy: 0.4,
+        }
+    };
+    let mg_dims: [usize; 3] = if ctx.full { [32, 16, 16] } else { [8, 8, 8] };
+    let homme_ne = if ctx.full { 24 } else { 12 };
+    let seeds = [ctx.seed, ctx.seed + 1];
+
+    let mg = MiniGhost::weak_scaling(mg_dims);
+    let mg_graph = mg.graph();
+    let homme = Homme::new(homme_ne);
+    let homme_graph = homme.graph();
+    let homme_coords = homme.coords(HommeCoords::Cube);
+
+    // The allocation simulator runs fan out over the par budget (one
+    // deterministic allocation per (case, seed) — results are identical at
+    // every thread count).
+    let jobs: Vec<(usize, u64)> = seeds
+        .iter()
+        .flat_map(|&s| {
+            [
+                (mg.num_tasks() / allocator.ranks_per_node, s),
+                (homme.num_tasks() / allocator.ranks_per_node, s),
+            ]
+        })
+        .collect();
+    let allocs: Vec<Allocation> = allocator.allocate_batch(&jobs, Parallelism::auto());
+
+    for (i, &seed) in seeds.iter().enumerate() {
+        run_case(
+            ctx,
+            &mut table,
+            &format!("mg-{}", mg.num_tasks()),
+            seed,
+            &mg_graph,
+            &mg_graph.coords,
+            &allocs[2 * i],
+        );
+    }
+    for (i, &seed) in seeds.iter().enumerate() {
+        run_case(
+            ctx,
+            &mut table,
+            &format!("homme-{}", homme.num_tasks()),
+            seed,
+            &homme_graph,
+            &homme_coords,
+            &allocs[2 * i + 1],
+        );
+    }
+    vec![table]
+}

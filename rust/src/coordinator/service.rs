@@ -35,6 +35,19 @@
 //!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],"ranks_per_node":2}
 //! -> {"ok":true,"total_hops":0,"weighted_hops":0,...}
 //! ```
+//!
+//! **Objectives** — both ops accept an `"objective"` field
+//! (`"whops" | "maxload" | "blend"`, see [`crate::objective`]). On `map`
+//! it selects what the hierarchical sweep and `MinVolume` refinement
+//! optimize (hierarchical mode only: the flat `map` op never scores, so a
+//! non-default objective there is an error, not a silent no-op). On `eval`
+//! the response additionally reports the mapping's value under that
+//! objective (`"objective_value"`).
+//!
+//! **Validation is strict**: unknown or malformed fields — top-level or
+//! inside `"hier"` — return `{"ok":false,"error":...}` instead of being
+//! silently ignored, so a typo like `"objectiv"` can never quietly change
+//! what a production mapping run optimizes.
 
 use crate::apps::{Edge, TaskGraph};
 use crate::geom::Coords;
@@ -43,6 +56,7 @@ use crate::machine::{Allocation, Torus};
 use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
 use crate::metrics::eval_full;
+use crate::objective::ObjectiveKind;
 use crate::sfc::PartOrdering;
 use crate::testutil::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -138,6 +152,39 @@ fn err(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
 
+/// Fields each op accepts. Anything else is a structured error — silently
+/// ignoring unknown fields would let typos change production mapping runs.
+const MAP_FIELDS: &[&str] = &[
+    "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
+    "hier", "objective",
+];
+const EVAL_FIELDS: &[&str] =
+    &["op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective"];
+const HIER_FIELDS: &[&str] = &["ranks_per_node", "strategy", "passes", "rotations"];
+
+/// Reject fields outside `allowed` (`what` names the object in the error).
+fn check_fields(obj: &Json, allowed: &[&str], what: &str) -> Option<Json> {
+    if let Json::Obj(m) = obj {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Some(err(&format!("unknown {what} field \"{k}\"")));
+            }
+        }
+    }
+    None
+}
+
+/// Parse an optional top-level `"objective"` with strict validation.
+fn parse_objective(req: &Json) -> Result<ObjectiveKind, Json> {
+    match req.get("objective") {
+        None => Ok(ObjectiveKind::WeightedHops),
+        Some(v) => match v.as_str().and_then(ObjectiveKind::parse) {
+            Some(kind) => Ok(kind),
+            None => Err(err("objective must be whops|maxload|blend")),
+        },
+    }
+}
+
 /// Handle one request line (exposed for direct unit testing).
 pub fn handle_request(line: &str) -> Json {
     let req = match Json::parse(line) {
@@ -146,8 +193,10 @@ pub fn handle_request(line: &str) -> Json {
     };
     match req.get("op").and_then(|o| o.as_str()) {
         Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-        Some("map") => handle_map(&req),
-        Some("eval") => handle_eval(&req),
+        Some("map") => check_fields(&req, MAP_FIELDS, "map").unwrap_or_else(|| handle_map(&req)),
+        Some("eval") => {
+            check_fields(&req, EVAL_FIELDS, "eval").unwrap_or_else(|| handle_eval(&req))
+        }
         Some(op) => err(&format!("unknown op {op}")),
         None => err("missing op"),
     }
@@ -308,6 +357,7 @@ fn handle_map_hier(
     tcoords: &Coords,
     pcoords: &Coords,
     map_cfg: MapConfig,
+    objective: ObjectiveKind,
 ) -> Json {
     let rpn = match hier.get("ranks_per_node").map(as_index) {
         Some(Some(r)) => r,
@@ -320,6 +370,7 @@ fn handle_map_hier(
     };
     let mut cfg = HierConfig {
         node_map: map_cfg,
+        objective,
         ..HierConfig::default()
     };
     if let Some(s) = hier.get("strategy") {
@@ -352,6 +403,11 @@ fn handle_map_hier(
         },
         None => Vec::new(),
     };
+    if objective.get().needs_routing() && edges.is_empty() {
+        // Without a task graph every candidate scores 0.0 under a routed
+        // objective — reject the silent no-op, same policy as the flat op.
+        return err("a routed objective requires a non-empty \"edges\" array");
+    }
     let graph = TaskGraph {
         num_tasks: tcoords.len(),
         edges,
@@ -417,6 +473,10 @@ fn handle_eval(req: &Json) -> Json {
         },
         None => return err("missing edges"),
     };
+    let objective = match parse_objective(req) {
+        Ok(k) => k,
+        Err(e) => return e,
+    };
     let graph = TaskGraph {
         num_tasks,
         edges,
@@ -434,7 +494,18 @@ fn handle_eval(req: &Json) -> Json {
         ("max_data", Json::Num(lm.max_data)),
         ("avg_data", Json::Num(lm.avg_data)),
         ("max_latency", Json::Num(lm.max_latency)),
+        ("objective", Json::Str(objective.name().into())),
+        ("objective_value", Json::Num(objective.value_from_metrics(&m))),
     ])
+}
+
+/// Strict optional bool: present means it must be a JSON bool.
+fn parse_bool(req: &Json, key: &str, default: bool) -> Result<bool, Json> {
+    match req.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(err(&format!("{key} must be a boolean"))),
+    }
 }
 
 fn handle_map(req: &Json) -> Json {
@@ -448,28 +519,44 @@ fn handle_map(req: &Json) -> Json {
         Some(Err(e)) => return err(&format!("pcoords: {e}")),
         None => return err("missing pcoords"),
     };
-    let ordering = req
-        .get("ordering")
-        .and_then(|o| o.as_str())
-        .and_then(PartOrdering::parse)
-        .unwrap_or(PartOrdering::FZ);
+    let ordering = match req.get("ordering") {
+        None => PartOrdering::FZ,
+        Some(v) => match v.as_str().and_then(PartOrdering::parse) {
+            Some(o) => o,
+            None => return err("unknown ordering (want Z|Gray|FZ|MFZ|Hilbert)"),
+        },
+    };
+    let longest_dim = match parse_bool(req, "longest_dim", true) {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    let uneven_prime = match parse_bool(req, "uneven_prime", false) {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    let objective = match parse_objective(req) {
+        Ok(k) => k,
+        Err(e) => return e,
+    };
     let cfg = MapConfig {
         task_ordering: ordering,
         proc_ordering: ordering,
-        longest_dim: req
-            .get("longest_dim")
-            .map(|b| b == &Json::Bool(true))
-            .unwrap_or(true),
-        uneven_prime: req
-            .get("uneven_prime")
-            .map(|b| b == &Json::Bool(true))
-            .unwrap_or(false),
+        longest_dim,
+        uneven_prime,
     };
     if let Some(h) = req.get("hier") {
         if !matches!(h, Json::Obj(_)) {
             return err("hier must be an object");
         }
-        return handle_map_hier(req, h, &tcoords, &pcoords, cfg);
+        if let Some(e) = check_fields(h, HIER_FIELDS, "hier") {
+            return e;
+        }
+        return handle_map_hier(req, h, &tcoords, &pcoords, cfg, objective);
+    }
+    if objective != ObjectiveKind::WeightedHops {
+        // The flat map op runs no rotation sweep, so a non-default
+        // objective would be a silent no-op — reject it instead.
+        return err("objective requires \"hier\" (the flat map op does not score candidates)");
     }
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
     Json::obj(vec![
@@ -687,6 +774,100 @@ mod tests {
                 "hier":{"rotations":-3}}"#,
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn unknown_fields_are_structured_errors() {
+        // Top-level typos must not be silently ignored on either op.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],"objectiv":"maxload"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(
+            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("objectiv"),
+            "{resp:?}"
+        );
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[1]],"bogus":1}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // ...and inside the hier object.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "hier":{"strateg":"minvol"}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Malformed ordering / flag types error too.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],"ordering":"XYZ"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],"longest_dim":3}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn objective_field_validated_and_threaded() {
+        // Unknown objective: structured error.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "objective":"fastest"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Non-default objective without hier: error, not a silent no-op.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "objective":"maxload"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Routed objective with hier but no edges: every candidate would
+        // score 0.0 — rejected, not silently accepted.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],
+                "objective":"maxload","hier":{"ranks_per_node":1}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Hierarchical map under maxload runs end to end.
+        let resp = handle_request(
+            r#"{"op":"map",
+                "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+                "pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
+                "objective":"maxload",
+                "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("map").unwrap().as_arr().unwrap().len(), 8);
+        // Eval reports the requested objective's value.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2,
+                "objective":"maxload"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("objective").and_then(|v| v.as_str()), Some("maxload"));
+        // Only edge (1,2) crosses: 3.0 on a unit-bandwidth link.
+        assert_eq!(
+            resp.get("objective_value").and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        // Default objective reports weighted hops.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2}"#,
+        );
+        assert_eq!(
+            resp.get("objective_value").and_then(|v| v.as_f64()),
+            resp.get("weighted_hops").and_then(|v| v.as_f64())
+        );
     }
 
     #[test]

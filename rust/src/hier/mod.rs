@@ -53,6 +53,7 @@ use crate::machine::Allocation;
 use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::MapConfig;
+use crate::objective::ObjectiveKind;
 use crate::par::{self, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
 
@@ -110,6 +111,11 @@ pub struct HierConfig {
     /// Worker threads: `0` = auto, `1` = the sequential reference path.
     /// The mapping is bit-identical at every thread count.
     pub threads: usize,
+    /// What the node-level sweep and `MinVolume` refinement optimize:
+    /// inter-node WeightedHops (the default), or a routed congestion
+    /// objective whose swap gains are computed incrementally against
+    /// per-link loads ([`crate::objective::CongestionState`]).
+    pub objective: ObjectiveKind,
 }
 
 impl Default for HierConfig {
@@ -122,6 +128,7 @@ impl Default for HierConfig {
             max_rotations: 12,
             chunk_edges: 32768,
             threads: 0,
+            objective: ObjectiveKind::WeightedHops,
         }
     }
 }
@@ -142,8 +149,9 @@ pub struct HierMapping {
     pub task_to_rank: Vec<u32>,
     /// Task→node assignment (post-refinement).
     pub task_to_node: Vec<u32>,
-    /// Inter-node WeightedHops of the chosen node-level sweep candidate,
-    /// **before** refinement (the sweep's own f32-accumulated score).
+    /// Objective value ([`HierConfig::objective`]) of the chosen node-level
+    /// sweep candidate, **before** refinement — inter-node WeightedHops
+    /// (the sweep's own f32-accumulated score) under the default objective.
     pub node_score: f64,
     /// Boundary swaps applied by `MinVolume` refinement (0 otherwise).
     pub swaps_applied: usize,
@@ -204,6 +212,7 @@ pub fn map_hierarchical(
         max_candidates: cfg.max_rotations.max(1),
         chunk_edges: cfg.chunk_edges,
         threads: cfg.threads,
+        objective: cfg.objective,
     };
     let sweep = rotation_sweep(
         graph,
@@ -217,15 +226,18 @@ pub fn map_hierarchical(
     let node_score = sweep.scores[sweep.chosen];
     let mut task_to_node = sweep.task_to_rank;
 
-    // Level 1.5: MinVolume boundary refinement.
+    // Level 1.5: MinVolume boundary refinement, against the configured
+    // objective (hop-weighted volume by default; routed per-link loads for
+    // the congestion objectives).
     let swaps_applied = match cfg.intra {
-        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine(
+        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_with(
             graph,
             &mut task_to_node,
             node_routers,
             &alloc.torus,
             passes,
             par,
+            cfg.objective,
         ),
         _ => 0,
     };
@@ -341,6 +353,50 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn routed_objective_runs_end_to_end_and_improves_bottleneck() {
+        // Under MaxLinkLoad the whole two-level mapper (sweep + MinVolume)
+        // optimizes the routed bottleneck: still a node-respecting
+        // bijection, and no worse on max link latency than the same
+        // pipeline under WeightedHops.
+        use crate::metrics::eval_full;
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let mk = |objective| HierConfig {
+            objective,
+            ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
+        };
+        let mll = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &mk(ObjectiveKind::MaxLinkLoad),
+            &NativeBackend,
+        );
+        let mut s = mll.task_to_rank.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..128u32).collect::<Vec<_>>());
+        for t in 0..128 {
+            assert_eq!(
+                alloc.core_node[mll.task_to_rank[t] as usize],
+                mll.task_to_node[t]
+            );
+        }
+        // `node_score` is the sweep winner's max link latency; refinement
+        // under MaxLinkLoad applies only strictly-improving swaps, so the
+        // final mapping's bottleneck (intra-node placement is
+        // network-invisible) can only be at or below it.
+        let final_lat = eval_full(&g, &mll.task_to_rank, &alloc)
+            .link
+            .unwrap()
+            .max_latency;
+        assert!(
+            final_lat <= mll.node_score * (1.0 + 1e-9) + 1e-12,
+            "refinement worsened MaxLinkLoad: {final_lat} > {}",
+            mll.node_score
+        );
     }
 
     #[test]

@@ -3,13 +3,19 @@
 //!
 //! The node-level geometric partition minimizes cut volume only implicitly
 //! (compact parts have small boundaries); this pass attacks it directly.
-//! The objective is the inter-node **weighted hops** of the assignment —
-//! `Σ_e w(e) · hops(node(u), node(v))` over the task graph, which is
-//! exactly the Section 3 WeightedHops metric of any mapping that respects
-//! the assignment (intra-node edges cost zero, and every rank of a node
-//! shares its router). A swap of two tasks in different nodes preserves
-//! per-node task counts, so refinement never breaks the balance the
-//! bijection relies on.
+//! The default objective is the inter-node **weighted hops** of the
+//! assignment — `Σ_e w(e) · hops(node(u), node(v))` over the task graph,
+//! which is exactly the Section 3 WeightedHops metric of any mapping that
+//! respects the assignment (intra-node edges cost zero, and every rank of
+//! a node shares its router). [`min_volume_refine_with`] additionally
+//! accepts the routed congestion objectives
+//! ([`crate::objective::ObjectiveKind`]): swap gains are then computed
+//! against per-link loads through an incrementally-maintained
+//! [`crate::objective::CongestionState`] — each candidate swap re-routes
+//! only the edges incident to the swapped pair (O(degree · path-length))
+//! instead of re-evaluating the assignment. A swap of two tasks in
+//! different nodes preserves per-node task counts, so refinement never
+//! breaks the balance the bijection relies on.
 //!
 //! # Determinism
 //!
@@ -28,6 +34,8 @@
 
 use crate::apps::TaskGraph;
 use crate::machine::Torus;
+use crate::metrics::LinkAccumulator;
+use crate::objective::{CongestionState, ObjectiveKind};
 use crate::par::{self, Parallelism};
 
 /// Compressed adjacency of the task graph (both directions per edge).
@@ -293,6 +301,147 @@ pub fn min_volume_refine(
     applied_total
 }
 
+/// [`min_volume_refine`] under a selectable objective: `WeightedHops`
+/// dispatches to the hop-weighted path above; the routed congestion
+/// objectives run [`congestion_refine`], whose swap gains are computed
+/// against incrementally-maintained per-link loads. Deterministic and
+/// independent of the thread budget either way.
+#[allow(clippy::too_many_arguments)]
+pub fn min_volume_refine_with(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    passes: usize,
+    par: Parallelism,
+    objective: ObjectiveKind,
+) -> usize {
+    match objective {
+        ObjectiveKind::WeightedHops => {
+            min_volume_refine(graph, node_of, node_routers, torus, passes, par)
+        }
+        kind => congestion_refine(graph, node_of, node_routers, torus, passes, par, kind),
+    }
+}
+
+/// Greedy boundary swaps against a routed congestion objective.
+///
+/// Same propose-parallel / apply-sequential structure (and therefore the
+/// same thread-count-invariance argument) as the hop-weighted path, but
+/// gains come from [`CongestionState::swap_gain`]: the per-link load state
+/// is frozen for the parallel proposal phase, each candidate swap re-routes
+/// only its incident edges into a per-worker [`LinkAccumulator`] delta, and
+/// the sequential apply phase re-checks every proposal against the current
+/// state before committing its delta in O(path-length) — no full
+/// re-evaluation anywhere.
+#[allow(clippy::too_many_arguments)]
+fn congestion_refine(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    passes: usize,
+    par: Parallelism,
+    kind: ObjectiveKind,
+) -> usize {
+    assert_eq!(node_of.len(), graph.num_tasks);
+    let nn = node_routers.len();
+    if nn < 2 || graph.edges.is_empty() {
+        return 0;
+    }
+    let adj = Adjacency::build(graph);
+    let node_ids: Vec<u32> = (0..nn as u32).collect();
+    let mut state = CongestionState::build(torus, node_routers, graph, node_of, kind);
+    let mut apply_acc = LinkAccumulator::new(torus);
+    let mut applied_total = 0usize;
+    for _pass in 0..passes {
+        let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+        for (t, &x) in node_of.iter().enumerate() {
+            tasks_by_node[x as usize].push(t as u32);
+        }
+        // Phase 1: propose in parallel over nodes against the frozen
+        // snapshot (assignment + link-load state). Proposals are pure
+        // functions of that snapshot, so they never depend on the budget.
+        let snapshot: &[u32] = node_of;
+        let state_ref = &state;
+        let proposals: Vec<Vec<Swap>> = par::map_with(
+            par,
+            &node_ids,
+            || LinkAccumulator::new(torus),
+            |acc, _i, &a| {
+                let mut out = Vec::new();
+                for &u in &tasks_by_node[a as usize] {
+                    let mut targets: Vec<u32> = adj
+                        .neighbors(u as usize)
+                        .map(|(n, _)| snapshot[n as usize])
+                        .filter(|&x| x != a)
+                        .collect();
+                    if targets.is_empty() {
+                        continue;
+                    }
+                    targets.sort_unstable();
+                    targets.dedup();
+                    let mut best: Option<(f64, u32)> = None;
+                    for &bn in &targets {
+                        for &b in &tasks_by_node[bn as usize] {
+                            let g = state_ref.swap_gain(
+                                snapshot,
+                                u as usize,
+                                b as usize,
+                                adj.neighbors(u as usize),
+                                adj.neighbors(b as usize),
+                                acc,
+                            );
+                            let better = match best {
+                                None => g > 0.0,
+                                // Strictly-greater gain wins; ties keep the
+                                // earlier (smaller) partner index.
+                                Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
+                            };
+                            if better && g > 0.0 {
+                                best = Some((g, b));
+                            }
+                        }
+                    }
+                    if let Some((_, b)) = best {
+                        out.push(Swap { u, b });
+                    }
+                }
+                out
+            },
+        );
+        // Phase 2: apply sequentially in (node, task) order, re-checking
+        // each gain against the current state and committing the re-route
+        // delta incrementally.
+        let mut applied_this_pass = 0usize;
+        for Swap { u, b } in proposals.into_iter().flatten() {
+            let (a, bn) = (node_of[u as usize], node_of[b as usize]);
+            if a == bn {
+                continue;
+            }
+            let (g, new_max, new_sum) = state.swap_eval(
+                node_of,
+                u as usize,
+                b as usize,
+                adj.neighbors(u as usize),
+                adj.neighbors(b as usize),
+                &mut apply_acc,
+            );
+            if g > 0.0 {
+                state.commit_evaluated(&apply_acc, new_max, new_sum);
+                node_of[u as usize] = bn;
+                node_of[b as usize] = a;
+                applied_this_pass += 1;
+            }
+        }
+        applied_total += applied_this_pass;
+        if applied_this_pass == 0 {
+            break;
+        }
+    }
+    applied_total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +489,91 @@ mod tests {
             );
             assert_eq!(par_assign, seq, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn congestion_refine_reduces_its_objective_and_preserves_balance() {
+        let g = stencil_graph(&[16], false, 2.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        for kind in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let mut node_of: Vec<u32> = (0..16).map(|t| (t % 4) as u32).collect();
+            let before =
+                CongestionState::build(&torus, &routers, &g, &node_of, kind).value();
+            let swaps = min_volume_refine_with(
+                &g,
+                &mut node_of,
+                &routers,
+                &torus,
+                8,
+                Parallelism::sequential(),
+                kind,
+            );
+            let after = CongestionState::build(&torus, &routers, &g, &node_of, kind).value();
+            assert!(swaps > 0, "{kind:?}: no swaps on a scrambled assignment");
+            assert!(after < before, "{kind:?}: {after} !< {before}");
+            let mut sizes = [0usize; 4];
+            for &x in &node_of {
+                sizes[x as usize] += 1;
+            }
+            assert_eq!(sizes, [4, 4, 4, 4], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn congestion_refine_is_thread_count_invariant() {
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        for kind in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let mut seq = start.clone();
+            min_volume_refine_with(
+                &g,
+                &mut seq,
+                &routers,
+                &torus,
+                4,
+                Parallelism::sequential(),
+                kind,
+            );
+            for threads in [2, 8] {
+                let mut par_assign = start.clone();
+                min_volume_refine_with(
+                    &g,
+                    &mut par_assign,
+                    &routers,
+                    &torus,
+                    4,
+                    Parallelism::threads(threads).with_grain(1),
+                    kind,
+                );
+                assert_eq!(par_assign, seq, "{kind:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn refine_with_weighted_hops_matches_hop_path() {
+        // The dispatching entry point under the default objective must be
+        // exactly the hop-weighted refinement.
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        let mut direct = start.clone();
+        let sd = min_volume_refine(&g, &mut direct, &routers, &torus, 4, Parallelism::sequential());
+        let mut via = start.clone();
+        let sv = min_volume_refine_with(
+            &g,
+            &mut via,
+            &routers,
+            &torus,
+            4,
+            Parallelism::sequential(),
+            ObjectiveKind::WeightedHops,
+        );
+        assert_eq!((sd, direct), (sv, via));
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! `MinVolume` boundary refinement of the node assignment), and intra-node
 //! messages stay off the network per the Section 3 model.
 //!
+//! What the mapper *optimizes* is pluggable too: [`objective`] provides
+//! `WeightedHops` (Eqn 3), `MaxLinkLoad` (Eqn 7 routed bottleneck
+//! latency), and `CongestionBlend` behind one trait, selected per run via
+//! `Z2Config::objective`, `HierConfig::objective`, or the service's
+//! `"objective"` field — the rotation sweep and `MinVolume` refinement
+//! both optimize the selected objective end to end.
+//!
 //! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
 //! WeightedHops scoring) is parallel and allocation-free in steady state:
 //! [`par`] provides deterministic fork–join primitives (results are
@@ -44,6 +51,7 @@ pub mod machine;
 pub mod mapping;
 pub mod metrics;
 pub mod mj;
+pub mod objective;
 pub mod par;
 pub mod runtime;
 pub mod sfc;

@@ -129,6 +129,19 @@ pub struct SparseAllocator {
 }
 
 impl SparseAllocator {
+    /// Allocate one job per `(num_nodes, seed)` entry, fanned out over the
+    /// thread budget. Each job is deterministic per seed and results land
+    /// in input order, so batch allocation is thread-count-invariant —
+    /// this is what the coordinator's experiment sweeps call instead of a
+    /// sequential allocate-per-seed loop.
+    pub fn allocate_batch(
+        &self,
+        jobs: &[(usize, u64)],
+        par: crate::par::Parallelism,
+    ) -> Vec<Allocation> {
+        crate::par::map(par, jobs, |_, &(nodes, seed)| self.allocate(nodes, seed))
+    }
+
     /// Allocate `num_nodes` nodes for a job. Deterministic per seed.
     pub fn allocate(&self, num_nodes: usize, seed: u64) -> Allocation {
         let mut rng = Rng::new(seed);

@@ -48,6 +48,11 @@ pub struct Z2Config {
     /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = sequential.
     /// The mapping is bit-identical at every thread count.
     pub threads: usize,
+    /// What the strategy optimizes: the rotation sweep scores candidates
+    /// under this objective, and (in hierarchical mode) `MinVolume`
+    /// refinement computes its swap gains against it. `WeightedHops` is
+    /// the paper's default.
+    pub objective: crate::objective::ObjectiveKind,
     /// Hierarchical node→core mode: when set, the strategy runs the
     /// two-level [`crate::hier`] mapper (node-level MJ sweep + the given
     /// intra-node strategy) instead of the flat rank-level partition.
@@ -71,6 +76,7 @@ impl Z2Config {
             shift: true,
             max_rotations: 36,
             threads: 0,
+            objective: crate::objective::ObjectiveKind::WeightedHops,
             hier: None,
         }
     }
@@ -151,6 +157,7 @@ pub fn z2_map(
             drop_node_dims: cfg.drop_proc_dims.clone(),
             max_rotations: cfg.max_rotations,
             threads: cfg.threads,
+            objective: cfg.objective,
             ..crate::hier::HierConfig::default()
         };
         return crate::hier::map_hierarchical(graph, tcoords, alloc, &hcfg, backend)
@@ -164,6 +171,7 @@ pub fn z2_map(
     let sweep = SweepConfig {
         max_candidates: cfg.max_rotations,
         threads: cfg.threads,
+        objective: cfg.objective,
         ..Default::default()
     };
     rotation_sweep(graph, tcoords, &pcoords, alloc, &map_cfg, &sweep, backend).task_to_rank
@@ -302,6 +310,25 @@ mod tests {
             per_node[alloc.core_node[r as usize] as usize] += 1;
         }
         assert!(per_node.iter().all(|&c| c == 4), "{per_node:?}");
+    }
+
+    #[test]
+    fn z2_runs_under_routed_objective_flat_and_hier() {
+        // Z2Config::objective threads through both the flat rotation sweep
+        // and the hierarchical mapper; each still yields a bijection.
+        use crate::objective::ObjectiveKind;
+        let alloc = toy_alloc(); // 64 ranks
+        let g = stencil_graph(&[4, 4, 4], false, 1.0);
+        for hier in [None, Some(crate::hier::IntraNodeStrategy::MinVolume { passes: 2 })] {
+            let mut cfg = Z2Config::z2_1();
+            cfg.max_rotations = 4;
+            cfg.objective = ObjectiveKind::MaxLinkLoad;
+            cfg.hier = hier;
+            let m = z2_map(&g, &g.coords, &alloc, &cfg, &NativeBackend);
+            let mut s = m.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..64u32).collect::<Vec<_>>(), "hier={hier:?}");
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Rotation sweep (Section 4.3, "Rotating the machine and task
 //! coordinates"): the quality of an MJ mapping depends on the order the cut
 //! dimensions are visited, so up to `td!·pd!` axis-permutation candidates
-//! are generated and the one with the lowest WeightedHops (Eqn. 3) wins.
+//! are generated and the one with the lowest objective value wins —
+//! WeightedHops (Eqn. 3) by default, or any routed
+//! [`crate::objective::ObjectiveKind`] via [`SweepConfig::objective`].
 //!
 //! In the paper each MPI process computes one rotation and an Allreduce
 //! picks the winner; here the sweep fans the candidates out across a
@@ -22,9 +24,13 @@
 //!   buffers against a shared [`BatchScorer`] (per-rank router coordinates
 //!   computed once per sweep, not once per candidate).
 //!
-//! Scoring runs on the `batched_weighted_hops` kernel — either the AOT
-//! artifact runtime (`runtime::PjrtBackend`) or the bit-equivalent native
-//! fallback.
+//! WeightedHops scoring runs on the `batched_weighted_hops` kernel —
+//! either the AOT artifact runtime (`runtime::PjrtBackend`) or the
+//! bit-equivalent native fallback. Routed objectives (`MaxLinkLoad`,
+//! `CongestionBlend`) score each candidate with one sequential routed pass
+//! through a per-worker [`crate::metrics::LinkAccumulator`]; either way a
+//! candidate's score is a pure function of its mapping, so the sweep stays
+//! bit-identical at every thread count.
 
 use super::{
     map_tasks_with_proc, MapConfig, MappingScratch, ProcPartitionCache,
@@ -33,7 +39,9 @@ use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::machine::Allocation;
 use crate::metrics::native::batched_weighted_hops_native_par;
+use crate::metrics::LinkAccumulator;
 use crate::mj::MjScratch;
+use crate::objective::{LinkCosts, Objective, ObjectiveKind};
 use crate::par::{self, Parallelism};
 
 /// Backend for batched WeightedHops evaluation. Implementations: the
@@ -127,6 +135,10 @@ pub struct SweepConfig {
     /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = the
     /// sequential reference path. The result is identical either way.
     pub threads: usize,
+    /// What the sweep minimizes. `WeightedHops` scores through the batched
+    /// f32 kernel backend (the paper's path); routed objectives score
+    /// through the f64 routed-link evaluator.
+    pub objective: ObjectiveKind,
 }
 
 impl Default for SweepConfig {
@@ -135,6 +147,7 @@ impl Default for SweepConfig {
             max_candidates: 36,
             chunk_edges: 32768,
             threads: 0,
+            objective: ObjectiveKind::WeightedHops,
         }
     }
 }
@@ -154,7 +167,8 @@ pub struct SweepResult {
     pub task_to_rank: Vec<u32>,
     /// Index of the winning candidate.
     pub chosen: usize,
-    /// WeightedHops score per candidate.
+    /// Objective value per candidate ([`SweepConfig::objective`];
+    /// WeightedHops by default).
     pub scores: Vec<f64>,
     /// The (task_perm, proc_perm) of each candidate.
     pub candidates: Vec<(Vec<usize>, Vec<usize>)>,
@@ -192,6 +206,80 @@ pub struct ScoreScratch {
 impl ScoreScratch {
     pub fn new() -> Self {
         ScoreScratch::default()
+    }
+}
+
+/// Per-worker candidate-scoring scratch, generalized from [`ScoreScratch`]:
+/// the f32 kernel buffers plus (allocated on first use) the dense routed
+/// link accumulator the routed objectives score through. One per sweep
+/// worker; never shared between concurrent workers.
+#[derive(Default)]
+pub struct ObjectiveScratch {
+    score: ScoreScratch,
+    routed: Option<LinkAccumulator>,
+}
+
+impl ObjectiveScratch {
+    pub fn new() -> Self {
+        ObjectiveScratch::default()
+    }
+}
+
+/// Per-sweep candidate scorer: the objective-dispatched counterpart of
+/// [`BatchScorer`]. `WeightedHops` keeps the kernel-backend path (and its
+/// f32 accumulation semantics, so default-objective sweeps score exactly as
+/// before); routed objectives evaluate per-link loads in f64.
+enum CandidateScorer<'a> {
+    Whops(BatchScorer<'a>),
+    Routed {
+        graph: &'a TaskGraph,
+        alloc: &'a Allocation,
+        costs: LinkCosts,
+        obj: &'static dyn Objective,
+    },
+}
+
+impl<'a> CandidateScorer<'a> {
+    fn new(
+        graph: &'a TaskGraph,
+        alloc: &'a Allocation,
+        sweep: &SweepConfig,
+    ) -> CandidateScorer<'a> {
+        match sweep.objective {
+            ObjectiveKind::WeightedHops => {
+                CandidateScorer::Whops(BatchScorer::new(graph, alloc, sweep.chunk_edges))
+            }
+            kind => CandidateScorer::Routed {
+                graph,
+                alloc,
+                costs: LinkCosts::new(&alloc.torus),
+                obj: kind.get(),
+            },
+        }
+    }
+
+    fn score(
+        &self,
+        mapping: &[u32],
+        backend: &dyn WhopsBackend,
+        scratch: &mut ObjectiveScratch,
+    ) -> f64 {
+        match self {
+            CandidateScorer::Whops(scorer) => {
+                scorer.score_one(mapping, backend, &mut scratch.score)
+            }
+            CandidateScorer::Routed {
+                graph,
+                alloc,
+                costs,
+                obj,
+            } => {
+                let acc = scratch
+                    .routed
+                    .get_or_insert_with(|| LinkAccumulator::new(&alloc.torus));
+                obj.score_one(graph, mapping, alloc, costs, acc)
+            }
+        }
     }
 }
 
@@ -330,11 +418,12 @@ pub fn score_mappings_par(
     })
 }
 
-/// The full rotation sweep: generate candidates, map, score, pick the best.
-/// `pcoords` are the (possibly transformed) processor coordinates used for
-/// partitioning; scoring always uses the true router coordinates from
-/// `alloc`. Candidates fan out across `sweep.threads` workers; the result
-/// is bit-identical at every thread count.
+/// The full rotation sweep: generate candidates, map, score, pick the best
+/// under [`SweepConfig::objective`]. `pcoords` are the (possibly
+/// transformed) processor coordinates used for partitioning; scoring always
+/// uses the true router coordinates from `alloc`. Candidates fan out across
+/// `sweep.threads` workers; the result is bit-identical at every thread
+/// count.
 pub fn rotation_sweep(
     graph: &TaskGraph,
     tcoords: &Coords,
@@ -365,11 +454,11 @@ pub fn rotation_sweep(
     // Phase 2: per-candidate task partition + join + score, fanned out with
     // per-worker scratch arenas. Within a candidate the work is sequential:
     // the candidate-level fan-out already saturates the budget.
-    let scorer = BatchScorer::new(graph, alloc, sweep.chunk_edges);
+    let scorer = CandidateScorer::new(graph, alloc, sweep);
     let results: Vec<(Vec<u32>, f64)> = par::map_with(
         par,
         &candidates,
-        || (MappingScratch::new(), ScoreScratch::new()),
+        || (MappingScratch::new(), ObjectiveScratch::new()),
         |(map_scratch, score_scratch), _i, (tp, pp)| {
             let proc = cache.get(pp).expect("proc partition precomputed in phase 1");
             let mapping = map_tasks_with_proc(
@@ -380,7 +469,7 @@ pub fn rotation_sweep(
                 Parallelism::sequential(),
                 map_scratch,
             );
-            let score = scorer.score_one(&mapping, backend, score_scratch);
+            let score = scorer.score(&mapping, backend, score_scratch);
             (mapping, score)
         },
     );
@@ -545,6 +634,50 @@ mod tests {
         );
         let max = res.scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         assert!(res.scores[res.chosen] < max);
+    }
+
+    #[test]
+    fn sweep_under_routed_objective_picks_its_own_minimum() {
+        // Under MaxLinkLoad the chosen candidate must minimize the routed
+        // bottleneck latency (verified against the metrics engine), not
+        // WeightedHops.
+        use crate::metrics::eval_full;
+        use crate::objective::ObjectiveKind;
+        let g = stencil_graph(&[2, 16], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[16, 2]),
+            core_router: (0..32u32).collect(),
+            core_node: (0..32u32).collect(),
+            ranks_per_node: 1,
+        };
+        let map_cfg = MapConfig {
+            longest_dim: false,
+            ..Default::default()
+        };
+        for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let sweep = SweepConfig {
+                objective,
+                ..Default::default()
+            };
+            let res = rotation_sweep(
+                &g,
+                &g.coords,
+                &alloc.proc_coords(),
+                &alloc,
+                &map_cfg,
+                &sweep,
+                &NativeBackend,
+            );
+            let min = res.scores.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(res.scores[res.chosen], min, "{objective:?}");
+            let m = eval_full(&g, &res.task_to_rank, &alloc);
+            let want = objective.value_from_metrics(&m);
+            assert!(
+                (res.scores[res.chosen] - want).abs() <= 1e-9 * want.max(1.0),
+                "{objective:?}: sweep score {} vs metrics {want}",
+                res.scores[res.chosen]
+            );
+        }
     }
 
     #[test]

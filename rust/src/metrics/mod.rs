@@ -57,6 +57,13 @@ pub struct LinkMetrics {
     /// Eqn 7: max `Data(e)/bw(e)` over links (seconds when data is bytes
     /// and bw is bytes/s; the machine presets use GB/s so callers scale).
     pub max_latency: f64,
+    /// Sum of `Data(e)/bw(e)` over all existing directed links — the
+    /// bandwidth-aware total routed volume the `CongestionBlend` objective
+    /// averages over.
+    pub sum_latency: f64,
+    /// Number of directed links that exist in the topology (mesh boundary
+    /// routers lack the outward link).
+    pub num_links: usize,
     /// Per (dimension, direction): [dim][0]=+, [dim][1]=-.
     pub per_dim: Vec<[DimStats; 2]>,
 }
@@ -137,8 +144,7 @@ struct EvalPartial {
 struct EvalScratch {
     ca: Vec<usize>,
     cb: Vec<usize>,
-    dense: Vec<f64>,
-    touched: Vec<u32>,
+    acc: LinkAccumulator,
 }
 
 /// [`eval_full`] with an explicit chunk size (tests force small chunks to
@@ -165,8 +171,7 @@ pub fn eval_full_chunked(
         || EvalScratch {
             ca: vec![0usize; dim],
             cb: vec![0usize; dim],
-            dense: vec![0f64; nlinks],
-            touched: Vec::new(),
+            acc: LinkAccumulator::new(torus),
         },
         |s, _i, &c| {
             let lo = c * chunk;
@@ -177,13 +182,8 @@ pub fn eval_full_chunked(
                 messages: 0,
                 load: Vec::new(),
             };
-            let EvalScratch {
-                ca,
-                cb,
-                dense,
-                touched,
-            } = s;
-            touched.clear();
+            let EvalScratch { ca, cb, acc } = s;
+            acc.reset();
             for e in &graph.edges[lo..hi] {
                 let ra = task_to_rank[e.u as usize] as usize;
                 let rb = task_to_rank[e.v as usize] as usize;
@@ -198,23 +198,14 @@ pub fn eval_full_chunked(
                 let h = torus.hop_dist(ca, cb) as f64;
                 p.hops += h;
                 p.weighted_hops += e.w * h;
-                let mut visit = |id: usize, d: usize, dir: usize| {
-                    let l = torus.link_index(id, d, dir);
-                    if dense[l] == 0.0 {
-                        touched.push(l as u32);
-                    }
-                    dense[l] += e.w;
-                };
-                torus.route(ca, cb, &mut visit);
-                torus.route(cb, ca, &mut visit);
+                acc.add_routed(torus, ca, cb, e.w);
             }
-            // Extract the chunk's sparse loads and reset the dense buffer
-            // for the worker's next chunk. Edge weights are positive, so
-            // `dense[l] == 0.0` marks exactly the untouched links.
-            p.load.reserve(touched.len());
-            for &l in touched.iter() {
-                p.load.push((l, dense[l as usize]));
-                dense[l as usize] = 0.0;
+            // Extract the chunk's sparse loads (first-touch order, like the
+            // accumulation itself); the reset at chunk start keeps the
+            // worker's buffer reusable.
+            p.load.reserve(acc.touched().len());
+            for &l in acc.touched() {
+                p.load.push((l, acc.load(l as usize)));
             }
             p
         },
@@ -292,14 +283,120 @@ pub fn summarize_links(torus: &crate::machine::Torus, load: &[f64]) -> LinkMetri
     }
     let total_links: usize = counts.iter().map(|c| c[0] + c[1]).sum();
     lm.avg_data = total / total_links.max(1) as f64;
+    lm.num_links = total_links;
     for d in 0..dim {
         for dir in 0..2 {
             let n = counts[d][dir].max(1) as f64;
             lm.per_dim[d][dir].avg_data = sums[d][dir] / n;
             lm.per_dim[d][dir].avg_latency = lat_sums[d][dir] / n;
+            lm.sum_latency += lat_sums[d][dir];
         }
     }
     lm
+}
+
+/// Reusable routed-link load accumulator: a dense per-directed-link `f64`
+/// buffer plus a touched-link list, so repeated accumulations (candidate
+/// scoring) and **signed** re-route deltas (refinement swap gains) reuse one
+/// allocation and reset in O(touched) instead of O(links).
+///
+/// [`add_pair`](LinkAccumulator::add_pair) is the O(path-length) primitive
+/// everything else builds on: it walks the dimension-ordered route between
+/// two routers in both directions and adds a (possibly negative) volume to
+/// every link traversed — exactly the per-edge inner loop of [`eval_full`],
+/// exposed so the [`crate::objective`] layer can re-route single edges
+/// incrementally instead of re-evaluating whole mappings.
+pub struct LinkAccumulator {
+    load: Vec<f64>,
+    /// Dedup marker per link: `touched` holds each link at most once even
+    /// when deltas cancel back to exactly 0.0.
+    mark: Vec<bool>,
+    touched: Vec<u32>,
+    ca: Vec<usize>,
+    cb: Vec<usize>,
+}
+
+impl LinkAccumulator {
+    pub fn new(torus: &crate::machine::Torus) -> Self {
+        LinkAccumulator {
+            load: vec![0f64; torus.num_directed_links()],
+            mark: vec![false; torus.num_directed_links()],
+            touched: Vec::new(),
+            ca: vec![0usize; torus.dim()],
+            cb: vec![0usize; torus.dim()],
+        }
+    }
+
+    /// Clear all accumulated loads (O(touched)).
+    pub fn reset(&mut self) {
+        for &l in &self.touched {
+            self.load[l as usize] = 0.0;
+            self.mark[l as usize] = false;
+        }
+        self.touched.clear();
+    }
+
+    /// Links touched since the last reset, in first-touch order.
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Accumulated load of one directed link (0.0 when untouched).
+    #[inline]
+    pub fn load(&self, link: usize) -> f64 {
+        self.load[link]
+    }
+
+    /// Add `w` (may be negative) along the dimension-ordered routes
+    /// `qa -> qb` **and** `qb -> qa` (both endpoints send). O(path length).
+    pub fn add_pair(&mut self, torus: &crate::machine::Torus, qa: usize, qb: usize, w: f64) {
+        torus.coords_into(qa, &mut self.ca);
+        torus.coords_into(qb, &mut self.cb);
+        accumulate_routes(
+            torus,
+            &self.ca,
+            &self.cb,
+            w,
+            &mut self.load,
+            &mut self.mark,
+            &mut self.touched,
+        );
+    }
+
+    /// [`add_pair`](LinkAccumulator::add_pair) with the endpoint
+    /// coordinates already materialized (callers that also need them for
+    /// hop distances avoid recomputing them here).
+    pub fn add_routed(
+        &mut self,
+        torus: &crate::machine::Torus,
+        ca: &[usize],
+        cb: &[usize],
+        w: f64,
+    ) {
+        accumulate_routes(torus, ca, cb, w, &mut self.load, &mut self.mark, &mut self.touched);
+    }
+}
+
+/// Shared body of the [`LinkAccumulator`] route accumulation.
+fn accumulate_routes(
+    torus: &crate::machine::Torus,
+    ca: &[usize],
+    cb: &[usize],
+    w: f64,
+    load: &mut [f64],
+    mark: &mut [bool],
+    touched: &mut Vec<u32>,
+) {
+    let mut visit = |id: usize, d: usize, dir: usize| {
+        let l = torus.link_index(id, d, dir);
+        if !mark[l] {
+            mark[l] = true;
+            touched.push(l as u32);
+        }
+        load[l] += w;
+    };
+    torus.route(ca, cb, &mut visit);
+    torus.route(cb, ca, &mut visit);
 }
 
 #[cfg(test)]

@@ -103,6 +103,11 @@ fn score_row(
     }
 }
 
+/// Lanes of the unrolled accumulator: 8 independent partial sums match the
+/// f32x8 width the SIMD roadmap item targets, and break the loop-carried
+/// `acc` dependency so LLVM can keep 8 FMAs in flight.
+const LANES: usize = 8;
+
 fn whops_row<const D: usize>(
     src: &[f32],
     dst: &[f32],
@@ -117,8 +122,15 @@ fn whops_row<const D: usize>(
         dims_a[k] = dims[k];
         mesh[k] = wrap[k] <= 0.0;
     }
-    let mut acc = 0f32;
-    for ei in 0..e {
+    #[inline(always)]
+    fn edge_whops<const D: usize>(
+        src: &[f32],
+        dst: &[f32],
+        dims_a: &[f32; D],
+        mesh: &[bool; D],
+        ei: usize,
+        wei: f32,
+    ) -> f32 {
         let off = ei * D;
         let mut hops = 0f32;
         for k in 0..D {
@@ -126,9 +138,27 @@ fn whops_row<const D: usize>(
             let th = ad.min(dims_a[k] - ad);
             hops += if mesh[k] { ad } else { th };
         }
-        acc += w[ei] * hops;
+        wei * hops
     }
-    acc
+    // Manual 8-lane unroll: lane `j` accumulates edges `ei + j` of each
+    // full block, the remainder runs scalar, and the lanes reduce pairwise
+    // in a fixed order — a deterministic accumulation grouping (different
+    // from the old single-accumulator loop only in f32 low-order bits, and
+    // identical across runs and thread counts).
+    let mut acc = [0f32; LANES];
+    let blocks = e / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        for (j, lane) in acc.iter_mut().enumerate() {
+            let ei = base + j;
+            *lane += edge_whops::<D>(src, dst, &dims_a, &mesh, ei, w[ei]);
+        }
+    }
+    let mut tail = 0f32;
+    for ei in blocks * LANES..e {
+        tail += edge_whops::<D>(src, dst, &dims_a, &mesh, ei, w[ei]);
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
 }
 
 fn whops_row_dyn(
@@ -187,6 +217,38 @@ mod tests {
         let w = vec![1.0];
         let out = batched_weighted_hops_native(&src, &dst, &w, &[8.0], &[1.0], 2, 1, 1);
         assert_eq!(out, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn unrolled_lanes_match_scalar_reference() {
+        // Edge counts around the 8-lane block boundary (full blocks, tail,
+        // tail-only): the unrolled kernel must agree with a plain f64
+        // reference within f32 tolerance.
+        let d = 3usize;
+        let dims = [9.0f32, 7.0, 5.0];
+        let wrap = [1.0f32, 0.0, 1.0];
+        for e in [1usize, 7, 8, 9, 16, 37] {
+            let src: Vec<f32> =
+                (0..e * d).map(|k| ((k * 3) % dims[k % d] as usize) as f32).collect();
+            let dst: Vec<f32> =
+                (0..e * d).map(|k| ((k * 5 + 2) % dims[k % d] as usize) as f32).collect();
+            let w: Vec<f32> = (0..e).map(|k| 0.25 + (k % 5) as f32).collect();
+            let mut want = 0f64;
+            for ei in 0..e {
+                let mut hops = 0f64;
+                for k in 0..d {
+                    let ad = (src[ei * d + k] - dst[ei * d + k]).abs() as f64;
+                    let th = ad.min(dims[k] as f64 - ad);
+                    hops += if wrap[k] > 0.0 { th } else { ad };
+                }
+                want += w[ei] as f64 * hops;
+            }
+            let got = batched_weighted_hops_native(&src, &dst, &w, &dims, &wrap, 1, e, d)[0];
+            assert!(
+                (got as f64 - want).abs() <= 1e-3 + want.abs() * 1e-5,
+                "e={e}: {got} vs {want}"
+            );
+        }
     }
 
     #[test]

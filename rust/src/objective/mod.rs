@@ -1,0 +1,752 @@
+//! Pluggable mapping objectives: what "a good mapping" means, as a value.
+//!
+//! The paper's quality model is not just weighted hops: Eqns 4–7 judge a
+//! mapping by the data routed over each link and the serialization latency
+//! of the bottleneck link, and its congestion results are what justify
+//! geometric mapping at scale. This module turns the scorer from a single
+//! hard-wired kernel into a subsystem: one [`Objective`] trait with three
+//! implementations, selected by a [`ObjectiveKind`] carried through
+//! `Z2Config`/`SweepConfig`/`HierConfig` and the service protocol.
+//!
+//! * [`WeightedHops`] — Eqn 3, `Σ_e w(e)·hops(e)`. The rotation sweep keeps
+//!   scoring this one on the batched f32 kernel (native or PJRT artifact);
+//!   the trait implementation here is the f64 arbiter used everywhere else.
+//! * [`MaxLinkLoad`] — Eqn 7, `max_l Data(l)/bw(l)`: the serialization
+//!   latency of the bottleneck link under dimension-ordered routing.
+//! * [`CongestionBlend`] — `½·max_l Data(l)/bw(l) + ½·avg_l Data(l)/bw(l)`.
+//!   The max term alone is a plateau (most swaps leave the bottleneck link
+//!   untouched, so greedy refinement stalls); the average term — which by
+//!   data conservation is the bandwidth-aware weighted-hops volume spread
+//!   over the links — restores a gradient between plateaus. Both terms are
+//!   link latencies, so the blend is unit-consistent.
+//!
+//! # Entry points
+//!
+//! * **Batch** — [`Objective::score_batch`] / [`Objective::score_one`]:
+//!   full evaluation of candidate mappings. Routed objectives accumulate
+//!   per-link loads through a reusable [`LinkAccumulator`]; each mapping is
+//!   scored by one sequential pass in fixed edge order, so scores are pure
+//!   functions of the mapping — **bit-identical at every thread count** no
+//!   matter how candidates are fanned out (pinned by property tests).
+//! * **Incremental delta** — [`CongestionState`]: per-link loads of one
+//!   task→node assignment, maintained across refinement swaps.
+//!   [`CongestionState::swap_gain`] re-routes only the edges incident to
+//!   the swapped pair (O(degree · path-length) via
+//!   [`LinkAccumulator::add_pair`]) and computes the exact new objective:
+//!   the new bottleneck is `max(old max, max over touched links)` unless
+//!   every link attaining the old max was touched and decreased, in which
+//!   case (rare: exactly the swaps that improve the bottleneck) a full
+//!   rescan resolves it. Gains therefore equal full re-evaluation (an
+//!   equivalence property test pins this against [`crate::metrics::eval_full`]).
+//!
+//! # The seam
+//!
+//! Everything that scores mappings now goes through this module: the
+//! rotation sweep (`SweepConfig::objective`), `MinVolume` refinement
+//! (`HierConfig::objective`), the coordinator's `objective` experiment, the
+//! service (`"objective"` request field), and `bench_objective`. Deeper
+//! NUMA levels or heterogeneous-allocation costs plug in as further
+//! `Objective` implementations without touching those layers.
+
+use crate::apps::TaskGraph;
+use crate::machine::{Allocation, Torus};
+use crate::metrics::{eval_hops, LinkAccumulator, Metrics};
+use crate::par::{self, Parallelism};
+
+/// Weight of the bottleneck (max) term in [`CongestionBlend`]; the rest is
+/// the average-link-latency term.
+pub const BLEND_MAX_WEIGHT: f64 = 0.5;
+
+/// Routed link statistics an [`Objective`] reduces to its scalar value.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkSummary {
+    /// Eqn 7: max `Data(l)/bw(l)` over existing directed links.
+    pub max_latency: f64,
+    /// Σ `Data(l)/bw(l)` over existing directed links.
+    pub sum_latency: f64,
+    /// Number of existing directed links.
+    pub num_links: usize,
+    /// Eqn 3 weighted hops (only meaningful for [`WeightedHops`]).
+    pub weighted_hops: f64,
+}
+
+impl LinkSummary {
+    /// Extract the summary from a full metrics evaluation
+    /// ([`crate::metrics::eval_full`] result).
+    pub fn from_metrics(m: &Metrics) -> LinkSummary {
+        let lm = m.link.as_ref().expect("link metrics require eval_full");
+        LinkSummary {
+            max_latency: lm.max_latency,
+            sum_latency: lm.sum_latency,
+            num_links: lm.num_links,
+            weighted_hops: m.weighted_hops,
+        }
+    }
+}
+
+/// A mapping objective: lower values are better. Implementations are
+/// stateless unit structs shared across threads (`Sync`).
+pub trait Objective: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether scoring needs routed per-link loads. `false` means the
+    /// objective is a pure function of per-edge hop distances, so the
+    /// batched f32 WeightedHops kernel path applies.
+    fn needs_routing(&self) -> bool;
+
+    /// Reduce routed link statistics to the scalar objective value.
+    fn reduce(&self, link: &LinkSummary) -> f64;
+
+    /// Full (f64) evaluation of one mapping. `costs`/`scratch` are reused
+    /// across calls; hop-based objectives ignore them.
+    fn score_one(
+        &self,
+        graph: &TaskGraph,
+        mapping: &[u32],
+        alloc: &Allocation,
+        costs: &LinkCosts,
+        scratch: &mut LinkAccumulator,
+    ) -> f64 {
+        if self.needs_routing() {
+            self.reduce(&routed_summary(graph, mapping, alloc, costs, scratch))
+        } else {
+            eval_hops(graph, mapping, alloc).weighted_hops
+        }
+    }
+
+    /// Batch entry point: score several mappings under a thread budget.
+    /// Mappings land in input order and each is scored sequentially, so the
+    /// result is bit-identical at every thread count.
+    fn score_batch(
+        &self,
+        graph: &TaskGraph,
+        mappings: &[Vec<u32>],
+        alloc: &Allocation,
+        par: Parallelism,
+    ) -> Vec<f64> {
+        let costs = LinkCosts::new(&alloc.torus);
+        par::map_with(
+            par,
+            mappings,
+            || LinkAccumulator::new(&alloc.torus),
+            |scratch, _i, m| self.score_one(graph, m, alloc, &costs, scratch),
+        )
+    }
+}
+
+/// Eqn 3: volume-weighted hops (the paper's headline scalar).
+pub struct WeightedHops;
+
+impl Objective for WeightedHops {
+    fn name(&self) -> &'static str {
+        "whops"
+    }
+
+    fn needs_routing(&self) -> bool {
+        false
+    }
+
+    fn reduce(&self, link: &LinkSummary) -> f64 {
+        link.weighted_hops
+    }
+}
+
+/// Eqn 7: serialization latency of the bottleneck link.
+pub struct MaxLinkLoad;
+
+impl Objective for MaxLinkLoad {
+    fn name(&self) -> &'static str {
+        "maxload"
+    }
+
+    fn needs_routing(&self) -> bool {
+        true
+    }
+
+    fn reduce(&self, link: &LinkSummary) -> f64 {
+        link.max_latency
+    }
+}
+
+/// Bottleneck latency blended with the average link latency (see the
+/// module docs for why the average term matters for greedy refinement).
+pub struct CongestionBlend;
+
+impl Objective for CongestionBlend {
+    fn name(&self) -> &'static str {
+        "blend"
+    }
+
+    fn needs_routing(&self) -> bool {
+        true
+    }
+
+    fn reduce(&self, link: &LinkSummary) -> f64 {
+        BLEND_MAX_WEIGHT * link.max_latency
+            + (1.0 - BLEND_MAX_WEIGHT) * link.sum_latency / link.num_links.max(1) as f64
+    }
+}
+
+static WHOPS: WeightedHops = WeightedHops;
+static MAXLOAD: MaxLinkLoad = MaxLinkLoad;
+static BLEND: CongestionBlend = CongestionBlend;
+
+/// Copyable configuration handle for the three objectives — what travels
+/// through `Z2Config`/`SweepConfig`/`HierConfig` and the service protocol.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    #[default]
+    WeightedHops,
+    MaxLinkLoad,
+    CongestionBlend,
+}
+
+impl ObjectiveKind {
+    pub const ALL: [ObjectiveKind; 3] = [
+        ObjectiveKind::WeightedHops,
+        ObjectiveKind::MaxLinkLoad,
+        ObjectiveKind::CongestionBlend,
+    ];
+
+    /// The objective implementation behind this handle.
+    pub fn get(self) -> &'static dyn Objective {
+        match self {
+            ObjectiveKind::WeightedHops => &WHOPS,
+            ObjectiveKind::MaxLinkLoad => &MAXLOAD,
+            ObjectiveKind::CongestionBlend => &BLEND,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.get().name()
+    }
+
+    /// Parse a protocol/CLI name. Accepts the canonical names plus the
+    /// long-form aliases used in prose.
+    pub fn parse(s: &str) -> Option<ObjectiveKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "whops" | "weighted_hops" | "weightedhops" => Some(ObjectiveKind::WeightedHops),
+            "maxload" | "max_link_load" | "maxlinkload" => Some(ObjectiveKind::MaxLinkLoad),
+            "blend" | "congestion_blend" | "congestionblend" => {
+                Some(ObjectiveKind::CongestionBlend)
+            }
+            _ => None,
+        }
+    }
+
+    /// Objective value of a full metrics evaluation (used where
+    /// [`crate::metrics::eval_full`] has already run, e.g. the service's
+    /// `eval` op and the experiment tables).
+    pub fn value_from_metrics(self, m: &Metrics) -> f64 {
+        self.get().reduce(&LinkSummary::from_metrics(m))
+    }
+}
+
+/// Per-topology link costs: `1/bw` per directed link (0 for mesh-boundary
+/// links that do not exist — routing never uses them) and the count of
+/// existing links. Built once per sweep/refinement and shared immutably by
+/// all workers.
+pub struct LinkCosts {
+    inv_bw: Vec<f64>,
+    num_links: usize,
+}
+
+impl LinkCosts {
+    pub fn new(torus: &Torus) -> LinkCosts {
+        let dim = torus.dim();
+        let mut inv_bw = vec![0f64; torus.num_directed_links()];
+        let mut num_links = 0usize;
+        let mut coords = vec![0usize; dim];
+        for router in 0..torus.num_routers() {
+            torus.coords_into(router, &mut coords);
+            for d in 0..dim {
+                for dir in 0..2 {
+                    if !torus.wrap[d] {
+                        let c = coords[d];
+                        if (dir == 0 && c + 1 == torus.sizes[d]) || (dir == 1 && c == 0) {
+                            continue; // mesh boundary: no outward link
+                        }
+                    }
+                    let bw = torus.link_bandwidth(&coords, d, if dir == 0 { 1 } else { -1 });
+                    inv_bw[torus.link_index(router, d, dir)] = 1.0 / bw;
+                    num_links += 1;
+                }
+            }
+        }
+        LinkCosts { inv_bw, num_links }
+    }
+
+    #[inline]
+    pub fn inv_bw(&self, link: usize) -> f64 {
+        self.inv_bw[link]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.num_links
+    }
+}
+
+/// Route every inter-node edge of `mapping` and reduce the loads to a
+/// [`LinkSummary`]. One sequential pass in edge order — the per-candidate
+/// scoring kernel of the routed objectives.
+pub fn routed_summary(
+    graph: &TaskGraph,
+    mapping: &[u32],
+    alloc: &Allocation,
+    costs: &LinkCosts,
+    acc: &mut LinkAccumulator,
+) -> LinkSummary {
+    assert_eq!(mapping.len(), graph.num_tasks);
+    let torus = &alloc.torus;
+    acc.reset();
+    let mut weighted_hops = 0f64;
+    for e in &graph.edges {
+        let ra = mapping[e.u as usize] as usize;
+        let rb = mapping[e.v as usize] as usize;
+        if alloc.core_node[ra] == alloc.core_node[rb] {
+            continue; // intra-node: never enters the network
+        }
+        let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
+        weighted_hops += e.w * torus.hop_dist_ids(qa, qb) as f64;
+        acc.add_pair(torus, qa, qb, e.w);
+    }
+    let mut max_latency = 0f64;
+    let mut sum_latency = 0f64;
+    for &l in acc.touched() {
+        let lat = acc.load(l as usize) * costs.inv_bw(l as usize);
+        sum_latency += lat;
+        if lat > max_latency {
+            max_latency = lat;
+        }
+    }
+    LinkSummary {
+        max_latency,
+        sum_latency,
+        num_links: costs.num_links,
+        weighted_hops,
+    }
+}
+
+/// Incrementally-maintained routed link loads of a task→node assignment:
+/// the state behind congestion-objective `MinVolume` swap gains.
+///
+/// The assignment is represented exactly like the hierarchical mapper's
+/// node level: task `t` lives on node `node_of[t]`, node `x` sits at router
+/// `routers[x]`, and an edge between tasks on the same node never enters
+/// the network. [`swap_gain`](CongestionState::swap_gain) evaluates a
+/// candidate swap by re-routing only the incident edges into a caller-held
+/// [`LinkAccumulator`] delta; [`commit`](CongestionState::commit) applies
+/// that delta in O(touched) (plus a rescan only when the bottleneck link
+/// itself improves). The cached objective value therefore always equals a
+/// full re-evaluation of the current assignment, modulo f64 rounding.
+pub struct CongestionState<'a> {
+    torus: &'a Torus,
+    routers: &'a [u32],
+    costs: LinkCosts,
+    obj: &'static dyn Objective,
+    load: Vec<f64>,
+    sum_latency: f64,
+    max_latency: f64,
+}
+
+impl<'a> CongestionState<'a> {
+    /// Build the state for `node_of` over `graph`. `kind` must be a routed
+    /// objective ([`Objective::needs_routing`]).
+    pub fn build(
+        torus: &'a Torus,
+        routers: &'a [u32],
+        graph: &TaskGraph,
+        node_of: &[u32],
+        kind: ObjectiveKind,
+    ) -> CongestionState<'a> {
+        let obj = kind.get();
+        assert!(
+            obj.needs_routing(),
+            "CongestionState is for routed objectives; {} dispatches to the hop path",
+            obj.name()
+        );
+        assert_eq!(node_of.len(), graph.num_tasks);
+        let costs = LinkCosts::new(torus);
+        let mut acc = LinkAccumulator::new(torus);
+        for e in &graph.edges {
+            let (a, b) = (node_of[e.u as usize], node_of[e.v as usize]);
+            if a != b {
+                let (qa, qb) = (routers[a as usize] as usize, routers[b as usize] as usize);
+                acc.add_pair(torus, qa, qb, e.w);
+            }
+        }
+        let mut state = CongestionState {
+            torus,
+            routers,
+            costs,
+            obj,
+            load: vec![0f64; torus.num_directed_links()],
+            sum_latency: 0.0,
+            max_latency: 0.0,
+        };
+        for &l in acc.touched() {
+            state.load[l as usize] = acc.load(l as usize);
+        }
+        let (max, sum) = state.scan_latencies(None);
+        state.max_latency = max;
+        state.sum_latency = sum;
+        state
+    }
+
+    /// Current objective value of the assignment.
+    pub fn value(&self) -> f64 {
+        self.obj.reduce(&LinkSummary {
+            max_latency: self.max_latency,
+            sum_latency: self.sum_latency,
+            num_links: self.costs.num_links,
+            weighted_hops: 0.0,
+        })
+    }
+
+    /// (max, sum) link latency over all links, optionally with a virtual
+    /// delta applied. O(links) — the rescan fallback.
+    fn scan_latencies(&self, delta: Option<&LinkAccumulator>) -> (f64, f64) {
+        let mut max = 0f64;
+        let mut sum = 0f64;
+        for (l, &load) in self.load.iter().enumerate() {
+            let d = delta.map_or(0.0, |acc| acc.load(l));
+            let lat = (load + d) * self.costs.inv_bw(l);
+            sum += lat;
+            if lat > max {
+                max = lat;
+            }
+        }
+        (max, sum)
+    }
+
+    /// Exact max latency after applying `delta`. Fast path: the new max is
+    /// `max(old max, max over touched)` unless some touched link attained
+    /// the old max and every touched link ends strictly below it — only
+    /// then (the bottleneck may have moved) rescan.
+    fn max_after(&self, delta: &LinkAccumulator) -> f64 {
+        let mut touched_max = f64::NEG_INFINITY;
+        let mut old_max_touched = false;
+        for &l in delta.touched() {
+            let l = l as usize;
+            let d = delta.load(l);
+            if d != 0.0 && self.load[l] * self.costs.inv_bw(l) >= self.max_latency {
+                old_max_touched = true;
+            }
+            let lat = (self.load[l] + d) * self.costs.inv_bw(l);
+            if lat > touched_max {
+                touched_max = lat;
+            }
+        }
+        if touched_max >= self.max_latency {
+            touched_max
+        } else if old_max_touched {
+            self.scan_latencies(Some(delta)).0
+        } else {
+            self.max_latency
+        }
+    }
+
+    /// Collect the link-load delta of swapping tasks `u` and `b` between
+    /// their nodes into `acc` (reset first). `nbrs_u`/`nbrs_b` yield each
+    /// task's `(neighbor task, weight)` pairs; the direct edge `u–b` (if
+    /// any) moves between the same node pair and is skipped. O(degree ·
+    /// path-length).
+    fn collect_delta(
+        &self,
+        node_of: &[u32],
+        u: usize,
+        b: usize,
+        nbrs_u: impl Iterator<Item = (u32, f64)>,
+        nbrs_b: impl Iterator<Item = (u32, f64)>,
+        acc: &mut LinkAccumulator,
+    ) {
+        acc.reset();
+        let (a, bn) = (node_of[u], node_of[b]);
+        debug_assert_ne!(a, bn, "swap within one node is a no-op");
+        let router = |x: u32| self.routers[x as usize] as usize;
+        let (ra, rbn) = (router(a), router(bn));
+        for (n, w) in nbrs_u {
+            if n as usize == b {
+                continue;
+            }
+            let x = node_of[n as usize];
+            if x != a {
+                acc.add_pair(self.torus, ra, router(x), -w);
+            }
+            if x != bn {
+                acc.add_pair(self.torus, rbn, router(x), w);
+            }
+        }
+        for (n, w) in nbrs_b {
+            if n as usize == u {
+                continue;
+            }
+            let x = node_of[n as usize];
+            if x != bn {
+                acc.add_pair(self.torus, rbn, router(x), -w);
+            }
+            if x != a {
+                acc.add_pair(self.torus, ra, router(x), w);
+            }
+        }
+    }
+
+    /// Objective gain (strictly positive = improvement) of swapping tasks
+    /// `u` and `b` between their current nodes, exact with respect to a
+    /// full re-evaluation. The computed delta is left in `acc`; pass it to
+    /// [`commit`](CongestionState::commit) to apply the swap (the caller
+    /// then updates `node_of` itself).
+    pub fn swap_gain(
+        &self,
+        node_of: &[u32],
+        u: usize,
+        b: usize,
+        nbrs_u: impl Iterator<Item = (u32, f64)>,
+        nbrs_b: impl Iterator<Item = (u32, f64)>,
+        acc: &mut LinkAccumulator,
+    ) -> f64 {
+        self.swap_eval(node_of, u, b, nbrs_u, nbrs_b, acc).0
+    }
+
+    /// [`swap_gain`](CongestionState::swap_gain) plus the post-swap
+    /// `(max, sum)` latencies, so an accepting caller can
+    /// [`commit_evaluated`](CongestionState::commit_evaluated) without
+    /// recomputing the (possibly O(links)) bottleneck scan.
+    pub fn swap_eval(
+        &self,
+        node_of: &[u32],
+        u: usize,
+        b: usize,
+        nbrs_u: impl Iterator<Item = (u32, f64)>,
+        nbrs_b: impl Iterator<Item = (u32, f64)>,
+        acc: &mut LinkAccumulator,
+    ) -> (f64, f64, f64) {
+        self.collect_delta(node_of, u, b, nbrs_u, nbrs_b, acc);
+        let new_max = self.max_after(acc);
+        let mut new_sum = self.sum_latency;
+        for &l in acc.touched() {
+            new_sum += acc.load(l as usize) * self.costs.inv_bw(l as usize);
+        }
+        let gain = self.value()
+            - self.obj.reduce(&LinkSummary {
+                max_latency: new_max,
+                sum_latency: new_sum,
+                num_links: self.costs.num_links,
+                weighted_hops: 0.0,
+            });
+        (gain, new_max, new_sum)
+    }
+
+    /// Apply a delta produced by [`swap_gain`](CongestionState::swap_gain),
+    /// recomputing the post-swap bottleneck. Prefer
+    /// [`commit_evaluated`](CongestionState::commit_evaluated) when the
+    /// `(max, sum)` from [`swap_eval`](CongestionState::swap_eval) are at
+    /// hand.
+    pub fn commit(&mut self, acc: &LinkAccumulator) {
+        let new_max = self.max_after(acc);
+        let mut new_sum = self.sum_latency;
+        for &l in acc.touched() {
+            new_sum += acc.load(l as usize) * self.costs.inv_bw(l as usize);
+        }
+        self.commit_evaluated(acc, new_max, new_sum);
+    }
+
+    /// Apply a delta whose post-swap `(max, sum)` were already computed by
+    /// [`swap_eval`](CongestionState::swap_eval) on the identical delta.
+    pub fn commit_evaluated(&mut self, acc: &LinkAccumulator, new_max: f64, new_sum: f64) {
+        for &l in acc.touched() {
+            self.load[l as usize] += acc.load(l as usize);
+        }
+        self.max_latency = new_max;
+        self.sum_latency = new_sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::{Allocation, BwModel};
+    use crate::metrics::eval_full;
+
+    fn ring_alloc(n: usize) -> Allocation {
+        Allocation {
+            torus: Torus::torus(&[n]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        }
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in ObjectiveKind::ALL {
+            assert_eq!(ObjectiveKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ObjectiveKind::parse("weighted_hops"), Some(ObjectiveKind::WeightedHops));
+        assert_eq!(ObjectiveKind::parse("max_link_load"), Some(ObjectiveKind::MaxLinkLoad));
+        assert!(ObjectiveKind::parse("bogus").is_none());
+        assert_eq!(ObjectiveKind::default(), ObjectiveKind::WeightedHops);
+    }
+
+    #[test]
+    fn link_costs_count_mesh_boundaries() {
+        // 1D mesh of 4: 6 existing directed links of 12 dense slots.
+        let mesh = Torus::mesh(&[4]);
+        let costs = LinkCosts::new(&mesh);
+        assert_eq!(costs.num_links(), 6);
+        // 1D torus of 4: all 8 exist.
+        assert_eq!(LinkCosts::new(&Torus::torus(&[4])).num_links(), 8);
+    }
+
+    #[test]
+    fn routed_scores_match_eval_full() {
+        // Every objective's score_one must agree with the reduction of a
+        // full eval_full run (the engines share the routing model).
+        let g = stencil_graph(&[4, 4], false, 2.5);
+        let alloc = Allocation {
+            torus: Torus::new(vec![4, 4], vec![true, true], BwModel::PerDim(vec![2.0, 4.0])),
+            core_router: (0..16u32).collect(),
+            core_node: (0..16u32).collect(),
+            ranks_per_node: 1,
+        };
+        let m: Vec<u32> = (0..16u32).map(|i| (i * 5) % 16).collect();
+        let full = eval_full(&g, &m, &alloc);
+        let costs = LinkCosts::new(&alloc.torus);
+        let mut acc = LinkAccumulator::new(&alloc.torus);
+        for kind in ObjectiveKind::ALL {
+            let got = kind.get().score_one(&g, &m, &alloc, &costs, &mut acc);
+            let want = kind.value_from_metrics(&full);
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{}: {got} vs {want}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn score_batch_bit_identical_across_threads() {
+        let g = stencil_graph(&[6, 6], true, 1.3);
+        let alloc = ring_alloc(36);
+        let mappings: Vec<Vec<u32>> = (0..7)
+            .map(|s| (0..36u32).map(|i| (i * 5 + s) % 36).collect())
+            .collect();
+        for kind in ObjectiveKind::ALL {
+            let obj = kind.get();
+            let seq = obj.score_batch(&g, &mappings, &alloc, Parallelism::sequential());
+            for threads in [2, 8] {
+                let par = obj.score_batch(&g, &mappings, &alloc, Parallelism::threads(threads));
+                assert_eq!(par, seq, "{} threads={threads}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_state_matches_fresh_build_after_swaps() {
+        // Apply a series of swaps through the incremental state; after each,
+        // the cached value must match a from-scratch rebuild (and eval_full
+        // on the induced node-level pseudo-allocation).
+        let g = stencil_graph(&[12], false, 1.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        let start: Vec<u32> = (0..12).map(|t| (t % 4) as u32).collect();
+        let adj: Vec<Vec<(u32, f64)>> = {
+            let mut a = vec![Vec::new(); 12];
+            for e in &g.edges {
+                a[e.u as usize].push((e.v, e.w));
+                a[e.v as usize].push((e.u, e.w));
+            }
+            a
+        };
+        for kind in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let mut node_of = start.clone();
+            let mut state = CongestionState::build(&torus, &routers, &g, &node_of, kind);
+            let mut acc = LinkAccumulator::new(&torus);
+            for (u, b) in [(0usize, 4usize), (1, 9), (2, 7), (5, 11), (3, 6)] {
+                if node_of[u] == node_of[b] {
+                    continue;
+                }
+                let gain = state.swap_gain(
+                    &node_of,
+                    u,
+                    b,
+                    adj[u].iter().copied(),
+                    adj[b].iter().copied(),
+                    &mut acc,
+                );
+                let before = state.value();
+                state.commit(&acc);
+                node_of.swap(u, b);
+                let fresh = CongestionState::build(&torus, &routers, &g, &node_of, kind);
+                let tol = 1e-9 * fresh.value().abs().max(1.0);
+                assert!(
+                    (state.value() - fresh.value()).abs() <= tol,
+                    "{}: incremental {} vs fresh {}",
+                    kind.name(),
+                    state.value(),
+                    fresh.value()
+                );
+                assert!(
+                    (gain - (before - fresh.value())).abs() <= tol,
+                    "{}: gain {gain} vs re-eval {}",
+                    kind.name(),
+                    before - fresh.value()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_rescan_triggers_when_bottleneck_improves() {
+        // Two tasks hammer one link; swapping one of them away must lower
+        // the max — the rescan path.
+        use crate::apps::{Edge, TaskGraph};
+        use crate::geom::Coords;
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        // Tasks 0,1 on node 0; 2,3 on node 1; 4,5 on nodes 2,3.
+        let mut node_of: Vec<u32> = vec![0, 0, 1, 1, 2, 3];
+        // Edges (0,2) and (1,3) both cross node 0 -> 1 (the hot link);
+        // (4,5) is background traffic elsewhere.
+        let mk_edge = |u: u32, v: u32, w: f64| Edge { u, v, w };
+        let graph = TaskGraph {
+            num_tasks: 6,
+            edges: vec![
+                mk_edge(0, 2, 10.0),
+                mk_edge(1, 3, 10.0),
+                mk_edge(4, 5, 1.0),
+            ],
+            coords: Coords::from_axes(vec![vec![0.0; 6]]),
+        };
+        let mut state =
+            CongestionState::build(&torus, &routers, &graph, &node_of, ObjectiveKind::MaxLinkLoad);
+        assert_eq!(state.value(), 20.0); // both hot edges share link 0->1
+        let adj: Vec<Vec<(u32, f64)>> = vec![
+            vec![(2, 10.0)],
+            vec![(3, 10.0)],
+            vec![(0, 10.0)],
+            vec![(1, 10.0)],
+            vec![(5, 1.0)],
+            vec![(4, 1.0)],
+        ];
+        // Swap task 1 (node 0) with task 4 (node 2): one hot edge now runs
+        // 2 -> 1 instead of 0 -> 1, halving the bottleneck.
+        let mut acc = LinkAccumulator::new(&torus);
+        let gain = state.swap_gain(
+            &node_of,
+            1,
+            4,
+            adj[1].iter().copied(),
+            adj[4].iter().copied(),
+            &mut acc,
+        );
+        state.commit(&acc);
+        node_of.swap(1, 4);
+        let fresh =
+            CongestionState::build(&torus, &routers, &graph, &node_of, ObjectiveKind::MaxLinkLoad);
+        assert!((state.value() - fresh.value()).abs() < 1e-12);
+        assert!(state.value() < 20.0, "bottleneck did not improve: {}", state.value());
+        assert!((gain - (20.0 - state.value())).abs() < 1e-12);
+    }
+}

@@ -102,6 +102,40 @@ fn fig14_reports_both_metrics() {
 }
 
 #[test]
+fn objective_reports_both_metrics_side_by_side() {
+    // Rows come in (strategy x 3 objectives) groups; the whops-objective
+    // row of each group is the ratio denominator (1.00 / 1.00), and every
+    // ratio is finite and positive.
+    let tables = experiments::run("objective", &ctx()).unwrap();
+    assert_eq!(tables.len(), 1);
+    let t = &tables[0];
+    assert_eq!(t.rows.len() % 3, 0, "rows must group by objective triples");
+    for chunk in t.rows.chunks(3) {
+        assert_eq!(chunk[0][3], "whops");
+        assert_eq!(chunk[1][3], "maxload");
+        assert_eq!(chunk[2][3], "blend");
+        assert_eq!(chunk[0][6], "1.00");
+        assert_eq!(chunk[0][7], "1.00");
+        for row in chunk {
+            for col in [6, 7] {
+                let v = parse(&row[col]);
+                assert!(v.is_finite() && v > 0.0, "bad ratio {v} in {row:?}");
+            }
+        }
+        // Flat rows: both objectives pick from the same candidate set, so
+        // the maxload argmin's bottleneck can never exceed the whops
+        // pick's. Hier rows: refinement paths differ, so only sanity-bound.
+        let lat_ratio = parse(&chunk[1][7]);
+        let bound = if chunk[0][2] == "flat" { 1.005 } else { 2.0 };
+        assert!(
+            lat_ratio <= bound,
+            "maxload objective's bottleneck ratio {lat_ratio} > {bound} ({:?})",
+            chunk[1]
+        );
+    }
+}
+
+#[test]
 fn hier_compares_both_presets_against_flat() {
     let tables = experiments::run("hier", &ctx()).unwrap();
     assert_eq!(tables.len(), 2);

@@ -368,6 +368,7 @@ fn prop_rotation_sweep_parallel_bit_identical() {
             max_candidates: 4,
             chunk_edges: 7,
             threads,
+            ..Default::default()
         };
         let seq = rotation_sweep(
             &g,
@@ -530,6 +531,189 @@ fn prop_hier_mapping_parallel_bit_identical_and_bijective() {
         s.sort_unstable();
         if s != (0..nt as u32).collect::<Vec<_>>() {
             return Err(format!("not a bijection ({intra:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routed_objective_sweep_parallel_bit_identical() {
+    // Acceptance pin (a): congestion-objective scoring is bit-identical at
+    // every thread count, through the full rotation sweep — same chosen
+    // candidate, bit-equal scores, same mapping.
+    use taskmap::mapping::rotations::{rotation_sweep, NativeBackend, SweepConfig};
+    use taskmap::objective::ObjectiveKind;
+    check("routed-objective sweep parallel == sequential", 8, |rng| {
+        let tx = rng.range(2, 6);
+        let ty = rng.range(2, 6);
+        let n = tx * ty;
+        let g = stencil_graph(&[tx, ty], rng.bool(), rng.f64_range(0.5, 4.0));
+        let alloc = Allocation {
+            torus: Torus::torus(&[ty, tx]),
+            core_router: (0..n as u32).collect(),
+            core_node: (0..n as u32).collect(),
+            ranks_per_node: 1,
+        };
+        let p = alloc.proc_coords();
+        let map_cfg = MapConfig {
+            task_ordering: random_ordering(rng),
+            proc_ordering: random_ordering(rng),
+            longest_dim: rng.bool(),
+            uneven_prime: rng.bool(),
+        };
+        let objective = if rng.bool() {
+            ObjectiveKind::MaxLinkLoad
+        } else {
+            ObjectiveKind::CongestionBlend
+        };
+        let sweep = |threads: usize| SweepConfig {
+            max_candidates: 4,
+            threads,
+            objective,
+            ..Default::default()
+        };
+        let seq = rotation_sweep(&g, &g.coords, &p, &alloc, &map_cfg, &sweep(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = rotation_sweep(
+                &g,
+                &g.coords,
+                &p,
+                &alloc,
+                &map_cfg,
+                &sweep(threads),
+                &NativeBackend,
+            );
+            if par.chosen != seq.chosen || par.scores != seq.scores {
+                return Err(format!("{objective:?}: scores diverged at threads={threads}"));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!("{objective:?}: mapping diverged at threads={threads}"));
+            }
+        }
+        // The winning score must equal the metrics engine's view of the
+        // winning mapping (sweep and eval share the routing model).
+        let m = eval_full(&g, &seq.task_to_rank, &alloc);
+        let want = objective.value_from_metrics(&m);
+        approx_eq(seq.scores[seq.chosen], want, 1e-9, 1e-9)
+            .map_err(|e| format!("{objective:?}: sweep score vs eval_full: {e}"))
+    });
+}
+
+#[test]
+fn prop_hier_congestion_objective_parallel_bit_identical() {
+    // The full two-level mapper under a routed objective — node sweep +
+    // congestion MinVolume refinement — must be bit-identical at every
+    // thread budget and still produce a bijection.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::mapping::rotations::NativeBackend;
+    use taskmap::objective::ObjectiveKind;
+    check("hier congestion parallel == sequential", 8, |rng| {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[5, 5, 5]),
+            nodes_per_router: 2,
+            ranks_per_node: rng.range(2, 5),
+            occupancy: rng.f64_range(0.0, 0.3),
+        }
+        .allocate(rng.range(3, 9), rng.next_u64());
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let objective = if rng.bool() {
+            ObjectiveKind::MaxLinkLoad
+        } else {
+            ObjectiveKind::CongestionBlend
+        };
+        let mk = |threads: usize| HierConfig {
+            intra: IntraNodeStrategy::MinVolume { passes: 3 },
+            max_rotations: 4,
+            threads,
+            objective,
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if par.task_to_node != seq.task_to_node {
+                return Err(format!("{objective:?}: node assignment diverged at threads={threads}"));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!("{objective:?}: rank mapping diverged at threads={threads}"));
+            }
+            if par.swaps_applied != seq.swaps_applied {
+                return Err(format!("{objective:?}: swap count diverged at threads={threads}"));
+            }
+        }
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err(format!("not a bijection under {objective:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_congestion_swap_gains_equal_full_reevaluation() {
+    // Acceptance pin (b): every incremental swap gain equals the change in
+    // a full eval_full re-evaluation of the induced node-level mapping.
+    use taskmap::metrics::LinkAccumulator;
+    use taskmap::objective::{CongestionState, ObjectiveKind};
+    check("incremental gain == eval_full delta", 15, |rng| {
+        let d = rng.range(1, 4);
+        let sizes: Vec<usize> = (0..d).map(|_| rng.range(2, 6)).collect();
+        let torus = Torus::torus(&sizes);
+        let nn = rng.range(2, torus.num_routers().min(8) + 1);
+        let routers: Vec<u32> = {
+            let mut ids: Vec<u32> = (0..torus.num_routers() as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(nn);
+            ids
+        };
+        let nt = nn * rng.range(1, 5);
+        let graph = stencil_graph(&[nt], rng.bool(), rng.f64_range(0.5, 5.0));
+        let mut node_of: Vec<u32> = (0..nt).map(|t| (t % nn) as u32).collect();
+        rng.shuffle(&mut node_of);
+        // Adjacency lists for the gain entry point.
+        let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); nt];
+        for e in &graph.edges {
+            adj[e.u as usize].push((e.v, e.w));
+            adj[e.v as usize].push((e.u, e.w));
+        }
+        // The node-level pseudo-allocation eval_full scores against.
+        let alloc = Allocation {
+            torus: torus.clone(),
+            core_router: routers.clone(),
+            core_node: (0..nn as u32).collect(),
+            ranks_per_node: 1,
+        };
+        let kind = if rng.bool() {
+            ObjectiveKind::MaxLinkLoad
+        } else {
+            ObjectiveKind::CongestionBlend
+        };
+        let mut state = CongestionState::build(&torus, &routers, &graph, &node_of, kind);
+        let mut acc = LinkAccumulator::new(&torus);
+        for _ in 0..8 {
+            let u = rng.below(nt);
+            let b = rng.below(nt);
+            if u == b || node_of[u] == node_of[b] {
+                continue;
+            }
+            let before = kind.value_from_metrics(&eval_full(&graph, &node_of, &alloc));
+            let gain = state.swap_gain(
+                &node_of,
+                u,
+                b,
+                adj[u].iter().copied(),
+                adj[b].iter().copied(),
+                &mut acc,
+            );
+            state.commit(&acc);
+            node_of.swap(u, b);
+            let after = kind.value_from_metrics(&eval_full(&graph, &node_of, &alloc));
+            approx_eq(gain, before - after, 1e-9, 1e-9)
+                .map_err(|e| format!("{kind:?}: gain vs eval_full delta: {e}"))?;
+            approx_eq(state.value(), after, 1e-9, 1e-9)
+                .map_err(|e| format!("{kind:?}: state value vs eval_full: {e}"))?;
         }
         Ok(())
     });
