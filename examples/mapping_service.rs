@@ -9,6 +9,7 @@
 
 use taskmap::coordinator::service::{Client, Service};
 use taskmap::sfc::PartOrdering;
+use taskmap::testutil::json::Json;
 
 fn main() {
     let serve_only = std::env::args().any(|a| a == "--serve");
@@ -43,6 +44,26 @@ fn main() {
     let mut s = mapping.clone();
     s.sort_unstable();
     assert_eq!(s, (0..16).collect::<Vec<u32>>());
-    println!("\nbijection verified; shutting down.");
+    println!("\nbijection verified.");
+
+    // NUMA depth-3: a chain of 8 tasks onto 2 nodes x 2 ranks, where each
+    // node is 2 sockets of 1 rank — the "numa" field turns on the
+    // socket-level split and the response reports each task's socket.
+    let numa_req = Json::parse(
+        r#"{"op":"map",
+            "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+            "pcoords":[[0],[0],[1],[1]],
+            "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
+            "hier":{"ranks_per_node":2,"strategy":"minvol"},
+            "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}"#,
+    )
+    .expect("static request parses");
+    let resp = client.request(&numa_req).expect("numa map request");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    println!("\ndepth-3 (NUMA) mapping over the wire:");
+    println!("  map:     {}", resp.get("map").unwrap().to_string());
+    println!("  nodes:   {}", resp.get("nodes").unwrap().to_string());
+    println!("  sockets: {}", resp.get("sockets").unwrap().to_string());
+    println!("shutting down.");
     svc.stop();
 }

@@ -1,0 +1,134 @@
+//! Bench: the depth-3 (node→socket→core) NUMA-aware mapper — wall time
+//! across thread budgets, plus depth-3-vs-depth-2 quality under the XK7
+//! Interlagos node model on the MiniGhost and HOMME presets. Results
+//! append to `BENCH_mapping.json` (override with `TASKMAP_BENCH_OUT`).
+//!
+//! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
+//! entries are recorded under `.../smoke` names so they never clobber the
+//! full trajectory rows.
+
+use taskmap::apps::homme::{Homme, HommeCoords};
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::apps::TaskGraph;
+use taskmap::geom::Coords;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{cray_xk7, Allocation, NumaTopology, SparseAllocator};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::objective::eval_numa;
+use taskmap::testutil::bench::{bench_quick, BenchRecorder};
+
+const ROT: usize = 12;
+
+fn allocator(ranks_per_node: usize) -> SparseAllocator {
+    SparseAllocator {
+        machine: cray_xk7(&[10, 8, 10]),
+        nodes_per_router: 2,
+        ranks_per_node,
+        occupancy: 0.4,
+    }
+}
+
+fn cfg(threads: usize, numa: Option<NumaTopology>) -> HierConfig {
+    HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: ROT,
+        threads,
+        numa,
+        ..HierConfig::default()
+    }
+}
+
+/// Record depth-3-vs-depth-2 quality under the NumaAware objective:
+/// total-value and cross-socket-weight ratios (d3/d2, < 1.0 = depth 3
+/// wins).
+fn record_quality(
+    rec: &mut BenchRecorder,
+    tag: &str,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    topo: NumaTopology,
+) {
+    let d2 = map_hierarchical(graph, tcoords, alloc, &cfg(0, None), &NativeBackend);
+    let d3 = map_hierarchical(graph, tcoords, alloc, &cfg(0, Some(topo)), &NativeBackend);
+    let m2 = eval_numa(graph, &d2.task_to_rank, alloc, &topo);
+    let m3 = eval_numa(graph, &d3.task_to_rank, alloc, &topo);
+    let value_ratio = if m2.value > 0.0 { m3.value / m2.value } else { 1.0 };
+    let xsock_ratio = if m2.socket_weight > 0.0 {
+        m3.socket_weight / m2.socket_weight
+    } else {
+        1.0
+    };
+    println!(
+        "{tag}: depth3/depth2 NumaValue {value_ratio:.3}, cross-socket {xsock_ratio:.3}, \
+         {} socket swaps",
+        d3.socket_swaps
+    );
+    rec.record_scalar(&format!("numa/{tag}/value_vs_depth2"), "ratio", value_ratio);
+    rec.record_scalar(&format!("numa/{tag}/xsock_vs_depth2"), "ratio", xsock_ratio);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    println!("== depth-3 NUMA-aware mapper ==");
+    let suffix = if smoke { "/smoke" } else { "" };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let topo = NumaTopology::xk7();
+    let rpn = topo.ranks_per_node();
+
+    // MiniGhost preset.
+    let tdims = if smoke { [4usize, 4, 4] } else { [16usize, 16, 8] };
+    let mg = MiniGhost::weak_scaling(tdims);
+    let graph = mg.graph();
+    let alloc = allocator(rpn).allocate(mg.num_tasks() / rpn, 42);
+    for &threads in thread_counts {
+        let c = cfg(threads, Some(topo));
+        let name = format!(
+            "numa_map/minighost/tasks={}/threads={threads}{suffix}",
+            mg.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &graph.coords, &alloc, &c, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    record_quality(
+        &mut rec,
+        &format!("minighost{suffix}"),
+        &graph,
+        &graph.coords,
+        &alloc,
+        topo,
+    );
+
+    // HOMME preset (one rank per element: bijective mapping).
+    let ne = if smoke { 8 } else { 24 };
+    let homme = Homme::new(ne);
+    let graph = homme.graph();
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let alloc = allocator(rpn).allocate(homme.num_tasks() / rpn, 42);
+    for &threads in thread_counts {
+        let c = cfg(threads, Some(topo));
+        let name = format!(
+            "numa_map/homme/tasks={}/threads={threads}{suffix}",
+            homme.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &tcoords, &alloc, &c, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    record_quality(
+        &mut rec,
+        &format!("homme{suffix}"),
+        &graph,
+        &tcoords,
+        &alloc,
+        topo,
+    );
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

@@ -3,15 +3,16 @@
 //! here (DESIGN.md section 4 is the index).
 
 use super::report::Table;
-use super::{hier_exp, homme_exp, minighost_exp, objective_exp, table1, Ctx};
+use super::{hier_exp, homme_exp, minighost_exp, numa_exp, objective_exp, table1, Ctx};
 
 /// All experiment ids: the paper artifacts in paper order, then the
 /// beyond-the-paper studies (`hier` — hierarchical node→core mapping vs
 /// the flat mapper; `objective` — WeightedHops vs routed congestion
-/// objectives).
+/// objectives; `numa` — depth-2 vs depth-3 mapping under the NUMA node
+/// model).
 pub const ALL: &[&str] = &[
     "table1", "table2", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "hier", "objective",
+    "hier", "objective", "numa",
 ];
 
 /// Run one experiment by id.
@@ -20,6 +21,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
         "table1" => Some(table1::run(ctx)),
         "hier" => Some(hier_exp::run(ctx)),
         "objective" => Some(objective_exp::run(ctx)),
+        "numa" => Some(numa_exp::run(ctx)),
         "table2" => Some(homme_exp::table2(ctx)),
         "fig8" => Some(homme_exp::fig8(ctx)),
         "fig9" => Some(homme_exp::fig9(ctx)),

@@ -10,6 +10,7 @@ pub mod experiments;
 pub mod hier_exp;
 pub mod homme_exp;
 pub mod minighost_exp;
+pub mod numa_exp;
 pub mod objective_exp;
 pub mod report;
 pub mod service;

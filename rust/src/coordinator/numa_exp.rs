@@ -1,0 +1,160 @@
+//! NUMA depth-2 vs depth-3 experiment (`numa`): the two-level mapper
+//! against the three-level (node→socket→core) mapper of
+//! [`crate::hier::HierConfig::numa`], on the MiniGhost (Cray XK7) and
+//! HOMME (Titan) presets under the XK7 Interlagos node model.
+//!
+//! Both depths see the same task graph, coordinates, allocation, rotation
+//! budget, and refinement passes; rows report the
+//! [`crate::objective::NumaAware`] value and its per-level breakdown —
+//! network weighted hops and cross-socket weight — with per-(case, seed)
+//! ratios against the depth-2 run (< 1.00 = depth 3 wins). Depth 2 places
+//! within nodes blind to sockets, so its cross-socket weight is whatever
+//! round-robin rank order happens to produce; depth 3 splits and refines
+//! sockets explicitly.
+
+use super::report::{f2, Table};
+use super::Ctx;
+use crate::apps::homme::{Homme, HommeCoords};
+use crate::apps::minighost::MiniGhost;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use crate::machine::{cray_xk7, titan_full, Allocation, NumaTopology, SparseAllocator};
+use crate::objective::eval_numa;
+use crate::par::Parallelism;
+
+const ROT: usize = 12;
+const PASSES: usize = 4;
+
+fn headers() -> [&'static str; 8] {
+    [
+        "case",
+        "seed",
+        "depth",
+        "NumaVal",
+        "NetWH",
+        "XSockW",
+        "Numa/d2",
+        "XSock/d2",
+    ]
+}
+
+/// Ratio against the depth-2 denominator; a zero denominator (nothing to
+/// improve) reports 1.00 instead of NaN.
+fn ratio(v: f64, denom: f64) -> f64 {
+    if denom > 0.0 {
+        v / denom
+    } else {
+        1.0
+    }
+}
+
+/// Run depth 2 and depth 3 on one (graph, coords, allocation) case and
+/// append both rows; the depth-2 row is the ratio denominator.
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    ctx: &Ctx,
+    table: &mut Table,
+    case: &str,
+    seed: u64,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    topo: NumaTopology,
+) {
+    let mk = |numa: Option<NumaTopology>| HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: PASSES },
+        max_rotations: ROT,
+        numa,
+        ..HierConfig::default()
+    };
+    let d2 = map_hierarchical(graph, tcoords, alloc, &mk(None), ctx.backend());
+    let d3 = map_hierarchical(graph, tcoords, alloc, &mk(Some(topo)), ctx.backend());
+    let m2 = eval_numa(graph, &d2.task_to_rank, alloc, &topo);
+    let m3 = eval_numa(graph, &d3.task_to_rank, alloc, &topo);
+    for (depth, m) in [("depth-2", &m2), ("depth-3", &m3)] {
+        table.push_row(vec![
+            case.to_string(),
+            seed.to_string(),
+            depth.to_string(),
+            f2(m.value),
+            f2(m.network_weighted_hops),
+            f2(m.socket_weight),
+            f2(ratio(m.value, m2.value)),
+            f2(ratio(m.socket_weight, m2.socket_weight)),
+        ]);
+    }
+}
+
+/// The `numa` experiment: one table per preset, XK7 Interlagos node model.
+pub fn run(ctx: &Ctx) -> Vec<Table> {
+    let topo = NumaTopology::xk7();
+    let allocator = if ctx.full {
+        titan_full()
+    } else {
+        SparseAllocator {
+            machine: cray_xk7(&[10, 8, 10]),
+            nodes_per_router: 2,
+            ranks_per_node: 16,
+            occupancy: 0.4,
+        }
+    };
+    let mg_points: Vec<(usize, [usize; 3])> = if ctx.full {
+        vec![(8_192, [32, 16, 16]), (32_768, [32, 32, 32])]
+    } else {
+        vec![(512, [8, 8, 8]), (2_048, [16, 16, 8])]
+    };
+    let seeds = [ctx.seed, ctx.seed + 1];
+    let ne = if ctx.full { 120 } else { 24 };
+    let homme = Homme::new(ne);
+    let rpn = allocator.ranks_per_node;
+    let jobs: Vec<(usize, u64)> = mg_points
+        .iter()
+        .map(|&(procs, _)| procs)
+        .chain([homme.num_tasks()])
+        .flat_map(|procs| seeds.iter().map(move |&seed| (procs / rpn, seed)))
+        .collect();
+    let allocs: Vec<Allocation> = allocator.allocate_batch(&jobs, Parallelism::auto());
+
+    let mut mg_table = Table::new(
+        "NUMA: MiniGhost XK7, depth-2 vs depth-3 under the Interlagos node model",
+        &headers(),
+    );
+    for (pi, &(procs, tdims)) in mg_points.iter().enumerate() {
+        let mg = MiniGhost::weak_scaling(tdims);
+        let graph = mg.graph();
+        for (si, &seed) in seeds.iter().enumerate() {
+            run_case(
+                ctx,
+                &mut mg_table,
+                &format!("mg-{procs}"),
+                seed,
+                &graph,
+                &graph.coords,
+                &allocs[pi * seeds.len() + si],
+                topo,
+            );
+        }
+    }
+
+    let mut homme_table = Table::new(
+        "NUMA: HOMME Titan, depth-2 vs depth-3 under the Interlagos node model",
+        &headers(),
+    );
+    let graph = homme.graph();
+    let tcoords = homme.coords(HommeCoords::Cube);
+    let procs = homme.num_tasks();
+    for (si, &seed) in seeds.iter().enumerate() {
+        run_case(
+            ctx,
+            &mut homme_table,
+            &format!("homme-{procs}"),
+            seed,
+            &graph,
+            &tcoords,
+            &allocs[mg_points.len() * seeds.len() + si],
+            topo,
+        );
+    }
+    vec![mg_table, homme_table]
+}

@@ -44,19 +44,40 @@
 //! the response additionally reports the mapping's value under that
 //! objective (`"objective_value"`).
 //!
+//! **NUMA depth 3** — both ops accept a `"numa"` field: a preset name
+//! (`"xk7"` — 2 sockets × 8 ranks, `"bgq"` — 1 × 16) or an object
+//! `{"sockets_per_node":S,"ranks_per_socket":R,"socket_cost":...,
+//! "core_cost":...,"hop_cost":...}` (costs optional: 0.5 / 0.0 / 1.0).
+//! The socket grid must tile `ranks_per_node` exactly. On `map` (requires
+//! `"hier"`, default objective only) the mapper runs at depth 3 — socket
+//! split plus cross-socket refinement inside each node — and the response
+//! adds each task's within-node socket plus the socket-swap count:
+//! ```json
+//! {"op":"map","tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+//!  "edges":[[0,1],[1,2],[2,3]],
+//!  "hier":{"ranks_per_node":2,"strategy":"minvol"},
+//!  "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}
+//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1],"swaps":0,
+//!     "sockets":[0,1,0,1],"socket_swaps":0}
+//! ```
+//! On `eval` the response adds the [`crate::objective::NumaAware`]
+//! breakdown: `"numa_value"`, `"socket_weight"`, `"core_weight"`.
+//!
 //! **Validation is strict**: unknown or malformed fields — top-level or
-//! inside `"hier"` — return `{"ok":false,"error":...}` instead of being
-//! silently ignored, so a typo like `"objectiv"` can never quietly change
-//! what a production mapping run optimizes.
+//! inside `"hier"`/`"numa"` — return `{"ok":false,"error":...}` instead of
+//! being silently ignored, so a typo like `"objectiv"` can never quietly
+//! change what a production mapping run optimizes. In the same spirit,
+//! `ranks_per_node` must divide the rank count exactly (the library's
+//! [`crate::machine::AllocError`] policy: no silent node truncation).
 
 use crate::apps::{Edge, TaskGraph};
 use crate::geom::Coords;
 use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
-use crate::machine::{Allocation, Torus};
+use crate::machine::{Allocation, NumaTopology, Torus};
 use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
 use crate::metrics::eval_full;
-use crate::objective::ObjectiveKind;
+use crate::objective::{eval_numa, ObjectiveKind};
 use crate::sfc::PartOrdering;
 use crate::testutil::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -156,11 +177,18 @@ fn err(msg: &str) -> Json {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective",
+    "hier", "objective", "numa",
 ];
 const EVAL_FIELDS: &[&str] =
-    &["op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective"];
+    &["op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa"];
 const HIER_FIELDS: &[&str] = &["ranks_per_node", "strategy", "passes", "rotations"];
+const NUMA_FIELDS: &[&str] = &[
+    "sockets_per_node",
+    "ranks_per_socket",
+    "socket_cost",
+    "core_cost",
+    "hop_cost",
+];
 
 /// Reject fields outside `allowed` (`what` names the object in the error).
 fn check_fields(obj: &Json, allowed: &[&str], what: &str) -> Option<Json> {
@@ -172,6 +200,65 @@ fn check_fields(obj: &Json, allowed: &[&str], what: &str) -> Option<Json> {
         }
     }
     None
+}
+
+/// Parse an optional `"numa"` field (preset name or explicit object) with
+/// strict validation. The socket grid must tile `ranks_per_node` exactly —
+/// a grid that silently over- or under-covers the node would change which
+/// messages are priced as cross-socket.
+fn parse_numa(req: &Json, ranks_per_node: usize) -> Result<Option<NumaTopology>, Json> {
+    let v = match req.get("numa") {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    let topo = match v {
+        Json::Str(name) => match NumaTopology::preset(name) {
+            Some(t) => t,
+            None => return Err(err("unknown numa preset (want xk7|bgq)")),
+        },
+        Json::Obj(_) => {
+            if let Some(e) = check_fields(v, NUMA_FIELDS, "numa") {
+                return Err(e);
+            }
+            let spn = match v.get("sockets_per_node").map(as_index) {
+                Some(Some(s)) if s >= 1 => s,
+                _ => return Err(err("numa.sockets_per_node must be a positive integer")),
+            };
+            let rps = match v.get("ranks_per_socket").map(as_index) {
+                Some(Some(r)) if r >= 1 => r,
+                _ => return Err(err("numa.ranks_per_socket must be a positive integer")),
+            };
+            let cost = |key: &str, default: f64| -> Result<f64, Json> {
+                match v.get(key) {
+                    None => Ok(default),
+                    Some(c) => match c.as_f64() {
+                        Some(x) if x.is_finite() && x >= 0.0 => Ok(x),
+                        _ => Err(err(&format!(
+                            "numa.{key} must be a finite non-negative number"
+                        ))),
+                    },
+                }
+            };
+            let socket_cost = cost("socket_cost", 0.5)?;
+            let core_cost = cost("core_cost", 0.0)?;
+            let hop_cost = cost("hop_cost", 1.0)?;
+            if hop_cost <= 0.0 {
+                return Err(err("numa.hop_cost must be positive"));
+            }
+            if core_cost > socket_cost {
+                return Err(err("numa.core_cost must not exceed numa.socket_cost"));
+            }
+            NumaTopology::new(spn, rps, socket_cost, core_cost, hop_cost)
+        }
+        _ => return Err(err("numa must be an object or a preset name")),
+    };
+    if topo.ranks_per_node() != ranks_per_node {
+        return Err(err(&format!(
+            "numa socket grid covers {} ranks per node, allocation has {ranks_per_node}",
+            topo.ranks_per_node()
+        )));
+    }
+    Ok(Some(topo))
 }
 
 /// Parse an optional top-level `"objective"` with strict validation.
@@ -368,9 +455,19 @@ fn handle_map_hier(
         Ok(a) => a,
         Err(e) => return err(&format!("hier: {e}")),
     };
+    let numa = match parse_numa(req, rpn) {
+        Ok(n) => n,
+        Err(e) => return e,
+    };
+    if numa.is_some() && objective != ObjectiveKind::WeightedHops {
+        // The depth-3 mapper prices levels itself; a routed objective on
+        // top would be a silent conflict.
+        return err("numa composes with the default whops objective only");
+    }
     let mut cfg = HierConfig {
         node_map: map_cfg,
         objective,
+        numa,
         ..HierConfig::default()
     };
     if let Some(s) = hier.get("strategy") {
@@ -414,7 +511,7 @@ fn handle_map_hier(
         coords: tcoords.clone(),
     };
     let m = map_hierarchical(&graph, tcoords, &alloc, &cfg, &NativeBackend);
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         (
             "map",
@@ -425,7 +522,15 @@ fn handle_map_hier(
             Json::Arr(m.task_to_node.iter().map(|&n| Json::Num(n as f64)).collect()),
         ),
         ("swaps", Json::Num(m.swaps_applied as f64)),
-    ])
+    ];
+    if let Some(socks) = &m.task_to_socket {
+        fields.push((
+            "sockets",
+            Json::Arr(socks.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ));
+        fields.push(("socket_swaps", Json::Num(m.socket_swaps as f64)));
+    }
+    Json::obj(fields)
 }
 
 /// `op:eval`: Section 3 metrics scalars for a submitted mapping.
@@ -477,6 +582,10 @@ fn handle_eval(req: &Json) -> Json {
         Ok(k) => k,
         Err(e) => return e,
     };
+    let numa = match parse_numa(req, rpn) {
+        Ok(n) => n,
+        Err(e) => return e,
+    };
     let graph = TaskGraph {
         num_tasks,
         edges,
@@ -484,7 +593,7 @@ fn handle_eval(req: &Json) -> Json {
     };
     let m = eval_full(&graph, &mapping, &alloc);
     let lm = m.link.as_ref().expect("eval_full computes link metrics");
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("total_hops", Json::Num(m.total_hops)),
         ("avg_hops", Json::Num(m.avg_hops)),
@@ -496,7 +605,14 @@ fn handle_eval(req: &Json) -> Json {
         ("max_latency", Json::Num(lm.max_latency)),
         ("objective", Json::Str(objective.name().into())),
         ("objective_value", Json::Num(objective.value_from_metrics(&m))),
-    ])
+    ];
+    if let Some(topo) = numa {
+        let nm = eval_numa(&graph, &mapping, &alloc, &topo);
+        fields.push(("numa_value", Json::Num(nm.value)));
+        fields.push(("socket_weight", Json::Num(nm.socket_weight)));
+        fields.push(("core_weight", Json::Num(nm.core_weight)));
+    }
+    Json::obj(fields)
 }
 
 /// Strict optional bool: present means it must be a JSON bool.
@@ -557,6 +673,10 @@ fn handle_map(req: &Json) -> Json {
         // The flat map op runs no rotation sweep, so a non-default
         // objective would be a silent no-op — reject it instead.
         return err("objective requires \"hier\" (the flat map op does not score candidates)");
+    }
+    if req.get("numa").is_some() {
+        // Depth-3 mapping needs the node structure only hier mode has.
+        return err("numa requires \"hier\" (the flat map op has no node level)");
     }
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
     Json::obj(vec![
@@ -868,6 +988,127 @@ mod tests {
             resp.get("objective_value").and_then(|v| v.as_f64()),
             resp.get("weighted_hops").and_then(|v| v.as_f64())
         );
+    }
+
+    #[test]
+    fn numa_map_round_trip() {
+        // 8 tasks on a chain, 2 nodes of 2 ranks, 2 sockets x 1 rank each:
+        // depth-3 mapping reports each task's socket, and the socket must
+        // match the assigned rank's position in its node.
+        let resp = handle_request(
+            r#"{"op":"map",
+                "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+                "pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
+                "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":2},
+                "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m: Vec<usize> = resp
+            .get("map")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let socks: Vec<usize> = resp
+            .get("sockets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(m.len(), 8);
+        assert_eq!(socks.len(), 8);
+        // With one rank per socket, a rank's socket is its position in the
+        // node: rank % 2.
+        for t in 0..8 {
+            assert_eq!(socks[t], m[t] % 2, "task {t}");
+        }
+        assert!(resp.get("socket_swaps").is_some());
+    }
+
+    #[test]
+    fn numa_field_validated_strictly() {
+        let base = r#""tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+                       "edges":[[0,1],[1,2],[2,3]]"#;
+        // numa without hier: error, not a silent no-op.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"numa":{{"sockets_per_node":2,"ranks_per_socket":1}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        // Unknown numa sub-field.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1,"socket_cos":0.5}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Socket grid must tile ranks_per_node (2 x 2 != 2).
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":2}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Preset with the wrong ranks_per_node (xk7 = 16).
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"numa":"xk7"}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Unknown preset / wrong type.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"numa":"knl"}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"numa":7}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Inverted costs rejected before they can panic the library.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1,
+                          "socket_cost":0.1,"core_cost":0.5}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // numa + routed objective: conflict, not silent.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"objective":"maxload",
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn numa_eval_reports_breakdown() {
+        // Ranks 0,1 share node 0 (sockets 0,1); edge (0,1) is cross-socket
+        // weight 5; edge (1,2) crosses nodes at 1 hop, weight 3.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2,
+                "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("socket_weight").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(resp.get("core_weight").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(
+            resp.get("numa_value").and_then(|v| v.as_f64()),
+            Some(3.0 + 0.5 * 5.0)
+        );
+        // Without numa the response stays as before.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert!(resp.get("numa_value").is_none());
     }
 
     #[test]

@@ -1,55 +1,69 @@
-//! Hierarchical node→core task mapping: the two-level mapper.
+//! Hierarchical node→socket→core task mapping: the two- and three-level
+//! mapper.
 //!
 //! The flat mapper (Section 4.2) partitions tasks straight down to ranks,
 //! but the paper's own Section 3 model prices intra-node messages at zero —
 //! ranks of one node share a router, so placement *within* a node never
 //! touches the network. On 16–32 ranks/node machines that is most of every
-//! rank's neighbor set, and two-level node→PE mapping (Schulz & Träff,
+//! rank's neighbor set, and multi-level node→PE mapping (Schulz & Träff,
 //! arXiv:1702.04164; Schulz & Woydt, arXiv:2504.01726) exploits it
 //! directly. This subsystem does the geometric version:
 //!
 //! 1. **Node level** — the MJ rotation sweep runs over **node** coordinates
-//!    (one point per node, from [`crate::machine::Allocation::node_coords`])
-//!    instead of rank coordinates, producing a balanced task→node
-//!    assignment: with `tnum == num_ranks`, every node receives exactly its
-//!    `ranks_per_node` tasks. Scoring reuses the WeightedHops kernel
-//!    against node routers, which prices intra-node edges at zero by
-//!    construction.
-//! 2. **Refinement** (the [`IntraNodeStrategy::MinVolume`] strategy) —
+//!    (one point per node, from [`crate::machine::Allocation::node_coords`];
+//!    one pseudo-rank per rank slot on heterogeneous allocations, so every
+//!    node receives tasks in proportion to its capacity) instead of rank
+//!    coordinates, producing a capacity-balanced task→node assignment:
+//!    with `tnum == num_ranks`, every node receives exactly its rank
+//!    count. Scoring reuses the WeightedHops kernel against node routers,
+//!    which prices intra-node edges at zero by construction — or, with
+//!    [`HierConfig::numa`] set, the NUMA node-level pricing that charges
+//!    still-unsplit intra-node edges the flat socket cost.
+//! 2. **Node refinement** (the [`IntraNodeStrategy::MinVolume`] strategy) —
 //!    greedy boundary-task swaps ([`refine`]) directly minimize the
 //!    inter-node weighted communication volume the geometric cut only
-//!    bounds implicitly.
-//! 3. **Core level** — each node's tasks are placed on its ranks by the
-//!    pluggable [`IntraNodeStrategy`]: platform order, or a Hilbert-curve
-//!    order over the node's task coordinates (cheap cache/NUMA locality;
-//!    network metrics are unaffected by construction).
+//!    bounds implicitly (under the NUMA pricing when configured).
+//! 3. **Socket level** (depth 3, only with [`HierConfig::numa`]) — inside
+//!    each node, a sized geometric bisection ([`socket::split_sockets`])
+//!    cuts the node's tasks across its NUMA domains, `MinVolume` runs a
+//!    cross-socket swap refinement ([`socket::refine_sockets`]) on the
+//!    exact incremental [`crate::objective::placement_swap_gain`], and
+//!    tasks keep the per-rank balance of the two-level mapper.
+//! 4. **Core level** — each node's (or, at depth 3, each socket's) tasks
+//!    are placed on its ranks by the pluggable [`IntraNodeStrategy`]:
+//!    platform order, or a Hilbert-curve order over the task coordinates
+//!    (cheap cache locality; network metrics are unaffected by
+//!    construction).
 //!
-//! # The two-level contract
+//! # The contract
 //!
 //! For any input where `tnum == alloc.num_ranks()`, [`map_hierarchical`]
 //! returns a **bijection** task→rank that respects the node assignment:
-//! `alloc.core_node[rank(t)] == task_to_node[t]` for every task. With
-//! `tnum > num_ranks` tasks are distributed round-robin over their node's
-//! ranks (the flat mapper's convention); with `tnum < num_nodes` a compact
-//! node subset is selected (Section 4.2 case 3) and the remaining nodes
-//! idle.
+//! `alloc.core_node[rank(t)] == task_to_node[t]` for every task — and, at
+//! depth 3, the socket assignment: the rank's position-derived socket
+//! ([`crate::machine::NumaTopology::socket_of_ranks`]) equals
+//! `task_to_socket[t]`. With `tnum > num_ranks` tasks are distributed
+//! round-robin over their node's (socket's) ranks; with `tnum < num_nodes`
+//! a compact node subset is selected (Section 4.2 case 3) and the
+//! remaining nodes idle.
 //!
 //! # Parallelism and determinism
 //!
 //! Every level runs through the [`crate::par`] budget — the node-level
 //! sweep fans candidates out exactly like the flat sweep (reusing
-//! `MjScratch`/`MappingScratch`/`ScoreScratch` arenas per worker), the
-//! refinement proposes swaps in parallel over nodes, and the core-level
-//! placement maps over nodes with per-worker Hilbert key scratch. All
-//! three are index-addressed, so the full hierarchical mapping is
-//! **bit-identical to the sequential path at every thread count** (pinned
-//! by property tests in `tests/properties.rs`).
+//! `MjScratch`/`MappingScratch`/`ScoreScratch` arenas per worker), both
+//! refinements propose swaps in parallel over nodes, the socket split and
+//! the core-level placement map over nodes with per-worker scratch. All of
+//! it is index-addressed, so the full hierarchical mapping — at depth 2
+//! and depth 3 — is **bit-identical to the sequential path at every
+//! thread count** (pinned by property tests in `tests/properties.rs`).
 
 pub mod refine;
+pub mod socket;
 
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
-use crate::machine::Allocation;
+use crate::machine::{Allocation, NumaTopology};
 use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::MapConfig;
@@ -116,6 +130,13 @@ pub struct HierConfig {
     /// objective whose swap gains are computed incrementally against
     /// per-link loads ([`crate::objective::CongestionState`]).
     pub objective: ObjectiveKind,
+    /// NUMA model of a node: when set, the mapper runs at **depth 3** —
+    /// the node level prices intra-node edges at the topology's socket
+    /// cost, and a socket-level geometric split (plus, under `MinVolume`,
+    /// cross-socket refinement) runs inside each node before rank
+    /// placement. Composes only with the `WeightedHops` objective
+    /// (routed-congestion NUMA pricing is future work).
+    pub numa: Option<NumaTopology>,
 }
 
 impl Default for HierConfig {
@@ -129,6 +150,7 @@ impl Default for HierConfig {
             chunk_edges: 32768,
             threads: 0,
             objective: ObjectiveKind::WeightedHops,
+            numa: None,
         }
     }
 }
@@ -149,12 +171,18 @@ pub struct HierMapping {
     pub task_to_rank: Vec<u32>,
     /// Task→node assignment (post-refinement).
     pub task_to_node: Vec<u32>,
-    /// Objective value ([`HierConfig::objective`]) of the chosen node-level
-    /// sweep candidate, **before** refinement — inter-node WeightedHops
-    /// (the sweep's own f32-accumulated score) under the default objective.
+    /// Within-node socket of every task (depth 3 only; `None` without
+    /// [`HierConfig::numa`]).
+    pub task_to_socket: Option<Vec<u32>>,
+    /// Objective value of the chosen node-level sweep candidate, **before**
+    /// refinement — inter-node WeightedHops (the sweep's own
+    /// f32-accumulated score) under the default objective, the NUMA
+    /// node-level score when [`HierConfig::numa`] is set.
     pub node_score: f64,
-    /// Boundary swaps applied by `MinVolume` refinement (0 otherwise).
+    /// Node-boundary swaps applied by `MinVolume` refinement (0 otherwise).
     pub swaps_applied: usize,
+    /// Cross-socket swaps applied by the depth-3 socket refinement.
+    pub socket_swaps: usize,
 }
 
 /// Prepare the node coordinates per the config: optional torus shift, then
@@ -175,18 +203,55 @@ pub fn prepare_node_coords(alloc: &Allocation, cfg: &HierConfig) -> Coords {
     ncoords
 }
 
-/// The node-level allocation: one pseudo-rank per node, placed on the
-/// node's router. Sweep scoring against it computes exactly the inter-node
-/// WeightedHops of the induced task→node assignment.
+/// The node-level allocation the sweep partitions and scores against. On
+/// uniform allocations: one pseudo-rank per node, placed on the node's
+/// router, so scoring computes exactly the inter-node objective of the
+/// induced task→node assignment. On heterogeneous allocations: one
+/// pseudo-rank per **rank slot** (still grouped per node), so the balanced
+/// MJ split hands each node tasks in proportion to its capacity — MJ's
+/// deterministic tie-breaking keeps a node's duplicate coordinates in one
+/// part, exactly like the flat mapper's shared-router rank coordinates.
 fn node_level_alloc(alloc: &Allocation) -> Allocation {
     let node_routers = alloc.node_routers();
-    let nn = node_routers.len();
+    let sizes = alloc.node_sizes();
+    if sizes.iter().all(|&s| s == alloc.ranks_per_node) {
+        let nn = node_routers.len();
+        return Allocation {
+            torus: alloc.torus.clone(),
+            core_router: node_routers,
+            core_node: (0..nn as u32).collect(),
+            ranks_per_node: 1,
+        };
+    }
+    let total: usize = sizes.iter().sum();
+    let mut core_router = Vec::with_capacity(total);
+    let mut core_node = Vec::with_capacity(total);
+    for (n, &size) in sizes.iter().enumerate() {
+        for _ in 0..size {
+            core_router.push(node_routers[n]);
+            core_node.push(n as u32);
+        }
+    }
     Allocation {
         torus: alloc.torus.clone(),
-        core_router: node_routers,
-        core_node: (0..nn as u32).collect(),
-        ranks_per_node: 1,
+        core_router,
+        core_node,
+        ranks_per_node: alloc.ranks_per_node,
     }
+}
+
+/// Expand per-node coordinates to per-pseudo-rank coordinates when the
+/// node-level allocation carries more than one pseudo-rank per node
+/// (heterogeneous allocations).
+fn expand_node_coords(ncoords: &Coords, node_alloc: &Allocation) -> Coords {
+    let dim = ncoords.dim();
+    let mut axes = vec![Vec::with_capacity(node_alloc.num_ranks()); dim];
+    for &n in &node_alloc.core_node {
+        for (d, axis) in axes.iter_mut().enumerate() {
+            axis.push(ncoords.get(d, n as usize));
+        }
+    }
+    Coords::from_axes(axes)
 }
 
 /// Run the two-level mapper. `tcoords` are the task coordinates handed to
@@ -201,18 +266,30 @@ pub fn map_hierarchical(
     backend: &dyn WhopsBackend,
 ) -> HierMapping {
     assert_eq!(tcoords.len(), graph.num_tasks);
+    if cfg.numa.is_some() {
+        assert!(
+            cfg.objective == ObjectiveKind::WeightedHops,
+            "depth-3 NUMA mapping composes with the WeightedHops objective only"
+        );
+    }
     let par = cfg.parallelism();
     let node_alloc = node_level_alloc(alloc);
-    let node_routers = &node_alloc.core_router;
-    let ncoords = prepare_node_coords(alloc, cfg);
+    let node_routers = alloc.node_routers();
+    let mut ncoords = prepare_node_coords(alloc, cfg);
+    if node_alloc.num_ranks() != ncoords.len() {
+        // Heterogeneous: one coordinate row per pseudo-rank slot.
+        ncoords = expand_node_coords(&ncoords, &node_alloc);
+    }
 
     // Level 1: the rotation sweep over node coordinates. Its "ranks" are
-    // nodes, so the winning mapping *is* the task→node assignment.
+    // nodes (or per-node rank slots on heterogeneous allocations), so the
+    // winning mapping induces the task→node assignment.
     let sweep_cfg = SweepConfig {
         max_candidates: cfg.max_rotations.max(1),
         chunk_edges: cfg.chunk_edges,
         threads: cfg.threads,
         objective: cfg.objective,
+        numa: cfg.numa.map(|t| t.node_level_costs()),
     };
     let sweep = rotation_sweep(
         graph,
@@ -224,32 +301,84 @@ pub fn map_hierarchical(
         backend,
     );
     let node_score = sweep.scores[sweep.chosen];
-    let mut task_to_node = sweep.task_to_rank;
+    let mut task_to_node: Vec<u32> = sweep
+        .task_to_rank
+        .iter()
+        .map(|&r| node_alloc.core_node[r as usize])
+        .collect();
 
     // Level 1.5: MinVolume boundary refinement, against the configured
     // objective (hop-weighted volume by default; routed per-link loads for
-    // the congestion objectives).
+    // the congestion objectives; the socket-cost NUMA pricing at depth 3).
     let swaps_applied = match cfg.intra {
-        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_with(
-            graph,
-            &mut task_to_node,
-            node_routers,
-            &alloc.torus,
-            passes,
-            par,
-            cfg.objective,
-        ),
+        IntraNodeStrategy::MinVolume { passes } => match cfg.numa {
+            Some(topo) => refine::min_volume_refine_numa(
+                graph,
+                &mut task_to_node,
+                &node_routers,
+                &alloc.torus,
+                passes,
+                par,
+                topo.node_level_costs(),
+            ),
+            None => refine::min_volume_refine_with(
+                graph,
+                &mut task_to_node,
+                &node_routers,
+                &alloc.torus,
+                passes,
+                par,
+                cfg.objective,
+            ),
+        },
         _ => 0,
     };
 
-    // Level 2: place each node's tasks on its ranks, in parallel over
-    // nodes with per-worker Hilbert scratch.
+    if let Some(topo) = cfg.numa {
+        // Level 2 (depth 3): sized geometric socket split inside each
+        // node, cross-socket MinVolume refinement, then socket-aware rank
+        // placement — all parallel over nodes.
+        let mut task_to_socket = socket::split_sockets(tcoords, &task_to_node, alloc, &topo, par);
+        let socket_swaps = match cfg.intra {
+            IntraNodeStrategy::MinVolume { passes } => socket::refine_sockets(
+                graph,
+                &task_to_node,
+                &mut task_to_socket,
+                &topo,
+                passes,
+                par,
+            ),
+            _ => 0,
+        };
+        let task_to_rank = socket::place_within_sockets(
+            tcoords,
+            &task_to_node,
+            &task_to_socket,
+            alloc,
+            &topo,
+            cfg.intra,
+            par,
+        );
+        return HierMapping {
+            task_to_rank,
+            task_to_node,
+            task_to_socket: Some(task_to_socket),
+            node_score,
+            swaps_applied,
+            socket_swaps,
+        };
+    }
+
+    // Level 2 (depth 2): place each node's tasks on its ranks, in parallel
+    // over nodes with per-worker Hilbert scratch.
     let task_to_rank = place_within_nodes(tcoords, &task_to_node, alloc, cfg.intra, par);
     HierMapping {
         task_to_rank,
         task_to_node,
+        task_to_socket: None,
         node_score,
         swaps_applied,
+        socket_swaps: 0,
     }
 }
 
@@ -505,6 +634,138 @@ mod tests {
         nodes_used.sort_unstable();
         nodes_used.dedup();
         assert_eq!(nodes_used.len(), 8);
+    }
+
+    #[test]
+    fn depth3_respects_node_and_socket_assignments() {
+        let alloc = toy_alloc(); // 16 nodes x 8 ranks
+        let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
+        let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        for intra in [
+            IntraNodeStrategy::DefaultOrder,
+            IntraNodeStrategy::SfcOrder,
+            IntraNodeStrategy::MinVolume { passes: 2 },
+        ] {
+            let hcfg = HierConfig {
+                numa: Some(topo),
+                ..cfg(intra)
+            };
+            let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+            let mut s = m.task_to_rank.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..128u32).collect::<Vec<_>>(), "{intra:?}");
+            let socks = m.task_to_socket.as_ref().expect("depth 3 reports sockets");
+            let mut per_socket = vec![0usize; alloc.num_nodes() * 2];
+            for t in 0..128 {
+                let rank = m.task_to_rank[t] as usize;
+                assert_eq!(alloc.core_node[rank], m.task_to_node[t], "{intra:?}: task {t}");
+                assert_eq!(rank_socks[rank], socks[t], "{intra:?}: task {t}");
+                per_socket[m.task_to_node[t] as usize * 2 + socks[t] as usize] += 1;
+            }
+            // 8 tasks per node, 2 sockets x 4 ranks: 4 tasks per socket.
+            assert!(per_socket.iter().all(|&c| c == 4), "{intra:?}: {per_socket:?}");
+        }
+    }
+
+    #[test]
+    fn depth3_breakdown_matches_eval_numa() {
+        use crate::objective::eval_numa;
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let topo = NumaTopology::new(2, 4, 0.5, 0.125, 1.0);
+        let hcfg = HierConfig {
+            numa: Some(topo),
+            ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
+        };
+        let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+        let socks = m.task_to_socket.as_ref().unwrap();
+        // Recompute the per-level weights from the assignment arrays; the
+        // mapping's eval_numa breakdown must agree exactly.
+        let routers = alloc.node_routers();
+        let (mut network, mut cross, mut same) = (0f64, 0f64, 0f64);
+        for e in &g.edges {
+            let (u, v) = (e.u as usize, e.v as usize);
+            if m.task_to_node[u] != m.task_to_node[v] {
+                network += e.w
+                    * alloc.torus.hop_dist_ids(
+                        routers[m.task_to_node[u] as usize] as usize,
+                        routers[m.task_to_node[v] as usize] as usize,
+                    ) as f64;
+            } else if socks[u] != socks[v] {
+                cross += e.w;
+            } else {
+                same += e.w;
+            }
+        }
+        let nm = eval_numa(&g, &m.task_to_rank, &alloc, &topo);
+        assert_eq!(nm.network_weighted_hops, network);
+        assert_eq!(nm.socket_weight, cross);
+        assert_eq!(nm.core_weight, same);
+    }
+
+    #[test]
+    fn single_socket_topology_reduces_to_depth2() {
+        // One socket and zero socket cost (the BG/Q node model scaled to
+        // this allocation): depth 3 must reproduce the two-level mapping
+        // exactly. Identity rotation only, so the f64 NUMA sweep scoring
+        // cannot re-rank candidates against the f32 kernel path.
+        let alloc = toy_alloc(); // 8 ranks/node
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let topo = NumaTopology::new(1, 8, 0.0, 0.0, 1.0);
+        for intra in [
+            IntraNodeStrategy::DefaultOrder,
+            IntraNodeStrategy::SfcOrder,
+            IntraNodeStrategy::MinVolume { passes: 3 },
+        ] {
+            let mut base = cfg(intra);
+            base.max_rotations = 1;
+            let d2 = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
+            let d3cfg = HierConfig {
+                numa: Some(topo),
+                ..base.clone()
+            };
+            let d3 = map_hierarchical(&g, &g.coords, &alloc, &d3cfg, &NativeBackend);
+            assert_eq!(d3.task_to_node, d2.task_to_node, "{intra:?}");
+            assert_eq!(d3.task_to_rank, d2.task_to_rank, "{intra:?}");
+            assert_eq!(d3.swaps_applied, d2.swaps_applied, "{intra:?}");
+            assert_eq!(d3.socket_swaps, 0, "{intra:?}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_allocation_gets_capacity_balanced_nodes() {
+        // 4 nodes of sizes 8/4/2/2 on a 4-ring: with tnum == num_ranks,
+        // every node must receive exactly its rank count, and the mapping
+        // stays a bijection through depth 3.
+        let alloc = Allocation::heterogeneous(
+            Torus::torus(&[4]),
+            &[0, 1, 2, 3],
+            &[8, 4, 2, 2],
+        )
+        .unwrap();
+        let g = stencil_graph(&[16], false, 1.0);
+        let topo = NumaTopology::new(2, 2, 0.5, 0.0, 1.0);
+        let hcfg = HierConfig {
+            numa: Some(topo),
+            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
+        };
+        let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+        let mut s = m.task_to_rank.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..16u32).collect::<Vec<_>>());
+        let mut per_node = vec![0usize; 4];
+        for &n in &m.task_to_node {
+            per_node[n as usize] += 1;
+        }
+        assert_eq!(per_node, vec![8, 4, 2, 2]);
+        // Socket respect holds on heterogeneous nodes too (clamped
+        // positions land in the last socket).
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        let socks = m.task_to_socket.as_ref().unwrap();
+        for t in 0..16 {
+            assert_eq!(rank_socks[m.task_to_rank[t] as usize], socks[t], "task {t}");
+        }
     }
 
     #[test]

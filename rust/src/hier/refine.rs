@@ -74,20 +74,24 @@ impl Adjacency {
     }
 
     #[inline]
-    fn neighbors(&self, t: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+    pub(crate) fn neighbors(&self, t: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
         let (lo, hi) = (self.off[t] as usize, self.off[t + 1] as usize);
         self.nbr[lo..hi].iter().copied().zip(self.w[lo..hi].iter().copied())
     }
 }
 
-/// Node-pair hop distances: a dense table while `nn²` stays cheap (the
-/// common case — the whole point of the hierarchy is `nn << nranks`), else
-/// computed on the fly from the torus.
+/// Node-pair communication costs: hop distances scaled by `scale`, with a
+/// configurable `diag` for same-node pairs (0 in the pure Section 3 model;
+/// the flat NUMA socket cost under [`min_volume_refine_numa`]). A dense
+/// table while `nn²` stays cheap (the common case — the whole point of the
+/// hierarchy is `nn << nranks`), else computed on the fly from the torus.
 struct NodeHops<'a> {
     nn: usize,
     table: Option<Vec<f64>>,
     torus: &'a Torus,
     routers: &'a [u32],
+    scale: f64,
+    diag: f64,
 }
 
 /// Largest dense table: 4M entries (32 MB). Beyond that (only the very
@@ -95,14 +99,16 @@ struct NodeHops<'a> {
 const MAX_TABLE_ENTRIES: usize = 1 << 22;
 
 impl<'a> NodeHops<'a> {
-    fn build(torus: &'a Torus, routers: &'a [u32]) -> NodeHops<'a> {
+    fn build_scaled(torus: &'a Torus, routers: &'a [u32], scale: f64, diag: f64) -> NodeHops<'a> {
         let nn = routers.len();
         let table = if nn * nn <= MAX_TABLE_ENTRIES {
-            let mut hops = vec![0f64; nn * nn];
+            // The fill seeds every diagonal entry with `diag`; only the
+            // off-diagonal pairs are overwritten below.
+            let mut hops = vec![diag; nn * nn];
             for a in 0..nn {
                 for b in (a + 1)..nn {
-                    let h =
-                        torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64;
+                    let h = torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64
+                        * scale;
                     hops[a * nn + b] = h;
                     hops[b * nn + a] = h;
                 }
@@ -116,6 +122,8 @@ impl<'a> NodeHops<'a> {
             table,
             torus,
             routers,
+            scale,
+            diag,
         }
     }
 
@@ -123,10 +131,14 @@ impl<'a> NodeHops<'a> {
     fn get(&self, a: u32, b: u32) -> f64 {
         match &self.table {
             Some(t) => t[a as usize * self.nn + b as usize],
-            None => self
-                .torus
-                .hop_dist_ids(self.routers[a as usize] as usize, self.routers[b as usize] as usize)
-                as f64,
+            None if a == b => self.diag,
+            None => {
+                self.torus.hop_dist_ids(
+                    self.routers[a as usize] as usize,
+                    self.routers[b as usize] as usize,
+                ) as f64
+                    * self.scale
+            }
         }
     }
 }
@@ -150,9 +162,11 @@ fn move_cost(adj: &Adjacency, hops: &NodeHops<'_>, node_of: &[u32], t: usize, x:
 }
 
 /// Gain (strictly positive = improvement) of swapping task `u` (on node
-/// `a`) with task `b` (on node `bn`). The `2·w(u,b)·hops(a,bn)` correction
-/// accounts for a direct edge between the pair, whose cost is unchanged by
-/// the swap but double-counted by the two move costs.
+/// `a`) with task `b` (on node `bn`). The `2·w(u,b)·(hops(a,bn) − diag)`
+/// correction accounts for a direct edge between the pair, whose cost is
+/// unchanged by the swap but double-counted by the two move costs (each
+/// move cost prices it once at the cross-node rate and once at the
+/// same-node `diag` rate).
 fn swap_gain(
     adj: &Adjacency,
     hops: &NodeHops<'_>,
@@ -171,7 +185,7 @@ fn swap_gain(
     move_cost(adj, hops, node_of, u, a) + move_cost(adj, hops, node_of, b, bn)
         - move_cost(adj, hops, node_of, u, bn)
         - move_cost(adj, hops, node_of, b, a)
-        - 2.0 * direct * hops.get(a, bn)
+        - 2.0 * direct * (hops.get(a, bn) - hops.diag)
 }
 
 /// Inter-node weighted hops of an assignment (the refinement objective;
@@ -207,13 +221,55 @@ pub fn min_volume_refine(
     passes: usize,
     par: Parallelism,
 ) -> usize {
+    refine_hops_impl(graph, node_of, node_routers, torus, passes, par, 1.0, 0.0)
+}
+
+/// [`min_volume_refine`] under the NUMA node-level pricing of
+/// [`crate::machine::NumaNodeCosts`]: inter-node edges cost `hop` per
+/// network hop, intra-node edges the flat `socket` upper bound (the
+/// socket-level split runs later). With `hop == 1` and `socket == 0` this
+/// is bit-identical to [`min_volume_refine`].
+pub fn min_volume_refine_numa(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    passes: usize,
+    par: Parallelism,
+    costs: crate::machine::NumaNodeCosts,
+) -> usize {
+    refine_hops_impl(
+        graph,
+        node_of,
+        node_routers,
+        torus,
+        passes,
+        par,
+        costs.hop,
+        costs.socket,
+    )
+}
+
+/// Shared hop-priced refinement body: node-pair costs are `scale · hops`
+/// off the diagonal and `diag` on it (see [`NodeHops`]).
+#[allow(clippy::too_many_arguments)]
+fn refine_hops_impl(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    passes: usize,
+    par: Parallelism,
+    scale: f64,
+    diag: f64,
+) -> usize {
     assert_eq!(node_of.len(), graph.num_tasks);
     let nn = node_routers.len();
     if nn < 2 || graph.edges.is_empty() {
         return 0;
     }
     let adj = Adjacency::build(graph);
-    let hops = NodeHops::build(torus, node_routers);
+    let hops = NodeHops::build_scaled(torus, node_routers, scale, diag);
     let node_ids: Vec<u32> = (0..nn as u32).collect();
     let mut applied_total = 0usize;
     for _pass in 0..passes {
@@ -260,7 +316,7 @@ pub fn min_volume_refine(
                         let g = cost_u_a + move_cost(&adj, &hops, snapshot, b as usize, bn)
                             - cost_u_bn
                             - move_cost(&adj, &hops, snapshot, b as usize, a)
-                            - 2.0 * direct * h_ab;
+                            - 2.0 * direct * (h_ab - hops.diag);
                         let better = match best {
                             None => g > 0.0,
                             // Strictly-greater gain wins; ties keep the
@@ -574,6 +630,109 @@ mod tests {
             ObjectiveKind::WeightedHops,
         );
         assert_eq!((sd, direct), (sv, via));
+    }
+
+    #[test]
+    fn numa_refine_with_zero_socket_cost_matches_hop_path() {
+        // hop = 1, socket = 0 must reproduce the plain hop-weighted
+        // refinement bit for bit.
+        use crate::machine::NumaNodeCosts;
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        let mut plain = start.clone();
+        let sp = min_volume_refine(&g, &mut plain, &routers, &torus, 4, Parallelism::sequential());
+        let mut numa = start.clone();
+        let sn = min_volume_refine_numa(
+            &g,
+            &mut numa,
+            &routers,
+            &torus,
+            4,
+            Parallelism::sequential(),
+            NumaNodeCosts {
+                hop: 1.0,
+                socket: 0.0,
+            },
+        );
+        assert_eq!((sp, plain), (sn, numa));
+    }
+
+    #[test]
+    fn numa_refine_reduces_node_level_numa_objective() {
+        use crate::machine::{Allocation, NumaNodeCosts};
+        use crate::mapping::rotations::numa_node_score;
+        let g = stencil_graph(&[16], false, 1.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        let costs = NumaNodeCosts {
+            hop: 1.0,
+            socket: 0.4,
+        };
+        // Node-level pseudo-allocation to score assignments against.
+        let alloc = Allocation {
+            torus: torus.clone(),
+            core_router: routers.clone(),
+            core_node: (0..4u32).collect(),
+            ranks_per_node: 1,
+        };
+        let mut node_of: Vec<u32> = (0..16).map(|t| (t % 4) as u32).collect();
+        let before = numa_node_score(&g, &node_of, &alloc, costs);
+        let swaps = min_volume_refine_numa(
+            &g,
+            &mut node_of,
+            &routers,
+            &torus,
+            8,
+            Parallelism::sequential(),
+            costs,
+        );
+        let after = numa_node_score(&g, &node_of, &alloc, costs);
+        assert!(swaps > 0, "no swaps on a scrambled assignment");
+        assert!(after < before, "{after} !< {before}");
+        // Swaps preserve balance.
+        let mut sizes = [0usize; 4];
+        for &x in &node_of {
+            sizes[x as usize] += 1;
+        }
+        assert_eq!(sizes, [4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn numa_refine_is_thread_count_invariant() {
+        use crate::machine::NumaNodeCosts;
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        let costs = NumaNodeCosts {
+            hop: 1.0,
+            socket: 0.3,
+        };
+        let mut seq = start.clone();
+        min_volume_refine_numa(
+            &g,
+            &mut seq,
+            &routers,
+            &torus,
+            4,
+            Parallelism::sequential(),
+            costs,
+        );
+        for threads in [2, 8] {
+            let mut par_assign = start.clone();
+            min_volume_refine_numa(
+                &g,
+                &mut par_assign,
+                &routers,
+                &torus,
+                4,
+                Parallelism::threads(threads).with_grain(1),
+                costs,
+            );
+            assert_eq!(par_assign, seq, "threads={threads}");
+        }
     }
 
     #[test]

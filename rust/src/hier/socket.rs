@@ -1,0 +1,423 @@
+//! Socket level of the depth-3 hierarchical mapper: geometric splitting of
+//! each node's tasks across its NUMA domains, greedy cross-socket
+//! refinement, and socket-aware rank placement.
+//!
+//! Once the node level has fixed `task_to_node`, nothing a socket decision
+//! does can touch the network — so the socket level optimizes exactly the
+//! remaining terms of the [`crate::objective::NumaAware`] objective: the
+//! cross-socket weight (priced at `socket_cost`) against the same-socket
+//! weight (`core_cost`). Three passes, all parallel **over nodes** (nodes
+//! are independent at this level, so per-node work is sequential and the
+//! fan-out is index-addressed — bit-identical at every thread count):
+//!
+//! 1. [`split_sockets`] — a sized recursive geometric bisection of the
+//!    node's tasks over their coordinates (cut along the longest extent,
+//!    deterministic `(coordinate, task id)` tie-break), producing socket
+//!    groups whose sizes equal the socket's share of the node's balanced
+//!    per-rank load — the depth-2 round-robin loads, summed per socket, so
+//!    depth-3 placement keeps exactly the per-rank balance of depth 2.
+//! 2. [`refine_sockets`] — greedy within-node task swaps between sockets,
+//!    accepted only when strictly improving; gains are the exact
+//!    incremental [`crate::objective::placement_swap_gain`] specialized to
+//!    same-node swaps: `(socket_cost − core_cost) · Δ(cross-socket
+//!    weight)`, O(degree) per candidate.
+//! 3. [`place_within_sockets`] — each socket's tasks are ordered by the
+//!    [`IntraNodeStrategy`] (ascending, or Hilbert-curve order) and dealt
+//!    round-robin onto the socket's ranks (positions `k·ranks_per_socket..`
+//!    of the node's default rank order, the same assignment
+//!    [`NumaTopology::socket_of_ranks`] reports).
+
+use super::refine::Adjacency;
+use super::IntraNodeStrategy;
+use crate::apps::TaskGraph;
+use crate::geom::Coords;
+use crate::machine::{Allocation, NumaTopology};
+use crate::par::{self, Parallelism};
+use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
+
+/// Task count each socket of a node should receive: the node's balanced
+/// per-rank loads (`num_tasks` dealt over `node_ranks` rank slots, earlier
+/// slots taking the remainder — the depth-2 round-robin distribution),
+/// summed over the socket's slots.
+pub fn socket_targets(num_tasks: usize, node_ranks: usize, topo: &NumaTopology) -> Vec<usize> {
+    let mut targets = vec![0usize; topo.sockets_per_node];
+    if node_ranks == 0 {
+        assert_eq!(num_tasks, 0, "tasks on a node with no ranks");
+        return targets;
+    }
+    let base = num_tasks / node_ranks;
+    let rem = num_tasks % node_ranks;
+    for j in 0..node_ranks {
+        targets[topo.socket_of_pos(j)] += base + usize::from(j < rem);
+    }
+    targets
+}
+
+/// Sized recursive geometric bisection: reorder `tasks` so that the first
+/// `targets[0]` land in group 0, the next `targets[1]` in group 1, and so
+/// on, with every cut taken along the axis of largest extent over the
+/// sub-range and broken deterministically by `(coordinate, task id)`.
+fn sized_bisect(tcoords: &Coords, tasks: &mut [u32], targets: &[usize]) {
+    debug_assert_eq!(targets.iter().sum::<usize>(), tasks.len());
+    if targets.len() <= 1 || tasks.len() <= 1 {
+        return;
+    }
+    let mid = targets.len() / 2;
+    let left_total: usize = targets[..mid].iter().sum();
+    // Cut axis: largest coordinate extent over this sub-range (ties keep
+    // the lower axis).
+    let mut axis = 0usize;
+    let mut best = f64::NEG_INFINITY;
+    for d in 0..tcoords.dim() {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &t in tasks.iter() {
+            let v = tcoords.get(d, t as usize);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi - lo > best {
+            best = hi - lo;
+            axis = d;
+        }
+    }
+    tasks.sort_unstable_by(|&a, &b| {
+        let (va, vb) = (tcoords.get(axis, a as usize), tcoords.get(axis, b as usize));
+        va.partial_cmp(&vb).expect("finite coordinates").then(a.cmp(&b))
+    });
+    let (left, right) = tasks.split_at_mut(left_total);
+    sized_bisect(tcoords, left, &targets[..mid]);
+    sized_bisect(tcoords, right, &targets[mid..]);
+}
+
+/// Geometric socket split: within-node socket index per task (the sized
+/// bisection of the module docs), parallel over nodes. Node assignments
+/// are taken from `task_to_node`; sockets are sized by [`socket_targets`].
+pub fn split_sockets(
+    tcoords: &Coords,
+    task_to_node: &[u32],
+    alloc: &Allocation,
+    topo: &NumaTopology,
+    par: Parallelism,
+) -> Vec<u32> {
+    let nn = alloc.num_nodes();
+    let node_ranks: Vec<usize> = alloc.ranks_by_node().iter().map(Vec::len).collect();
+    let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+    for (t, &n) in task_to_node.iter().enumerate() {
+        tasks_by_node[n as usize].push(t as u32);
+    }
+    let node_ids: Vec<u32> = (0..nn as u32).collect();
+    let split: Vec<(Vec<u32>, Vec<usize>)> = par::map(par, &node_ids, |_, &n| {
+        let mut order = tasks_by_node[n as usize].clone();
+        let targets = socket_targets(order.len(), node_ranks[n as usize], topo);
+        sized_bisect(tcoords, &mut order, &targets);
+        (order, targets)
+    });
+    let mut task_to_socket = vec![0u32; task_to_node.len()];
+    for (order, targets) in &split {
+        let mut cursor = 0usize;
+        for (sock, &take) in targets.iter().enumerate() {
+            for &t in &order[cursor..cursor + take] {
+                task_to_socket[t as usize] = sock as u32;
+            }
+            cursor += take;
+        }
+    }
+    task_to_socket
+}
+
+/// Greedy cross-socket refinement: up to `passes` passes of within-node
+/// task swaps between sockets, each accepted only when it strictly lowers
+/// the NUMA objective — gain `(socket_cost − core_cost) · Δ(cross-socket
+/// weight)`, computed incrementally over the pair's intra-node edges.
+/// Per-socket task counts are preserved (swaps only). Nodes are refined
+/// independently in parallel; per-node work is sequential in `(task,
+/// partner)` order, so the result is bit-identical at every thread count.
+/// Returns the number of swaps applied.
+pub fn refine_sockets(
+    graph: &TaskGraph,
+    task_to_node: &[u32],
+    task_to_socket: &mut [u32],
+    topo: &NumaTopology,
+    passes: usize,
+    par: Parallelism,
+) -> usize {
+    assert_eq!(task_to_node.len(), graph.num_tasks);
+    assert_eq!(task_to_socket.len(), graph.num_tasks);
+    if topo.sockets_per_node < 2
+        || topo.socket_cost <= topo.core_cost
+        || graph.edges.is_empty()
+        || passes == 0
+    {
+        return 0;
+    }
+    let num_tasks = graph.num_tasks;
+    let nn = task_to_node.iter().map(|&n| n as usize + 1).max().unwrap_or(0);
+    let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+    for (t, &n) in task_to_node.iter().enumerate() {
+        tasks_by_node[n as usize].push(t as u32);
+    }
+    let adj = Adjacency::build(graph);
+    let snapshot: &[u32] = task_to_socket;
+    let node_ids: Vec<u32> = (0..nn as u32).collect();
+    // Per-worker scratch: a global task -> local-index table, initialized
+    // once per worker and restored after each node.
+    let results: Vec<(Vec<u32>, usize)> = par::map_with(
+        par,
+        &node_ids,
+        || vec![u32::MAX; num_tasks],
+        |local_idx, _i, &n| {
+            let tasks = &tasks_by_node[n as usize];
+            let mut sock: Vec<u32> =
+                tasks.iter().map(|&t| snapshot[t as usize]).collect();
+            if tasks.len() < 2 {
+                return (sock, 0);
+            }
+            for (i, &t) in tasks.iter().enumerate() {
+                local_idx[t as usize] = i as u32;
+            }
+            // Δ(cross-socket weight) of moving task `li` from socket `from`
+            // to `to`, over its intra-node edges, excluding partner `skip`.
+            let cross_delta = |sock: &[u32], li: usize, from: u32, to: u32, skip: usize| {
+                let mut delta = 0f64;
+                for (nb, w) in adj.neighbors(tasks[li] as usize) {
+                    let lj = local_idx[nb as usize];
+                    if lj == u32::MAX || lj as usize == skip {
+                        continue; // other node, or the swap partner
+                    }
+                    let sn = sock[lj as usize];
+                    delta += w * (i32::from(from != sn) - i32::from(to != sn)) as f64;
+                }
+                delta
+            };
+            let mut swaps = 0usize;
+            for _pass in 0..passes {
+                let mut applied = 0usize;
+                for i in 0..tasks.len() {
+                    let si = sock[i];
+                    let mut best: Option<(f64, usize)> = None;
+                    for j in 0..tasks.len() {
+                        let sj = sock[j];
+                        if sj == si {
+                            continue;
+                        }
+                        let delta = cross_delta(&sock, i, si, sj, j)
+                            + cross_delta(&sock, j, sj, si, i);
+                        let g = (topo.socket_cost - topo.core_cost) * delta;
+                        // Partners scan in ascending j, so the first
+                        // strictly-best gain also wins equal-gain ties.
+                        if g > 0.0 && best.map_or(true, |(bg, _)| g > bg) {
+                            best = Some((g, j));
+                        }
+                    }
+                    if let Some((_, j)) = best {
+                        sock.swap(i, j);
+                        applied += 1;
+                    }
+                }
+                swaps += applied;
+                if applied == 0 {
+                    break;
+                }
+            }
+            for &t in tasks.iter() {
+                local_idx[t as usize] = u32::MAX;
+            }
+            (sock, swaps)
+        },
+    );
+    let mut total = 0usize;
+    for (n, (sock, swaps)) in results.into_iter().enumerate() {
+        for (i, &t) in tasks_by_node[n].iter().enumerate() {
+            task_to_socket[t as usize] = sock[i];
+        }
+        total += swaps;
+    }
+    total
+}
+
+/// Socket-aware rank placement: each `(node, socket)` group's tasks are
+/// ordered by `strategy` (`SfcOrder` sorts along the Hilbert curve; the
+/// other strategies keep ascending task order) and dealt round-robin onto
+/// the socket's ranks. Parallel over nodes with per-worker Hilbert
+/// scratch; index-addressed, so the result is identical at every thread
+/// count.
+pub fn place_within_sockets(
+    tcoords: &Coords,
+    task_to_node: &[u32],
+    task_to_socket: &[u32],
+    alloc: &Allocation,
+    topo: &NumaTopology,
+    strategy: IntraNodeStrategy,
+    par: Parallelism,
+) -> Vec<u32> {
+    let nn = alloc.num_nodes();
+    let ranks_by_node = alloc.ranks_by_node();
+    let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+    for (t, &n) in task_to_node.iter().enumerate() {
+        tasks_by_node[n as usize].push(t as u32);
+    }
+    let bits = (128 / tcoords.dim().max(1)).min(16) as u32;
+    let sfc = strategy == IntraNodeStrategy::SfcOrder;
+    let node_ids: Vec<u32> = (0..nn as u32).collect();
+    let placed: Vec<Vec<(u32, u32)>> = par::map_with(
+        par,
+        &node_ids,
+        Vec::new,
+        |keys: &mut Vec<(u128, u32)>, _i, &n| {
+            let tasks = &tasks_by_node[n as usize];
+            let ranks = &ranks_by_node[n as usize];
+            let mut out = Vec::with_capacity(tasks.len());
+            if tasks.is_empty() {
+                return out;
+            }
+            assert!(!ranks.is_empty(), "node {n} has tasks but no ranks");
+            let rps = topo.ranks_per_socket;
+            for k in 0..topo.sockets_per_node {
+                let mut members: Vec<u32> = tasks
+                    .iter()
+                    .copied()
+                    .filter(|&t| task_to_socket[t as usize] == k as u32)
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let lo = (k * rps).min(ranks.len());
+                let hi = if k + 1 == topo.sockets_per_node {
+                    ranks.len()
+                } else {
+                    ((k + 1) * rps).min(ranks.len())
+                };
+                let socket_ranks = &ranks[lo..hi];
+                assert!(
+                    !socket_ranks.is_empty(),
+                    "socket {k} of node {n} has tasks but no ranks"
+                );
+                if sfc {
+                    hilbert_sort_f64_subset_into(tcoords, &mut members, bits, keys);
+                }
+                for (q, &t) in members.iter().enumerate() {
+                    out.push((t, socket_ranks[q % socket_ranks.len()]));
+                }
+            }
+            out
+        },
+    );
+    let mut task_to_rank = vec![0u32; task_to_node.len()];
+    for pairs in placed {
+        for (t, r) in pairs {
+            task_to_rank[t as usize] = r;
+        }
+    }
+    task_to_rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::machine::Torus;
+    use crate::objective::eval_numa_placement;
+
+    fn topo2x2() -> NumaTopology {
+        NumaTopology::new(2, 2, 0.5, 0.0, 1.0)
+    }
+
+    #[test]
+    fn targets_match_round_robin_loads() {
+        let t = topo2x2(); // 2 sockets x 2 ranks
+        assert_eq!(socket_targets(4, 4, &t), vec![2, 2]);
+        assert_eq!(socket_targets(8, 4, &t), vec![4, 4]);
+        // 5 tasks over 4 ranks: slot 0 takes the remainder -> socket 0.
+        assert_eq!(socket_targets(5, 4, &t), vec![3, 2]);
+        // Heterogeneous node with 3 ranks: socket 1 has one slot.
+        assert_eq!(socket_targets(3, 3, &t), vec![2, 1]);
+        // No ranks, no tasks.
+        assert_eq!(socket_targets(0, 0, &t), vec![0, 0]);
+    }
+
+    #[test]
+    fn split_separates_geometry() {
+        // 8 tasks on a line, one node, 2 sockets of 2 ranks (4 ranks, so
+        // 2 tasks per rank): the split must cut the line in half.
+        let g = stencil_graph(&[8], false, 1.0);
+        let alloc = Allocation::heterogeneous(Torus::torus(&[2]), &[0], &[4]).unwrap();
+        let t2 = topo2x2();
+        let node_of = vec![0u32; 8];
+        let socks = split_sockets(&g.coords, &node_of, &alloc, &t2, Parallelism::sequential());
+        assert_eq!(socks[..4], [0, 0, 0, 0]);
+        assert_eq!(socks[4..], [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn refine_reduces_cross_socket_weight() {
+        // Alternating split of a chain: maximally cross-socket. Refinement
+        // must recover contiguous halves (or at least strictly improve).
+        let g = stencil_graph(&[8], false, 1.0);
+        let node_of = vec![0u32; 8];
+        let mut socks: Vec<u32> = (0..8).map(|t| (t % 2) as u32).collect();
+        let t2 = topo2x2();
+        let torus = Torus::torus(&[2]);
+        let routers = vec![0u32];
+        let before = eval_numa_placement(&g, &node_of, &socks, &routers, &torus, &t2);
+        let swaps = refine_sockets(&g, &node_of, &mut socks, &t2, 8, Parallelism::sequential());
+        let after = eval_numa_placement(&g, &node_of, &socks, &routers, &torus, &t2);
+        assert!(swaps > 0);
+        assert!(after.socket_weight < before.socket_weight);
+        // Swaps preserve per-socket counts.
+        assert_eq!(socks.iter().filter(|&&s| s == 0).count(), 4);
+    }
+
+    #[test]
+    fn refine_is_thread_count_invariant() {
+        let g = stencil_graph(&[6, 6], false, 1.5);
+        let t2 = topo2x2();
+        // 3 nodes x 12 tasks, scrambled sockets.
+        let node_of: Vec<u32> = (0..36).map(|t| (t % 3) as u32).collect();
+        let start: Vec<u32> = (0..36).map(|t| ((t / 3) % 2) as u32).collect();
+        let mut seq = start.clone();
+        refine_sockets(&g, &node_of, &mut seq, &t2, 4, Parallelism::sequential());
+        for threads in [2, 8] {
+            let mut par_socks = start.clone();
+            refine_sockets(
+                &g,
+                &node_of,
+                &mut par_socks,
+                &t2,
+                4,
+                Parallelism::threads(threads).with_grain(1),
+            );
+            assert_eq!(par_socks, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn placement_respects_socket_ranges() {
+        // One node of 4 ranks (2 sockets x 2): socket-0 tasks must land on
+        // the node's first two ranks, socket-1 tasks on the last two.
+        let g = stencil_graph(&[8], false, 1.0);
+        let alloc = Allocation::heterogeneous(Torus::torus(&[2]), &[0], &[4]).unwrap();
+        let t2 = topo2x2();
+        let node_of = vec![0u32; 8];
+        let socks = split_sockets(&g.coords, &node_of, &alloc, &t2, Parallelism::sequential());
+        let map = place_within_sockets(
+            &g.coords,
+            &node_of,
+            &socks,
+            &alloc,
+            &t2,
+            IntraNodeStrategy::DefaultOrder,
+            Parallelism::sequential(),
+        );
+        let rank_socks = t2.socket_of_ranks(&alloc);
+        for t in 0..8 {
+            assert_eq!(rank_socks[map[t] as usize], socks[t], "task {t}");
+        }
+        // Round-robin within sockets: every rank takes exactly 2 tasks.
+        let mut loads = vec![0usize; 4];
+        for &r in &map {
+            loads[r as usize] += 1;
+        }
+        assert_eq!(loads, vec![2, 2, 2, 2]);
+    }
+}

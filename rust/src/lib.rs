@@ -20,12 +20,17 @@
 //!
 //! Quick start: see `examples/quickstart.rs`; experiments: `repro --help`.
 //!
-//! Beyond the paper's flat mapper, [`hier`] adds a two-level node→core
-//! mapping subsystem: an MJ rotation sweep over *node* coordinates picks a
-//! balanced task→node assignment, pluggable intra-node strategies place
-//! tasks on cores (platform order, Hilbert-curve order, or greedy
-//! `MinVolume` boundary refinement of the node assignment), and intra-node
-//! messages stay off the network per the Section 3 model.
+//! Beyond the paper's flat mapper, [`hier`] adds a hierarchical
+//! node→socket→core mapping subsystem: an MJ rotation sweep over *node*
+//! coordinates picks a capacity-balanced task→node assignment
+//! (heterogeneous ranks-per-node allocations included), pluggable
+//! intra-node strategies place tasks on cores (platform order,
+//! Hilbert-curve order, or greedy `MinVolume` boundary refinement of the
+//! node assignment), and intra-node messages stay off the network per the
+//! Section 3 model. With a [`machine::NumaTopology`] configured
+//! (`HierConfig::numa`), the mapper runs at **depth 3**: a geometric
+//! socket split plus cross-socket refinement inside each node, scored by
+//! the [`objective::NumaAware`] node/socket/core cost model.
 //!
 //! What the mapper *optimizes* is pluggable too: [`objective`] provides
 //! `WeightedHops` (Eqn 3), `MaxLinkLoad` (Eqn 7 routed bottleneck

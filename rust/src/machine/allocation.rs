@@ -15,6 +15,11 @@ use crate::testutil::Rng;
 /// platform's **default rank order** (ALPS placement order on Cray; the
 /// chosen `ABCDET` permutation on BG/Q), so "default mapping" means
 /// `task i -> rank i`.
+///
+/// Allocations may be **heterogeneous**: nodes are allowed to host
+/// different rank counts (build one with [`Allocation::heterogeneous`]).
+/// `ranks_per_node` is then the *nominal* (largest) node size; the exact
+/// per-node structure always lives in `core_node`.
 #[derive(Clone, Debug)]
 pub struct Allocation {
     /// The machine (or job block) network.
@@ -23,17 +28,175 @@ pub struct Allocation {
     pub core_router: Vec<u32>,
     /// Node id per rank (nodes may share a router: 2 nodes/Gemini on XK7).
     pub core_node: Vec<u32>,
-    /// Ranks per node.
+    /// Nominal ranks per node: the exact size of every node on uniform
+    /// allocations, the largest node size on heterogeneous ones.
     pub ranks_per_node: usize,
 }
+
+/// Structured allocation-consistency errors (no silent truncation: a
+/// `ranks_per_node` that does not divide the rank count used to make
+/// `num_nodes` quietly drop the trailing node).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// `num_ranks` is not a multiple of `ranks_per_node`, so a uniform
+    /// node count is undefined.
+    RaggedNodes {
+        num_ranks: usize,
+        ranks_per_node: usize,
+    },
+    /// `ranks_per_node` is zero or does not match the largest node size.
+    BadRanksPerNode { claimed: usize, largest: usize },
+    /// Some node id in `0..num_nodes()` has no ranks.
+    EmptyNode { node: usize },
+    /// Ranks of one node sit on different routers (which would let real
+    /// network traffic be priced as free intra-node traffic).
+    MixedRouters { node: usize },
+    /// A heterogeneous constructor input mismatch.
+    BadShape(String),
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::RaggedNodes {
+                num_ranks,
+                ranks_per_node,
+            } => write!(
+                f,
+                "ranks_per_node {ranks_per_node} does not divide the {num_ranks} ranks"
+            ),
+            AllocError::BadRanksPerNode { claimed, largest } => write!(
+                f,
+                "ranks_per_node {claimed} does not match the largest node size {largest}"
+            ),
+            AllocError::EmptyNode { node } => write!(f, "node {node} has no ranks"),
+            AllocError::MixedRouters { node } => {
+                write!(f, "ranks of node {node} sit on different routers")
+            }
+            AllocError::BadShape(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 impl Allocation {
     pub fn num_ranks(&self) -> usize {
         self.core_router.len()
     }
 
+    /// Exact number of nodes, derived from the per-rank node ids. (This
+    /// used to be `num_ranks / ranks_per_node`, which silently truncated —
+    /// and dropped the trailing node — whenever the rank count was not a
+    /// multiple; see [`Allocation::uniform_num_nodes`] for the checked
+    /// uniform view.)
     pub fn num_nodes(&self) -> usize {
-        self.num_ranks() / self.ranks_per_node
+        self.core_node.iter().map(|&n| n as usize + 1).max().unwrap_or(0)
+    }
+
+    /// The uniform node count `num_ranks / ranks_per_node`, as a structured
+    /// error instead of a silent truncation when `ranks_per_node` does not
+    /// divide the rank count. Heterogeneous allocations should use
+    /// [`Allocation::num_nodes`].
+    pub fn uniform_num_nodes(&self) -> Result<usize, AllocError> {
+        if self.ranks_per_node == 0 || self.num_ranks() % self.ranks_per_node != 0 {
+            return Err(AllocError::RaggedNodes {
+                num_ranks: self.num_ranks(),
+                ranks_per_node: self.ranks_per_node,
+            });
+        }
+        Ok(self.num_ranks() / self.ranks_per_node)
+    }
+
+    /// Rank count of every node (ascending node id).
+    pub fn node_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_nodes()];
+        for &n in &self.core_node {
+            sizes[n as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Whether every node hosts exactly `ranks_per_node` ranks.
+    pub fn is_uniform(&self) -> bool {
+        self.node_sizes().iter().all(|&s| s == self.ranks_per_node)
+    }
+
+    /// Check the allocation invariants the mapper and metrics rely on,
+    /// returning the first violation as a structured error.
+    pub fn validate(&self) -> Result<(), AllocError> {
+        let sizes = self.node_sizes();
+        if let Some(node) = sizes.iter().position(|&s| s == 0) {
+            return Err(AllocError::EmptyNode { node });
+        }
+        let largest = sizes.iter().copied().max().unwrap_or(0);
+        if self.ranks_per_node != largest {
+            return Err(AllocError::BadRanksPerNode {
+                claimed: self.ranks_per_node,
+                largest,
+            });
+        }
+        let mut routers = vec![u32::MAX; sizes.len()];
+        for (rank, &node) in self.core_node.iter().enumerate() {
+            let slot = &mut routers[node as usize];
+            if *slot == u32::MAX {
+                *slot = self.core_router[rank];
+            } else if *slot != self.core_router[rank] {
+                return Err(AllocError::MixedRouters {
+                    node: node as usize,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a **heterogeneous** allocation: node `n` sits at router
+    /// `node_routers[n]` and hosts `node_sizes[n]` ranks, in node-major
+    /// default rank order. `ranks_per_node` is set to the largest node
+    /// size (the nominal capacity the node-level mapper balances against).
+    pub fn heterogeneous(
+        torus: Torus,
+        node_routers: &[u32],
+        node_sizes: &[usize],
+    ) -> Result<Allocation, AllocError> {
+        if node_routers.len() != node_sizes.len() {
+            return Err(AllocError::BadShape(format!(
+                "{} routers for {} node sizes",
+                node_routers.len(),
+                node_sizes.len()
+            )));
+        }
+        if node_sizes.is_empty() {
+            return Err(AllocError::BadShape("no nodes".into()));
+        }
+        if let Some(node) = node_sizes.iter().position(|&s| s == 0) {
+            return Err(AllocError::EmptyNode { node });
+        }
+        if let Some((node, &r)) = node_routers
+            .iter()
+            .enumerate()
+            .find(|&(_, &r)| r as usize >= torus.num_routers())
+        {
+            return Err(AllocError::BadShape(format!(
+                "node {node}: router {r} outside the {}-router torus",
+                torus.num_routers()
+            )));
+        }
+        let total: usize = node_sizes.iter().sum();
+        let mut core_router = Vec::with_capacity(total);
+        let mut core_node = Vec::with_capacity(total);
+        for (n, (&router, &size)) in node_routers.iter().zip(node_sizes).enumerate() {
+            for _ in 0..size {
+                core_router.push(router);
+                core_node.push(n as u32);
+            }
+        }
+        Ok(Allocation {
+            torus,
+            core_router,
+            core_node,
+            ranks_per_node: node_sizes.iter().copied().max().unwrap(),
+        })
     }
 
     /// Router coordinates of every rank as f64 points — the `pcoords` input
@@ -286,6 +449,80 @@ mod tests {
             }
         }
         assert_eq!(seen, a.num_ranks());
+    }
+
+    #[test]
+    fn num_nodes_is_exact_not_truncated() {
+        // 10 ranks over nodes of sizes 4/3/3 with nominal ranks_per_node 4:
+        // the old `num_ranks / ranks_per_node` would report 2 nodes and
+        // silently drop node 2; the derived count is exact.
+        let a = Allocation::heterogeneous(Torus::torus(&[4]), &[0, 1, 2], &[4, 3, 3]).unwrap();
+        assert_eq!(a.num_ranks(), 10);
+        assert_eq!(a.num_nodes(), 3);
+        assert_eq!(a.node_sizes(), vec![4, 3, 3]);
+        assert!(!a.is_uniform());
+        assert!(a.validate().is_ok());
+        // The uniform view errors instead of truncating.
+        assert_eq!(
+            a.uniform_num_nodes(),
+            Err(AllocError::RaggedNodes {
+                num_ranks: 10,
+                ranks_per_node: 4
+            })
+        );
+        // Node views stay consistent on heterogeneous shapes.
+        assert_eq!(a.node_routers(), vec![0, 1, 2]);
+        let groups = a.ranks_by_node();
+        assert_eq!(groups.iter().map(Vec::len).collect::<Vec<_>>(), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn uniform_num_nodes_accepts_divisible() {
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET");
+        assert_eq!(a.uniform_num_nodes(), Ok(32));
+        assert!(a.is_uniform());
+        assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn heterogeneous_rejects_bad_shapes() {
+        let torus = Torus::torus(&[4]);
+        assert!(matches!(
+            Allocation::heterogeneous(torus.clone(), &[0, 1], &[2]),
+            Err(AllocError::BadShape(_))
+        ));
+        assert!(matches!(
+            Allocation::heterogeneous(torus.clone(), &[0, 1], &[2, 0]),
+            Err(AllocError::EmptyNode { node: 1 })
+        ));
+        assert!(matches!(
+            Allocation::heterogeneous(torus, &[0, 9], &[2, 2]),
+            Err(AllocError::BadShape(_))
+        ));
+    }
+
+    #[test]
+    fn validate_reports_structured_errors() {
+        let mut a =
+            Allocation::heterogeneous(Torus::torus(&[4]), &[0, 1], &[2, 2]).unwrap();
+        a.ranks_per_node = 3;
+        assert_eq!(
+            a.validate(),
+            Err(AllocError::BadRanksPerNode {
+                claimed: 3,
+                largest: 2
+            })
+        );
+        a.ranks_per_node = 2;
+        a.core_router[1] = 2; // split node 0 across routers
+        assert_eq!(a.validate(), Err(AllocError::MixedRouters { node: 0 }));
+        // Errors render as readable messages.
+        assert!(AllocError::RaggedNodes {
+            num_ranks: 10,
+            ranks_per_node: 4
+        }
+        .to_string()
+        .contains("does not divide"));
     }
 
     #[test]

@@ -14,12 +14,21 @@
 //! * **IBM BG/Q (Mira)** — 5D torus, uniform links, E dimension of length 2,
 //!   contiguous power-of-two block allocations, configurable `ABCDET`-style
 //!   rank orderings.
+//!
+//! Beyond the paper's network-only model, [`numa`] adds the cost structure
+//! *inside* a node — sockets per node, ranks per socket, per-level unit
+//! costs — which the depth-3 hierarchical mapper and the `NumaAware`
+//! objective consume. Allocations may be heterogeneous (different rank
+//! counts per node, [`Allocation::heterogeneous`]); consistency violations
+//! surface as structured [`AllocError`]s instead of silent truncation.
 
 pub mod allocation;
+pub mod numa;
 pub mod presets;
 pub mod rank_order;
 pub mod torus;
 
-pub use allocation::{Allocation, SparseAllocator};
+pub use allocation::{AllocError, Allocation, SparseAllocator};
+pub use numa::{NumaNodeCosts, NumaTopology};
 pub use presets::{bgq_block, cray_xk7, titan_full};
 pub use torus::{BwModel, Torus};

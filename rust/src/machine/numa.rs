@@ -1,0 +1,204 @@
+//! NUMA distance model: the cost structure *inside* a node.
+//!
+//! The paper's Section 3 model prices intra-node messages at zero — correct
+//! for the network, but real nodes are not flat: the XK7's Interlagos
+//! processor is two NUMA dies bridged by HyperTransport, so a message
+//! between ranks on different dies crosses a link that same-die messages
+//! never touch. [`NumaTopology`] captures that third level with per-level
+//! unit costs, in the same spirit as the tree-distance models of the
+//! shared-memory hierarchical-mapping line of work (arXiv:2504.01726,
+//! arXiv:1702.04164):
+//!
+//! * **node level** — `hop_cost` per network hop per unit message weight
+//!   (1.0 keeps the network term equal to the Section 3 WeightedHops);
+//! * **socket level** — `socket_cost` per unit weight for messages between
+//!   ranks of the same node but different sockets;
+//! * **core level** — `core_cost` per unit weight for messages within one
+//!   socket (usually 0: shared L3 traffic is treated as free).
+//!
+//! Ranks are assigned to sockets by their position in the node's default
+//! rank order: the first `ranks_per_socket` ranks of a node form socket 0,
+//! the next form socket 1, and so on (positions past
+//! `sockets_per_node * ranks_per_socket` — possible on heterogeneous
+//! allocations — clamp into the last socket). This matches how MPI
+//! launchers fill NUMA domains in core order.
+//!
+//! The model is consumed in three places: the depth-3 hierarchical mapper
+//! ([`crate::hier::HierConfig::numa`]), the [`crate::objective::NumaAware`]
+//! objective that scores finished mappings, and the node-level rotation
+//! sweep, which prices still-unsplit intra-node edges at `socket_cost`
+//! (the upper bound the socket-level split then tightens) via
+//! [`NumaTopology::node_level_costs`].
+
+use super::allocation::Allocation;
+
+/// Per-level NUMA cost model of one compute node. `Copy` so it travels
+/// through the `Copy` sweep configuration like the objective handle does.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumaTopology {
+    /// NUMA domains per node (XK7 Interlagos: 2 dies).
+    pub sockets_per_node: usize,
+    /// Ranks per NUMA domain in default rank order.
+    pub ranks_per_socket: usize,
+    /// Cost per unit message weight between sockets of one node.
+    pub socket_cost: f64,
+    /// Cost per unit message weight within one socket (usually 0).
+    pub core_cost: f64,
+    /// Cost per network hop per unit message weight for inter-node
+    /// messages (1.0 = the Section 3 WeightedHops scale).
+    pub hop_cost: f64,
+}
+
+/// Node-level view of a [`NumaTopology`]: what the node-level rotation
+/// sweep and `MinVolume` refinement price edges with *before* the socket
+/// split exists — inter-node edges at `hop` per hop, intra-node edges at
+/// the flat `socket` upper bound.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumaNodeCosts {
+    /// Cost per network hop per unit weight (inter-node edges).
+    pub hop: f64,
+    /// Flat cost per unit weight for intra-node edges.
+    pub socket: f64,
+}
+
+impl NumaTopology {
+    /// Build a topology, checking the invariants the mapper relies on.
+    pub fn new(
+        sockets_per_node: usize,
+        ranks_per_socket: usize,
+        socket_cost: f64,
+        core_cost: f64,
+        hop_cost: f64,
+    ) -> NumaTopology {
+        assert!(sockets_per_node >= 1, "need at least one socket per node");
+        assert!(ranks_per_socket >= 1, "need at least one rank per socket");
+        assert!(
+            socket_cost.is_finite() && core_cost.is_finite() && hop_cost.is_finite(),
+            "NUMA costs must be finite"
+        );
+        assert!(
+            socket_cost >= core_cost && core_cost >= 0.0,
+            "costs must satisfy socket_cost >= core_cost >= 0 \
+             (got socket {socket_cost}, core {core_cost})"
+        );
+        assert!(hop_cost > 0.0, "hop_cost must be positive");
+        NumaTopology {
+            sockets_per_node,
+            ranks_per_socket,
+            socket_cost,
+            core_cost,
+            hop_cost,
+        }
+    }
+
+    /// Cray XK7 node: one AMD Opteron 6274 (Interlagos) = 2 NUMA dies of 8
+    /// integer cores each. The cross-die HyperTransport hop is priced at
+    /// half a Gemini network hop — a model parameter, not a measurement.
+    pub fn xk7() -> NumaTopology {
+        NumaTopology::new(2, 8, 0.5, 0.0, 1.0)
+    }
+
+    /// IBM BG/Q node: a single 16-core A2 chip with a crossbar to a shared
+    /// L2 — one NUMA domain, so the socket level degenerates and depth-3
+    /// mapping reduces to the two-level mapper.
+    pub fn bgq() -> NumaTopology {
+        NumaTopology::new(1, 16, 0.0, 0.0, 1.0)
+    }
+
+    /// Parse a service/CLI preset name.
+    pub fn preset(name: &str) -> Option<NumaTopology> {
+        match name.to_ascii_lowercase().as_str() {
+            "xk7" => Some(NumaTopology::xk7()),
+            "bgq" => Some(NumaTopology::bgq()),
+            _ => None,
+        }
+    }
+
+    /// Nominal ranks per node implied by the socket grid.
+    pub fn ranks_per_node(&self) -> usize {
+        self.sockets_per_node * self.ranks_per_socket
+    }
+
+    /// Socket of the rank at position `pos` in its node's default rank
+    /// order. Positions past the socket grid clamp into the last socket.
+    #[inline]
+    pub fn socket_of_pos(&self, pos: usize) -> usize {
+        (pos / self.ranks_per_socket).min(self.sockets_per_node - 1)
+    }
+
+    /// Within-node socket index of every rank of `alloc`, by position in
+    /// each node's default rank order (the assignment the depth-3 mapper
+    /// and [`crate::objective::eval_numa`] agree on).
+    pub fn socket_of_ranks(&self, alloc: &Allocation) -> Vec<u32> {
+        let mut out = vec![0u32; alloc.num_ranks()];
+        for group in alloc.ranks_by_node() {
+            for (pos, &r) in group.iter().enumerate() {
+                out[r as usize] = self.socket_of_pos(pos) as u32;
+            }
+        }
+        out
+    }
+
+    /// The node-level pricing the sweep and node refinement use while the
+    /// socket split is still undecided (see [`NumaNodeCosts`]).
+    pub fn node_level_costs(&self) -> NumaNodeCosts {
+        NumaNodeCosts {
+            hop: self.hop_cost,
+            socket: self.socket_cost,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{SparseAllocator, Torus};
+
+    #[test]
+    fn presets_are_consistent() {
+        let x = NumaTopology::xk7();
+        assert_eq!((x.sockets_per_node, x.ranks_per_socket), (2, 8));
+        assert_eq!(x.ranks_per_node(), 16);
+        let b = NumaTopology::bgq();
+        assert_eq!(b.ranks_per_node(), 16);
+        assert_eq!(b.socket_cost, 0.0);
+        assert_eq!(NumaTopology::preset("xk7"), Some(x));
+        assert_eq!(NumaTopology::preset("BGQ"), Some(b));
+        assert_eq!(NumaTopology::preset("knl"), None);
+    }
+
+    #[test]
+    fn socket_positions_clamp() {
+        let t = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        assert_eq!(t.socket_of_pos(0), 0);
+        assert_eq!(t.socket_of_pos(3), 0);
+        assert_eq!(t.socket_of_pos(4), 1);
+        assert_eq!(t.socket_of_pos(7), 1);
+        // Beyond the grid (heterogeneous over-full node): last socket.
+        assert_eq!(t.socket_of_pos(11), 1);
+    }
+
+    #[test]
+    fn rank_sockets_follow_node_position() {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[4, 4, 4]),
+            nodes_per_router: 2,
+            ranks_per_node: 8,
+            occupancy: 0.2,
+        }
+        .allocate(6, 3);
+        let t = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        let socks = t.socket_of_ranks(&alloc);
+        for group in alloc.ranks_by_node() {
+            for (pos, &r) in group.iter().enumerate() {
+                assert_eq!(socks[r as usize] as usize, pos / 4);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "socket_cost >= core_cost")]
+    fn rejects_inverted_costs() {
+        NumaTopology::new(2, 8, 0.1, 0.5, 1.0);
+    }
+}

@@ -37,7 +37,7 @@ use super::{
 };
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
-use crate::machine::Allocation;
+use crate::machine::{Allocation, NumaNodeCosts};
 use crate::metrics::native::batched_weighted_hops_native_par;
 use crate::metrics::LinkAccumulator;
 use crate::mj::MjScratch;
@@ -139,6 +139,13 @@ pub struct SweepConfig {
     /// f32 kernel backend (the paper's path); routed objectives score
     /// through the f64 routed-link evaluator.
     pub objective: ObjectiveKind,
+    /// NUMA node-level pricing (the depth-3 hierarchical mapper's node
+    /// sweep): inter-node edges cost `hop` per network hop, intra-node
+    /// edges a flat `socket` — the upper bound the later socket split
+    /// tightens. Composes only with the `WeightedHops` objective; scored
+    /// sequentially in f64 per candidate, so the sweep stays bit-identical
+    /// at every thread count.
+    pub numa: Option<NumaNodeCosts>,
 }
 
 impl Default for SweepConfig {
@@ -148,6 +155,7 @@ impl Default for SweepConfig {
             chunk_edges: 32768,
             threads: 0,
             objective: ObjectiveKind::WeightedHops,
+            numa: None,
         }
     }
 }
@@ -237,6 +245,13 @@ enum CandidateScorer<'a> {
         costs: LinkCosts,
         obj: &'static dyn Objective,
     },
+    /// NUMA node-level pricing ([`SweepConfig::numa`]): a sequential f64
+    /// pass per candidate, like the routed arm.
+    Numa {
+        graph: &'a TaskGraph,
+        alloc: &'a Allocation,
+        costs: NumaNodeCosts,
+    },
 }
 
 impl<'a> CandidateScorer<'a> {
@@ -245,6 +260,17 @@ impl<'a> CandidateScorer<'a> {
         alloc: &'a Allocation,
         sweep: &SweepConfig,
     ) -> CandidateScorer<'a> {
+        if let Some(costs) = sweep.numa {
+            assert!(
+                sweep.objective == ObjectiveKind::WeightedHops,
+                "NUMA node-level pricing composes with the WeightedHops objective only"
+            );
+            return CandidateScorer::Numa {
+                graph,
+                alloc,
+                costs,
+            };
+        }
         match sweep.objective {
             ObjectiveKind::WeightedHops => {
                 CandidateScorer::Whops(BatchScorer::new(graph, alloc, sweep.chunk_edges))
@@ -279,8 +305,43 @@ impl<'a> CandidateScorer<'a> {
                     .get_or_insert_with(|| LinkAccumulator::new(&alloc.torus));
                 obj.score_one(graph, mapping, alloc, costs, acc)
             }
+            CandidateScorer::Numa {
+                graph,
+                alloc,
+                costs,
+            } => numa_node_score(graph, mapping, alloc, *costs),
         }
     }
+}
+
+/// NUMA pricing of a node-level candidate: inter-node edges at `hop` per
+/// network hop, intra-node edges at the flat `socket` upper bound (the
+/// socket split is not decided yet at sweep time). One sequential f64 pass
+/// in edge order — a pure function of the mapping, so sweeps stay
+/// bit-identical at every thread count.
+pub fn numa_node_score(
+    graph: &TaskGraph,
+    mapping: &[u32],
+    alloc: &Allocation,
+    costs: NumaNodeCosts,
+) -> f64 {
+    assert_eq!(mapping.len(), graph.num_tasks);
+    let torus = &alloc.torus;
+    let mut total = 0f64;
+    for e in &graph.edges {
+        let ra = mapping[e.u as usize] as usize;
+        let rb = mapping[e.v as usize] as usize;
+        if alloc.core_node[ra] == alloc.core_node[rb] {
+            total += costs.socket * e.w;
+        } else {
+            let h = torus.hop_dist_ids(
+                alloc.core_router[ra] as usize,
+                alloc.core_router[rb] as usize,
+            );
+            total += costs.hop * e.w * h as f64;
+        }
+    }
+    total
 }
 
 /// Per-sweep scoring context: everything that depends only on
@@ -678,6 +739,48 @@ mod tests {
                 res.scores[res.chosen]
             );
         }
+    }
+
+    #[test]
+    fn sweep_under_numa_pricing_picks_its_own_minimum() {
+        // With numa node costs set, the chosen candidate minimizes the
+        // numa_node_score (intra-node edges at the flat socket cost), and
+        // the winning score matches a re-evaluation of the mapping.
+        let g = stencil_graph(&[2, 16], false, 1.0);
+        // 16 nodes of 2 ranks each on a 16-ring.
+        let alloc = Allocation {
+            torus: Torus::torus(&[16]),
+            core_router: (0..32u32).map(|r| r / 2).collect(),
+            core_node: (0..32u32).map(|r| r / 2).collect(),
+            ranks_per_node: 2,
+        };
+        let costs = NumaNodeCosts {
+            hop: 1.0,
+            socket: 0.5,
+        };
+        let sweep = SweepConfig {
+            numa: Some(costs),
+            ..Default::default()
+        };
+        let map_cfg = MapConfig {
+            longest_dim: false,
+            ..Default::default()
+        };
+        let res = rotation_sweep(
+            &g,
+            &g.coords,
+            &alloc.proc_coords(),
+            &alloc,
+            &map_cfg,
+            &sweep,
+            &NativeBackend,
+        );
+        let min = res.scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(res.scores[res.chosen], min);
+        assert_eq!(
+            res.scores[res.chosen],
+            numa_node_score(&g, &res.task_to_rank, &alloc, costs)
+        );
     }
 
     #[test]

@@ -44,14 +44,30 @@
 //! Everything that scores mappings now goes through this module: the
 //! rotation sweep (`SweepConfig::objective`), `MinVolume` refinement
 //! (`HierConfig::objective`), the coordinator's `objective` experiment, the
-//! service (`"objective"` request field), and `bench_objective`. Deeper
-//! NUMA levels or heterogeneous-allocation costs plug in as further
-//! `Objective` implementations without touching those layers.
+//! service (`"objective"` request field), and `bench_objective`.
+//!
+//! The promised deeper-level objective now exists: [`numa::NumaAware`]
+//! prices node/socket/core levels from a
+//! [`crate::machine::NumaTopology`] — inter-node edges per network hop,
+//! same-node cross-socket edges at a flat socket cost, same-socket edges
+//! at the (usually zero) core cost. It is selected structurally
+//! (`HierConfig::numa` / the service `"numa"` field) rather than by
+//! [`ObjectiveKind`], because its value depends on the allocation's socket
+//! structure, which link statistics alone cannot express; the depth-3
+//! hierarchical mapper optimizes it end to end and
+//! [`numa::placement_swap_gain`] provides the exact O(degree) incremental
+//! swap gains its socket-level refinement runs on.
+
+pub mod numa;
 
 use crate::apps::TaskGraph;
 use crate::machine::{Allocation, Torus};
 use crate::metrics::{eval_hops, LinkAccumulator, Metrics};
 use crate::par::{self, Parallelism};
+
+pub use numa::{
+    eval_numa, eval_numa_placement, placement_swap_gain, NumaAware, NumaMetrics,
+};
 
 /// Weight of the bottleneck (max) term in [`CongestionBlend`]; the rest is
 /// the average-link-latency term.

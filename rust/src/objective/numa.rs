@@ -1,0 +1,325 @@
+//! The NUMA-aware objective: three-level pricing of a mapping.
+//!
+//! [`NumaAware`] extends the Section 3 model one level below the network:
+//! a mapping is charged `hop_cost` per network hop per unit weight for
+//! inter-node edges (exactly WeightedHops when `hop_cost == 1`), a flat
+//! `socket_cost` per unit weight for edges between ranks of the same node
+//! but different sockets, and `core_cost` (usually 0) within a socket.
+//! The socket of a rank comes from its position in the node's default rank
+//! order ([`NumaTopology::socket_of_ranks`]), so evaluation needs only the
+//! allocation plus the topology — no extra per-rank metadata.
+//!
+//! Two evaluation granularities:
+//!
+//! * **Final mappings** — [`eval_numa`] prices a task→rank assignment
+//!   (the [`Objective`] impl dispatches here), reporting the per-level
+//!   breakdown as [`NumaMetrics`].
+//! * **Placements** — [`eval_numa_placement`] prices a task-level
+//!   `(node, socket)` placement before ranks are assigned (placement
+//!   within a socket never changes the value, so the depth-3 mapper can
+//!   refine sockets first and hand out ranks later), and
+//!   [`placement_swap_gain`] computes the exact objective gain of swapping
+//!   two tasks' placements by re-pricing only their incident edges —
+//!   O(degree) per candidate swap, the engine behind the socket-level
+//!   `MinVolume` refinement. A property test pins the incremental gains
+//!   against full [`eval_numa_placement`] re-evaluation.
+
+use super::{LinkSummary, Objective};
+use crate::apps::TaskGraph;
+use crate::machine::{Allocation, NumaTopology, Torus};
+use crate::metrics::LinkAccumulator;
+use crate::objective::LinkCosts;
+
+/// Per-level breakdown of a mapping's NUMA-aware cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NumaMetrics {
+    /// Σ over inter-node edges of `w · hops` (the Section 3 WeightedHops
+    /// restricted to the network).
+    pub network_weighted_hops: f64,
+    /// Σ over same-node, cross-socket edges of `w`.
+    pub socket_weight: f64,
+    /// Σ over same-socket edges of `w`.
+    pub core_weight: f64,
+    /// `hop_cost · network + socket_cost · socket + core_cost · core`.
+    pub value: f64,
+}
+
+/// Cost of one edge between placements `(na, sa)` and `(nb, sb)` under
+/// `topo` (unit weight): hop-priced network distance across nodes, flat
+/// socket/core cost inside a node.
+#[inline]
+fn pair_cost(
+    topo: &NumaTopology,
+    torus: &Torus,
+    node_routers: &[u32],
+    na: u32,
+    sa: u32,
+    nb: u32,
+    sb: u32,
+) -> f64 {
+    if na == nb {
+        if sa == sb {
+            topo.core_cost
+        } else {
+            topo.socket_cost
+        }
+    } else {
+        let h = torus.hop_dist_ids(
+            node_routers[na as usize] as usize,
+            node_routers[nb as usize] as usize,
+        );
+        topo.hop_cost * h as f64
+    }
+}
+
+/// Price a task-level `(node, socket)` placement: `node_of[t]` is the node
+/// of task `t`, `sock_of[t]` its within-node socket, and node `x` sits at
+/// router `node_routers[x]`. One sequential pass in edge order.
+pub fn eval_numa_placement(
+    graph: &TaskGraph,
+    node_of: &[u32],
+    sock_of: &[u32],
+    node_routers: &[u32],
+    torus: &Torus,
+    topo: &NumaTopology,
+) -> NumaMetrics {
+    assert_eq!(node_of.len(), graph.num_tasks);
+    assert_eq!(sock_of.len(), graph.num_tasks);
+    let mut m = NumaMetrics::default();
+    for e in &graph.edges {
+        let (u, v) = (e.u as usize, e.v as usize);
+        let (na, nb) = (node_of[u], node_of[v]);
+        if na != nb {
+            m.network_weighted_hops += e.w
+                * torus.hop_dist_ids(
+                    node_routers[na as usize] as usize,
+                    node_routers[nb as usize] as usize,
+                ) as f64;
+        } else if sock_of[u] != sock_of[v] {
+            m.socket_weight += e.w;
+        } else {
+            m.core_weight += e.w;
+        }
+    }
+    m.value = topo.hop_cost * m.network_weighted_hops
+        + topo.socket_cost * m.socket_weight
+        + topo.core_cost * m.core_weight;
+    m
+}
+
+/// Price a finished task→rank mapping: nodes and sockets are derived from
+/// the allocation (socket = position in the node's default rank order).
+pub fn eval_numa(
+    graph: &TaskGraph,
+    task_to_rank: &[u32],
+    alloc: &Allocation,
+    topo: &NumaTopology,
+) -> NumaMetrics {
+    assert_eq!(task_to_rank.len(), graph.num_tasks);
+    let rank_sock = topo.socket_of_ranks(alloc);
+    let node_of: Vec<u32> = task_to_rank
+        .iter()
+        .map(|&r| alloc.core_node[r as usize])
+        .collect();
+    let sock_of: Vec<u32> = task_to_rank.iter().map(|&r| rank_sock[r as usize]).collect();
+    eval_numa_placement(
+        graph,
+        &node_of,
+        &sock_of,
+        &alloc.node_routers(),
+        &alloc.torus,
+        topo,
+    )
+}
+
+/// Exact NUMA-aware objective gain (positive = improvement) of swapping
+/// the placements of tasks `u` and `b`, re-pricing only their incident
+/// edges. `nbrs_u`/`nbrs_b` yield `(neighbor task, weight)` pairs; the
+/// direct edge `u–b` (if any) swaps symmetric endpoints, so its cost is
+/// unchanged and skipped. Works for same-node swaps (where only the
+/// socket/core terms move) and cross-node swaps alike; a property test
+/// pins it against full [`eval_numa_placement`] re-evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn placement_swap_gain(
+    topo: &NumaTopology,
+    torus: &Torus,
+    node_routers: &[u32],
+    node_of: &[u32],
+    sock_of: &[u32],
+    u: usize,
+    b: usize,
+    nbrs_u: impl Iterator<Item = (u32, f64)>,
+    nbrs_b: impl Iterator<Item = (u32, f64)>,
+) -> f64 {
+    let (nu, su) = (node_of[u], sock_of[u]);
+    let (nb, sb) = (node_of[b], sock_of[b]);
+    let mut gain = 0f64;
+    for (n, w) in nbrs_u {
+        if n as usize == b {
+            continue;
+        }
+        let (nx, sx) = (node_of[n as usize], sock_of[n as usize]);
+        gain += w
+            * (pair_cost(topo, torus, node_routers, nu, su, nx, sx)
+                - pair_cost(topo, torus, node_routers, nb, sb, nx, sx));
+    }
+    for (n, w) in nbrs_b {
+        if n as usize == u {
+            continue;
+        }
+        let (nx, sx) = (node_of[n as usize], sock_of[n as usize]);
+        gain += w
+            * (pair_cost(topo, torus, node_routers, nb, sb, nx, sx)
+                - pair_cost(topo, torus, node_routers, nu, su, nx, sx));
+    }
+    gain
+}
+
+/// The NUMA-aware [`Objective`]: node/socket/core pricing of a task→rank
+/// mapping from a [`NumaTopology`]. Unlike the routed objectives it needs
+/// the socket structure, not per-link loads, so it stays off the routing
+/// path; [`Objective::reduce`] (which only sees link statistics) reports
+/// the network term alone — use [`Objective::score_one`] / [`eval_numa`]
+/// for the full three-level value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumaAware {
+    pub topo: NumaTopology,
+}
+
+impl NumaAware {
+    pub fn new(topo: NumaTopology) -> NumaAware {
+        NumaAware { topo }
+    }
+}
+
+impl Objective for NumaAware {
+    fn name(&self) -> &'static str {
+        "numa"
+    }
+
+    fn needs_routing(&self) -> bool {
+        false
+    }
+
+    fn reduce(&self, link: &LinkSummary) -> f64 {
+        // Link statistics carry no socket structure: only the network term
+        // is derivable here.
+        self.topo.hop_cost * link.weighted_hops
+    }
+
+    fn score_one(
+        &self,
+        graph: &TaskGraph,
+        mapping: &[u32],
+        alloc: &Allocation,
+        _costs: &LinkCosts,
+        _scratch: &mut LinkAccumulator,
+    ) -> f64 {
+        eval_numa(graph, mapping, alloc, &self.topo).value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Edge, TaskGraph};
+    use crate::geom::Coords;
+    use crate::machine::Allocation;
+    use crate::par::Parallelism;
+
+    /// 2 nodes x 2 sockets x 2 ranks on a 4-ring (routers 0 and 2).
+    fn alloc() -> Allocation {
+        Allocation::heterogeneous(Torus::torus(&[4]), &[0, 2], &[4, 4]).unwrap()
+    }
+
+    fn topo() -> NumaTopology {
+        NumaTopology::new(2, 2, 0.5, 0.125, 1.0)
+    }
+
+    fn graph() -> TaskGraph {
+        // Edges: (0,1) same socket, (0,2) cross socket, (0,4) cross node
+        // (2 hops on the 4-ring), (5,7) cross socket on node 1.
+        TaskGraph {
+            num_tasks: 8,
+            edges: vec![
+                Edge { u: 0, v: 1, w: 3.0 },
+                Edge { u: 0, v: 2, w: 2.0 },
+                Edge { u: 0, v: 4, w: 1.5 },
+                Edge { u: 5, v: 7, w: 4.0 },
+            ],
+            coords: Coords::from_axes(vec![(0..8).map(|i| i as f64).collect()]),
+        }
+    }
+
+    #[test]
+    fn eval_prices_all_three_levels() {
+        let m = eval_numa(&graph(), &(0..8u32).collect::<Vec<_>>(), &alloc(), &topo());
+        assert_eq!(m.core_weight, 3.0);
+        assert_eq!(m.socket_weight, 6.0);
+        assert_eq!(m.network_weighted_hops, 1.5 * 2.0);
+        assert_eq!(m.value, 1.0 * 3.0 + 0.5 * 6.0 + 0.125 * 3.0);
+    }
+
+    #[test]
+    fn objective_impl_matches_eval() {
+        let g = graph();
+        let a = alloc();
+        let obj = NumaAware::new(topo());
+        assert_eq!(obj.name(), "numa");
+        assert!(!obj.needs_routing());
+        let mapping: Vec<u32> = (0..8u32).rev().collect();
+        let scores = obj.score_batch(&g, &[mapping.clone()], &a, Parallelism::sequential());
+        assert_eq!(scores[0], eval_numa(&g, &mapping, &a, &topo()).value);
+    }
+
+    #[test]
+    fn bgq_topology_reduces_to_internode_whops() {
+        // One socket, zero socket/core cost: the value is exactly the
+        // inter-node WeightedHops of the mapping.
+        use crate::metrics::eval_hops;
+        let g = graph();
+        let a = alloc();
+        let t = NumaTopology::bgq();
+        let mapping: Vec<u32> = (0..8u32).collect();
+        let m = eval_numa(&g, &mapping, &a, &t);
+        assert_eq!(m.socket_weight, 0.0);
+        assert_eq!(m.value, eval_hops(&g, &mapping, &a).weighted_hops);
+    }
+
+    #[test]
+    fn swap_gain_matches_full_reevaluation() {
+        let g = graph();
+        let a = alloc();
+        let t = topo();
+        let routers = a.node_routers();
+        let mut node_of: Vec<u32> = (0..8).map(|i| (i / 4) as u32).collect();
+        let mut sock_of: Vec<u32> = (0..8).map(|i| ((i / 2) % 2) as u32).collect();
+        let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); 8];
+        for e in &g.edges {
+            adj[e.u as usize].push((e.v, e.w));
+            adj[e.v as usize].push((e.u, e.w));
+        }
+        for (u, b) in [(0usize, 2usize), (0, 4), (1, 7), (3, 5)] {
+            let before = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.torus, &t);
+            let gain = placement_swap_gain(
+                &t,
+                &a.torus,
+                &routers,
+                &node_of,
+                &sock_of,
+                u,
+                b,
+                adj[u].iter().copied(),
+                adj[b].iter().copied(),
+            );
+            node_of.swap(u, b);
+            sock_of.swap(u, b);
+            let after = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.torus, &t);
+            assert!(
+                (gain - (before.value - after.value)).abs() < 1e-12,
+                "swap ({u},{b}): gain {gain} vs delta {}",
+                before.value - after.value
+            );
+        }
+    }
+}

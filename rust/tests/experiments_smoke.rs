@@ -136,6 +136,43 @@ fn objective_reports_both_metrics_side_by_side() {
 }
 
 #[test]
+fn numa_compares_depths_on_both_presets() {
+    let tables = experiments::run("numa", &ctx()).unwrap();
+    assert_eq!(tables.len(), 2);
+    assert!(tables[0].title.contains("MiniGhost"));
+    assert!(tables[1].title.contains("HOMME"));
+    for t in &tables {
+        // Rows come in (depth-2, depth-3) pairs; depth-2 normalizes 1.00.
+        assert_eq!(t.rows.len() % 2, 0, "{}", t.title);
+        for chunk in t.rows.chunks(2) {
+            assert_eq!(chunk[0][2], "depth-2");
+            assert_eq!(chunk[1][2], "depth-3");
+            assert_eq!(chunk[0][6], "1.00");
+            assert_eq!(chunk[0][7], "1.00");
+            for row in chunk {
+                for col in [3, 4, 5] {
+                    let v = parse(&row[col]);
+                    assert!(v.is_finite() && v >= 0.0, "bad value {v} in {row:?}");
+                }
+                for col in [6, 7] {
+                    let v = parse(&row[col]);
+                    assert!(v.is_finite() && v >= 0.0, "bad ratio {v} in {row:?}");
+                }
+            }
+            // The explicit socket split must not lose badly to socket-blind
+            // placement on the NUMA objective (it typically wins outright).
+            let value_ratio = parse(&chunk[1][6]);
+            assert!(
+                value_ratio < 1.15,
+                "{}: depth-3 NUMA value ratio {value_ratio} way above depth-2 ({:?})",
+                t.title,
+                chunk[1]
+            );
+        }
+    }
+}
+
+#[test]
 fn hier_compares_both_presets_against_flat() {
     let tables = experiments::run("hier", &ctx()).unwrap();
     assert_eq!(tables.len(), 2);

@@ -276,6 +276,72 @@ fn hier_bijective_and_beats_default_on_minighost() {
 }
 
 #[test]
+fn numa_depth3_end_to_end_on_minighost() {
+    // Depth-3 contract end-to-end on the XK7 Interlagos node model:
+    // bijection, node- and socket-respecting, the cross-socket refinement
+    // never loses to the raw geometric split, and the NumaAware value is
+    // exactly its per-level recomposition.
+    use taskmap::hier::socket::split_sockets;
+    use taskmap::machine::NumaTopology;
+    use taskmap::objective::{eval_numa, eval_numa_placement};
+    use taskmap::par::Parallelism;
+    let mg = MiniGhost::weak_scaling([8, 8, 8]);
+    let graph = mg.graph();
+    let alloc = titan_small().allocate(512 / 16, 7);
+    let topo = NumaTopology::xk7();
+    let cfg = HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: 8,
+        numa: Some(topo),
+        ..HierConfig::default()
+    };
+    let m = map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+    let mut s = m.task_to_rank.clone();
+    s.sort_unstable();
+    assert_eq!(s, (0..512u32).collect::<Vec<_>>());
+    let socks = m.task_to_socket.as_ref().expect("depth 3 reports sockets");
+    let rank_socks = topo.socket_of_ranks(&alloc);
+    for t in 0..512 {
+        let rank = m.task_to_rank[t] as usize;
+        assert_eq!(alloc.core_node[rank], m.task_to_node[t], "task {t}");
+        assert_eq!(rank_socks[rank], socks[t], "task {t}");
+    }
+    // Each 16-rank node splits 8/8 across its two dies.
+    let mut per_socket = vec![0usize; alloc.num_nodes() * 2];
+    for t in 0..512 {
+        per_socket[m.task_to_node[t] as usize * 2 + socks[t] as usize] += 1;
+    }
+    assert!(per_socket.iter().all(|&c| c == 8), "{per_socket:?}");
+    // The refined sockets must not be worse than the raw geometric split
+    // (refinement applies only strictly-improving swaps).
+    let routers = alloc.node_routers();
+    let raw = split_sockets(
+        &graph.coords,
+        &m.task_to_node,
+        &alloc,
+        &topo,
+        Parallelism::auto(),
+    );
+    let cross =
+        |sk: &[u32]| {
+            eval_numa_placement(&graph, &m.task_to_node, sk, &routers, &alloc.torus, &topo)
+                .socket_weight
+        };
+    assert!(
+        cross(socks) <= cross(&raw) + 1e-9,
+        "refined {} > raw split {}",
+        cross(socks),
+        cross(&raw)
+    );
+    // The NumaAware value recomposes exactly from its breakdown.
+    let nm = eval_numa(&graph, &m.task_to_rank, &alloc, &topo);
+    let recomposed = topo.hop_cost * nm.network_weighted_hops
+        + topo.socket_cost * nm.socket_weight
+        + topo.core_cost * nm.core_weight;
+    assert_eq!(nm.value, recomposed);
+}
+
+#[test]
 fn hier_homme_bijective_on_titan_preset() {
     // One rank per element (the experiment's HOMME configuration).
     let homme = Homme::new(8); // 384 elements

@@ -720,6 +720,218 @@ fn prop_congestion_swap_gains_equal_full_reevaluation() {
 }
 
 #[test]
+fn prop_numa_depth3_parallel_bit_identical_and_bijective() {
+    // The full three-level mapper — NUMA node sweep, NUMA MinVolume
+    // refinement, socket split, cross-socket refinement, socket-aware
+    // placement — must reproduce the sequential result exactly at every
+    // thread budget, produce a bijection when tnum == ranks, and respect
+    // both the node and the position-derived socket assignment.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::machine::NumaTopology;
+    use taskmap::mapping::rotations::NativeBackend;
+    check("numa depth-3 parallel == sequential", 8, |rng| {
+        let sockets = rng.range(1, 3);
+        let rps = rng.range(1, 4);
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[5, 5, 5]),
+            nodes_per_router: 2,
+            ranks_per_node: sockets * rps,
+            occupancy: rng.f64_range(0.0, 0.3),
+        }
+        .allocate(rng.range(3, 9), rng.next_u64());
+        let topo = NumaTopology::new(sockets, rps, rng.f64_range(0.2, 0.8), 0.0, 1.0);
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let intra = match rng.below(3) {
+            0 => IntraNodeStrategy::DefaultOrder,
+            1 => IntraNodeStrategy::SfcOrder,
+            _ => IntraNodeStrategy::MinVolume { passes: 3 },
+        };
+        let mk = |threads: usize| HierConfig {
+            intra,
+            max_rotations: 4,
+            threads,
+            numa: Some(topo),
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if par.task_to_node != seq.task_to_node {
+                return Err(format!("node assignment diverged at threads={threads}"));
+            }
+            if par.task_to_socket != seq.task_to_socket {
+                return Err(format!("socket assignment diverged at threads={threads}"));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!("rank mapping diverged at threads={threads}"));
+            }
+            if (par.swaps_applied, par.socket_swaps) != (seq.swaps_applied, seq.socket_swaps) {
+                return Err(format!("swap counts diverged at threads={threads}"));
+            }
+        }
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err(format!("not a bijection ({intra:?})"));
+        }
+        let socks = seq.task_to_socket.as_ref().expect("depth 3 reports sockets");
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        for t in 0..nt {
+            let rank = seq.task_to_rank[t] as usize;
+            if alloc.core_node[rank] != seq.task_to_node[t] {
+                return Err(format!("task {t} violates its node assignment"));
+            }
+            if rank_socks[rank] != socks[t] {
+                return Err(format!("task {t} violates its socket assignment"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hetero_depth3_balanced_and_bit_identical() {
+    // Heterogeneous ranks-per-node allocations: the node-level partition
+    // must hand every node exactly its rank count (capacity balance), the
+    // intra-node placement must stay a node/socket-respecting bijection,
+    // and the whole depth-3 pipeline must be bit-identical at 1/2/8
+    // threads.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::machine::NumaTopology;
+    use taskmap::mapping::rotations::NativeBackend;
+    check("hetero depth-3 balance + determinism", 8, |rng| {
+        let torus = Torus::torus(&[5, 5, 5]);
+        let nn = rng.range(3, 7);
+        let routers: Vec<u32> = (0..nn)
+            .map(|_| rng.below(torus.num_routers()) as u32)
+            .collect();
+        let sizes: Vec<usize> = (0..nn).map(|_| rng.range(1, 7)).collect();
+        let alloc = Allocation::heterogeneous(torus, &routers, &sizes)
+            .map_err(|e| format!("constructor: {e}"))?;
+        let sockets = rng.range(1, 3);
+        let rps = rng.range(1, 4);
+        let topo = NumaTopology::new(sockets, rps, rng.f64_range(0.2, 0.8), 0.0, 1.0);
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let intra = match rng.below(3) {
+            0 => IntraNodeStrategy::DefaultOrder,
+            1 => IntraNodeStrategy::SfcOrder,
+            _ => IntraNodeStrategy::MinVolume { passes: 3 },
+        };
+        let mk = |threads: usize| HierConfig {
+            intra,
+            max_rotations: 4,
+            threads,
+            numa: Some(topo),
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if (&par.task_to_node, &par.task_to_socket, &par.task_to_rank)
+                != (&seq.task_to_node, &seq.task_to_socket, &seq.task_to_rank)
+            {
+                return Err(format!("diverged at threads={threads} (sizes {sizes:?})"));
+            }
+        }
+        // Capacity balance: node n receives exactly sizes[n] tasks.
+        let mut per_node = vec![0usize; nn];
+        for &n in &seq.task_to_node {
+            per_node[n as usize] += 1;
+        }
+        if per_node != sizes {
+            return Err(format!("per-node counts {per_node:?} != sizes {sizes:?}"));
+        }
+        // Bijection + node/socket respect.
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err("not a bijection".into());
+        }
+        let socks = seq.task_to_socket.as_ref().unwrap();
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        for t in 0..nt {
+            let rank = seq.task_to_rank[t] as usize;
+            if alloc.core_node[rank] != seq.task_to_node[t]
+                || rank_socks[rank] != socks[t]
+            {
+                return Err(format!("task {t} violates node/socket assignment"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_numa_swap_gains_equal_full_reevaluation() {
+    // Acceptance pin: the NumaAware incremental placement swap gain equals
+    // the delta of a full eval_numa_placement re-evaluation, for same-node
+    // (socket-only) and cross-node swaps alike.
+    use taskmap::machine::NumaTopology;
+    use taskmap::objective::{eval_numa_placement, placement_swap_gain};
+    check("numa incremental gain == full re-eval", 15, |rng| {
+        let d = rng.range(1, 4);
+        let sizes: Vec<usize> = (0..d).map(|_| rng.range(2, 6)).collect();
+        let torus = Torus::torus(&sizes);
+        let nn = rng.range(2, torus.num_routers().min(8) + 1);
+        let routers: Vec<u32> = {
+            let mut ids: Vec<u32> = (0..torus.num_routers() as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(nn);
+            ids
+        };
+        let sockets = rng.range(1, 4);
+        let core = rng.f64_range(0.0, 0.3);
+        let topo = NumaTopology::new(
+            sockets,
+            rng.range(1, 5),
+            core + rng.f64_range(0.0, 1.0),
+            core,
+            rng.f64_range(0.5, 2.0),
+        );
+        let nt = nn * rng.range(1, 5);
+        let graph = stencil_graph(&[nt], rng.bool(), rng.f64_range(0.5, 5.0));
+        let mut node_of: Vec<u32> = (0..nt).map(|t| (t % nn) as u32).collect();
+        rng.shuffle(&mut node_of);
+        let mut sock_of: Vec<u32> =
+            (0..nt).map(|_| rng.below(sockets) as u32).collect();
+        let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); nt];
+        for e in &graph.edges {
+            adj[e.u as usize].push((e.v, e.w));
+            adj[e.v as usize].push((e.u, e.w));
+        }
+        for _ in 0..8 {
+            let u = rng.below(nt);
+            let b = rng.below(nt);
+            if u == b {
+                continue;
+            }
+            let before =
+                eval_numa_placement(&graph, &node_of, &sock_of, &routers, &torus, &topo);
+            let gain = placement_swap_gain(
+                &topo,
+                &torus,
+                &routers,
+                &node_of,
+                &sock_of,
+                u,
+                b,
+                adj[u].iter().copied(),
+                adj[b].iter().copied(),
+            );
+            node_of.swap(u, b);
+            sock_of.swap(u, b);
+            let after =
+                eval_numa_placement(&graph, &node_of, &sock_of, &routers, &torus, &topo);
+            approx_eq(gain, before.value - after.value, 1e-9, 1e-9)
+                .map_err(|e| format!("swap ({u},{b}): {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_intra_node_edges_cost_nothing() {
     // Node-boundary contract: any graph whose edges connect only ranks of
     // the same node reports zero hops, zero messages, and zero link data,
