@@ -28,7 +28,7 @@ fn main() {
 
     let homme = Homme::new(ne);
     let graph = homme.graph();
-    let alloc = Allocation::bgq(bgq_block(nodes), rpn, "ABCDET");
+    let alloc = Allocation::bgq(bgq_block(nodes), rpn, "ABCDET").expect("valid rank order");
     println!(
         "HOMME: {} elements on a cube-sphere (ne={ne}); BG/Q block {:?}, {} ranks\n",
         homme.num_tasks(),

@@ -1,7 +1,10 @@
 //! Bench: the depth-3 (node→socket→core) NUMA-aware mapper — wall time
-//! across thread budgets, plus depth-3-vs-depth-2 quality under the XK7
-//! Interlagos node model on the MiniGhost and HOMME presets. Results
-//! append to `BENCH_mapping.json` (override with `TASKMAP_BENCH_OUT`).
+//! across thread budgets, depth-3-vs-depth-2 quality under the XK7
+//! Interlagos node model on the MiniGhost and HOMME presets, and the
+//! **blended** (routed MaxLinkLoad × NUMA) depth-3 path: thread-scaling
+//! rows plus blended-vs-WeightedHops quality (NumaAware value and routed
+//! bottleneck ratios). Results append to `BENCH_mapping.json` (override
+//! with `TASKMAP_BENCH_OUT`).
 //!
 //! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
 //! entries are recorded under `.../smoke` names so they never clobber the
@@ -14,7 +17,8 @@ use taskmap::geom::Coords;
 use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
 use taskmap::machine::{cray_xk7, Allocation, NumaTopology, SparseAllocator};
 use taskmap::mapping::rotations::NativeBackend;
-use taskmap::objective::eval_numa;
+use taskmap::metrics::eval_full;
+use taskmap::objective::{eval_numa, ObjectiveKind};
 use taskmap::testutil::bench::{bench_quick, BenchRecorder};
 
 const ROT: usize = 12;
@@ -38,9 +42,52 @@ fn cfg(threads: usize, numa: Option<NumaTopology>) -> HierConfig {
     }
 }
 
+fn blended_cfg(threads: usize, topo: NumaTopology) -> HierConfig {
+    HierConfig {
+        objective: ObjectiveKind::MaxLinkLoad,
+        ..cfg(threads, Some(topo))
+    }
+}
+
+/// Record blended-vs-WeightedHops depth-3 quality: NumaAware-value and
+/// routed-bottleneck ratios (blended/whops; Lat < 1.0 = the blended
+/// evaluator bought bottleneck relief). `wh` is the depth-3 WeightedHops
+/// mapping [`record_quality`] already computed.
+#[allow(clippy::too_many_arguments)]
+fn record_blended_quality(
+    rec: &mut BenchRecorder,
+    tag: &str,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    topo: NumaTopology,
+    wh: &taskmap::hier::HierMapping,
+) {
+    let bl = map_hierarchical(graph, tcoords, alloc, &blended_cfg(0, topo), &NativeBackend);
+    let lat = |m: &taskmap::hier::HierMapping| {
+        eval_full(graph, &m.task_to_rank, alloc)
+            .link
+            .expect("eval_full computes link metrics")
+            .max_latency
+    };
+    let (vw, vb) = (
+        eval_numa(graph, &wh.task_to_rank, alloc, &topo).value,
+        eval_numa(graph, &bl.task_to_rank, alloc, &topo).value,
+    );
+    let (lw, lb) = (lat(wh), lat(&bl));
+    let value_ratio = if vw > 0.0 { vb / vw } else { 1.0 };
+    let lat_ratio = if lw > 0.0 { lb / lw } else { 1.0 };
+    println!(
+        "{tag}: blended/whops depth-3 NumaValue {value_ratio:.3}, MaxLinkLatency {lat_ratio:.3}"
+    );
+    rec.record_scalar(&format!("numa/{tag}/blended_value_vs_whops"), "ratio", value_ratio);
+    rec.record_scalar(&format!("numa/{tag}/blended_maxlat_vs_whops"), "ratio", lat_ratio);
+}
+
 /// Record depth-3-vs-depth-2 quality under the NumaAware objective:
 /// total-value and cross-socket-weight ratios (d3/d2, < 1.0 = depth 3
-/// wins).
+/// wins). Returns the depth-3 mapping so the blended comparison can
+/// reuse it instead of recomputing the identical run.
 fn record_quality(
     rec: &mut BenchRecorder,
     tag: &str,
@@ -48,7 +95,7 @@ fn record_quality(
     tcoords: &Coords,
     alloc: &Allocation,
     topo: NumaTopology,
-) {
+) -> taskmap::hier::HierMapping {
     let d2 = map_hierarchical(graph, tcoords, alloc, &cfg(0, None), &NativeBackend);
     let d3 = map_hierarchical(graph, tcoords, alloc, &cfg(0, Some(topo)), &NativeBackend);
     let m2 = eval_numa(graph, &d2.task_to_rank, alloc, &topo);
@@ -66,6 +113,7 @@ fn record_quality(
     );
     rec.record_scalar(&format!("numa/{tag}/value_vs_depth2"), "ratio", value_ratio);
     rec.record_scalar(&format!("numa/{tag}/xsock_vs_depth2"), "ratio", xsock_ratio);
+    d3
 }
 
 fn main() {
@@ -93,13 +141,34 @@ fn main() {
         });
         rec.record(&result, &[("threads", threads as f64)]);
     }
-    record_quality(
+    let d3 = record_quality(
         &mut rec,
         &format!("minighost{suffix}"),
         &graph,
         &graph.coords,
         &alloc,
         topo,
+    );
+    // Blended (MaxLinkLoad x NUMA) depth-3 path: thread scaling + quality.
+    for &threads in thread_counts {
+        let c = blended_cfg(threads, topo);
+        let name = format!(
+            "numa_map_blended/minighost/tasks={}/threads={threads}{suffix}",
+            mg.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &graph.coords, &alloc, &c, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    record_blended_quality(
+        &mut rec,
+        &format!("minighost{suffix}"),
+        &graph,
+        &graph.coords,
+        &alloc,
+        topo,
+        &d3,
     );
 
     // HOMME preset (one rank per element: bijective mapping).
@@ -119,13 +188,22 @@ fn main() {
         });
         rec.record(&result, &[("threads", threads as f64)]);
     }
-    record_quality(
+    let d3 = record_quality(
         &mut rec,
         &format!("homme{suffix}"),
         &graph,
         &tcoords,
         &alloc,
         topo,
+    );
+    record_blended_quality(
+        &mut rec,
+        &format!("homme{suffix}"),
+        &graph,
+        &tcoords,
+        &alloc,
+        topo,
+        &d3,
     );
 
     if let Err(e) = rec.write() {

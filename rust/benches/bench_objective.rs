@@ -1,6 +1,8 @@
 //! Bench: the pluggable objective layer — WeightedHops-vs-MaxLinkLoad
 //! quality ratios, congestion-objective mapper wall time across thread
-//! budgets, and the unrolled `whops_row` kernel microbenchmark. Results
+//! budgets, the blended (MaxLinkLoad × NUMA) depth-3 path's thread
+//! scaling and quality, and the unrolled `whops_row` kernel
+//! microbenchmark. Results
 //! append to `BENCH_mapping.json` (override with `TASKMAP_BENCH_OUT`) so
 //! the trajectory is diffable across commits.
 //!
@@ -10,7 +12,7 @@
 
 use taskmap::apps::minighost::MiniGhost;
 use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
-use taskmap::machine::{cray_xk7, SparseAllocator};
+use taskmap::machine::{cray_xk7, NumaTopology, SparseAllocator};
 use taskmap::mapping::rotations::NativeBackend;
 use taskmap::metrics::eval_full;
 use taskmap::metrics::native::batched_weighted_hops_native;
@@ -94,6 +96,54 @@ fn main() {
             map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend)
         });
         rec.record(&result, &[("threads", threads as f64)]);
+    }
+
+    // Blended (MaxLinkLoad x NUMA) depth-3 path: the unified evaluator's
+    // routed network term plus the socket intra-node term, end to end
+    // through the three-level mapper — thread scaling plus quality vs the
+    // plain maxload run.
+    let topo = NumaTopology::xk7();
+    for &threads in thread_counts {
+        let cfg = HierConfig {
+            numa: Some(topo),
+            ..hier_cfg(threads, ObjectiveKind::MaxLinkLoad)
+        };
+        let name = format!(
+            "objective_map/maxload_numa/tasks={}/threads={threads}{suffix}",
+            mg.num_tasks()
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    {
+        let plain = map_hierarchical(
+            &graph,
+            &graph.coords,
+            &alloc,
+            &hier_cfg(0, ObjectiveKind::MaxLinkLoad),
+            &NativeBackend,
+        );
+        let blended = map_hierarchical(
+            &graph,
+            &graph.coords,
+            &alloc,
+            &HierConfig {
+                numa: Some(topo),
+                ..hier_cfg(0, ObjectiveKind::MaxLinkLoad)
+            },
+            &NativeBackend,
+        );
+        let lat = |m: &[u32]| eval_full(&graph, m, &alloc).link.unwrap().max_latency;
+        let (lp, lb) = (lat(&plain.task_to_rank), lat(&blended.task_to_rank));
+        let lat_ratio = if lp > 0.0 { lb / lp } else { 1.0 };
+        println!("hier maxload+numa/maxload: MaxLinkLatency {lat_ratio:.3}");
+        rec.record_scalar(
+            &format!("objective/maxload_numa{suffix}/maxlat_vs_maxload"),
+            "ratio",
+            lat_ratio,
+        );
     }
 
     // The unrolled whops_row kernel (manual 8-lane accumulators): ns/iter

@@ -48,6 +48,7 @@ fn bgq_setup(full: bool, hybrid: bool) -> BgqSetup {
 fn bgq_alloc(ranks: usize, ranks_per_node: usize) -> Allocation {
     let nodes = ranks / ranks_per_node;
     Allocation::bgq(bgq_block(nodes), ranks_per_node, "ABCDET")
+        .expect("ABCDET is a valid rank order")
 }
 
 /// Rotation cap: the full td!*pd! sweep is expensive at paper scale; the

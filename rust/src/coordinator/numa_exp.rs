@@ -1,18 +1,21 @@
 //! NUMA depth-2 vs depth-3 experiment (`numa`): the two-level mapper
 //! against the three-level (node→socket→core) mapper of
 //! [`crate::hier::HierConfig::numa`], on the MiniGhost (Cray XK7) and
-//! HOMME (Titan) presets under the XK7 Interlagos node model.
+//! HOMME (Titan) presets under the XK7 Interlagos node model — including
+//! the **blended** depth-3 run (routed `MaxLinkLoad` network term × NUMA
+//! intra-node term through the unified evaluator).
 //!
-//! Both depths see the same task graph, coordinates, allocation, rotation
+//! All runs see the same task graph, coordinates, allocation, rotation
 //! budget, and refinement passes; rows report the
-//! [`crate::objective::NumaAware`] value and its per-level breakdown —
-//! network weighted hops and cross-socket weight — with per-(case, seed)
-//! ratios against the depth-2 run (< 1.00 = depth 3 wins). Depth 2 places
-//! within nodes blind to sockets, so its cross-socket weight is whatever
-//! round-robin rank order happens to produce; depth 3 splits and refines
-//! sockets explicitly.
+//! [`crate::objective::NumaAware`] value, its per-level breakdown —
+//! network weighted hops and cross-socket weight — and the routed
+//! bottleneck latency, with per-(case, seed) ratios against the depth-2
+//! run (< 1.00 = the run wins). Depth 2 places within nodes blind to
+//! sockets; depth 3 splits and refines sockets explicitly; the blended
+//! depth-3 run trades some weighted hops for bottleneck relief while
+//! keeping the socket structure.
 
-use super::report::{f2, Table};
+use super::report::{f2, sci, Table};
 use super::Ctx;
 use crate::apps::homme::{Homme, HommeCoords};
 use crate::apps::minighost::MiniGhost;
@@ -20,22 +23,26 @@ use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
 use crate::machine::{cray_xk7, titan_full, Allocation, NumaTopology, SparseAllocator};
-use crate::objective::eval_numa;
+use crate::metrics::eval_full;
+use crate::objective::{eval_numa, ObjectiveKind};
 use crate::par::Parallelism;
 
 const ROT: usize = 12;
 const PASSES: usize = 4;
 
-fn headers() -> [&'static str; 8] {
+fn headers() -> [&'static str; 11] {
     [
         "case",
         "seed",
         "depth",
+        "objective",
         "NumaVal",
         "NetWH",
         "XSockW",
+        "MaxLat",
         "Numa/d2",
         "XSock/d2",
+        "Lat/d2",
     ]
 }
 
@@ -49,8 +56,9 @@ fn ratio(v: f64, denom: f64) -> f64 {
     }
 }
 
-/// Run depth 2 and depth 3 on one (graph, coords, allocation) case and
-/// append both rows; the depth-2 row is the ratio denominator.
+/// Run depth 2, depth 3, and the blended depth 3 on one (graph, coords,
+/// allocation) case and append all three rows; the depth-2 row is the
+/// ratio denominator.
 #[allow(clippy::too_many_arguments)]
 fn run_case(
     ctx: &Ctx,
@@ -62,26 +70,43 @@ fn run_case(
     alloc: &Allocation,
     topo: NumaTopology,
 ) {
-    let mk = |numa: Option<NumaTopology>| HierConfig {
+    let mk = |numa: Option<NumaTopology>, objective: ObjectiveKind| HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: PASSES },
         max_rotations: ROT,
         numa,
+        objective,
         ..HierConfig::default()
     };
-    let d2 = map_hierarchical(graph, tcoords, alloc, &mk(None), ctx.backend());
-    let d3 = map_hierarchical(graph, tcoords, alloc, &mk(Some(topo)), ctx.backend());
-    let m2 = eval_numa(graph, &d2.task_to_rank, alloc, &topo);
-    let m3 = eval_numa(graph, &d3.task_to_rank, alloc, &topo);
-    for (depth, m) in [("depth-2", &m2), ("depth-3", &m3)] {
+    let runs = [
+        ("depth-2", "whops", mk(None, ObjectiveKind::WeightedHops)),
+        ("depth-3", "whops", mk(Some(topo), ObjectiveKind::WeightedHops)),
+        (
+            "depth-3",
+            "maxload",
+            mk(Some(topo), ObjectiveKind::MaxLinkLoad),
+        ),
+    ];
+    let mut denom: Option<(f64, f64, f64)> = None;
+    for (depth, objective, cfg) in runs {
+        let m = map_hierarchical(graph, tcoords, alloc, &cfg, ctx.backend());
+        let nm = eval_numa(graph, &m.task_to_rank, alloc, &topo);
+        let lat = eval_full(graph, &m.task_to_rank, alloc)
+            .link
+            .expect("eval_full computes link metrics")
+            .max_latency;
+        let (v2, x2, l2) = *denom.get_or_insert((nm.value, nm.socket_weight, lat));
         table.push_row(vec![
             case.to_string(),
             seed.to_string(),
             depth.to_string(),
-            f2(m.value),
-            f2(m.network_weighted_hops),
-            f2(m.socket_weight),
-            f2(ratio(m.value, m2.value)),
-            f2(ratio(m.socket_weight, m2.socket_weight)),
+            objective.to_string(),
+            f2(nm.value),
+            f2(nm.network_weighted_hops),
+            f2(nm.socket_weight),
+            sci(lat),
+            f2(ratio(nm.value, v2)),
+            f2(ratio(nm.socket_weight, x2)),
+            f2(ratio(lat, l2)),
         ]);
     }
 }

@@ -7,8 +7,10 @@
 //! cost in hops, and what does it buy on the bottleneck link" — the
 //! trade-off arXiv:1702.04164 and arXiv:2005.10413 show diverges
 //! materially from hop-based scoring. Strategies: the flat Z2_1 rotation
-//! sweep and the hierarchical mapper with `MinVolume` refinement, both
-//! scoring/refining under the row's objective end to end.
+//! sweep, the hierarchical mapper with `MinVolume` refinement, and the
+//! depth-3 NUMA mapper under the XK7 Interlagos node model — all
+//! scoring/refining under the row's objective end to end, the last
+//! through the blended (network × NUMA) evaluator for the routed rows.
 
 use super::report::{f2, sci, Table};
 use super::Ctx;
@@ -17,7 +19,7 @@ use crate::apps::minighost::MiniGhost;
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
-use crate::machine::{cray_xk7, titan_full, Allocation, SparseAllocator};
+use crate::machine::{cray_xk7, titan_full, Allocation, NumaTopology, SparseAllocator};
 use crate::mapping::pipeline::{z2_map, Z2Config};
 use crate::metrics::eval_full;
 use crate::objective::ObjectiveKind;
@@ -40,8 +42,8 @@ fn headers() -> [&'static str; 9] {
     ]
 }
 
-/// Run both strategies under every objective on one case; rows normalize
-/// against the same strategy's WeightedHops-objective run.
+/// Run all three strategies under every objective on one case; rows
+/// normalize against the same strategy's WeightedHops-objective run.
 fn run_case(
     ctx: &Ctx,
     table: &mut Table,
@@ -51,7 +53,7 @@ fn run_case(
     tcoords: &Coords,
     alloc: &Allocation,
 ) {
-    for strategy in ["flat", "hier-minvol"] {
+    for strategy in ["flat", "hier-minvol", "hier-numa"] {
         let mut denom: Option<(f64, f64)> = None;
         for kind in ObjectiveKind::ALL {
             let (mapping, swaps) = match strategy {
@@ -66,6 +68,9 @@ fn run_case(
                         intra: IntraNodeStrategy::MinVolume { passes: PASSES },
                         max_rotations: ROT,
                         objective: kind,
+                        // "hier-numa": depth 3 under the XK7 node model —
+                        // the routed rows run the blended evaluator.
+                        numa: (strategy == "hier-numa").then(NumaTopology::xk7),
                         ..HierConfig::default()
                     };
                     let m = map_hierarchical(graph, tcoords, alloc, &cfg, ctx.backend());

@@ -42,26 +42,46 @@
 //! optimize (hierarchical mode only: the flat `map` op never scores, so a
 //! non-default objective there is an error, not a silent no-op). On `eval`
 //! the response additionally reports the mapping's value under that
-//! objective (`"objective_value"`).
+//! objective (`"objective_value"`) and the routed bottleneck
+//! (`"max_link_load"`).
 //!
 //! **NUMA depth 3** — both ops accept a `"numa"` field: a preset name
 //! (`"xk7"` — 2 sockets × 8 ranks, `"bgq"` — 1 × 16) or an object
 //! `{"sockets_per_node":S,"ranks_per_socket":R,"socket_cost":...,
 //! "core_cost":...,"hop_cost":...}` (costs optional: 0.5 / 0.0 / 1.0).
 //! The socket grid must tile `ranks_per_node` exactly. On `map` (requires
-//! `"hier"`, default objective only) the mapper runs at depth 3 — socket
-//! split plus cross-socket refinement inside each node — and the response
-//! adds each task's within-node socket plus the socket-swap count:
+//! `"hier"`) the mapper runs at depth 3 — socket split plus cross-socket
+//! refinement inside each node — and the response adds each task's
+//! within-node socket plus the socket-swap count:
 //! ```json
 //! {"op":"map","tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
 //!  "edges":[[0,1],[1,2],[2,3]],
 //!  "hier":{"ranks_per_node":2,"strategy":"minvol"},
 //!  "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}
-//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1],"swaps":0,
+//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1],"swaps":0,...,
 //!     "sockets":[0,1,0,1],"socket_swaps":0}
 //! ```
-//! On `eval` the response adds the [`crate::objective::NumaAware`]
-//! breakdown: `"numa_value"`, `"socket_weight"`, `"core_weight"`.
+//!
+//! **Objective × NUMA composition** — `"objective"` and `"numa"` compose
+//! on both ops through the unified evaluator
+//! ([`crate::objective::eval`]): `{"objective":"maxload","numa":"xk7"}`
+//! runs the blended (routed congestion × NUMA) depth-3 mapper end to end.
+//! Responses carry the combined breakdown in one place —
+//! `"objective_value"` is the *composed* value
+//! ([`crate::objective::combined_value`]), `"max_link_load"` the routed
+//! bottleneck, and with `"numa"` also `"numa_value"`,
+//! `"socket_weight"`, `"core_weight"`. A combination the evaluator cannot
+//! express (today: a routed objective with a non-unit `numa.hop_cost`) is
+//! rejected with a clear message instead of silently scoring under a
+//! different objective.
+//!
+//! **BG/Q block allocations** — `"hier"` map and `eval` accept a `"bgq"`
+//! object in place of `pcoords`/`torus`/`ranks_per_node`:
+//! `{"block":[a,b,c,d,e],"ranks_per_node":T,"order":"ABCDET"}` builds the
+//! contiguous-block allocation via [`Allocation::bgq`]; a malformed
+//! `order` string (bad letter, wrong length, duplicate) returns a
+//! structured validation error — previously that letter panicked deep in
+//! `machine::rank_order` and crashed the process.
 //!
 //! **Validation is strict**: unknown or malformed fields — top-level or
 //! inside `"hier"`/`"numa"` — return `{"ok":false,"error":...}` instead of
@@ -77,7 +97,7 @@ use crate::machine::{Allocation, NumaTopology, Torus};
 use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
 use crate::metrics::eval_full;
-use crate::objective::{eval_numa, ObjectiveKind};
+use crate::objective::{combined_value, eval_numa, EvalSpec, ObjectiveKind};
 use crate::sfc::PartOrdering;
 use crate::testutil::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -177,10 +197,11 @@ fn err(msg: &str) -> Json {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective", "numa",
+    "hier", "objective", "numa", "bgq",
 ];
-const EVAL_FIELDS: &[&str] =
-    &["op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa"];
+const EVAL_FIELDS: &[&str] = &[
+    "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
+];
 const HIER_FIELDS: &[&str] = &["ranks_per_node", "strategy", "passes", "rotations"];
 const NUMA_FIELDS: &[&str] = &[
     "sockets_per_node",
@@ -189,6 +210,12 @@ const NUMA_FIELDS: &[&str] = &[
     "core_cost",
     "hop_cost",
 ];
+const BGQ_FIELDS: &[&str] = &["block", "ranks_per_node", "order"];
+
+/// Keep service-built BG/Q blocks to a sane size: the block is expanded
+/// into per-rank tables, so an enormous request would balloon memory
+/// before any real work starts.
+const MAX_BGQ_RANKS: usize = 1 << 20;
 
 /// Reject fields outside `allowed` (`what` names the object in the error).
 fn check_fields(obj: &Json, allowed: &[&str], what: &str) -> Option<Json> {
@@ -269,6 +296,71 @@ fn parse_objective(req: &Json) -> Result<ObjectiveKind, Json> {
             Some(kind) => Ok(kind),
             None => Err(err("objective must be whops|maxload|blend")),
         },
+    }
+}
+
+/// Reject an `objective` × `numa` combination the unified evaluator does
+/// not support, instead of silently scoring under a different objective.
+/// (Today that is exactly a routed objective with a non-unit
+/// `numa.hop_cost` — see [`EvalSpec::validate`].)
+fn check_objective_numa(objective: ObjectiveKind, numa: Option<&NumaTopology>) -> Option<Json> {
+    let spec = EvalSpec::new(objective, numa.map(|t| t.node_level_costs()));
+    spec.validate().err().map(|e| err(&e))
+}
+
+/// Parse an optional `"bgq"` allocation object — a contiguous BG/Q block
+/// (`{"block":[a,b,c,d,e],"ranks_per_node":T,"order":"ABCDET"}`) built by
+/// the library's [`Allocation::bgq`] constructor, so a malformed
+/// rank-order string surfaces as a structured validation error here
+/// instead of crashing the process.
+fn parse_bgq(req: &Json) -> Result<Option<Allocation>, Json> {
+    let v = match req.get("bgq") {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    if !matches!(v, Json::Obj(_)) {
+        return Err(err("bgq must be an object"));
+    }
+    if let Some(e) = check_fields(v, BGQ_FIELDS, "bgq") {
+        return Err(e);
+    }
+    let block_arr = match v.get("block").and_then(|b| b.as_arr()) {
+        Some(arr) if arr.len() == 5 => arr,
+        _ => return Err(err("bgq.block must be an array of 5 extents")),
+    };
+    let mut block = [0usize; 5];
+    for (d, cell) in block_arr.iter().enumerate() {
+        match as_index(cell) {
+            Some(x) if x >= 1 => block[d] = x,
+            _ => return Err(err("bgq.block extents must be integers >= 1")),
+        }
+    }
+    let rpn = match v.get("ranks_per_node").map(as_index) {
+        Some(Some(r)) if r >= 1 => r,
+        _ => return Err(err("bgq.ranks_per_node must be a positive integer")),
+    };
+    let order = match v.get("order") {
+        None => "ABCDET",
+        Some(o) => match o.as_str() {
+            Some(s) => s,
+            None => return Err(err("bgq.order must be a string over ABCDET")),
+        },
+    };
+    // Checked product: enormous extents must hit the limit error, not
+    // overflow (a debug-build panic / wrapped release value would bypass
+    // the guard entirely).
+    let total = block
+        .iter()
+        .try_fold(rpn, |acc, &x| acc.checked_mul(x))
+        .filter(|&t| t <= MAX_BGQ_RANKS);
+    let Some(_total) = total else {
+        return Err(err(&format!(
+            "bgq block exceeds the service limit of {MAX_BGQ_RANKS} ranks"
+        )));
+    };
+    match Allocation::bgq(block, rpn, order) {
+        Ok(a) => Ok(Some(a)),
+        Err(e) => Err(err(&format!("bgq: {e}"))),
     }
 }
 
@@ -442,27 +534,45 @@ fn handle_map_hier(
     req: &Json,
     hier: &Json,
     tcoords: &Coords,
-    pcoords: &Coords,
+    pcoords: Option<&Coords>,
     map_cfg: MapConfig,
     objective: ObjectiveKind,
 ) -> Json {
-    let rpn = match hier.get("ranks_per_node").map(as_index) {
-        Some(Some(r)) => r,
-        Some(None) => return err("hier.ranks_per_node must be a positive integer"),
-        None => 1,
+    let alloc = match parse_bgq(req) {
+        Err(e) => return e,
+        Ok(Some(a)) => {
+            // The block fully defines the allocation; a second source of
+            // the same information could silently disagree with it.
+            if pcoords.is_some() || req.get("torus").is_some() {
+                return err("bgq replaces pcoords/torus (the block defines the allocation)");
+            }
+            if hier.get("ranks_per_node").is_some() {
+                return err("bgq.ranks_per_node replaces hier.ranks_per_node");
+            }
+            a
+        }
+        Ok(None) => {
+            let rpn = match hier.get("ranks_per_node").map(as_index) {
+                Some(Some(r)) => r,
+                Some(None) => return err("hier.ranks_per_node must be a positive integer"),
+                None => 1,
+            };
+            let Some(pcoords) = pcoords else {
+                return err("missing pcoords");
+            };
+            match parse_alloc(pcoords, req, rpn) {
+                Ok(a) => a,
+                Err(e) => return err(&format!("hier: {e}")),
+            }
+        }
     };
-    let alloc = match parse_alloc(pcoords, req, rpn) {
-        Ok(a) => a,
-        Err(e) => return err(&format!("hier: {e}")),
-    };
+    let rpn = alloc.ranks_per_node;
     let numa = match parse_numa(req, rpn) {
         Ok(n) => n,
         Err(e) => return e,
     };
-    if numa.is_some() && objective != ObjectiveKind::WeightedHops {
-        // The depth-3 mapper prices levels itself; a routed objective on
-        // top would be a silent conflict.
-        return err("numa composes with the default whops objective only");
+    if let Some(e) = check_objective_numa(objective, numa.as_ref()) {
+        return e;
     }
     let mut cfg = HierConfig {
         node_map: map_cfg,
@@ -511,6 +621,15 @@ fn handle_map_hier(
         coords: tcoords.clone(),
     };
     let m = map_hierarchical(&graph, tcoords, &alloc, &cfg, &NativeBackend);
+    // Combined breakdown: the final mapping's value under the requested
+    // objective × numa composition (see `objective::combined_value`), the
+    // routed bottleneck latency, and — at depth 3 — the per-level NUMA
+    // weights, all in one response.
+    let full = eval_full(&graph, &m.task_to_rank, &alloc);
+    let lm = full.link.as_ref().expect("eval_full computes link metrics");
+    let nm = numa.map(|topo| (topo, eval_numa(&graph, &m.task_to_rank, &alloc, &topo)));
+    let objective_value =
+        combined_value(objective, &full, nm.as_ref().map(|(t, n)| (t, n)));
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         (
@@ -522,6 +641,9 @@ fn handle_map_hier(
             Json::Arr(m.task_to_node.iter().map(|&n| Json::Num(n as f64)).collect()),
         ),
         ("swaps", Json::Num(m.swaps_applied as f64)),
+        ("objective", Json::Str(objective.name().into())),
+        ("objective_value", Json::Num(objective_value)),
+        ("max_link_load", Json::Num(lm.max_latency)),
     ];
     if let Some(socks) = &m.task_to_socket {
         fields.push((
@@ -529,6 +651,11 @@ fn handle_map_hier(
             Json::Arr(socks.iter().map(|&s| Json::Num(s as f64)).collect()),
         ));
         fields.push(("socket_swaps", Json::Num(m.socket_swaps as f64)));
+    }
+    if let Some((_, n)) = &nm {
+        fields.push(("numa_value", Json::Num(n.value)));
+        fields.push(("socket_weight", Json::Num(n.socket_weight)));
+        fields.push(("core_weight", Json::Num(n.core_weight)));
     }
     Json::obj(fields)
 }
@@ -553,20 +680,35 @@ fn handle_eval(req: &Json) -> Json {
     if mapping.is_empty() {
         return err("empty map");
     }
-    let pcoords = match req.get("pcoords").map(parse_coords) {
-        Some(Ok(c)) => c,
-        Some(Err(e)) => return err(&format!("pcoords: {e}")),
-        None => return err("missing pcoords"),
+    let alloc = match parse_bgq(req) {
+        Err(e) => return e,
+        Ok(Some(a)) => {
+            if req.get("pcoords").is_some()
+                || req.get("torus").is_some()
+                || req.get("ranks_per_node").is_some()
+            {
+                return err("bgq replaces pcoords/torus/ranks_per_node");
+            }
+            a
+        }
+        Ok(None) => {
+            let pcoords = match req.get("pcoords").map(parse_coords) {
+                Some(Ok(c)) => c,
+                Some(Err(e)) => return err(&format!("pcoords: {e}")),
+                None => return err("missing pcoords"),
+            };
+            let rpn = match req.get("ranks_per_node").map(as_index) {
+                Some(Some(r)) => r,
+                Some(None) => return err("ranks_per_node must be a positive integer"),
+                None => 1,
+            };
+            match parse_alloc(&pcoords, req, rpn) {
+                Ok(a) => a,
+                Err(e) => return err(&e),
+            }
+        }
     };
-    let rpn = match req.get("ranks_per_node").map(as_index) {
-        Some(Some(r)) => r,
-        Some(None) => return err("ranks_per_node must be a positive integer"),
-        None => 1,
-    };
-    let alloc = match parse_alloc(&pcoords, req, rpn) {
-        Ok(a) => a,
-        Err(e) => return err(&e),
-    };
+    let rpn = alloc.ranks_per_node;
     if let Some(&r) = mapping.iter().find(|&&r| r as usize >= alloc.num_ranks()) {
         return err(&format!("map rank {r} out of range {}", alloc.num_ranks()));
     }
@@ -586,6 +728,9 @@ fn handle_eval(req: &Json) -> Json {
         Ok(n) => n,
         Err(e) => return e,
     };
+    if let Some(e) = check_objective_numa(objective, numa.as_ref()) {
+        return e;
+    }
     let graph = TaskGraph {
         num_tasks,
         edges,
@@ -593,6 +738,13 @@ fn handle_eval(req: &Json) -> Json {
     };
     let m = eval_full(&graph, &mapping, &alloc);
     let lm = m.link.as_ref().expect("eval_full computes link metrics");
+    // `objective_value` composes the network objective with the NUMA term
+    // when a numa model is given (see `objective::combined_value`) —
+    // previously the numa fields rode alongside a value scored under the
+    // *plain* objective, a silently different number than the depth-3
+    // mapper optimizes.
+    let nm = numa.map(|topo| (topo, eval_numa(&graph, &mapping, &alloc, &topo)));
+    let objective_value = combined_value(objective, &m, nm.as_ref().map(|(t, n)| (t, n)));
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("total_hops", Json::Num(m.total_hops)),
@@ -603,11 +755,11 @@ fn handle_eval(req: &Json) -> Json {
         ("max_data", Json::Num(lm.max_data)),
         ("avg_data", Json::Num(lm.avg_data)),
         ("max_latency", Json::Num(lm.max_latency)),
+        ("max_link_load", Json::Num(lm.max_latency)),
         ("objective", Json::Str(objective.name().into())),
-        ("objective_value", Json::Num(objective.value_from_metrics(&m))),
+        ("objective_value", Json::Num(objective_value)),
     ];
-    if let Some(topo) = numa {
-        let nm = eval_numa(&graph, &mapping, &alloc, &topo);
+    if let Some((_, nm)) = &nm {
         fields.push(("numa_value", Json::Num(nm.value)));
         fields.push(("socket_weight", Json::Num(nm.socket_weight)));
         fields.push(("core_weight", Json::Num(nm.core_weight)));
@@ -630,10 +782,12 @@ fn handle_map(req: &Json) -> Json {
         Some(Err(e)) => return err(&format!("tcoords: {e}")),
         None => return err("missing tcoords"),
     };
+    // pcoords stays optional until we know the mode: a "bgq" block can
+    // replace it in hierarchical mode.
     let pcoords = match req.get("pcoords").map(parse_coords) {
-        Some(Ok(c)) => c,
+        Some(Ok(c)) => Some(c),
         Some(Err(e)) => return err(&format!("pcoords: {e}")),
-        None => return err("missing pcoords"),
+        None => None,
     };
     let ordering = match req.get("ordering") {
         None => PartOrdering::FZ,
@@ -667,7 +821,7 @@ fn handle_map(req: &Json) -> Json {
         if let Some(e) = check_fields(h, HIER_FIELDS, "hier") {
             return e;
         }
-        return handle_map_hier(req, h, &tcoords, &pcoords, cfg, objective);
+        return handle_map_hier(req, h, &tcoords, pcoords.as_ref(), cfg, objective);
     }
     if objective != ObjectiveKind::WeightedHops {
         // The flat map op runs no rotation sweep, so a non-default
@@ -678,6 +832,14 @@ fn handle_map(req: &Json) -> Json {
         // Depth-3 mapping needs the node structure only hier mode has.
         return err("numa requires \"hier\" (the flat map op has no node level)");
     }
+    if req.get("bgq").is_some() {
+        // The flat map op partitions pcoords directly; a BG/Q block only
+        // describes an allocation, which is a hierarchical-mode concept.
+        return err("bgq requires \"hier\" (the flat map op partitions pcoords directly)");
+    }
+    let Some(pcoords) = pcoords else {
+        return err("missing pcoords");
+    };
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
     Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -1072,11 +1234,210 @@ mod tests {
                           "socket_cost":0.1,"core_cost":0.5}}}}"#
         ));
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
-        // numa + routed objective: conflict, not silent.
+        // A routed objective cannot compose with a non-unit hop_cost (the
+        // one combination the evaluator does not express) — rejected with
+        // a clear message, not silently scored differently.
         let resp = handle_request(&format!(
             r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"objective":"maxload",
-                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1}}}}"#
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1,"hop_cost":0.5}}}}"#
         ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(
+            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("hop_cost"),
+            "{resp:?}"
+        );
+    }
+
+    #[test]
+    fn blended_map_runs_end_to_end_with_combined_breakdown() {
+        // Acceptance: {"op":"map","objective":"maxlinkload","numa":"xk7"}
+        // (and congestionblend) runs through the depth-3 mapper and
+        // returns the combined breakdown. xk7 = 2 sockets x 8 ranks, so 2
+        // nodes of 16 ranks = 32 ranks/tasks.
+        let tcoords: Vec<String> = (0..32).map(|i| format!("[{i}]")).collect();
+        let pcoords: Vec<String> =
+            (0..32).map(|i| format!("[{}]", i / 16)).collect();
+        let edges: Vec<String> = (0..31).map(|i| format!("[{i},{}]", i + 1)).collect();
+        for objective in ["maxlinkload", "congestionblend"] {
+            let req = format!(
+                r#"{{"op":"map","tcoords":[{}],"pcoords":[{}],"edges":[{}],
+                     "objective":"{objective}",
+                     "hier":{{"ranks_per_node":16,"strategy":"minvol","rotations":2}},
+                     "numa":"xk7"}}"#,
+                tcoords.join(","),
+                pcoords.join(","),
+                edges.join(","),
+            );
+            let resp = handle_request(&req);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{objective}: {resp:?}");
+            // A full bijection that respects nodes and sockets.
+            let m: Vec<usize> = resp
+                .get("map")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            let mut s = m.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..32).collect::<Vec<_>>(), "{objective}");
+            let socks = resp.get("sockets").unwrap().as_arr().unwrap();
+            assert_eq!(socks.len(), 32, "{objective}");
+            for (t, &rank) in m.iter().enumerate() {
+                // xk7: socket = (rank position in node) / 8.
+                assert_eq!(
+                    socks[t].as_usize().unwrap(),
+                    (rank % 16) / 8,
+                    "{objective}: task {t}"
+                );
+            }
+            // The combined breakdown is all present and consistent: the
+            // blended value is the routed objective plus the socket term.
+            let ov = resp.get("objective_value").and_then(|v| v.as_f64()).unwrap();
+            let mll = resp.get("max_link_load").and_then(|v| v.as_f64()).unwrap();
+            let sw = resp.get("socket_weight").and_then(|v| v.as_f64()).unwrap();
+            assert!(ov.is_finite() && mll.is_finite() && sw >= 0.0, "{objective}");
+            if objective == "maxlinkload" {
+                // xk7: socket_cost 0.5, core_cost 0.
+                assert!(
+                    (ov - (mll + 0.5 * sw)).abs() <= 1e-9 * ov.abs().max(1.0),
+                    "{objective}: {ov} != {mll} + 0.5*{sw}"
+                );
+            }
+            assert!(resp.get("numa_value").is_some(), "{objective}");
+        }
+    }
+
+    #[test]
+    fn eval_composes_every_objective_numa_combination() {
+        // Satellite: one service-level check per objective x numa
+        // combination — the reported objective_value must be the composed
+        // value, never the plain objective silently standing in for it.
+        // Setup: edge (0,1) cross-socket weight 5 inside node 0; edge
+        // (1,2) crosses nodes at 1 hop, weight 3, on a unit-bandwidth
+        // 4-ring (so its latency is 3).
+        let base = r#""map":[0,1,2,3],"edges":[[0,1,5.0],[1,2,3.0]],
+                      "pcoords":[[0],[0],[1],[1]],"torus":[4],"ranks_per_node":2"#;
+        let numa = r#""numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}"#;
+        // (objective, with numa?, expected objective_value). Weighted
+        // hops = 3; max link latency = 3 (both directions of the 0->1
+        // link carry 3); blend = 0.5*max + 0.5*avg over 8 links.
+        let avg = (3.0 + 3.0) / 8.0;
+        let cases: Vec<(&str, bool, f64)> = vec![
+            ("whops", false, 3.0),
+            ("maxload", false, 3.0),
+            ("blend", false, 0.5 * 3.0 + 0.5 * avg),
+            // With numa: socket_weight 5 at cost 0.5 joins the value.
+            ("whops", true, 3.0 + 0.5 * 5.0),
+            ("maxload", true, 3.0 + 0.5 * 5.0),
+            ("blend", true, 0.5 * 3.0 + 0.5 * avg + 0.5 * 5.0),
+        ];
+        for (objective, with_numa, want) in cases {
+            let req = if with_numa {
+                format!(r#"{{"op":"eval",{base},"objective":"{objective}",{numa}}}"#)
+            } else {
+                format!(r#"{{"op":"eval",{base},"objective":"{objective}"}}"#)
+            };
+            let resp = handle_request(&req);
+            assert_eq!(
+                resp.get("ok"),
+                Some(&Json::Bool(true)),
+                "{objective} numa={with_numa}: {resp:?}"
+            );
+            let got = resp.get("objective_value").and_then(|v| v.as_f64()).unwrap();
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{objective} numa={with_numa}: objective_value {got} != {want}"
+            );
+            // max_link_load is always reported.
+            assert_eq!(
+                resp.get("max_link_load").and_then(|v| v.as_f64()),
+                Some(3.0),
+                "{objective} numa={with_numa}"
+            );
+        }
+        // The unsupported combination errors on eval too.
+        let resp = handle_request(&format!(
+            r#"{{"op":"eval",{base},"objective":"maxload",
+                 "numa":{{"sockets_per_node":2,"ranks_per_socket":1,"hop_cost":2.0}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(
+            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("hop_cost"),
+            "{resp:?}"
+        );
+    }
+
+    #[test]
+    fn bgq_allocation_field_round_trips_and_validates() {
+        // eval over a BG/Q block: 32 routers x 2 ranks on a 2^5 torus.
+        // Ranks 0,1 share node 0 (ABCDET: T fastest), so edge (0,1) is
+        // free and edge (1,2) crosses one E-link.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("weighted_hops").and_then(|v| v.as_f64()), Some(3.0));
+        // A bad rank-order letter is a structured validation error — this
+        // used to be a process-crashing panic in machine::rank_order.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2,"order":"ABCDEX"}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(
+            resp.get("error")
+                .and_then(|e| e.as_str())
+                .unwrap()
+                .contains("rank-order"),
+            "{resp:?}"
+        );
+        // Duplicate letters and bad lengths are rejected the same way.
+        for order in ["AABCDE", "ABC"] {
+            let resp = handle_request(&format!(
+                r#"{{"op":"eval","map":[0,1],"edges":[[0,1]],
+                    "bgq":{{"block":[2,2,2,2,2],"ranks_per_node":2,"order":"{order}"}}}}"#
+            ));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{order}: {resp:?}");
+        }
+        // bgq conflicts with the per-rank allocation fields.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[1]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // bgq without hier on map is an error, not a silent no-op.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Hierarchical map over a bgq block needs no pcoords at all.
+        let tcoords: Vec<String> = (0..64).map(|i| format!("[{i}]")).collect();
+        let edges: Vec<String> = (0..63).map(|i| format!("[{i},{}]", i + 1)).collect();
+        let resp = handle_request(&format!(
+            r#"{{"op":"map","tcoords":[{}],"edges":[{}],
+                 "bgq":{{"block":[2,2,2,2,2],"ranks_per_node":2}},
+                 "hier":{{"strategy":"minvol","rotations":2}}}}"#,
+            tcoords.join(","),
+            edges.join(","),
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m = resp.get("map").unwrap().as_arr().unwrap();
+        assert_eq!(m.len(), 64);
+        // Malformed blocks rejected.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "bgq":{"block":[2,2,2,2],"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":0}}"#,
+        );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
     }
 

@@ -16,9 +16,11 @@
 //!    coordinates, producing a capacity-balanced task→node assignment:
 //!    with `tnum == num_ranks`, every node receives exactly its rank
 //!    count. Scoring reuses the WeightedHops kernel against node routers,
-//!    which prices intra-node edges at zero by construction — or, with
-//!    [`HierConfig::numa`] set, the NUMA node-level pricing that charges
-//!    still-unsplit intra-node edges the flat socket cost.
+//!    which prices intra-node edges at zero by construction — or, through
+//!    the unified evaluator ([`crate::objective::eval`]), any other
+//!    `objective` × `numa` combination: routed congestion objectives,
+//!    NUMA node-level pricing that charges still-unsplit intra-node edges
+//!    the flat socket cost, or both blended together.
 //! 2. **Node refinement** (the [`IntraNodeStrategy::MinVolume`] strategy) —
 //!    greedy boundary-task swaps ([`refine`]) directly minimize the
 //!    inter-node weighted communication volume the geometric cut only
@@ -67,7 +69,7 @@ use crate::machine::{Allocation, NumaTopology};
 use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::MapConfig;
-use crate::objective::ObjectiveKind;
+use crate::objective::{EvalSpec, ObjectiveKind};
 use crate::par::{self, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
 
@@ -134,8 +136,12 @@ pub struct HierConfig {
     /// the node level prices intra-node edges at the topology's socket
     /// cost, and a socket-level geometric split (plus, under `MinVolume`,
     /// cross-socket refinement) runs inside each node before rank
-    /// placement. Composes only with the `WeightedHops` objective
-    /// (routed-congestion NUMA pricing is future work).
+    /// placement. Composes with **every** objective through the unified
+    /// evaluator ([`crate::objective::eval`]): under `WeightedHops` the
+    /// network term is hop-priced (scaled by `hop_cost`); under the routed
+    /// objectives the blended evaluator layers the socket term onto the
+    /// routed per-link latencies (`hop_cost` must be 1 there — see
+    /// [`crate::objective::EvalSpec::validate`]).
     pub numa: Option<NumaTopology>,
 }
 
@@ -176,8 +182,9 @@ pub struct HierMapping {
     pub task_to_socket: Option<Vec<u32>>,
     /// Objective value of the chosen node-level sweep candidate, **before**
     /// refinement — inter-node WeightedHops (the sweep's own
-    /// f32-accumulated score) under the default objective, the NUMA
-    /// node-level score when [`HierConfig::numa`] is set.
+    /// f32-accumulated score) under the default objective, otherwise the
+    /// composed evaluator's score for the configured `objective` × `numa`
+    /// combination.
     pub node_score: f64,
     /// Node-boundary swaps applied by `MinVolume` refinement (0 otherwise).
     pub swaps_applied: usize,
@@ -266,11 +273,12 @@ pub fn map_hierarchical(
     backend: &dyn WhopsBackend,
 ) -> HierMapping {
     assert_eq!(tcoords.len(), graph.num_tasks);
-    if cfg.numa.is_some() {
-        assert!(
-            cfg.objective == ObjectiveKind::WeightedHops,
-            "depth-3 NUMA mapping composes with the WeightedHops objective only"
-        );
+    let spec = EvalSpec::new(
+        cfg.objective,
+        cfg.numa.map(|t| t.node_level_costs()),
+    );
+    if let Err(e) = spec.validate() {
+        panic!("unsupported objective x numa combination: {e}");
     }
     let par = cfg.parallelism();
     let node_alloc = node_level_alloc(alloc);
@@ -307,30 +315,20 @@ pub fn map_hierarchical(
         .map(|&r| node_alloc.core_node[r as usize])
         .collect();
 
-    // Level 1.5: MinVolume boundary refinement, against the configured
-    // objective (hop-weighted volume by default; routed per-link loads for
-    // the congestion objectives; the socket-cost NUMA pricing at depth 3).
+    // Level 1.5: MinVolume boundary refinement, against the same
+    // composed evaluator the sweep scored with — hop-weighted volume by
+    // default, routed per-link loads for the congestion objectives, the
+    // socket-cost NUMA term layered on either at depth 3.
     let swaps_applied = match cfg.intra {
-        IntraNodeStrategy::MinVolume { passes } => match cfg.numa {
-            Some(topo) => refine::min_volume_refine_numa(
-                graph,
-                &mut task_to_node,
-                &node_routers,
-                &alloc.torus,
-                passes,
-                par,
-                topo.node_level_costs(),
-            ),
-            None => refine::min_volume_refine_with(
-                graph,
-                &mut task_to_node,
-                &node_routers,
-                &alloc.torus,
-                passes,
-                par,
-                cfg.objective,
-            ),
-        },
+        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_eval(
+            graph,
+            &mut task_to_node,
+            &node_routers,
+            &alloc.torus,
+            passes,
+            par,
+            spec,
+        ),
         _ => 0,
     };
 
@@ -702,6 +700,48 @@ mod tests {
         assert_eq!(nm.network_weighted_hops, network);
         assert_eq!(nm.socket_weight, cross);
         assert_eq!(nm.core_weight, same);
+    }
+
+    #[test]
+    fn blended_depth3_runs_end_to_end_and_respects_assignments() {
+        // Routed congestion x NUMA: the full three-level pipeline — node
+        // sweep + blended MinVolume refinement + socket split/refinement —
+        // must still produce a node- and socket-respecting bijection, and
+        // refinement must not worsen the blended objective relative to
+        // the sweep winner.
+        use crate::objective::{build_eval, IncrementalEval};
+        let alloc = toy_alloc(); // 16 nodes x 8 ranks
+        let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
+        let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let hcfg = HierConfig {
+                numa: Some(topo),
+                objective,
+                ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
+            };
+            let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+            let mut s = m.task_to_rank.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..128u32).collect::<Vec<_>>(), "{objective:?}");
+            let socks = m.task_to_socket.as_ref().expect("depth 3 reports sockets");
+            for t in 0..128 {
+                let rank = m.task_to_rank[t] as usize;
+                assert_eq!(alloc.core_node[rank], m.task_to_node[t], "{objective:?}: task {t}");
+                assert_eq!(rank_socks[rank], socks[t], "{objective:?}: task {t}");
+            }
+            // The refined node assignment's blended value is at or below
+            // the sweep winner's (refinement applies only strictly
+            // improving swaps on exactly this evaluator).
+            let spec = EvalSpec::new(objective, Some(topo.node_level_costs()));
+            let routers = alloc.node_routers();
+            let val = build_eval(&alloc.torus, &routers, &g, &m.task_to_node, spec).value();
+            assert!(
+                val <= m.node_score * (1.0 + 1e-9) + 1e-12,
+                "{objective:?}: refinement worsened the blended value: {val} > {}",
+                m.node_score
+            );
+        }
     }
 
     #[test]

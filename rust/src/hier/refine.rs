@@ -1,147 +1,53 @@
 //! MinVolume refinement: greedy boundary swaps on the task→node
-//! assignment.
+//! assignment, generic over the scoring evaluator.
 //!
 //! The node-level geometric partition minimizes cut volume only implicitly
 //! (compact parts have small boundaries); this pass attacks it directly.
-//! The default objective is the inter-node **weighted hops** of the
-//! assignment — `Σ_e w(e) · hops(node(u), node(v))` over the task graph,
-//! which is exactly the Section 3 WeightedHops metric of any mapping that
-//! respects the assignment (intra-node edges cost zero, and every rank of
-//! a node shares its router). [`min_volume_refine_with`] additionally
-//! accepts the routed congestion objectives
-//! ([`crate::objective::ObjectiveKind`]): swap gains are then computed
-//! against per-link loads through an incrementally-maintained
-//! [`crate::objective::CongestionState`] — each candidate swap re-routes
-//! only the edges incident to the swapped pair (O(degree · path-length))
-//! instead of re-evaluating the assignment. A swap of two tasks in
-//! different nodes preserves per-node task counts, so refinement never
-//! breaks the balance the bijection relies on.
+//! What a swap is worth comes from one pluggable
+//! [`crate::objective::IncrementalEval`], built from an
+//! [`EvalSpec`] — the same abstraction at every configuration:
+//!
+//! * **WeightedHops** (the default): the inter-node weighted hops of the
+//!   assignment — `Σ_e w(e) · hops(node(u), node(v))`, exactly the Section
+//!   3 metric of any mapping that respects the assignment.
+//! * **WeightedHops × NUMA** (depth 3): the same hop pricing scaled by
+//!   `hop_cost`, with intra-node edges charged the flat `socket_cost`
+//!   upper bound the later socket split tightens.
+//! * **Routed congestion** (`MaxLinkLoad` / `CongestionBlend`): swap gains
+//!   against incrementally-maintained per-link loads
+//!   ([`crate::objective::CongestionState`]) — each candidate swap
+//!   re-routes only the edges incident to the swapped pair.
+//! * **Routed congestion × NUMA** (blended depth 3): the routed network
+//!   term *plus* the socket-cost intra-node term, priced together in one
+//!   gain — the combination the pre-evaluator scoring arms could not
+//!   express.
+//!
+//! A swap of two tasks in different nodes preserves per-node task counts,
+//! so refinement never breaks the balance the bijection relies on.
 //!
 //! # Determinism
 //!
 //! Each pass has two phases:
-//! 1. **Propose** (parallel over nodes, [`crate::par::map`]): for every
-//!    boundary task, find the best swap partner among the tasks of its
-//!    neighboring nodes against the *frozen* pass-start assignment.
-//!    Proposals are pure functions of that snapshot and land in
-//!    index-addressed slots, so they do not depend on the thread budget.
+//! 1. **Propose** (parallel over nodes, [`crate::par::map_with`]): for
+//!    every boundary task, find the best swap partner among the tasks of
+//!    its neighboring nodes against the *frozen* pass-start assignment and
+//!    evaluator state ([`IncrementalEval::best_partner`]). Proposals are
+//!    pure functions of that snapshot and land in index-addressed slots,
+//!    so they do not depend on the thread budget.
 //! 2. **Apply** (sequential): walk proposals in (node, task) order,
-//!    re-evaluate each gain against the *current* assignment, and apply it
-//!    only if still strictly improving.
+//!    re-evaluate each gain against the *current* assignment
+//!    ([`IncrementalEval::swap_eval`]), and commit it only if still
+//!    strictly improving.
 //!
 //! Both phases are deterministic, so refinement — like every other level
 //! of the hierarchical mapper — is bit-identical at every thread count.
 
 use crate::apps::TaskGraph;
 use crate::machine::Torus;
-use crate::metrics::LinkAccumulator;
-use crate::objective::{CongestionState, ObjectiveKind};
+use crate::objective::{
+    build_eval, Adjacency, EvalScratch, EvalSpec, IncrementalEval, ObjectiveKind,
+};
 use crate::par::{self, Parallelism};
-
-/// Compressed adjacency of the task graph (both directions per edge).
-pub(crate) struct Adjacency {
-    off: Vec<u32>,
-    nbr: Vec<u32>,
-    w: Vec<f64>,
-}
-
-impl Adjacency {
-    pub(crate) fn build(graph: &TaskGraph) -> Adjacency {
-        let n = graph.num_tasks;
-        let mut deg = vec![0u32; n];
-        for e in &graph.edges {
-            deg[e.u as usize] += 1;
-            deg[e.v as usize] += 1;
-        }
-        let mut off = vec![0u32; n + 1];
-        for t in 0..n {
-            off[t + 1] = off[t] + deg[t];
-        }
-        let total = off[n] as usize;
-        let mut nbr = vec![0u32; total];
-        let mut w = vec![0f64; total];
-        let mut cursor = off.clone();
-        for e in &graph.edges {
-            let (u, v) = (e.u as usize, e.v as usize);
-            nbr[cursor[u] as usize] = e.v;
-            w[cursor[u] as usize] = e.w;
-            cursor[u] += 1;
-            nbr[cursor[v] as usize] = e.u;
-            w[cursor[v] as usize] = e.w;
-            cursor[v] += 1;
-        }
-        Adjacency { off, nbr, w }
-    }
-
-    #[inline]
-    pub(crate) fn neighbors(&self, t: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
-        let (lo, hi) = (self.off[t] as usize, self.off[t + 1] as usize);
-        self.nbr[lo..hi].iter().copied().zip(self.w[lo..hi].iter().copied())
-    }
-}
-
-/// Node-pair communication costs: hop distances scaled by `scale`, with a
-/// configurable `diag` for same-node pairs (0 in the pure Section 3 model;
-/// the flat NUMA socket cost under [`min_volume_refine_numa`]). A dense
-/// table while `nn²` stays cheap (the common case — the whole point of the
-/// hierarchy is `nn << nranks`), else computed on the fly from the torus.
-struct NodeHops<'a> {
-    nn: usize,
-    table: Option<Vec<f64>>,
-    torus: &'a Torus,
-    routers: &'a [u32],
-    scale: f64,
-    diag: f64,
-}
-
-/// Largest dense table: 4M entries (32 MB). Beyond that (only the very
-/// largest `--full` sweeps) distances are recomputed per lookup.
-const MAX_TABLE_ENTRIES: usize = 1 << 22;
-
-impl<'a> NodeHops<'a> {
-    fn build_scaled(torus: &'a Torus, routers: &'a [u32], scale: f64, diag: f64) -> NodeHops<'a> {
-        let nn = routers.len();
-        let table = if nn * nn <= MAX_TABLE_ENTRIES {
-            // The fill seeds every diagonal entry with `diag`; only the
-            // off-diagonal pairs are overwritten below.
-            let mut hops = vec![diag; nn * nn];
-            for a in 0..nn {
-                for b in (a + 1)..nn {
-                    let h = torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64
-                        * scale;
-                    hops[a * nn + b] = h;
-                    hops[b * nn + a] = h;
-                }
-            }
-            Some(hops)
-        } else {
-            None
-        };
-        NodeHops {
-            nn,
-            table,
-            torus,
-            routers,
-            scale,
-            diag,
-        }
-    }
-
-    #[inline]
-    fn get(&self, a: u32, b: u32) -> f64 {
-        match &self.table {
-            Some(t) => t[a as usize * self.nn + b as usize],
-            None if a == b => self.diag,
-            None => {
-                self.torus.hop_dist_ids(
-                    self.routers[a as usize] as usize,
-                    self.routers[b as usize] as usize,
-                ) as f64
-                    * self.scale
-            }
-        }
-    }
-}
 
 /// One proposed swap, produced by the parallel phase.
 #[derive(Clone, Copy, Debug)]
@@ -150,46 +56,8 @@ struct Swap {
     b: u32,
 }
 
-/// Cost of placing task `t` on node `x`: Σ over t's edges of
-/// `w · hops(x, node(neighbor))`.
-#[inline]
-fn move_cost(adj: &Adjacency, hops: &NodeHops<'_>, node_of: &[u32], t: usize, x: u32) -> f64 {
-    let mut c = 0f64;
-    for (n, w) in adj.neighbors(t) {
-        c += w * hops.get(x, node_of[n as usize]);
-    }
-    c
-}
-
-/// Gain (strictly positive = improvement) of swapping task `u` (on node
-/// `a`) with task `b` (on node `bn`). The `2·w(u,b)·(hops(a,bn) − diag)`
-/// correction accounts for a direct edge between the pair, whose cost is
-/// unchanged by the swap but double-counted by the two move costs (each
-/// move cost prices it once at the cross-node rate and once at the
-/// same-node `diag` rate).
-fn swap_gain(
-    adj: &Adjacency,
-    hops: &NodeHops<'_>,
-    node_of: &[u32],
-    u: usize,
-    a: u32,
-    b: usize,
-    bn: u32,
-) -> f64 {
-    let mut direct = 0f64;
-    for (n, w) in adj.neighbors(u) {
-        if n as usize == b {
-            direct += w;
-        }
-    }
-    move_cost(adj, hops, node_of, u, a) + move_cost(adj, hops, node_of, b, bn)
-        - move_cost(adj, hops, node_of, u, bn)
-        - move_cost(adj, hops, node_of, b, a)
-        - 2.0 * direct * (hops.get(a, bn) - hops.diag)
-}
-
-/// Inter-node weighted hops of an assignment (the refinement objective;
-/// exposed for tests and experiment reporting).
+/// Inter-node weighted hops of an assignment (the default refinement
+/// objective; exposed for tests and experiment reporting).
 pub fn internode_weighted_hops(
     graph: &TaskGraph,
     node_of: &[u32],
@@ -211,8 +79,9 @@ pub fn internode_weighted_hops(
 }
 
 /// Run up to `passes` refinement passes over `node_of` (task→node, modified
-/// in place). Returns the number of swaps applied. Deterministic and
-/// independent of the thread budget (see the module docs).
+/// in place) under the default inter-node WeightedHops objective. Returns
+/// the number of swaps applied. Deterministic and independent of the
+/// thread budget (see the module docs).
 pub fn min_volume_refine(
     graph: &TaskGraph,
     node_of: &mut [u32],
@@ -221,7 +90,15 @@ pub fn min_volume_refine(
     passes: usize,
     par: Parallelism,
 ) -> usize {
-    refine_hops_impl(graph, node_of, node_routers, torus, passes, par, 1.0, 0.0)
+    min_volume_refine_eval(
+        graph,
+        node_of,
+        node_routers,
+        torus,
+        passes,
+        par,
+        EvalSpec::default(),
+    )
 }
 
 /// [`min_volume_refine`] under the NUMA node-level pricing of
@@ -238,130 +115,19 @@ pub fn min_volume_refine_numa(
     par: Parallelism,
     costs: crate::machine::NumaNodeCosts,
 ) -> usize {
-    refine_hops_impl(
+    min_volume_refine_eval(
         graph,
         node_of,
         node_routers,
         torus,
         passes,
         par,
-        costs.hop,
-        costs.socket,
+        EvalSpec::new(ObjectiveKind::WeightedHops, Some(costs)),
     )
 }
 
-/// Shared hop-priced refinement body: node-pair costs are `scale · hops`
-/// off the diagonal and `diag` on it (see [`NodeHops`]).
-#[allow(clippy::too_many_arguments)]
-fn refine_hops_impl(
-    graph: &TaskGraph,
-    node_of: &mut [u32],
-    node_routers: &[u32],
-    torus: &Torus,
-    passes: usize,
-    par: Parallelism,
-    scale: f64,
-    diag: f64,
-) -> usize {
-    assert_eq!(node_of.len(), graph.num_tasks);
-    let nn = node_routers.len();
-    if nn < 2 || graph.edges.is_empty() {
-        return 0;
-    }
-    let adj = Adjacency::build(graph);
-    let hops = NodeHops::build_scaled(torus, node_routers, scale, diag);
-    let node_ids: Vec<u32> = (0..nn as u32).collect();
-    let mut applied_total = 0usize;
-    for _pass in 0..passes {
-        // Tasks grouped by node against the pass-start snapshot.
-        let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
-        for (t, &x) in node_of.iter().enumerate() {
-            tasks_by_node[x as usize].push(t as u32);
-        }
-        // Phase 1: propose, in parallel over nodes, against the frozen
-        // snapshot. &*node_of reborrows immutably for the scope of the map.
-        let snapshot: &[u32] = node_of;
-        let proposals: Vec<Vec<Swap>> = par::map(par, &node_ids, |_, &a| {
-            let mut out = Vec::new();
-            for &u in &tasks_by_node[a as usize] {
-                // Candidate target nodes: distinct nodes of u's neighbors,
-                // ascending, excluding u's own.
-                let mut targets: Vec<u32> = adj
-                    .neighbors(u as usize)
-                    .map(|(n, _)| snapshot[n as usize])
-                    .filter(|&x| x != a)
-                    .collect();
-                if targets.is_empty() {
-                    continue;
-                }
-                targets.sort_unstable();
-                targets.dedup();
-                let mut best: Option<(f64, u32)> = None;
-                // Hoist the partner-independent halves of the gain:
-                // cost(u, a) per boundary task, cost(u, bn) per target
-                // node. The summation order below matches `swap_gain`
-                // term-for-term, so phase 2's re-check recomputes the
-                // exact same f64.
-                let cost_u_a = move_cost(&adj, &hops, snapshot, u as usize, a);
-                for &bn in &targets {
-                    let cost_u_bn = move_cost(&adj, &hops, snapshot, u as usize, bn);
-                    let h_ab = hops.get(a, bn);
-                    for &b in &tasks_by_node[bn as usize] {
-                        let mut direct = 0f64;
-                        for (n, w) in adj.neighbors(u as usize) {
-                            if n == b {
-                                direct += w;
-                            }
-                        }
-                        let g = cost_u_a + move_cost(&adj, &hops, snapshot, b as usize, bn)
-                            - cost_u_bn
-                            - move_cost(&adj, &hops, snapshot, b as usize, a)
-                            - 2.0 * direct * (h_ab - hops.diag);
-                        let better = match best {
-                            None => g > 0.0,
-                            // Strictly-greater gain wins; ties keep the
-                            // earlier (smaller) partner index.
-                            Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
-                        };
-                        if better && g > 0.0 {
-                            best = Some((g, b));
-                        }
-                    }
-                }
-                if let Some((_, b)) = best {
-                    out.push(Swap { u, b });
-                }
-            }
-            out
-        });
-        // Phase 2: apply sequentially in (node, task) order, re-checking
-        // each gain against the current assignment.
-        let mut applied_this_pass = 0usize;
-        for Swap { u, b } in proposals.into_iter().flatten() {
-            let (a, bn) = (node_of[u as usize], node_of[b as usize]);
-            if a == bn {
-                continue;
-            }
-            let g = swap_gain(&adj, &hops, node_of, u as usize, a, b as usize, bn);
-            if g > 0.0 {
-                node_of[u as usize] = bn;
-                node_of[b as usize] = a;
-                applied_this_pass += 1;
-            }
-        }
-        applied_total += applied_this_pass;
-        if applied_this_pass == 0 {
-            break;
-        }
-    }
-    applied_total
-}
-
-/// [`min_volume_refine`] under a selectable objective: `WeightedHops`
-/// dispatches to the hop-weighted path above; the routed congestion
-/// objectives run [`congestion_refine`], whose swap gains are computed
-/// against incrementally-maintained per-link loads. Deterministic and
-/// independent of the thread budget either way.
+/// [`min_volume_refine`] under a selectable network objective (no NUMA
+/// term). Deterministic and independent of the thread budget either way.
 #[allow(clippy::too_many_arguments)]
 pub fn min_volume_refine_with(
     graph: &TaskGraph,
@@ -372,61 +138,74 @@ pub fn min_volume_refine_with(
     par: Parallelism,
     objective: ObjectiveKind,
 ) -> usize {
-    match objective {
-        ObjectiveKind::WeightedHops => {
-            min_volume_refine(graph, node_of, node_routers, torus, passes, par)
-        }
-        kind => congestion_refine(graph, node_of, node_routers, torus, passes, par, kind),
-    }
+    min_volume_refine_eval(
+        graph,
+        node_of,
+        node_routers,
+        torus,
+        passes,
+        par,
+        EvalSpec::new(objective, None),
+    )
 }
 
-/// Greedy boundary swaps against a routed congestion objective.
-///
-/// Same propose-parallel / apply-sequential structure (and therefore the
-/// same thread-count-invariance argument) as the hop-weighted path, but
-/// gains come from [`CongestionState::swap_gain`]: the per-link load state
-/// is frozen for the parallel proposal phase, each candidate swap re-routes
-/// only its incident edges into a per-worker [`LinkAccumulator`] delta, and
-/// the sequential apply phase re-checks every proposal against the current
-/// state before committing its delta in O(path-length) — no full
-/// re-evaluation anywhere.
+/// The unified refinement entry point: greedy boundary swaps under any
+/// [`EvalSpec`] combination (network objective × optional NUMA term),
+/// through one loop generic over the [`IncrementalEval`] it builds. All
+/// the other `min_volume_refine*` entry points are thin wrappers.
 #[allow(clippy::too_many_arguments)]
-fn congestion_refine(
+pub fn min_volume_refine_eval(
     graph: &TaskGraph,
     node_of: &mut [u32],
     node_routers: &[u32],
     torus: &Torus,
     passes: usize,
     par: Parallelism,
-    kind: ObjectiveKind,
+    spec: EvalSpec,
 ) -> usize {
     assert_eq!(node_of.len(), graph.num_tasks);
     let nn = node_routers.len();
     if nn < 2 || graph.edges.is_empty() {
         return 0;
     }
+    let mut eval = build_eval(torus, node_routers, graph, node_of, spec);
+    refine_loop(graph, node_of, nn, passes, par, &mut eval)
+}
+
+/// The propose-parallel / apply-sequential refinement loop, generic over
+/// the evaluator (see the module docs for the determinism argument).
+fn refine_loop<E: IncrementalEval>(
+    graph: &TaskGraph,
+    node_of: &mut [u32],
+    nn: usize,
+    passes: usize,
+    par: Parallelism,
+    eval: &mut E,
+) -> usize {
     let adj = Adjacency::build(graph);
     let node_ids: Vec<u32> = (0..nn as u32).collect();
-    let mut state = CongestionState::build(torus, node_routers, graph, node_of, kind);
-    let mut apply_acc = LinkAccumulator::new(torus);
+    let mut apply_scratch = EvalScratch::new();
     let mut applied_total = 0usize;
     for _pass in 0..passes {
+        // Tasks grouped by node against the pass-start snapshot.
         let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
         for (t, &x) in node_of.iter().enumerate() {
             tasks_by_node[x as usize].push(t as u32);
         }
-        // Phase 1: propose in parallel over nodes against the frozen
-        // snapshot (assignment + link-load state). Proposals are pure
-        // functions of that snapshot, so they never depend on the budget.
+        // Phase 1: propose, in parallel over nodes, against the frozen
+        // snapshot (assignment + evaluator state). &*node_of reborrows
+        // immutably for the scope of the map.
         let snapshot: &[u32] = node_of;
-        let state_ref = &state;
+        let eval_ref: &E = eval;
         let proposals: Vec<Vec<Swap>> = par::map_with(
             par,
             &node_ids,
-            || LinkAccumulator::new(torus),
-            |acc, _i, &a| {
+            EvalScratch::new,
+            |scratch, _i, &a| {
                 let mut out = Vec::new();
                 for &u in &tasks_by_node[a as usize] {
+                    // Candidate target nodes: distinct nodes of u's
+                    // neighbors, ascending, excluding u's own.
                     let mut targets: Vec<u32> = adj
                         .neighbors(u as usize)
                         .map(|(n, _)| snapshot[n as usize])
@@ -437,29 +216,14 @@ fn congestion_refine(
                     }
                     targets.sort_unstable();
                     targets.dedup();
-                    let mut best: Option<(f64, u32)> = None;
-                    for &bn in &targets {
-                        for &b in &tasks_by_node[bn as usize] {
-                            let g = state_ref.swap_gain(
-                                snapshot,
-                                u as usize,
-                                b as usize,
-                                adj.neighbors(u as usize),
-                                adj.neighbors(b as usize),
-                                acc,
-                            );
-                            let better = match best {
-                                None => g > 0.0,
-                                // Strictly-greater gain wins; ties keep the
-                                // earlier (smaller) partner index.
-                                Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
-                            };
-                            if better && g > 0.0 {
-                                best = Some((g, b));
-                            }
-                        }
-                    }
-                    if let Some((_, b)) = best {
+                    if let Some((_, b)) = eval_ref.best_partner(
+                        snapshot,
+                        &adj,
+                        u as usize,
+                        &targets,
+                        &tasks_by_node,
+                        scratch,
+                    ) {
                         out.push(Swap { u, b });
                     }
                 }
@@ -467,24 +231,17 @@ fn congestion_refine(
             },
         );
         // Phase 2: apply sequentially in (node, task) order, re-checking
-        // each gain against the current state and committing the re-route
-        // delta incrementally.
+        // each gain against the current assignment and committing the
+        // evaluator delta incrementally.
         let mut applied_this_pass = 0usize;
         for Swap { u, b } in proposals.into_iter().flatten() {
             let (a, bn) = (node_of[u as usize], node_of[b as usize]);
             if a == bn {
                 continue;
             }
-            let (g, new_max, new_sum) = state.swap_eval(
-                node_of,
-                u as usize,
-                b as usize,
-                adj.neighbors(u as usize),
-                adj.neighbors(b as usize),
-                &mut apply_acc,
-            );
-            if g > 0.0 {
-                state.commit_evaluated(&apply_acc, new_max, new_sum);
+            let ev = eval.swap_eval(node_of, &adj, u as usize, b as usize, &mut apply_scratch);
+            if ev.gain > 0.0 {
+                eval.commit(&ev, &apply_scratch);
                 node_of[u as usize] = bn;
                 node_of[b as usize] = a;
                 applied_this_pass += 1;
@@ -503,6 +260,7 @@ mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
     use crate::machine::Torus;
+    use crate::objective::CongestionState;
 
     #[test]
     fn refine_reduces_objective_and_preserves_balance() {
@@ -732,6 +490,85 @@ mod tests {
                 costs,
             );
             assert_eq!(par_assign, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn blended_refine_reduces_blended_objective() {
+        // Routed congestion x NUMA: the unified loop must strictly lower
+        // the blended value on a scrambled assignment and preserve
+        // balance — the combination the pre-evaluator arms rejected.
+        use crate::machine::NumaNodeCosts;
+        use crate::objective::{build_eval, IncrementalEval};
+        let g = stencil_graph(&[16], false, 2.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        let spec = EvalSpec::new(
+            ObjectiveKind::MaxLinkLoad,
+            Some(NumaNodeCosts {
+                hop: 1.0,
+                socket: 0.4,
+            }),
+        );
+        let mut node_of: Vec<u32> = (0..16).map(|t| (t % 4) as u32).collect();
+        let before = build_eval(&torus, &routers, &g, &node_of, spec).value();
+        let swaps = min_volume_refine_eval(
+            &g,
+            &mut node_of,
+            &routers,
+            &torus,
+            8,
+            Parallelism::sequential(),
+            spec,
+        );
+        let after = build_eval(&torus, &routers, &g, &node_of, spec).value();
+        assert!(swaps > 0, "no swaps on a scrambled assignment");
+        assert!(after < before, "{after} !< {before}");
+        let mut sizes = [0usize; 4];
+        for &x in &node_of {
+            sizes[x as usize] += 1;
+        }
+        assert_eq!(sizes, [4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn blended_refine_is_thread_count_invariant() {
+        use crate::machine::NumaNodeCosts;
+        let g = stencil_graph(&[6, 6], false, 2.0);
+        let torus = Torus::torus(&[3, 3]);
+        let routers: Vec<u32> = (0..9).collect();
+        let start: Vec<u32> = (0..36).map(|t| (t % 9) as u32).collect();
+        for kind in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let spec = EvalSpec::new(
+                kind,
+                Some(NumaNodeCosts {
+                    hop: 1.0,
+                    socket: 0.3,
+                }),
+            );
+            let mut seq = start.clone();
+            min_volume_refine_eval(
+                &g,
+                &mut seq,
+                &routers,
+                &torus,
+                4,
+                Parallelism::sequential(),
+                spec,
+            );
+            for threads in [2, 8] {
+                let mut par_assign = start.clone();
+                min_volume_refine_eval(
+                    &g,
+                    &mut par_assign,
+                    &routers,
+                    &torus,
+                    4,
+                    Parallelism::threads(threads).with_grain(1),
+                    spec,
+                );
+                assert_eq!(par_assign, seq, "{kind:?} threads={threads}");
+            }
         }
     }
 

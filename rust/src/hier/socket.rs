@@ -20,18 +20,23 @@
 //!    accepted only when strictly improving; gains are the exact
 //!    incremental [`crate::objective::placement_swap_gain`] specialized to
 //!    same-node swaps: `(socket_cost − core_cost) · Δ(cross-socket
-//!    weight)`, O(degree) per candidate.
+//!    weight)`, O(degree) per candidate. This is the blended evaluator's
+//!    gain restricted to within-node swaps: such a swap moves no task
+//!    between nodes, so the network term — hop-priced *or* routed
+//!    per-link loads — is structurally unchanged and only the NUMA term
+//!    moves, which is why the same refinement serves the WeightedHops and
+//!    routed-congestion depth-3 pipelines alike.
 //! 3. [`place_within_sockets`] — each socket's tasks are ordered by the
 //!    [`IntraNodeStrategy`] (ascending, or Hilbert-curve order) and dealt
 //!    round-robin onto the socket's ranks (positions `k·ranks_per_socket..`
 //!    of the node's default rank order, the same assignment
 //!    [`NumaTopology::socket_of_ranks`] reports).
 
-use super::refine::Adjacency;
 use super::IntraNodeStrategy;
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::machine::{Allocation, NumaTopology};
+use crate::objective::Adjacency;
 use crate::par::{self, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
 
@@ -145,7 +150,7 @@ pub fn refine_sockets(
     assert_eq!(task_to_node.len(), graph.num_tasks);
     assert_eq!(task_to_socket.len(), graph.num_tasks);
     if topo.sockets_per_node < 2
-        || topo.socket_cost <= topo.core_cost
+        || topo.swap_gain_scale() <= 0.0
         || graph.edges.is_empty()
         || passes == 0
     {
@@ -203,7 +208,7 @@ pub fn refine_sockets(
                         }
                         let delta = cross_delta(&sock, i, si, sj, j)
                             + cross_delta(&sock, j, sj, si, i);
-                        let g = (topo.socket_cost - topo.core_cost) * delta;
+                        let g = topo.swap_gain_scale() * delta;
                         // Partners scan in ascending j, so the first
                         // strictly-best gain also wins equal-gain ties.
                         if g > 0.0 && best.map_or(true, |(bg, _)| g > bg) {

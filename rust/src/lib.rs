@@ -36,8 +36,13 @@
 //! `WeightedHops` (Eqn 3), `MaxLinkLoad` (Eqn 7 routed bottleneck
 //! latency), and `CongestionBlend` behind one trait, selected per run via
 //! `Z2Config::objective`, `HierConfig::objective`, or the service's
-//! `"objective"` field — the rotation sweep and `MinVolume` refinement
-//! both optimize the selected objective end to end.
+//! `"objective"` field — and the scoring layer itself is one composable
+//! incremental evaluator ([`objective::eval`]): a network term (hop-priced
+//! or routed) layered with an optional intra-node NUMA term, so every
+//! objective composes with depth-3 NUMA mapping (including the blended
+//! routed-congestion × NUMA pipeline) and the rotation sweep, `MinVolume`
+//! refinement, and socket refinement all price swaps under the same
+//! objective end to end.
 //!
 //! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
 //! WeightedHops scoring) is parallel and allocation-free in steady state:

@@ -6,7 +6,7 @@
 //! coordinates" of Section 4) and records node boundaries so metrics can
 //! distinguish intra-node from network communication.
 
-use super::rank_order::{bgq_rank_placement, gemini_curve_order};
+use super::rank_order::{bgq_rank_placement, gemini_curve_order, RankOrderError};
 use super::torus::Torus;
 use crate::geom::Coords;
 use crate::testutil::Rng;
@@ -53,6 +53,9 @@ pub enum AllocError {
     MixedRouters { node: usize },
     /// A heterogeneous constructor input mismatch.
     BadShape(String),
+    /// A malformed BG/Q rank-order string (previously a process-crashing
+    /// panic deep in `rank_order`).
+    RankOrder(RankOrderError),
 }
 
 impl std::fmt::Display for AllocError {
@@ -74,7 +77,14 @@ impl std::fmt::Display for AllocError {
                 write!(f, "ranks of node {node} sit on different routers")
             }
             AllocError::BadShape(msg) => write!(f, "{msg}"),
+            AllocError::RankOrder(e) => write!(f, "{e}"),
         }
+    }
+}
+
+impl From<RankOrderError> for AllocError {
+    fn from(e: RankOrderError) -> AllocError {
+        AllocError::RankOrder(e)
     }
 }
 
@@ -263,18 +273,24 @@ impl Allocation {
     }
 
     /// Contiguous BG/Q block allocation (the whole job block is a complete
-    /// torus — Section 2) with the given rank-order permutation.
-    pub fn bgq(block: [usize; 5], ranks_per_node: usize, perm: &str) -> Allocation {
-        let routers = bgq_rank_placement(&block, ranks_per_node, perm);
+    /// torus — Section 2) with the given rank-order permutation. A
+    /// malformed order string is a structured [`AllocError::RankOrder`]
+    /// instead of a panic.
+    pub fn bgq(
+        block: [usize; 5],
+        ranks_per_node: usize,
+        perm: &str,
+    ) -> Result<Allocation, AllocError> {
+        let routers = bgq_rank_placement(&block, ranks_per_node, perm)?;
         let torus = Torus::torus(&block);
         // On BG/Q one compute node attaches to each router.
         let core_node = routers.iter().map(|&r| r as u32).collect();
-        Allocation {
+        Ok(Allocation {
             torus,
             core_router: routers.iter().map(|&r| r as u32).collect(),
             core_node,
             ranks_per_node,
-        }
+        })
     }
 }
 
@@ -380,7 +396,7 @@ mod tests {
 
     #[test]
     fn bgq_allocation_shape() {
-        let a = Allocation::bgq([2, 2, 2, 4, 2], 4, "ABCDET");
+        let a = Allocation::bgq([2, 2, 2, 4, 2], 4, "ABCDET").unwrap();
         assert_eq!(a.num_ranks(), 64 * 4);
         assert_eq!(a.num_nodes(), 64);
         assert_eq!(a.proc_coords().dim(), 5);
@@ -389,7 +405,7 @@ mod tests {
 
     #[test]
     fn bgq_consecutive_ranks_share_node() {
-        let a = Allocation::bgq([2, 2, 2, 2, 2], 8, "ABCDET");
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 8, "ABCDET").unwrap();
         for r in 0..8 {
             assert_eq!(a.core_node[r], a.core_node[0]);
         }
@@ -437,7 +453,7 @@ mod tests {
     fn node_views_cover_bgq_permuted_orders() {
         // With T first in the permutation, the ranks of one node are not
         // contiguous; the node views must still group them correctly.
-        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "TABCDE");
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "TABCDE").unwrap();
         let groups = a.ranks_by_node();
         assert_eq!(groups.len(), a.num_nodes());
         let mut seen = 0usize;
@@ -478,7 +494,7 @@ mod tests {
 
     #[test]
     fn uniform_num_nodes_accepts_divisible() {
-        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET");
+        let a = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET").unwrap();
         assert_eq!(a.uniform_num_nodes(), Ok(32));
         assert!(a.is_uniform());
         assert!(a.validate().is_ok());

@@ -147,6 +147,15 @@ impl NumaTopology {
             socket: self.socket_cost,
         }
     }
+
+    /// Objective gain per unit Δ(cross-socket weight) of a within-node
+    /// swap — what the socket-level refinement scales its deltas by. A
+    /// within-node swap moves nothing between nodes, so the network term
+    /// (hop-priced or routed) is unchanged and this is the *entire*
+    /// blended-evaluator gain of such a swap.
+    pub fn swap_gain_scale(&self) -> f64 {
+        self.socket_cost - self.core_cost
+    }
 }
 
 #[cfg(test)]

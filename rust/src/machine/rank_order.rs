@@ -14,20 +14,94 @@
 use super::torus::Torus;
 use crate::sfc::hilbert::hilbert_index;
 
+/// Structured parse errors for `ABCDET`-style rank-order strings. These
+/// used to be panics (`bad rank-order letter`), which crashed the whole
+/// process — including the mapping service — on a malformed order string;
+/// callers now get a value they can surface as a validation error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RankOrderError {
+    /// The order string is not exactly 6 letters.
+    BadLength { got: usize },
+    /// A letter outside {A, B, C, D, E, T}.
+    BadLetter { letter: char },
+    /// A letter appears more than once (the order must be a permutation —
+    /// a repeated letter would silently skip part of the block).
+    DuplicateLetter { letter: char },
+}
+
+impl std::fmt::Display for RankOrderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RankOrderError::BadLength { got } => {
+                write!(f, "rank order must be 6 letters over ABCDET, got {got}")
+            }
+            RankOrderError::BadLetter { letter } => {
+                write!(f, "bad rank-order letter {letter:?} (want one of ABCDET)")
+            }
+            RankOrderError::DuplicateLetter { letter } => {
+                write!(f, "rank-order letter {letter:?} appears more than once")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RankOrderError {}
+
+/// Validate an `ABCDET`-style rank-order string: exactly 6 letters, a
+/// permutation of {A, B, C, D, E, T}. Returns the validated bytes.
+pub fn parse_rank_order(perm: &str) -> Result<[u8; 6], RankOrderError> {
+    let bytes = perm.as_bytes();
+    if bytes.len() != 6 {
+        return Err(RankOrderError::BadLength {
+            got: perm.chars().count(),
+        });
+    }
+    let mut out = [0u8; 6];
+    let mut seen = [false; 6];
+    for (i, &c) in bytes.iter().enumerate() {
+        let slot = match c {
+            b'A' => 0,
+            b'B' => 1,
+            b'C' => 2,
+            b'D' => 3,
+            b'E' => 4,
+            b'T' => 5,
+            _ => {
+                return Err(RankOrderError::BadLetter {
+                    letter: c as char,
+                })
+            }
+        };
+        if seen[slot] {
+            return Err(RankOrderError::DuplicateLetter {
+                letter: c as char,
+            });
+        }
+        seen[slot] = true;
+        out[i] = c;
+    }
+    Ok(out)
+}
+
 /// Enumerate BG/Q rank placements for a job block.
 ///
 /// `block` are the A,B,C,D,E extents of the allocated block; `t` is the
 /// number of ranks per node; `perm` is a string over {A,B,C,D,E,T} whose
-/// last letter varies fastest (e.g. the default `"ABCDET"`).
+/// last letter varies fastest (e.g. the default `"ABCDET"`). A malformed
+/// order string returns a structured [`RankOrderError`] instead of
+/// panicking.
 ///
 /// Returns, for each rank, the router id (in the block torus, dimension
 /// order A,B,C,D,E with A *slowest*; we store coords as [a,b,c,d,e] and use
 /// `Torus::id_of` with dimension 0 = A fastest-varying id convention — the
 /// mapping is internally consistent).
-pub fn bgq_rank_placement(block: &[usize; 5], t: usize, perm: &str) -> Vec<usize> {
-    let perm = perm.as_bytes();
-    assert_eq!(perm.len(), 6, "perm must be 6 letters over ABCDET");
-    // Extent per letter.
+pub fn bgq_rank_placement(
+    block: &[usize; 5],
+    t: usize,
+    perm: &str,
+) -> Result<Vec<usize>, RankOrderError> {
+    let perm = parse_rank_order(perm)?;
+    // Extent per (validated) letter.
     let extent = |ch: u8| -> usize {
         match ch {
             b'A' => block[0],
@@ -36,7 +110,7 @@ pub fn bgq_rank_placement(block: &[usize; 5], t: usize, perm: &str) -> Vec<usize
             b'D' => block[3],
             b'E' => block[4],
             b'T' => t,
-            _ => panic!("bad rank-order letter {}", ch as char),
+            _ => unreachable!("parse_rank_order validated the letters"),
         }
     };
     let total: usize = block.iter().product::<usize>() * t;
@@ -71,7 +145,7 @@ pub fn bgq_rank_placement(block: &[usize; 5], t: usize, perm: &str) -> Vec<usize
             digits[li] = 0;
         }
     }
-    out
+    Ok(out)
 }
 
 /// ALPS-style placement curve over a 3D Gemini torus: the order in which the
@@ -116,7 +190,7 @@ mod tests {
     #[test]
     fn bgq_default_places_within_node_first() {
         let block = [2, 2, 2, 2, 2];
-        let ranks = bgq_rank_placement(&block, 4, "ABCDET");
+        let ranks = bgq_rank_placement(&block, 4, "ABCDET").unwrap();
         // First 4 ranks share a router (T fastest), next 4 differ only in E.
         assert_eq!(ranks[0], ranks[1]);
         assert_eq!(ranks[0], ranks[3]);
@@ -132,7 +206,7 @@ mod tests {
     fn bgq_placement_covers_all_ranks() {
         let block = [2, 2, 4, 4, 2];
         let t = 4;
-        let ranks = bgq_rank_placement(&block, t, "ABCDET");
+        let ranks = bgq_rank_placement(&block, t, "ABCDET").unwrap();
         assert_eq!(ranks.len(), 2 * 2 * 4 * 4 * 2 * t);
         // Every router appears exactly t times.
         let mut counts = vec![0usize; 2 * 2 * 4 * 4 * 2];
@@ -147,12 +221,39 @@ mod tests {
         // TABCDE: T slowest -> first num_nodes ranks all hit distinct
         // routers.
         let block = [2, 2, 2, 2, 2];
-        let ranks = bgq_rank_placement(&block, 2, "TABCDE");
+        let ranks = bgq_rank_placement(&block, 2, "TABCDE").unwrap();
         let nodes = 32;
         let mut seen: Vec<usize> = ranks[..nodes].to_vec();
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen.len(), nodes);
+    }
+
+    #[test]
+    fn malformed_rank_orders_are_structured_errors() {
+        let block = [2, 2, 2, 2, 2];
+        // Bad letter (the old panic path).
+        assert_eq!(
+            bgq_rank_placement(&block, 2, "ABCDEX"),
+            Err(RankOrderError::BadLetter { letter: 'X' })
+        );
+        // Wrong length.
+        assert_eq!(
+            bgq_rank_placement(&block, 2, "ABC"),
+            Err(RankOrderError::BadLength { got: 3 })
+        );
+        // Duplicate letter (previously silently skipped part of the block).
+        assert_eq!(
+            bgq_rank_placement(&block, 2, "AABCDE"),
+            Err(RankOrderError::DuplicateLetter { letter: 'A' })
+        );
+        // Errors render as readable messages.
+        assert!(RankOrderError::BadLetter { letter: 'X' }
+            .to_string()
+            .contains("bad rank-order letter"));
+        // Lowercase is rejected too (orders are canonical uppercase).
+        assert!(parse_rank_order("abcdet").is_err());
+        assert!(parse_rank_order("ABCDET").is_ok());
     }
 
     #[test]

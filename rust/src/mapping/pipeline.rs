@@ -334,7 +334,7 @@ mod tests {
     #[test]
     fn plus_e_drops_dimension() {
         let cfg = Z2Config::z2_1().plus_e();
-        let alloc = Allocation::bgq([2, 2, 2, 2, 2], 2, "ABCDET");
+        let alloc = Allocation::bgq([2, 2, 2, 2, 2], 2, "ABCDET").unwrap();
         let p = prepare_proc_coords(&alloc, &cfg);
         assert_eq!(p.dim(), 4);
     }

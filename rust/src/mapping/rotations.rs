@@ -26,10 +26,13 @@
 //!
 //! WeightedHops scoring runs on the `batched_weighted_hops` kernel —
 //! either the AOT artifact runtime (`runtime::PjrtBackend`) or the
-//! bit-equivalent native fallback. Routed objectives (`MaxLinkLoad`,
-//! `CongestionBlend`) score each candidate with one sequential routed pass
-//! through a per-worker [`crate::metrics::LinkAccumulator`]; either way a
-//! candidate's score is a pure function of its mapping, so the sweep stays
+//! bit-equivalent native fallback. Every other objective combination —
+//! routed (`MaxLinkLoad`, `CongestionBlend`), NUMA node-level pricing, and
+//! the blended routed × NUMA spec — scores each candidate with one
+//! sequential f64 pass through the unified evaluator
+//! ([`crate::objective::eval`], per-worker
+//! [`crate::metrics::LinkAccumulator`] scratch); either way a candidate's
+//! score is a pure function of its mapping, so the sweep stays
 //! bit-identical at every thread count.
 
 use super::{
@@ -41,8 +44,11 @@ use crate::machine::{Allocation, NumaNodeCosts};
 use crate::metrics::native::batched_weighted_hops_native_par;
 use crate::metrics::LinkAccumulator;
 use crate::mj::MjScratch;
-use crate::objective::{LinkCosts, Objective, ObjectiveKind};
+use crate::objective::eval::{blended_candidate_score, EvalSpec};
+use crate::objective::{LinkCosts, ObjectiveKind};
 use crate::par::{self, Parallelism};
+
+pub use crate::objective::eval::numa_node_score;
 
 /// Backend for batched WeightedHops evaluation. Implementations: the
 /// in-process native evaluator (below) and the artifact executor
@@ -140,11 +146,14 @@ pub struct SweepConfig {
     /// through the f64 routed-link evaluator.
     pub objective: ObjectiveKind,
     /// NUMA node-level pricing (the depth-3 hierarchical mapper's node
-    /// sweep): inter-node edges cost `hop` per network hop, intra-node
-    /// edges a flat `socket` — the upper bound the later socket split
-    /// tightens. Composes only with the `WeightedHops` objective; scored
-    /// sequentially in f64 per candidate, so the sweep stays bit-identical
-    /// at every thread count.
+    /// sweep): intra-node edges cost a flat `socket` — the upper bound the
+    /// later socket split tightens — on top of the network term. Under
+    /// `WeightedHops` the `hop` factor additionally scales the network
+    /// term; under the routed objectives the blended evaluator layers the
+    /// socket term onto the routed link latencies (`hop` must be 1 there —
+    /// see [`crate::objective::EvalSpec::validate`]). Scored sequentially
+    /// in f64 per candidate, so the sweep stays bit-identical at every
+    /// thread count.
     pub numa: Option<NumaNodeCosts>,
 }
 
@@ -233,24 +242,21 @@ impl ObjectiveScratch {
     }
 }
 
-/// Per-sweep candidate scorer: the objective-dispatched counterpart of
-/// [`BatchScorer`]. `WeightedHops` keeps the kernel-backend path (and its
-/// f32 accumulation semantics, so default-objective sweeps score exactly as
-/// before); routed objectives evaluate per-link loads in f64.
+/// Per-sweep candidate scorer, collapsed onto the unified evaluator: the
+/// plain-WeightedHops spec keeps the kernel-backend path (and its f32
+/// accumulation semantics, so default-objective sweeps score exactly as
+/// before); every other [`EvalSpec`] combination — routed, NUMA, and the
+/// blended routed × NUMA — evaluates through one sequential f64 pass per
+/// candidate in [`crate::objective::eval`].
 enum CandidateScorer<'a> {
     Whops(BatchScorer<'a>),
-    Routed {
+    Eval {
         graph: &'a TaskGraph,
         alloc: &'a Allocation,
-        costs: LinkCosts,
-        obj: &'static dyn Objective,
-    },
-    /// NUMA node-level pricing ([`SweepConfig::numa`]): a sequential f64
-    /// pass per candidate, like the routed arm.
-    Numa {
-        graph: &'a TaskGraph,
-        alloc: &'a Allocation,
-        costs: NumaNodeCosts,
+        spec: EvalSpec,
+        /// Per-link inverse bandwidths, built once per sweep (routed
+        /// network terms only).
+        costs: Option<LinkCosts>,
     },
 }
 
@@ -260,27 +266,23 @@ impl<'a> CandidateScorer<'a> {
         alloc: &'a Allocation,
         sweep: &SweepConfig,
     ) -> CandidateScorer<'a> {
-        if let Some(costs) = sweep.numa {
-            assert!(
-                sweep.objective == ObjectiveKind::WeightedHops,
-                "NUMA node-level pricing composes with the WeightedHops objective only"
-            );
-            return CandidateScorer::Numa {
-                graph,
-                alloc,
-                costs,
-            };
+        let spec = EvalSpec::new(sweep.objective, sweep.numa);
+        if let Err(e) = spec.validate() {
+            panic!("unsupported sweep objective combination: {e}");
         }
-        match sweep.objective {
-            ObjectiveKind::WeightedHops => {
-                CandidateScorer::Whops(BatchScorer::new(graph, alloc, sweep.chunk_edges))
-            }
-            kind => CandidateScorer::Routed {
-                graph,
-                alloc,
-                costs: LinkCosts::new(&alloc.torus),
-                obj: kind.get(),
-            },
+        if spec == EvalSpec::default() {
+            return CandidateScorer::Whops(BatchScorer::new(graph, alloc, sweep.chunk_edges));
+        }
+        let costs = spec
+            .objective
+            .get()
+            .needs_routing()
+            .then(|| LinkCosts::new(&alloc.torus));
+        CandidateScorer::Eval {
+            graph,
+            alloc,
+            spec,
+            costs,
         }
     }
 
@@ -294,54 +296,30 @@ impl<'a> CandidateScorer<'a> {
             CandidateScorer::Whops(scorer) => {
                 scorer.score_one(mapping, backend, &mut scratch.score)
             }
-            CandidateScorer::Routed {
+            CandidateScorer::Eval {
                 graph,
                 alloc,
+                spec,
                 costs,
-                obj,
-            } => {
-                let acc = scratch
-                    .routed
-                    .get_or_insert_with(|| LinkAccumulator::new(&alloc.torus));
-                obj.score_one(graph, mapping, alloc, costs, acc)
-            }
-            CandidateScorer::Numa {
-                graph,
-                alloc,
-                costs,
-            } => numa_node_score(graph, mapping, alloc, *costs),
+            } => match (spec.objective, spec.numa) {
+                (ObjectiveKind::WeightedHops, Some(c)) => {
+                    numa_node_score(graph, mapping, alloc, c)
+                }
+                (kind, numa) => {
+                    let costs = costs.as_ref().expect("routed objectives build LinkCosts");
+                    let acc = scratch
+                        .routed
+                        .get_or_insert_with(|| LinkAccumulator::new(&alloc.torus));
+                    match numa {
+                        None => kind.get().score_one(graph, mapping, alloc, costs, acc),
+                        Some(c) => blended_candidate_score(
+                            graph, mapping, alloc, kind, c.socket, costs, acc,
+                        ),
+                    }
+                }
+            },
         }
     }
-}
-
-/// NUMA pricing of a node-level candidate: inter-node edges at `hop` per
-/// network hop, intra-node edges at the flat `socket` upper bound (the
-/// socket split is not decided yet at sweep time). One sequential f64 pass
-/// in edge order — a pure function of the mapping, so sweeps stay
-/// bit-identical at every thread count.
-pub fn numa_node_score(
-    graph: &TaskGraph,
-    mapping: &[u32],
-    alloc: &Allocation,
-    costs: NumaNodeCosts,
-) -> f64 {
-    assert_eq!(mapping.len(), graph.num_tasks);
-    let torus = &alloc.torus;
-    let mut total = 0f64;
-    for e in &graph.edges {
-        let ra = mapping[e.u as usize] as usize;
-        let rb = mapping[e.v as usize] as usize;
-        if alloc.core_node[ra] == alloc.core_node[rb] {
-            total += costs.socket * e.w;
-        } else {
-            let h = torus.hop_dist_ids(
-                alloc.core_router[ra] as usize,
-                alloc.core_router[rb] as usize,
-            );
-            total += costs.hop * e.w * h as f64;
-        }
-    }
-    total
 }
 
 /// Per-sweep scoring context: everything that depends only on
@@ -781,6 +759,61 @@ mod tests {
             res.scores[res.chosen],
             numa_node_score(&g, &res.task_to_rank, &alloc, costs)
         );
+    }
+
+    #[test]
+    fn sweep_under_blended_pricing_picks_its_own_minimum() {
+        // Routed congestion x NUMA: the chosen candidate minimizes the
+        // blended score, and the winning score matches a re-evaluation of
+        // the mapping through the evaluator's full-candidate scorer.
+        use crate::metrics::LinkAccumulator;
+        use crate::objective::LinkCosts;
+        let g = stencil_graph(&[2, 16], false, 1.0);
+        // 16 nodes of 2 ranks each on a 16-ring.
+        let alloc = Allocation {
+            torus: Torus::torus(&[16]),
+            core_router: (0..32u32).map(|r| r / 2).collect(),
+            core_node: (0..32u32).map(|r| r / 2).collect(),
+            ranks_per_node: 2,
+        };
+        let costs = NumaNodeCosts {
+            hop: 1.0,
+            socket: 0.5,
+        };
+        for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
+            let sweep = SweepConfig {
+                objective,
+                numa: Some(costs),
+                ..Default::default()
+            };
+            let map_cfg = MapConfig {
+                longest_dim: false,
+                ..Default::default()
+            };
+            let res = rotation_sweep(
+                &g,
+                &g.coords,
+                &alloc.proc_coords(),
+                &alloc,
+                &map_cfg,
+                &sweep,
+                &NativeBackend,
+            );
+            let min = res.scores.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(res.scores[res.chosen], min, "{objective:?}");
+            let link_costs = LinkCosts::new(&alloc.torus);
+            let mut acc = LinkAccumulator::new(&alloc.torus);
+            let want = blended_candidate_score(
+                &g,
+                &res.task_to_rank,
+                &alloc,
+                objective,
+                costs.socket,
+                &link_costs,
+                &mut acc,
+            );
+            assert_eq!(res.scores[res.chosen], want, "{objective:?}");
+        }
     }
 
     #[test]

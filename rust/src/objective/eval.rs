@@ -1,0 +1,1012 @@
+//! The composable incremental evaluator: one scoring abstraction for every
+//! level of the mapper.
+//!
+//! Before this module, the scoring layer had three parallel arms — the
+//! rotation sweep's `CandidateScorer::{Whops, Routed, Numa}`, the
+//! hop-priced `MinVolume` refinement, and the congestion refinement over
+//! [`CongestionState`] — and each (network objective × NUMA) combination
+//! needed its own hard-wired path, which is why routed congestion could not
+//! compose with depth-3 NUMA mapping. This module replaces the arms with
+//! one abstraction that *layers* two terms:
+//!
+//! * a **network term** — either plain weighted hops (`scale · hops` per
+//!   unit weight between nodes, the [`HopEval`] implementation) or routed
+//!   per-link loads reduced by a congestion objective
+//!   ([`RoutedEval`], backed by [`CongestionState`]);
+//! * an optional **intra-node NUMA term** — before the socket split exists,
+//!   every intra-node edge is priced at the flat `socket_cost` upper bound
+//!   ([`crate::machine::NumaNodeCosts::socket`]); the depth-3 socket level
+//!   later tightens exactly this term (see [`crate::hier::socket`]). For
+//!   the hop network term the NUMA term folds into the hop table's
+//!   diagonal (bit-identical to the pre-refactor `min_volume_refine_numa`
+//!   path); for routed network terms it is tracked as a separate
+//!   intra-node weight, which is what makes **routed congestion × NUMA**
+//!   expressible at all.
+//!
+//! Which combination runs is a pure-data [`EvalSpec`] (`objective` ×
+//! `numa`), the handle `Z2Config`/`SweepConfig`/`HierConfig` and the
+//! service thread through the stack. All six combinations (3 objectives ×
+//! {NUMA, plain}) are supported; [`EvalSpec::validate`] is the seam where
+//! a future unsupported pairing becomes a structured error instead of a
+//! silently different objective.
+//!
+//! # The swap-gain contract
+//!
+//! [`IncrementalEval`] is the refinement-side interface:
+//!
+//! * [`value`](IncrementalEval::value) — the cached objective value of the
+//!   current assignment (maintained across commits);
+//! * [`full_eval`](IncrementalEval::full_eval) — a from-scratch
+//!   re-evaluation of an arbitrary assignment: the arbiter. For every
+//!   implementation, `swap_eval(..).gain == full_eval(before) −
+//!   full_eval(after)` up to f64 rounding — pinned by the
+//!   `prop_blended_incremental_gain_equals_full_eval` property test;
+//! * [`swap_eval`](IncrementalEval::swap_eval) — the gain of swapping two
+//!   tasks between their nodes, computed by re-pricing only the edges
+//!   incident to the pair (O(degree) for the hop term, O(degree ·
+//!   path-length) for the routed term), plus whatever post-swap state a
+//!   commit needs (bottleneck latency, latency sum, intra-node weight);
+//! * [`commit`](IncrementalEval::commit) — apply the swap evaluated by the
+//!   *immediately preceding* `swap_eval` on the same scratch. The caller
+//!   then updates its own `node_of` array;
+//! * [`best_partner`](IncrementalEval::best_partner) — the propose-phase
+//!   hook: the best strictly-improving partner for one task against a
+//!   frozen snapshot. The default implementation loops `swap_gain`;
+//!   [`HopEval`] overrides it with the hoisted arithmetic the hop
+//!   refinement always used, term-for-term identical to its `swap_eval`
+//!   so the sequential apply phase re-derives the exact same f64 gains.
+//!
+//! Determinism: evaluators are immutable (`&self`) during the parallel
+//! propose phase and mutated only by the sequential apply phase, so every
+//! refinement built on them stays bit-identical at every thread count.
+//!
+//! # Full (batch) evaluation
+//!
+//! The rotation sweep scores whole candidate mappings, not swaps:
+//! [`numa_node_score`] (hop network term × NUMA term, one f64 pass in edge
+//! order — unchanged from the depth-3 sweep arm it replaces),
+//! [`blended_candidate_score`] (routed network term × NUMA term), and
+//! [`combined_value`] (the response-side composition of an
+//! [`crate::metrics::eval_full`] run with an
+//! [`crate::objective::NumaMetrics`] breakdown, used by the service and
+//! the experiment tables). The plain paths keep their original arithmetic,
+//! so default-objective and whops×NUMA sweeps score bit-identically to the
+//! pre-refactor code.
+//!
+//! The depth-4 cache level is a one-term extension of this module: a
+//! `cache_cost < socket_cost` becomes a second intra-node term the same
+//! way the socket term composes today, not a fourth scoring arm.
+
+use super::{CongestionState, LinkCosts, NumaMetrics, ObjectiveKind};
+use crate::apps::TaskGraph;
+use crate::machine::{Allocation, NumaNodeCosts, NumaTopology, Torus};
+use crate::metrics::{LinkAccumulator, Metrics};
+
+/// Which evaluator to build: the network objective plus the optional
+/// intra-node NUMA pricing. Pure data (`Copy`), so it travels through the
+/// `Copy` sweep configuration exactly like [`ObjectiveKind`] does.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalSpec {
+    /// The network term: `WeightedHops` prices hops, the routed kinds
+    /// price per-link latencies through [`CongestionState`].
+    pub objective: ObjectiveKind,
+    /// The intra-node term: when set, intra-node edges cost
+    /// `numa.socket` per unit weight (the pre-split upper bound). For the
+    /// `WeightedHops` objective `numa.hop` additionally scales the network
+    /// term; routed objectives price links by bandwidth, so they require
+    /// `numa.hop == 1` (see [`EvalSpec::validate`]).
+    pub numa: Option<NumaNodeCosts>,
+}
+
+impl EvalSpec {
+    pub fn new(objective: ObjectiveKind, numa: Option<NumaNodeCosts>) -> EvalSpec {
+        EvalSpec { objective, numa }
+    }
+
+    /// Whether this spec layers both a routed network term and a NUMA term
+    /// (the combination the pre-refactor scoring arms could not express).
+    pub fn is_blended(&self) -> bool {
+        self.numa.is_some() && self.objective != ObjectiveKind::WeightedHops
+    }
+
+    /// Reject combinations the evaluator cannot express, with a message
+    /// suitable for surfacing to service clients. Today that is exactly
+    /// one: a routed objective with a non-unit `hop` cost — link latencies
+    /// are priced by bandwidth, not hops, so scaling them by `hop` would
+    /// silently score a different objective than requested.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(c) = self.numa {
+            if self.objective != ObjectiveKind::WeightedHops && c.hop != 1.0 {
+                return Err(format!(
+                    "numa.hop_cost {} does not compose with the {} objective: \
+                     routed link latencies are priced by bandwidth, so hop_cost \
+                     must be 1 (scale bandwidths instead)",
+                    c.hop,
+                    self.objective.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Reporting name, e.g. `"maxload+numa"`.
+    pub fn name(&self) -> String {
+        match self.numa {
+            None => self.objective.name().to_string(),
+            Some(_) => format!("{}+numa", self.objective.name()),
+        }
+    }
+}
+
+/// Compressed adjacency of a task graph (both directions per edge): the
+/// edge-iteration substrate every incremental evaluator prices swaps over.
+pub struct Adjacency {
+    off: Vec<u32>,
+    nbr: Vec<u32>,
+    w: Vec<f64>,
+}
+
+impl Adjacency {
+    pub fn build(graph: &TaskGraph) -> Adjacency {
+        let n = graph.num_tasks;
+        let mut deg = vec![0u32; n];
+        for e in &graph.edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let mut off = vec![0u32; n + 1];
+        for t in 0..n {
+            off[t + 1] = off[t] + deg[t];
+        }
+        let total = off[n] as usize;
+        let mut nbr = vec![0u32; total];
+        let mut w = vec![0f64; total];
+        let mut cursor = off.clone();
+        for e in &graph.edges {
+            let (u, v) = (e.u as usize, e.v as usize);
+            nbr[cursor[u] as usize] = e.v;
+            w[cursor[u] as usize] = e.w;
+            cursor[u] += 1;
+            nbr[cursor[v] as usize] = e.u;
+            w[cursor[v] as usize] = e.w;
+            cursor[v] += 1;
+        }
+        Adjacency { off, nbr, w }
+    }
+
+    /// `(neighbor task, edge weight)` pairs of task `t`, in build order.
+    #[inline]
+    pub fn neighbors(&self, t: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (lo, hi) = (self.off[t] as usize, self.off[t + 1] as usize);
+        self.nbr[lo..hi].iter().copied().zip(self.w[lo..hi].iter().copied())
+    }
+}
+
+/// Per-worker evaluator scratch: the routed evaluators' re-route delta
+/// accumulator (lazily allocated on first use; the hop evaluator needs
+/// none). One per refinement worker; never shared between concurrent
+/// workers. After [`IncrementalEval::swap_eval`] it holds that swap's
+/// link-load delta, which the paired [`IncrementalEval::commit`] applies.
+#[derive(Default)]
+pub struct EvalScratch {
+    routed: Option<LinkAccumulator>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+}
+
+/// Result of [`IncrementalEval::swap_eval`]: the objective gain plus the
+/// post-swap state a commit needs (opaque to callers).
+#[derive(Clone, Copy, Debug)]
+pub struct SwapEval {
+    /// Objective gain (strictly positive = improvement), exact with
+    /// respect to [`IncrementalEval::full_eval`] re-evaluation.
+    pub gain: f64,
+    new_max: f64,
+    new_sum: f64,
+    new_intra: f64,
+}
+
+/// The incremental-evaluator contract (see the module docs for the full
+/// swap-gain contract and determinism argument).
+pub trait IncrementalEval: Sync {
+    /// Cached objective value of the current assignment.
+    fn value(&self) -> f64;
+
+    /// From-scratch evaluation of an arbitrary assignment — the arbiter
+    /// the incremental gains are pinned against.
+    fn full_eval(&self, graph: &TaskGraph, node_of: &[u32]) -> f64;
+
+    /// Evaluate swapping tasks `u` and `b` between their (distinct) nodes.
+    /// The scratch afterwards holds whatever delta
+    /// [`commit`](IncrementalEval::commit) needs.
+    fn swap_eval(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        b: usize,
+        scratch: &mut EvalScratch,
+    ) -> SwapEval;
+
+    /// Gain only (see [`swap_eval`](IncrementalEval::swap_eval)).
+    fn swap_gain(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        b: usize,
+        scratch: &mut EvalScratch,
+    ) -> f64 {
+        self.swap_eval(node_of, adj, u, b, scratch).gain
+    }
+
+    /// Apply the swap evaluated by the immediately preceding
+    /// [`swap_eval`](IncrementalEval::swap_eval) on the same scratch. The
+    /// caller updates its `node_of` array itself.
+    fn commit(&mut self, ev: &SwapEval, scratch: &EvalScratch);
+
+    /// Propose-phase hook: the best strictly-improving swap partner for
+    /// task `u` among the tasks of `targets` nodes, against the frozen
+    /// snapshot `node_of`. Ties keep the earlier (smaller) partner index.
+    /// The default loops [`swap_gain`](IncrementalEval::swap_gain);
+    /// implementations may hoist partner-independent work as long as the
+    /// computed gains stay bit-identical to `swap_eval`'s.
+    fn best_partner(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        targets: &[u32],
+        tasks_by_node: &[Vec<u32>],
+        scratch: &mut EvalScratch,
+    ) -> Option<(f64, u32)> {
+        let mut best: Option<(f64, u32)> = None;
+        for &bn in targets {
+            for &b in &tasks_by_node[bn as usize] {
+                let g = self.swap_gain(node_of, adj, u, b as usize, scratch);
+                let better = match best {
+                    None => g > 0.0,
+                    // Strictly-greater gain wins; ties keep the earlier
+                    // (smaller) partner index.
+                    Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
+                };
+                if better && g > 0.0 {
+                    best = Some((g, b));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Node-pair communication costs: hop distances scaled by `scale`, with a
+/// configurable `diag` for same-node pairs (0 in the pure Section 3 model;
+/// the flat NUMA socket cost at depth 3). A dense table while `nn²` stays
+/// cheap (the common case — the whole point of the hierarchy is
+/// `nn << nranks`), else computed on the fly from the torus.
+struct NodeHops<'a> {
+    nn: usize,
+    table: Option<Vec<f64>>,
+    torus: &'a Torus,
+    routers: &'a [u32],
+    scale: f64,
+    diag: f64,
+}
+
+/// Largest dense table: 4M entries (32 MB). Beyond that (only the very
+/// largest `--full` sweeps) distances are recomputed per lookup.
+const MAX_TABLE_ENTRIES: usize = 1 << 22;
+
+impl<'a> NodeHops<'a> {
+    fn build(torus: &'a Torus, routers: &'a [u32], scale: f64, diag: f64) -> NodeHops<'a> {
+        let nn = routers.len();
+        let table = if nn * nn <= MAX_TABLE_ENTRIES {
+            // The fill seeds every diagonal entry with `diag`; only the
+            // off-diagonal pairs are overwritten below.
+            let mut hops = vec![diag; nn * nn];
+            for a in 0..nn {
+                for b in (a + 1)..nn {
+                    let h = torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64
+                        * scale;
+                    hops[a * nn + b] = h;
+                    hops[b * nn + a] = h;
+                }
+            }
+            Some(hops)
+        } else {
+            None
+        };
+        NodeHops {
+            nn,
+            table,
+            torus,
+            routers,
+            scale,
+            diag,
+        }
+    }
+
+    #[inline]
+    fn get(&self, a: u32, b: u32) -> f64 {
+        match &self.table {
+            Some(t) => t[a as usize * self.nn + b as usize],
+            None if a == b => self.diag,
+            None => {
+                self.torus.hop_dist_ids(
+                    self.routers[a as usize] as usize,
+                    self.routers[b as usize] as usize,
+                ) as f64
+                    * self.scale
+            }
+        }
+    }
+}
+
+/// Cost of placing task `t` on node `x`: Σ over t's edges of
+/// `w · hops(x, node(neighbor))`.
+#[inline]
+fn move_cost(adj: &Adjacency, hops: &NodeHops<'_>, node_of: &[u32], t: usize, x: u32) -> f64 {
+    let mut c = 0f64;
+    for (n, w) in adj.neighbors(t) {
+        c += w * hops.get(x, node_of[n as usize]);
+    }
+    c
+}
+
+/// Hop-priced evaluator: the network term is `scale · hops` per unit
+/// weight, the intra-node term the table diagonal (`diag`; 0 without NUMA
+/// pricing). This is the pre-refactor hop refinement expressed through the
+/// evaluator contract — gains and tie-breaks are bit-identical to it.
+pub struct HopEval<'a> {
+    hops: NodeHops<'a>,
+    value: f64,
+}
+
+impl<'a> HopEval<'a> {
+    pub fn build(
+        torus: &'a Torus,
+        routers: &'a [u32],
+        graph: &TaskGraph,
+        node_of: &[u32],
+        scale: f64,
+        diag: f64,
+    ) -> HopEval<'a> {
+        assert_eq!(node_of.len(), graph.num_tasks);
+        let hops = NodeHops::build(torus, routers, scale, diag);
+        let mut value = 0f64;
+        for e in &graph.edges {
+            value += e.w * hops.get(node_of[e.u as usize], node_of[e.v as usize]);
+        }
+        HopEval { hops, value }
+    }
+
+    /// Gain of swapping task `u` (on node `a`) with task `b` (on node
+    /// `bn`). The `2·w(u,b)·(hops(a,bn) − diag)` correction accounts for a
+    /// direct edge between the pair, whose cost is unchanged by the swap
+    /// but double-counted by the two move costs (each move cost prices it
+    /// once at the cross-node rate and once at the same-node `diag` rate).
+    fn hop_swap_gain(&self, node_of: &[u32], adj: &Adjacency, u: usize, b: usize) -> f64 {
+        let (a, bn) = (node_of[u], node_of[b]);
+        debug_assert_ne!(a, bn, "swap within one node is a no-op");
+        let mut direct = 0f64;
+        for (n, w) in adj.neighbors(u) {
+            if n as usize == b {
+                direct += w;
+            }
+        }
+        move_cost(adj, &self.hops, node_of, u, a) + move_cost(adj, &self.hops, node_of, b, bn)
+            - move_cost(adj, &self.hops, node_of, u, bn)
+            - move_cost(adj, &self.hops, node_of, b, a)
+            - 2.0 * direct * (self.hops.get(a, bn) - self.hops.diag)
+    }
+}
+
+impl IncrementalEval for HopEval<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn full_eval(&self, graph: &TaskGraph, node_of: &[u32]) -> f64 {
+        assert_eq!(node_of.len(), graph.num_tasks);
+        let mut value = 0f64;
+        for e in &graph.edges {
+            value += e.w * self.hops.get(node_of[e.u as usize], node_of[e.v as usize]);
+        }
+        value
+    }
+
+    fn swap_eval(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        b: usize,
+        _scratch: &mut EvalScratch,
+    ) -> SwapEval {
+        SwapEval {
+            gain: self.hop_swap_gain(node_of, adj, u, b),
+            new_max: 0.0,
+            new_sum: 0.0,
+            new_intra: 0.0,
+        }
+    }
+
+    fn commit(&mut self, ev: &SwapEval, _scratch: &EvalScratch) {
+        self.value -= ev.gain;
+    }
+
+    fn best_partner(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        targets: &[u32],
+        tasks_by_node: &[Vec<u32>],
+        _scratch: &mut EvalScratch,
+    ) -> Option<(f64, u32)> {
+        // Hoist the partner-independent halves of the gain: cost(u, a)
+        // per task, cost(u, bn) per target node. The summation order
+        // matches `hop_swap_gain` term-for-term, so the apply phase's
+        // re-check recomputes the exact same f64.
+        let a = node_of[u];
+        let cost_u_a = move_cost(adj, &self.hops, node_of, u, a);
+        let mut best: Option<(f64, u32)> = None;
+        for &bn in targets {
+            let cost_u_bn = move_cost(adj, &self.hops, node_of, u, bn);
+            let h_ab = self.hops.get(a, bn);
+            for &b in &tasks_by_node[bn as usize] {
+                let mut direct = 0f64;
+                for (n, w) in adj.neighbors(u) {
+                    if n == b {
+                        direct += w;
+                    }
+                }
+                let g = cost_u_a + move_cost(adj, &self.hops, node_of, b as usize, bn)
+                    - cost_u_bn
+                    - move_cost(adj, &self.hops, node_of, b as usize, a)
+                    - 2.0 * direct * (h_ab - self.hops.diag);
+                let better = match best {
+                    None => g > 0.0,
+                    // Strictly-greater gain wins; ties keep the earlier
+                    // (smaller) partner index.
+                    Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
+                };
+                if better && g > 0.0 {
+                    best = Some((g, b));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Σ weight over intra-node edges of an assignment: the quantity the
+/// pre-split NUMA term prices at `socket_cost`.
+fn intra_node_weight(graph: &TaskGraph, node_of: &[u32]) -> f64 {
+    let mut w = 0f64;
+    for e in &graph.edges {
+        if node_of[e.u as usize] == node_of[e.v as usize] {
+            w += e.w;
+        }
+    }
+    w
+}
+
+/// Δ(intra-node weight) of swapping tasks `u` and `b` between their
+/// nodes, over the pair's incident edges. The direct edge `u–b` (if any)
+/// stays cross-node and is skipped.
+fn intra_delta(node_of: &[u32], adj: &Adjacency, u: usize, b: usize) -> f64 {
+    let (a, bn) = (node_of[u], node_of[b]);
+    debug_assert_ne!(a, bn, "swap within one node is a no-op");
+    let mut d = 0f64;
+    for (n, w) in adj.neighbors(u) {
+        if n as usize == b {
+            continue;
+        }
+        let x = node_of[n as usize];
+        if x == a {
+            d -= w; // was intra on a, now cross from bn
+        } else if x == bn {
+            d += w; // was cross, now intra on bn
+        }
+    }
+    for (n, w) in adj.neighbors(b) {
+        if n as usize == u {
+            continue;
+        }
+        let x = node_of[n as usize];
+        if x == bn {
+            d -= w;
+        } else if x == a {
+            d += w;
+        }
+    }
+    d
+}
+
+/// Routed evaluator: the network term is a congestion objective over
+/// incrementally-maintained per-link loads ([`CongestionState`]); the
+/// optional `intra_cost` layers the NUMA term — `intra_cost · Σ w` over
+/// intra-node edges — on top. With `intra_cost == None` the gains are
+/// bit-identical to the pre-refactor congestion refinement.
+pub struct RoutedEval<'a> {
+    state: CongestionState<'a>,
+    kind: ObjectiveKind,
+    intra_cost: Option<f64>,
+    intra_weight: f64,
+}
+
+impl<'a> RoutedEval<'a> {
+    pub fn build(
+        torus: &'a Torus,
+        routers: &'a [u32],
+        graph: &TaskGraph,
+        node_of: &[u32],
+        kind: ObjectiveKind,
+        intra_cost: Option<f64>,
+    ) -> RoutedEval<'a> {
+        let state = CongestionState::build(torus, routers, graph, node_of, kind);
+        let intra_weight = if intra_cost.is_some() {
+            intra_node_weight(graph, node_of)
+        } else {
+            0.0
+        };
+        RoutedEval {
+            state,
+            kind,
+            intra_cost,
+            intra_weight,
+        }
+    }
+}
+
+impl IncrementalEval for RoutedEval<'_> {
+    fn value(&self) -> f64 {
+        match self.intra_cost {
+            None => self.state.value(),
+            Some(c) => self.state.value() + c * self.intra_weight,
+        }
+    }
+
+    fn full_eval(&self, graph: &TaskGraph, node_of: &[u32]) -> f64 {
+        let fresh =
+            CongestionState::build(self.state.torus, self.state.routers, graph, node_of, self.kind);
+        match self.intra_cost {
+            None => fresh.value(),
+            Some(c) => fresh.value() + c * intra_node_weight(graph, node_of),
+        }
+    }
+
+    fn swap_eval(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        b: usize,
+        scratch: &mut EvalScratch,
+    ) -> SwapEval {
+        let acc = scratch
+            .routed
+            .get_or_insert_with(|| LinkAccumulator::new(self.state.torus));
+        let (net_gain, new_max, new_sum) =
+            self.state
+                .swap_eval(node_of, u, b, adj.neighbors(u), adj.neighbors(b), acc);
+        match self.intra_cost {
+            None => SwapEval {
+                gain: net_gain,
+                new_max,
+                new_sum,
+                new_intra: 0.0,
+            },
+            Some(c) => {
+                let d = intra_delta(node_of, adj, u, b);
+                SwapEval {
+                    // Blended gain: (net_before + c·w) − (net_after +
+                    // c·(w + d)) = net_gain − c·d.
+                    gain: net_gain - c * d,
+                    new_max,
+                    new_sum,
+                    new_intra: self.intra_weight + d,
+                }
+            }
+        }
+    }
+
+    fn commit(&mut self, ev: &SwapEval, scratch: &EvalScratch) {
+        let acc = scratch
+            .routed
+            .as_ref()
+            .expect("commit must follow swap_eval on the same scratch");
+        self.state.commit_evaluated(acc, ev.new_max, ev.new_sum);
+        if self.intra_cost.is_some() {
+            self.intra_weight = ev.new_intra;
+        }
+    }
+}
+
+/// The evaluator behind an [`EvalSpec`] — what `CandidateScorer` and the
+/// unified `MinVolume` refinement dispatch over.
+pub enum Eval<'a> {
+    Hops(HopEval<'a>),
+    Routed(RoutedEval<'a>),
+}
+
+/// Build the evaluator for `spec` over the node-level assignment
+/// `node_of` (task `t` on node `node_of[t]`, node `x` at router
+/// `routers[x]`).
+pub fn build_eval<'a>(
+    torus: &'a Torus,
+    routers: &'a [u32],
+    graph: &TaskGraph,
+    node_of: &[u32],
+    spec: EvalSpec,
+) -> Eval<'a> {
+    match (spec.objective, spec.numa) {
+        (ObjectiveKind::WeightedHops, None) => {
+            Eval::Hops(HopEval::build(torus, routers, graph, node_of, 1.0, 0.0))
+        }
+        (ObjectiveKind::WeightedHops, Some(c)) => {
+            Eval::Hops(HopEval::build(torus, routers, graph, node_of, c.hop, c.socket))
+        }
+        (kind, numa) => Eval::Routed(RoutedEval::build(
+            torus,
+            routers,
+            graph,
+            node_of,
+            kind,
+            numa.map(|c| c.socket),
+        )),
+    }
+}
+
+impl IncrementalEval for Eval<'_> {
+    fn value(&self) -> f64 {
+        match self {
+            Eval::Hops(e) => e.value(),
+            Eval::Routed(e) => e.value(),
+        }
+    }
+
+    fn full_eval(&self, graph: &TaskGraph, node_of: &[u32]) -> f64 {
+        match self {
+            Eval::Hops(e) => e.full_eval(graph, node_of),
+            Eval::Routed(e) => e.full_eval(graph, node_of),
+        }
+    }
+
+    fn swap_eval(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        b: usize,
+        scratch: &mut EvalScratch,
+    ) -> SwapEval {
+        match self {
+            Eval::Hops(e) => e.swap_eval(node_of, adj, u, b, scratch),
+            Eval::Routed(e) => e.swap_eval(node_of, adj, u, b, scratch),
+        }
+    }
+
+    fn commit(&mut self, ev: &SwapEval, scratch: &EvalScratch) {
+        match self {
+            Eval::Hops(e) => e.commit(ev, scratch),
+            Eval::Routed(e) => e.commit(ev, scratch),
+        }
+    }
+
+    fn best_partner(
+        &self,
+        node_of: &[u32],
+        adj: &Adjacency,
+        u: usize,
+        targets: &[u32],
+        tasks_by_node: &[Vec<u32>],
+        scratch: &mut EvalScratch,
+    ) -> Option<(f64, u32)> {
+        match self {
+            Eval::Hops(e) => e.best_partner(node_of, adj, u, targets, tasks_by_node, scratch),
+            Eval::Routed(e) => e.best_partner(node_of, adj, u, targets, tasks_by_node, scratch),
+        }
+    }
+}
+
+/// NUMA pricing of a node-level candidate mapping: inter-node edges at
+/// `hop` per network hop, intra-node edges at the flat `socket` upper
+/// bound (the socket split is not decided yet at sweep time). One
+/// sequential f64 pass in edge order — a pure function of the mapping, so
+/// sweeps stay bit-identical at every thread count.
+pub fn numa_node_score(
+    graph: &TaskGraph,
+    mapping: &[u32],
+    alloc: &Allocation,
+    costs: NumaNodeCosts,
+) -> f64 {
+    assert_eq!(mapping.len(), graph.num_tasks);
+    let torus = &alloc.torus;
+    let mut total = 0f64;
+    for e in &graph.edges {
+        let ra = mapping[e.u as usize] as usize;
+        let rb = mapping[e.v as usize] as usize;
+        if alloc.core_node[ra] == alloc.core_node[rb] {
+            total += costs.socket * e.w;
+        } else {
+            let h = torus.hop_dist_ids(
+                alloc.core_router[ra] as usize,
+                alloc.core_router[rb] as usize,
+            );
+            total += costs.hop * e.w * h as f64;
+        }
+    }
+    total
+}
+
+/// Blended candidate score: the routed objective over inter-node edges
+/// plus `socket_cost` per unit weight for intra-node edges — the full-
+/// evaluation counterpart of [`RoutedEval`], used by the rotation sweep.
+pub fn blended_candidate_score(
+    graph: &TaskGraph,
+    mapping: &[u32],
+    alloc: &Allocation,
+    kind: ObjectiveKind,
+    socket_cost: f64,
+    costs: &LinkCosts,
+    acc: &mut LinkAccumulator,
+) -> f64 {
+    let (summary, intra) = super::routed_summary_with_intra(graph, mapping, alloc, costs, acc);
+    kind.get().reduce(&summary) + socket_cost * intra
+}
+
+/// Combined (network × NUMA) objective value of a finished mapping, from
+/// an [`crate::metrics::eval_full`] run plus (optionally) its
+/// [`crate::objective::eval_numa`] breakdown — the composition rule the
+/// service's map/eval responses and the experiment tables report:
+///
+/// * no NUMA model: the plain objective value;
+/// * `WeightedHops` × NUMA: the three-level [`NumaMetrics::value`]
+///   (`hop_cost` scales the network term);
+/// * routed × NUMA: the routed objective value plus
+///   `socket_cost · socket_weight + core_cost · core_weight`.
+pub fn combined_value(
+    objective: ObjectiveKind,
+    metrics: &Metrics,
+    numa: Option<(&NumaTopology, &NumaMetrics)>,
+) -> f64 {
+    match numa {
+        None => objective.value_from_metrics(metrics),
+        Some((topo, nm)) => match objective {
+            ObjectiveKind::WeightedHops => nm.value,
+            _ => {
+                objective.value_from_metrics(metrics)
+                    + topo.socket_cost * nm.socket_weight
+                    + topo.core_cost * nm.core_weight
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+
+    fn chain_setup() -> (TaskGraph, Torus, Vec<u32>, Vec<u32>) {
+        let g = stencil_graph(&[16], false, 2.0);
+        let torus = Torus::torus(&[4]);
+        let routers: Vec<u32> = vec![0, 1, 2, 3];
+        let node_of: Vec<u32> = (0..16).map(|t| (t % 4) as u32).collect();
+        (g, torus, routers, node_of)
+    }
+
+    fn all_specs() -> Vec<EvalSpec> {
+        let costs = NumaNodeCosts {
+            hop: 1.0,
+            socket: 0.4,
+        };
+        let mut specs = Vec::new();
+        for kind in ObjectiveKind::ALL {
+            specs.push(EvalSpec::new(kind, None));
+            specs.push(EvalSpec::new(kind, Some(costs)));
+        }
+        specs
+    }
+
+    #[test]
+    fn spec_validation_and_names() {
+        assert_eq!(EvalSpec::default().name(), "whops");
+        let blended = EvalSpec::new(
+            ObjectiveKind::MaxLinkLoad,
+            Some(NumaNodeCosts {
+                hop: 1.0,
+                socket: 0.5,
+            }),
+        );
+        assert!(blended.is_blended());
+        assert_eq!(blended.name(), "maxload+numa");
+        assert!(blended.validate().is_ok());
+        // Non-unit hop cost cannot scale a routed objective.
+        let bad = EvalSpec::new(
+            ObjectiveKind::CongestionBlend,
+            Some(NumaNodeCosts {
+                hop: 0.5,
+                socket: 0.5,
+            }),
+        );
+        assert!(bad.validate().unwrap_err().contains("hop_cost"));
+        // ...but it scales WeightedHops fine.
+        let wh = EvalSpec::new(
+            ObjectiveKind::WeightedHops,
+            Some(NumaNodeCosts {
+                hop: 0.5,
+                socket: 0.5,
+            }),
+        );
+        assert!(wh.validate().is_ok());
+        assert!(!wh.is_blended());
+    }
+
+    #[test]
+    fn every_spec_gain_matches_full_reevaluation() {
+        let (g, torus, routers, start) = chain_setup();
+        let adj = Adjacency::build(&g);
+        for spec in all_specs() {
+            let mut node_of = start.clone();
+            let mut eval = build_eval(&torus, &routers, &g, &node_of, spec);
+            let mut scratch = EvalScratch::new();
+            for (u, b) in [(0usize, 5usize), (2, 15), (1, 10), (7, 12)] {
+                if node_of[u] == node_of[b] {
+                    continue;
+                }
+                let before = eval.full_eval(&g, &node_of);
+                let ev = eval.swap_eval(&node_of, &adj, u, b, &mut scratch);
+                eval.commit(&ev, &scratch);
+                node_of.swap(u, b);
+                let after = eval.full_eval(&g, &node_of);
+                let tol = 1e-9 * after.abs().max(1.0);
+                assert!(
+                    (ev.gain - (before - after)).abs() <= tol,
+                    "{}: gain {} vs full delta {}",
+                    spec.name(),
+                    ev.gain,
+                    before - after
+                );
+                assert!(
+                    (eval.value() - after).abs() <= tol,
+                    "{}: cached {} vs full {}",
+                    spec.name(),
+                    eval.value(),
+                    after
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn initial_value_matches_full_eval() {
+        let (g, torus, routers, node_of) = chain_setup();
+        for spec in all_specs() {
+            let eval = build_eval(&torus, &routers, &g, &node_of, spec);
+            let full = eval.full_eval(&g, &node_of);
+            assert!(
+                (eval.value() - full).abs() <= 1e-12 * full.abs().max(1.0),
+                "{}: {} vs {}",
+                spec.name(),
+                eval.value(),
+                full
+            );
+        }
+    }
+
+    #[test]
+    fn blended_value_layers_both_terms() {
+        // The blended evaluator's value must equal the routed value plus
+        // socket_cost times the intra-node weight, term by term.
+        let (g, torus, routers, node_of) = chain_setup();
+        let socket = 0.4;
+        let spec = EvalSpec::new(
+            ObjectiveKind::MaxLinkLoad,
+            Some(NumaNodeCosts { hop: 1.0, socket }),
+        );
+        let blended = build_eval(&torus, &routers, &g, &node_of, spec);
+        let plain = build_eval(
+            &torus,
+            &routers,
+            &g,
+            &node_of,
+            EvalSpec::new(ObjectiveKind::MaxLinkLoad, None),
+        );
+        let intra = intra_node_weight(&g, &node_of);
+        assert!(intra > 0.0, "chain stride assignment has intra edges");
+        assert_eq!(blended.value(), plain.value() + socket * intra);
+    }
+
+    #[test]
+    fn hop_best_partner_matches_default_loop() {
+        // The hoisted hop propose hook must agree with the generic
+        // swap_gain loop on both the chosen partner and the gain.
+        let (g, torus, routers, node_of) = chain_setup();
+        let adj = Adjacency::build(&g);
+        let eval = HopEval::build(&torus, &routers, &g, &node_of, 1.0, 0.3);
+        let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); 4];
+        for (t, &x) in node_of.iter().enumerate() {
+            tasks_by_node[x as usize].push(t as u32);
+        }
+        let mut scratch = EvalScratch::new();
+        for u in 0..16usize {
+            let a = node_of[u];
+            let mut targets: Vec<u32> = adj
+                .neighbors(u)
+                .map(|(n, _)| node_of[n as usize])
+                .filter(|&x| x != a)
+                .collect();
+            targets.sort_unstable();
+            targets.dedup();
+            if targets.is_empty() {
+                continue;
+            }
+            let hoisted =
+                eval.best_partner(&node_of, &adj, u, &targets, &tasks_by_node, &mut scratch);
+            // The default loop from the trait, run against the same eval.
+            let mut best: Option<(f64, u32)> = None;
+            for &bn in &targets {
+                for &b in &tasks_by_node[bn as usize] {
+                    let g = eval.swap_gain(&node_of, &adj, u, b as usize, &mut scratch);
+                    let better = match best {
+                        None => g > 0.0,
+                        Some((bg, bb)) => g > bg || (g == bg && b < bb && g > 0.0),
+                    };
+                    if better && g > 0.0 {
+                        best = Some((g, b));
+                    }
+                }
+            }
+            assert_eq!(hoisted, best, "task {u}");
+        }
+    }
+
+    #[test]
+    fn combined_value_composes_per_rule() {
+        use crate::machine::Allocation;
+        use crate::metrics::eval_full;
+        use crate::objective::eval_numa;
+        // 2 nodes x 2 ranks on a 4-ring; edge (0,1) intra-node, (1,2)
+        // cross-node at 1 hop.
+        let alloc = Allocation::heterogeneous(Torus::torus(&[4]), &[0, 1], &[2, 2]).unwrap();
+        let g = {
+            use crate::apps::{Edge, TaskGraph};
+            use crate::geom::Coords;
+            TaskGraph {
+                num_tasks: 4,
+                edges: vec![
+                    Edge { u: 0, v: 1, w: 5.0 },
+                    Edge { u: 1, v: 2, w: 3.0 },
+                ],
+                coords: Coords::from_axes(vec![vec![0.0; 4]]),
+            }
+        };
+        let mapping: Vec<u32> = (0..4).collect();
+        let topo = NumaTopology::new(2, 1, 0.5, 0.0, 1.0);
+        let m = eval_full(&g, &mapping, &alloc);
+        let nm = eval_numa(&g, &mapping, &alloc, &topo);
+        // WeightedHops x NUMA: the three-level NumaAware value.
+        assert_eq!(
+            combined_value(ObjectiveKind::WeightedHops, &m, Some((&topo, &nm))),
+            nm.value
+        );
+        // Routed x NUMA: routed value plus the intra-node terms.
+        let maxload = ObjectiveKind::MaxLinkLoad.value_from_metrics(&m);
+        assert_eq!(
+            combined_value(ObjectiveKind::MaxLinkLoad, &m, Some((&topo, &nm))),
+            maxload + 0.5 * nm.socket_weight
+        );
+        // No NUMA: the plain objective.
+        assert_eq!(
+            combined_value(ObjectiveKind::MaxLinkLoad, &m, None),
+            maxload
+        );
+    }
+}

@@ -46,18 +46,26 @@
 //! (`HierConfig::objective`), the coordinator's `objective` experiment, the
 //! service (`"objective"` request field), and `bench_objective`.
 //!
-//! The promised deeper-level objective now exists: [`numa::NumaAware`]
-//! prices node/socket/core levels from a
-//! [`crate::machine::NumaTopology`] — inter-node edges per network hop,
-//! same-node cross-socket edges at a flat socket cost, same-socket edges
-//! at the (usually zero) core cost. It is selected structurally
-//! (`HierConfig::numa` / the service `"numa"` field) rather than by
-//! [`ObjectiveKind`], because its value depends on the allocation's socket
-//! structure, which link statistics alone cannot express; the depth-3
-//! hierarchical mapper optimizes it end to end and
+//! What used to be three parallel scoring arms (a WeightedHops kernel
+//! path, a routed-congestion path, a NUMA path) is now one **composable
+//! incremental evaluator** — [`eval`] layers a network term (hop-priced or
+//! routed) with an optional intra-node NUMA term behind a single
+//! [`eval::EvalSpec`] handle and one [`eval::IncrementalEval`] swap-gain
+//! contract, which is what lets routed congestion compose with depth-3
+//! NUMA mapping (`MaxLinkLoad` × `xk7` and friends).
+//!
+//! The deeper-level objective itself is [`numa::NumaAware`]: it prices
+//! node/socket/core levels from a [`crate::machine::NumaTopology`] —
+//! inter-node edges per network hop, same-node cross-socket edges at a
+//! flat socket cost, same-socket edges at the (usually zero) core cost.
+//! It is selected structurally (`HierConfig::numa` / the service `"numa"`
+//! field) rather than by [`ObjectiveKind`], because its value depends on
+//! the allocation's socket structure, which link statistics alone cannot
+//! express; the depth-3 hierarchical mapper optimizes it end to end and
 //! [`numa::placement_swap_gain`] provides the exact O(degree) incremental
 //! swap gains its socket-level refinement runs on.
 
+pub mod eval;
 pub mod numa;
 
 use crate::apps::TaskGraph;
@@ -65,6 +73,10 @@ use crate::machine::{Allocation, Torus};
 use crate::metrics::{eval_hops, LinkAccumulator, Metrics};
 use crate::par::{self, Parallelism};
 
+pub use eval::{
+    build_eval, combined_value, numa_node_score, Adjacency, Eval, EvalScratch, EvalSpec,
+    IncrementalEval, SwapEval,
+};
 pub use numa::{
     eval_numa, eval_numa_placement, placement_swap_gain, NumaAware, NumaMetrics,
 };
@@ -312,14 +324,31 @@ pub fn routed_summary(
     costs: &LinkCosts,
     acc: &mut LinkAccumulator,
 ) -> LinkSummary {
+    routed_summary_with_intra(graph, mapping, alloc, costs, acc).0
+}
+
+/// [`routed_summary`] plus the total weight of intra-node edges — the
+/// quantity the blended (routed × NUMA) evaluator prices at the socket
+/// cost. The network accumulation is identical to [`routed_summary`]'s
+/// (the intra sum is a separate accumulator), so plain routed scores are
+/// unaffected.
+pub(crate) fn routed_summary_with_intra(
+    graph: &TaskGraph,
+    mapping: &[u32],
+    alloc: &Allocation,
+    costs: &LinkCosts,
+    acc: &mut LinkAccumulator,
+) -> (LinkSummary, f64) {
     assert_eq!(mapping.len(), graph.num_tasks);
     let torus = &alloc.torus;
     acc.reset();
     let mut weighted_hops = 0f64;
+    let mut intra_weight = 0f64;
     for e in &graph.edges {
         let ra = mapping[e.u as usize] as usize;
         let rb = mapping[e.v as usize] as usize;
         if alloc.core_node[ra] == alloc.core_node[rb] {
+            intra_weight += e.w;
             continue; // intra-node: never enters the network
         }
         let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
@@ -335,12 +364,15 @@ pub fn routed_summary(
             max_latency = lat;
         }
     }
-    LinkSummary {
-        max_latency,
-        sum_latency,
-        num_links: costs.num_links,
-        weighted_hops,
-    }
+    (
+        LinkSummary {
+            max_latency,
+            sum_latency,
+            num_links: costs.num_links,
+            weighted_hops,
+        },
+        intra_weight,
+    )
 }
 
 /// Incrementally-maintained routed link loads of a task→node assignment:

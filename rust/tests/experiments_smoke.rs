@@ -142,26 +142,32 @@ fn numa_compares_depths_on_both_presets() {
     assert!(tables[0].title.contains("MiniGhost"));
     assert!(tables[1].title.contains("HOMME"));
     for t in &tables {
-        // Rows come in (depth-2, depth-3) pairs; depth-2 normalizes 1.00.
-        assert_eq!(t.rows.len() % 2, 0, "{}", t.title);
-        for chunk in t.rows.chunks(2) {
+        // Rows come in (depth-2 whops, depth-3 whops, depth-3 maxload)
+        // triples; the depth-2 row normalizes the ratios to 1.00.
+        assert_eq!(t.rows.len() % 3, 0, "{}", t.title);
+        for chunk in t.rows.chunks(3) {
             assert_eq!(chunk[0][2], "depth-2");
             assert_eq!(chunk[1][2], "depth-3");
-            assert_eq!(chunk[0][6], "1.00");
-            assert_eq!(chunk[0][7], "1.00");
+            assert_eq!(chunk[2][2], "depth-3");
+            assert_eq!(chunk[0][3], "whops");
+            assert_eq!(chunk[1][3], "whops");
+            assert_eq!(chunk[2][3], "maxload");
+            assert_eq!(chunk[0][8], "1.00");
+            assert_eq!(chunk[0][9], "1.00");
+            assert_eq!(chunk[0][10], "1.00");
             for row in chunk {
-                for col in [3, 4, 5] {
+                for col in [4, 5, 6, 7] {
                     let v = parse(&row[col]);
                     assert!(v.is_finite() && v >= 0.0, "bad value {v} in {row:?}");
                 }
-                for col in [6, 7] {
+                for col in [8, 9, 10] {
                     let v = parse(&row[col]);
                     assert!(v.is_finite() && v >= 0.0, "bad ratio {v} in {row:?}");
                 }
             }
             // The explicit socket split must not lose badly to socket-blind
             // placement on the NUMA objective (it typically wins outright).
-            let value_ratio = parse(&chunk[1][6]);
+            let value_ratio = parse(&chunk[1][8]);
             assert!(
                 value_ratio < 1.15,
                 "{}: depth-3 NUMA value ratio {value_ratio} way above depth-2 ({:?})",

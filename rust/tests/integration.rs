@@ -83,7 +83,7 @@ fn homme_bgq_z2_reduces_data_at_scale() {
     // distributes data across dimensions, lowering Data(M).
     let homme = Homme::new(16); // 1536 elements
     let graph = homme.graph();
-    let alloc = Allocation::bgq([4, 4, 4, 2, 2], 4, "ABCDET"); // 512 ranks
+    let alloc = Allocation::bgq([4, 4, 4, 2, 2], 4, "ABCDET").unwrap(); // 512 ranks
     let sfc = homme.sfc_partition(alloc.num_ranks());
     let mut cfg = Z2Config::z2_1().plus_e();
     cfg.max_rotations = 6;
@@ -117,7 +117,7 @@ fn homme_bgq_z2_reduces_data_at_scale() {
 fn homme_sfc_plus_z2_preserves_parts() {
     let homme = Homme::new(8);
     let graph = homme.graph();
-    let alloc = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET"); // 128 ranks
+    let alloc = Allocation::bgq([2, 2, 2, 2, 2], 4, "ABCDET").unwrap(); // 128 ranks
     let parts = homme.sfc_partition(alloc.num_ranks());
     let mut cfg = Z2Config::z2_1();
     cfg.max_rotations = 4;

@@ -864,6 +864,170 @@ fn prop_hetero_depth3_balanced_and_bit_identical() {
 }
 
 #[test]
+fn prop_blended_incremental_gain_equals_full_eval() {
+    // Acceptance pin (a): for EVERY evaluator combination — hop or routed
+    // network term, with or without the NUMA intra-node term — the
+    // incremental swap gain equals a from-scratch full_eval delta, and
+    // the cached value tracks full_eval across commits.
+    use taskmap::machine::NumaNodeCosts;
+    use taskmap::objective::{
+        build_eval, Adjacency, EvalScratch, EvalSpec, IncrementalEval, ObjectiveKind,
+    };
+    check("blended incremental gain == full eval", 12, |rng| {
+        let d = rng.range(1, 4);
+        let sizes: Vec<usize> = (0..d).map(|_| rng.range(2, 6)).collect();
+        let torus = Torus::torus(&sizes);
+        let nn = rng.range(2, torus.num_routers().min(8) + 1);
+        let routers: Vec<u32> = {
+            let mut ids: Vec<u32> = (0..torus.num_routers() as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(nn);
+            ids
+        };
+        let nt = nn * rng.range(1, 5);
+        let graph = stencil_graph(&[nt], rng.bool(), rng.f64_range(0.5, 5.0));
+        let adj = Adjacency::build(&graph);
+        let objective = match rng.below(3) {
+            0 => ObjectiveKind::WeightedHops,
+            1 => ObjectiveKind::MaxLinkLoad,
+            _ => ObjectiveKind::CongestionBlend,
+        };
+        let numa = if rng.bool() {
+            Some(NumaNodeCosts {
+                // Routed objectives require hop == 1; WeightedHops may
+                // scale it.
+                hop: if objective == ObjectiveKind::WeightedHops {
+                    rng.f64_range(0.5, 2.0)
+                } else {
+                    1.0
+                },
+                socket: rng.f64_range(0.1, 0.9),
+            })
+        } else {
+            None
+        };
+        let spec = EvalSpec::new(objective, numa);
+        spec.validate().map_err(|e| format!("spec invalid: {e}"))?;
+        let mut node_of: Vec<u32> = (0..nt).map(|t| (t % nn) as u32).collect();
+        rng.shuffle(&mut node_of);
+        let mut eval = build_eval(&torus, &routers, &graph, &node_of, spec);
+        let mut scratch = EvalScratch::new();
+        for _ in 0..8 {
+            let u = rng.below(nt);
+            let b = rng.below(nt);
+            if u == b || node_of[u] == node_of[b] {
+                continue;
+            }
+            let before = eval.full_eval(&graph, &node_of);
+            let ev = eval.swap_eval(&node_of, &adj, u, b, &mut scratch);
+            eval.commit(&ev, &scratch);
+            node_of.swap(u, b);
+            let after = eval.full_eval(&graph, &node_of);
+            approx_eq(ev.gain, before - after, 1e-9, 1e-9)
+                .map_err(|e| format!("{}: gain vs full_eval delta: {e}", spec.name()))?;
+            approx_eq(eval.value(), after, 1e-9, 1e-9)
+                .map_err(|e| format!("{}: cached value vs full_eval: {e}", spec.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blended_depth3_parallel_bit_identical() {
+    // Acceptance pin (b): the blended (routed congestion x NUMA) depth-3
+    // pipeline — node sweep, blended MinVolume refinement, socket
+    // split/refinement, socket-aware placement — is bit-identical at
+    // every thread budget, on uniform AND heterogeneous allocations, and
+    // still produces a node/socket-respecting bijection.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::machine::NumaTopology;
+    use taskmap::mapping::rotations::NativeBackend;
+    use taskmap::objective::ObjectiveKind;
+    check("blended depth-3 parallel == sequential", 8, |rng| {
+        let sockets = rng.range(1, 3);
+        let rps = rng.range(1, 4);
+        let hetero = rng.bool();
+        let alloc = if hetero {
+            let torus = Torus::torus(&[5, 5, 5]);
+            let nn = rng.range(3, 7);
+            let routers: Vec<u32> = (0..nn)
+                .map(|_| rng.below(torus.num_routers()) as u32)
+                .collect();
+            let sizes: Vec<usize> = (0..nn).map(|_| rng.range(1, 7)).collect();
+            Allocation::heterogeneous(torus, &routers, &sizes)
+                .map_err(|e| format!("constructor: {e}"))?
+        } else {
+            SparseAllocator {
+                machine: Torus::torus(&[5, 5, 5]),
+                nodes_per_router: 2,
+                ranks_per_node: sockets * rps,
+                occupancy: rng.f64_range(0.0, 0.3),
+            }
+            .allocate(rng.range(3, 9), rng.next_u64())
+        };
+        let topo = NumaTopology::new(sockets, rps, rng.f64_range(0.2, 0.8), 0.0, 1.0);
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let objective = if rng.bool() {
+            ObjectiveKind::MaxLinkLoad
+        } else {
+            ObjectiveKind::CongestionBlend
+        };
+        let intra = match rng.below(3) {
+            0 => IntraNodeStrategy::DefaultOrder,
+            1 => IntraNodeStrategy::SfcOrder,
+            _ => IntraNodeStrategy::MinVolume { passes: 3 },
+        };
+        let mk = |threads: usize| HierConfig {
+            intra,
+            max_rotations: 4,
+            threads,
+            objective,
+            numa: Some(topo),
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if par.task_to_node != seq.task_to_node {
+                return Err(format!(
+                    "{objective:?} hetero={hetero}: node assignment diverged at threads={threads}"
+                ));
+            }
+            if par.task_to_socket != seq.task_to_socket {
+                return Err(format!(
+                    "{objective:?} hetero={hetero}: socket assignment diverged at threads={threads}"
+                ));
+            }
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!(
+                    "{objective:?} hetero={hetero}: rank mapping diverged at threads={threads}"
+                ));
+            }
+            if (par.swaps_applied, par.socket_swaps) != (seq.swaps_applied, seq.socket_swaps) {
+                return Err(format!(
+                    "{objective:?} hetero={hetero}: swap counts diverged at threads={threads}"
+                ));
+            }
+        }
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err(format!("not a bijection ({objective:?}, {intra:?})"));
+        }
+        let socks = seq.task_to_socket.as_ref().expect("depth 3 reports sockets");
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        for t in 0..nt {
+            let rank = seq.task_to_rank[t] as usize;
+            if alloc.core_node[rank] != seq.task_to_node[t] || rank_socks[rank] != socks[t] {
+                return Err(format!("task {t} violates node/socket assignment"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_numa_swap_gains_equal_full_reevaluation() {
     // Acceptance pin: the NumaAware incremental placement swap gain equals
     // the delta of a full eval_numa_placement re-evaluation, for same-node
