@@ -7,7 +7,7 @@
 //! cargo run --release --example mapping_service -- --serve # daemon mode
 //! ```
 
-use taskmap::coordinator::service::{Client, Service};
+use taskmap::coordinator::service::{request_with_retry, Client, RetryPolicy, Service};
 use taskmap::sfc::PartOrdering;
 use taskmap::testutil::json::Json;
 
@@ -64,6 +64,27 @@ fn main() {
     println!("  map:     {}", resp.get("map").unwrap().to_string());
     println!("  nodes:   {}", resp.get("nodes").unwrap().to_string());
     println!("  sockets: {}", resp.get("sockets").unwrap().to_string());
-    println!("shutting down.");
+
+    // The retrying client: reconnects and backs off on transient errors
+    // (overloaded / shutting_down), honoring the server's retry_after_ms
+    // hint. A healthy server answers on the first attempt.
+    let pong = request_with_retry(
+        svc.addr,
+        &Json::parse(r#"{"op":"ping"}"#).unwrap(),
+        &RetryPolicy::default(),
+    )
+    .expect("ping with retry");
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+    // Service telemetry: counters, per-op latency, and the pool view.
+    let stats = client
+        .request(&Json::parse(r#"{"op":"stats"}"#).unwrap())
+        .expect("stats request");
+    println!("\nservice stats:");
+    for key in ["accepted", "completed", "shed", "panics"] {
+        println!("  {key:>9}: {}", stats.get(key).unwrap().to_string());
+    }
+    println!("  pool:      {}", stats.get("pool").unwrap().to_string());
+    println!("shutting down (graceful drain).");
     svc.stop();
 }

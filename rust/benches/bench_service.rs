@@ -1,0 +1,187 @@
+//! Bench: the hardened mapping service — request round-trip latency over
+//! TCP (ping / flat map / hierarchical map), and a saturation smoke test
+//! that floods a deliberately tiny pool and reports sustained throughput,
+//! shed fraction, and the time-to-shed (how fast overload is answered).
+//! Results append to `BENCH_mapping.json` (override with
+//! `TASKMAP_BENCH_OUT`).
+//!
+//! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
+//! entries are recorded under `.../smoke` names so they never clobber the
+//! full trajectory rows.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use taskmap::coordinator::service::{error_kind, Client, ErrorKind, Service, ServiceConfig};
+use taskmap::testutil::bench::{bench_quick, BenchRecorder};
+use taskmap::testutil::json::Json;
+
+fn ping_req() -> Json {
+    Json::obj(vec![("op", Json::Str("ping".into()))])
+}
+
+/// A flat map request over an n-task 1D line (tasks ascending, procs
+/// descending — forces real partitioning work, trivially checkable).
+fn map_req(n: usize) -> Json {
+    let coords = |rev: bool| {
+        Json::Arr(
+            (0..n)
+                .map(|i| {
+                    let x = if rev { n - 1 - i } else { i } as f64;
+                    Json::Arr(vec![Json::Num(x)])
+                })
+                .collect(),
+        )
+    };
+    Json::obj(vec![
+        ("op", Json::Str("map".into())),
+        ("tcoords", coords(false)),
+        ("pcoords", coords(true)),
+    ])
+}
+
+/// A hierarchical map request: an n-task chain onto n/2 ranks, 2 per node.
+fn hier_req(n: usize) -> Json {
+    let tcoords = Json::Arr(
+        (0..n)
+            .map(|i| Json::Arr(vec![Json::Num(i as f64)]))
+            .collect(),
+    );
+    let pcoords = Json::Arr(
+        (0..n / 2)
+            .map(|i| Json::Arr(vec![Json::Num((i / 2) as f64)]))
+            .collect(),
+    );
+    let edges = Json::Arr(
+        (0..n - 1)
+            .map(|i| Json::Arr(vec![Json::Num(i as f64), Json::Num((i + 1) as f64)]))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("op", Json::Str("map".into())),
+        ("tcoords", tcoords),
+        ("pcoords", pcoords),
+        ("edges", edges),
+        (
+            "hier",
+            Json::obj(vec![
+                ("ranks_per_node", Json::Num(2.0)),
+                ("strategy", Json::Str("minvol".into())),
+            ]),
+        ),
+    ])
+}
+
+/// Flood a tiny pool (1 worker, 2 queue slots) with `burst`-sized waves of
+/// concurrent one-shot connections and report throughput plus the shed
+/// fraction — the service must answer (serve or shed) every connection
+/// promptly instead of queueing without bound.
+fn saturation(rec: &mut BenchRecorder, suffix: &str, burst: usize, waves: usize) {
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 2,
+            retry_after_ms: 10,
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = svc.addr;
+    let served = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    for _ in 0..waves {
+        let barrier = Arc::new(Barrier::new(burst));
+        let handles: Vec<_> = (0..burst)
+            .map(|_| {
+                let barrier = Arc::clone(&barrier);
+                let served = Arc::clone(&served);
+                let shed = Arc::clone(&shed);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let mut client = match Client::connect(addr) {
+                        Ok(c) => c,
+                        Err(_) => return,
+                    };
+                    match client.request(&ping_req()) {
+                        Ok(resp) if resp.get("ok") == Some(&Json::Bool(true)) => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(resp) if error_kind(&resp) == Some(ErrorKind::Overloaded) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // A shed refusal can race the closed socket's TCP
+                        // reset; the server-side counter still has it.
+                        _ => {}
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    let elapsed = start.elapsed();
+    let total = burst * waves;
+    let served = served.load(Ordering::Relaxed);
+    let shed_client = shed.load(Ordering::Relaxed);
+    let stats = svc.stats();
+    let shed_server = stats.get("shed").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let answered_per_s = total as f64 / elapsed.as_secs_f64();
+    let shed_frac = shed_server / total as f64;
+    println!(
+        "saturation{suffix}: {total} conns in {:.3}s ({answered_per_s:.0} answered/s), \
+         {served} served, {shed_server} shed server-side ({shed_client} shed replies read)",
+        elapsed.as_secs_f64()
+    );
+    rec.record_scalar(
+        &format!("service/saturation{suffix}/answered_per_s"),
+        "rate",
+        answered_per_s,
+    );
+    rec.record_scalar(
+        &format!("service/saturation{suffix}/shed_fraction"),
+        "fraction",
+        shed_frac,
+    );
+    svc.stop();
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let suffix = if smoke { "/smoke" } else { "" };
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    println!("== mapping service (bounded pool) ==");
+
+    // Round-trip latency on a persistent connection against a
+    // default-sized pool.
+    let svc = Service::start("127.0.0.1:0").expect("bind");
+    let mut client = Client::connect(svc.addr).expect("connect");
+    let ping = ping_req();
+    let r = bench_quick(&format!("service/rtt/ping{suffix}"), || {
+        client.request(&ping).expect("ping")
+    });
+    rec.record(&r, &[]);
+    let n = if smoke { 64 } else { 512 };
+    let req = map_req(n);
+    let r = bench_quick(&format!("service/rtt/map/tasks={n}{suffix}"), || {
+        client.request(&req).expect("map")
+    });
+    rec.record(&r, &[("tasks", n as f64)]);
+    let req = hier_req(n);
+    let r = bench_quick(&format!("service/rtt/hier/tasks={n}{suffix}"), || {
+        client.request(&req).expect("hier map")
+    });
+    rec.record(&r, &[("tasks", n as f64)]);
+    svc.stop();
+
+    // Saturation: overload must be answered, not buffered.
+    let (burst, waves) = if smoke { (16, 4) } else { (48, 16) };
+    saturation(&mut rec, suffix, burst, waves);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

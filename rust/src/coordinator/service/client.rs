@@ -1,0 +1,224 @@
+//! Blocking client for the mapping service, plus a retry helper that
+//! understands the error taxonomy: only `retryable` errors are retried,
+//! with exponential backoff, seeded jitter, and the server's
+//! `retry_after_ms` backpressure hint as the floor of each delay.
+
+use super::errors::{error_kind, error_message, error_retry_after_ms};
+use crate::sfc::PartOrdering;
+use crate::testutil::json::Json;
+use crate::testutil::rng::Rng;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A blocking newline-delimited-JSON client connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Send one request object and read one reply object.
+    pub fn request(&mut self, req: &Json) -> io::Result<Json> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Json::parse(resp.trim())
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("bad reply: {e}")))
+    }
+
+    /// Convenience wrapper for a flat map request.
+    pub fn map(
+        &mut self,
+        tcoords: &[Vec<f64>],
+        pcoords: &[Vec<f64>],
+        ordering: PartOrdering,
+    ) -> io::Result<Vec<u32>> {
+        let coord_json = |rows: &[Vec<f64>]| {
+            Json::Arr(
+                rows.iter()
+                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
+                    .collect(),
+            )
+        };
+        let req = Json::obj(vec![
+            ("op", Json::Str("map".into())),
+            ("tcoords", coord_json(tcoords)),
+            ("pcoords", coord_json(pcoords)),
+            ("ordering", Json::Str(ordering.name().into())),
+        ]);
+        let resp = self.request(&req)?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            let msg = error_message(&resp).unwrap_or("unknown error");
+            return Err(io::Error::other(msg.to_string()));
+        }
+        let arr = resp
+            .get("map")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "reply missing map"))?;
+        arr.iter()
+            .map(|v| {
+                v.as_usize()
+                    .map(|r| r as u32)
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad rank in map"))
+            })
+            .collect()
+    }
+}
+
+/// Backoff policy for [`request_with_retry`]. Deterministic for a given
+/// seed: the jitter comes from the in-tree seeded generator, so tests (and
+/// the chaos suite) reproduce delays bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (minimum 1).
+    pub max_attempts: u32,
+    /// Backoff base: attempt `k` waits about `base * 2^k`.
+    pub base_delay_ms: u64,
+    /// Cap on any single delay.
+    pub max_delay_ms: u64,
+    /// Jitter seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay_ms: 10,
+            max_delay_ms: 1000,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before the retry following attempt `attempt` (0-based):
+    /// exponential base capped at `max_delay_ms`, floored by the server's
+    /// `retry_after_ms` hint, plus up to +50% deterministic jitter.
+    fn delay_ms(&self, attempt: u32, retry_after: Option<u64>, rng: &mut Rng) -> u64 {
+        let exp = self
+            .base_delay_ms
+            .saturating_mul(1u64 << attempt.min(16) as u64);
+        let base = exp.max(retry_after.unwrap_or(0)).min(self.max_delay_ms);
+        base + rng.below((base / 2 + 1) as usize) as u64
+    }
+}
+
+/// Issue `req`, reconnecting and retrying on transient failures.
+///
+/// Retries happen when the connection fails outright (the pool force-closed
+/// it, the listener is mid-restart) or the reply is a structured error
+/// marked `retryable` (`overloaded`, `shutting_down`). Non-retryable errors
+/// (`invalid_request`, `deadline_exceeded`, `internal`) and success replies
+/// return immediately — resending malformed bytes cannot help.
+pub fn request_with_retry(
+    addr: SocketAddr,
+    req: &Json,
+    policy: &RetryPolicy,
+) -> io::Result<Json> {
+    let mut rng = Rng::new(policy.seed);
+    let attempts = policy.max_attempts.max(1);
+    let mut last_err: Option<io::Error> = None;
+    for attempt in 0..attempts {
+        let retry_after = match Client::connect(addr).and_then(|mut c| c.request(req)) {
+            Ok(resp) => {
+                let transient = error_kind(&resp).is_some_and(|k| k.retryable());
+                if !transient || attempt + 1 == attempts {
+                    return Ok(resp);
+                }
+                error_retry_after_ms(&resp)
+            }
+            Err(e) => {
+                if attempt + 1 == attempts {
+                    return Err(e);
+                }
+                last_err = Some(e);
+                None
+            }
+        };
+        std::thread::sleep(Duration::from_millis(policy.delay_ms(
+            attempt,
+            retry_after,
+            &mut rng,
+        )));
+    }
+    // Unreachable: the last attempt always returns above. Keep a real
+    // error anyway in case `max_attempts` is somehow 0.
+    Err(last_err.unwrap_or_else(|| io::Error::other("no attempts made")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_are_floored_and_capped() {
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            base_delay_ms: 10,
+            max_delay_ms: 100,
+            seed: 1,
+        };
+        let mut rng = Rng::new(policy.seed);
+        // Attempt 0: base 10, jitter < 6.
+        let d0 = policy.delay_ms(0, None, &mut rng);
+        assert!((10..16).contains(&d0), "{d0}");
+        // The server hint floors the delay.
+        let d1 = policy.delay_ms(0, Some(40), &mut rng);
+        assert!((40..61).contains(&d1), "{d1}");
+        // Large attempts cap at max_delay_ms (+50% jitter).
+        let d2 = policy.delay_ms(10, None, &mut rng);
+        assert!((100..151).contains(&d2), "{d2}");
+        // Deterministic for a given seed.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(policy.delay_ms(2, None, &mut a), policy.delay_ms(2, None, &mut b));
+    }
+
+    #[test]
+    fn huge_attempt_exponent_does_not_overflow() {
+        let policy = RetryPolicy {
+            max_attempts: 100,
+            base_delay_ms: u64::MAX / 2,
+            max_delay_ms: 50,
+            seed: 1,
+        };
+        let mut rng = Rng::new(1);
+        let d = policy.delay_ms(99, None, &mut rng);
+        assert!(d <= 75, "{d}");
+    }
+
+    #[test]
+    fn connect_failure_is_reported_after_retries() {
+        // A port nobody listens on: every attempt fails fast with
+        // connection refused; the helper must give up and return the error.
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base_delay_ms: 1,
+            max_delay_ms: 2,
+            seed: 3,
+        };
+        let req = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        assert!(request_with_retry(addr, &req, &policy).is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Service observability: counters, per-op latency summaries, and a ring
+//! buffer of recent noteworthy events (panic messages, force-closes),
+//! surfaced to clients via `{"op":"stats"}`.
+//!
+//! Everything here is designed to be written from many worker threads at
+//! once: plain counters are relaxed atomics; the ring buffer and the
+//! per-op latency table take short mutexes only on the paths that already
+//! did real work (a completed request, a panic), never on the accept fast
+//! path.
+
+use super::errors::ErrorKind;
+use crate::testutil::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Most recent events kept for `stats.recent`.
+const RING_CAPACITY: usize = 64;
+
+/// Per-op latency aggregate (microseconds).
+#[derive(Clone, Copy, Debug, Default)]
+struct OpStat {
+    count: u64,
+    total_us: u64,
+    max_us: u64,
+}
+
+/// A point-in-time view of the worker pool, attached to `stats` replies.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolSnapshot {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub queue_depth: usize,
+    pub active_connections: usize,
+}
+
+/// Shared service telemetry. One instance per [`super::Service`]; handlers
+/// reach it through [`super::handlers::RequestCtx`].
+#[derive(Default)]
+pub struct Diagnostics {
+    /// Connections accepted by the listener.
+    accepted: AtomicU64,
+    /// Requests answered (any reply, success or error).
+    completed: AtomicU64,
+    /// Connections shed because the queue was full.
+    shed: AtomicU64,
+    /// Handler panics caught and converted to `internal` errors.
+    panics: AtomicU64,
+    /// Requests currently inside a handler.
+    active: AtomicU64,
+    /// Error replies by kind (indexed by [`ErrorKind::index`]).
+    errors: [AtomicU64; 5],
+    recent: Mutex<VecDeque<String>>,
+    ops: Mutex<BTreeMap<String, OpStat>>,
+}
+
+/// Lock a mutex, tolerating poison: diagnostics must stay usable after a
+/// panic elsewhere — that is exactly when they matter most.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl Diagnostics {
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    pub fn record_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn begin_request(&self) {
+        self.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_request(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Log a noteworthy event into the bounded ring buffer.
+    pub fn record_event(&self, event: &str) {
+        let mut ring = lock_ok(&self.recent);
+        if ring.len() == RING_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(event.to_string());
+    }
+
+    /// A handler panicked: count it and keep the message for `stats`.
+    pub fn record_panic(&self, op: &str, msg: &str) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        self.record_event(&format!("panic in op \"{op}\": {msg}"));
+    }
+
+    /// A reply went out: bump the completion counter, the per-kind error
+    /// counter if it is an error, and the op's latency aggregate.
+    pub fn record_reply(&self, op: &str, resp: &Json, elapsed: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(kind) = super::errors::error_kind(resp) {
+            self.errors[kind.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
+        let mut ops = lock_ok(&self.ops);
+        let stat = ops.entry(op.to_string()).or_default();
+        stat.count += 1;
+        stat.total_us = stat.total_us.saturating_add(us);
+        stat.max_us = stat.max_us.max(us);
+    }
+
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn completed_count(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// The `{"op":"stats"}` reply (schema documented in the module docs of
+    /// [`super`]).
+    pub fn snapshot_json(&self, pool: Option<PoolSnapshot>) -> Json {
+        let errors = Json::obj(
+            ErrorKind::ALL
+                .iter()
+                .map(|k| (k.name(), Json::Num(self.errors[k.index()].load(Ordering::Relaxed) as f64)))
+                .collect(),
+        );
+        let ops = Json::Obj(
+            lock_ok(&self.ops)
+                .iter()
+                .map(|(op, s)| {
+                    let mean = if s.count > 0 {
+                        s.total_us as f64 / s.count as f64
+                    } else {
+                        0.0
+                    };
+                    (
+                        op.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(s.count as f64)),
+                            ("total_us", Json::Num(s.total_us as f64)),
+                            ("max_us", Json::Num(s.max_us as f64)),
+                            ("mean_us", Json::Num(mean)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let recent = Json::Arr(
+            lock_ok(&self.recent)
+                .iter()
+                .map(|e| Json::Str(e.clone()))
+                .collect(),
+        );
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("accepted", Json::Num(self.accepted.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("panics", Json::Num(self.panics.load(Ordering::Relaxed) as f64)),
+            ("active", Json::Num(self.active.load(Ordering::Relaxed) as f64)),
+            ("errors", errors),
+            ("ops", ops),
+            ("recent", recent),
+        ];
+        if let Some(p) = pool {
+            fields.push((
+                "pool",
+                Json::obj(vec![
+                    ("workers", Json::Num(p.workers as f64)),
+                    ("queue_capacity", Json::Num(p.queue_capacity as f64)),
+                    ("queue_depth", Json::Num(p.queue_depth as f64)),
+                    ("active_connections", Json::Num(p.active_connections as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::errors::ServiceError;
+    use super::*;
+
+    #[test]
+    fn counters_flow_into_snapshot() {
+        let d = Diagnostics::new();
+        d.record_accepted();
+        d.record_accepted();
+        d.record_shed();
+        d.record_reply("ping", &Json::obj(vec![("ok", Json::Bool(true))]), Duration::from_micros(10));
+        d.record_reply(
+            "map",
+            &ServiceError::internal("boom").to_json(),
+            Duration::from_micros(30),
+        );
+        d.record_panic("map", "boom");
+        let snap = d.snapshot_json(None);
+        assert_eq!(snap.get("accepted").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(snap.get("shed").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(snap.get("completed").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(snap.get("panics").and_then(|v| v.as_f64()), Some(1.0));
+        let errs = snap.get("errors").unwrap();
+        assert_eq!(errs.get("internal").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(errs.get("overloaded").and_then(|v| v.as_f64()), Some(0.0));
+        let ops = snap.get("ops").unwrap();
+        assert_eq!(
+            ops.get("ping").and_then(|o| o.get("count")).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        assert_eq!(
+            ops.get("map").and_then(|o| o.get("max_us")).and_then(|v| v.as_f64()),
+            Some(30.0)
+        );
+        let recent = snap.get("recent").unwrap().as_arr().unwrap();
+        assert_eq!(recent.len(), 1);
+        assert!(recent[0].as_str().unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn ring_buffer_is_bounded() {
+        let d = Diagnostics::new();
+        for i in 0..(RING_CAPACITY + 10) {
+            d.record_event(&format!("event {i}"));
+        }
+        let snap = d.snapshot_json(None);
+        let recent = snap.get("recent").unwrap().as_arr().unwrap();
+        assert_eq!(recent.len(), RING_CAPACITY);
+        // Oldest entries were evicted.
+        assert_eq!(recent[0].as_str(), Some("event 10"));
+    }
+
+    #[test]
+    fn pool_snapshot_is_reported() {
+        let d = Diagnostics::new();
+        let snap = d.snapshot_json(Some(PoolSnapshot {
+            workers: 4,
+            queue_capacity: 16,
+            queue_depth: 3,
+            active_connections: 2,
+        }));
+        let pool = snap.get("pool").unwrap();
+        assert_eq!(pool.get("workers").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(pool.get("queue_depth").and_then(|v| v.as_f64()), Some(3.0));
+    }
+}

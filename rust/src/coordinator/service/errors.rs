@@ -1,0 +1,242 @@
+//! Structured error taxonomy for the mapping service.
+//!
+//! Every failure the service can produce is one of five [`ErrorKind`]s,
+//! each tagged retryable or not, serialized as an object instead of a flat
+//! string:
+//!
+//! ```json
+//! {"ok":false,"error":{"kind":"overloaded","message":"...",
+//!                      "retryable":true,"retry_after_ms":50}}
+//! ```
+//!
+//! `retry_after_ms` appears only on `overloaded` replies — it is the
+//! server's backpressure hint, honored by
+//! [`super::client::request_with_retry`]. Clients that predate the
+//! taxonomy keep working: `"ok"` is still the success discriminator, and
+//! the human-readable message is still present (under
+//! `error.message`).
+
+use crate::testutil::json::Json;
+
+/// The five failure classes of the service (see the module docs of
+/// [`super`] for the full table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request itself is malformed (bad JSON, unknown fields, invalid
+    /// values, oversized payload). Retrying the same bytes cannot succeed.
+    InvalidRequest,
+    /// The bounded queue is full and the request was shed before any work
+    /// started. Retryable — the reply carries `retry_after_ms`.
+    Overloaded,
+    /// The request was valid but its compute budget expired at a phase
+    /// boundary. Not retryable as-is: the same request will time out again.
+    DeadlineExceeded,
+    /// The service is draining for shutdown. Retryable against a replica
+    /// (or after a restart).
+    ShuttingDown,
+    /// A handler panicked (a library bug, not a client error). The panic
+    /// message is logged to the diagnostics ring buffer.
+    Internal,
+}
+
+impl ErrorKind {
+    pub const ALL: [ErrorKind; 5] = [
+        ErrorKind::InvalidRequest,
+        ErrorKind::Overloaded,
+        ErrorKind::DeadlineExceeded,
+        ErrorKind::ShuttingDown,
+        ErrorKind::Internal,
+    ];
+
+    /// Wire name (`snake_case`), used as `error.kind`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorKind::InvalidRequest => "invalid_request",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+            ErrorKind::ShuttingDown => "shutting_down",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        ErrorKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// May the client expect a retry of the *same* request to succeed?
+    /// Only the two transient conditions qualify; malformed requests,
+    /// expired budgets, and internal bugs reproduce on retry.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ErrorKind::Overloaded | ErrorKind::ShuttingDown)
+    }
+
+    /// Stable index into per-kind counter arrays (diagnostics).
+    pub fn index(&self) -> usize {
+        match self {
+            ErrorKind::InvalidRequest => 0,
+            ErrorKind::Overloaded => 1,
+            ErrorKind::DeadlineExceeded => 2,
+            ErrorKind::ShuttingDown => 3,
+            ErrorKind::Internal => 4,
+        }
+    }
+}
+
+/// A structured service error, ready to serialize as the reply.
+#[derive(Clone, Debug)]
+pub struct ServiceError {
+    pub kind: ErrorKind,
+    pub message: String,
+    /// Backpressure hint: how long the client should wait before retrying
+    /// (only set on `overloaded`).
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServiceError {
+    pub fn invalid_request(msg: &str) -> ServiceError {
+        ServiceError {
+            kind: ErrorKind::InvalidRequest,
+            message: msg.to_string(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn overloaded(retry_after_ms: u64) -> ServiceError {
+        ServiceError {
+            kind: ErrorKind::Overloaded,
+            message: "request queue full, shed before processing".to_string(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn deadline_exceeded(msg: &str) -> ServiceError {
+        ServiceError {
+            kind: ErrorKind::DeadlineExceeded,
+            message: msg.to_string(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn shutting_down() -> ServiceError {
+        ServiceError {
+            kind: ErrorKind::ShuttingDown,
+            message: "service is draining for shutdown".to_string(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn internal(msg: &str) -> ServiceError {
+        ServiceError {
+            kind: ErrorKind::Internal,
+            message: msg.to_string(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut inner = vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("message", Json::Str(self.message.clone())),
+            ("retryable", Json::Bool(self.kind.retryable())),
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            inner.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::obj(inner)),
+        ])
+    }
+}
+
+/// Read the error kind of a reply (`None` on success replies or replies
+/// without a recognizable error object).
+pub fn error_kind(resp: &Json) -> Option<ErrorKind> {
+    resp.get("error")?
+        .get("kind")?
+        .as_str()
+        .and_then(ErrorKind::parse)
+}
+
+/// Read the human-readable error message of a reply.
+pub fn error_message(resp: &Json) -> Option<&str> {
+    resp.get("error")?.get("message")?.as_str()
+}
+
+/// Read the `retry_after_ms` backpressure hint of a reply.
+pub fn error_retry_after_ms(resp: &Json) -> Option<u64> {
+    resp.get("error")?
+        .get("retry_after_ms")?
+        .as_f64()
+        .map(|x| x as u64)
+}
+
+/// Shorthand used throughout the request parsers: every validation failure
+/// is an `invalid_request`.
+pub(crate) fn err(msg: &str) -> Json {
+    ServiceError::invalid_request(msg).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in ErrorKind::ALL {
+            assert_eq!(ErrorKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ErrorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn only_transient_kinds_are_retryable() {
+        let retryable: Vec<ErrorKind> = ErrorKind::ALL
+            .into_iter()
+            .filter(ErrorKind::retryable)
+            .collect();
+        assert_eq!(retryable, vec![ErrorKind::Overloaded, ErrorKind::ShuttingDown]);
+    }
+
+    #[test]
+    fn indices_are_distinct_and_dense() {
+        let mut idx: Vec<usize> = ErrorKind::ALL.iter().map(ErrorKind::index).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn error_json_shape_and_readers() {
+        let resp = ServiceError::overloaded(75).to_json();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(error_kind(&resp), Some(ErrorKind::Overloaded));
+        assert_eq!(error_retry_after_ms(&resp), Some(75));
+        assert_eq!(
+            resp.get("error").and_then(|e| e.get("retryable")),
+            Some(&Json::Bool(true))
+        );
+
+        let resp = err("bad field");
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        assert_eq!(error_message(&resp), Some("bad field"));
+        assert_eq!(error_retry_after_ms(&resp), None);
+        assert_eq!(
+            resp.get("error").and_then(|e| e.get("retryable")),
+            Some(&Json::Bool(false))
+        );
+    }
+
+    #[test]
+    fn readers_tolerate_success_and_legacy_replies() {
+        let ok = Json::obj(vec![("ok", Json::Bool(true))]);
+        assert_eq!(error_kind(&ok), None);
+        assert_eq!(error_message(&ok), None);
+        // A flat string error (pre-taxonomy shape) is not misread.
+        let legacy = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str("oops".into())),
+        ]);
+        assert_eq!(error_kind(&legacy), None);
+        assert_eq!(error_message(&legacy), None);
+    }
+}

@@ -1,196 +1,57 @@
-//! Mapping service: the library exposed as a long-running daemon.
+//! Request parsing and dispatch: one JSON line in, one JSON reply out.
 //!
-//! Real deployments call the mapper from job launch scripts; this service
-//! mirrors that: a thread-per-connection TCP server speaking
-//! newline-delimited JSON (the offline vendor set has no tokio; the event
-//! loop is std::net + threads).
-//!
-//! Protocol (one JSON object per line):
-//! ```json
-//! {"op":"map","tcoords":[[0,0],[0,1]],"pcoords":[[3,3],[3,4]],
-//!  "ordering":"FZ","longest_dim":true,"uneven_prime":false}
-//! -> {"ok":true,"map":[0,1]}
-//! {"op":"ping"} -> {"ok":true,"pong":true}
-//! ```
-//!
-//! **Hierarchical mapping** — add a `"hier"` object to `"map"`. `pcoords`
-//! are then per-rank integer router coordinates on a torus (sizes derived
-//! as per-axis max+1, or given explicitly as `"torus":[..]`), consecutive
-//! `ranks_per_node` ranks form a node, and the optional `"edges"` array
-//! (`[u,v,weight]` rows) supplies the task graph the node-level sweep and
-//! `MinVolume` refinement score against:
-//! ```json
-//! {"op":"map","tcoords":[[0,0],[0,1],[1,0],[1,1]],
-//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],
-//!  "edges":[[0,1,2.5],[2,3,1.0]],
-//!  "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":4}}
-//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1]}
-//! ```
-//!
-//! **Evaluation** — `{"op":"eval"}` scores a submitted mapping with the
-//! Section 3 metrics engine (same allocation encoding as hierarchical
-//! map):
-//! ```json
-//! {"op":"eval","map":[0,1,2,3],"edges":[[0,1,2.5]],
-//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],"ranks_per_node":2}
-//! -> {"ok":true,"total_hops":0,"weighted_hops":0,...}
-//! ```
-//!
-//! **Objectives** — both ops accept an `"objective"` field
-//! (`"whops" | "maxload" | "blend"`, see [`crate::objective`]). On `map`
-//! it selects what the hierarchical sweep and `MinVolume` refinement
-//! optimize (hierarchical mode only: the flat `map` op never scores, so a
-//! non-default objective there is an error, not a silent no-op). On `eval`
-//! the response additionally reports the mapping's value under that
-//! objective (`"objective_value"`) and the routed bottleneck
-//! (`"max_link_load"`).
-//!
-//! **NUMA depth 3** — both ops accept a `"numa"` field: a preset name
-//! (`"xk7"` — 2 sockets × 8 ranks, `"bgq"` — 1 × 16) or an object
-//! `{"sockets_per_node":S,"ranks_per_socket":R,"socket_cost":...,
-//! "core_cost":...,"hop_cost":...}` (costs optional: 0.5 / 0.0 / 1.0).
-//! The socket grid must tile `ranks_per_node` exactly. On `map` (requires
-//! `"hier"`) the mapper runs at depth 3 — socket split plus cross-socket
-//! refinement inside each node — and the response adds each task's
-//! within-node socket plus the socket-swap count:
-//! ```json
-//! {"op":"map","tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
-//!  "edges":[[0,1],[1,2],[2,3]],
-//!  "hier":{"ranks_per_node":2,"strategy":"minvol"},
-//!  "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}
-//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1],"swaps":0,...,
-//!     "sockets":[0,1,0,1],"socket_swaps":0}
-//! ```
-//!
-//! **Objective × NUMA composition** — `"objective"` and `"numa"` compose
-//! on both ops through the unified evaluator
-//! ([`crate::objective::eval`]): `{"objective":"maxload","numa":"xk7"}`
-//! runs the blended (routed congestion × NUMA) depth-3 mapper end to end.
-//! Responses carry the combined breakdown in one place —
-//! `"objective_value"` is the *composed* value
-//! ([`crate::objective::combined_value`]), `"max_link_load"` the routed
-//! bottleneck, and with `"numa"` also `"numa_value"`,
-//! `"socket_weight"`, `"core_weight"`. A combination the evaluator cannot
-//! express (today: a routed objective with a non-unit `numa.hop_cost`) is
-//! rejected with a clear message instead of silently scoring under a
-//! different objective.
-//!
-//! **BG/Q block allocations** — `"hier"` map and `eval` accept a `"bgq"`
-//! object in place of `pcoords`/`torus`/`ranks_per_node`:
-//! `{"block":[a,b,c,d,e],"ranks_per_node":T,"order":"ABCDET"}` builds the
-//! contiguous-block allocation via [`Allocation::bgq`]; a malformed
-//! `order` string (bad letter, wrong length, duplicate) returns a
-//! structured validation error — previously that letter panicked deep in
-//! `machine::rank_order` and crashed the process.
+//! Every request runs with a [`RequestCtx`]: a cooperative compute
+//! [`Deadline`] (checked at the mapping pipeline's phase boundaries, so a
+//! pathological `map` returns `deadline_exceeded` instead of pinning a
+//! worker), the service [`Diagnostics`], and an optional pool snapshot for
+//! `{"op":"stats"}`. The dispatch itself runs under `catch_unwind`: a
+//! library panic becomes a structured `internal` error with the panic
+//! message logged to the diagnostics ring buffer — the worker survives.
 //!
 //! **Validation is strict**: unknown or malformed fields — top-level or
-//! inside `"hier"`/`"numa"` — return `{"ok":false,"error":...}` instead of
-//! being silently ignored, so a typo like `"objectiv"` can never quietly
-//! change what a production mapping run optimizes. In the same spirit,
-//! `ranks_per_node` must divide the rank count exactly (the library's
-//! [`crate::machine::AllocError`] policy: no silent node truncation).
+//! inside `"hier"`/`"numa"`/`"bgq"` — return a structured
+//! `invalid_request` instead of being silently ignored, so a typo like
+//! `"objectiv"` can never quietly change what a production mapping run
+//! optimizes. Coordinates and edge weights must be finite, torus volumes
+//! are capped, and `ranks_per_node` must divide the rank count exactly.
 
+use super::diagnostics::{Diagnostics, PoolSnapshot};
+use super::errors::{err, ServiceError};
 use crate::apps::{Edge, TaskGraph};
 use crate::geom::Coords;
-use crate::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use crate::hier::{map_hierarchical_budgeted, HierConfig, IntraNodeStrategy};
 use crate::machine::{Allocation, NumaTopology, Torus};
 use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
 use crate::metrics::eval_full;
 use crate::objective::{combined_value, eval_numa, EvalSpec, ObjectiveKind};
+use crate::par::Deadline;
 use crate::sfc::PartOrdering;
+use crate::testutil::faults;
 use crate::testutil::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
+use std::time::Instant;
 
-/// Server handle: the bound address and a shutdown flag.
-pub struct Service {
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+/// Per-request context threaded through every handler.
+pub struct RequestCtx {
+    /// Compute budget for this request (checked at phase boundaries).
+    pub deadline: Deadline,
+    /// Shared service telemetry.
+    pub diag: Arc<Diagnostics>,
+    /// Pool view sampled when the request started (for `stats`).
+    pub pool: Option<PoolSnapshot>,
 }
 
-impl Service {
-    /// Bind and serve in background threads. Pass port 0 for an ephemeral
-    /// port (tests).
-    pub fn start<A: ToSocketAddrs>(addr: A) -> std::io::Result<Service> {
-        let listener = TcpListener::bind(addr)?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        listener.set_nonblocking(true)?;
-        let handle = std::thread::spawn(move || {
-            // Idle backoff: start responsive (1 ms), double up to 50 ms
-            // while no clients arrive, reset on every accept. Bounds both
-            // the idle CPU burn and the shutdown-flag poll latency.
-            let mut idle_ms = 1u64;
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        idle_ms = 1;
-                        // Detached: the worker exits when its client
-                        // disconnects (read_line returns 0). Joining here
-                        // would deadlock shutdown on long-lived clients.
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(idle_ms));
-                        idle_ms = (idle_ms * 2).min(50);
-                    }
-                    Err(_) => break,
-                }
-            }
-        });
-        Ok(Service {
-            addr,
-            stop,
-            handle: Some(handle),
-        })
-    }
-
-    pub fn stop(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+impl Default for RequestCtx {
+    /// Direct (non-service) callers: unlimited budget, private telemetry.
+    fn default() -> RequestCtx {
+        RequestCtx {
+            deadline: Deadline::unlimited(),
+            diag: Arc::new(Diagnostics::new()),
+            pool: None,
         }
     }
-}
-
-impl Drop for Service {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let reply = handle_request(trimmed);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-    }
-}
-
-fn err(msg: &str) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
 
 /// Fields each op accepts. Anything else is a structured error — silently
@@ -202,6 +63,7 @@ const MAP_FIELDS: &[&str] = &[
 const EVAL_FIELDS: &[&str] = &[
     "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
 ];
+const STATS_FIELDS: &[&str] = &["op"];
 const HIER_FIELDS: &[&str] = &["ranks_per_node", "strategy", "passes", "rotations"];
 const NUMA_FIELDS: &[&str] = &[
     "sockets_per_node",
@@ -216,6 +78,74 @@ const BGQ_FIELDS: &[&str] = &["block", "ranks_per_node", "order"];
 /// into per-rank tables, so an enormous request would balloon memory
 /// before any real work starts.
 const MAX_BGQ_RANKS: usize = 1 << 20;
+
+/// Same policy for client-declared torus shapes: routed objectives build
+/// per-link tables proportional to the router volume, so an absurd
+/// `"torus"` (or a derived shape from absurd `pcoords`) must be rejected
+/// before it can balloon memory.
+const MAX_TORUS_ROUTERS: usize = 1 << 20;
+
+/// Handle one request line with an unlimited budget and private telemetry
+/// (exposed for direct unit testing and embedding).
+pub fn handle_request(line: &str) -> Json {
+    handle_request_with(line, &RequestCtx::default())
+}
+
+/// Handle one request line under a request context. This is the single
+/// entry point of the worker pool: it never panics (dispatch runs under
+/// `catch_unwind`) and always returns exactly one reply.
+pub fn handle_request_with(line: &str, ctx: &RequestCtx) -> Json {
+    let start = Instant::now();
+    ctx.diag.begin_request();
+    let (op, resp) = match Json::parse(line) {
+        Err(e) => ("(parse)".to_string(), err(&format!("bad json: {e}"))),
+        Ok(req) => {
+            let op = req
+                .get("op")
+                .and_then(|o| o.as_str())
+                .unwrap_or("(missing)")
+                .to_string();
+            let resp = match catch_unwind(AssertUnwindSafe(|| dispatch(&op, &req, ctx))) {
+                Ok(resp) => resp,
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    ctx.diag.record_panic(&op, &msg);
+                    ServiceError::internal(&format!("panic in op \"{op}\": {msg}")).to_json()
+                }
+            };
+            (op, resp)
+        }
+    };
+    ctx.diag.record_reply(&op, &resp, start.elapsed());
+    ctx.diag.end_request();
+    resp
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn dispatch(op: &str, req: &Json, ctx: &RequestCtx) -> Json {
+    // Failpoints for the chaos suite: an injected sleep models a slow
+    // handler, an injected panic proves the catch_unwind isolation.
+    faults::failpoint("service.handler");
+    faults::failpoint("service.handler.panic");
+    match op {
+        "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        "stats" => check_fields(req, STATS_FIELDS, "stats")
+            .unwrap_or_else(|| ctx.diag.snapshot_json(ctx.pool)),
+        "map" => check_fields(req, MAP_FIELDS, "map").unwrap_or_else(|| handle_map(req, ctx)),
+        "eval" => check_fields(req, EVAL_FIELDS, "eval").unwrap_or_else(|| handle_eval(req, ctx)),
+        "(missing)" => err("missing op"),
+        other => err(&format!("unknown op {other}")),
+    }
+}
 
 /// Reject fields outside `allowed` (`what` names the object in the error).
 fn check_fields(obj: &Json, allowed: &[&str], what: &str) -> Option<Json> {
@@ -364,23 +294,6 @@ fn parse_bgq(req: &Json) -> Result<Option<Allocation>, Json> {
     }
 }
 
-/// Handle one request line (exposed for direct unit testing).
-pub fn handle_request(line: &str) -> Json {
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return err(&format!("bad json: {e}")),
-    };
-    match req.get("op").and_then(|o| o.as_str()) {
-        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-        Some("map") => check_fields(&req, MAP_FIELDS, "map").unwrap_or_else(|| handle_map(&req)),
-        Some("eval") => {
-            check_fields(&req, EVAL_FIELDS, "eval").unwrap_or_else(|| handle_eval(&req))
-        }
-        Some(op) => err(&format!("unknown op {op}")),
-        None => err("missing op"),
-    }
-}
-
 fn parse_coords(v: &Json) -> Result<Coords, String> {
     let rows = v.as_arr().ok_or("coords must be an array")?;
     if rows.is_empty() {
@@ -398,7 +311,12 @@ fn parse_coords(v: &Json) -> Result<Coords, String> {
             return Err("ragged coords".into());
         }
         for (k, x) in vals.iter().enumerate() {
-            buf[k] = x.as_f64().ok_or("coords must be numbers")?;
+            // Non-finite coordinates (1e999 parses as inf) would poison
+            // every distance downstream; reject them here.
+            buf[k] = x
+                .as_f64()
+                .filter(|v| v.is_finite())
+                .ok_or("coords must be finite numbers")?;
         }
         coords.push(&buf);
     }
@@ -438,8 +356,10 @@ fn parse_edges(v: &Json, num_tasks: usize) -> Result<Vec<Edge>, String> {
             Some(c) => c.as_f64().ok_or("edge weight must be a number")?,
             None => 1.0,
         };
-        if !(w > 0.0) {
-            return Err(format!("non-positive edge weight {w}"));
+        // Finite and positive: an `inf` weight (1e999 in the wire JSON)
+        // would turn every score it touches into inf/NaN.
+        if !(w > 0.0 && w.is_finite()) {
+            return Err(format!("edge weight {w} must be positive and finite"));
         }
         edges.push(Edge {
             u: u as u32,
@@ -478,15 +398,27 @@ fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Al
         }
         None => (0..dim)
             .map(|d| {
-                pcoords
-                    .axis(d)
-                    .iter()
-                    .fold(0f64, |m, &v| m.max(v))
-                    .round() as usize
-                    + 1
+                let m = pcoords.axis(d).iter().fold(0f64, |m, &v| m.max(v));
+                // parse_coords guarantees finite values; bound the
+                // magnitude so the +1 below cannot overflow.
+                if m >= 9e15 {
+                    return Err(format!("pcoords[{d}] magnitude {m} is absurd"));
+                }
+                Ok(m.round() as usize + 1)
             })
-            .collect(),
+            .collect::<Result<_, _>>()?,
     };
+    // Routed objectives build per-link tables proportional to the router
+    // volume — cap it (checked product: overflow must not bypass the cap).
+    let volume = sizes
+        .iter()
+        .try_fold(1usize, |acc, &s| acc.checked_mul(s))
+        .filter(|&v| v <= MAX_TORUS_ROUTERS);
+    if volume.is_none() {
+        return Err(format!(
+            "torus volume exceeds the service limit of {MAX_TORUS_ROUTERS} routers"
+        ));
+    }
     let torus = Torus::torus(&sizes);
     let mut core_router = Vec::with_capacity(nranks);
     let mut buf = vec![0usize; dim];
@@ -530,6 +462,7 @@ fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Al
 /// The `"hier"` extension of `op:map`: two-level node→core mapping. The
 /// top-level `ordering`/`longest_dim`/`uneven_prime` knobs (already parsed
 /// into `map_cfg`) configure the node-level partition.
+#[allow(clippy::too_many_arguments)]
 fn handle_map_hier(
     req: &Json,
     hier: &Json,
@@ -537,6 +470,7 @@ fn handle_map_hier(
     pcoords: Option<&Coords>,
     map_cfg: MapConfig,
     objective: ObjectiveKind,
+    ctx: &RequestCtx,
 ) -> Json {
     let alloc = match parse_bgq(req) {
         Err(e) => return e,
@@ -620,7 +554,17 @@ fn handle_map_hier(
         edges,
         coords: tcoords.clone(),
     };
-    let m = map_hierarchical(&graph, tcoords, &alloc, &cfg, &NativeBackend);
+    let m = match map_hierarchical_budgeted(
+        &graph,
+        tcoords,
+        &alloc,
+        &cfg,
+        &NativeBackend,
+        ctx.deadline,
+    ) {
+        Ok(m) => m,
+        Err(e) => return ServiceError::deadline_exceeded(&e.to_string()).to_json(),
+    };
     // Combined breakdown: the final mapping's value under the requested
     // objective × numa composition (see `objective::combined_value`), the
     // routed bottleneck latency, and — at depth 3 — the per-level NUMA
@@ -661,7 +605,7 @@ fn handle_map_hier(
 }
 
 /// `op:eval`: Section 3 metrics scalars for a submitted mapping.
-fn handle_eval(req: &Json) -> Json {
+fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
     let mapping: Vec<u32> = match req.get("map").and_then(|m| m.as_arr()) {
         Some(arr) => {
             let mut out = Vec::with_capacity(arr.len());
@@ -731,6 +675,9 @@ fn handle_eval(req: &Json) -> Json {
     if let Some(e) = check_objective_numa(objective, numa.as_ref()) {
         return e;
     }
+    if let Err(e) = ctx.deadline.check("eval.metrics") {
+        return ServiceError::deadline_exceeded(&e.to_string()).to_json();
+    }
     let graph = TaskGraph {
         num_tasks,
         edges,
@@ -776,7 +723,7 @@ fn parse_bool(req: &Json, key: &str, default: bool) -> Result<bool, Json> {
     }
 }
 
-fn handle_map(req: &Json) -> Json {
+fn handle_map(req: &Json, ctx: &RequestCtx) -> Json {
     let tcoords = match req.get("tcoords").map(parse_coords) {
         Some(Ok(c)) => c,
         Some(Err(e)) => return err(&format!("tcoords: {e}")),
@@ -821,7 +768,7 @@ fn handle_map(req: &Json) -> Json {
         if let Some(e) = check_fields(h, HIER_FIELDS, "hier") {
             return e;
         }
-        return handle_map_hier(req, h, &tcoords, pcoords.as_ref(), cfg, objective);
+        return handle_map_hier(req, h, &tcoords, pcoords.as_ref(), cfg, objective, ctx);
     }
     if objective != ObjectiveKind::WeightedHops {
         // The flat map op runs no rotation sweep, so a non-default
@@ -840,6 +787,9 @@ fn handle_map(req: &Json) -> Json {
     let Some(pcoords) = pcoords else {
         return err("missing pcoords");
     };
+    if let Err(e) = ctx.deadline.check("map.partition") {
+        return ServiceError::deadline_exceeded(&e.to_string()).to_json();
+    }
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
     Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -850,71 +800,17 @@ fn handle_map(req: &Json) -> Json {
     ])
 }
 
-/// Simple blocking client.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        Ok(Client {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-        })
-    }
-
-    pub fn request(&mut self, req: &Json) -> std::io::Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(line.trim())
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
-    }
-
-    /// Map tasks to ranks over the wire.
-    pub fn map(
-        &mut self,
-        tcoords: &[Vec<f64>],
-        pcoords: &[Vec<f64>],
-        ordering: PartOrdering,
-    ) -> std::io::Result<Vec<u32>> {
-        let mk = |rows: &[Vec<f64>]| {
-            Json::Arr(
-                rows.iter()
-                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
-                    .collect(),
-            )
-        };
-        let req = Json::obj(vec![
-            ("op", Json::Str("map".into())),
-            ("tcoords", mk(tcoords)),
-            ("pcoords", mk(pcoords)),
-            ("ordering", Json::Str(ordering.name().into())),
-        ]);
-        let resp = self.request(&req)?;
-        if resp.get("ok") != Some(&Json::Bool(true)) {
-            return Err(std::io::Error::other(
-                resp.get("error")
-                    .and_then(|e| e.as_str())
-                    .unwrap_or("unknown error")
-                    .to_string(),
-            ));
-        }
-        Ok(resp
-            .get("map")
-            .and_then(|m| m.as_arr())
-            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect())
-            .unwrap_or_default())
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::errors::{error_kind, error_message, ErrorKind};
     use super::*;
+    use crate::testutil::faults::{install, FaultAction, FaultPlan};
+
+    /// The error message of a structured error reply (panics on success
+    /// replies — tests always know which they expect).
+    fn emsg(resp: &Json) -> &str {
+        error_message(resp).expect("structured error reply")
+    }
 
     #[test]
     fn ping_pong() {
@@ -924,9 +820,24 @@ mod tests {
     }
 
     #[test]
-    fn bad_json_is_an_error() {
+    fn bad_json_is_an_invalid_request() {
         let resp = handle_request("{nope");
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        assert!(emsg(&resp).contains("bad json"));
+        // Pure garbage bytes too.
+        let resp = handle_request("\u{1}\u{2}garbage");
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+    }
+
+    #[test]
+    fn unknown_and_missing_ops_are_invalid_requests() {
+        let resp = handle_request(r#"{"op":"frobnicate"}"#);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        assert!(emsg(&resp).contains("frobnicate"));
+        let resp = handle_request(r#"{"x":1}"#);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        assert!(emsg(&resp).contains("missing op"));
     }
 
     #[test]
@@ -1059,16 +970,43 @@ mod tests {
     }
 
     #[test]
+    fn hostile_numeric_inputs_are_structured_errors() {
+        // Non-finite coordinates: 1e999 parses as +inf in JSON numbers.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[1e999],[1]],"pcoords":[[0],[1]]}"#,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+        assert!(emsg(&resp).contains("finite"), "{resp:?}");
+        // Non-finite edge weight.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1,1e999]],"pcoords":[[0],[1]]}"#,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+        assert!(emsg(&resp).contains("finite"), "{resp:?}");
+        // An absurd explicit torus volume is rejected before it can
+        // balloon per-link tables (checked product: no overflow bypass).
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "pcoords":[[0,0,0],[1,1,1]],"torus":[100000,100000,100000]}"#,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+        assert!(emsg(&resp).contains("torus volume"), "{resp:?}");
+        // Derived torus sizes from huge (but finite) pcoords hit the same
+        // guard instead of overflowing the size computation.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[8e15]]}"#,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+    }
+
+    #[test]
     fn unknown_fields_are_structured_errors() {
         // Top-level typos must not be silently ignored on either op.
         let resp = handle_request(
             r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]],"objectiv":"maxload"}"#,
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
-        assert!(
-            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("objectiv"),
-            "{resp:?}"
-        );
+        assert!(emsg(&resp).contains("objectiv"), "{resp:?}");
         let resp = handle_request(
             r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[1]],"bogus":1}"#,
         );
@@ -1242,10 +1180,7 @@ mod tests {
                  "numa":{{"sockets_per_node":2,"ranks_per_socket":1,"hop_cost":0.5}}}}"#
         ));
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
-        assert!(
-            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("hop_cost"),
-            "{resp:?}"
-        );
+        assert!(emsg(&resp).contains("hop_cost"), "{resp:?}");
     }
 
     #[test]
@@ -1363,10 +1298,7 @@ mod tests {
                  "numa":{{"sockets_per_node":2,"ranks_per_socket":1,"hop_cost":2.0}}}}"#
         ));
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
-        assert!(
-            resp.get("error").and_then(|e| e.as_str()).unwrap().contains("hop_cost"),
-            "{resp:?}"
-        );
+        assert!(emsg(&resp).contains("hop_cost"), "{resp:?}");
     }
 
     #[test]
@@ -1388,13 +1320,7 @@ mod tests {
                 "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2,"order":"ABCDEX"}}"#,
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
-        assert!(
-            resp.get("error")
-                .and_then(|e| e.as_str())
-                .unwrap()
-                .contains("rank-order"),
-            "{resp:?}"
-        );
+        assert!(emsg(&resp).contains("rank-order"), "{resp:?}");
         // Duplicate letters and bad lengths are rejected the same way.
         for order in ["AABCDE", "ABC"] {
             let resp = handle_request(&format!(
@@ -1498,15 +1424,93 @@ mod tests {
     }
 
     #[test]
-    fn end_to_end_over_tcp() {
-        let svc = Service::start("127.0.0.1:0").unwrap();
-        let mut client = Client::connect(svc.addr).unwrap();
-        let t: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64]).collect();
-        let p: Vec<Vec<f64>> = (0..8).map(|i| vec![(7 - i) as f64]).collect();
-        let m = client.map(&t, &p, PartOrdering::FZ).unwrap();
-        // Both sides are 1D lines: the mapping must pair them monotonically
-        // (reversed proc coordinates => task i -> rank 7-i).
-        assert_eq!(m, vec![7, 6, 5, 4, 3, 2, 1, 0]);
-        svc.stop();
+    fn expired_deadline_returns_deadline_exceeded() {
+        let ctx = RequestCtx {
+            deadline: Deadline::within(std::time::Duration::ZERO),
+            ..RequestCtx::default()
+        };
+        // Flat map: checked before the partition runs.
+        let resp = handle_request_with(
+            r#"{"op":"map","tcoords":[[0],[1]],"pcoords":[[0],[1]]}"#,
+            &ctx,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::DeadlineExceeded), "{resp:?}");
+        assert_eq!(
+            resp.get("error").and_then(|e| e.get("retryable")),
+            Some(&Json::Bool(false))
+        );
+        // Hierarchical map: checked at the sweep phase boundary.
+        let resp = handle_request_with(
+            r#"{"op":"map","tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3]],"hier":{"ranks_per_node":2}}"#,
+            &ctx,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::DeadlineExceeded), "{resp:?}");
+        assert!(emsg(&resp).contains("hier.sweep"), "{resp:?}");
+        // Eval: checked before the metrics engine runs.
+        let resp = handle_request_with(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[1]]}"#,
+            &ctx,
+        );
+        assert_eq!(error_kind(&resp), Some(ErrorKind::DeadlineExceeded), "{resp:?}");
+        // Validation still wins over the deadline: a malformed request is
+        // invalid_request even under an expired budget.
+        let resp = handle_request_with(r#"{"op":"map"}"#, &ctx);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+        // Ping never needs a budget.
+        let resp = handle_request_with(r#"{"op":"ping"}"#, &ctx);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn stats_op_reports_counters_and_latency() {
+        let ctx = RequestCtx::default();
+        let resp = handle_request_with(r#"{"op":"ping"}"#, &ctx);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let resp = handle_request_with("{bad", &ctx);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        let stats = handle_request_with(r#"{"op":"stats"}"#, &ctx);
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats:?}");
+        // The two earlier requests completed; stats itself is in flight.
+        assert_eq!(stats.get("completed").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(stats.get("active").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            stats
+                .get("errors")
+                .and_then(|e| e.get("invalid_request"))
+                .and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        let ops = stats.get("ops").unwrap();
+        assert!(ops.get("ping").is_some(), "{stats:?}");
+        assert!(ops.get("(parse)").is_some(), "{stats:?}");
+        // Unknown stats fields are rejected like everywhere else.
+        let resp = handle_request_with(r#"{"op":"stats","verbose":true}"#, &ctx);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+    }
+
+    #[test]
+    fn injected_panic_becomes_internal_error_and_is_logged() {
+        let guard = install(
+            FaultPlan::new(77).site("service.handler.panic", FaultAction::Panic, 1.0),
+        );
+        let ctx = RequestCtx::default();
+        let resp = handle_request_with(r#"{"op":"ping"}"#, &ctx);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::Internal), "{resp:?}");
+        assert!(emsg(&resp).contains("panic in op \"ping\""), "{resp:?}");
+        assert_eq!(ctx.diag.panic_count(), 1);
+        drop(guard);
+        // With the plan uninstalled the same request succeeds — the
+        // handler state survived the panic.
+        let resp = handle_request_with(r#"{"op":"ping"}"#, &ctx);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        // The panic message is in the stats ring buffer.
+        let stats = handle_request_with(r#"{"op":"stats"}"#, &ctx);
+        let recent = stats.get("recent").unwrap().as_arr().unwrap();
+        assert!(
+            recent.iter().any(|e| e.as_str().unwrap().contains("service.handler.panic")),
+            "{recent:?}"
+        );
+        assert_eq!(stats.get("panics").and_then(|v| v.as_f64()), Some(1.0));
     }
 }

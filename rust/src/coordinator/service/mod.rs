@@ -1,0 +1,450 @@
+//! Mapping service: the library exposed as a long-running daemon.
+//!
+//! Real deployments call the mapper from job launch scripts; this service
+//! mirrors that: a TCP server speaking newline-delimited JSON (the offline
+//! vendor set has no tokio; the event loop is std::net + threads), hardened
+//! for production use — bounded worker pool, per-request deadlines, panic
+//! isolation, load shedding, and graceful drain.
+//!
+//! Protocol (one JSON object per line):
+//! ```json
+//! {"op":"map","tcoords":[[0,0],[0,1]],"pcoords":[[3,3],[3,4]],
+//!  "ordering":"FZ","longest_dim":true,"uneven_prime":false}
+//! -> {"ok":true,"map":[0,1]}
+//! {"op":"ping"} -> {"ok":true,"pong":true}
+//! ```
+//!
+//! **Hierarchical mapping** — add a `"hier"` object to `"map"`. `pcoords`
+//! are then per-rank integer router coordinates on a torus (sizes derived
+//! as per-axis max+1, or given explicitly as `"torus":[..]`), consecutive
+//! `ranks_per_node` ranks form a node, and the optional `"edges"` array
+//! (`[u,v,weight]` rows) supplies the task graph the node-level sweep and
+//! `MinVolume` refinement score against:
+//! ```json
+//! {"op":"map","tcoords":[[0,0],[0,1],[1,0],[1,1]],
+//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],
+//!  "edges":[[0,1,2.5],[2,3,1.0]],
+//!  "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":4}}
+//! -> {"ok":true,"map":[0,1,2,3],"nodes":[0,0,1,1]}
+//! ```
+//!
+//! **Evaluation** — `{"op":"eval"}` scores a submitted mapping with the
+//! Section 3 metrics engine (same allocation encoding as hierarchical
+//! map):
+//! ```json
+//! {"op":"eval","map":[0,1,2,3],"edges":[[0,1,2.5]],
+//!  "pcoords":[[0,0],[0,0],[1,0],[1,0]],"ranks_per_node":2}
+//! -> {"ok":true,"total_hops":0,"weighted_hops":0,...}
+//! ```
+//!
+//! **Objectives** — both ops accept an `"objective"` field
+//! (`"whops" | "maxload" | "blend"`, see [`crate::objective`]). On `map`
+//! it selects what the hierarchical sweep and `MinVolume` refinement
+//! optimize (hierarchical mode only: the flat `map` op never scores, so a
+//! non-default objective there is an error, not a silent no-op). On `eval`
+//! the response additionally reports the mapping's value under that
+//! objective (`"objective_value"`) and the routed bottleneck
+//! (`"max_link_load"`).
+//!
+//! **NUMA depth 3** — both ops accept a `"numa"` field: a preset name
+//! (`"xk7"` — 2 sockets × 8 ranks, `"bgq"` — 1 × 16) or an object
+//! `{"sockets_per_node":S,"ranks_per_socket":R,"socket_cost":...,
+//! "core_cost":...,"hop_cost":...}` (costs optional: 0.5 / 0.0 / 1.0).
+//! The socket grid must tile `ranks_per_node` exactly. On `map` (requires
+//! `"hier"`) the mapper runs at depth 3 — socket split plus cross-socket
+//! refinement inside each node — and the response adds each task's
+//! within-node socket plus the socket-swap count.
+//!
+//! **Objective × NUMA composition** — `"objective"` and `"numa"` compose
+//! on both ops through the unified evaluator
+//! ([`crate::objective::eval`]): `{"objective":"maxload","numa":"xk7"}`
+//! runs the blended (routed congestion × NUMA) depth-3 mapper end to end.
+//! Responses carry the combined breakdown in one place —
+//! `"objective_value"` is the *composed* value
+//! ([`crate::objective::combined_value`]), `"max_link_load"` the routed
+//! bottleneck, and with `"numa"` also `"numa_value"`,
+//! `"socket_weight"`, `"core_weight"`. A combination the evaluator cannot
+//! express (today: a routed objective with a non-unit `numa.hop_cost`) is
+//! rejected with a clear message instead of silently scoring under a
+//! different objective.
+//!
+//! **BG/Q block allocations** — `"hier"` map and `eval` accept a `"bgq"`
+//! object in place of `pcoords`/`torus`/`ranks_per_node`:
+//! `{"block":[a,b,c,d,e],"ranks_per_node":T,"order":"ABCDET"}` builds the
+//! contiguous-block allocation via
+//! [`Allocation::bgq`](crate::machine::Allocation::bgq); a malformed
+//! `order` string (bad letter, wrong length, duplicate) returns a
+//! structured validation error — previously that letter panicked deep in
+//! `machine::rank_order` and crashed the process.
+//!
+//! **Validation is strict**: unknown or malformed fields — top-level or
+//! inside `"hier"`/`"numa"`/`"bgq"` — return a structured error instead of
+//! being silently ignored, so a typo like `"objectiv"` can never quietly
+//! change what a production mapping run optimizes. In the same spirit,
+//! `ranks_per_node` must divide the rank count exactly (the library's
+//! [`crate::machine::AllocError`] policy: no silent node truncation).
+//!
+//! # Request pipeline
+//!
+//! ```text
+//! accept loop ──► bounded queue ──► fixed worker pool ──► handler
+//!     │  (queue full: shed with       (one conn per        (catch_unwind,
+//!     │   "overloaded" + retry hint)   worker at a time)    deadline checks)
+//!     └── never spawns per connection
+//! ```
+//!
+//! The accept loop never spawns threads. Accepted connections enter a
+//! bounded queue drained by a fixed pool of [`ServiceConfig::workers`]
+//! threads (default: the [`crate::par`] thread budget, so
+//! `TASKMAP_THREADS` sizes the service too). When the queue is full the
+//! connection is *shed immediately* with an `overloaded` error carrying a
+//! `retry_after_ms` hint, then closed — a connect flood cannot grow the
+//! thread count or the memory footprint; the hard cap on concurrent
+//! connections is `workers + queue_capacity`.
+//!
+//! Every connection is bounded in time and space: socket read/write
+//! timeouts, an overall per-frame deadline (a client trickling bytes
+//! cannot hold a worker forever), a payload cap enforced incrementally,
+//! and a per-request compute budget ([`ServiceConfig::request_budget`])
+//! checked at the mapping pipeline's phase boundaries — an oversized
+//! mapping job fails fast with `deadline_exceeded` instead of pinning a
+//! worker. Handlers run under `catch_unwind`: a library panic becomes a
+//! structured `internal` error, the message lands in the diagnostics ring
+//! buffer, and the worker lives on.
+//!
+//! # Error taxonomy
+//!
+//! Every failure is `{"ok":false,"error":{"kind":...,"message":...,
+//! "retryable":...}}`; see [`ErrorKind`]:
+//!
+//! | kind                | retryable | meaning                                    |
+//! |---------------------|-----------|--------------------------------------------|
+//! | `invalid_request`   | no        | malformed JSON / fields / values / payload |
+//! | `overloaded`        | **yes**   | queue full, shed; carries `retry_after_ms` |
+//! | `deadline_exceeded` | no        | compute budget expired at a phase boundary |
+//! | `shutting_down`     | **yes**   | service draining; retry against a replica  |
+//! | `internal`          | no        | handler panic (library bug, logged)        |
+//!
+//! `retry_after_ms` appears only on `overloaded` replies and is the
+//! server's backpressure hint; [`request_with_retry`] honors it as the
+//! floor of its exponential-backoff delay.
+//!
+//! # Stats
+//!
+//! `{"op":"stats"}` returns service telemetry:
+//! ```json
+//! {"ok":true,"accepted":N,"completed":N,"shed":N,"panics":N,"active":N,
+//!  "errors":{"invalid_request":N,"overloaded":N,...},
+//!  "ops":{"map":{"count":N,"total_us":N,"max_us":N,"mean_us":X},...},
+//!  "recent":["panic in op ...","drain deadline expired; ..."],
+//!  "pool":{"workers":N,"queue_capacity":N,"queue_depth":N,
+//!          "active_connections":N}}
+//! ```
+//! (`pool` is attached when the request arrives through the service;
+//! direct [`handle_request`] calls have no pool to report.)
+//!
+//! # Shutdown
+//!
+//! [`Service::stop`] (and `Drop`) drains gracefully: stop accepting,
+//! refuse queued-but-unserved connections with `shutting_down`, give
+//! in-flight requests up to [`ServiceConfig::drain_timeout`] to finish,
+//! then force-close the stragglers' sockets. The client-observable
+//! invariant: every accepted connection is answered or closed within the
+//! drain deadline.
+//!
+//! # Fault injection
+//!
+//! The handlers and lifecycle carry named failpoints
+//! (`"service.handler"`, `"service.handler.panic"`, `"service.accept"`,
+//! `"service.shutdown"`) wired to the deterministic, seeded
+//! [`crate::testutil::faults`] harness. They are inert unless a test
+//! installs a [`FaultPlan`](crate::testutil::faults::FaultPlan) — the
+//! chaos suite (`tests/chaos.rs`) uses them to prove the invariants above
+//! under injected panics, stalls, and overload, bit-reproducibly at every
+//! thread count.
+
+mod client;
+mod diagnostics;
+mod errors;
+mod handlers;
+mod pool;
+
+pub use client::{request_with_retry, Client, RetryPolicy};
+pub use diagnostics::{Diagnostics, PoolSnapshot};
+pub use errors::{error_kind, error_message, error_retry_after_ms, ErrorKind, ServiceError};
+pub use handlers::{handle_request, handle_request_with, RequestCtx};
+
+use crate::par::Parallelism;
+use crate::testutil::faults;
+use pool::{write_reply, WorkerPool};
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Tunables of the hardened service. `Default` is production-shaped;
+/// tests shrink the limits to exercise the edges quickly.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads. 0 means "use the [`crate::par`] budget"
+    /// (`TASKMAP_THREADS` / available parallelism).
+    pub workers: usize,
+    /// Accepted connections waiting for a worker. Beyond this, new
+    /// connections are shed with `overloaded`.
+    pub queue_capacity: usize,
+    /// Socket read timeout (one blocking read).
+    pub read_timeout: Duration,
+    /// Socket write timeout (one blocking write).
+    pub write_timeout: Duration,
+    /// Overall deadline for assembling one request frame — bounds trickle
+    /// traffic that stays under `read_timeout` per byte.
+    pub frame_timeout: Duration,
+    /// Maximum request line size in bytes; larger frames are rejected
+    /// without being buffered.
+    pub max_payload: usize,
+    /// Compute budget per request, checked at mapping phase boundaries.
+    pub request_budget: Duration,
+    /// Backpressure hint attached to `overloaded` replies.
+    pub retry_after_ms: u64,
+    /// Grace period for in-flight connections at shutdown before their
+    /// sockets are force-closed.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: 0,
+            queue_capacity: 64,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            frame_timeout: Duration::from_secs(60),
+            max_payload: 8 << 20,
+            request_budget: Duration::from_secs(30),
+            retry_after_ms: 50,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// The actual worker count: an explicit setting wins (minimum 1),
+    /// otherwise the shared `par` thread budget.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            Parallelism::auto().num_threads().max(1)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Server handle: the bound address plus the accept loop and worker pool.
+/// Dropping it (or calling [`Service::stop`]) drains gracefully.
+pub struct Service {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    pool: Option<WorkerPool>,
+    diag: Arc<Diagnostics>,
+}
+
+impl Service {
+    /// Bind and serve with the default config. Pass port 0 for an
+    /// ephemeral port (tests).
+    pub fn start<A: ToSocketAddrs>(addr: A) -> std::io::Result<Service> {
+        Service::start_with(addr, ServiceConfig::default())
+    }
+
+    /// Bind and serve with an explicit config.
+    pub fn start_with<A: ToSocketAddrs>(addr: A, cfg: ServiceConfig) -> std::io::Result<Service> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let diag = Arc::new(Diagnostics::new());
+        let pool = WorkerPool::start(cfg.clone(), Arc::clone(&diag));
+        let shared = pool.shared();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let diag2 = Arc::clone(&diag);
+        let accept = std::thread::spawn(move || {
+            // Idle backoff: start responsive (1 ms), double up to 50 ms
+            // while no clients arrive, reset on every accept. Bounds both
+            // the idle CPU burn and the shutdown-flag poll latency.
+            let mut idle_ms = 1u64;
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        idle_ms = 1;
+                        faults::failpoint("service.accept");
+                        diag2.record_accepted();
+                        if let Err(mut stream) = shared.try_dispatch(stream) {
+                            // Queue full: shed right here, on the accept
+                            // thread — a cheap write, never a spawn.
+                            diag2.record_shed();
+                            let refusal = ServiceError::overloaded(cfg.retry_after_ms).to_json();
+                            let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+                            let _ = write_reply(&mut stream, &refusal);
+                            diag2.record_reply("(shed)", &refusal, Duration::ZERO);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(idle_ms));
+                        idle_ms = (idle_ms * 2).min(50);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Service {
+            addr,
+            stop,
+            accept: Some(accept),
+            pool: Some(pool),
+            diag,
+        })
+    }
+
+    /// A point-in-time stats snapshot (same schema as `{"op":"stats"}`).
+    pub fn stats(&self) -> crate::testutil::json::Json {
+        let pool = self.pool.as_ref().map(|p| p.shared().snapshot());
+        self.diag.snapshot_json(pool)
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight work up to
+    /// [`ServiceConfig::drain_timeout`], force-close stragglers, join.
+    pub fn stop(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.drain();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let svc = Service::start("127.0.0.1:0").unwrap();
+        let mut client = Client::connect(svc.addr).unwrap();
+        // 1D lines: tasks 0..8 left to right, procs 0..8 right to left.
+        let tcoords: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64]).collect();
+        let pcoords: Vec<Vec<f64>> = (0..8).map(|i| vec![(7 - i) as f64]).collect();
+        let m = client
+            .map(&tcoords, &pcoords, crate::sfc::PartOrdering::FZ)
+            .unwrap();
+        assert_eq!(m, vec![7, 6, 5, 4, 3, 2, 1, 0]);
+        svc.stop();
+    }
+
+    #[test]
+    fn stats_report_pool_shape_over_tcp() {
+        let svc = Service::start_with(
+            "127.0.0.1:0",
+            ServiceConfig {
+                workers: 2,
+                queue_capacity: 3,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(svc.addr).unwrap();
+        let ping = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        assert_eq!(
+            client.request(&ping).unwrap().get("ok"),
+            Some(&Json::Bool(true))
+        );
+        let stats = client
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats:?}");
+        let pool = stats.get("pool").expect("service stats carry a pool view");
+        assert_eq!(pool.get("workers").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(
+            pool.get("queue_capacity").and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert!(stats.get("accepted").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        // The in-process snapshot agrees.
+        let snap = svc.stats();
+        assert_eq!(snap.get("ok"), Some(&Json::Bool(true)));
+        assert!(snap.get("pool").is_some());
+        svc.stop();
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_with_structured_error() {
+        let svc = Service::start_with(
+            "127.0.0.1:0",
+            ServiceConfig {
+                workers: 1,
+                max_payload: 256,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(svc.addr).unwrap();
+        let big = format!("{{\"op\":\"map\",\"x\":\"{}\"}}\n", "y".repeat(1024));
+        stream.write_all(big.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+        assert!(
+            error_message(&resp).unwrap().contains("payload limit"),
+            "{resp:?}"
+        );
+        // The server closes after an oversized frame.
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        svc.stop();
+    }
+
+    #[test]
+    fn stopped_service_refuses_then_closes() {
+        let svc = Service::start("127.0.0.1:0").unwrap();
+        let addr = svc.addr;
+        let mut client = Client::connect(addr).unwrap();
+        let ping = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        assert_eq!(
+            client.request(&ping).unwrap().get("ok"),
+            Some(&Json::Bool(true))
+        );
+        svc.stop();
+        // The connected client gets shutting_down or a closed socket —
+        // never silence: stop() already answered or closed every
+        // connection before returning.
+        match client.request(&ping) {
+            Ok(resp) => assert_eq!(error_kind(&resp), Some(ErrorKind::ShuttingDown), "{resp:?}"),
+            Err(e) => assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::BrokenPipe
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                ),
+                "{e:?}"
+            ),
+        }
+    }
+}

@@ -1,0 +1,453 @@
+//! The bounded worker pool behind the accept loop.
+//!
+//! A fixed set of worker threads (sized off the [`crate::par`] budget)
+//! pulls accepted connections from a bounded queue. The accept loop never
+//! spawns; when the queue is full it sheds the connection with a
+//! structured `overloaded` reply, so a connect flood can never grow the
+//! thread count — the hard cap on concurrent connections is
+//! `workers + queue_capacity`.
+//!
+//! Each worker owns its connection until the client disconnects, times
+//! out, or the service drains: socket read/write timeouts plus an overall
+//! per-frame deadline (trickle traffic cannot stretch one request forever)
+//! and a payload cap bound every request, and the request handler runs
+//! under `catch_unwind`, so neither a stalled client nor a library panic
+//! can take a worker out of the pool.
+
+use super::diagnostics::{Diagnostics, PoolSnapshot};
+use super::errors::{err, ServiceError};
+use super::handlers::{self, RequestCtx};
+use super::ServiceConfig;
+use crate::par::Deadline;
+use crate::testutil::faults;
+use crate::testutil::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_STOPPED: u8 = 2;
+
+/// Lock tolerating poison: the pool must keep functioning after any panic.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// State shared between the accept loop and the workers.
+pub(super) struct PoolShared {
+    cfg: ServiceConfig,
+    workers: usize,
+    queue: Mutex<VecDeque<TcpStream>>,
+    job_ready: Condvar,
+    state: AtomicU8,
+    /// Connections currently owned by a worker.
+    active: AtomicUsize,
+    /// Socket clones of every live worker-owned connection, for the
+    /// force-close step of [`WorkerPool::drain`].
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+    diag: Arc<Diagnostics>,
+}
+
+impl PoolShared {
+    /// Hand an accepted connection to the pool. `Err` returns the stream
+    /// when the queue is full — the caller sheds it with an `overloaded`
+    /// reply.
+    pub(super) fn try_dispatch(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        {
+            let mut q = lock_ok(&self.queue);
+            if q.len() >= self.cfg.queue_capacity {
+                return Err(stream);
+            }
+            q.push_back(stream);
+        }
+        self.job_ready.notify_one();
+        Ok(())
+    }
+
+    pub(super) fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            workers: self.workers,
+            queue_capacity: self.cfg.queue_capacity,
+            queue_depth: lock_ok(&self.queue).len(),
+            active_connections: self.active.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Write one newline-delimited JSON reply.
+pub(super) fn write_reply<W: Write>(w: &mut W, resp: &Json) -> std::io::Result<()> {
+    let mut line = resp.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// The fixed worker pool. Created by [`super::Service::start_with`]; torn
+/// down by [`WorkerPool::drain`].
+pub(super) struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub(super) fn start(cfg: ServiceConfig, diag: Arc<Diagnostics>) -> WorkerPool {
+        let workers = cfg.resolved_workers();
+        let shared = Arc::new(PoolShared {
+            cfg,
+            workers,
+            queue: Mutex::new(VecDeque::new()),
+            job_ready: Condvar::new(),
+            state: AtomicU8::new(STATE_RUNNING),
+            active: AtomicUsize::new(0),
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+            diag,
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    pub(super) fn shared(&self) -> Arc<PoolShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// Graceful shutdown: stop handing out jobs, refuse what is still
+    /// queued with `shutting_down`, give in-flight connections up to
+    /// `drain_timeout` to finish, then force-close the stragglers' sockets
+    /// and join every worker.
+    ///
+    /// The client-observable invariant is that every accepted socket is
+    /// answered or closed by `drain_timeout` after drain begins. The final
+    /// `join` can run slightly longer when a handler is mid-compute (its
+    /// socket is already force-closed; the compute finishes and the reply
+    /// write fails) — cooperative request budgets keep that tail bounded.
+    pub(super) fn drain(mut self) {
+        faults::failpoint("service.shutdown");
+        self.shared.state.store(STATE_DRAINING, Ordering::SeqCst);
+        self.shared.job_ready.notify_all();
+        // Queued-but-unserved connections get a structured refusal.
+        let queued: Vec<TcpStream> = lock_ok(&self.shared.queue).drain(..).collect();
+        let refusal = ServiceError::shutting_down().to_json();
+        for mut stream in queued {
+            let _ = stream.set_write_timeout(Some(self.shared.cfg.write_timeout));
+            let _ = write_reply(&mut stream, &refusal);
+            self.shared
+                .diag
+                .record_reply("(queued)", &refusal, Duration::ZERO);
+        }
+        // Grace period for in-flight connections.
+        let deadline = Instant::now() + self.shared.cfg.drain_timeout;
+        while self.shared.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if self.shared.active.load(Ordering::SeqCst) > 0 {
+            let conns = lock_ok(&self.shared.conns);
+            for stream in conns.values() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            self.shared.diag.record_event(&format!(
+                "drain deadline expired; force-closed {} connection(s)",
+                conns.len()
+            ));
+        }
+        self.shared.state.store(STATE_STOPPED, Ordering::SeqCst);
+        self.shared.job_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = lock_ok(&shared.queue);
+            loop {
+                if let Some(stream) = q.pop_front() {
+                    break Some(stream);
+                }
+                if shared.state.load(Ordering::SeqCst) != STATE_RUNNING {
+                    break None;
+                }
+                q = match shared.job_ready.wait(q) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+        };
+        let Some(stream) = job else { return };
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        // Belt and braces: handlers already run under catch_unwind, but no
+        // panic anywhere in connection handling may kill the worker.
+        let result = catch_unwind(AssertUnwindSafe(|| serve_conn(&shared, stream)));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+        if result.is_err() {
+            shared
+                .diag
+                .record_event("worker survived a connection-level panic");
+        }
+    }
+}
+
+/// Serve one connection until it disconnects, misbehaves, or the service
+/// drains. Keep-alive: many requests per connection, one reply per line.
+fn serve_conn(shared: &PoolShared, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+    if let Ok(clone) = stream.try_clone() {
+        lock_ok(&shared.conns).insert(conn_id, clone);
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => {
+            lock_ok(&shared.conns).remove(&conn_id);
+            return;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shared.state.load(Ordering::SeqCst) != STATE_RUNNING {
+            let _ = write_reply(&mut writer, &ServiceError::shutting_down().to_json());
+            break;
+        }
+        let frame = read_frame(
+            &mut reader,
+            shared.cfg.max_payload,
+            Deadline::within(shared.cfg.frame_timeout),
+        );
+        match frame {
+            Frame::Line(line) => {
+                let ctx = RequestCtx {
+                    deadline: Deadline::within(shared.cfg.request_budget),
+                    diag: Arc::clone(&shared.diag),
+                    pool: Some(shared.snapshot()),
+                };
+                let resp = handlers::handle_request_with(&line, &ctx);
+                if write_reply(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Frame::Eof | Frame::Closed { .. } => break,
+            Frame::TooLong => {
+                let resp = err(&format!(
+                    "request exceeds the {} byte payload limit",
+                    shared.cfg.max_payload
+                ));
+                let _ = write_reply(&mut writer, &resp);
+                // The remainder of the oversized frame is unread; the only
+                // safe continuation is to close.
+                break;
+            }
+            Frame::TimedOut { partial } => {
+                if partial {
+                    // Mid-frame stall: tell the client its request was
+                    // truncated, then release the worker.
+                    let _ = write_reply(
+                        &mut writer,
+                        &err("timed out mid-frame (truncated request)"),
+                    );
+                }
+                break;
+            }
+        }
+    }
+    lock_ok(&shared.conns).remove(&conn_id);
+}
+
+/// Outcome of reading one newline-delimited frame.
+#[derive(Debug)]
+enum Frame {
+    /// A complete non-empty line (trimmed, newline stripped).
+    Line(String),
+    /// Clean close at a frame boundary.
+    Eof,
+    /// Connection dropped; `partial` = bytes of an unfinished frame were
+    /// already received (mid-request disconnect).
+    Closed { partial: bool },
+    /// The frame exceeded the payload cap.
+    TooLong,
+    /// No complete frame within the socket read timeout / overall frame
+    /// deadline; `partial` distinguishes a stalled frame from a clean idle.
+    TimedOut { partial: bool },
+}
+
+/// Read one frame through `BufReader::fill_buf`, enforcing the payload cap
+/// incrementally (an oversized frame is rejected as soon as the cap is
+/// crossed, without buffering it) and an overall deadline per frame (a
+/// client trickling one byte per read-timeout window still cannot hold the
+/// worker past `overall`). Blank lines are skipped, matching the legacy
+/// line protocol.
+fn read_frame(reader: &mut BufReader<TcpStream>, max_payload: usize, overall: Deadline) -> Frame {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if overall.expired() {
+            return Frame::TimedOut {
+                partial: !buf.is_empty(),
+            };
+        }
+        let available = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Frame::TimedOut {
+                    partial: !buf.is_empty(),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                return Frame::Closed {
+                    partial: !buf.is_empty(),
+                }
+            }
+        };
+        if available.is_empty() {
+            return if buf.is_empty() {
+                Frame::Eof
+            } else {
+                Frame::Closed { partial: true }
+            };
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > max_payload {
+                    reader.consume(pos + 1);
+                    return Frame::TooLong;
+                }
+                buf.extend_from_slice(&available[..pos]);
+                reader.consume(pos + 1);
+                // Garbage bytes are fine here: the JSON parser turns them
+                // into a structured invalid_request reply downstream.
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                if line.is_empty() {
+                    buf.clear();
+                    continue;
+                }
+                return Frame::Line(line);
+            }
+            None => {
+                let n = available.len();
+                if buf.len() + n > max_payload {
+                    reader.consume(n);
+                    return Frame::TooLong;
+                }
+                buf.extend_from_slice(available);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A connected (client, server) TCP pair on localhost.
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn read_frame_returns_complete_lines() {
+        let (mut client, server) = socket_pair();
+        server
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(b"hello world\n{\"x\":1}\n").unwrap();
+        let mut reader = BufReader::new(server);
+        let overall = Deadline::within(Duration::from_secs(5));
+        match read_frame(&mut reader, 1024, overall) {
+            Frame::Line(l) => assert_eq!(l, "hello world"),
+            other => panic!("unexpected frame {other:?}"),
+        }
+        match read_frame(&mut reader, 1024, overall) {
+            Frame::Line(l) => assert_eq!(l, "{\"x\":1}"),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_frame_skips_blank_lines_and_reports_eof() {
+        let (mut client, server) = socket_pair();
+        server
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(b"\n  \nping\n").unwrap();
+        drop(client); // half: EOF after the last line
+        let mut reader = BufReader::new(server);
+        let overall = Deadline::within(Duration::from_secs(5));
+        match read_frame(&mut reader, 1024, overall) {
+            Frame::Line(l) => assert_eq!(l, "ping"),
+            other => panic!("unexpected frame {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut reader, 1024, overall), Frame::Eof));
+    }
+
+    #[test]
+    fn read_frame_caps_payload() {
+        let (mut client, server) = socket_pair();
+        server
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(&[b'x'; 64]).unwrap();
+        client.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(server);
+        let overall = Deadline::within(Duration::from_secs(5));
+        assert!(matches!(
+            read_frame(&mut reader, 16, overall),
+            Frame::TooLong
+        ));
+    }
+
+    #[test]
+    fn read_frame_times_out_on_partial_frame() {
+        let (mut client, server) = socket_pair();
+        server
+            .set_read_timeout(Some(Duration::from_millis(30)))
+            .unwrap();
+        client.write_all(b"{\"op\":").unwrap(); // never finishes the line
+        let mut reader = BufReader::new(server);
+        match read_frame(&mut reader, 1024, Deadline::within(Duration::from_secs(5))) {
+            Frame::TimedOut { partial } => assert!(partial),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_frame_detects_mid_frame_disconnect() {
+        let (mut client, server) = socket_pair();
+        server
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(b"{\"op\":\"ma").unwrap();
+        drop(client);
+        let mut reader = BufReader::new(server);
+        match read_frame(&mut reader, 1024, Deadline::within(Duration::from_secs(5))) {
+            Frame::Closed { partial } => assert!(partial),
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+}

@@ -70,7 +70,7 @@ use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::MapConfig;
 use crate::objective::{EvalSpec, ObjectiveKind};
-use crate::par::{self, Parallelism};
+use crate::par::{self, Deadline, DeadlineExceeded, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
 
 /// How each node's tasks are placed on its ranks (and, for `MinVolume`,
@@ -272,6 +272,25 @@ pub fn map_hierarchical(
     cfg: &HierConfig,
     backend: &dyn WhopsBackend,
 ) -> HierMapping {
+    map_hierarchical_budgeted(graph, tcoords, alloc, cfg, backend, Deadline::unlimited())
+        .expect("unlimited deadline never expires")
+}
+
+/// [`map_hierarchical`] with a cooperative compute budget: the deadline is
+/// checked at every phase boundary (before the node-level sweep, before
+/// `MinVolume` refinement, before the depth-3 socket phase, and before rank
+/// placement), so a pathological request stops at the next boundary instead
+/// of running unbounded. `Err` names the phase that ran out of budget; the
+/// mapping service turns it into a structured `deadline_exceeded` error.
+/// With [`Deadline::unlimited`] this is exactly `map_hierarchical`.
+pub fn map_hierarchical_budgeted(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    cfg: &HierConfig,
+    backend: &dyn WhopsBackend,
+    deadline: Deadline,
+) -> Result<HierMapping, DeadlineExceeded> {
     assert_eq!(tcoords.len(), graph.num_tasks);
     let spec = EvalSpec::new(
         cfg.objective,
@@ -299,6 +318,7 @@ pub fn map_hierarchical(
         objective: cfg.objective,
         numa: cfg.numa.map(|t| t.node_level_costs()),
     };
+    deadline.check("hier.sweep")?;
     let sweep = rotation_sweep(
         graph,
         tcoords,
@@ -319,6 +339,7 @@ pub fn map_hierarchical(
     // composed evaluator the sweep scored with — hop-weighted volume by
     // default, routed per-link loads for the congestion objectives, the
     // socket-cost NUMA term layered on either at depth 3.
+    deadline.check("hier.refine")?;
     let swaps_applied = match cfg.intra {
         IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_eval(
             graph,
@@ -336,6 +357,7 @@ pub fn map_hierarchical(
         // Level 2 (depth 3): sized geometric socket split inside each
         // node, cross-socket MinVolume refinement, then socket-aware rank
         // placement — all parallel over nodes.
+        deadline.check("hier.socket")?;
         let mut task_to_socket = socket::split_sockets(tcoords, &task_to_node, alloc, &topo, par);
         let socket_swaps = match cfg.intra {
             IntraNodeStrategy::MinVolume { passes } => socket::refine_sockets(
@@ -348,6 +370,7 @@ pub fn map_hierarchical(
             ),
             _ => 0,
         };
+        deadline.check("hier.place")?;
         let task_to_rank = socket::place_within_sockets(
             tcoords,
             &task_to_node,
@@ -357,27 +380,28 @@ pub fn map_hierarchical(
             cfg.intra,
             par,
         );
-        return HierMapping {
+        return Ok(HierMapping {
             task_to_rank,
             task_to_node,
             task_to_socket: Some(task_to_socket),
             node_score,
             swaps_applied,
             socket_swaps,
-        };
+        });
     }
 
     // Level 2 (depth 2): place each node's tasks on its ranks, in parallel
     // over nodes with per-worker Hilbert scratch.
+    deadline.check("hier.place")?;
     let task_to_rank = place_within_nodes(tcoords, &task_to_node, alloc, cfg.intra, par);
-    HierMapping {
+    Ok(HierMapping {
         task_to_rank,
         task_to_node,
         task_to_socket: None,
         node_score,
         swaps_applied,
         socket_swaps: 0,
-    }
+    })
 }
 
 /// Level 2: intra-node placement. Tasks of node `n` (ascending task index)
@@ -806,6 +830,42 @@ mod tests {
         for t in 0..16 {
             assert_eq!(rank_socks[m.task_to_rank[t] as usize], socks[t], "task {t}");
         }
+    }
+
+    #[test]
+    fn budgeted_mapper_stops_at_first_phase_when_expired() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let err = map_hierarchical_budgeted(
+            &g,
+            &g.coords,
+            &alloc,
+            &cfg(IntraNodeStrategy::MinVolume { passes: 2 }),
+            &NativeBackend,
+            Deadline::within(std::time::Duration::ZERO),
+        )
+        .unwrap_err();
+        assert_eq!(err.phase, "hier.sweep");
+    }
+
+    #[test]
+    fn budgeted_mapper_with_unlimited_deadline_matches_unbudgeted() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let base = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
+        let a = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
+        let b = map_hierarchical_budgeted(
+            &g,
+            &g.coords,
+            &alloc,
+            &base,
+            &NativeBackend,
+            Deadline::unlimited(),
+        )
+        .unwrap();
+        assert_eq!(a.task_to_rank, b.task_to_rank);
+        assert_eq!(a.task_to_node, b.task_to_node);
+        assert_eq!(a.swaps_applied, b.swaps_applied);
     }
 
     #[test]

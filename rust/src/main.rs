@@ -77,7 +77,7 @@ fn main() {
         "serve" => {
             let svc = Service::start(addr.as_str()).expect("bind service");
             println!("mapping service listening on {}", svc.addr);
-            println!("protocol: newline-delimited JSON; see coordinator/service.rs");
+            println!("protocol: newline-delimited JSON; see src/coordinator/service/");
             // Serve until killed.
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,111 @@
+//! Cooperative compute deadlines for long-running mapping work.
+//!
+//! The mapping pipelines (rotation sweep, `MinVolume` refinement, the
+//! depth-3 socket split) can run for a long time on pathological inputs.
+//! Threads cannot be killed safely, so cancellation is **cooperative**: a
+//! [`Deadline`] is threaded down the call tree and checked at phase
+//! boundaries — between the sweep, each refinement stage, and placement —
+//! so an over-budget computation stops at the next boundary and reports
+//! *which* phase ran out of time instead of pinning a worker forever.
+//!
+//! A `Deadline` is `Copy` and checking it is a single `Instant` comparison,
+//! so sprinkling checks at phase boundaries costs nothing on the happy
+//! path. [`Deadline::unlimited`] never expires — library callers that do
+//! not care about budgets pass it and keep the exact pre-deadline behavior
+//! (the budgeted entry points are additive, not a semantic change).
+
+use std::time::{Duration, Instant};
+
+/// A point in time after which budgeted work should stop at the next phase
+/// boundary. `None` means "no deadline" (never expires).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    /// A deadline that never expires (the default).
+    pub fn unlimited() -> Deadline {
+        Deadline { at: None }
+    }
+
+    /// Expire `budget` from now.
+    pub fn within(budget: Duration) -> Deadline {
+        Deadline {
+            at: Some(Instant::now() + budget),
+        }
+    }
+
+    /// Expire at an explicit instant.
+    pub fn at(instant: Instant) -> Deadline {
+        Deadline { at: Some(instant) }
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        match self.at {
+            Some(at) => Instant::now() >= at,
+            None => false,
+        }
+    }
+
+    /// Time left, or `None` for an unlimited deadline. Zero when expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|at| at.saturating_duration_since(Instant::now()))
+    }
+
+    /// Phase-boundary check: `Err` names the phase that ran out of budget.
+    pub fn check(&self, phase: &'static str) -> Result<(), DeadlineExceeded> {
+        if self.expired() {
+            Err(DeadlineExceeded { phase })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// A budgeted computation ran past its deadline; `phase` names the phase
+/// boundary where the overrun was detected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    pub phase: &'static str,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "compute budget exhausted at phase \"{}\"", self.phase)
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_never_expires() {
+        let d = Deadline::unlimited();
+        assert!(!d.expired());
+        assert!(d.check("any").is_ok());
+        assert_eq!(d.remaining(), None);
+    }
+
+    #[test]
+    fn zero_budget_expires_immediately() {
+        let d = Deadline::within(Duration::ZERO);
+        assert!(d.expired());
+        let e = d.check("sweep").unwrap_err();
+        assert_eq!(e.phase, "sweep");
+        assert!(e.to_string().contains("sweep"));
+        assert_eq!(d.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn generous_budget_does_not_expire() {
+        let d = Deadline::within(Duration::from_secs(3600));
+        assert!(!d.expired());
+        assert!(d.check("sweep").is_ok());
+        assert!(d.remaining().unwrap() > Duration::from_secs(3599));
+    }
+}

@@ -28,6 +28,10 @@
 //! property tests in `tests/properties.rs` pin this for `mj_partition`,
 //! `mj_multisection`, and `rotation_sweep`.
 
+pub mod deadline;
+
+pub use deadline::{Deadline, DeadlineExceeded};
+
 use std::marker::PhantomData;
 use std::sync::OnceLock;
 

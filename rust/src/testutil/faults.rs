@@ -1,0 +1,344 @@
+//! Deterministic, seeded fault injection for chaos testing.
+//!
+//! Production code marks interesting points with [`failpoint`]`("site.name")`.
+//! With no plan installed the call is a single relaxed atomic load — there is
+//! no compile-time feature gate and no cost worth measuring on the happy
+//! path. Tests install a [`FaultPlan`] (a seed plus per-site probabilities
+//! and actions) via [`install`]; while the returned [`FaultGuard`] lives,
+//! matching failpoints panic or sleep according to the plan.
+//!
+//! # Determinism contract
+//!
+//! Whether the `k`-th *hit* of a site fires is a pure function
+//! [`would_fire`]`(seed, site, k, p)` — no global RNG state, no ordering
+//! dependence between sites. Replaying the same seed therefore replays the
+//! exact same fire/no-fire decision sequence per site. Under concurrency the
+//! *assignment* of hit indices to threads depends on scheduling, but the
+//! decision sequence itself — and thus the total number of fires among the
+//! first `n` hits — is bit-reproducible at every thread count. Chaos tests
+//! with one in-flight request at a time can predict each individual outcome;
+//! concurrent tests assert exact counts.
+//!
+//! Plans are process-global. [`install`] holds a lock for the lifetime of
+//! the guard, so chaos tests serialize against each other even when the test
+//! harness runs them on multiple threads; tests that need *no* faults but
+//! must not see another test's plan install an empty plan to hold the lock.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with a message naming the site (exercises `catch_unwind` paths).
+    Panic,
+    /// Sleep for the given number of milliseconds (simulates slow work).
+    SleepMs(u64),
+}
+
+/// One armed site: fire with `probability` on each hit, at most `max_fires`
+/// times in total.
+#[derive(Clone, Debug)]
+struct FaultSpec {
+    action: FaultAction,
+    probability: f64,
+    max_fires: u64,
+}
+
+/// Per-site counters (hits observed, fires triggered).
+#[derive(Default)]
+struct SiteState {
+    hits: AtomicU64,
+    fires: AtomicU64,
+}
+
+/// A seeded set of armed failpoint sites.
+pub struct FaultPlan {
+    seed: u64,
+    specs: BTreeMap<String, FaultSpec>,
+    state: BTreeMap<String, SiteState>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            specs: BTreeMap::new(),
+            state: BTreeMap::new(),
+        }
+    }
+
+    /// Arm `site` to perform `action` with probability `p` on each hit.
+    pub fn site(self, site: &str, action: FaultAction, p: f64) -> FaultPlan {
+        self.site_limited(site, action, p, u64::MAX)
+    }
+
+    /// Like [`FaultPlan::site`] but fires at most `max_fires` times.
+    pub fn site_limited(
+        mut self,
+        site: &str,
+        action: FaultAction,
+        p: f64,
+        max_fires: u64,
+    ) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&p), "probability must be in [0,1]");
+        self.specs.insert(
+            site.to_string(),
+            FaultSpec {
+                action,
+                probability: p,
+                max_fires,
+            },
+        );
+        self.state.insert(site.to_string(), SiteState::default());
+        self
+    }
+
+    /// Record a hit at `site` and decide whether it fires. Returns the action
+    /// to perform, or `None` (unarmed site, probability miss, or fire budget
+    /// exhausted).
+    pub fn fire(&self, site: &str) -> Option<FaultAction> {
+        let spec = self.specs.get(site)?;
+        let state = &self.state[site];
+        let hit = state.hits.fetch_add(1, Ordering::Relaxed);
+        if !would_fire(self.seed, site, hit, spec.probability) {
+            return None;
+        }
+        // Claim a fire slot; losers of the race past max_fires do nothing.
+        let claimed = state
+            .fires
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                if n < spec.max_fires {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if claimed {
+            Some(spec.action)
+        } else {
+            None
+        }
+    }
+
+    /// Total hits observed at `site` (0 if unarmed).
+    pub fn hits(&self, site: &str) -> u64 {
+        self.state
+            .get(site)
+            .map_or(0, |s| s.hits.load(Ordering::Relaxed))
+    }
+
+    /// Total fires triggered at `site` (0 if unarmed).
+    pub fn fires(&self, site: &str) -> u64 {
+        self.state
+            .get(site)
+            .map_or(0, |s| s.fires.load(Ordering::Relaxed))
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Pure decision function: does hit number `hit` of `site` fire under `seed`
+/// with probability `probability`? This is the whole determinism story —
+/// no state, so any (seed, site, hit) triple always answers the same.
+pub fn would_fire(seed: u64, site: &str, hit: u64, probability: f64) -> bool {
+    if probability <= 0.0 {
+        return false;
+    }
+    if probability >= 1.0 {
+        return true;
+    }
+    let h = splitmix64(seed ^ fnv1a(site) ^ hit.wrapping_mul(GOLDEN));
+    // Same 53-bit uniform construction as testutil::rng::Rng::f64.
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    u < probability
+}
+
+/// Fast-path flag: failpoints skip all locking while no plan is installed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: OnceLock<RwLock<Option<Arc<FaultPlan>>>> = OnceLock::new();
+/// Serializes chaos tests: held for the lifetime of each [`FaultGuard`].
+static INSTALL_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+fn plan_cell() -> &'static RwLock<Option<Arc<FaultPlan>>> {
+    PLAN.get_or_init(|| RwLock::new(None))
+}
+
+/// Keeps a plan installed; uninstalls on drop and releases the global
+/// install lock so the next chaos test can proceed.
+pub struct FaultGuard {
+    plan: Arc<FaultPlan>,
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    /// The installed plan (for reading hit/fire counters in assertions).
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+        match plan_cell().write() {
+            Ok(mut w) => *w = None,
+            Err(poisoned) => *poisoned.into_inner() = None,
+        }
+    }
+}
+
+/// Install `plan` process-wide until the returned guard drops. Blocks while
+/// another guard is alive (chaos tests serialize on this).
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let serial = match INSTALL_LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        // A previous chaos test panicked while holding the lock; the plan
+        // was still cleared by its guard's Drop, so the lock is safe to take.
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let plan = Arc::new(plan);
+    match plan_cell().write() {
+        Ok(mut w) => *w = Some(Arc::clone(&plan)),
+        Err(poisoned) => *poisoned.into_inner() = Some(Arc::clone(&plan)),
+    }
+    ACTIVE.store(true, Ordering::SeqCst);
+    FaultGuard {
+        plan,
+        _serial: serial,
+    }
+}
+
+/// Decide whether `site` fires right now (recording a hit). `None` unless a
+/// plan is installed and arms this site and the seeded decision says fire.
+pub fn fire(site: &str) -> Option<FaultAction> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let guard = match plan_cell().read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    guard.as_ref().and_then(|p| p.fire(site))
+}
+
+/// Production-side marker: perform whatever fault is armed at `site`.
+/// No-op (one relaxed load) when no plan is installed.
+pub fn failpoint(site: &str) {
+    match fire(site) {
+        Some(FaultAction::Panic) => panic!("injected fault at failpoint \"{site}\""),
+        Some(FaultAction::SleepMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms))
+        }
+        None => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn would_fire_is_pure_and_seeded() {
+        for hit in 0..64 {
+            assert_eq!(
+                would_fire(42, "a.site", hit, 0.3),
+                would_fire(42, "a.site", hit, 0.3)
+            );
+        }
+        // Different seeds give different decision sequences.
+        let a: Vec<bool> = (0..64).map(|h| would_fire(1, "s", h, 0.5)).collect();
+        let b: Vec<bool> = (0..64).map(|h| would_fire(2, "s", h, 0.5)).collect();
+        assert_ne!(a, b);
+        // Different sites decouple under the same seed.
+        let c: Vec<bool> = (0..64).map(|h| would_fire(1, "t", h, 0.5)).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn would_fire_edge_probabilities() {
+        assert!(!would_fire(7, "x", 0, 0.0));
+        assert!(would_fire(7, "x", 0, 1.0));
+    }
+
+    #[test]
+    fn would_fire_rate_tracks_probability() {
+        let fires = (0..10_000)
+            .filter(|&h| would_fire(99, "rate", h, 0.25))
+            .count();
+        assert!((2000..3000).contains(&fires), "fires = {fires}");
+    }
+
+    #[test]
+    fn plan_fire_matches_pure_function_sequentially() {
+        let plan = FaultPlan::new(5).site("s", FaultAction::Panic, 0.4);
+        for hit in 0..100 {
+            let expect = would_fire(5, "s", hit, 0.4);
+            assert_eq!(plan.fire("s").is_some(), expect, "hit {hit}");
+        }
+        assert_eq!(plan.hits("s"), 100);
+        let expected_fires = (0..100).filter(|&h| would_fire(5, "s", h, 0.4)).count();
+        assert_eq!(plan.fires("s"), expected_fires as u64);
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let plan = FaultPlan::new(5).site("armed", FaultAction::Panic, 1.0);
+        assert_eq!(plan.fire("other"), None);
+        assert_eq!(plan.hits("other"), 0);
+        assert!(plan.fire("armed").is_some());
+    }
+
+    #[test]
+    fn max_fires_caps_total_fires() {
+        let plan = FaultPlan::new(5).site_limited("s", FaultAction::SleepMs(1), 1.0, 3);
+        let fired = (0..10).filter(|_| plan.fire("s").is_some()).count();
+        assert_eq!(fired, 3);
+        assert_eq!(plan.hits("s"), 10);
+        assert_eq!(plan.fires("s"), 3);
+    }
+
+    #[test]
+    fn install_guard_arms_and_disarms_failpoints() {
+        {
+            let guard = install(FaultPlan::new(11).site("t.x", FaultAction::SleepMs(0), 1.0));
+            assert_eq!(fire("t.x"), Some(FaultAction::SleepMs(0)));
+            assert_eq!(guard.plan().hits("t.x"), 1);
+            failpoint("t.x"); // sleeps 0ms; must not panic
+            assert_eq!(guard.plan().hits("t.x"), 2);
+        }
+        assert_eq!(fire("t.x"), None);
+    }
+
+    #[test]
+    fn failpoint_panic_action_panics_with_site_name() {
+        let guard = install(FaultPlan::new(11).site("t.boom", FaultAction::Panic, 1.0));
+        let err = std::panic::catch_unwind(|| failpoint("t.boom")).unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("t.boom"), "msg = {msg:?}");
+        drop(guard);
+    }
+}

@@ -5,6 +5,7 @@
 //! so the handful of primitives the library and its tests need live here.
 
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,508 @@
+//! Chaos suite: the mapping service under deterministic fault injection.
+//!
+//! Every test installs a seeded [`FaultPlan`] (possibly empty — the install
+//! lock also serializes chaos tests against each other) and proves one of
+//! the service's robustness invariants:
+//!
+//! - every accepted request is answered or the connection is closed — never
+//!   silently hung;
+//! - an injected handler panic becomes a structured `internal` error and
+//!   the worker pool stays healthy;
+//! - overload sheds with a structured `overloaded` reply carrying the
+//!   `retry_after_ms` hint, and the retry client rides it out;
+//! - shutdown drains in-flight work, and force-closes stragglers within
+//!   the drain deadline;
+//! - fault decisions are bit-reproducible: the same seed replays the same
+//!   outcome sequence at every pool size (CI runs this suite at
+//!   `TASKMAP_THREADS=1/2/8` with a pinned `TASKMAP_FAULT_SEED`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use taskmap::coordinator::service::{
+    error_kind, error_retry_after_ms, request_with_retry, Client, ErrorKind, RetryPolicy,
+    Service, ServiceConfig,
+};
+use taskmap::testutil::faults::{install, would_fire, FaultAction, FaultPlan};
+use taskmap::testutil::json::Json;
+
+/// The chaos seed: pinned in CI via `TASKMAP_FAULT_SEED` so every lane
+/// replays the identical fault schedule.
+fn fault_seed() -> u64 {
+    std::env::var("TASKMAP_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xCAFE_BABE)
+}
+
+/// What one raw ping attempt observed.
+#[derive(Debug, PartialEq, Eq)]
+enum Outcome {
+    Pong,
+    Error(ErrorKind),
+    /// The server closed (or reset) the connection without a parseable
+    /// reply — e.g. a shed refusal raced a TCP reset.
+    Disconnected,
+}
+
+/// One ping on a fresh connection with a bounded read: a hung server fails
+/// the test instead of hanging it.
+fn ping_once(addr: std::net::SocketAddr, read_timeout: Duration) -> Outcome {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return Outcome::Disconnected,
+    };
+    stream.set_read_timeout(Some(read_timeout)).unwrap();
+    if stream.write_all(b"{\"op\":\"ping\"}\n").is_err() {
+        return Outcome::Disconnected;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => Outcome::Disconnected,
+        Ok(_) => match Json::parse(line.trim()) {
+            Ok(resp) if resp.get("ok") == Some(&Json::Bool(true)) => Outcome::Pong,
+            Ok(resp) => match error_kind(&resp) {
+                Some(kind) => Outcome::Error(kind),
+                None => Outcome::Disconnected,
+            },
+            Err(_) => Outcome::Disconnected,
+        },
+    }
+}
+
+fn stats(addr: std::net::SocketAddr) -> Json {
+    let mut client = Client::connect(addr).unwrap();
+    client
+        .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap()
+}
+
+#[test]
+fn every_request_is_answered_under_injected_slowness() {
+    let seed = fault_seed();
+    let guard = install(FaultPlan::new(seed).site(
+        "service.handler",
+        FaultAction::SleepMs(10),
+        0.5,
+    ));
+    let svc = Service::start("127.0.0.1:0").unwrap();
+    let addr = svc.addr;
+    const CLIENTS: usize = 6;
+    const REQS: usize = 3;
+    let answered = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let answered = Arc::clone(&answered);
+            std::thread::spawn(move || {
+                for _ in 0..REQS {
+                    assert_eq!(ping_once(addr, Duration::from_secs(10)), Outcome::Pong);
+                    answered.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(answered.load(Ordering::Relaxed), CLIENTS * REQS);
+    // Determinism: hit-to-thread assignment races, but the number of fires
+    // among the first N hits is a pure function of (seed, site) — assert
+    // the exact count the seed predicts.
+    let total = (CLIENTS * REQS) as u64;
+    assert_eq!(guard.plan().hits("service.handler"), total);
+    let predicted = (0..total)
+        .filter(|&h| would_fire(seed, "service.handler", h, 0.5))
+        .count() as u64;
+    assert_eq!(guard.plan().fires("service.handler"), predicted);
+    svc.stop();
+}
+
+#[test]
+fn injected_panics_become_internal_errors_and_spare_the_pool() {
+    let guard = install(FaultPlan::new(fault_seed()).site_limited(
+        "service.handler.panic",
+        FaultAction::Panic,
+        1.0,
+        3,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 2,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    // First three requests hit the armed panic; the pool answers each one
+    // with a structured internal error and keeps serving.
+    for i in 0..6 {
+        let outcome = ping_once(svc.addr, Duration::from_secs(5));
+        if i < 3 {
+            assert_eq!(outcome, Outcome::Error(ErrorKind::Internal), "request {i}");
+        } else {
+            assert_eq!(outcome, Outcome::Pong, "request {i}");
+        }
+    }
+    assert_eq!(guard.plan().fires("service.handler.panic"), 3);
+    // The panics are counted and their messages are in the ring buffer.
+    let s = stats(svc.addr);
+    assert_eq!(s.get("panics").and_then(|v| v.as_f64()), Some(3.0));
+    assert_eq!(
+        s.get("errors")
+            .and_then(|e| e.get("internal"))
+            .and_then(|v| v.as_f64()),
+        Some(3.0)
+    );
+    let recent = s.get("recent").unwrap().as_arr().unwrap();
+    assert!(
+        recent
+            .iter()
+            .any(|e| e.as_str().unwrap().contains("service.handler.panic")),
+        "{recent:?}"
+    );
+    svc.stop();
+}
+
+#[test]
+fn overload_sheds_with_structured_reply_and_retry_hint() {
+    // Every request sleeps 250 ms on a single worker with a queue of one:
+    // most of a simultaneous burst of 8 must be shed, immediately, with
+    // the backpressure hint.
+    let _guard = install(FaultPlan::new(fault_seed()).site(
+        "service.handler",
+        FaultAction::SleepMs(250),
+        1.0,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            retry_after_ms: 25,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    const BURST: usize = 8;
+    let barrier = Arc::new(Barrier::new(BURST));
+    let handles: Vec<_> = (0..BURST)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(10)))
+                    .unwrap();
+                stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    // A shed refusal can race the TCP reset of the dropped
+                    // socket; a clean read gives the structured reply.
+                    Ok(0) | Err(_) => None,
+                    Ok(_) => Some(Json::parse(line.trim()).unwrap()),
+                }
+            })
+        })
+        .collect();
+    let mut pongs = 0usize;
+    let mut shed_seen = 0usize;
+    let mut dropped = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Some(resp) if resp.get("ok") == Some(&Json::Bool(true)) => pongs += 1,
+            Some(resp) => {
+                assert_eq!(error_kind(&resp), Some(ErrorKind::Overloaded), "{resp:?}");
+                assert_eq!(error_retry_after_ms(&resp), Some(25), "{resp:?}");
+                assert_eq!(
+                    resp.get("error").and_then(|e| e.get("retryable")),
+                    Some(&Json::Bool(true))
+                );
+                shed_seen += 1;
+            }
+            None => dropped += 1,
+        }
+    }
+    assert_eq!(pongs + shed_seen + dropped, BURST);
+    assert!(pongs >= 1, "at least the first request must be served");
+    assert!(
+        shed_seen + dropped >= 1,
+        "a burst of {BURST} through a 1-worker/1-slot pool must shed"
+    );
+    // Server-side accounting closes the loop: accepted = served + shed,
+    // so even replies lost to a TCP reset were answered before the close.
+    let s = stats(addr);
+    let shed = s.get("shed").and_then(|v| v.as_f64()).unwrap() as usize;
+    assert_eq!(shed, shed_seen + dropped, "{s:?}");
+    assert!(
+        s.get("accepted").and_then(|v| v.as_f64()).unwrap() as usize >= BURST,
+        "{s:?}"
+    );
+    svc.stop();
+}
+
+#[test]
+fn malformed_traffic_is_contained_and_pool_stays_healthy() {
+    // No faults — but hold the install lock so no other plan leaks in.
+    let _guard = install(FaultPlan::new(fault_seed()));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 2,
+            max_payload: 512,
+            read_timeout: Duration::from_millis(150),
+            frame_timeout: Duration::from_millis(250),
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+
+    // Garbage bytes: a structured bad-json error, connection stays usable.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    stream.write_all(b"\x01\x02 garbage \x7f\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+    // Same connection still serves valid requests afterwards.
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "{line:?}");
+    drop((stream, reader));
+
+    // Mid-request disconnect: the worker just moves on.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"{\"op\":\"map\",\"tco").unwrap();
+    drop(stream);
+
+    // Oversized payload: structured refusal, then the server closes.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let big = format!("{{\"op\":\"ping\",\"pad\":\"{}\"}}\n", "x".repeat(2048));
+    stream.write_all(big.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close");
+
+    // Trickle stall: a frame that never completes is timed out and
+    // answered, releasing the worker.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    stream.write_all(b"{\"op\":\"pi").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+    assert!(
+        resp.get("error")
+            .and_then(|e| e.get("message"))
+            .and_then(|m| m.as_str())
+            .unwrap()
+            .contains("truncated"),
+        "{resp:?}"
+    );
+
+    // After all of that, the pool is fully healthy.
+    assert_eq!(ping_once(addr, Duration::from_secs(5)), Outcome::Pong);
+    let s = stats(addr);
+    assert!(
+        s.get("errors")
+            .and_then(|e| e.get("invalid_request"))
+            .and_then(|v| v.as_f64())
+            .unwrap()
+            >= 3.0,
+        "{s:?}"
+    );
+    assert_eq!(s.get("panics").and_then(|v| v.as_f64()), Some(0.0));
+    svc.stop();
+}
+
+#[test]
+fn graceful_drain_answers_in_flight_requests() {
+    let _guard = install(FaultPlan::new(fault_seed()).site(
+        "service.handler",
+        FaultAction::SleepMs(150),
+        1.0,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 1,
+            drain_timeout: Duration::from_secs(2),
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    let client = std::thread::spawn(move || ping_once(addr, Duration::from_secs(5)));
+    // Let the request reach the worker, then shut down while it sleeps.
+    std::thread::sleep(Duration::from_millis(60));
+    svc.stop();
+    // Drain waited for the in-flight request: the client still got its
+    // answer.
+    assert_eq!(client.join().unwrap(), Outcome::Pong);
+    // And the listener is gone.
+    assert!(TcpStream::connect(addr).is_err());
+}
+
+#[test]
+fn drain_force_closes_stragglers_within_the_deadline() {
+    let _guard = install(FaultPlan::new(fault_seed()).site(
+        "service.handler",
+        FaultAction::SleepMs(1500),
+        1.0,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 1,
+            drain_timeout: Duration::from_millis(100),
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        let mut buf = Vec::new();
+        // The handler sleeps 1.5 s but drain force-closes our socket at
+        // ~100 ms: read returns (EOF or reset) long before the handler
+        // finishes. Time that observation.
+        let start = Instant::now();
+        let _ = stream.read_to_end(&mut buf);
+        (start.elapsed(), buf)
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    let stop_started = Instant::now();
+    svc.stop();
+    let stop_elapsed = stop_started.elapsed();
+    let (client_elapsed, buf) = client.join().unwrap();
+    // The socket was closed within the drain deadline (plus margin), not
+    // after the 1.5 s handler sleep.
+    assert!(
+        client_elapsed < Duration::from_millis(1000),
+        "client observed close after {client_elapsed:?}"
+    );
+    // No pong made it out before the force-close.
+    assert!(!String::from_utf8_lossy(&buf).contains("pong"), "{buf:?}");
+    // stop() itself may join the sleeping worker (bounded by the injected
+    // 1.5 s sleep), but never hangs.
+    assert!(stop_elapsed < Duration::from_secs(5), "{stop_elapsed:?}");
+}
+
+#[test]
+fn retry_client_rides_out_transient_overload() {
+    // Only the first request sleeps (fire budget 1): it pins the single
+    // worker for 300 ms while a second idle connection fills the one queue
+    // slot — the retry client gets shed, backs off per retry_after_ms, and
+    // succeeds once the pool frees up.
+    let guard = install(FaultPlan::new(fault_seed()).site_limited(
+        "service.handler",
+        FaultAction::SleepMs(300),
+        1.0,
+        1,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            retry_after_ms: 20,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    let slow = std::thread::spawn(move || ping_once(addr, Duration::from_secs(10)));
+    std::thread::sleep(Duration::from_millis(30));
+    // Fill the queue slot with a connection that never speaks, then closes.
+    let filler = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(250));
+        drop(stream);
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    let policy = RetryPolicy {
+        max_attempts: 10,
+        base_delay_ms: 15,
+        max_delay_ms: 200,
+        seed: fault_seed(),
+    };
+    let req = Json::obj(vec![("op", Json::Str("ping".into()))]);
+    let resp = request_with_retry(addr, &req, &policy).expect("retry client succeeds");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(slow.join().unwrap(), Outcome::Pong);
+    filler.join().unwrap();
+    assert_eq!(guard.plan().fires("service.handler"), 1);
+    svc.stop();
+}
+
+#[test]
+fn fault_decisions_reproduce_bit_for_bit_across_pool_sizes() {
+    let seed = fault_seed();
+    const REQS: u64 = 16;
+    let site = "service.handler.panic";
+    let predicted: Vec<bool> = (0..REQS).map(|h| would_fire(seed, site, h, 0.35)).collect();
+    assert!(
+        predicted.iter().any(|&b| b) && !predicted.iter().all(|&b| b),
+        "seed {seed} should mix outcomes; got {predicted:?}"
+    );
+    let mut runs: Vec<Vec<bool>> = Vec::new();
+    for &workers in &[1usize, 2, 8] {
+        let guard = install(FaultPlan::new(seed).site(site, FaultAction::Panic, 0.35));
+        let svc = Service::start_with(
+            "127.0.0.1:0",
+            ServiceConfig {
+                workers,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        // Sequential requests: hit k of the site is exactly request k, so
+        // each individual outcome is predictable, not just the counts.
+        let outcomes: Vec<bool> = (0..REQS)
+            .map(|i| {
+                match ping_once(svc.addr, Duration::from_secs(5)) {
+                    Outcome::Error(ErrorKind::Internal) => true,
+                    Outcome::Pong => false,
+                    other => panic!("request {i}: unexpected outcome {other:?}"),
+                }
+            })
+            .collect();
+        assert_eq!(guard.plan().hits(site), REQS, "workers={workers}");
+        assert_eq!(
+            outcomes, predicted,
+            "workers={workers}: outcome sequence must match the seed's schedule"
+        );
+        runs.push(outcomes);
+        svc.stop();
+        drop(guard);
+    }
+    // All pool sizes replayed the identical schedule.
+    assert!(runs.windows(2).all(|w| w[0] == w[1]));
+}
