@@ -49,13 +49,16 @@ fn main() {
     // NUMA depth-3: a chain of 8 tasks onto 2 nodes x 2 ranks, where each
     // node is 2 sockets of 1 rank — the "numa" field turns on the
     // socket-level split and the response reports each task's socket.
+    // "profile": true additionally returns a per-phase latency breakdown
+    // and a trace id that the trace endpoint below can correlate.
     let numa_req = Json::parse(
         r#"{"op":"map",
             "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
             "pcoords":[[0],[0],[1],[1]],
             "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
             "hier":{"ranks_per_node":2,"strategy":"minvol"},
-            "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5}}"#,
+            "numa":{"sockets_per_node":2,"ranks_per_socket":1,"socket_cost":0.5},
+            "profile":true}"#,
     )
     .expect("static request parses");
     let resp = client.request(&numa_req).expect("numa map request");
@@ -64,6 +67,25 @@ fn main() {
     println!("  map:     {}", resp.get("map").unwrap().to_string());
     println!("  nodes:   {}", resp.get("nodes").unwrap().to_string());
     println!("  sockets: {}", resp.get("sockets").unwrap().to_string());
+    let profile = resp.get("profile").expect("profiled reply carries profile");
+    println!("  profile: {}", profile.to_string());
+    assert!(profile.get("phases").and_then(|p| p.as_arr()).is_some());
+
+    // The trace endpoint: recent span trees (non-empty whenever a
+    // profiled request ran or the global recorder is on) plus the metrics
+    // registry snapshot.
+    let trace = client
+        .request(&Json::parse(r#"{"op":"trace"}"#).unwrap())
+        .expect("trace request");
+    assert_eq!(trace.get("ok"), Some(&Json::Bool(true)), "{trace:?}");
+    let traces = trace.get("traces").and_then(|t| t.as_arr()).expect("traces array");
+    println!("\ntrace endpoint: {} recent trace(s)", traces.len());
+    // The global ring only collects spans while the recorder is on
+    // (TASKMAP_TRACE) — a plain demo run legitimately sees an empty
+    // forest here.
+    if trace.get("enabled") == Some(&Json::Bool(true)) {
+        assert!(!traces.is_empty(), "recorder on but no span tree in the ring");
+    }
 
     // The retrying client: reconnects and backs off on transient errors
     // (overloaded / shutting_down), honoring the server's retry_after_ms
@@ -76,13 +98,23 @@ fn main() {
     .expect("ping with retry");
     assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
 
-    // Service telemetry: counters, per-op latency, and the pool view.
+    // Service telemetry: identity, counters, per-op latency quantiles,
+    // and the pool view.
     let stats = client
         .request(&Json::parse(r#"{"op":"stats"}"#).unwrap())
         .expect("stats request");
     println!("\nservice stats:");
-    for key in ["accepted", "completed", "shed", "panics"] {
+    for key in ["version", "uptime_s", "accepted", "completed", "shed", "panics"] {
         println!("  {key:>9}: {}", stats.get(key).unwrap().to_string());
+    }
+    if let Some(map_op) = stats.get("ops").and_then(|o| o.get("map")) {
+        println!(
+            "  map op:    p50 {}us / p95 {}us / p99 {}us over {} request(s)",
+            map_op.get("p50_us").unwrap().to_string(),
+            map_op.get("p95_us").unwrap().to_string(),
+            map_op.get("p99_us").unwrap().to_string(),
+            map_op.get("count").unwrap().to_string(),
+        );
     }
     println!("  pool:      {}", stats.get("pool").unwrap().to_string());
     println!("shutting down (graceful drain).");

@@ -1,0 +1,78 @@
+//! Bench: tracing overhead. Runs the hierarchical mapper with the obs
+//! recorder off, globally on (ring + metrics), and on with a JSONL sink
+//! installed, and records the per-iteration wall time plus the on/off
+//! overhead ratio in `BENCH_mapping.json` (override with
+//! `TASKMAP_BENCH_OUT`). The ratio is the number the "one branch when
+//! off, cheap when on" design claim lives or dies by.
+//!
+//! `--smoke` runs a miniature configuration (seconds, CI-sized) recorded
+//! under `.../smoke` names so it never clobbers the full trajectory rows.
+
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{cray_xk7, SparseAllocator};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::obs;
+use taskmap::testutil::bench::{bench_quick, BenchRecorder};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    println!("== obs recorder overhead ==");
+    let suffix = if smoke { "/smoke" } else { "" };
+
+    let tdims = if smoke { [4usize, 4, 4] } else { [16usize, 16, 8] };
+    let rpn = 16;
+    let mg = MiniGhost::weak_scaling(tdims);
+    let graph = mg.graph();
+    let alloc = SparseAllocator {
+        machine: cray_xk7(&[10, 8, 10]),
+        nodes_per_router: 2,
+        ranks_per_node: rpn,
+        occupancy: 0.4,
+    }
+    .allocate(mg.num_tasks() / rpn, 42);
+    let cfg = HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 4 },
+        max_rotations: if smoke { 4 } else { 12 },
+        threads: 2,
+        ..HierConfig::default()
+    };
+    let tasks = mg.num_tasks();
+    let mut run = || map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
+
+    // Recorder compiled in but disabled: the baseline every pipeline
+    // caller pays (one relaxed load + TLS read per instrumentation site).
+    obs::set_enabled(false);
+    let off = bench_quick(&format!("obs/off/tasks={tasks}{suffix}"), &mut run);
+    rec.record(&off, &[("tracing", 0.0)]);
+
+    // Recorder on: events flow to the bounded ring and the metrics
+    // registry, no I/O.
+    obs::set_enabled(true);
+    let on = bench_quick(&format!("obs/on/tasks={tasks}{suffix}"), &mut run);
+    rec.record(&on, &[("tracing", 1.0)]);
+
+    // Recorder on with a JSONL sink: adds serialization + buffered file
+    // writes per lane flush.
+    let sink_path = std::env::temp_dir().join(format!("taskmap_bench_obs_{}.jsonl", std::process::id()));
+    let sink_ok = obs::trace::install_sink(sink_path.to_str().expect("temp path is utf-8")).is_ok();
+    if sink_ok {
+        let sunk = bench_quick(&format!("obs/on+sink/tasks={tasks}{suffix}"), &mut run);
+        rec.record(&sunk, &[("tracing", 1.0)]);
+        let sink_ratio = sunk.per_iter_ns() / off.per_iter_ns();
+        println!("tracing+sink overhead: {sink_ratio:.3}x");
+        rec.record_scalar(&format!("obs/sink_overhead{suffix}"), "ratio", sink_ratio);
+    }
+    obs::trace::clear_sink();
+    obs::set_enabled(false);
+    let _ = std::fs::remove_file(&sink_path);
+
+    let ratio = on.per_iter_ns() / off.per_iter_ns();
+    println!("tracing overhead: {ratio:.3}x");
+    rec.record_scalar(&format!("obs/overhead{suffix}"), "ratio", ratio);
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

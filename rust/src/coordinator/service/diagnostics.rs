@@ -1,6 +1,8 @@
-//! Service observability: counters, per-op latency summaries, and a ring
-//! buffer of recent noteworthy events (panic messages, force-closes),
-//! surfaced to clients via `{"op":"stats"}`.
+//! Service observability: counters, per-op latency histograms
+//! ([`crate::obs::Histogram`] — log2 µs buckets with exact
+//! count/total/max plus p50/p95/p99), and a ring buffer of recent
+//! noteworthy events (panic messages, force-closes) that counts — never
+//! silently drops — evictions, surfaced to clients via `{"op":"stats"}`.
 //!
 //! Everything here is designed to be written from many worker threads at
 //! once: plain counters are relaxed atomics; the ring buffer and the
@@ -9,22 +11,15 @@
 //! path.
 
 use super::errors::ErrorKind;
+use crate::obs::Histogram;
 use crate::testutil::json::Json;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Most recent events kept for `stats.recent`.
 const RING_CAPACITY: usize = 64;
-
-/// Per-op latency aggregate (microseconds).
-#[derive(Clone, Copy, Debug, Default)]
-struct OpStat {
-    count: u64,
-    total_us: u64,
-    max_us: u64,
-}
 
 /// A point-in-time view of the worker pool, attached to `stats` replies.
 #[derive(Clone, Copy, Debug)]
@@ -37,7 +32,6 @@ pub struct PoolSnapshot {
 
 /// Shared service telemetry. One instance per [`super::Service`]; handlers
 /// reach it through [`super::handlers::RequestCtx`].
-#[derive(Default)]
 pub struct Diagnostics {
     /// Connections accepted by the listener.
     accepted: AtomicU64,
@@ -49,10 +43,32 @@ pub struct Diagnostics {
     panics: AtomicU64,
     /// Requests currently inside a handler.
     active: AtomicU64,
+    /// Events evicted from the `recent` ring since start (wraps are
+    /// counted, never silent).
+    events_dropped: AtomicU64,
     /// Error replies by kind (indexed by [`ErrorKind::index`]).
     errors: [AtomicU64; 5],
     recent: Mutex<VecDeque<String>>,
-    ops: Mutex<BTreeMap<String, OpStat>>,
+    /// Per-op latency histograms (log2 µs buckets; exact count/sum/max).
+    ops: Mutex<BTreeMap<String, Histogram>>,
+    started: Instant,
+}
+
+impl Default for Diagnostics {
+    fn default() -> Diagnostics {
+        Diagnostics {
+            accepted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            events_dropped: AtomicU64::new(0),
+            errors: Default::default(),
+            recent: Mutex::new(VecDeque::new()),
+            ops: Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+        }
+    }
 }
 
 /// Lock a mutex, tolerating poison: diagnostics must stay usable after a
@@ -85,11 +101,13 @@ impl Diagnostics {
         self.active.fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// Log a noteworthy event into the bounded ring buffer.
+    /// Log a noteworthy event into the bounded ring buffer, counting the
+    /// eviction when the ring wraps.
     pub fn record_event(&self, event: &str) {
         let mut ring = lock_ok(&self.recent);
         if ring.len() == RING_CAPACITY {
             ring.pop_front();
+            self.events_dropped.fetch_add(1, Ordering::Relaxed);
         }
         ring.push_back(event.to_string());
     }
@@ -108,11 +126,7 @@ impl Diagnostics {
             self.errors[kind.index()].fetch_add(1, Ordering::Relaxed);
         }
         let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
-        let mut ops = lock_ok(&self.ops);
-        let stat = ops.entry(op.to_string()).or_default();
-        stat.count += 1;
-        stat.total_us = stat.total_us.saturating_add(us);
-        stat.max_us = stat.max_us.max(us);
+        lock_ok(&self.ops).entry(op.to_string()).or_default().record(us);
     }
 
     pub fn panic_count(&self) -> u64 {
@@ -139,19 +153,17 @@ impl Diagnostics {
         let ops = Json::Obj(
             lock_ok(&self.ops)
                 .iter()
-                .map(|(op, s)| {
-                    let mean = if s.count > 0 {
-                        s.total_us as f64 / s.count as f64
-                    } else {
-                        0.0
-                    };
+                .map(|(op, h)| {
                     (
                         op.clone(),
                         Json::obj(vec![
-                            ("count", Json::Num(s.count as f64)),
-                            ("total_us", Json::Num(s.total_us as f64)),
-                            ("max_us", Json::Num(s.max_us as f64)),
-                            ("mean_us", Json::Num(mean)),
+                            ("count", Json::Num(h.count() as f64)),
+                            ("total_us", Json::Num(h.sum() as f64)),
+                            ("max_us", Json::Num(h.max() as f64)),
+                            ("mean_us", Json::Num(h.mean())),
+                            ("p50_us", Json::Num(h.quantile(0.50) as f64)),
+                            ("p95_us", Json::Num(h.quantile(0.95) as f64)),
+                            ("p99_us", Json::Num(h.quantile(0.99) as f64)),
                         ]),
                     )
                 })
@@ -165,11 +177,17 @@ impl Diagnostics {
         );
         let mut fields = vec![
             ("ok", Json::Bool(true)),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
             ("accepted", Json::Num(self.accepted.load(Ordering::Relaxed) as f64)),
             ("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64)),
             ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
             ("panics", Json::Num(self.panics.load(Ordering::Relaxed) as f64)),
             ("active", Json::Num(self.active.load(Ordering::Relaxed) as f64)),
+            (
+                "events_dropped",
+                Json::Num(self.events_dropped.load(Ordering::Relaxed) as f64),
+            ),
             ("errors", errors),
             ("ops", ops),
             ("recent", recent),
@@ -238,8 +256,32 @@ mod tests {
         let snap = d.snapshot_json(None);
         let recent = snap.get("recent").unwrap().as_arr().unwrap();
         assert_eq!(recent.len(), RING_CAPACITY);
-        // Oldest entries were evicted.
+        // Oldest entries were evicted — and the drops were counted.
         assert_eq!(recent[0].as_str(), Some("event 10"));
+        assert_eq!(snap.get("events_dropped").and_then(|v| v.as_f64()), Some(10.0));
+    }
+
+    #[test]
+    fn op_latency_quantiles_and_identity_fields() {
+        let d = Diagnostics::new();
+        let ok = Json::obj(vec![("ok", Json::Bool(true))]);
+        for us in [10u64, 20, 30, 40, 5000] {
+            d.record_reply("map", &ok, Duration::from_micros(us));
+        }
+        let snap = d.snapshot_json(None);
+        let map = snap.get("ops").and_then(|o| o.get("map")).unwrap();
+        let f = |k: &str| map.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(f("count"), 5.0);
+        assert_eq!(f("total_us"), 5100.0);
+        assert_eq!(f("max_us"), 5000.0);
+        assert_eq!(f("mean_us"), 1020.0);
+        // Log-bucket quantiles: upper bound of the rank's bucket, within
+        // 2x of the true value and never above the observed max.
+        assert!(f("p50_us") >= 30.0 && f("p50_us") <= 60.0);
+        assert!(f("p99_us") >= 5000.0 && f("p99_us") <= 8192.0);
+        assert_eq!(snap.get("version").and_then(|v| v.as_str()), Some(env!("CARGO_PKG_VERSION")));
+        assert!(snap.get("uptime_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert_eq!(snap.get("events_dropped").and_then(|v| v.as_f64()), Some(0.0));
     }
 
     #[test]

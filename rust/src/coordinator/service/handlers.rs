@@ -58,12 +58,14 @@ impl Default for RequestCtx {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective", "numa", "bgq",
+    "hier", "objective", "numa", "bgq", "profile",
 ];
 const EVAL_FIELDS: &[&str] = &[
     "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
+    "profile",
 ];
 const STATS_FIELDS: &[&str] = &["op"];
+const TRACE_FIELDS: &[&str] = &["op"];
 const HIER_FIELDS: &[&str] = &["ranks_per_node", "strategy", "passes", "rotations"];
 const NUMA_FIELDS: &[&str] = &[
     "sockets_per_node",
@@ -116,7 +118,16 @@ pub fn handle_request_with(line: &str, ctx: &RequestCtx) -> Json {
             (op, resp)
         }
     };
-    ctx.diag.record_reply(&op, &resp, start.elapsed());
+    let elapsed = start.elapsed();
+    ctx.diag.record_reply(&op, &resp, elapsed);
+    if crate::obs::recording() {
+        let metrics = crate::obs::metrics();
+        metrics.add("service.requests", 1);
+        metrics.observe_us(
+            "service.request_us",
+            elapsed.as_micros().min(u128::from(u64::MAX)) as u64,
+        );
+    }
     ctx.diag.end_request();
     resp
 }
@@ -140,11 +151,93 @@ fn dispatch(op: &str, req: &Json, ctx: &RequestCtx) -> Json {
         "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         "stats" => check_fields(req, STATS_FIELDS, "stats")
             .unwrap_or_else(|| ctx.diag.snapshot_json(ctx.pool)),
-        "map" => check_fields(req, MAP_FIELDS, "map").unwrap_or_else(|| handle_map(req, ctx)),
-        "eval" => check_fields(req, EVAL_FIELDS, "eval").unwrap_or_else(|| handle_eval(req, ctx)),
+        "map" => check_fields(req, MAP_FIELDS, "map")
+            .unwrap_or_else(|| with_profile(req, "service.map", || handle_map(req, ctx))),
+        "eval" => check_fields(req, EVAL_FIELDS, "eval")
+            .unwrap_or_else(|| with_profile(req, "service.eval", || handle_eval(req, ctx))),
+        "trace" => check_fields(req, TRACE_FIELDS, "trace").unwrap_or_else(handle_trace),
         "(missing)" => err("missing op"),
         other => err(&format!("unknown op {other}")),
     }
+}
+
+/// `{"op":"trace"}`: the recent span tree from the global event ring (what
+/// the `TASKMAP_TRACE` recorder has seen lately), plus the metrics
+/// registry snapshot. Always answers — with an empty forest when the
+/// recorder is off.
+fn handle_trace() -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("enabled", Json::Bool(crate::obs::enabled())),
+        (
+            "traces",
+            crate::obs::trace::span_tree_json(&crate::obs::recent_events()),
+        ),
+        (
+            "events_dropped",
+            Json::Num(crate::obs::events_dropped() as f64),
+        ),
+        ("metrics", crate::obs::metrics().snapshot_json()),
+    ])
+}
+
+/// Honor an optional `"profile": true` on `map`/`eval`: run the handler
+/// under a fresh trace id inside an [`crate::obs::capture`] with a root
+/// span, and attach a `"profile"` object — the per-phase breakdown (the
+/// End events one level under the root: sweep, hier levels, refinement,
+/// response evaluation, each with its recorded fields) plus the measured
+/// total — and the `trace_id` to a successful reply. Phases nest inside
+/// the measured interval, so their elapsed times sum to at most
+/// `total_us`. Without the flag the handler runs exactly as before (the
+/// recorder stays cold unless globally enabled).
+fn with_profile(req: &Json, root: &'static str, f: impl FnOnce() -> Json) -> Json {
+    let profile = match parse_bool(req, "profile", false) {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    if !profile {
+        return f();
+    }
+    let trace_id = crate::obs::next_trace_id();
+    let start = Instant::now();
+    let (mut resp, events) = crate::obs::capture(|| {
+        crate::obs::with_trace(trace_id, || {
+            let _root = crate::obs::span(root);
+            f()
+        })
+    });
+    let total_us = start.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+    if resp.get("ok") == Some(&Json::Bool(true)) {
+        if let Json::Obj(m) = &mut resp {
+            m.insert("trace_id".to_string(), Json::Num(trace_id as f64));
+            m.insert("profile".to_string(), profile_json(&events, total_us));
+        }
+    }
+    resp
+}
+
+/// The `"profile"` object: one entry per phase span (End events at depth 1
+/// — direct children of the handler's root span), in completion order,
+/// carrying the span's recorded fields.
+fn profile_json(events: &[crate::obs::Event], total_us: u64) -> Json {
+    let phases: Vec<Json> = events
+        .iter()
+        .filter(|e| e.kind == crate::obs::EventKind::End && e.depth == 1)
+        .map(|e| {
+            let mut fields = vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("elapsed_us", Json::Num(e.dur_us as f64)),
+            ];
+            for &(k, v) in &e.fields {
+                fields.push((k, Json::Num(v)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("total_us", Json::Num(total_us as f64)),
+        ("phases", Json::Arr(phases)),
+    ])
 }
 
 /// Reject fields outside `allowed` (`what` names the object in the error).
@@ -569,11 +662,17 @@ fn handle_map_hier(
     // objective × numa composition (see `objective::combined_value`), the
     // routed bottleneck latency, and — at depth 3 — the per-level NUMA
     // weights, all in one response.
+    let mut eval_span = crate::obs::span("map.eval");
     let full = eval_full(&graph, &m.task_to_rank, &alloc);
     let lm = full.link.as_ref().expect("eval_full computes link metrics");
     let nm = numa.map(|topo| (topo, eval_numa(&graph, &m.task_to_rank, &alloc, &topo)));
     let objective_value =
         combined_value(objective, &full, nm.as_ref().map(|(t, n)| (t, n)));
+    eval_span.record("objective_value", objective_value);
+    // The sweep winner's score minus the final value: what refinement and
+    // the lower levels bought under the composed objective.
+    eval_span.record("objective_delta", m.node_score - objective_value);
+    drop(eval_span);
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         (
@@ -683,6 +782,7 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
         edges,
         coords: Coords::from_axes(vec![vec![0.0; num_tasks]]),
     };
+    let mut eval_span = crate::obs::span("map.eval");
     let m = eval_full(&graph, &mapping, &alloc);
     let lm = m.link.as_ref().expect("eval_full computes link metrics");
     // `objective_value` composes the network objective with the NUMA term
@@ -692,6 +792,8 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
     // mapper optimizes.
     let nm = numa.map(|topo| (topo, eval_numa(&graph, &mapping, &alloc, &topo)));
     let objective_value = combined_value(objective, &m, nm.as_ref().map(|(t, n)| (t, n)));
+    eval_span.record("objective_value", objective_value);
+    drop(eval_span);
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("total_hops", Json::Num(m.total_hops)),
@@ -790,7 +892,9 @@ fn handle_map(req: &Json, ctx: &RequestCtx) -> Json {
     if let Err(e) = ctx.deadline.check("map.partition") {
         return ServiceError::deadline_exceeded(&e.to_string()).to_json();
     }
+    let partition_span = crate::obs::span("map.partition");
     let mapping = map_tasks(&tcoords, &pcoords, &cfg);
+    drop(partition_span);
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         (
@@ -1487,6 +1591,121 @@ mod tests {
         // Unknown stats fields are rejected like everywhere else.
         let resp = handle_request_with(r#"{"op":"stats","verbose":true}"#, &ctx);
         assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+    }
+
+    #[test]
+    fn profile_flag_returns_phase_breakdown() {
+        let base = r#""tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+                "pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]],
+                "hier":{"ranks_per_node":2,"strategy":"minvol","rotations":2}"#;
+        let plain = handle_request(&format!(r#"{{"op":"map",{base}}}"#));
+        assert_eq!(plain.get("ok"), Some(&Json::Bool(true)), "{plain:?}");
+        assert!(plain.get("profile").is_none());
+        assert!(plain.get("trace_id").is_none());
+        let resp = handle_request(&format!(r#"{{"op":"map","profile":true,{base}}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        // Profiling never changes the mapping.
+        assert_eq!(resp.get("map"), plain.get("map"));
+        assert!(resp.get("trace_id").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        let profile = resp.get("profile").expect("profile object");
+        let total = profile.get("total_us").and_then(|v| v.as_f64()).unwrap();
+        let phases = profile.get("phases").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = phases
+            .iter()
+            .map(|p| p.get("name").and_then(|v| v.as_str()).unwrap())
+            .collect();
+        assert_eq!(names, vec!["hier.sweep", "hier.refine", "hier.place", "map.eval"]);
+        // Phases nest inside the measured request interval, so their
+        // elapsed times sum to at most the total.
+        let sum: f64 = phases
+            .iter()
+            .map(|p| p.get("elapsed_us").and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        assert!(sum <= total, "phase sum {sum} > total {total}");
+        // Span fields ride along: the sweep phase carries its node score
+        // and candidate count, map.eval the objective delta.
+        let sweep = &phases[0];
+        assert_eq!(sweep.get("candidates").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(sweep.get("node_score").is_some());
+        assert!(phases[3].get("objective_delta").is_some());
+        // profile:false behaves exactly like no profile field.
+        let off = handle_request(&format!(r#"{{"op":"map","profile":false,{base}}}"#));
+        assert!(off.get("profile").is_none());
+        // Non-bool profile is a structured error.
+        let bad = handle_request(&format!(r#"{{"op":"map","profile":1,{base}}}"#));
+        assert_eq!(error_kind(&bad), Some(ErrorKind::InvalidRequest));
+    }
+
+    #[test]
+    fn profile_flag_works_on_eval() {
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],"profile":true,
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[0],[1],[1]],
+                "torus":[4],
+                "ranks_per_node":2}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let phases = resp
+            .get("profile")
+            .and_then(|p| p.get("phases"))
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].get("name").and_then(|v| v.as_str()), Some("map.eval"));
+        assert_eq!(
+            phases[0].get("objective_value").and_then(|v| v.as_f64()),
+            resp.get("objective_value").and_then(|v| v.as_f64())
+        );
+    }
+
+    #[test]
+    fn trace_op_serves_recent_spans_and_metrics() {
+        // With the recorder off the op still answers (possibly with spans
+        // other concurrently-running tests recorded).
+        let resp = handle_request(r#"{"op":"trace"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert!(resp.get("traces").unwrap().as_arr().is_some());
+        assert!(resp.get("events_dropped").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert!(resp.get("metrics").unwrap().get("counters").is_some());
+        // Unknown fields rejected like every other op.
+        let resp = handle_request(r#"{"op":"trace","verbose":true}"#);
+        assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest));
+        // With the global recorder on, a profiled request's spans land in
+        // the ring and come back as a span tree.
+        crate::obs::set_enabled(true);
+        let resp = handle_request(
+            r#"{"op":"map","profile":true,
+                "tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+                "edges":[[0,1],[1,2],[2,3]],"hier":{"ranks_per_node":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let trace_id = resp.get("trace_id").and_then(|v| v.as_f64()).unwrap();
+        let traces = handle_request(r#"{"op":"trace"}"#);
+        crate::obs::set_enabled(false);
+        assert_eq!(traces.get("ok"), Some(&Json::Bool(true)));
+        let forest = traces.get("traces").unwrap().as_arr().unwrap();
+        let ours = forest
+            .iter()
+            .find(|t| t.get("trace").and_then(|v| v.as_f64()) == Some(trace_id))
+            .expect("profiled request's trace in the ring");
+        let roots = ours.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(
+            roots[0].get("name").and_then(|v| v.as_str()),
+            Some("service.map")
+        );
+        // The metrics registry saw the profiled request.
+        assert!(
+            traces
+                .get("metrics")
+                .and_then(|m| m.get("counters"))
+                .and_then(|c| c.get("service.requests"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+                >= 1.0
+        );
     }
 
     #[test]

@@ -133,15 +133,57 @@
 //!
 //! `{"op":"stats"}` returns service telemetry:
 //! ```json
-//! {"ok":true,"accepted":N,"completed":N,"shed":N,"panics":N,"active":N,
+//! {"ok":true,"version":"0.1.0","uptime_s":X,
+//!  "accepted":N,"completed":N,"shed":N,"panics":N,"active":N,
+//!  "events_dropped":N,
 //!  "errors":{"invalid_request":N,"overloaded":N,...},
-//!  "ops":{"map":{"count":N,"total_us":N,"max_us":N,"mean_us":X},...},
+//!  "ops":{"map":{"count":N,"total_us":N,"max_us":N,"mean_us":X,
+//!                "p50_us":N,"p95_us":N,"p99_us":N},...},
 //!  "recent":["panic in op ...","drain deadline expired; ..."],
 //!  "pool":{"workers":N,"queue_capacity":N,"queue_depth":N,
 //!          "active_connections":N}}
 //! ```
-//! (`pool` is attached when the request arrives through the service;
-//! direct [`handle_request`] calls have no pool to report.)
+//!
+//! | field            | meaning                                               |
+//! |------------------|-------------------------------------------------------|
+//! | `version`        | crate version (`CARGO_PKG_VERSION`) of the build      |
+//! | `uptime_s`       | seconds since this `Diagnostics` instance started     |
+//! | `accepted`       | connections accepted by the listener                  |
+//! | `completed`      | requests answered (success or error)                  |
+//! | `shed`/`panics`  | queue-full refusals / caught handler panics           |
+//! | `active`         | requests currently inside a handler                   |
+//! | `events_dropped` | `recent` ring evictions since start (counted on wrap) |
+//! | `errors`         | error replies by kind                                 |
+//! | `ops.<op>`       | per-op latency histogram: exact `count`/`total_us`/   |
+//! |                  | `max_us`/`mean_us` plus log2-bucketed `p50_us`/       |
+//! |                  | `p95_us`/`p99_us` (≤2× overestimates, clamped to max) |
+//! | `recent`         | last 64 noteworthy events (panics, force-closes)      |
+//! | `pool`           | worker-pool view (attached when the request arrives   |
+//! |                  | through the service; direct [`handle_request`] calls  |
+//! |                  | have no pool to report)                               |
+//!
+//! The pre-histogram fields (`count`/`total_us`/`max_us`/`mean_us` and
+//! everything top-level) are unchanged, so existing consumers keep
+//! working.
+//!
+//! # Observability
+//!
+//! Three tracing surfaces (see [`crate::obs`]):
+//! * **`"profile": true`** on `map`/`eval` runs the handler under a
+//!   fresh trace id and attaches `"trace_id"` plus
+//!   `{"profile":{"total_us":N,"phases":[{"name":"hier.sweep",
+//!   "elapsed_us":N,"node_score":X,"candidates":N},...]}}` — one entry
+//!   per pipeline phase span (sweep, refinement, socket, placement,
+//!   response evaluation) with its recorded fields; phase elapsed times
+//!   sum to at most `total_us`.
+//! * **`{"op":"trace"}`** returns the recent span forest from the global
+//!   event ring (`"traces"`, populated while the global recorder is on),
+//!   the ring's `"events_dropped"` count, and the metrics-registry
+//!   snapshot.
+//! * **`TASKMAP_TRACE=<path>`** makes [`Service::start`] enable the
+//!   global recorder and stream every completed span/instant as JSONL
+//!   convertible to `chrome://tracing`
+//!   ([`crate::obs::trace::validate_jsonl`] checks the schema).
 //!
 //! # Shutdown
 //!
@@ -258,6 +300,9 @@ impl Service {
 
     /// Bind and serve with an explicit config.
     pub fn start_with<A: ToSocketAddrs>(addr: A, cfg: ServiceConfig) -> std::io::Result<Service> {
+        // TASKMAP_TRACE=<path>: install the JSONL trace sink and turn the
+        // global recorder on for the service's lifetime (idempotent).
+        crate::obs::init_from_env();
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;

@@ -319,6 +319,7 @@ pub fn map_hierarchical_budgeted(
         numa: cfg.numa.map(|t| t.node_level_costs()),
     };
     deadline.check("hier.sweep")?;
+    let mut sweep_span = crate::obs::span("hier.sweep");
     let sweep = rotation_sweep(
         graph,
         tcoords,
@@ -329,6 +330,9 @@ pub fn map_hierarchical_budgeted(
         backend,
     );
     let node_score = sweep.scores[sweep.chosen];
+    sweep_span.record("node_score", node_score);
+    sweep_span.record("candidates", sweep.scores.len() as f64);
+    drop(sweep_span);
     let mut task_to_node: Vec<u32> = sweep
         .task_to_rank
         .iter()
@@ -340,6 +344,7 @@ pub fn map_hierarchical_budgeted(
     // default, routed per-link loads for the congestion objectives, the
     // socket-cost NUMA term layered on either at depth 3.
     deadline.check("hier.refine")?;
+    let mut refine_span = crate::obs::span("hier.refine");
     let swaps_applied = match cfg.intra {
         IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_eval(
             graph,
@@ -352,12 +357,15 @@ pub fn map_hierarchical_budgeted(
         ),
         _ => 0,
     };
+    refine_span.record("swaps", swaps_applied as f64);
+    drop(refine_span);
 
     if let Some(topo) = cfg.numa {
         // Level 2 (depth 3): sized geometric socket split inside each
         // node, cross-socket MinVolume refinement, then socket-aware rank
         // placement — all parallel over nodes.
         deadline.check("hier.socket")?;
+        let mut socket_span = crate::obs::span("hier.socket");
         let mut task_to_socket = socket::split_sockets(tcoords, &task_to_node, alloc, &topo, par);
         let socket_swaps = match cfg.intra {
             IntraNodeStrategy::MinVolume { passes } => socket::refine_sockets(
@@ -370,7 +378,10 @@ pub fn map_hierarchical_budgeted(
             ),
             _ => 0,
         };
+        socket_span.record("socket_swaps", socket_swaps as f64);
+        drop(socket_span);
         deadline.check("hier.place")?;
+        let place_span = crate::obs::span("hier.place");
         let task_to_rank = socket::place_within_sockets(
             tcoords,
             &task_to_node,
@@ -380,6 +391,7 @@ pub fn map_hierarchical_budgeted(
             cfg.intra,
             par,
         );
+        drop(place_span);
         return Ok(HierMapping {
             task_to_rank,
             task_to_node,
@@ -393,7 +405,9 @@ pub fn map_hierarchical_budgeted(
     // Level 2 (depth 2): place each node's tasks on its ranks, in parallel
     // over nodes with per-worker Hilbert scratch.
     deadline.check("hier.place")?;
+    let place_span = crate::obs::span("hier.place");
     let task_to_rank = place_within_nodes(tcoords, &task_to_node, alloc, cfg.intra, par);
+    drop(place_span);
     Ok(HierMapping {
         task_to_rank,
         task_to_node,
@@ -866,6 +880,51 @@ mod tests {
         assert_eq!(a.task_to_rank, b.task_to_rank);
         assert_eq!(a.task_to_node, b.task_to_node);
         assert_eq!(a.swaps_applied, b.swaps_applied);
+    }
+
+    #[test]
+    fn captured_trace_covers_all_phases_without_changing_mapping() {
+        use crate::obs::{self, EventKind};
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        let hcfg = HierConfig {
+            numa: Some(topo),
+            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
+        };
+        let baseline = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+        let (traced, events) =
+            obs::capture(|| map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend));
+        assert_eq!(traced.task_to_rank, baseline.task_to_rank);
+        assert_eq!(traced.task_to_node, baseline.task_to_node);
+        let end = |name: &'static str| -> obs::Event {
+            events
+                .iter()
+                .find(|e| e.kind == EventKind::End && e.name == name)
+                .cloned()
+                .unwrap_or_else(|| panic!("missing End event for {name}"))
+        };
+        let field = |e: &obs::Event, k: &str| {
+            e.fields
+                .iter()
+                .find(|(n, _)| *n == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("{}: missing field {k}", e.name))
+        };
+        let sweep = end("hier.sweep");
+        assert_eq!(field(&sweep, "node_score"), baseline.node_score);
+        assert_eq!(field(&sweep, "candidates"), 4.0);
+        let refine = end("hier.refine");
+        assert_eq!(field(&refine, "swaps"), baseline.swaps_applied as f64);
+        let socket = end("hier.socket");
+        assert_eq!(field(&socket, "socket_swaps"), baseline.socket_swaps as f64);
+        end("hier.place");
+        // Per-candidate sweep instants nest under the sweep span.
+        let cands = events
+            .iter()
+            .filter(|e| e.name == "sweep.candidate")
+            .count();
+        assert_eq!(cands, 4);
     }
 
     #[test]

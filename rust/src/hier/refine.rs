@@ -186,7 +186,7 @@ fn refine_loop<E: IncrementalEval>(
     let node_ids: Vec<u32> = (0..nn as u32).collect();
     let mut apply_scratch = EvalScratch::new();
     let mut applied_total = 0usize;
-    for _pass in 0..passes {
+    for pass in 0..passes {
         // Tasks grouped by node against the pass-start snapshot.
         let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
         for (t, &x) in node_of.iter().enumerate() {
@@ -233,8 +233,13 @@ fn refine_loop<E: IncrementalEval>(
         // Phase 2: apply sequentially in (node, task) order, re-checking
         // each gain against the current assignment and committing the
         // evaluator delta incrementally.
+        let recording = crate::obs::recording();
+        let rescans_before = eval.rescans();
         let mut applied_this_pass = 0usize;
+        let mut proposed_this_pass = 0usize;
+        let mut gain_this_pass = 0f64;
         for Swap { u, b } in proposals.into_iter().flatten() {
+            proposed_this_pass += 1;
             let (a, bn) = (node_of[u as usize], node_of[b as usize]);
             if a == bn {
                 continue;
@@ -245,7 +250,22 @@ fn refine_loop<E: IncrementalEval>(
                 node_of[u as usize] = bn;
                 node_of[b as usize] = a;
                 applied_this_pass += 1;
+                gain_this_pass += ev.gain;
             }
+        }
+        if recording {
+            // Everything here is a pure function of the pass, never of
+            // timing, so traces replay bit-identically.
+            crate::obs::instant(
+                "refine.pass",
+                &[
+                    ("pass", pass as f64),
+                    ("proposed", proposed_this_pass as f64),
+                    ("applied", applied_this_pass as f64),
+                    ("gain", gain_this_pass),
+                    ("congestion_rescans", (eval.rescans() - rescans_before) as f64),
+                ],
+            );
         }
         applied_total += applied_this_pass;
         if applied_this_pass == 0 {

@@ -44,6 +44,12 @@
 //! refinement, and socket refinement all price swaps under the same
 //! objective end to end.
 //!
+//! Every layer is instrumented through [`obs`], a zero-dependency
+//! tracing + metrics subsystem (RAII spans, log-bucketed latency
+//! histograms, a `chrome://tracing`-convertible `TASKMAP_TRACE` JSONL
+//! sink) that is compiled in but disabled by default — the hot path pays
+//! one branch, and enabling it never changes a mapping bit.
+//!
 //! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
 //! WeightedHops scoring) is parallel and allocation-free in steady state:
 //! [`par`] provides deterministic fork–join primitives (results are
@@ -62,6 +68,7 @@ pub mod mapping;
 pub mod metrics;
 pub mod mj;
 pub mod objective;
+pub mod obs;
 pub mod par;
 pub mod runtime;
 pub mod sfc;

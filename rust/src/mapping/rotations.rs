@@ -493,12 +493,20 @@ pub fn rotation_sweep(
     // Phase 2: per-candidate task partition + join + score, fanned out with
     // per-worker scratch arenas. Within a candidate the work is sequential:
     // the candidate-level fan-out already saturates the budget.
+    //
+    // Observability: workers measure per-candidate elapsed time as plain
+    // data (only when the recorder is live — the timing reads never run on
+    // the cold path) and the calling thread emits the `sweep.candidate`
+    // instants after the reduction, in candidate-index order, so traces are
+    // deterministic at every thread count.
+    let recording = crate::obs::recording();
     let scorer = CandidateScorer::new(graph, alloc, sweep);
-    let results: Vec<(Vec<u32>, f64)> = par::map_with(
+    let results: Vec<(Vec<u32>, f64, u64)> = par::map_with(
         par,
         &candidates,
         || (MappingScratch::new(), ObjectiveScratch::new()),
         |(map_scratch, score_scratch), _i, (tp, pp)| {
+            let t0 = recording.then(std::time::Instant::now);
             let proc = cache.get(pp).expect("proc partition precomputed in phase 1");
             let mapping = map_tasks_with_proc(
                 tcoords,
@@ -509,13 +517,26 @@ pub fn rotation_sweep(
                 map_scratch,
             );
             let score = scorer.score(&mapping, backend, score_scratch);
-            (mapping, score)
+            let elapsed_us = t0.map_or(0, |t| t.elapsed().as_micros() as u64);
+            (mapping, score, elapsed_us)
         },
     );
+    if recording {
+        for (i, (_, score, elapsed_us)) in results.iter().enumerate() {
+            crate::obs::instant(
+                "sweep.candidate",
+                &[
+                    ("index", i as f64),
+                    ("score", *score),
+                    ("elapsed_us", *elapsed_us as f64),
+                ],
+            );
+        }
+    }
 
     // Deterministic reduction: argmin with index tie-break over the
     // index-addressed score vector.
-    let scores: Vec<f64> = results.iter().map(|(_, s)| *s).collect();
+    let scores: Vec<f64> = results.iter().map(|(_, s, _)| *s).collect();
     let chosen = scores
         .iter()
         .enumerate()
@@ -851,5 +872,52 @@ mod tests {
             &map_cfg,
         );
         assert_eq!(seq.task_to_rank, direct);
+    }
+
+    #[test]
+    fn sweep_emits_candidate_instants_in_index_order() {
+        let g = stencil_graph(&[4, 8], false, 1.0);
+        let alloc = Allocation {
+            torus: Torus::torus(&[8, 4]),
+            core_router: (0..32u32).collect(),
+            core_node: (0..32u32).collect(),
+            ranks_per_node: 1,
+        };
+        let p = alloc.proc_coords();
+        let run = || {
+            rotation_sweep(
+                &g,
+                &g.coords,
+                &p,
+                &alloc,
+                &MapConfig::default(),
+                &SweepConfig {
+                    threads: 2,
+                    ..Default::default()
+                },
+                &NativeBackend,
+            )
+        };
+        let baseline = run();
+        let (traced, events) = crate::obs::capture(run);
+        assert_eq!(traced.task_to_rank, baseline.task_to_rank);
+        assert_eq!(traced.scores, baseline.scores);
+        let instants: Vec<&crate::obs::Event> = events
+            .iter()
+            .filter(|e| e.name == "sweep.candidate")
+            .collect();
+        assert_eq!(instants.len(), baseline.scores.len());
+        for (i, e) in instants.iter().enumerate() {
+            let field = |k: &str| {
+                e.fields
+                    .iter()
+                    .find(|(n, _)| *n == k)
+                    .map(|(_, v)| *v)
+                    .unwrap()
+            };
+            assert_eq!(field("index"), i as f64);
+            assert_eq!(field("score"), baseline.scores[i]);
+            assert!(field("elapsed_us") >= 0.0);
+        }
     }
 }

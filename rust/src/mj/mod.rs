@@ -172,6 +172,34 @@ pub fn mj_partition_axes_into(
         dim,
     };
     bisect(&shared, idx, 0, num_parts, 0, par);
+
+    // Observability: one instant per partition call (on the calling
+    // thread's lane), carrying the recursion depth and the part-size
+    // imbalance — both derived from the deterministic split rule, never
+    // from timing, so traces replay bit-identically.
+    if crate::obs::recording() {
+        let max_part = shared.base + usize::from(shared.extra > 0);
+        let mean_part = n as f64 / num_parts as f64;
+        crate::obs::instant(
+            "mj.partition",
+            &[
+                ("parts", num_parts as f64),
+                ("points", n as f64),
+                ("depth", recursion_depth(num_parts, cfg.uneven_prime) as f64),
+                ("imbalance", max_part as f64 / mean_part),
+            ],
+        );
+    }
+}
+
+/// Depth of the bisection recursion for `np` parts under the configured
+/// split rule (1 part = depth 0). Mirrors [`split_parts`] exactly.
+pub fn recursion_depth(np: usize, uneven_prime: bool) -> usize {
+    if np <= 1 {
+        return 0;
+    }
+    let (np_l, np_r) = split_parts(np, uneven_prime);
+    1 + recursion_depth(np_l, uneven_prime).max(recursion_depth(np_r, uneven_prime))
 }
 
 /// Buffers shared across the two sides of a recursion split. Safety: every
@@ -578,6 +606,38 @@ mod tests {
         );
         let want = mj_partition(&c.permute_axes(&perm), 16, &cfg);
         assert_eq!(part, want);
+    }
+
+    #[test]
+    fn recursion_depth_matches_split_rule() {
+        assert_eq!(recursion_depth(1, false), 0);
+        assert_eq!(recursion_depth(2, false), 1);
+        assert_eq!(recursion_depth(16, false), 4);
+        // 7 -> (4,3), 3 -> (2,1): depth 3.
+        assert_eq!(recursion_depth(7, false), 3);
+        // Uneven prime splits can only deepen or match the even split at
+        // the same part count's power-of-two depth bound.
+        assert!(recursion_depth(10_800, true) >= recursion_depth(16, false));
+    }
+
+    #[test]
+    fn partition_emits_mj_instant_when_recording() {
+        let c = grid(8, 8);
+        let cfg = MjConfig::default();
+        let baseline = mj_partition_par(&c, 16, &cfg, Parallelism::sequential());
+        let (traced, events) = crate::obs::capture(|| {
+            mj_partition_par(&c, 16, &cfg, Parallelism::sequential())
+        });
+        // Tracing never changes the partition.
+        assert_eq!(traced, baseline);
+        let mj: Vec<_> = events.iter().filter(|e| e.name == "mj.partition").collect();
+        assert_eq!(mj.len(), 1);
+        let fields: std::collections::BTreeMap<_, _> =
+            mj[0].fields.iter().copied().collect();
+        assert_eq!(fields["parts"], 16.0);
+        assert_eq!(fields["points"], 64.0);
+        assert_eq!(fields["depth"], 4.0);
+        assert_eq!(fields["imbalance"], 1.0);
     }
 
     #[test]

@@ -249,6 +249,13 @@ pub trait IncrementalEval: Sync {
     /// caller updates its `node_of` array itself.
     fn commit(&mut self, ev: &SwapEval, scratch: &EvalScratch);
 
+    /// Observability: O(links) congestion rescans taken so far by this
+    /// evaluator's routed state (always 0 for hop-priced evaluators).
+    /// Refinement attributes the per-pass delta to its trace spans.
+    fn rescans(&self) -> u64 {
+        0
+    }
+
     /// Propose-phase hook: the best strictly-improving swap partner for
     /// task `u` among the tasks of `targets` nodes, against the frozen
     /// snapshot `node_of`. Ties keep the earlier (smaller) partner index.
@@ -626,6 +633,10 @@ impl IncrementalEval for RoutedEval<'_> {
             self.intra_weight = ev.new_intra;
         }
     }
+
+    fn rescans(&self) -> u64 {
+        self.state.rescan_count()
+    }
 }
 
 /// The evaluator behind an [`EvalSpec`] — what `CandidateScorer` and the
@@ -696,6 +707,13 @@ impl IncrementalEval for Eval<'_> {
         match self {
             Eval::Hops(e) => e.commit(ev, scratch),
             Eval::Routed(e) => e.commit(ev, scratch),
+        }
+    }
+
+    fn rescans(&self) -> u64 {
+        match self {
+            Eval::Hops(e) => e.rescans(),
+            Eval::Routed(e) => e.rescans(),
         }
     }
 

@@ -395,6 +395,11 @@ pub struct CongestionState<'a> {
     load: Vec<f64>,
     sum_latency: f64,
     max_latency: f64,
+    /// O(links) bottleneck rescans taken (the `max_after` slow path),
+    /// counted unconditionally — the increment is noise next to the scan
+    /// itself — and surfaced through [`CongestionState::rescan_count`]
+    /// into refinement traces.
+    rescans: std::cell::Cell<u64>,
 }
 
 impl<'a> CongestionState<'a> {
@@ -431,6 +436,7 @@ impl<'a> CongestionState<'a> {
             load: vec![0f64; torus.num_directed_links()],
             sum_latency: 0.0,
             max_latency: 0.0,
+            rescans: std::cell::Cell::new(0),
         };
         for &l in acc.touched() {
             state.load[l as usize] = acc.load(l as usize);
@@ -451,9 +457,20 @@ impl<'a> CongestionState<'a> {
         })
     }
 
+    /// O(links) bottleneck rescans taken so far (the rare `max_after`
+    /// slow path, hit when a swap improves the bottleneck link itself).
+    pub fn rescan_count(&self) -> u64 {
+        self.rescans.get()
+    }
+
     /// (max, sum) link latency over all links, optionally with a virtual
     /// delta applied. O(links) — the rescan fallback.
     fn scan_latencies(&self, delta: Option<&LinkAccumulator>) -> (f64, f64) {
+        if delta.is_some() {
+            // Only delta scans are "rescans": the one delta-free scan at
+            // build time is initialization, not a fallback.
+            self.rescans.set(self.rescans.get() + 1);
+        }
         let mut max = 0f64;
         let mut sum = 0f64;
         for (l, &load) in self.load.iter().enumerate() {
@@ -796,5 +813,9 @@ mod tests {
         assert!((state.value() - fresh.value()).abs() < 1e-12);
         assert!(state.value() < 20.0, "bottleneck did not improve: {}", state.value());
         assert!((gain - (20.0 - state.value())).abs() < 1e-12);
+        // The slow path was taken at least once (gain eval + commit), and
+        // the fresh state — which never evaluated a delta — took none.
+        assert!(state.rescan_count() >= 1, "rescan counter did not move");
+        assert_eq!(fresh.rescan_count(), 0);
     }
 }

@@ -1,0 +1,171 @@
+//! Log-bucketed latency histograms (p50/p95/p99 without storing samples).
+//!
+//! A [`Histogram`] keeps one bucket per power of two of microseconds:
+//! value `v` lands in bucket `⌈log2(v+1)⌉`, so bucket `b` covers
+//! `[2^(b-1), 2^b - 1]` (bucket 0 holds exact zeros). Quantiles are read
+//! back as the upper bound of the bucket containing the requested rank,
+//! clamped to the observed maximum — a ≤2× overestimate in exchange for
+//! constant memory and O(1) recording, which is the right trade for
+//! service telemetry (the `{"op":"stats"}` per-op table) and span
+//! metrics. The exact `count`/`sum`/`max` are kept alongside, so the
+//! aggregate fields the histogram replaced (`total_us`, `max_us`,
+//! `mean_us`) stay exact.
+//!
+//! The struct is plain data (no atomics): callers that share one across
+//! threads put it behind the lock they already hold (see
+//! `coordinator::service::Diagnostics`).
+
+/// Number of log2 buckets: covers the full `u64` microsecond range.
+pub const BUCKETS: usize = 64;
+
+/// A log2-bucketed histogram of microsecond latencies.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    count: u64,
+    sum: u64,
+    max: u64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: 0,
+            sum: 0,
+            max: 0,
+            buckets: [0; BUCKETS],
+        }
+    }
+}
+
+/// Bucket index for a value: 0 for 0, otherwise the bit length of `v`
+/// (clamped to the last bucket).
+fn bucket_of(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `b`.
+fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one microsecond observation.
+    pub fn record(&mut self, us: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(us);
+        self.max = self.max.max(us);
+        self.buckets[bucket_of(us)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) as the upper bound of the bucket
+    /// holding the rank-`⌈q·count⌉` observation, clamped to the observed
+    /// max. 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_upper(b).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exact_aggregates_survive_bucketing() {
+        let mut h = Histogram::new();
+        for us in [3u64, 10, 100, 1000, 10_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 11_113);
+        assert_eq!(h.max(), 10_000);
+        assert!((h.mean() - 11_113.0 / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_bound_within_a_factor_of_two() {
+        let mut h = Histogram::new();
+        for us in 1..=1000u64 {
+            h.record(us);
+        }
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        // Upper bucket bounds: never below the true quantile, at most 2x.
+        assert!((500..=1023).contains(&p50), "p50={p50}");
+        assert!((950..=1023).contains(&p95), "p95={p95}");
+        assert!((990..=1023).contains(&p99), "p99={p99}");
+        // Clamped to the observed max.
+        assert!(h.quantile(1.0) <= 1000);
+    }
+
+    #[test]
+    fn zero_and_huge_values_have_buckets() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn bucket_of_is_monotone() {
+        let mut prev = 0;
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1023, 1024, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(b >= prev);
+            assert!(v <= bucket_upper(b));
+            prev = b;
+        }
+    }
+}

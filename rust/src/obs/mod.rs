@@ -1,0 +1,577 @@
+//! Zero-dependency tracing + metrics for the mapping pipeline.
+//!
+//! Every layer of the pipeline — rotation sweep, MJ recursion, `MinVolume`
+//! refinement, the hierarchical phases, the service — records into this one
+//! subsystem, so a mapping run can explain where its time and its objective
+//! improvement came from. The recorder is compiled in but **disabled by
+//! default**: when neither the global recorder nor a thread-local capture
+//! is active, [`span`]/[`instant`] cost one branch and touch nothing else,
+//! and (pinned by property tests) enabling them never changes a mapping
+//! bit.
+//!
+//! # Recording model
+//!
+//! Events go to a **per-thread buffer** (no locks on the recording path);
+//! each thread is a *lane* carrying a monotone sequence number. Buffers
+//! flush when the thread's outermost span ends: into the bounded global
+//! ring (for `{"op":"trace"}`) and the JSONL sink (for `TASKMAP_TRACE`),
+//! counting — never silently dropping — evictions. Merging is
+//! deterministic the same way every parallel path here is: readers sort by
+//! `(trace, lane, seq)`, and pipeline instrumentation emits parallel
+//! sections' measurements *from the coordinating lane in item-index
+//! order* (workers return their numbers as data, exactly like
+//! `par::map_with` writes results into pre-assigned slots). A
+//! [`capture`]'d trace therefore replays bit-identically for a fixed
+//! input and thread budget.
+//!
+//! Three surfaces:
+//! * [`capture`] — collect the calling thread's events around a closure
+//!   (the service uses this for per-request `"profile"` objects);
+//! * the global ring — [`recent_events`], served by `{"op":"trace"}` as a
+//!   span tree ([`trace::span_tree_json`]);
+//! * `TASKMAP_TRACE=<path>` — [`init_from_env`] installs a JSONL sink
+//!   whose lines convert directly to `chrome://tracing` (see below).
+//!
+//! # Naming convention
+//!
+//! Dotted lowercase `<layer>.<phase>`; spans for regions, instants for
+//! points:
+//!
+//! | name              | kind    | fields                                     |
+//! |-------------------|---------|--------------------------------------------|
+//! | `service.map`     | span    | root of a `map` request                    |
+//! | `service.eval`    | span    | root of an `eval` request                  |
+//! | `hier.sweep`      | span    | `node_score`, `candidates`                 |
+//! | `hier.refine`     | span    | `swaps`                                    |
+//! | `hier.socket`     | span    | `socket_swaps`                             |
+//! | `hier.place`      | span    | —                                          |
+//! | `map.eval`        | span    | `objective_value`, `objective_delta`       |
+//! | `map.partition`   | span    | flat MJ partition of a `map` request       |
+//! | `sweep.candidate` | instant | `index`, `score`, `elapsed_us`             |
+//! | `refine.pass`     | instant | `pass`, `proposed`, `applied`, `gain`, `congestion_rescans` |
+//! | `mj.partition`    | instant | `parts`, `points`, `depth`, `imbalance`    |
+//! | `deadline.check`  | instant | `margin_us` (∞ margin omitted)             |
+//!
+//! Metric names follow the same convention ([`metrics`] registry:
+//! counters + [`Histogram`]s, e.g. the service's `service.requests`
+//! counter and `service.request_us` histogram).
+//!
+//! # JSONL schema (`TASKMAP_TRACE`)
+//!
+//! One event per line. Completed spans are Chrome trace "complete" events
+//! (`"ph":"X"`, `ts` = start, `dur` = elapsed, both µs since the recorder
+//! epoch); instants are `"ph":"i"`. `tid` is the lane, `trace` the request
+//! trace id (0 outside a request), `args` the numeric fields:
+//!
+//! ```json
+//! {"name":"hier.sweep","ph":"X","ts":1042,"dur":3125,"pid":1,"tid":0,"trace":7,"args":{"node_score":412.5,"candidates":12}}
+//! ```
+//!
+//! [`trace::validate_jsonl`] checks a file against this schema (CI runs it
+//! over a smoke-run service trace).
+//!
+//! # Caveats
+//!
+//! * Lane numbers are assigned per thread at first use, so with the
+//!   *global* recorder on, spawned `par` workers that record (e.g. the MJ
+//!   instant on an inlined worker-0 range) get process-lifetime lane ids;
+//!   cross-run ordering is guaranteed per `(trace, lane)`, and the
+//!   determinism property is stated for [`capture`]'d traces, which
+//!   record on the coordinating lane only.
+//! * [`capture`] is per-thread and not nestable (an inner capture drains
+//!   the shared buffer).
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::Histogram;
+
+use crate::testutil::json::Json;
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+/// Events kept in the global ring for `{"op":"trace"}`.
+const RING_CAPACITY: usize = 4096;
+
+/// What an [`Event`] marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A span opened.
+    Start,
+    /// A span closed (`dur_us` is its elapsed time, `fields` its data).
+    End,
+    /// A point event.
+    Instant,
+}
+
+/// One recorded trace event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Request trace id (0 outside [`with_trace`]).
+    pub trace: u64,
+    /// Recording lane (one per thread, assigned at first use).
+    pub lane: u32,
+    /// Per-lane monotone sequence number (the deterministic sort key).
+    pub seq: u64,
+    /// Span nesting depth at emission (End events carry the span's depth).
+    pub depth: u32,
+    pub kind: EventKind,
+    pub name: &'static str,
+    /// Microseconds since the recorder epoch.
+    pub t_us: u64,
+    /// Elapsed microseconds (End events only).
+    pub dur_us: u64,
+    /// Numeric payload.
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RING: Mutex<VecDeque<Event>> = Mutex::new(VecDeque::new());
+
+thread_local! {
+    static CAPTURING: Cell<bool> = const { Cell::new(false) };
+    static LANE: RefCell<LaneState> = RefCell::new(LaneState::new());
+}
+
+struct LaneState {
+    trace: u64,
+    /// `u32::MAX` = not yet assigned.
+    lane: u32,
+    depth: u32,
+    seq: u64,
+    buf: Vec<Event>,
+    /// Prefix of `buf` already pushed to the ring/sink (avoids double
+    /// emission when capture and the global recorder are both on).
+    flushed: usize,
+}
+
+impl LaneState {
+    fn new() -> LaneState {
+        LaneState {
+            trace: 0,
+            lane: u32::MAX,
+            depth: 0,
+            seq: 0,
+            buf: Vec::new(),
+            flushed: 0,
+        }
+    }
+
+    fn lane_id(&mut self) -> u32 {
+        if self.lane == u32::MAX {
+            self.lane = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+        }
+        self.lane
+    }
+}
+
+/// Lock a mutex tolerating poison (observability must survive panics —
+/// that is when it matters).
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+}
+
+/// Is the global recorder on?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the global recorder on/off (the ring and sink keep their
+/// contents).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is anything recording on this thread? This is the hot-path gate: one
+/// relaxed load plus a thread-local read.
+#[inline]
+pub fn recording() -> bool {
+    ENABLED.load(Ordering::Relaxed) || CAPTURING.with(|c| c.get())
+}
+
+/// Fresh per-request trace id (monotone, process-wide, never 0).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Run `f` with the calling thread's events tagged by trace id `id`.
+pub fn with_trace<R>(id: u64, f: impl FnOnce() -> R) -> R {
+    let prev = LANE.with(|l| std::mem::replace(&mut l.borrow_mut().trace, id));
+    let out = f();
+    LANE.with(|l| l.borrow_mut().trace = prev);
+    out
+}
+
+/// RAII span: records a Start event at creation and an End event (with
+/// elapsed time and any [`Span::record`]ed fields) on drop. Inert when
+/// nothing is recording.
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+    fields: Vec<(&'static str, f64)>,
+}
+
+/// Open a span. See the module docs for the naming convention.
+pub fn span(name: &'static str) -> Span {
+    if !recording() {
+        return Span {
+            name,
+            start: None,
+            fields: Vec::new(),
+        };
+    }
+    let t_us = now_us();
+    LANE.with(|l| {
+        let mut l = l.borrow_mut();
+        let (trace, lane, depth) = (l.trace, l.lane_id(), l.depth);
+        let seq = l.seq;
+        l.seq += 1;
+        l.depth += 1;
+        l.buf.push(Event {
+            trace,
+            lane,
+            seq,
+            depth,
+            kind: EventKind::Start,
+            name,
+            t_us,
+            dur_us: 0,
+            fields: Vec::new(),
+        });
+    });
+    Span {
+        name,
+        start: Some(Instant::now()),
+        fields: Vec::new(),
+    }
+}
+
+impl Span {
+    /// Attach a numeric field, emitted on the span's End event.
+    pub fn record(&mut self, key: &'static str, value: f64) {
+        if self.start.is_some() {
+            self.fields.push((key, value));
+        }
+    }
+
+    /// Is this span actually recording?
+    pub fn live(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start.take() else {
+            return;
+        };
+        let dur_us = start.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+        let t_us = now_us();
+        let name = self.name;
+        let fields = std::mem::take(&mut self.fields);
+        LANE.with(|l| {
+            let mut l = l.borrow_mut();
+            l.depth = l.depth.saturating_sub(1);
+            let (trace, lane, depth) = (l.trace, l.lane_id(), l.depth);
+            let seq = l.seq;
+            l.seq += 1;
+            l.buf.push(Event {
+                trace,
+                lane,
+                seq,
+                depth,
+                kind: EventKind::End,
+                name,
+                t_us,
+                dur_us,
+                fields,
+            });
+            if depth == 0 {
+                flush(&mut l);
+            }
+        });
+    }
+}
+
+/// Record a point event at the current depth.
+pub fn instant(name: &'static str, fields: &[(&'static str, f64)]) {
+    if !recording() {
+        return;
+    }
+    let t_us = now_us();
+    LANE.with(|l| {
+        let mut l = l.borrow_mut();
+        let (trace, lane, depth) = (l.trace, l.lane_id(), l.depth);
+        let seq = l.seq;
+        l.seq += 1;
+        l.buf.push(Event {
+            trace,
+            lane,
+            seq,
+            depth,
+            kind: EventKind::Instant,
+            name,
+            t_us,
+            dur_us: 0,
+            fields: fields.to_vec(),
+        });
+        if depth == 0 {
+            flush(&mut l);
+        }
+    });
+}
+
+/// Push the unflushed tail of a lane buffer to the ring and sink (global
+/// recorder only), then drop it unless a capture wants it.
+fn flush(l: &mut LaneState) {
+    if ENABLED.load(Ordering::Relaxed) && l.flushed < l.buf.len() {
+        let tail = &l.buf[l.flushed..];
+        ring_push(tail);
+        trace::write_events(tail);
+        l.flushed = l.buf.len();
+    }
+    if !CAPTURING.with(|c| c.get()) {
+        l.buf.clear();
+        l.flushed = 0;
+    }
+}
+
+fn ring_push(events: &[Event]) {
+    let mut ring = lock_ok(&RING);
+    for e in events {
+        if ring.len() == RING_CAPACITY {
+            ring.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(e.clone());
+    }
+}
+
+/// Collect the calling thread's events around `f`. Recording is forced on
+/// for this thread regardless of the global flag; the global ring/sink
+/// still see the events when the global recorder is also on.
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<Event>) {
+    let prev = CAPTURING.with(|c| c.replace(true));
+    let out = f();
+    let events = LANE.with(|l| {
+        let mut l = l.borrow_mut();
+        if ENABLED.load(Ordering::Relaxed) && l.flushed < l.buf.len() {
+            let tail = &l.buf[l.flushed..];
+            ring_push(tail);
+            trace::write_events(tail);
+        }
+        l.flushed = 0;
+        std::mem::take(&mut l.buf)
+    });
+    CAPTURING.with(|c| c.set(prev));
+    (out, events)
+}
+
+/// Snapshot of the global ring, sorted by `(trace, lane, seq)` — the
+/// deterministic merge order.
+pub fn recent_events() -> Vec<Event> {
+    let mut events: Vec<Event> = lock_ok(&RING).iter().cloned().collect();
+    events.sort_by(|a, b| (a.trace, a.lane, a.seq).cmp(&(b.trace, b.lane, b.seq)));
+    events
+}
+
+/// Events evicted from the ring since process start.
+pub fn events_dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Empty the global ring (tests).
+pub fn clear_recent() {
+    lock_ok(&RING).clear();
+}
+
+/// Read `TASKMAP_TRACE` once and, if set, install the JSONL sink and turn
+/// the global recorder on. Called by `Service::start` and the bench/CLI
+/// entry points; idempotent.
+pub fn init_from_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(refresh_env);
+}
+
+/// Re-read `TASKMAP_TRACE` unconditionally (tests; [`init_from_env`] is
+/// once-only).
+pub fn refresh_env() {
+    if let Ok(path) = std::env::var("TASKMAP_TRACE") {
+        if !path.is_empty() && trace::install_sink(&path).is_ok() {
+            set_enabled(true);
+        }
+    }
+}
+
+/// Process-wide metrics registry: named counters plus latency
+/// [`Histogram`]s. Updated only while something is recording, so the
+/// disabled hot path stays branch-only.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    hists: Mutex<BTreeMap<&'static str, Histogram>>,
+}
+
+/// The global registry.
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::default)
+}
+
+impl Metrics {
+    /// Bump a counter by `n`.
+    pub fn add(&self, name: &'static str, n: u64) {
+        *lock_ok(&self.counters).entry(name).or_insert(0) += n;
+    }
+
+    /// Record a latency observation.
+    pub fn observe_us(&self, name: &'static str, us: u64) {
+        lock_ok(&self.hists).entry(name).or_default().record(us);
+    }
+
+    /// Current counter value (0 if never bumped).
+    pub fn counter(&self, name: &str) -> u64 {
+        lock_ok(&self.counters).get(name).copied().unwrap_or(0)
+    }
+
+    /// Reset everything (tests).
+    pub fn reset(&self) {
+        lock_ok(&self.counters).clear();
+        lock_ok(&self.hists).clear();
+    }
+
+    /// `{"counters":{..},"histograms":{name:{count,mean_us,p50_us,p95_us,
+    /// p99_us,max_us}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let counters = Json::Obj(
+            lock_ok(&self.counters)
+                .iter()
+                .map(|(k, &v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            lock_ok(&self.hists)
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.to_string(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("mean_us", Json::Num(h.mean())),
+                            ("p50_us", Json::Num(h.quantile(0.50) as f64)),
+                            ("p95_us", Json::Num(h.quantile(0.95) as f64)),
+                            ("p99_us", Json::Num(h.quantile(0.99) as f64)),
+                            ("max_us", Json::Num(h.max() as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("histograms", hists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_emits_nothing() {
+        // Not capturing, and regardless of the global flag this thread's
+        // buffer stays empty through inert spans.
+        let s = span("test.inert.unique");
+        assert!(!s.live() || enabled());
+        drop(s);
+        let (_, events) = capture(|| ());
+        assert!(events.iter().all(|e| e.name != "test.inert.unique"));
+    }
+
+    #[test]
+    fn capture_collects_nested_spans_in_order() {
+        let ((), events) = capture(|| {
+            let mut outer = span("test.outer");
+            outer.record("x", 1.5);
+            {
+                let _inner = span("test.inner");
+                instant("test.point", &[("v", 2.0)]);
+            }
+        });
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert_eq!(
+            names,
+            vec!["test.outer", "test.inner", "test.point", "test.inner", "test.outer"]
+        );
+        // Sequence numbers are strictly increasing within the lane.
+        for w in events.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+            assert_eq!(w[0].lane, w[1].lane);
+        }
+        // Depth nests: outer start 0, inner start 1, instant depth 2.
+        assert_eq!(events[0].depth, 0);
+        assert_eq!(events[1].depth, 1);
+        assert_eq!(events[2].depth, 2);
+        assert_eq!(events[2].kind, EventKind::Instant);
+        // The End event carries the recorded field.
+        let end = events.last().unwrap();
+        assert_eq!(end.kind, EventKind::End);
+        assert_eq!(end.fields, vec![("x", 1.5)]);
+    }
+
+    #[test]
+    fn with_trace_tags_events() {
+        let id = next_trace_id();
+        let ((), events) = capture(|| {
+            with_trace(id, || {
+                let _s = span("test.traced");
+            });
+            let _s = span("test.untraced");
+        });
+        let traced: Vec<u64> = events.iter().map(|e| e.trace).collect();
+        assert_eq!(traced[0], id);
+        assert_eq!(*traced.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn metrics_registry_counts_and_buckets() {
+        let m = Metrics::default();
+        m.add("test.counter", 2);
+        m.add("test.counter", 3);
+        m.observe_us("test.lat_us", 100);
+        m.observe_us("test.lat_us", 200);
+        assert_eq!(m.counter("test.counter"), 5);
+        let snap = m.snapshot_json();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("test.counter")).and_then(|v| v.as_f64()),
+            Some(5.0)
+        );
+        let h = snap.get("histograms").and_then(|h| h.get("test.lat_us")).unwrap();
+        assert_eq!(h.get("count").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(h.get("p99_us").and_then(|v| v.as_f64()).unwrap() >= 200.0);
+    }
+}

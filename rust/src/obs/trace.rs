@@ -1,0 +1,442 @@
+//! Trace output: the `TASKMAP_TRACE` JSONL sink, the documented
+//! line schema and its validator (run by CI over a smoke-run service
+//! trace), and span-tree assembly for the `{"op":"trace"}` endpoint.
+//!
+//! See the [`super`] module docs for the schema. Only completed spans
+//! (`"ph":"X"`) and instants (`"ph":"i"`) are written; Start events are
+//! implied by the X event's `ts`/`dur`.
+
+use super::{Event, EventKind};
+use crate::testutil::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+
+/// Open (truncating) a JSONL sink at `path`. Subsequent flushed events
+/// append one line each.
+pub fn install_sink(path: &str) -> std::io::Result<()> {
+    let file = File::create(path)?;
+    *super::lock_ok(&SINK) = Some(BufWriter::new(file));
+    Ok(())
+}
+
+/// Drop the sink (tests). Buffered lines are flushed first.
+pub fn clear_sink() {
+    let mut sink = super::lock_ok(&SINK);
+    if let Some(w) = sink.as_mut() {
+        let _ = w.flush();
+    }
+    *sink = None;
+}
+
+/// Write a flushed batch of events to the sink, if one is installed.
+/// Called from lane-buffer flushes; batches are flushed to the OS so the
+/// file is readable while the process lives.
+pub(crate) fn write_events(events: &[Event]) {
+    let mut sink = super::lock_ok(&SINK);
+    let Some(w) = sink.as_mut() else {
+        return;
+    };
+    for e in events {
+        if let Some(json) = event_json(e) {
+            let _ = writeln!(w, "{}", json.to_string());
+        }
+    }
+    let _ = w.flush();
+}
+
+/// The JSONL form of one event: `Some` for End (ph `X`, `ts` = span
+/// start) and Instant (ph `i`) events, `None` for Start events (implied).
+pub fn event_json(e: &Event) -> Option<Json> {
+    let args = Json::Obj(
+        e.fields
+            .iter()
+            .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+            .collect(),
+    );
+    match e.kind {
+        EventKind::Start => None,
+        EventKind::End => Some(Json::obj(vec![
+            ("name", Json::Str(e.name.to_string())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::Num(e.t_us.saturating_sub(e.dur_us) as f64)),
+            ("dur", Json::Num(e.dur_us as f64)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(e.lane as f64)),
+            ("trace", Json::Num(e.trace as f64)),
+            ("args", args),
+        ])),
+        EventKind::Instant => Some(Json::obj(vec![
+            ("name", Json::Str(e.name.to_string())),
+            ("ph", Json::Str("i".into())),
+            ("ts", Json::Num(e.t_us as f64)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(e.lane as f64)),
+            ("trace", Json::Num(e.trace as f64)),
+            ("args", args),
+        ])),
+    }
+}
+
+/// Validate one JSONL line against the documented schema.
+pub fn validate_jsonl_line(line: &str) -> Result<(), String> {
+    let json = Json::parse(line).map_err(|e| format!("not JSON: {e}"))?;
+    let Json::Obj(map) = &json else {
+        return Err("line is not an object".into());
+    };
+    let ph = json
+        .get("ph")
+        .and_then(|v| v.as_str())
+        .ok_or("missing \"ph\"")?;
+    if ph != "X" && ph != "i" {
+        return Err(format!("bad ph {ph:?} (want \"X\" or \"i\")"));
+    }
+    match json.get("name") {
+        Some(Json::Str(s)) if !s.is_empty() => {}
+        _ => return Err("missing or empty \"name\"".into()),
+    }
+    for key in ["ts", "pid", "tid", "trace"] {
+        match json.get(key) {
+            Some(Json::Num(x)) if *x >= 0.0 => {}
+            _ => return Err(format!("missing or negative \"{key}\"")),
+        }
+    }
+    match json.get("dur") {
+        Some(Json::Num(x)) if *x >= 0.0 && ph == "X" => {}
+        None if ph == "i" => {}
+        Some(_) => return Err("\"dur\" only valid (non-negative) on ph \"X\"".into()),
+        None => return Err("ph \"X\" requires \"dur\"".into()),
+    }
+    match json.get("args") {
+        Some(Json::Obj(args)) => {
+            for (k, v) in args {
+                if !matches!(v, Json::Num(_)) {
+                    return Err(format!("args.{k} is not a number"));
+                }
+            }
+        }
+        _ => return Err("missing \"args\" object".into()),
+    }
+    const ALLOWED: [&str; 8] = ["name", "ph", "ts", "dur", "pid", "tid", "trace", "args"];
+    for k in map.keys() {
+        if !ALLOWED.contains(&k.as_str()) {
+            return Err(format!("unknown key {k:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a whole JSONL document (empty lines skipped); returns the
+/// number of validated events or the first failure with its line number.
+pub fn validate_jsonl(text: &str) -> Result<usize, String> {
+    let mut n = 0;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        validate_jsonl_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Assemble events (pre-sorted by `(trace, lane, seq)`, as
+/// [`super::recent_events`] returns them) into per-trace span trees:
+/// `[{"trace":N,"spans":[{"name","t_us","dur_us","fields",
+/// "children"},...]},...]`. Instants become leaves with `"instant":true`;
+/// a Start whose End was lost to ring eviction is closed with
+/// `"open":true`.
+pub fn span_tree_json(events: &[Event]) -> Json {
+    let mut traces: Vec<Json> = Vec::new();
+    let mut i = 0;
+    while i < events.len() {
+        let trace = events[i].trace;
+        let mut j = i;
+        while j < events.len() && events[j].trace == trace {
+            j += 1;
+        }
+        let spans = build_forest(&events[i..j]);
+        traces.push(Json::obj(vec![
+            ("trace", Json::Num(trace as f64)),
+            ("spans", Json::Arr(spans)),
+        ]));
+        i = j;
+    }
+    Json::Arr(traces)
+}
+
+/// One partially-built span node.
+struct Node {
+    name: &'static str,
+    t_us: u64,
+    dur_us: u64,
+    fields: Vec<(&'static str, f64)>,
+    children: Vec<Json>,
+    open: bool,
+}
+
+impl Node {
+    fn into_json(self) -> Json {
+        let fields = Json::Obj(
+            self.fields
+                .iter()
+                .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+                .collect(),
+        );
+        let mut out = vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("t_us", Json::Num(self.t_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("fields", fields),
+            ("children", Json::Arr(self.children)),
+        ];
+        if self.open {
+            out.push(("open", Json::Bool(true)));
+        }
+        Json::obj(out)
+    }
+}
+
+fn build_forest(events: &[Event]) -> Vec<Json> {
+    let mut roots: Vec<Json> = Vec::new();
+    let mut stack: Vec<Node> = Vec::new();
+    let attach = |stack: &mut Vec<Node>, roots: &mut Vec<Json>, json: Json| {
+        match stack.last_mut() {
+            Some(parent) => parent.children.push(json),
+            None => roots.push(json),
+        }
+    };
+    for e in events {
+        match e.kind {
+            EventKind::Start => stack.push(Node {
+                name: e.name,
+                t_us: e.t_us,
+                dur_us: 0,
+                fields: Vec::new(),
+                children: Vec::new(),
+                open: true,
+            }),
+            EventKind::End => {
+                if let Some(mut node) = stack.pop() {
+                    node.dur_us = e.dur_us;
+                    node.fields = e.fields.clone();
+                    node.open = false;
+                    attach(&mut stack, &mut roots, node.into_json());
+                } else {
+                    // End without a Start in the window (eviction).
+                    let node = Node {
+                        name: e.name,
+                        t_us: e.t_us.saturating_sub(e.dur_us),
+                        dur_us: e.dur_us,
+                        fields: e.fields.clone(),
+                        children: Vec::new(),
+                        open: false,
+                    };
+                    attach(&mut stack, &mut roots, node.into_json());
+                }
+            }
+            EventKind::Instant => {
+                let leaf = Json::obj(vec![
+                    ("name", Json::Str(e.name.to_string())),
+                    ("t_us", Json::Num(e.t_us as f64)),
+                    ("instant", Json::Bool(true)),
+                    (
+                        "fields",
+                        Json::Obj(
+                            e.fields
+                                .iter()
+                                .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                attach(&mut stack, &mut roots, leaf);
+            }
+        }
+    }
+    // Spans still open at the window edge.
+    while let Some(node) = stack.pop() {
+        let json = node.into_json();
+        attach(&mut stack, &mut roots, json);
+    }
+    roots
+}
+
+/// A timing-free rendering of an event stream: depth, kind, name, and
+/// field *names* (values like `elapsed_us` vary run to run; structure and
+/// order must not). Two captures of the same pipeline input at the same
+/// thread budget must produce equal digests — the span-replay property.
+pub fn structural_digest(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let kind = match e.kind {
+            EventKind::Start => "start",
+            EventKind::End => "end",
+            EventKind::Instant => "instant",
+        };
+        out.push_str(&format!(
+            "{:indent$}{kind} {name}",
+            "",
+            indent = e.depth as usize * 2,
+            name = e.name
+        ));
+        for (k, _) in &e.fields {
+            out.push(' ');
+            out.push_str(k);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        kind: EventKind,
+        name: &'static str,
+        seq: u64,
+        depth: u32,
+        dur_us: u64,
+    ) -> Event {
+        Event {
+            trace: 1,
+            lane: 0,
+            seq,
+            depth,
+            kind,
+            name,
+            t_us: 100 + seq * 10,
+            dur_us,
+            fields: vec![("x", 1.0)],
+        }
+    }
+
+    #[test]
+    fn documented_example_line_validates() {
+        let line = r#"{"name":"hier.sweep","ph":"X","ts":1042,"dur":3125,"pid":1,"tid":0,"trace":7,"args":{"node_score":412.5,"candidates":12}}"#;
+        validate_jsonl_line(line).unwrap();
+    }
+
+    #[test]
+    fn event_json_roundtrips_through_validator() {
+        let end = ev(EventKind::End, "hier.refine", 3, 1, 250);
+        let inst = ev(EventKind::Instant, "refine.pass", 4, 2, 0);
+        let start = ev(EventKind::Start, "hier.refine", 2, 1, 0);
+        assert!(event_json(&start).is_none());
+        for e in [end, inst] {
+            let line = event_json(&e).unwrap().to_string();
+            validate_jsonl_line(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        for (line, why) in [
+            ("not json", "garbage"),
+            (r#"{"ph":"X"}"#, "missing name"),
+            (
+                r#"{"name":"a","ph":"Q","ts":1,"pid":1,"tid":0,"trace":0,"args":{}}"#,
+                "bad ph",
+            ),
+            (
+                r#"{"name":"a","ph":"X","ts":1,"pid":1,"tid":0,"trace":0,"args":{}}"#,
+                "X without dur",
+            ),
+            (
+                r#"{"name":"a","ph":"i","ts":1,"pid":1,"tid":0,"trace":0,"args":{"s":"oops"}}"#,
+                "non-numeric arg",
+            ),
+            (
+                r#"{"name":"a","ph":"i","ts":1,"pid":1,"tid":0,"trace":0,"args":{},"extra":1}"#,
+                "unknown key",
+            ),
+        ] {
+            assert!(validate_jsonl_line(line).is_err(), "{why} accepted: {line}");
+        }
+    }
+
+    #[test]
+    fn validate_jsonl_counts_and_reports_line_numbers() {
+        let good = r#"{"name":"a","ph":"i","ts":1,"pid":1,"tid":0,"trace":0,"args":{}}"#;
+        let text = format!("{good}\n\n{good}\n");
+        assert_eq!(validate_jsonl(&text), Ok(2));
+        let bad = format!("{good}\nnope\n");
+        let err = validate_jsonl(&bad).unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
+
+    #[test]
+    fn span_tree_nests_and_attaches_instants() {
+        let events = vec![
+            ev(EventKind::Start, "service.map", 0, 0, 0),
+            ev(EventKind::Start, "hier.sweep", 1, 1, 0),
+            ev(EventKind::Instant, "sweep.candidate", 2, 2, 0),
+            ev(EventKind::End, "hier.sweep", 3, 1, 40),
+            ev(EventKind::End, "service.map", 4, 0, 90),
+        ];
+        let tree = span_tree_json(&events);
+        let traces = tree.as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        let spans = traces[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        let root = &spans[0];
+        assert_eq!(root.get("name").and_then(|v| v.as_str()), Some("service.map"));
+        let kids = root.get("children").unwrap().as_arr().unwrap();
+        assert_eq!(kids[0].get("name").and_then(|v| v.as_str()), Some("hier.sweep"));
+        let grandkids = kids[0].get("children").unwrap().as_arr().unwrap();
+        assert_eq!(
+            grandkids[0].get("name").and_then(|v| v.as_str()),
+            Some("sweep.candidate")
+        );
+        assert_eq!(grandkids[0].get("instant"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn open_spans_are_marked() {
+        let events = vec![ev(EventKind::Start, "service.map", 0, 0, 0)];
+        let tree = span_tree_json(&events);
+        let spans = tree.as_arr().unwrap()[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].get("open"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn structural_digest_ignores_values_but_keeps_shape() {
+        let a = vec![
+            ev(EventKind::Start, "hier.sweep", 0, 0, 0),
+            ev(EventKind::End, "hier.sweep", 1, 0, 40),
+        ];
+        let mut b = a.clone();
+        b[1].dur_us = 9999;
+        b[1].t_us = 77;
+        b[1].fields = vec![("x", 123.0)];
+        assert_eq!(structural_digest(&a), structural_digest(&b));
+        let mut c = a.clone();
+        c[1].name = "hier.refine";
+        assert_ne!(structural_digest(&a), structural_digest(&c));
+    }
+
+    #[test]
+    fn sink_writes_validating_jsonl() {
+        let path = std::env::temp_dir().join(format!(
+            "taskmap-obs-sink-test-{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap();
+        install_sink(path_str).unwrap();
+        let events = vec![
+            ev(EventKind::Start, "test.sink", 0, 0, 0),
+            ev(EventKind::Instant, "test.point", 1, 1, 0),
+            ev(EventKind::End, "test.sink", 2, 0, 10),
+        ];
+        write_events(&events);
+        clear_sink();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Start is implied: two lines, both schema-valid.
+        assert_eq!(validate_jsonl(&text), Ok(2));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -55,7 +55,19 @@ impl Deadline {
     }
 
     /// Phase-boundary check: `Err` names the phase that ran out of budget.
+    /// When the recorder is on, each check emits a `deadline.check` instant
+    /// carrying the remaining margin (omitted for unlimited deadlines), so
+    /// a trace shows how close each phase came to its budget.
     pub fn check(&self, phase: &'static str) -> Result<(), DeadlineExceeded> {
+        if crate::obs::recording() {
+            match self.remaining() {
+                Some(left) => crate::obs::instant(
+                    "deadline.check",
+                    &[("margin_us", left.as_micros() as f64)],
+                ),
+                None => crate::obs::instant("deadline.check", &[]),
+            }
+        }
         if self.expired() {
             Err(DeadlineExceeded { phase })
         } else {
