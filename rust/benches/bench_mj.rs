@@ -9,19 +9,10 @@ use taskmap::par::Parallelism;
 use taskmap::sfc::hilbert::hilbert_sort_f64;
 use taskmap::sfc::PartOrdering;
 use taskmap::testutil::bench::{bench, BenchRecorder};
-use taskmap::testutil::Rng;
+use taskmap::testutil::graphs::random_points;
 
 fn random_coords(n: usize, dim: usize, seed: u64) -> Coords {
-    let mut rng = Rng::new(seed);
-    let mut c = Coords::with_capacity(dim, n);
-    let mut p = vec![0f64; dim];
-    for _ in 0..n {
-        for x in p.iter_mut() {
-            *x = rng.below(1 << 16) as f64;
-        }
-        c.push(&p);
-    }
-    c
+    random_points(n, dim, 65_536.0, seed)
 }
 
 fn main() {

@@ -1,0 +1,133 @@
+//! Scale bench: the multilevel V-cycle (`HierConfig::coarsen`) against
+//! the direct rotation sweep on MiniGhost-style weak-scaling graphs.
+//!
+//! Each case maps a 3D stencil task graph onto a dense torus allocation
+//! (every router one node, 16 ranks per node) twice — once through the
+//! V-cycle, once directly — and records single-shot wall times plus the
+//! inter-node WeightedHops quality ratio into `BENCH_mapping.json`
+//! (`scale/...` rows). The direct sweep is skipped above
+//! `DIRECT_CAP` tasks (that is the regime the V-cycle exists for);
+//! skipped comparisons are reported, never silently dropped.
+//!
+//! Modes: `--smoke` (one 4K-task case, CI-sized), default (32K + 110K),
+//! `--full` (adds the million-task case).
+
+use std::time::Instant;
+use taskmap::apps::minighost::MiniGhost;
+use taskmap::coarsen::CoarsenConfig;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{Allocation, Torus};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::metrics::eval_hops;
+use taskmap::testutil::bench::BenchRecorder;
+
+const RANKS_PER_NODE: usize = 16;
+
+/// Largest task count the direct sweep is still timed at; beyond this the
+/// baseline would dominate the bench wall-clock for no extra signal.
+const DIRECT_CAP: usize = 200_000;
+
+/// Dense allocation: every router of the `sizes` torus is one node of
+/// `RANKS_PER_NODE` consecutive ranks.
+fn dense_alloc(sizes: &[usize]) -> Allocation {
+    let torus = Torus::torus(sizes);
+    let nn: usize = sizes.iter().product();
+    let mut core_router = Vec::with_capacity(nn * RANKS_PER_NODE);
+    let mut core_node = Vec::with_capacity(nn * RANKS_PER_NODE);
+    for node in 0..nn {
+        for _ in 0..RANKS_PER_NODE {
+            core_router.push(node as u32);
+            core_node.push(node as u32);
+        }
+    }
+    Allocation {
+        torus,
+        core_router,
+        core_node,
+        ranks_per_node: RANKS_PER_NODE,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let full = std::env::args().any(|a| a == "--full");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    let prefix = if smoke { "scale/smoke" } else { "scale" };
+    // (task dims, node grid, coarsen target): tasks = product(tdims),
+    // ranks = product(nodes) * 16 = tasks, so every case is a bijection.
+    // The smoke case lowers the target so 4K tasks still exercise a real
+    // hierarchy (default 4096 would swallow the whole graph).
+    let cases: Vec<([usize; 3], [usize; 3], usize)> = if smoke {
+        vec![([16, 16, 16], [8, 8, 4], 512)]
+    } else {
+        let mut v = vec![
+            ([32, 32, 32], [16, 16, 8], 4096),
+            ([48, 48, 48], [24, 24, 12], 4096),
+        ];
+        if full {
+            v.push(([100, 100, 100], [50, 50, 25], 4096));
+        }
+        v
+    };
+    println!("== V-cycle vs direct sweep (MiniGhost weak scaling) ==");
+    for (tdims, nodes, target) in cases {
+        let g = MiniGhost::weak_scaling(tdims).graph();
+        let n = g.num_tasks;
+        let alloc = dense_alloc(&nodes);
+        assert_eq!(alloc.num_ranks(), n, "case must be a bijection");
+        let base = HierConfig {
+            intra: IntraNodeStrategy::MinVolume { passes: 2 },
+            max_rotations: 4,
+            ..HierConfig::default()
+        };
+        let vcfg = HierConfig {
+            coarsen: Some(CoarsenConfig {
+                target_tasks: target,
+                ..CoarsenConfig::default()
+            }),
+            ..base.clone()
+        };
+        let t0 = Instant::now();
+        let vm = map_hierarchical(&g, &g.coords, &alloc, &vcfg, &NativeBackend);
+        let v_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(
+            !vm.coarsen_levels.is_empty(),
+            "tasks={n}: expected the V-cycle path"
+        );
+        let v_whops = eval_hops(&g, &vm.task_to_rank, &alloc).weighted_hops;
+        println!(
+            "tasks={n:>9}  vcycle {v_ms:>10.1} ms  levels {:?}",
+            vm.coarsen_levels
+        );
+        rec.record_scalar(&format!("{prefix}/tasks={n}/vcycle"), "wall_ms", v_ms);
+        rec.record_scalar(
+            &format!("{prefix}/tasks={n}/vcycle_whops"),
+            "weighted_hops",
+            v_whops,
+        );
+        if n > DIRECT_CAP {
+            println!("tasks={n:>9}  direct skipped (over the {DIRECT_CAP}-task baseline cap)");
+            continue;
+        }
+        let t0 = Instant::now();
+        let dm = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
+        let d_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let d_whops = eval_hops(&g, &dm.task_to_rank, &alloc).weighted_hops;
+        let speedup = d_ms / v_ms.max(1e-9);
+        let quality = v_whops / d_whops.max(1e-9);
+        println!(
+            "tasks={n:>9}  direct {d_ms:>10.1} ms  speedup {speedup:>6.2}x  \
+             quality ratio {quality:.4} (vcycle/direct weighted hops)"
+        );
+        rec.record_scalar(&format!("{prefix}/tasks={n}/direct"), "wall_ms", d_ms);
+        rec.record_scalar(&format!("{prefix}/tasks={n}/speedup"), "x", speedup);
+        rec.record_scalar(
+            &format!("{prefix}/tasks={n}/quality_ratio"),
+            "vcycle_over_direct",
+            quality,
+        );
+    }
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

@@ -1,0 +1,633 @@
+//! Multilevel coarsening for the task graph: the "V" in the V-cycle.
+//!
+//! The rotation sweep scores every candidate against the full task set, so
+//! its cost grows with task count and it tops out around the paper's 128K
+//! ranks. The hierarchical process-mapping line (arXiv:1702.04164,
+//! arXiv:2504.01726) reaches millions of tasks by shrinking the graph
+//! first: collapse matched task pairs into *supertasks* (summed weights,
+//! weight-averaged coordinates), repeat until the graph fits a size budget,
+//! solve the coarsest instance with the existing sweep, then walk back up
+//! projecting the mapping and running a few bounded refinement passes per
+//! level:
+//!
+//! ```text
+//!   fine graph  n tasks   ── coarsen ──▶  level 0   (~n/2 supertasks)
+//!                                           │ coarsen
+//!                                           ▼
+//!                                         level 1   (~n/4)
+//!                                           │  ⋮
+//!                                           ▼
+//!                                         level L-1 (coarsest, ≥ floor)
+//!                                           │ rotation sweep + refine
+//!                                           ▼
+//!                                     coarse mapping
+//!                                           │ project + refine (per level)
+//!                                           ▼
+//!   fine mapping  ◀── project + refine ── level 0 mapping
+//! ```
+//!
+//! This module owns the left leg and the projections; the driver that runs
+//! the sweep and the uncoarsening refinement lives in [`crate::hier`].
+//!
+//! ## Level record schema
+//!
+//! Each [`Level`] fully describes one coarsening step:
+//!
+//! | field            | meaning                                              |
+//! |------------------|------------------------------------------------------|
+//! | `fine_to_coarse` | for every task of the *finer* graph, its supertask id |
+//! | `graph`          | the coarse [`TaskGraph`] (merged edges, averaged coords) |
+//! | `weights`        | per-supertask summed task weight (finest tasks weigh 1) |
+//! | `matched`        | contracted pairs this step (`coarse n = fine n - matched`) |
+//!
+//! Supertask ids ascend by smallest member index, so the coarse graph's
+//! task order — and everything downstream of it — is independent of thread
+//! count: matching *proposes* in parallel over a frozen adjacency and
+//! *applies* sequentially in ascending task order, the same discipline as
+//! every other parallel path in the crate.
+//!
+//! ## Sizing invariant
+//!
+//! One step contracts at most half the tasks (`m >= ceil(n/2)`), so
+//! [`coarsen`] loops `while n >= 2 * target_tasks`: the coarsest graph
+//! always lands in `[target_tasks, 2 * target_tasks)` (unless `max_levels`
+//! or a matching dead-end stops it early) and never undershoots the floor.
+//! Callers mapping onto `N` nodes pass `target_tasks >= N` so the coarse
+//! solve stays in the count-balanced regime of the sweep.
+
+use crate::apps::{Edge, TaskGraph};
+use crate::geom::Coords;
+use crate::obs;
+use crate::par::{self, Parallelism};
+
+/// How candidate partners are ranked when matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchingKind {
+    /// Heaviest edge first; ties broken by coordinate proximity, then by
+    /// smallest neighbor index. The classic multilevel choice: absorbing
+    /// the heaviest edges removes the most volume from the coarse graph.
+    HeavyEdge,
+    /// Nearest neighbor first; ties broken by heaviest edge, then smallest
+    /// index. Keeps supertasks geometrically tight, which suits the
+    /// coordinate-driven sweep when edge weights are near-uniform.
+    Geometric,
+}
+
+impl MatchingKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MatchingKind::HeavyEdge => "heavy_edge",
+            MatchingKind::Geometric => "geometric",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "heavy_edge" => Some(MatchingKind::HeavyEdge),
+            "geometric" => Some(MatchingKind::Geometric),
+            _ => None,
+        }
+    }
+
+    /// `true` if `(w_a, d2_a, a)` beats `(w_b, d2_b, b)` under this kind.
+    /// Total order (via `f64::total_cmp`), so argmax is unambiguous.
+    fn better(self, a: (f64, f64, u32), b: (f64, f64, u32)) -> bool {
+        let (wa, da, ia) = a;
+        let (wb, db, ib) = b;
+        let ord = match self {
+            MatchingKind::HeavyEdge => wb.total_cmp(&wa).then(da.total_cmp(&db)).then(ia.cmp(&ib)),
+            MatchingKind::Geometric => da.total_cmp(&db).then(wb.total_cmp(&wa)).then(ia.cmp(&ib)),
+        };
+        ord == std::cmp::Ordering::Less
+    }
+}
+
+/// Size budget for [`coarsen`]. See the module doc for the sizing
+/// invariant: `target_tasks` is a floor the coarsest level never goes
+/// below, and the result lands in `[target_tasks, 2 * target_tasks)` when
+/// neither `max_levels` nor a matching dead-end intervenes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoarsenConfig {
+    /// Stop coarsening once the next level would drop below this many
+    /// supertasks (clamped to at least 1).
+    pub target_tasks: usize,
+    /// Hard cap on coarsening steps (a ~1M-task graph needs ~8 levels to
+    /// reach 4096, so the default 20 is never the binding constraint).
+    pub max_levels: usize,
+    /// Partner-ranking rule for the matching.
+    pub matching: MatchingKind,
+}
+
+impl Default for CoarsenConfig {
+    fn default() -> Self {
+        CoarsenConfig {
+            target_tasks: 4096,
+            max_levels: 20,
+            matching: MatchingKind::HeavyEdge,
+        }
+    }
+}
+
+/// One coarsening step: the projection from the finer graph plus the
+/// coarse graph it produced. See the module doc for the field schema.
+#[derive(Clone, Debug)]
+pub struct Level {
+    /// `fine_to_coarse[t]` = supertask id of finer-graph task `t`.
+    pub fine_to_coarse: Vec<u32>,
+    /// The coarse graph: merged edges, weight-averaged coordinates.
+    pub graph: TaskGraph,
+    /// Summed task weight per supertask (finest-level tasks weigh 1.0).
+    pub weights: Vec<f64>,
+    /// Number of pairs contracted in this step.
+    pub matched: usize,
+}
+
+/// The full coarsening stack for one task graph, finest to coarsest.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    /// Task count of the original (finest) graph.
+    pub fine_tasks: usize,
+    /// Levels in coarsening order: `levels[0]` is one step below the
+    /// original graph, `levels.last()` is the coarsest.
+    pub levels: Vec<Level>,
+}
+
+impl Hierarchy {
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The coarsest level, if any coarsening happened.
+    pub fn coarsest(&self) -> Option<&Level> {
+        self.levels.last()
+    }
+
+    /// Supertask count per level, finest to coarsest.
+    pub fn level_tasks(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.graph.num_tasks).collect()
+    }
+
+    /// Project a per-supertask value at `level` one step down, to the
+    /// finer graph below it: every member of a supertask inherits its
+    /// value. Exact — no arithmetic, just indexing.
+    pub fn project_step(&self, level: usize, coarse: &[u32]) -> Vec<u32> {
+        let l = &self.levels[level];
+        assert_eq!(coarse.len(), l.graph.num_tasks, "value/level mismatch");
+        l.fine_to_coarse
+            .iter()
+            .map(|&c| coarse[c as usize])
+            .collect()
+    }
+
+    /// Project a coarsest-level assignment all the way to the original
+    /// task set.
+    pub fn project(&self, coarse: &[u32]) -> Vec<u32> {
+        let mut cur = coarse.to_vec();
+        for level in (0..self.levels.len()).rev() {
+            cur = self.project_step(level, &cur);
+        }
+        cur
+    }
+
+    /// Push a per-task assignment down to the coarsest level: each
+    /// supertask takes the value of its smallest-index member. Inverse of
+    /// [`Hierarchy::project`] on projected data:
+    /// `restrict(project(x)) == x` bit for bit.
+    pub fn restrict(&self, fine: &[u32]) -> Vec<u32> {
+        let mut cur = fine.to_vec();
+        for l in &self.levels {
+            assert_eq!(cur.len(), l.fine_to_coarse.len(), "value/level mismatch");
+            let mut out = vec![0u32; l.graph.num_tasks];
+            // Reverse order so the smallest member index writes last.
+            for t in (0..cur.len()).rev() {
+                out[l.fine_to_coarse[t] as usize] = cur[t];
+            }
+            cur = out;
+        }
+        cur
+    }
+}
+
+/// Aggregated CSR adjacency: per-task neighbor lists with duplicate
+/// (u, v) edges merged by weight sum, rows sorted by neighbor index.
+struct Adj {
+    offsets: Vec<usize>,
+    /// `(neighbor, summed weight)` entries, row-major.
+    entries: Vec<(u32, f64)>,
+}
+
+impl Adj {
+    fn build(num_tasks: usize, edges: &[Edge]) -> Adj {
+        // One global sort of both-direction triples, then a merge-sum
+        // sweep: no per-row sorts, no hashing, deterministic for a given
+        // edge list.
+        let mut triples: Vec<(u32, u32, f64)> = Vec::with_capacity(edges.len() * 2);
+        for e in edges {
+            triples.push((e.u, e.v, e.w));
+            triples.push((e.v, e.u, e.w));
+        }
+        triples.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut offsets = vec![0usize; num_tasks + 1];
+        let mut entries: Vec<(u32, f64)> = Vec::with_capacity(triples.len());
+        let mut i = 0;
+        while i < triples.len() {
+            let (u, v, mut w) = triples[i];
+            i += 1;
+            while i < triples.len() && triples[i].0 == u && triples[i].1 == v {
+                w += triples[i].2;
+                i += 1;
+            }
+            entries.push((v, w));
+            offsets[u as usize + 1] += 1;
+        }
+        for t in 0..num_tasks {
+            offsets[t + 1] += offsets[t];
+        }
+        Adj { offsets, entries }
+    }
+
+    fn row(&self, t: usize) -> &[(u32, f64)] {
+        &self.entries[self.offsets[t]..self.offsets[t + 1]]
+    }
+}
+
+/// Squared distance between two points of `coords`.
+fn dist2(coords: &Coords, a: usize, b: usize) -> f64 {
+    (0..coords.dim())
+        .map(|d| {
+            let dx = coords.get(d, a) - coords.get(d, b);
+            dx * dx
+        })
+        .sum()
+}
+
+/// Best neighbor of `t` under `kind` among `row` entries passing `keep`,
+/// or `u32::MAX` if none qualifies.
+fn best_neighbor(
+    kind: MatchingKind,
+    coords: &Coords,
+    t: usize,
+    row: &[(u32, f64)],
+    keep: impl Fn(u32) -> bool,
+) -> u32 {
+    let mut best: Option<(f64, f64, u32)> = None;
+    for &(v, w) in row {
+        if !keep(v) {
+            continue;
+        }
+        let cand = (w, dist2(coords, t, v as usize), v);
+        let wins = match best {
+            None => true,
+            Some(b) => kind.better(cand, b),
+        };
+        if wins {
+            best = Some(cand);
+        }
+    }
+    best.map_or(u32::MAX, |(_, _, v)| v)
+}
+
+/// One coarsening step over an explicit (tasks, edges, coords, weights)
+/// quadruple. `coords` are the coordinates the downstream sweep uses (for
+/// the finest graph, the *task* coordinates handed to the mapper, which
+/// may differ from `graph.coords`); `weights` is the per-task weight
+/// (all 1.0 at the finest level).
+///
+/// Deterministic at every thread count: the parallel phase only computes
+/// per-task proposals against the frozen adjacency (index-addressed
+/// output, no shared state), and the sequential apply phase resolves them
+/// in ascending task order.
+pub fn coarsen_once(
+    num_tasks: usize,
+    edges: &[Edge],
+    coords: &Coords,
+    weights: &[f64],
+    kind: MatchingKind,
+    par: Parallelism,
+) -> Level {
+    assert_eq!(weights.len(), num_tasks, "one weight per task");
+    assert_eq!(coords.len(), num_tasks, "one point per task");
+    let adj = Adj::build(num_tasks, edges);
+
+    let mut sp = obs::span("coarsen.match");
+    // Propose phase (parallel): each task independently names its best
+    // neighbor. Pure function of the adjacency — thread-count invariant.
+    let ids: Vec<u32> = (0..num_tasks as u32).collect();
+    let proposals: Vec<u32> = par::map_with(
+        par,
+        &ids,
+        || (),
+        |_, _, &t| best_neighbor(kind, coords, t as usize, adj.row(t as usize), |_| true),
+    );
+
+    // Apply phase (sequential, ascending task id). Every task with index
+    // < u is already resolved when u is visited, so an unresolved partner
+    // always has a larger index and supertask ids ascend by smallest
+    // member index.
+    let mut fine_to_coarse = vec![u32::MAX; num_tasks];
+    let mut next = 0u32;
+    let mut matched = 0usize;
+    for u in 0..num_tasks {
+        if fine_to_coarse[u] != u32::MAX {
+            continue;
+        }
+        let p = proposals[u];
+        let partner = if p != u32::MAX && fine_to_coarse[p as usize] == u32::MAX {
+            p
+        } else {
+            // Proposal taken (or none): fall back to the best still-free
+            // neighbor under the same ranking.
+            best_neighbor(kind, coords, u, adj.row(u), |v| {
+                fine_to_coarse[v as usize] == u32::MAX
+            })
+        };
+        fine_to_coarse[u] = next;
+        if partner != u32::MAX {
+            fine_to_coarse[partner as usize] = next;
+            matched += 1;
+        }
+        next += 1;
+    }
+    let m = next as usize;
+    sp.record("fine_tasks", num_tasks as f64);
+    sp.record("matched", matched as f64);
+    drop(sp);
+
+    // Contract: summed weights, weight-averaged coordinates.
+    let dim = coords.dim();
+    let mut coarse_w = vec![0f64; m];
+    let mut accum = vec![0f64; m * dim];
+    for t in 0..num_tasks {
+        let c = fine_to_coarse[t] as usize;
+        coarse_w[c] += weights[t];
+        for d in 0..dim {
+            accum[c * dim + d] += weights[t] * coords.get(d, t);
+        }
+    }
+    let mut coarse_coords = Coords::with_capacity(dim, m);
+    let mut p = vec![0f64; dim];
+    for c in 0..m {
+        for (d, slot) in p.iter_mut().enumerate() {
+            // Weights are sums of positive task weights, so the divide is
+            // always well-defined.
+            *slot = accum[c * dim + d] / coarse_w[c];
+        }
+        coarse_coords.push(&p);
+    }
+
+    // Coarse edges: map endpoints, drop now-internal edges, merge-sum
+    // duplicates after one sort of normalized pairs.
+    let mut mapped: Vec<(u32, u32, f64)> = Vec::with_capacity(edges.len());
+    for e in edges {
+        let cu = fine_to_coarse[e.u as usize];
+        let cv = fine_to_coarse[e.v as usize];
+        if cu != cv {
+            mapped.push((cu.min(cv), cu.max(cv), e.w));
+        }
+    }
+    mapped.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut coarse_edges: Vec<Edge> = Vec::with_capacity(mapped.len());
+    let mut i = 0;
+    while i < mapped.len() {
+        let (u, v, mut w) = mapped[i];
+        i += 1;
+        while i < mapped.len() && mapped[i].0 == u && mapped[i].1 == v {
+            w += mapped[i].2;
+            i += 1;
+        }
+        coarse_edges.push(Edge { u, v, w });
+    }
+
+    Level {
+        fine_to_coarse,
+        graph: TaskGraph {
+            num_tasks: m,
+            edges: coarse_edges,
+            coords: coarse_coords,
+        },
+        weights: coarse_w,
+        matched,
+    }
+}
+
+/// Coarsen `(num_tasks, edges, coords)` until the next step would drop
+/// below `cfg.target_tasks` supertasks (or `cfg.max_levels` / a matching
+/// dead-end stops it). Emits one `coarsen.level` span per step with
+/// `level`, `tasks`, `edges`, and `matched` fields (a `coarsen.match`
+/// child covers the matching itself).
+///
+/// The returned hierarchy may be empty (`levels.is_empty()`) when the
+/// graph is already at or near the target — callers fall back to the
+/// direct path.
+pub fn coarsen(
+    num_tasks: usize,
+    edges: &[Edge],
+    coords: &Coords,
+    cfg: CoarsenConfig,
+    par: Parallelism,
+) -> Hierarchy {
+    let floor = cfg.target_tasks.max(1);
+    let base_weights = vec![1f64; num_tasks];
+    let mut levels: Vec<Level> = Vec::new();
+    let mut cur_n = num_tasks;
+    while cur_n >= 2 * floor && levels.len() < cfg.max_levels {
+        let mut sp = obs::span("coarsen.level");
+        let lvl = {
+            let (e, c, w): (&[Edge], &Coords, &[f64]) = match levels.last() {
+                None => (edges, coords, &base_weights),
+                Some(l) => (&l.graph.edges, &l.graph.coords, &l.weights),
+            };
+            coarsen_once(cur_n, e, c, w, cfg.matching, par)
+        };
+        sp.record("level", levels.len() as f64);
+        sp.record("tasks", lvl.graph.num_tasks as f64);
+        sp.record("edges", lvl.graph.edges.len() as f64);
+        sp.record("matched", lvl.matched as f64);
+        drop(sp);
+        if lvl.matched == 0 {
+            // No edge to contract anywhere (e.g. an empty or fully
+            // disconnected graph): a further level would be a copy.
+            break;
+        }
+        cur_n = lvl.graph.num_tasks;
+        levels.push(lvl);
+    }
+    Hierarchy {
+        fine_tasks: num_tasks,
+        levels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::graphs::random_sparse;
+
+    fn line_graph(n: usize, heavy_at: usize) -> TaskGraph {
+        // 1D line 0-1-2-...; one designated edge is much heavier.
+        let mut coords = Coords::with_capacity(1, n);
+        for t in 0..n {
+            coords.push(&[t as f64]);
+        }
+        let edges = (0..n - 1)
+            .map(|t| Edge {
+                u: t as u32,
+                v: t as u32 + 1,
+                w: if t == heavy_at { 10.0 } else { 1.0 },
+            })
+            .collect();
+        TaskGraph {
+            num_tasks: n,
+            edges,
+            coords,
+        }
+    }
+
+    #[test]
+    fn heavy_edge_pair_is_contracted_together() {
+        let g = line_graph(6, 2);
+        let lvl = coarsen_once(
+            6,
+            &g.edges,
+            &g.coords,
+            &[1.0; 6],
+            MatchingKind::HeavyEdge,
+            Parallelism::sequential(),
+        );
+        // Tasks 2 and 3 share the weight-10 edge: they must share a
+        // supertask even though task 2's proposal race includes task 1.
+        assert_eq!(lvl.fine_to_coarse[2], lvl.fine_to_coarse[3]);
+        lvl.graph.validate().expect("coarse graph is valid");
+        assert_eq!(lvl.graph.num_tasks, 6 - lvl.matched);
+    }
+
+    #[test]
+    fn weights_sum_and_coords_average() {
+        let g = line_graph(4, 0);
+        let lvl = coarsen_once(
+            4,
+            &g.edges,
+            &g.coords,
+            &[1.0; 4],
+            MatchingKind::HeavyEdge,
+            Parallelism::sequential(),
+        );
+        let total_w: f64 = lvl.weights.iter().sum();
+        assert_eq!(total_w, 4.0);
+        // Mass center is preserved by weight-averaging.
+        let fine_sum: f64 = (0..4).map(|t| g.coords.get(0, t)).sum();
+        let coarse_sum: f64 = (0..lvl.graph.num_tasks)
+            .map(|c| lvl.weights[c] * lvl.graph.coords.get(0, c))
+            .sum();
+        assert!((fine_sum - coarse_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn supertask_ids_ascend_by_smallest_member() {
+        let g = random_sparse(300, 2, 5, 17);
+        let lvl = coarsen_once(
+            300,
+            &g.edges,
+            &g.coords,
+            &[1.0; 300],
+            MatchingKind::HeavyEdge,
+            Parallelism::sequential(),
+        );
+        // First occurrence order of supertask ids must be 0, 1, 2, ...
+        let mut seen = 0u32;
+        for &c in &lvl.fine_to_coarse {
+            assert!(c <= seen, "id {c} appears before all of 0..{seen}");
+            if c == seen {
+                seen += 1;
+            }
+        }
+        assert_eq!(seen as usize, lvl.graph.num_tasks);
+    }
+
+    #[test]
+    fn coarsest_respects_the_floor() {
+        for (n, target) in [(1000usize, 100usize), (513, 64), (200, 1)] {
+            let g = random_sparse(n, 2, 6, 3);
+            let cfg = CoarsenConfig {
+                target_tasks: target,
+                ..CoarsenConfig::default()
+            };
+            let h = coarsen(n, &g.edges, &g.coords, cfg, Parallelism::sequential());
+            let coarsest = h.coarsest().map_or(n, |l| l.graph.num_tasks);
+            assert!(coarsest >= target, "coarsest {coarsest} under floor {target}");
+            // Level sizes strictly decrease.
+            let mut prev = n;
+            for l in &h.levels {
+                assert!(l.graph.num_tasks < prev);
+                prev = l.graph.num_tasks;
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_is_empty_when_already_small_or_edgeless() {
+        let g = random_sparse(50, 2, 4, 1);
+        let cfg = CoarsenConfig {
+            target_tasks: 40,
+            ..CoarsenConfig::default()
+        };
+        let h = coarsen(50, &g.edges, &g.coords, cfg, Parallelism::sequential());
+        assert_eq!(h.num_levels(), 0, "50 < 2*40: nothing to do");
+
+        let lonely = random_sparse(64, 2, 4, 1);
+        let cfg = CoarsenConfig {
+            target_tasks: 8,
+            ..CoarsenConfig::default()
+        };
+        let h = coarsen(64, &[], &lonely.coords, cfg, Parallelism::sequential());
+        assert_eq!(h.num_levels(), 0, "edgeless graph cannot contract");
+    }
+
+    #[test]
+    fn projection_round_trips_exactly() {
+        let g = random_sparse(400, 3, 6, 23);
+        let cfg = CoarsenConfig {
+            target_tasks: 30,
+            ..CoarsenConfig::default()
+        };
+        let h = coarsen(400, &g.edges, &g.coords, cfg, Parallelism::sequential());
+        assert!(h.num_levels() >= 2, "expected a multi-level hierarchy");
+        let m = h.coarsest().unwrap().graph.num_tasks;
+        // Arbitrary (but distinct-per-supertask) coarse assignment.
+        let coarse: Vec<u32> = (0..m as u32).map(|c| c.wrapping_mul(7) % 13).collect();
+        let fine = h.project(&coarse);
+        assert_eq!(fine.len(), 400);
+        assert_eq!(h.restrict(&fine), coarse, "restrict(project(x)) == x");
+    }
+
+    #[test]
+    fn matching_is_thread_invariant() {
+        let g = random_sparse(600, 3, 6, 41);
+        let cfg = CoarsenConfig {
+            target_tasks: 32,
+            matching: MatchingKind::Geometric,
+            ..CoarsenConfig::default()
+        };
+        let base = coarsen(600, &g.edges, &g.coords, cfg, Parallelism::sequential());
+        assert!(base.num_levels() >= 2);
+        for threads in [2usize, 8] {
+            let par = Parallelism::threads(threads).with_grain(1);
+            let h = coarsen(600, &g.edges, &g.coords, cfg, par);
+            assert_eq!(h.num_levels(), base.num_levels());
+            for (a, b) in h.levels.iter().zip(&base.levels) {
+                assert_eq!(a.fine_to_coarse, b.fine_to_coarse, "{threads} threads");
+                assert_eq!(a.graph.edges, b.graph.edges);
+                assert_eq!(a.graph.coords, b.graph.coords);
+                assert_eq!(a.weights, b.weights);
+            }
+        }
+    }
+
+    #[test]
+    fn matching_kind_names_round_trip() {
+        for k in [MatchingKind::HeavyEdge, MatchingKind::Geometric] {
+            assert_eq!(MatchingKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(MatchingKind::parse("nope"), None);
+    }
+}

@@ -18,6 +18,7 @@
 use super::diagnostics::{Diagnostics, PoolSnapshot};
 use super::errors::{err, ServiceError};
 use crate::apps::{Edge, TaskGraph};
+use crate::coarsen::{CoarsenConfig, MatchingKind};
 use crate::geom::Coords;
 use crate::hier::{map_hierarchical_budgeted, HierConfig, IntraNodeStrategy};
 use crate::machine::{Allocation, NumaTopology, Torus};
@@ -58,7 +59,7 @@ impl Default for RequestCtx {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective", "numa", "bgq", "profile",
+    "hier", "objective", "numa", "bgq", "coarsen", "profile",
 ];
 const EVAL_FIELDS: &[&str] = &[
     "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
@@ -75,6 +76,7 @@ const NUMA_FIELDS: &[&str] = &[
     "hop_cost",
 ];
 const BGQ_FIELDS: &[&str] = &["block", "ranks_per_node", "order"];
+const COARSEN_FIELDS: &[&str] = &["target_tasks", "max_levels", "matching"];
 
 /// Keep service-built BG/Q blocks to a sane size: the block is expanded
 /// into per-rank tables, so an enormous request would balloon memory
@@ -309,6 +311,44 @@ fn parse_numa(req: &Json, ranks_per_node: usize) -> Result<Option<NumaTopology>,
         )));
     }
     Ok(Some(topo))
+}
+
+/// Parse an optional `"coarsen"` object with strict validation: the
+/// multilevel V-cycle knobs (`target_tasks`, `max_levels`, `matching`).
+/// Absent fields keep the library defaults; zero would disable coarsening
+/// in a way the caller almost certainly did not intend, so the two integer
+/// knobs must be >= 1.
+fn parse_coarsen(req: &Json) -> Result<Option<CoarsenConfig>, Json> {
+    let v = match req.get("coarsen") {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    if !matches!(v, Json::Obj(_)) {
+        return Err(err("coarsen must be an object"));
+    }
+    if let Some(e) = check_fields(v, COARSEN_FIELDS, "coarsen") {
+        return Err(e);
+    }
+    let mut cfg = CoarsenConfig::default();
+    if let Some(t) = v.get("target_tasks") {
+        match as_index(t) {
+            Some(x) if x >= 1 => cfg.target_tasks = x,
+            _ => return Err(err("coarsen.target_tasks must be a positive integer")),
+        }
+    }
+    if let Some(l) = v.get("max_levels") {
+        match as_index(l) {
+            Some(x) if x >= 1 => cfg.max_levels = x,
+            _ => return Err(err("coarsen.max_levels must be a positive integer")),
+        }
+    }
+    if let Some(m) = v.get("matching") {
+        match m.as_str().and_then(MatchingKind::parse) {
+            Some(kind) => cfg.matching = kind,
+            None => return Err(err("coarsen.matching must be heavy_edge|geometric")),
+        }
+    }
+    Ok(Some(cfg))
 }
 
 /// Parse an optional top-level `"objective"` with strict validation.
@@ -601,10 +641,15 @@ fn handle_map_hier(
     if let Some(e) = check_objective_numa(objective, numa.as_ref()) {
         return e;
     }
+    let coarsen = match parse_coarsen(req) {
+        Ok(c) => c,
+        Err(e) => return e,
+    };
     let mut cfg = HierConfig {
         node_map: map_cfg,
         objective,
         numa,
+        coarsen,
         ..HierConfig::default()
     };
     if let Some(s) = hier.get("strategy") {
@@ -641,6 +686,11 @@ fn handle_map_hier(
         // Without a task graph every candidate scores 0.0 under a routed
         // objective — reject the silent no-op, same policy as the flat op.
         return err("a routed objective requires a non-empty \"edges\" array");
+    }
+    if cfg.coarsen.is_some() && edges.is_empty() {
+        // Matching contracts edges; with none, the V-cycle would silently
+        // degrade to the direct sweep. Reject the no-op instead.
+        return err("coarsen requires a non-empty \"edges\" array (matching contracts edges)");
     }
     let graph = TaskGraph {
         num_tasks: tcoords.len(),
@@ -688,6 +738,14 @@ fn handle_map_hier(
         ("objective_value", Json::Num(objective_value)),
         ("max_link_load", Json::Num(lm.max_latency)),
     ];
+    if !m.coarsen_levels.is_empty() {
+        // Per-level coarse task counts, finest first — how the V-cycle
+        // shrank the instance before the sweep ran.
+        fields.push((
+            "coarsen_levels",
+            Json::Arr(m.coarsen_levels.iter().map(|&n| Json::Num(n as f64)).collect()),
+        ));
+    }
     if let Some(socks) = &m.task_to_socket {
         fields.push((
             "sockets",
@@ -886,6 +944,11 @@ fn handle_map(req: &Json, ctx: &RequestCtx) -> Json {
         // describes an allocation, which is a hierarchical-mode concept.
         return err("bgq requires \"hier\" (the flat map op partitions pcoords directly)");
     }
+    if req.get("coarsen").is_some() {
+        // The V-cycle runs in front of the node-level sweep; the flat op
+        // has no sweep to accelerate, so the knob would be a silent no-op.
+        return err("coarsen requires \"hier\" (the V-cycle fronts the node-level sweep)");
+    }
     let Some(pcoords) = pcoords else {
         return err("missing pcoords");
     };
@@ -1013,6 +1076,134 @@ mod tests {
                 "hier":{"ranks_per_node":2}}"#,
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn coarsen_map_round_trip_reports_levels() {
+        // 32 tasks on a chain over 4 nodes x 8 ranks (routers 0..3 of a
+        // 4-ring). target_tasks 8 with 4 nodes gives floor 8, so the
+        // V-cycle coarsens 32 -> 16 -> 8 before the sweep runs.
+        let tcoords: Vec<String> = (0..32).map(|i| format!("[{i}]")).collect();
+        let pcoords: Vec<String> = (0..32).map(|i| format!("[{}]", i / 8)).collect();
+        let edges: Vec<String> = (0..31).map(|i| format!("[{i},{}]", i + 1)).collect();
+        let base = format!(
+            r#""tcoords":[{}],"pcoords":[{}],"edges":[{}],"torus":[4],
+                "hier":{{"ranks_per_node":8,"strategy":"minvol","rotations":2}},
+                "coarsen":{{"target_tasks":8,"max_levels":10,"matching":"heavy_edge"}}"#,
+            tcoords.join(","),
+            pcoords.join(","),
+            edges.join(","),
+        );
+        let resp = handle_request(&format!(r#"{{"op":"map",{base}}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m: Vec<usize> = resp
+            .get("map")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        // A full bijection whose node assignment matches the rank grouping.
+        let mut s = m.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..32).collect::<Vec<_>>());
+        let nodes = resp.get("nodes").unwrap().as_arr().unwrap();
+        for (t, &rank) in m.iter().enumerate() {
+            assert_eq!(nodes[t].as_usize().unwrap(), rank / 8, "task {t}");
+        }
+        // The level schedule: strictly decreasing supertask counts, never
+        // under the floor of max(target_tasks, nodes) = 8.
+        let levels: Vec<usize> = resp
+            .get("coarsen_levels")
+            .expect("coarsen_levels in reply")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert!(!levels.is_empty());
+        assert!(levels[0] < 32);
+        for w in levels.windows(2) {
+            assert!(w[1] < w[0], "levels not strictly decreasing: {levels:?}");
+        }
+        assert!(*levels.last().unwrap() >= 8, "{levels:?}");
+        // The profile breakdown exposes the V-cycle phases: one
+        // coarsen.level and one uncoarsen.refine span per level, and the
+        // sweep ran once (on the coarsest graph).
+        let resp = handle_request(&format!(r#"{{"op":"map","profile":true,{base}}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(
+            resp.get("coarsen_levels").unwrap().as_arr().unwrap().len(),
+            levels.len()
+        );
+        let phases = resp
+            .get("profile")
+            .expect("profile object")
+            .get("phases")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let names: Vec<&str> = phases
+            .iter()
+            .map(|p| p.get("name").and_then(|v| v.as_str()).unwrap())
+            .collect();
+        let count = |n: &str| names.iter().filter(|&&x| x == n).count();
+        assert_eq!(count("coarsen.level"), levels.len(), "{names:?}");
+        assert_eq!(count("uncoarsen.refine"), levels.len(), "{names:?}");
+        assert_eq!(count("hier.sweep"), 1, "{names:?}");
+        // Each coarsen.level phase carries its supertask count.
+        let tasks: Vec<usize> = phases
+            .iter()
+            .filter(|p| p.get("name").and_then(|v| v.as_str()) == Some("coarsen.level"))
+            .map(|p| p.get("tasks").and_then(|v| v.as_f64()).unwrap() as usize)
+            .collect();
+        assert_eq!(tasks, levels, "{phases:?}");
+        // A graph already within the size budget takes the direct path:
+        // same request shape, default target_tasks (4096) swallows it.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{}}}"#,
+            base.replace(
+                r#""coarsen":{"target_tasks":8,"max_levels":10,"matching":"heavy_edge"}"#,
+                r#""coarsen":{}"#
+            )
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert!(resp.get("coarsen_levels").is_none(), "{resp:?}");
+    }
+
+    #[test]
+    fn coarsen_field_validated_strictly() {
+        let base = r#""tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+                       "edges":[[0,1],[1,2],[2,3]]"#;
+        // coarsen without hier: the flat op has no sweep to accelerate.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"coarsen":{{"target_tasks":2}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(emsg(&resp).contains("hier"), "{resp:?}");
+        // coarsen with no edges: matching would contract nothing.
+        let resp = handle_request(
+            r#"{"op":"map","tcoords":[[0],[1],[2],[3]],"pcoords":[[0],[0],[1],[1]],
+                "hier":{"ranks_per_node":2},"coarsen":{"target_tasks":2}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(emsg(&resp).contains("edges"), "{resp:?}");
+        // Unknown sub-field, bad matching name, zero knobs, wrong type —
+        // all structured errors, never silently-defaulted knobs.
+        for coarsen in [
+            r#"{"target_task":8}"#,
+            r#"{"matching":"heaviest"}"#,
+            r#"{"target_tasks":0}"#,
+            r#"{"max_levels":0}"#,
+            r#"{"target_tasks":2.5}"#,
+            r#""geometric""#,
+        ] {
+            let resp = handle_request(&format!(
+                r#"{{"op":"map",{base},"hier":{{"ranks_per_node":2}},"coarsen":{coarsen}}}"#
+            ));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{coarsen}: {resp:?}");
+        }
     }
 
     #[test]

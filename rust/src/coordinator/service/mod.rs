@@ -68,6 +68,21 @@
 //! rejected with a clear message instead of silently scoring under a
 //! different objective.
 //!
+//! **Multilevel coarsening** — `"hier"` map accepts a `"coarsen"` object
+//! (`{"target_tasks":N,"max_levels":L,"matching":"heavy_edge"|"geometric"}`,
+//! every field optional — see [`crate::coarsen::CoarsenConfig`] for the
+//! defaults) that runs the V-cycle in front of the node-level sweep: the
+//! task graph is contracted level by level until it fits the size budget,
+//! the sweep solves the coarsest instance, and bounded `MinVolume`
+//! refinement polishes the projected mapping on the way back up. Requires
+//! a non-empty `"edges"` array (matching contracts edges) and `"hier"`
+//! (the flat op has no sweep to accelerate). When the V-cycle actually
+//! ran, the reply carries `"coarsen_levels"` — the supertask count per
+//! level, finest first — and a `"profile":true` breakdown shows one
+//! `coarsen.level` and one `uncoarsen.refine` phase per level. A graph
+//! already within the budget silently takes the direct path (no
+//! `"coarsen_levels"` in the reply).
+//!
 //! **BG/Q block allocations** — `"hier"` map and `eval` accept a `"bgq"`
 //! object in place of `pcoords`/`torus`/`ranks_per_node`:
 //! `{"block":[a,b,c,d,e],"ranks_per_node":T,"order":"ABCDET"}` builds the

@@ -37,6 +37,19 @@
 //!    (cheap cache locality; network metrics are unaffected by
 //!    construction).
 //!
+//! With [`HierConfig::coarsen`] set, the node level runs as a **multilevel
+//! V-cycle** ([`crate::coarsen`]): matched task pairs collapse into
+//! supertasks (summed weights, weight-averaged coordinates) until the
+//! graph fits the size budget — never below the node count, so the coarse
+//! solve stays count-balanced — the rotation sweep + refinement solve the
+//! coarsest instance, and the assignment projects back level by level
+//! with a deterministic count rebalance at the finest level and bounded
+//! `MinVolume` refinement at every level. Million-task graphs reach the
+//! sweep as a few thousand supertasks; the per-level refinement closes
+//! the quality gap to the direct sweep. Ineligible inputs (heterogeneous
+//! allocations, edgeless graphs, graphs already within the budget) fall
+//! back to the direct path and say so via a `coarsen.skipped` instant.
+//!
 //! # The contract
 //!
 //! For any input where `tnum == alloc.num_ranks()`, [`map_hierarchical`]
@@ -64,12 +77,13 @@ pub mod refine;
 pub mod socket;
 
 use crate::apps::TaskGraph;
+use crate::coarsen::{self, CoarsenConfig};
 use crate::geom::Coords;
-use crate::machine::{Allocation, NumaTopology};
+use crate::machine::{Allocation, NumaTopology, Torus};
 use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::MapConfig;
-use crate::objective::{EvalSpec, ObjectiveKind};
+use crate::objective::{build_eval, Adjacency, EvalSpec, IncrementalEval, ObjectiveKind};
 use crate::par::{self, Deadline, DeadlineExceeded, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
 
@@ -132,6 +146,15 @@ pub struct HierConfig {
     /// objective whose swap gains are computed incrementally against
     /// per-link loads ([`crate::objective::CongestionState`]).
     pub objective: ObjectiveKind,
+    /// Multilevel coarsening in front of the node-level sweep: when set
+    /// and the input is eligible (uniform allocation, non-empty edge
+    /// list, task count at least twice the effective floor
+    /// `max(target_tasks, num_nodes)`), the task→node assignment comes
+    /// from the V-cycle — coarsen, sweep the coarsest graph, uncoarsen
+    /// with per-level refinement — instead of a direct full-size sweep.
+    /// Ineligible inputs silently take the direct path (a
+    /// `coarsen.skipped` obs instant says why).
+    pub coarsen: Option<CoarsenConfig>,
     /// NUMA model of a node: when set, the mapper runs at **depth 3** —
     /// the node level prices intra-node edges at the topology's socket
     /// cost, and a socket-level geometric split (plus, under `MinVolume`,
@@ -156,6 +179,7 @@ impl Default for HierConfig {
             chunk_edges: 32768,
             threads: 0,
             objective: ObjectiveKind::WeightedHops,
+            coarsen: None,
             numa: None,
         }
     }
@@ -184,12 +208,20 @@ pub struct HierMapping {
     /// refinement — inter-node WeightedHops (the sweep's own
     /// f32-accumulated score) under the default objective, otherwise the
     /// composed evaluator's score for the configured `objective` × `numa`
-    /// combination.
+    /// combination. On the V-cycle path this is the sweep winner's score
+    /// on the **coarsest** graph (the only instance the sweep saw).
     pub node_score: f64,
     /// Node-boundary swaps applied by `MinVolume` refinement (0 otherwise).
+    /// On the V-cycle path, the sum over every uncoarsening level plus the
+    /// coarsest-level refinement.
     pub swaps_applied: usize,
     /// Cross-socket swaps applied by the depth-3 socket refinement.
     pub socket_swaps: usize,
+    /// Supertask count per coarsening level (finest to coarsest) when the
+    /// mapping took the V-cycle path; empty on the direct path (no
+    /// [`HierConfig::coarsen`], ineligible input, or a graph already
+    /// within the size budget).
+    pub coarsen_levels: Vec<usize>,
 }
 
 /// Prepare the node coordinates per the config: optional torus shift, then
@@ -308,57 +340,53 @@ pub fn map_hierarchical_budgeted(
         ncoords = expand_node_coords(&ncoords, &node_alloc);
     }
 
-    // Level 1: the rotation sweep over node coordinates. Its "ranks" are
-    // nodes (or per-node rank slots on heterogeneous allocations), so the
-    // winning mapping induces the task→node assignment.
-    let sweep_cfg = SweepConfig {
-        max_candidates: cfg.max_rotations.max(1),
-        chunk_edges: cfg.chunk_edges,
-        threads: cfg.threads,
-        objective: cfg.objective,
-        numa: cfg.numa.map(|t| t.node_level_costs()),
+    // Level 1: the task→node assignment — the direct rotation sweep (+
+    // MinVolume refinement), or, with `cfg.coarsen` on an eligible input,
+    // the multilevel V-cycle. Ineligible inputs emit a `coarsen.skipped`
+    // instant (reason 1 = heterogeneous allocation, 2 = edgeless graph,
+    // 3 = graph already within the size budget) and take the direct path.
+    let mut vres = None;
+    if let Some(ccfg) = cfg.coarsen {
+        if node_alloc.num_ranks() != alloc.num_nodes() {
+            crate::obs::instant("coarsen.skipped", &[("reason", 1.0)]);
+        } else if graph.edges.is_empty() {
+            crate::obs::instant("coarsen.skipped", &[("reason", 2.0)]);
+        } else {
+            vres = vcycle_assign(
+                graph,
+                tcoords,
+                &ncoords,
+                &node_alloc,
+                &node_routers,
+                alloc,
+                ccfg,
+                cfg,
+                spec,
+                par,
+                backend,
+                deadline,
+            )?;
+        }
+    }
+    let (task_to_node, node_score, swaps_applied, coarsen_levels) = match vres {
+        Some((node_of, score, swaps, levels)) => (node_of, score, swaps, levels),
+        None => {
+            let (node_of, score, swaps) = sweep_assign(
+                graph,
+                tcoords,
+                &ncoords,
+                &node_alloc,
+                &node_routers,
+                &alloc.torus,
+                cfg,
+                spec,
+                par,
+                backend,
+                deadline,
+            )?;
+            (node_of, score, swaps, Vec::new())
+        }
     };
-    deadline.check("hier.sweep")?;
-    let mut sweep_span = crate::obs::span("hier.sweep");
-    let sweep = rotation_sweep(
-        graph,
-        tcoords,
-        &ncoords,
-        &node_alloc,
-        &cfg.node_map,
-        &sweep_cfg,
-        backend,
-    );
-    let node_score = sweep.scores[sweep.chosen];
-    sweep_span.record("node_score", node_score);
-    sweep_span.record("candidates", sweep.scores.len() as f64);
-    drop(sweep_span);
-    let mut task_to_node: Vec<u32> = sweep
-        .task_to_rank
-        .iter()
-        .map(|&r| node_alloc.core_node[r as usize])
-        .collect();
-
-    // Level 1.5: MinVolume boundary refinement, against the same
-    // composed evaluator the sweep scored with — hop-weighted volume by
-    // default, routed per-link loads for the congestion objectives, the
-    // socket-cost NUMA term layered on either at depth 3.
-    deadline.check("hier.refine")?;
-    let mut refine_span = crate::obs::span("hier.refine");
-    let swaps_applied = match cfg.intra {
-        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_eval(
-            graph,
-            &mut task_to_node,
-            &node_routers,
-            &alloc.torus,
-            passes,
-            par,
-            spec,
-        ),
-        _ => 0,
-    };
-    refine_span.record("swaps", swaps_applied as f64);
-    drop(refine_span);
 
     if let Some(topo) = cfg.numa {
         // Level 2 (depth 3): sized geometric socket split inside each
@@ -399,6 +427,7 @@ pub fn map_hierarchical_budgeted(
             node_score,
             swaps_applied,
             socket_swaps,
+            coarsen_levels,
         });
     }
 
@@ -415,7 +444,291 @@ pub fn map_hierarchical_budgeted(
         node_score,
         swaps_applied,
         socket_swaps: 0,
+        coarsen_levels,
     })
+}
+
+/// The factored-out direct path: one rotation sweep over node coordinates
+/// ("hier.sweep" phase/span — its "ranks" are nodes, or per-node rank
+/// slots on heterogeneous allocations, so the winning mapping induces the
+/// task→node assignment) followed by `MinVolume` boundary refinement
+/// ("hier.refine") against the same composed evaluator the sweep scored
+/// with. Returns `(task_to_node, sweep winner's score, swaps applied)`.
+/// The V-cycle calls this on the coarsest graph; the direct path calls it
+/// on the input graph.
+#[allow(clippy::too_many_arguments)]
+fn sweep_assign(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    ncoords: &Coords,
+    node_alloc: &Allocation,
+    node_routers: &[u32],
+    torus: &Torus,
+    cfg: &HierConfig,
+    spec: EvalSpec,
+    par: Parallelism,
+    backend: &dyn WhopsBackend,
+    deadline: Deadline,
+) -> Result<(Vec<u32>, f64, usize), DeadlineExceeded> {
+    let sweep_cfg = SweepConfig {
+        max_candidates: cfg.max_rotations.max(1),
+        chunk_edges: cfg.chunk_edges,
+        threads: cfg.threads,
+        objective: cfg.objective,
+        numa: cfg.numa.map(|t| t.node_level_costs()),
+    };
+    deadline.check("hier.sweep")?;
+    let mut sweep_span = crate::obs::span("hier.sweep");
+    let sweep = rotation_sweep(
+        graph,
+        tcoords,
+        ncoords,
+        node_alloc,
+        &cfg.node_map,
+        &sweep_cfg,
+        backend,
+    );
+    let node_score = sweep.scores[sweep.chosen];
+    sweep_span.record("node_score", node_score);
+    sweep_span.record("candidates", sweep.scores.len() as f64);
+    drop(sweep_span);
+    let mut task_to_node: Vec<u32> = sweep
+        .task_to_rank
+        .iter()
+        .map(|&r| node_alloc.core_node[r as usize])
+        .collect();
+
+    // MinVolume boundary refinement, against the same composed evaluator
+    // the sweep scored with — hop-weighted volume by default, routed
+    // per-link loads for the congestion objectives, the socket-cost NUMA
+    // term layered on either at depth 3.
+    deadline.check("hier.refine")?;
+    let mut refine_span = crate::obs::span("hier.refine");
+    let swaps_applied = match cfg.intra {
+        IntraNodeStrategy::MinVolume { passes } => refine::min_volume_refine_eval(
+            graph,
+            &mut task_to_node,
+            node_routers,
+            torus,
+            passes,
+            par,
+            spec,
+        ),
+        _ => 0,
+    };
+    refine_span.record("swaps", swaps_applied as f64);
+    drop(refine_span);
+    Ok((task_to_node, node_score, swaps_applied))
+}
+
+/// Refinement pass budget per uncoarsening level when the intra-node
+/// strategy is not `MinVolume`: the V-cycle always refines on the way up
+/// (that is what closes the quality gap to the direct sweep), just with a
+/// small bounded budget.
+const DEFAULT_UNCOARSEN_PASSES: usize = 2;
+
+/// The multilevel V-cycle: coarsen the task graph ([`crate::coarsen`],
+/// "coarsen.build" deadline phase), solve the coarsest instance with
+/// [`sweep_assign`], then uncoarsen level by level — exact projection, a
+/// deterministic count rebalance at the finest level, and bounded
+/// `MinVolume` refinement per level ("uncoarsen.refine" phase; one span
+/// per level with `level`, `tasks`, `edges`, `moves`, `swaps`, and — when
+/// recording — `gain` fields). Returns `None` when coarsening produced no
+/// level (graph already within budget, or nothing to contract): the
+/// caller falls back to the direct path.
+#[allow(clippy::too_many_arguments)]
+fn vcycle_assign(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    ncoords: &Coords,
+    node_alloc: &Allocation,
+    node_routers: &[u32],
+    alloc: &Allocation,
+    ccfg: CoarsenConfig,
+    cfg: &HierConfig,
+    spec: EvalSpec,
+    par: Parallelism,
+    backend: &dyn WhopsBackend,
+    deadline: Deadline,
+) -> Result<Option<(Vec<u32>, f64, usize, Vec<usize>)>, DeadlineExceeded> {
+    let nn = alloc.num_nodes();
+    deadline.check("coarsen.build")?;
+    // Never coarsen below the node count: the coarse solve must stay in
+    // the count-balanced regime of the sweep (supertasks >= nodes).
+    let eff = CoarsenConfig {
+        target_tasks: ccfg.target_tasks.max(nn),
+        ..ccfg
+    };
+    let hierarchy = coarsen::coarsen(graph.num_tasks, &graph.edges, tcoords, eff, par);
+    if hierarchy.num_levels() == 0 {
+        crate::obs::instant("coarsen.skipped", &[("reason", 3.0)]);
+        return Ok(None);
+    }
+    let level_tasks = hierarchy.level_tasks();
+    let coarsest = hierarchy.coarsest().expect("non-empty hierarchy");
+    let (coarse_nodes, node_score, mut swaps) = sweep_assign(
+        &coarsest.graph,
+        &coarsest.graph.coords,
+        ncoords,
+        node_alloc,
+        node_routers,
+        &alloc.torus,
+        cfg,
+        spec,
+        par,
+        backend,
+        deadline,
+    )?;
+
+    let passes = match cfg.intra {
+        IntraNodeStrategy::MinVolume { passes } => passes,
+        _ => DEFAULT_UNCOARSEN_PASSES,
+    };
+    let mut node_of = coarse_nodes;
+    for level in (0..hierarchy.num_levels()).rev() {
+        let mut fine = hierarchy.project_step(level, &node_of);
+        let fg: &TaskGraph = if level == 0 {
+            graph
+        } else {
+            &hierarchy.levels[level - 1].graph
+        };
+        deadline.check("uncoarsen.refine")?;
+        let mut sp = crate::obs::span("uncoarsen.refine");
+        // Projection preserves per-node *supertask* counts, not task
+        // counts: at the finest level, repair the drift before refinement
+        // so rank placement sees the exact count-balanced distribution.
+        let moves = if level == 0 {
+            rebalance_counts(graph, &mut fine, nn)
+        } else {
+            0
+        };
+        let before = if sp.live() {
+            Some(build_eval(&alloc.torus, node_routers, fg, &fine, spec).value())
+        } else {
+            None
+        };
+        let applied = refine::min_volume_refine_eval(
+            fg,
+            &mut fine,
+            node_routers,
+            &alloc.torus,
+            passes,
+            par,
+            spec,
+        );
+        sp.record("level", level as f64);
+        sp.record("tasks", fg.num_tasks as f64);
+        sp.record("edges", fg.edges.len() as f64);
+        sp.record("moves", moves as f64);
+        sp.record("swaps", applied as f64);
+        if let Some(b) = before {
+            let after = build_eval(&alloc.torus, node_routers, fg, &fine, spec).value();
+            sp.record("gain", b - after);
+        }
+        drop(sp);
+        swaps += applied;
+        node_of = fine;
+    }
+    Ok(Some((node_of, node_score, swaps, level_tasks)))
+}
+
+/// Restore the exact count-balanced per-node task counts at the finest
+/// level of the V-cycle: node `n` must hold exactly
+/// `(n + 1) * tnum / nn - n * tnum / nn` tasks — the same distribution the
+/// direct sweep produces — before swap-preserving refinement and rank
+/// placement run (the bijection contract depends on it). Deterministic
+/// and sequential: overfull nodes drain in ascending node id, evicting
+/// their most weakly attached tasks first (least intra-node adjacency
+/// weight, ties by smallest task id; attachment measured once per node)
+/// into the underfull node holding the most adjacency weight for the task
+/// (ties by smallest node id; a task with no underfull neighbor node goes
+/// to the smallest-id underfull node). Returns the number of moved tasks.
+fn rebalance_counts(graph: &TaskGraph, node_of: &mut [u32], nn: usize) -> usize {
+    let tnum = node_of.len();
+    let target = |n: usize| (n + 1) * tnum / nn - n * tnum / nn;
+    let mut counts = vec![0usize; nn];
+    for &n in node_of.iter() {
+        counts[n as usize] += 1;
+    }
+    if (0..nn).all(|n| counts[n] == target(n)) {
+        return 0;
+    }
+    let adj = Adjacency::build(graph);
+    let mut tasks_by_node: Vec<Vec<u32>> = vec![Vec::new(); nn];
+    for (t, &x) in node_of.iter().enumerate() {
+        tasks_by_node[x as usize].push(t as u32);
+    }
+    // Smallest-id underfull node, advanced monotonically: underfull nodes
+    // only ever gain tasks and overfull nodes never drain below target,
+    // so no node to the cursor's left becomes underfull again.
+    let mut cursor = 0usize;
+    let mut moves = 0usize;
+    // Scratch for per-destination adjacency weight, cleared sparsely.
+    let mut node_w = vec![0f64; nn];
+    let mut touched: Vec<u32> = Vec::new();
+    for n in 0..nn {
+        if counts[n] <= target(n) {
+            continue;
+        }
+        // Tasks can only have left `n` via this loop (receivers are
+        // always underfull), so the bucket is still exact here.
+        let mut residents: Vec<(f64, u32)> = tasks_by_node[n]
+            .iter()
+            .map(|&t| {
+                let w: f64 = adj
+                    .neighbors(t as usize)
+                    .filter(|&(v, _)| node_of[v as usize] as usize == n)
+                    .map(|(_, w)| w)
+                    .sum();
+                (w, t)
+            })
+            .collect();
+        residents.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut evict = residents.into_iter();
+        while counts[n] > target(n) {
+            let (_, t) = evict.next().expect("overfull node ran out of tasks");
+            for (v, w) in adj.neighbors(t as usize) {
+                let d = node_of[v as usize] as usize;
+                if d != n && counts[d] < target(d) {
+                    node_w[d] += w;
+                    touched.push(d as u32);
+                }
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for &du in &touched {
+                let d = du as usize;
+                let wins = match best {
+                    None => true,
+                    Some((bw, bd)) => match node_w[d].total_cmp(&bw) {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Equal => d < bd,
+                        std::cmp::Ordering::Less => false,
+                    },
+                };
+                if wins {
+                    best = Some((node_w[d], d));
+                }
+            }
+            for &du in &touched {
+                node_w[du as usize] = 0.0;
+            }
+            touched.clear();
+            let dest = match best {
+                Some((_, d)) => d,
+                None => {
+                    while counts[cursor] >= target(cursor) {
+                        cursor += 1;
+                    }
+                    cursor
+                }
+            };
+            node_of[t as usize] = dest as u32;
+            counts[n] -= 1;
+            counts[dest] += 1;
+            moves += 1;
+        }
+    }
+    moves
 }
 
 /// Level 2: intra-node placement. Tasks of node `n` (ascending task index)
@@ -925,6 +1238,191 @@ mod tests {
             .filter(|e| e.name == "sweep.candidate")
             .count();
         assert_eq!(cands, 4);
+    }
+
+    fn vcfg(target_tasks: usize) -> HierConfig {
+        HierConfig {
+            coarsen: Some(CoarsenConfig {
+                target_tasks,
+                ..CoarsenConfig::default()
+            }),
+            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
+        }
+    }
+
+    #[test]
+    fn vcycle_produces_node_respecting_balanced_bijection() {
+        let alloc = toy_alloc(); // 16 nodes x 8 ranks
+        let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
+        let m = map_hierarchical(&g, &g.coords, &alloc, &vcfg(16), &NativeBackend);
+        // 128 tasks with floor max(16, 16 nodes) = 16: a real hierarchy.
+        assert!(!m.coarsen_levels.is_empty(), "expected the V-cycle path");
+        let mut prev = 128usize;
+        for &n in &m.coarsen_levels {
+            assert!(n < prev, "level sizes must strictly decrease");
+            prev = n;
+        }
+        assert!(*m.coarsen_levels.last().unwrap() >= 16, "coarsest under floor");
+        let mut s = m.task_to_rank.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..128u32).collect::<Vec<_>>());
+        let mut sizes = vec![0usize; alloc.num_nodes()];
+        for t in 0..128 {
+            assert_eq!(
+                alloc.core_node[m.task_to_rank[t] as usize],
+                m.task_to_node[t],
+                "task {t}"
+            );
+            sizes[m.task_to_node[t] as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s == 8), "{sizes:?}");
+    }
+
+    #[test]
+    fn vcycle_falls_back_when_graph_already_small() {
+        // Default target_tasks (4096) dwarfs 128 tasks: coarsening is a
+        // no-op and the result must equal the direct path bit for bit.
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let base = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
+        let direct = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
+        let with_coarsen = HierConfig {
+            coarsen: Some(CoarsenConfig::default()),
+            ..base
+        };
+        let v = map_hierarchical(&g, &g.coords, &alloc, &with_coarsen, &NativeBackend);
+        assert!(v.coarsen_levels.is_empty());
+        assert_eq!(v.task_to_rank, direct.task_to_rank);
+        assert_eq!(v.task_to_node, direct.task_to_node);
+        assert_eq!(v.node_score, direct.node_score);
+        assert_eq!(v.swaps_applied, direct.swaps_applied);
+    }
+
+    #[test]
+    fn vcycle_skips_heterogeneous_allocations() {
+        let alloc = Allocation::heterogeneous(
+            Torus::torus(&[4]),
+            &[0, 1, 2, 3],
+            &[8, 4, 2, 2],
+        )
+        .unwrap();
+        let g = stencil_graph(&[16], false, 1.0);
+        let base = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
+        let direct = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
+        let v = map_hierarchical(
+            &g,
+            &g.coords,
+            &alloc,
+            &HierConfig {
+                coarsen: Some(CoarsenConfig {
+                    target_tasks: 1,
+                    ..CoarsenConfig::default()
+                }),
+                ..base
+            },
+            &NativeBackend,
+        );
+        assert!(v.coarsen_levels.is_empty(), "heterogeneous must skip");
+        assert_eq!(v.task_to_rank, direct.task_to_rank);
+    }
+
+    #[test]
+    fn vcycle_depth3_respects_node_and_socket_assignments() {
+        let alloc = toy_alloc(); // 16 nodes x 8 ranks
+        let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
+        let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
+        let rank_socks = topo.socket_of_ranks(&alloc);
+        let hcfg = HierConfig {
+            numa: Some(topo),
+            ..vcfg(16)
+        };
+        let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+        assert!(!m.coarsen_levels.is_empty(), "expected the V-cycle path");
+        let mut s = m.task_to_rank.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..128u32).collect::<Vec<_>>());
+        let socks = m.task_to_socket.as_ref().expect("depth 3 reports sockets");
+        let mut per_socket = vec![0usize; alloc.num_nodes() * 2];
+        for t in 0..128 {
+            let rank = m.task_to_rank[t] as usize;
+            assert_eq!(alloc.core_node[rank], m.task_to_node[t], "task {t}");
+            assert_eq!(rank_socks[rank], socks[t], "task {t}");
+            per_socket[m.task_to_node[t] as usize * 2 + socks[t] as usize] += 1;
+        }
+        assert!(per_socket.iter().all(|&c| c == 4), "{per_socket:?}");
+    }
+
+    #[test]
+    fn vcycle_expired_deadline_stops_at_coarsen_build() {
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let err = map_hierarchical_budgeted(
+            &g,
+            &g.coords,
+            &alloc,
+            &vcfg(16),
+            &NativeBackend,
+            Deadline::within(std::time::Duration::ZERO),
+        )
+        .unwrap_err();
+        assert_eq!(err.phase, "coarsen.build");
+    }
+
+    #[test]
+    fn vcycle_trace_covers_levels_without_changing_mapping() {
+        use crate::obs::{self, EventKind};
+        let alloc = toy_alloc();
+        let g = stencil_graph(&[8, 4, 4], false, 1.0);
+        let hcfg = vcfg(16);
+        let baseline = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
+        assert!(!baseline.coarsen_levels.is_empty());
+        let (traced, events) =
+            obs::capture(|| map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend));
+        assert_eq!(traced.task_to_rank, baseline.task_to_rank);
+        assert_eq!(traced.task_to_node, baseline.task_to_node);
+        let ends = |name: &'static str| -> Vec<&obs::Event> {
+            events
+                .iter()
+                .filter(|e| e.kind == EventKind::End && e.name == name)
+                .collect()
+        };
+        // One coarsen.level (with a nested coarsen.match) per hierarchy
+        // level, one uncoarsen.refine per level on the way back up, and
+        // the coarsest solve's own sweep + refine spans.
+        let nlevels = baseline.coarsen_levels.len();
+        assert_eq!(ends("coarsen.level").len(), nlevels);
+        assert!(ends("coarsen.match").len() >= nlevels);
+        assert_eq!(ends("hier.sweep").len(), 1);
+        let refines = ends("uncoarsen.refine");
+        assert_eq!(refines.len(), nlevels);
+        for e in refines {
+            for key in ["level", "tasks", "edges", "moves", "swaps", "gain"] {
+                assert!(
+                    e.fields.iter().any(|(n, _)| *n == key),
+                    "uncoarsen.refine missing field {key}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_counts_restores_exact_targets() {
+        // A deliberately lopsided assignment over 4 nodes: rebalance must
+        // land every node exactly on its count-balanced target while
+        // keeping the assignment a function of graph adjacency only.
+        let g = stencil_graph(&[16], false, 1.0); // 1D chain, 16 tasks
+        let mut node_of: Vec<u32> = (0..16).map(|t| if t < 10 { 0 } else { 3 }).collect();
+        let moves = rebalance_counts(&g, &mut node_of, 4);
+        assert!(moves > 0);
+        let mut counts = vec![0usize; 4];
+        for &n in &node_of {
+            counts[n as usize] += 1;
+        }
+        assert_eq!(counts, vec![4, 4, 4, 4]);
+        // Determinism: same input, same result.
+        let mut again: Vec<u32> = (0..16).map(|t| if t < 10 { 0 } else { 3 }).collect();
+        rebalance_counts(&g, &mut again, 4);
+        assert_eq!(again, node_of);
     }
 
     #[test]

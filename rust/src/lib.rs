@@ -50,6 +50,16 @@
 //! sink) that is compiled in but disabled by default — the hot path pays
 //! one branch, and enabling it never changes a mapping bit.
 //!
+//! For task counts far beyond the paper's 128K ranks, [`coarsen`] adds a
+//! multilevel V-cycle in front of the sweep (`HierConfig::coarsen` /
+//! `Z2Config::coarsen` / the service `"coarsen"` object): matched task
+//! pairs collapse into supertasks (summed weights, weight-averaged
+//! coordinates) until the graph fits a size budget, the sweep solves the
+//! coarsest instance, and bounded `MinVolume` refinement polishes the
+//! projected mapping at every level on the way back up — million-task
+//! graphs map in seconds with quality within a few percent of the direct
+//! sweep.
+//!
 //! The map-and-score hot path (MJ partitioning, the rotation sweep, batched
 //! WeightedHops scoring) is parallel and allocation-free in steady state:
 //! [`par`] provides deterministic fork–join primitives (results are
@@ -60,6 +70,7 @@
 //! an explicit thread budget are unaffected.
 
 pub mod apps;
+pub mod coarsen;
 pub mod coordinator;
 pub mod geom;
 pub mod hier;

@@ -61,6 +61,13 @@ pub struct Z2Config {
     /// `bw_scale` and `box_transform` are rank-level transforms and are
     /// ignored in hierarchical mode.
     pub hier: Option<crate::hier::IntraNodeStrategy>,
+    /// Multilevel coarsening V-cycle in front of the node-level sweep
+    /// ([`crate::coarsen`]): implies hierarchical mode — when set without
+    /// `hier`, the default `MinVolume` intra-node strategy is used. The
+    /// task graph is coarsened to the configured size budget, the sweep
+    /// solves the coarsest instance, and per-level refinement polishes the
+    /// projected mapping on the way back up.
+    pub coarsen: Option<crate::coarsen::CoarsenConfig>,
 }
 
 impl Z2Config {
@@ -78,6 +85,7 @@ impl Z2Config {
             threads: 0,
             objective: crate::objective::ObjectiveKind::WeightedHops,
             hier: None,
+            coarsen: None,
         }
     }
 
@@ -140,8 +148,9 @@ pub fn prepare_proc_coords(alloc: &Allocation, cfg: &Z2Config) -> Coords {
     pcoords
 }
 
-/// Run the strategy: returns `task_to_rank`. With `cfg.hier` set, the
-/// two-level hierarchical mapper runs instead of the flat partition.
+/// Run the strategy: returns `task_to_rank`. With `cfg.hier` (or
+/// `cfg.coarsen`, which implies hierarchical mode) set, the two-level
+/// hierarchical mapper runs instead of the flat partition.
 pub fn z2_map(
     graph: &TaskGraph,
     tcoords: &Coords,
@@ -149,7 +158,10 @@ pub fn z2_map(
     cfg: &Z2Config,
     backend: &dyn WhopsBackend,
 ) -> Vec<u32> {
-    if let Some(intra) = cfg.hier {
+    if cfg.hier.is_some() || cfg.coarsen.is_some() {
+        let intra = cfg
+            .hier
+            .unwrap_or(crate::hier::IntraNodeStrategy::MinVolume { passes: 4 });
         let hcfg = crate::hier::HierConfig {
             node_map: cfg.map_cfg(),
             intra,
@@ -158,6 +170,7 @@ pub fn z2_map(
             max_rotations: cfg.max_rotations,
             threads: cfg.threads,
             objective: cfg.objective,
+            coarsen: cfg.coarsen,
             ..crate::hier::HierConfig::default()
         };
         return crate::hier::map_hierarchical(graph, tcoords, alloc, &hcfg, backend)

@@ -218,6 +218,11 @@ pub struct ScoreScratch {
     src: Vec<f32>,
     dst: Vec<f32>,
     w: Vec<f32>,
+    /// Zero watermark: `w[w_dirty..]` is always all zeros. The per-chunk
+    /// padding clear only has to touch `w[len..w_dirty]` — on full chunks
+    /// (the steady state at large edge counts) that is empty, so the tail
+    /// re-zeroing the `sweep.candidate` spans used to show is gone.
+    w_dirty: usize,
 }
 
 impl ScoreScratch {
@@ -386,15 +391,26 @@ impl<'a> BatchScorer<'a> {
         let ne = self.graph.edges.len();
         scratch.src.resize(chunk * d, 0.0);
         scratch.dst.resize(chunk * d, 0.0);
-        scratch.w.resize(chunk, 0.0);
+        if scratch.w.len() != chunk {
+            // Re-establish the watermark invariant from scratch: resize
+            // alone would keep stale prefix values on shrink.
+            scratch.w.clear();
+            scratch.w.resize(chunk, 0.0);
+            scratch.w_dirty = 0;
+        }
         let mut total = 0f64;
         let mut lo = 0usize;
         while lo < ne {
             let hi = (lo + chunk).min(ne);
             let len = hi - lo;
-            // Zero-fill the padding region (w=0 edges contribute nothing;
-            // padding coords can stay stale for the same reason).
-            scratch.w[len..].fill(0.0);
+            // Zero only the previously written part of the padding region
+            // (w=0 edges contribute nothing; padding coords can stay stale
+            // for the same reason): `w[w_dirty..]` is already zero, across
+            // chunks and across calls reusing this scratch.
+            if scratch.w_dirty > len {
+                scratch.w[len..scratch.w_dirty].fill(0.0);
+            }
+            scratch.w_dirty = len;
             for (k, e) in self.graph.edges[lo..hi].iter().enumerate() {
                 scratch.w[k] = e.w as f32;
                 let ra = mapping[e.u as usize] as usize;
@@ -610,6 +626,33 @@ mod tests {
         let a = score_mappings(&g, &[m.clone()], &alloc, &NativeBackend, 1000);
         let b = score_mappings(&g, &[m.clone()], &alloc, &NativeBackend, 13);
         assert!((a[0] - b[0]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn scratch_reuse_never_leaks_weights_across_calls() {
+        // The w watermark must make a reused scratch score exactly like a
+        // fresh one — across scorers with different chunk sizes, graphs
+        // with shrinking edge counts, and repeat calls that leave a short
+        // dirty prefix behind.
+        let alloc = line_alloc(64);
+        let big = stencil_graph(&[8, 8], false, 1.5);
+        let small = stencil_graph(&[2, 8], false, 1.5);
+        let m_big: Vec<u32> = (0..64u32).map(|i| (i * 7) % 64).collect();
+        let m_small: Vec<u32> = (0..16u32).collect();
+        let mut reused = ScoreScratch::new();
+        let cases: [(usize, &TaskGraph, &Vec<u32>); 5] = [
+            (128, &big, &m_big),     // one partial chunk: dirty prefix left
+            (13, &big, &m_big),      // chunk shrink: w reallocated
+            (13, &small, &m_small),  // same chunk, fewer edges: stale tail
+            (128, &small, &m_small), // chunk grow: w reallocated
+            (128, &big, &m_big),     // longer edge list over a short dirty prefix
+        ];
+        for (chunk, g, map) in cases {
+            let scorer = BatchScorer::new(g, &alloc, chunk);
+            let got = scorer.score_one(map, &NativeBackend, &mut reused);
+            let fresh = scorer.score_one(map, &NativeBackend, &mut ScoreScratch::new());
+            assert_eq!(got, fresh, "chunk={chunk}");
+        }
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Seeded random geometric task graphs for tests and scale benchmarks.
+//!
+//! The coarsening and scale suites need graphs that are (a) reproducible
+//! from a seed, (b) geometrically meaningful (edges connect nearby tasks,
+//! so a geometric coarsener has structure to find), and (c) degree-bounded
+//! (so adjacency-walking code can't go quadratic on a fluke). The MiniGhost
+//! and stencil generators are deterministic lattices; this module is the
+//! *random* counterpart, so those suites don't have to hand-roll point
+//! clouds and edge lists (the MJ bench previously did exactly that).
+
+use crate::apps::{Edge, TaskGraph};
+use crate::geom::Coords;
+use crate::testutil::Rng;
+
+/// `n` points uniform in `[0, extent)^dim`, deterministic per seed.
+pub fn random_points(n: usize, dim: usize, extent: f64, seed: u64) -> Coords {
+    assert!(dim >= 1, "dim must be >= 1");
+    let mut rng = Rng::new(seed);
+    let mut coords = Coords::with_capacity(dim, n);
+    let mut p = vec![0f64; dim];
+    for _ in 0..n {
+        for x in p.iter_mut() {
+            *x = rng.f64_range(0.0, extent);
+        }
+        coords.push(&p);
+    }
+    coords
+}
+
+/// Seeded, degree-bounded random geometric graph: `n` tasks uniform in a
+/// `[0, s)^dim` box with `s ≈ n^(1/dim)` (about one task per unit cell),
+/// each linked to its up-to-`degree` nearest neighbors among the tasks of
+/// its own and adjacent grid cells. Every task *proposes* at most `degree`
+/// edges, so the final degree is bounded by `2 * degree`; duplicate
+/// proposals are merged. Edge weights are a pure function of `(seed, u, v)`
+/// in `[0.5, 2)`, so the graph is bit-identical however it is traversed.
+pub fn random_sparse(n: usize, dim: usize, degree: usize, seed: u64) -> TaskGraph {
+    assert!(n >= 1, "need at least one task");
+    assert!((1..=4).contains(&dim), "dim {dim} out of the supported 1..=4");
+    let extent = (n as f64).powf(1.0 / dim as f64).ceil().max(1.0);
+    let coords = random_points(n, dim, extent, seed);
+    let cells = extent as usize;
+    // Bucket tasks on the unit grid (ascending task order within a cell).
+    let num_cells = cells.pow(dim as u32);
+    let mut bucket: Vec<Vec<u32>> = vec![Vec::new(); num_cells];
+    let cell_of = |t: usize| -> usize {
+        let mut id = 0usize;
+        for d in 0..dim {
+            let c = (coords.get(d, t) as usize).min(cells - 1);
+            id = id * cells + c;
+        }
+        id
+    };
+    for t in 0..n {
+        bucket[cell_of(t)].push(t as u32);
+    }
+    let dist2 = |a: usize, b: usize| -> f64 {
+        (0..dim)
+            .map(|d| {
+                let dx = coords.get(d, a) - coords.get(d, b);
+                dx * dx
+            })
+            .sum()
+    };
+    // For each task: candidates from the 3^dim surrounding cells, keep the
+    // `degree` nearest (ties by index), emit normalized (min, max) pairs.
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut cand: Vec<(f64, u32)> = Vec::new();
+    let mut cell_idx = vec![0usize; dim];
+    for t in 0..n {
+        for (d, slot) in cell_idx.iter_mut().enumerate() {
+            *slot = (coords.get(d, t) as usize).min(cells - 1);
+        }
+        cand.clear();
+        // Odometer over the {-1, 0, +1}^dim neighbor-cell offsets.
+        let mut offs = vec![-1i64; dim];
+        'cells: loop {
+            let mut id = 0usize;
+            let mut in_grid = true;
+            for d in 0..dim {
+                let c = cell_idx[d] as i64 + offs[d];
+                if c < 0 || c >= cells as i64 {
+                    in_grid = false;
+                    break;
+                }
+                id = id * cells + c as usize;
+            }
+            if in_grid {
+                for &v in &bucket[id] {
+                    if v as usize != t {
+                        cand.push((dist2(t, v as usize), v));
+                    }
+                }
+            }
+            for o in offs.iter_mut() {
+                *o += 1;
+                if *o <= 1 {
+                    continue 'cells;
+                }
+                *o = -1;
+            }
+            break;
+        }
+        cand.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(_, v) in cand.iter().take(degree) {
+            let (a, b) = ((t as u32).min(v), (t as u32).max(v));
+            pairs.push((a, b));
+        }
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    let edges: Vec<Edge> = pairs
+        .into_iter()
+        .map(|(u, v)| {
+            // Per-edge weight from a hash of (seed, u, v): independent of
+            // construction order, stable across refactors of this loop.
+            let mut r = Rng::new(seed ^ (((u as u64) << 32) | v as u64));
+            Edge {
+                u,
+                v,
+                w: r.f64_range(0.5, 2.0),
+            }
+        })
+        .collect();
+    TaskGraph {
+        num_tasks: n,
+        edges,
+        coords,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = random_sparse(200, 3, 6, 42);
+        let b = random_sparse(200, 3, 6, 42);
+        assert_eq!(a.edges, b.edges);
+        for d in 0..3 {
+            assert_eq!(a.coords.axis(d), b.coords.axis(d));
+        }
+        let c = random_sparse(200, 3, 6, 43);
+        assert_ne!(a.edges, c.edges);
+    }
+
+    #[test]
+    fn valid_and_degree_bounded() {
+        let cases = [(1usize, 2usize, 4usize, 1u64), (64, 2, 3, 7), (500, 3, 6, 9)];
+        for (n, dim, degree, seed) in cases {
+            let g = random_sparse(n, dim, degree, seed);
+            g.validate().expect("random_sparse builds a valid graph");
+            for &d in &g.degrees() {
+                assert!(
+                    (d as usize) <= 2 * degree,
+                    "degree {d} exceeds the 2x{degree} bound"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edges_connect_nearby_tasks() {
+        // Neighbors come from the task's own or an adjacent unit cell, so
+        // per-axis separation is < 2 and dist^2 < 4 * dim.
+        let dim = 2;
+        let g = random_sparse(400, dim, 4, 5);
+        let max2 = 4.0 * dim as f64;
+        for e in &g.edges {
+            let d2: f64 = (0..dim)
+                .map(|d| {
+                    let dx = g.coords.get(d, e.u as usize) - g.coords.get(d, e.v as usize);
+                    dx * dx
+                })
+                .sum();
+            assert!(d2 <= max2, "edge ({}, {}) spans {d2}", e.u, e.v);
+        }
+    }
+
+    #[test]
+    fn random_points_in_box() {
+        let c = random_points(100, 3, 8.0, 11);
+        assert_eq!(c.len(), 100);
+        for d in 0..3 {
+            for &x in c.axis(d) {
+                assert!((0.0..8.0).contains(&x));
+            }
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod faults;
+pub mod graphs;
 pub mod json;
 pub mod prop;
 pub mod rng;

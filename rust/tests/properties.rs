@@ -1145,6 +1145,180 @@ fn prop_intra_node_edges_cost_nothing() {
 }
 
 #[test]
+fn prop_coarsen_bit_identical_across_threads() {
+    // The propose-parallel / apply-sequential matching must produce the
+    // exact same hierarchy at every thread count: same projections, same
+    // matched counts, bit-equal coarse weights, coordinates, and edges.
+    // The tiny grain forces real parallel splits on these small inputs.
+    use taskmap::coarsen::{coarsen, CoarsenConfig, MatchingKind};
+    use taskmap::par::Parallelism;
+    use taskmap::testutil::graphs::random_sparse;
+    check("coarsen parallel == sequential", 12, |rng| {
+        let n = rng.range(40, 400);
+        let g = random_sparse(n, rng.range(1, 4), rng.range(2, 5), rng.next_u64());
+        let cfg = CoarsenConfig {
+            target_tasks: rng.range(4, 24),
+            max_levels: rng.range(1, 8),
+            matching: if rng.bool() {
+                MatchingKind::HeavyEdge
+            } else {
+                MatchingKind::Geometric
+            },
+        };
+        let seq = coarsen(
+            g.num_tasks,
+            &g.edges,
+            &g.coords,
+            cfg,
+            Parallelism::sequential(),
+        );
+        for &threads in THREAD_COUNTS.iter() {
+            let par = coarsen(
+                g.num_tasks,
+                &g.edges,
+                &g.coords,
+                cfg,
+                Parallelism::threads(threads).with_grain(1),
+            );
+            if par.num_levels() != seq.num_levels() {
+                return Err(format!(
+                    "level count {} != {} at threads={threads} (n={n})",
+                    par.num_levels(),
+                    seq.num_levels()
+                ));
+            }
+            for (l, (a, b)) in par.levels.iter().zip(seq.levels.iter()).enumerate() {
+                if a.fine_to_coarse != b.fine_to_coarse
+                    || a.matched != b.matched
+                    || a.weights != b.weights
+                    || a.graph.num_tasks != b.graph.num_tasks
+                    || a.graph.edges != b.graph.edges
+                {
+                    return Err(format!("level {l} diverged at threads={threads} (n={n})"));
+                }
+                for d in 0..a.graph.coords.dim() {
+                    if a.graph.coords.axis(d) != b.graph.coords.axis(d) {
+                        return Err(format!(
+                            "level {l} coords diverged at threads={threads} (n={n})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coarsen_projection_round_trips_exactly() {
+    // restrict(project(x)) == x bit for bit, for any coarsest-level
+    // labeling — projection and restriction are pure indexing, so the
+    // round trip must be exact, never merely approximate.
+    use taskmap::coarsen::{coarsen, CoarsenConfig};
+    use taskmap::par::Parallelism;
+    use taskmap::testutil::graphs::random_sparse;
+    check("restrict(project(x)) == x", 16, |rng| {
+        let n = rng.range(40, 400);
+        let g = random_sparse(n, rng.range(1, 4), rng.range(2, 5), rng.next_u64());
+        let cfg = CoarsenConfig {
+            target_tasks: rng.range(2, 16),
+            ..CoarsenConfig::default()
+        };
+        let h = coarsen(
+            g.num_tasks,
+            &g.edges,
+            &g.coords,
+            cfg,
+            Parallelism::sequential(),
+        );
+        let Some(coarsest) = h.coarsest() else {
+            return Ok(()); // nothing contracted: nothing to round-trip
+        };
+        let x: Vec<u32> = (0..coarsest.graph.num_tasks)
+            .map(|_| rng.below(64) as u32)
+            .collect();
+        let fine = h.project(&x);
+        if fine.len() != g.num_tasks {
+            return Err(format!(
+                "projection has {} entries for {} tasks",
+                fine.len(),
+                g.num_tasks
+            ));
+        }
+        let back = h.restrict(&fine);
+        if back != x {
+            return Err(format!("round trip diverged (n={n}, levels={})", h.num_levels()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vcycle_mapping_thread_invariant_and_balanced() {
+    // The full V-cycle mapping (coarsen -> coarsest sweep -> uncoarsen
+    // with rebalance + refinement -> rank placement) is bit-identical at
+    // every thread count, respects the node structure, and lands the
+    // exact count-balanced per-node distribution of the direct sweep.
+    use taskmap::coarsen::CoarsenConfig;
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::mapping::rotations::NativeBackend;
+    use taskmap::testutil::graphs::random_sparse;
+    check("vcycle thread-invariant", 6, |rng| {
+        let alloc = SparseAllocator {
+            machine: Torus::torus(&[rng.range(3, 6), rng.range(3, 6), rng.range(3, 6)]),
+            nodes_per_router: 2,
+            ranks_per_node: rng.range(2, 5),
+            occupancy: rng.f64_range(0.0, 0.4),
+        }
+        .allocate(rng.range(4, 9), rng.next_u64());
+        let nn = alloc.num_nodes();
+        let tnum = nn * rng.range(4, 7);
+        let g = random_sparse(tnum, rng.range(1, 4), 3, rng.next_u64());
+        let cfg = |threads: usize| HierConfig {
+            intra: IntraNodeStrategy::MinVolume { passes: 2 },
+            max_rotations: 2,
+            threads,
+            coarsen: Some(CoarsenConfig {
+                target_tasks: nn,
+                ..CoarsenConfig::default()
+            }),
+            ..HierConfig::default()
+        };
+        let seq = map_hierarchical(&g, &g.coords, &alloc, &cfg(1), &NativeBackend);
+        if seq.coarsen_levels.is_empty() {
+            return Err(format!("expected the V-cycle path (tnum={tnum} nn={nn})"));
+        }
+        // Node structure and exact count balance.
+        let mut counts = vec![0usize; nn];
+        for t in 0..tnum {
+            let rank = seq.task_to_rank[t] as usize;
+            let node = seq.task_to_node[t] as usize;
+            if rank / alloc.ranks_per_node != node {
+                return Err(format!("task {t}: rank {rank} not on node {node}"));
+            }
+            counts[node] += 1;
+        }
+        for (n, &c) in counts.iter().enumerate() {
+            let want = (n + 1) * tnum / nn - n * tnum / nn;
+            if c != want {
+                return Err(format!("node {n}: {c} tasks != {want} (tnum={tnum})"));
+            }
+        }
+        for &threads in THREAD_COUNTS.iter() {
+            let par = map_hierarchical(&g, &g.coords, &alloc, &cfg(threads), &NativeBackend);
+            if par.task_to_rank != seq.task_to_rank
+                || par.task_to_node != seq.task_to_node
+                || par.coarsen_levels != seq.coarsen_levels
+                || par.swaps_applied != seq.swaps_applied
+            {
+                return Err(format!("mapping diverged at threads={threads} (tnum={tnum})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_sparse_allocation_ranks_consistent() {
     check("allocation consistency", 20, |rng| {
         let alloc = SparseAllocator {
