@@ -71,6 +71,42 @@ fn main() {
     println!("  profile: {}", profile.to_string());
     assert!(profile.get("phases").and_then(|p| p.as_arr()).is_some());
 
+    // Non-torus topologies over the wire: the "topology" field swaps the
+    // distance model under the same geometric pipeline. A fat-tree prices
+    // hops as 2 x (levels above the nearest common ancestor); a dragonfly
+    // prices minimal local-global-local routes with a configurable global
+    // premium. Both go through the hier (node-level) mapper.
+    let chain_edges = r#"[[0,1],[1,2],[2,3],[3,4],[4,5],[5,6],[6,7]]"#;
+    let ft_req = Json::parse(&format!(
+        r#"{{"op":"map",
+            "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+            "pcoords":[[0],[1],[2],[3]],
+            "edges":{chain_edges},
+            "hier":{{"ranks_per_node":2}},
+            "topology":{{"fattree":{{"levels":2,"radix":2}}}}}}"#
+    ))
+    .expect("static request parses");
+    let resp = client.request(&ft_req).expect("fat-tree map request");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("topology").and_then(|t| t.as_str()), Some("fattree"));
+    println!("\nfat-tree (levels 2, radix 2) mapping over the wire:");
+    println!("  map: {}", resp.get("map").unwrap().to_string());
+
+    let df_req = Json::parse(&format!(
+        r#"{{"op":"map",
+            "tcoords":[[0],[1],[2],[3],[4],[5],[6],[7]],
+            "pcoords":[[0,0],[0,1],[1,0],[1,1]],
+            "edges":{chain_edges},
+            "hier":{{"ranks_per_node":2}},
+            "topology":{{"dragonfly":{{"groups":2,"routers_per_group":2}}}}}}"#
+    ))
+    .expect("static request parses");
+    let resp = client.request(&df_req).expect("dragonfly map request");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("topology").and_then(|t| t.as_str()), Some("dragonfly"));
+    println!("dragonfly (2 groups x 2 routers) mapping over the wire:");
+    println!("  map: {}", resp.get("map").unwrap().to_string());
+
     // The trace endpoint: recent span trees (non-empty whenever a
     // profiled request ran or the global recorder is on) plus the metrics
     // registry snapshot.

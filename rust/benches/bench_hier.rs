@@ -30,12 +30,13 @@ fn allocator(ranks_per_node: usize) -> SparseAllocator {
 }
 
 fn hier_cfg(threads: usize) -> HierConfig {
-    HierConfig {
+    let mut cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 4 },
         max_rotations: ROT,
-        threads,
         ..HierConfig::default()
-    }
+    };
+    cfg.spec.threads = threads;
+    cfg
 }
 
 /// Record flat-vs-hier quality (WeightedHops and Data(M) ratios, hier/flat:

@@ -33,20 +33,20 @@ fn allocator(ranks_per_node: usize) -> SparseAllocator {
 }
 
 fn cfg(threads: usize, numa: Option<NumaTopology>) -> HierConfig {
-    HierConfig {
+    let mut cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 4 },
         max_rotations: ROT,
-        threads,
-        numa,
         ..HierConfig::default()
-    }
+    };
+    cfg.spec.threads = threads;
+    cfg.spec.numa = numa;
+    cfg
 }
 
 fn blended_cfg(threads: usize, topo: NumaTopology) -> HierConfig {
-    HierConfig {
-        objective: ObjectiveKind::MaxLinkLoad,
-        ..cfg(threads, Some(topo))
-    }
+    let mut cfg = cfg(threads, Some(topo));
+    cfg.spec.objective = ObjectiveKind::MaxLinkLoad;
+    cfg
 }
 
 /// Record blended-vs-WeightedHops depth-3 quality: NumaAware-value and

@@ -22,13 +22,14 @@ use taskmap::testutil::bench::{bench, bench_quick, BenchRecorder};
 const ROT: usize = 12;
 
 fn hier_cfg(threads: usize, objective: ObjectiveKind) -> HierConfig {
-    HierConfig {
+    let mut cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 4 },
         max_rotations: ROT,
-        threads,
-        objective,
         ..HierConfig::default()
-    }
+    };
+    cfg.spec.threads = threads;
+    cfg.spec.objective = objective;
+    cfg
 }
 
 fn main() {
@@ -104,10 +105,8 @@ fn main() {
     // plain maxload run.
     let topo = NumaTopology::xk7();
     for &threads in thread_counts {
-        let cfg = HierConfig {
-            numa: Some(topo),
-            ..hier_cfg(threads, ObjectiveKind::MaxLinkLoad)
-        };
+        let mut cfg = hier_cfg(threads, ObjectiveKind::MaxLinkLoad);
+        cfg.spec.numa = Some(topo);
         let name = format!(
             "objective_map/maxload_numa/tasks={}/threads={threads}{suffix}",
             mg.num_tasks()
@@ -125,16 +124,9 @@ fn main() {
             &hier_cfg(0, ObjectiveKind::MaxLinkLoad),
             &NativeBackend,
         );
-        let blended = map_hierarchical(
-            &graph,
-            &graph.coords,
-            &alloc,
-            &HierConfig {
-                numa: Some(topo),
-                ..hier_cfg(0, ObjectiveKind::MaxLinkLoad)
-            },
-            &NativeBackend,
-        );
+        let mut blended_cfg = hier_cfg(0, ObjectiveKind::MaxLinkLoad);
+        blended_cfg.spec.numa = Some(topo);
+        let blended = map_hierarchical(&graph, &graph.coords, &alloc, &blended_cfg, &NativeBackend);
         let lat = |m: &[u32]| eval_full(&graph, m, &alloc).link.unwrap().max_latency;
         let (lp, lb) = (lat(&plain.task_to_rank), lat(&blended.task_to_rank));
         let lat_ratio = if lp > 0.0 { lb / lp } else { 1.0 };

@@ -32,12 +32,12 @@ fn main() {
         occupancy: 0.4,
     }
     .allocate(mg.num_tasks() / rpn, 42);
-    let cfg = HierConfig {
+    let mut cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 4 },
         max_rotations: if smoke { 4 } else { 12 },
-        threads: 2,
         ..HierConfig::default()
     };
+    cfg.spec.threads = 2;
     let tasks = mg.num_tasks();
     let mut run = || map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
 

@@ -64,7 +64,7 @@ fn main() {
     let g = stencil_graph(&[16, 16, 16], false, 1.0);
     let torus = Torus::torus(&[16, 16, 16]);
     let alloc = Allocation {
-        torus,
+        machine: torus.into(),
         core_router: (0..4096u32).collect(),
         core_node: (0..4096u32).collect(),
         ranks_per_node: 1,
@@ -72,11 +72,11 @@ fn main() {
     let p = alloc.proc_coords();
     let mut sweep_ns: Vec<(usize, f64)> = Vec::new();
     for threads in THREAD_COUNTS {
-        let sweep = SweepConfig {
+        let mut sweep = SweepConfig {
             max_candidates: 12,
-            threads,
             ..Default::default()
         };
+        sweep.spec.threads = threads;
         let result = bench_quick(
             &format!("rotation_sweep/tasks=4096/candidates=12/threads={threads}"),
             || {

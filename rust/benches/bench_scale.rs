@@ -41,7 +41,7 @@ fn dense_alloc(sizes: &[usize]) -> Allocation {
         }
     }
     Allocation {
-        torus,
+        machine: torus.into(),
         core_router,
         core_node,
         ranks_per_node: RANKS_PER_NODE,
@@ -80,13 +80,11 @@ fn main() {
             max_rotations: 4,
             ..HierConfig::default()
         };
-        let vcfg = HierConfig {
-            coarsen: Some(CoarsenConfig {
-                target_tasks: target,
-                ..CoarsenConfig::default()
-            }),
-            ..base.clone()
-        };
+        let mut vcfg = base.clone();
+        vcfg.spec.coarsen = Some(CoarsenConfig {
+            target_tasks: target,
+            ..CoarsenConfig::default()
+        });
         let t0 = Instant::now();
         let vm = map_hierarchical(&g, &g.coords, &alloc, &vcfg, &NativeBackend);
         let v_ms = t0.elapsed().as_secs_f64() * 1e3;

@@ -1,0 +1,122 @@
+//! Bench: the non-torus topologies behind the [`Topology`] trait — the
+//! hierarchical mapper end to end on a fat-tree and a dragonfly.
+//!
+//! Each case maps a 3D stencil task graph onto a dense allocation (one
+//! rank per router) of the target network: wall-time rows across thread
+//! budgets plus a quality row (mapped / default-order WeightedHops, < 1.0
+//! means the geometric sweep beat the identity placement under that
+//! network's own distance model). Results append to `BENCH_mapping.json`
+//! under `topology/...` (override the path with `TASKMAP_BENCH_OUT`).
+//!
+//! `--smoke` runs miniature cases recorded under `.../smoke` names so they
+//! never clobber the full trajectory rows.
+
+use taskmap::apps::stencil::stencil_graph;
+use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+use taskmap::machine::{Allocation, Dragonfly, FatTree, Network, Topology};
+use taskmap::mapping::rotations::NativeBackend;
+use taskmap::metrics::eval_hops;
+use taskmap::testutil::bench::{bench_quick, BenchRecorder};
+
+/// Dense bijective allocation: one node of one rank per router.
+fn dense_alloc(machine: Network) -> Allocation {
+    let n = machine.num_routers();
+    Allocation {
+        machine,
+        core_router: (0..n as u32).collect(),
+        core_node: (0..n as u32).collect(),
+        ranks_per_node: 1,
+    }
+}
+
+fn run_case(
+    rec: &mut BenchRecorder,
+    tag: &str,
+    suffix: &str,
+    thread_counts: &[usize],
+    tdims: &[usize; 3],
+    machine: Network,
+) {
+    let g = stencil_graph(tdims, false, 1.0);
+    let alloc = dense_alloc(machine);
+    assert_eq!(alloc.num_ranks(), g.num_tasks, "case must be a bijection");
+    for &threads in thread_counts {
+        let mut cfg = HierConfig {
+            intra: IntraNodeStrategy::MinVolume { passes: 2 },
+            max_rotations: 8,
+            ..HierConfig::default()
+        };
+        cfg.spec.threads = threads;
+        let name = format!(
+            "topology/{tag}/tasks={}/threads={threads}{suffix}",
+            g.num_tasks
+        );
+        let result = bench_quick(&name, || {
+            map_hierarchical(&g, &g.coords, &alloc, &cfg, &NativeBackend)
+        });
+        rec.record(&result, &[("threads", threads as f64)]);
+    }
+    let mut cfg = HierConfig {
+        intra: IntraNodeStrategy::MinVolume { passes: 2 },
+        max_rotations: 8,
+        ..HierConfig::default()
+    };
+    cfg.spec.threads = 1;
+    let mapped = map_hierarchical(&g, &g.coords, &alloc, &cfg, &NativeBackend);
+    let identity: Vec<u32> = (0..g.num_tasks as u32).collect();
+    let wh_mapped = eval_hops(&g, &mapped.task_to_rank, &alloc).weighted_hops;
+    let wh_default = eval_hops(&g, &identity, &alloc).weighted_hops;
+    let ratio = if wh_default > 0.0 {
+        wh_mapped / wh_default
+    } else {
+        1.0
+    };
+    println!("{tag}: mapped/default WeightedHops {ratio:.4} ({wh_mapped:.0}/{wh_default:.0})");
+    rec.record_scalar(
+        &format!("topology/{tag}/quality{suffix}"),
+        "mapped_over_default_whops",
+        ratio,
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rec = BenchRecorder::open("BENCH_mapping.json");
+    let suffix = if smoke { "/smoke" } else { "" };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    println!("== non-torus topologies (fat-tree / dragonfly) ==");
+
+    // Fat-tree: radix-4 leaves match the stencil task count exactly.
+    let (ft, ft_dims): (FatTree, [usize; 3]) = if smoke {
+        (FatTree::new(3, 4), [4, 4, 4]) // 64 leaves
+    } else {
+        (FatTree::new(5, 4), [16, 8, 8]) // 1024 leaves
+    };
+    run_case(
+        &mut rec,
+        "fattree",
+        suffix,
+        thread_counts,
+        &ft_dims,
+        ft.into(),
+    );
+
+    // Dragonfly: groups x routers/group bijective with the same graphs.
+    let (df, df_dims): (Dragonfly, [usize; 3]) = if smoke {
+        (Dragonfly::new(8, 8, 1), [4, 4, 4]) // 64 routers
+    } else {
+        (Dragonfly::new(32, 32, 1), [16, 8, 8]) // 1024 routers
+    };
+    run_case(
+        &mut rec,
+        "dragonfly",
+        suffix,
+        thread_counts,
+        &df_dims,
+        df.into(),
+    );
+
+    if let Err(e) = rec.write() {
+        eprintln!("failed to write bench trajectory: {e}");
+    }
+}

@@ -59,7 +59,7 @@ fn run_case(
         graph,
         &mut refined,
         &alloc.node_routers(),
-        &alloc.torus,
+        &alloc.machine,
         PASSES,
         par,
     );

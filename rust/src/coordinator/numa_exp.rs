@@ -70,12 +70,15 @@ fn run_case(
     alloc: &Allocation,
     topo: NumaTopology,
 ) {
-    let mk = |numa: Option<NumaTopology>, objective: ObjectiveKind| HierConfig {
-        intra: IntraNodeStrategy::MinVolume { passes: PASSES },
-        max_rotations: ROT,
-        numa,
-        objective,
-        ..HierConfig::default()
+    let mk = |numa: Option<NumaTopology>, objective: ObjectiveKind| {
+        let mut cfg = HierConfig {
+            intra: IntraNodeStrategy::MinVolume { passes: PASSES },
+            max_rotations: ROT,
+            ..HierConfig::default()
+        };
+        cfg.spec.numa = numa;
+        cfg.spec.objective = objective;
+        cfg
     };
     let runs = [
         ("depth-2", "whops", mk(None, ObjectiveKind::WeightedHops)),

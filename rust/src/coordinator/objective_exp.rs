@@ -60,19 +60,19 @@ fn run_case(
                 "flat" => {
                     let mut cfg = Z2Config::z2_1();
                     cfg.max_rotations = ROT;
-                    cfg.objective = kind;
+                    cfg.spec.objective = kind;
                     (z2_map(graph, tcoords, alloc, &cfg, ctx.backend()), None)
                 }
                 _ => {
-                    let cfg = HierConfig {
+                    let mut cfg = HierConfig {
                         intra: IntraNodeStrategy::MinVolume { passes: PASSES },
                         max_rotations: ROT,
-                        objective: kind,
-                        // "hier-numa": depth 3 under the XK7 node model —
-                        // the routed rows run the blended evaluator.
-                        numa: (strategy == "hier-numa").then(NumaTopology::xk7),
                         ..HierConfig::default()
                     };
+                    cfg.spec.objective = kind;
+                    // "hier-numa": depth 3 under the XK7 node model —
+                    // the routed rows run the blended evaluator.
+                    cfg.spec.numa = (strategy == "hier-numa").then(NumaTopology::xk7);
                     let m = map_hierarchical(graph, tcoords, alloc, &cfg, ctx.backend());
                     (m.task_to_rank, Some(m.swaps_applied))
                 }

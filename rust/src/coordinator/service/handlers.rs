@@ -21,7 +21,7 @@ use crate::apps::{Edge, TaskGraph};
 use crate::coarsen::{CoarsenConfig, MatchingKind};
 use crate::geom::Coords;
 use crate::hier::{map_hierarchical_budgeted, HierConfig, IntraNodeStrategy};
-use crate::machine::{Allocation, NumaTopology, Torus};
+use crate::machine::{Allocation, Dragonfly, FatTree, Network, NumaTopology, Topology, Torus};
 use crate::mapping::rotations::NativeBackend;
 use crate::mapping::{map_tasks, MapConfig};
 use crate::metrics::eval_full;
@@ -59,11 +59,11 @@ impl Default for RequestCtx {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective", "numa", "bgq", "coarsen", "profile",
+    "hier", "objective", "numa", "bgq", "coarsen", "profile", "topology",
 ];
 const EVAL_FIELDS: &[&str] = &[
     "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
-    "profile",
+    "profile", "topology",
 ];
 const STATS_FIELDS: &[&str] = &["op"];
 const TRACE_FIELDS: &[&str] = &["op"];
@@ -77,6 +77,14 @@ const NUMA_FIELDS: &[&str] = &[
 ];
 const BGQ_FIELDS: &[&str] = &["block", "ranks_per_node", "order"];
 const COARSEN_FIELDS: &[&str] = &["target_tasks", "max_levels", "matching"];
+const FATTREE_FIELDS: &[&str] = &["levels", "radix"];
+const DRAGONFLY_FIELDS: &[&str] = &[
+    "groups",
+    "routers_per_group",
+    "terminals_per_router",
+    "global_cost",
+    "valiant",
+];
 
 /// Keep service-built BG/Q blocks to a sane size: the block is expanded
 /// into per-rank tables, so an enormous request would balloon memory
@@ -351,6 +359,106 @@ fn parse_coarsen(req: &Json) -> Result<Option<CoarsenConfig>, Json> {
     Ok(Some(cfg))
 }
 
+/// Parse an optional `"topology"` field with strict validation. `"torus"`
+/// (the default) returns `None` — router coordinates keep coming from
+/// `pcoords` plus the optional `"torus"` size array exactly as before. A
+/// one-key object selects a non-torus network:
+/// `{"fattree":{"levels":L,"radix":K}}` or
+/// `{"dragonfly":{"groups":G,"routers_per_group":R,...}}`. Router and
+/// directed-link counts are capped like torus volumes — the routed
+/// per-link tables scale the same way.
+fn parse_topology(req: &Json) -> Result<Option<Network>, Json> {
+    let v = match req.get("topology") {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    match v {
+        Json::Str(name) if name == "torus" => return Ok(None),
+        Json::Obj(m) if m.len() == 1 => {}
+        Json::Obj(_) => {
+            return Err(err(
+                "topology object must have exactly one key (fattree|dragonfly)",
+            ))
+        }
+        _ => return Err(err("topology must be \"torus\" or a fattree/dragonfly object")),
+    }
+    if let Some(ft) = v.get("fattree") {
+        if !matches!(ft, Json::Obj(_)) {
+            return Err(err("topology.fattree must be an object"));
+        }
+        if let Some(e) = check_fields(ft, FATTREE_FIELDS, "topology.fattree") {
+            return Err(e);
+        }
+        let levels = match ft.get("levels").map(as_index) {
+            Some(Some(l)) if l >= 1 => l,
+            _ => return Err(err("fattree.levels must be an integer >= 1")),
+        };
+        let radix = match ft.get("radix").map(as_index) {
+            Some(Some(r)) if r >= 2 => r,
+            _ => return Err(err("fattree.radix must be an integer >= 2")),
+        };
+        // radix^levels leaves, checked: overflow must not bypass the cap.
+        let leaves = (0..levels)
+            .try_fold(1usize, |acc, _| acc.checked_mul(radix))
+            .filter(|&n| n <= MAX_TORUS_ROUTERS);
+        if leaves.is_none() {
+            return Err(err(&format!(
+                "fattree exceeds the service limit of {MAX_TORUS_ROUTERS} routers"
+            )));
+        }
+        return Ok(Some(FatTree::new(levels, radix).into()));
+    }
+    if let Some(df) = v.get("dragonfly") {
+        if !matches!(df, Json::Obj(_)) {
+            return Err(err("topology.dragonfly must be an object"));
+        }
+        if let Some(e) = check_fields(df, DRAGONFLY_FIELDS, "topology.dragonfly") {
+            return Err(e);
+        }
+        let groups = match df.get("groups").map(as_index) {
+            Some(Some(g)) if g >= 1 => g,
+            _ => return Err(err("dragonfly.groups must be an integer >= 1")),
+        };
+        let rpg = match df.get("routers_per_group").map(as_index) {
+            Some(Some(r)) if r >= 1 => r,
+            _ => return Err(err("dragonfly.routers_per_group must be an integer >= 1")),
+        };
+        let tpr = match df.get("terminals_per_router").map(as_index) {
+            None => 1,
+            Some(Some(t)) if t >= 1 => t,
+            _ => return Err(err("dragonfly.terminals_per_router must be an integer >= 1")),
+        };
+        let global_cost = match df.get("global_cost").map(as_index) {
+            None => 2,
+            Some(Some(c)) if c >= 1 => c as u64,
+            _ => return Err(err("dragonfly.global_cost must be an integer >= 1")),
+        };
+        let valiant = match parse_bool(df, "valiant", false) {
+            Ok(b) => b,
+            Err(_) => return Err(err("dragonfly.valiant must be a boolean")),
+        };
+        // Cap routers AND the dense port table (routers x (R + G) directed
+        // link slots), checked: overflow must not bypass either cap.
+        let ok = groups
+            .checked_mul(rpg)
+            .filter(|&n| n <= MAX_TORUS_ROUTERS)
+            .and_then(|n| n.checked_mul(rpg + groups))
+            .filter(|&slots| slots <= 8 * MAX_TORUS_ROUTERS);
+        if ok.is_none() {
+            return Err(err(&format!(
+                "dragonfly exceeds the service limit of {MAX_TORUS_ROUTERS} routers"
+            )));
+        }
+        return Ok(Some(
+            Dragonfly::new(groups, rpg, tpr)
+                .with_global_cost(global_cost)
+                .with_valiant(valiant)
+                .into(),
+        ));
+    }
+    Err(err("topology object key must be fattree or dragonfly"))
+}
+
 /// Parse an optional top-level `"objective"` with strict validation.
 fn parse_objective(req: &Json) -> Result<ObjectiveKind, Json> {
     match req.get("objective") {
@@ -506,14 +614,61 @@ fn parse_edges(v: &Json, num_tasks: usize) -> Result<Vec<Edge>, String> {
 /// Build an `Allocation` from per-rank integer router coordinates
 /// (`pcoords`), an optional explicit `"torus"` size array, and
 /// `ranks_per_node` (consecutive ranks share a node). Used by the
-/// hierarchical map extension and `op:eval`.
-fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Allocation, String> {
+/// hierarchical map extension and `op:eval`. With a non-torus `topology`
+/// the coordinate columns are the network's external router naming
+/// ([`Topology::coord_dim`]: fat-tree = `[leaf]`, dragonfly =
+/// `[group, router]`) resolved through [`Topology::router_of_coords`].
+fn parse_alloc(
+    pcoords: &Coords,
+    req: &Json,
+    ranks_per_node: usize,
+    topology: Option<Network>,
+) -> Result<Allocation, String> {
     let nranks = pcoords.len();
     let dim = pcoords.dim();
     if ranks_per_node == 0 || nranks % ranks_per_node != 0 {
         return Err(format!(
             "ranks_per_node {ranks_per_node} must divide the {nranks} ranks"
         ));
+    }
+    if let Some(net) = topology {
+        if req.get("torus").is_some() {
+            return Err(format!(
+                "a \"torus\" size array cannot combine with the {} topology",
+                net.kind_name()
+            ));
+        }
+        if dim != net.coord_dim() {
+            return Err(format!(
+                "{} pcoords need {} coordinate column(s), got {dim}",
+                net.kind_name(),
+                net.coord_dim()
+            ));
+        }
+        let mut core_router = Vec::with_capacity(nranks);
+        let mut buf = vec![0usize; dim];
+        for i in 0..nranks {
+            for (d, slot) in buf.iter_mut().enumerate() {
+                let v = pcoords.get(d, i);
+                let q = v.round();
+                if q < 0.0 || (q - v).abs() > 1e-9 || q >= 9e15 {
+                    return Err(format!(
+                        "pcoords[{i}][{d}] = {v} is not an integer router coordinate"
+                    ));
+                }
+                *slot = q as usize;
+            }
+            match net.router_of_coords(&buf) {
+                Some(id) => core_router.push(id as u32),
+                None => {
+                    return Err(format!(
+                        "pcoords[{i}] = {buf:?} does not name a {} router",
+                        net.kind_name()
+                    ))
+                }
+            }
+        }
+        return finish_alloc(net, core_router, nranks, ranks_per_node);
     }
     let sizes: Vec<usize> = match req.get("torus") {
         Some(v) => {
@@ -569,6 +724,17 @@ fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Al
         }
         core_router.push(torus.id_of(&buf) as u32);
     }
+    finish_alloc(torus.into(), core_router, nranks, ranks_per_node)
+}
+
+/// Node-grouping invariant check + `Allocation` assembly shared by the
+/// torus and non-torus arms of [`parse_alloc`].
+fn finish_alloc(
+    machine: Network,
+    core_router: Vec<u32>,
+    nranks: usize,
+    ranks_per_node: usize,
+) -> Result<Allocation, String> {
     // The Allocation invariant (and what makes intra-node edges free): all
     // ranks of a node sit on one router. Reject inconsistent groupings
     // instead of silently zeroing real network traffic.
@@ -585,7 +751,7 @@ fn parse_alloc(pcoords: &Coords, req: &Json, ranks_per_node: usize) -> Result<Al
     }
     let core_node: Vec<u32> = (0..nranks).map(|i| (i / ranks_per_node) as u32).collect();
     Ok(Allocation {
-        torus,
+        machine,
         core_router,
         core_node,
         ranks_per_node,
@@ -605,6 +771,10 @@ fn handle_map_hier(
     objective: ObjectiveKind,
     ctx: &RequestCtx,
 ) -> Json {
+    let topology = match parse_topology(req) {
+        Ok(t) => t,
+        Err(e) => return e,
+    };
     let alloc = match parse_bgq(req) {
         Err(e) => return e,
         Ok(Some(a)) => {
@@ -612,6 +782,9 @@ fn handle_map_hier(
             // the same information could silently disagree with it.
             if pcoords.is_some() || req.get("torus").is_some() {
                 return err("bgq replaces pcoords/torus (the block defines the allocation)");
+            }
+            if topology.is_some() {
+                return err("bgq defines a torus allocation; it cannot combine with topology");
             }
             if hier.get("ranks_per_node").is_some() {
                 return err("bgq.ranks_per_node replaces hier.ranks_per_node");
@@ -627,7 +800,7 @@ fn handle_map_hier(
             let Some(pcoords) = pcoords else {
                 return err("missing pcoords");
             };
-            match parse_alloc(pcoords, req, rpn) {
+            match parse_alloc(pcoords, req, rpn, topology) {
                 Ok(a) => a,
                 Err(e) => return err(&format!("hier: {e}")),
             }
@@ -647,11 +820,11 @@ fn handle_map_hier(
     };
     let mut cfg = HierConfig {
         node_map: map_cfg,
-        objective,
-        numa,
-        coarsen,
         ..HierConfig::default()
     };
+    cfg.spec.objective = objective;
+    cfg.spec.numa = numa;
+    cfg.spec.coarsen = coarsen;
     if let Some(s) = hier.get("strategy") {
         match s.as_str().and_then(IntraNodeStrategy::parse) {
             Some(intra) => cfg.intra = intra,
@@ -687,7 +860,7 @@ fn handle_map_hier(
         // objective — reject the silent no-op, same policy as the flat op.
         return err("a routed objective requires a non-empty \"edges\" array");
     }
-    if cfg.coarsen.is_some() && edges.is_empty() {
+    if cfg.spec.coarsen.is_some() && edges.is_empty() {
         // Matching contracts edges; with none, the V-cycle would silently
         // degrade to the direct sweep. Reject the no-op instead.
         return err("coarsen requires a non-empty \"edges\" array (matching contracts edges)");
@@ -737,6 +910,7 @@ fn handle_map_hier(
         ("objective", Json::Str(objective.name().into())),
         ("objective_value", Json::Num(objective_value)),
         ("max_link_load", Json::Num(lm.max_latency)),
+        ("topology", Json::Str(alloc.machine.kind_name().into())),
     ];
     if !m.coarsen_levels.is_empty() {
         // Per-level coarse task counts, finest first — how the V-cycle
@@ -781,6 +955,10 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
     if mapping.is_empty() {
         return err("empty map");
     }
+    let topology = match parse_topology(req) {
+        Ok(t) => t,
+        Err(e) => return e,
+    };
     let alloc = match parse_bgq(req) {
         Err(e) => return e,
         Ok(Some(a)) => {
@@ -789,6 +967,9 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
                 || req.get("ranks_per_node").is_some()
             {
                 return err("bgq replaces pcoords/torus/ranks_per_node");
+            }
+            if topology.is_some() {
+                return err("bgq defines a torus allocation; it cannot combine with topology");
             }
             a
         }
@@ -803,7 +984,7 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
                 Some(None) => return err("ranks_per_node must be a positive integer"),
                 None => 1,
             };
-            match parse_alloc(&pcoords, req, rpn) {
+            match parse_alloc(&pcoords, req, rpn, topology) {
                 Ok(a) => a,
                 Err(e) => return err(&e),
             }
@@ -865,6 +1046,7 @@ fn handle_eval(req: &Json, ctx: &RequestCtx) -> Json {
         ("max_link_load", Json::Num(lm.max_latency)),
         ("objective", Json::Str(objective.name().into())),
         ("objective_value", Json::Num(objective_value)),
+        ("topology", Json::Str(alloc.machine.kind_name().into())),
     ];
     if let Some((_, nm)) = &nm {
         fields.push(("numa_value", Json::Num(nm.value)));
@@ -948,6 +1130,11 @@ fn handle_map(req: &Json, ctx: &RequestCtx) -> Json {
         // The V-cycle runs in front of the node-level sweep; the flat op
         // has no sweep to accelerate, so the knob would be a silent no-op.
         return err("coarsen requires \"hier\" (the V-cycle fronts the node-level sweep)");
+    }
+    if req.get("topology").is_some() {
+        // The flat op partitions pcoords as raw geometry — no network model
+        // is consulted, so a topology selection would be a silent no-op.
+        return err("topology requires \"hier\" (the flat map op partitions pcoords directly)");
     }
     let Some(pcoords) = pcoords else {
         return err("missing pcoords");
@@ -1660,6 +1847,175 @@ mod tests {
                 "bgq":{"block":[2,2,2,2,2],"ranks_per_node":0}}"#,
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn topology_fattree_maps_and_evals_end_to_end() {
+        // 8 leaves of a 3-level binary fat-tree, one rank per leaf; a chain
+        // of 8 tasks must come back as a bijection with the topology named.
+        let tcoords: Vec<String> = (0..8).map(|i| format!("[{i}]")).collect();
+        let pcoords: Vec<String> = (0..8).map(|i| format!("[{i}]")).collect();
+        let edges: Vec<String> = (0..7).map(|i| format!("[{i},{}]", i + 1)).collect();
+        let resp = handle_request(&format!(
+            r#"{{"op":"map","tcoords":[{}],"pcoords":[{}],"edges":[{}],
+                 "topology":{{"fattree":{{"levels":3,"radix":2}}}},
+                 "hier":{{"ranks_per_node":1,"strategy":"minvol","rotations":2}}}}"#,
+            tcoords.join(","),
+            pcoords.join(","),
+            edges.join(","),
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("topology").and_then(|v| v.as_str()), Some("fattree"));
+        let mut m: Vec<usize> = resp
+            .get("map")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        m.sort_unstable();
+        assert_eq!(m, (0..8).collect::<Vec<_>>());
+        // eval prices hops as 2 x (levels above the NCA): leaves 0,1 are
+        // siblings (2 hops), leaves 1,2 meet at the level-1 switch (4).
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1,2,3],
+                "edges":[[0,1,5.0],[1,2,3.0]],
+                "pcoords":[[0],[1],[2],[3]],
+                "topology":{"fattree":{"levels":2,"radix":2}}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("topology").and_then(|v| v.as_str()), Some("fattree"));
+        assert_eq!(
+            resp.get("weighted_hops").and_then(|v| v.as_f64()),
+            Some(5.0 * 2.0 + 3.0 * 4.0)
+        );
+    }
+
+    #[test]
+    fn topology_dragonfly_maps_and_evals_end_to_end() {
+        // 2 groups x 2 routers, pcoords are (group, router) pairs. Edge
+        // (0,1) is one local hop; edge (1,2) crosses groups between the two
+        // gateway-adjacent routers: exactly the global hop.
+        let base = r#""map":[0,1,2,3],"edges":[[0,1,5.0],[1,2,3.0]],
+                      "pcoords":[[0,0],[0,1],[1,0],[1,1]]"#;
+        let resp = handle_request(&format!(
+            r#"{{"op":"eval",{base},
+                 "topology":{{"dragonfly":{{"groups":2,"routers_per_group":2}}}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(
+            resp.get("topology").and_then(|v| v.as_str()),
+            Some("dragonfly")
+        );
+        // Default global_cost 2: 5*1 + 3*2.
+        assert_eq!(resp.get("weighted_hops").and_then(|v| v.as_f64()), Some(11.0));
+        // global_cost 1 reprices the global hop.
+        let resp = handle_request(&format!(
+            r#"{{"op":"eval",{base},
+                 "topology":{{"dragonfly":{{"groups":2,"routers_per_group":2,
+                                            "global_cost":1}}}}}}"#
+        ));
+        assert_eq!(resp.get("weighted_hops").and_then(|v| v.as_f64()), Some(8.0));
+        // A hierarchical map under a routed objective runs end to end on
+        // the valiant path set.
+        let tcoords: Vec<String> = (0..8).map(|i| format!("[{i}]")).collect();
+        let pcoords: Vec<String> = (0..8)
+            .map(|i| format!("[{},{}]", i / 2, (i / 2) % 2))
+            .collect();
+        let edges: Vec<String> = (0..7).map(|i| format!("[{i},{}]", i + 1)).collect();
+        let resp = handle_request(&format!(
+            r#"{{"op":"map","tcoords":[{}],"pcoords":[{}],"edges":[{}],
+                 "objective":"maxload",
+                 "topology":{{"dragonfly":{{"groups":4,"routers_per_group":2,
+                                            "valiant":true}}}},
+                 "hier":{{"ranks_per_node":2,"strategy":"minvol","rotations":2}}}}"#,
+            tcoords.join(","),
+            pcoords.join(","),
+            edges.join(","),
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(
+            resp.get("topology").and_then(|v| v.as_str()),
+            Some("dragonfly")
+        );
+        let mut m: Vec<usize> = resp
+            .get("map")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        m.sort_unstable();
+        assert_eq!(m, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn topology_field_validated_strictly() {
+        let base = r#""tcoords":[[0],[1],[2],[3]],"edges":[[0,1],[1,2],[2,3]]"#;
+        // The default spelling is accepted and changes nothing.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"pcoords":[[0],[0],[1],[1]],"topology":"torus",
+                 "hier":{{"ranks_per_node":2}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("topology").and_then(|v| v.as_str()), Some("torus"));
+        // Structured errors: unknown family, two keys, unknown sub-field,
+        // bad knob values, wrong value type.
+        for topology in [
+            r#""hypercube""#,
+            r#"{"fattree":{"levels":2,"radix":2},"dragonfly":{"groups":2,"routers_per_group":1}}"#,
+            r#"{"fattree":{"levels":2,"radix":2,"bw":3}}"#,
+            r#"{"fattree":{"levels":0,"radix":2}}"#,
+            r#"{"fattree":{"levels":2,"radix":1}}"#,
+            r#"{"fattree":{"levels":40,"radix":16}}"#,
+            r#"{"dragonfly":{"groups":0,"routers_per_group":2}}"#,
+            r#"{"dragonfly":{"groups":2,"routers_per_group":2,"global_cost":0}}"#,
+            r#"{"dragonfly":{"groups":2,"routers_per_group":2,"valiant":1}}"#,
+            r#"{"dragonfly":{"groups":100000,"routers_per_group":100000}}"#,
+            r#"7"#,
+        ] {
+            let resp = handle_request(&format!(
+                r#"{{"op":"map",{base},"pcoords":[[0],[1],[2],[3]],"topology":{topology},
+                     "hier":{{"ranks_per_node":1}}}}"#
+            ));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{topology}: {resp:?}");
+        }
+        // topology without hier on map: error, not a silent no-op.
+        let resp = handle_request(&format!(
+            r#"{{"op":"map",{base},"pcoords":[[0],[1],[2],[3]],
+                 "topology":{{"fattree":{{"levels":2,"radix":2}}}}}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(emsg(&resp).contains("hier"), "{resp:?}");
+        // A "torus" size array cannot combine with a non-torus topology.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[1]],
+                "torus":[4],"topology":{"fattree":{"levels":2,"radix":2}}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        // Nor can a bgq block.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],
+                "bgq":{"block":[2,2,2,2,2],"ranks_per_node":2},
+                "topology":{"fattree":{"levels":2,"radix":2}}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        // Coordinate arity follows the topology: a fat-tree leaf is one
+        // column, a dragonfly router two.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0,0],[1,1]],
+                "topology":{"fattree":{"levels":2,"radix":2}}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        // Out-of-range router names are rejected, not wrapped.
+        let resp = handle_request(
+            r#"{"op":"eval","map":[0,1],"edges":[[0,1]],"pcoords":[[0],[4]],
+                "topology":{"fattree":{"levels":2,"radix":2}}}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(emsg(&resp).contains("router"), "{resp:?}");
     }
 
     #[test]

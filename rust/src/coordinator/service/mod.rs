@@ -92,12 +92,69 @@
 //! structured validation error — previously that letter panicked deep in
 //! `machine::rank_order` and crashed the process.
 //!
+//! **Topologies** — `"map"` (hierarchical mode) and `"eval"` accept a
+//! `"topology"` field selecting the network model behind the allocation
+//! (see [`crate::machine::Topology`]). `"torus"` (the default) keeps the
+//! torus/mesh path; `{"fattree":{...}}` and `{"dragonfly":{...}}` switch
+//! the distance/routing model and the meaning of `pcoords`: a fat-tree
+//! rank is named by its leaf index (one coordinate column), a dragonfly
+//! rank by its `[group, router]` pair (two columns). A `"torus"` size
+//! array or a `"bgq"` block cannot combine with a non-torus topology, and
+//! on `"map"` a topology requires `"hier"` (the flat op partitions
+//! `pcoords` as raw geometry — no network model is consulted). Responses
+//! echo the resolved kind as `"topology"`.
+//!
 //! **Validation is strict**: unknown or malformed fields — top-level or
-//! inside `"hier"`/`"numa"`/`"bgq"` — return a structured error instead of
-//! being silently ignored, so a typo like `"objectiv"` can never quietly
-//! change what a production mapping run optimizes. In the same spirit,
-//! `ranks_per_node` must divide the rank count exactly (the library's
-//! [`crate::machine::AllocError`] policy: no silent node truncation).
+//! inside `"hier"`/`"numa"`/`"bgq"`/`"topology"` — return a structured
+//! error instead of being silently ignored, so a typo like `"objectiv"`
+//! can never quietly change what a production mapping run optimizes. In
+//! the same spirit, `ranks_per_node` must divide the rank count exactly
+//! (the library's [`crate::machine::AllocError`] policy: no silent node
+//! truncation).
+//!
+//! # Request schema
+//!
+//! The full JSON surface, one row per field. "Ops" says where the field
+//! is accepted; any other placement (or any field not listed) is an
+//! `invalid_request` error. Ops with no fields beyond `"op"`: `"ping"`,
+//! `"stats"`, `"trace"`.
+//!
+//! | field                  | ops        | type / values                         | rules                                                       |
+//! |------------------------|------------|---------------------------------------|-------------------------------------------------------------|
+//! | `op`                   | all        | `"map"` `"eval"` `"ping"` `"stats"` `"trace"` | required                                            |
+//! | `tcoords`              | map        | array of equal-length float rows      | required; one row per task                                  |
+//! | `pcoords`              | map, eval  | array of equal-length rows            | flat map: floats (raw geometry). hier map / eval: integer router coordinates — torus axes, fat-tree `[leaf]`, dragonfly `[group, router]`; column count must match the topology; consecutive `ranks_per_node` rows must share a router |
+//! | `ordering`             | map (flat) | `"Z"` `"Gray"` `"FZ"` `"MFZ"` `"Hilbert"` | default `"FZ"`                                          |
+//! | `longest_dim`          | map (flat) | bool                                  | default false                                               |
+//! | `uneven_prime`         | map (flat) | bool                                  | default false                                               |
+//! | `edges`                | map, eval  | `[u, v]` or `[u, v, w]` rows          | task graph; indices in range, `w` finite ≥ 0. Required by `"coarsen"` and by scoring objectives |
+//! | `torus`                | map (hier), eval | array of positive sizes         | explicit torus extents (else per-axis max+1); torus topology only |
+//! | `topology`             | map (hier), eval | `"torus"` \| `{"fattree":{...}}` \| `{"dragonfly":{...}}` | exactly one family key; conflicts with `"torus"` array and `"bgq"`; flat map rejects it |
+//! | ├ `fattree.levels`     |            | int ≥ 1                               | required; `radix^levels` leaves, capped like torus routers  |
+//! | ├ `fattree.radix`      |            | int ≥ 2                               | required                                                    |
+//! | ├ `dragonfly.groups`   |            | int ≥ 1                               | required; `groups × routers_per_group` routers under the same cap |
+//! | ├ `dragonfly.routers_per_group` |   | int ≥ 1                               | required                                                    |
+//! | ├ `dragonfly.terminals_per_router` || int ≥ 1                               | default 1                                                   |
+//! | ├ `dragonfly.global_cost` |         | int ≥ 1                               | default 2; prices the global hop in distances               |
+//! | └ `dragonfly.valiant`  |            | bool                                  | default false; one-hop-Valiant routed load, minimal distances |
+//! | `hier`                 | map        | object                                | enables hierarchical mode                                   |
+//! | ├ `ranks_per_node`     |            | int ≥ 1                               | must divide the rank count                                  |
+//! | ├ `strategy`           |            | `"default"` `"sfc"` `"minvol"`        | intra-node placement / refinement                           |
+//! | ├ `passes`             |            | int ≥ 0                               | `minvol` refinement passes (default 2)                      |
+//! | └ `rotations`          |            | int ≥ 1                               | node-level sweep rotation budget                            |
+//! | `ranks_per_node`       | eval       | int ≥ 1                               | top-level on eval (no `"hier"` object there)                |
+//! | `objective`            | map (hier), eval | `"whops"` `"maxload"` `"blend"` | flat map rejects a non-default objective                    |
+//! | `numa`                 | map (hier), eval | `"xk7"` \| `"bgq"` \| object    | object keys: `sockets_per_node`, `ranks_per_socket`, `socket_cost`, `core_cost`, `hop_cost`; grid must tile `ranks_per_node` |
+//! | `bgq`                  | map (hier), eval | `{"block":[a,b,c,d,e], "ranks_per_node":T, "order":"ABCDET"}` | replaces `pcoords`/`torus`/`ranks_per_node`; conflicts with `"topology"` |
+//! | `coarsen`              | map (hier) | `{"target_tasks":N, "max_levels":L, "matching":"heavy_edge"\|"geometric"}` | all optional; needs non-empty `"edges"`  |
+//! | `profile`              | map, eval  | bool                                  | attach `"trace_id"` + per-phase `"profile"` breakdown       |
+//!
+//! Success responses: `map` → `"map"` (+ `"nodes"`, `"sockets"`,
+//! `"socket_swaps"`, `"coarsen_levels"`, `"topology"` when applicable);
+//! `eval` → the Section 3 metrics (`"total_hops"`, `"weighted_hops"`,
+//! `"avg_hops"`, `"max_hops"`, link metrics) plus `"objective_value"`,
+//! `"max_link_load"`, NUMA breakdown, and `"topology"` as requested.
+//! Failures use the error taxonomy below.
 //!
 //! # Request pipeline
 //!

@@ -122,7 +122,7 @@ pub fn average_hops_cell(
     };
     let n = torus.num_routers();
     let alloc = Allocation {
-        torus,
+        machine: torus.into(),
         core_router: (0..n as u32).collect(),
         core_node: (0..n as u32).collect(),
         ranks_per_node: 1,

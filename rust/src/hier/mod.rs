@@ -25,7 +25,7 @@
 //!    greedy boundary-task swaps ([`refine`]) directly minimize the
 //!    inter-node weighted communication volume the geometric cut only
 //!    bounds implicitly (under the NUMA pricing when configured).
-//! 3. **Socket level** (depth 3, only with [`HierConfig::numa`]) — inside
+//! 3. **Socket level** (depth 3, only with [`MapSpec::numa`]) — inside
 //!    each node, a sized geometric bisection ([`socket::split_sockets`])
 //!    cuts the node's tasks across its NUMA domains, `MinVolume` runs a
 //!    cross-socket swap refinement ([`socket::refine_sockets`]) on the
@@ -37,7 +37,7 @@
 //!    (cheap cache locality; network metrics are unaffected by
 //!    construction).
 //!
-//! With [`HierConfig::coarsen`] set, the node level runs as a **multilevel
+//! With [`MapSpec::coarsen`] set, the node level runs as a **multilevel
 //! V-cycle** ([`crate::coarsen`]): matched task pairs collapse into
 //! supertasks (summed weights, weight-averaged coordinates) until the
 //! graph fits the size budget — never below the node count, so the coarse
@@ -79,10 +79,10 @@ pub mod socket;
 use crate::apps::TaskGraph;
 use crate::coarsen::{self, CoarsenConfig};
 use crate::geom::Coords;
-use crate::machine::{Allocation, NumaTopology, Torus};
+use crate::machine::{Allocation, NumaTopology, Topology};
 use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
-use crate::mapping::MapConfig;
+use crate::mapping::{MapConfig, MapSpec};
 use crate::objective::{build_eval, Adjacency, EvalSpec, IncrementalEval, ObjectiveKind};
 use crate::par::{self, Deadline, DeadlineExceeded, Parallelism};
 use crate::sfc::hilbert::hilbert_sort_f64_subset_into;
@@ -138,34 +138,14 @@ pub struct HierConfig {
     pub max_rotations: usize,
     /// Edge-chunk size for sweep scoring (see [`SweepConfig`]).
     pub chunk_edges: usize,
-    /// Worker threads: `0` = auto, `1` = the sequential reference path.
-    /// The mapping is bit-identical at every thread count.
-    pub threads: usize,
-    /// What the node-level sweep and `MinVolume` refinement optimize:
-    /// inter-node WeightedHops (the default), or a routed congestion
-    /// objective whose swap gains are computed incrementally against
-    /// per-link loads ([`crate::objective::CongestionState`]).
-    pub objective: ObjectiveKind,
-    /// Multilevel coarsening in front of the node-level sweep: when set
-    /// and the input is eligible (uniform allocation, non-empty edge
-    /// list, task count at least twice the effective floor
-    /// `max(target_tasks, num_nodes)`), the task→node assignment comes
-    /// from the V-cycle — coarsen, sweep the coarsest graph, uncoarsen
-    /// with per-level refinement — instead of a direct full-size sweep.
-    /// Ineligible inputs silently take the direct path (a
-    /// `coarsen.skipped` obs instant says why).
-    pub coarsen: Option<CoarsenConfig>,
-    /// NUMA model of a node: when set, the mapper runs at **depth 3** —
-    /// the node level prices intra-node edges at the topology's socket
-    /// cost, and a socket-level geometric split (plus, under `MinVolume`,
-    /// cross-socket refinement) runs inside each node before rank
-    /// placement. Composes with **every** objective through the unified
-    /// evaluator ([`crate::objective::eval`]): under `WeightedHops` the
-    /// network term is hop-priced (scaled by `hop_cost`); under the routed
-    /// objectives the blended evaluator layers the socket term onto the
-    /// routed per-link latencies (`hop_cost` must be 1 there — see
-    /// [`crate::objective::EvalSpec::validate`]).
-    pub numa: Option<NumaTopology>,
+    /// The shared knobs ([`MapSpec`]): what the node-level sweep and
+    /// `MinVolume` refinement optimize (`objective` × `numa` — a set
+    /// `numa` switches the mapper to **depth 3**, with the socket-level
+    /// split and refinement inside each node), the worker-thread budget,
+    /// and the optional multilevel coarsening V-cycle in front of the
+    /// node-level sweep (ineligible inputs silently take the direct path;
+    /// a `coarsen.skipped` obs instant says why).
+    pub spec: MapSpec,
 }
 
 impl Default for HierConfig {
@@ -177,20 +157,23 @@ impl Default for HierConfig {
             drop_node_dims: vec![],
             max_rotations: 12,
             chunk_edges: 32768,
-            threads: 0,
-            objective: ObjectiveKind::WeightedHops,
-            coarsen: None,
-            numa: None,
+            spec: MapSpec::default(),
+        }
+    }
+}
+
+impl From<MapSpec> for HierConfig {
+    fn from(spec: MapSpec) -> Self {
+        HierConfig {
+            spec,
+            ..Default::default()
         }
     }
 }
 
 impl HierConfig {
     fn parallelism(&self) -> Parallelism {
-        match self.threads {
-            0 => Parallelism::auto(),
-            n => Parallelism::threads(n),
-        }
+        self.spec.parallelism()
     }
 }
 
@@ -225,13 +208,16 @@ pub struct HierMapping {
 }
 
 /// Prepare the node coordinates per the config: optional torus shift, then
-/// axis dropping. (Node-level partitioning always works on raw router
+/// axis dropping. (Node-level partitioning always works on raw embedding
 /// coordinates — bandwidth scaling and the box transform are rank-level
-/// concerns of the flat pipeline.)
+/// concerns of the flat pipeline. The wraparound shift consumes torus
+/// geometry and is skipped on non-torus machines.)
 pub fn prepare_node_coords(alloc: &Allocation, cfg: &HierConfig) -> Coords {
     let mut ncoords = alloc.node_coords();
     if cfg.shift {
-        shift_torus_coords(&mut ncoords, &alloc.torus.sizes, &alloc.torus.wrap);
+        if let Some(torus) = alloc.machine.as_torus() {
+            shift_torus_coords(&mut ncoords, &torus.sizes, &torus.wrap);
+        }
     }
     if !cfg.drop_node_dims.is_empty() {
         let keep: Vec<usize> = (0..ncoords.dim())
@@ -256,7 +242,7 @@ fn node_level_alloc(alloc: &Allocation) -> Allocation {
     if sizes.iter().all(|&s| s == alloc.ranks_per_node) {
         let nn = node_routers.len();
         return Allocation {
-            torus: alloc.torus.clone(),
+            machine: alloc.machine.clone(),
             core_router: node_routers,
             core_node: (0..nn as u32).collect(),
             ranks_per_node: 1,
@@ -272,7 +258,7 @@ fn node_level_alloc(alloc: &Allocation) -> Allocation {
         }
     }
     Allocation {
-        torus: alloc.torus.clone(),
+        machine: alloc.machine.clone(),
         core_router,
         core_node,
         ranks_per_node: alloc.ranks_per_node,
@@ -324,10 +310,7 @@ pub fn map_hierarchical_budgeted(
     deadline: Deadline,
 ) -> Result<HierMapping, DeadlineExceeded> {
     assert_eq!(tcoords.len(), graph.num_tasks);
-    let spec = EvalSpec::new(
-        cfg.objective,
-        cfg.numa.map(|t| t.node_level_costs()),
-    );
+    let spec = cfg.spec.eval_spec();
     if let Err(e) = spec.validate() {
         panic!("unsupported objective x numa combination: {e}");
     }
@@ -346,7 +329,7 @@ pub fn map_hierarchical_budgeted(
     // instant (reason 1 = heterogeneous allocation, 2 = edgeless graph,
     // 3 = graph already within the size budget) and take the direct path.
     let mut vres = None;
-    if let Some(ccfg) = cfg.coarsen {
+    if let Some(ccfg) = cfg.spec.coarsen {
         if node_alloc.num_ranks() != alloc.num_nodes() {
             crate::obs::instant("coarsen.skipped", &[("reason", 1.0)]);
         } else if graph.edges.is_empty() {
@@ -377,7 +360,7 @@ pub fn map_hierarchical_budgeted(
                 &ncoords,
                 &node_alloc,
                 &node_routers,
-                &alloc.torus,
+                &alloc.machine,
                 cfg,
                 spec,
                 par,
@@ -388,7 +371,7 @@ pub fn map_hierarchical_budgeted(
         }
     };
 
-    if let Some(topo) = cfg.numa {
+    if let Some(topo) = cfg.spec.numa {
         // Level 2 (depth 3): sized geometric socket split inside each
         // node, cross-socket MinVolume refinement, then socket-aware rank
         // placement — all parallel over nodes.
@@ -463,7 +446,7 @@ fn sweep_assign(
     ncoords: &Coords,
     node_alloc: &Allocation,
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     cfg: &HierConfig,
     spec: EvalSpec,
     par: Parallelism,
@@ -473,9 +456,7 @@ fn sweep_assign(
     let sweep_cfg = SweepConfig {
         max_candidates: cfg.max_rotations.max(1),
         chunk_edges: cfg.chunk_edges,
-        threads: cfg.threads,
-        objective: cfg.objective,
-        numa: cfg.numa.map(|t| t.node_level_costs()),
+        spec: cfg.spec,
     };
     deadline.check("hier.sweep")?;
     let mut sweep_span = crate::obs::span("hier.sweep");
@@ -509,7 +490,7 @@ fn sweep_assign(
             graph,
             &mut task_to_node,
             node_routers,
-            torus,
+            net,
             passes,
             par,
             spec,
@@ -572,7 +553,7 @@ fn vcycle_assign(
         ncoords,
         node_alloc,
         node_routers,
-        &alloc.torus,
+        &alloc.machine,
         cfg,
         spec,
         par,
@@ -603,7 +584,7 @@ fn vcycle_assign(
             0
         };
         let before = if sp.live() {
-            Some(build_eval(&alloc.torus, node_routers, fg, &fine, spec).value())
+            Some(build_eval(&alloc.machine, node_routers, fg, &fine, spec).value())
         } else {
             None
         };
@@ -611,7 +592,7 @@ fn vcycle_assign(
             fg,
             &mut fine,
             node_routers,
-            &alloc.torus,
+            &alloc.machine,
             passes,
             par,
             spec,
@@ -622,7 +603,7 @@ fn vcycle_assign(
         sp.record("moves", moves as f64);
         sp.record("swaps", applied as f64);
         if let Some(b) = before {
-            let after = build_eval(&alloc.torus, node_routers, fg, &fine, spec).value();
+            let after = build_eval(&alloc.machine, node_routers, fg, &fine, spec).value();
             sp.record("gain", b - after);
         }
         drop(sp);
@@ -804,9 +785,17 @@ mod tests {
         HierConfig {
             intra,
             max_rotations: 4,
-            threads: 1,
+            spec: MapSpec {
+                threads: 1,
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         }
+    }
+
+    fn with_numa(mut c: HierConfig, topo: NumaTopology) -> HierConfig {
+        c.spec.numa = Some(topo);
+        c
     }
 
     #[test]
@@ -842,9 +831,10 @@ mod tests {
         use crate::metrics::eval_full;
         let alloc = toy_alloc();
         let g = stencil_graph(&[8, 4, 4], false, 1.0);
-        let mk = |objective| HierConfig {
-            objective,
-            ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
+        let mk = |objective| {
+            let mut c = cfg(IntraNodeStrategy::MinVolume { passes: 4 });
+            c.spec.objective = objective;
+            c
         };
         let mll = map_hierarchical(
             &g,
@@ -996,10 +986,7 @@ mod tests {
             IntraNodeStrategy::SfcOrder,
             IntraNodeStrategy::MinVolume { passes: 2 },
         ] {
-            let hcfg = HierConfig {
-                numa: Some(topo),
-                ..cfg(intra)
-            };
+            let hcfg = with_numa(cfg(intra), topo);
             let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
             let mut s = m.task_to_rank.clone();
             s.sort_unstable();
@@ -1023,10 +1010,7 @@ mod tests {
         let alloc = toy_alloc();
         let g = stencil_graph(&[8, 4, 4], false, 1.0);
         let topo = NumaTopology::new(2, 4, 0.5, 0.125, 1.0);
-        let hcfg = HierConfig {
-            numa: Some(topo),
-            ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
-        };
+        let hcfg = with_numa(cfg(IntraNodeStrategy::MinVolume { passes: 4 }), topo);
         let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
         let socks = m.task_to_socket.as_ref().unwrap();
         // Recompute the per-level weights from the assignment arrays; the
@@ -1037,7 +1021,7 @@ mod tests {
             let (u, v) = (e.u as usize, e.v as usize);
             if m.task_to_node[u] != m.task_to_node[v] {
                 network += e.w
-                    * alloc.torus.hop_dist_ids(
+                    * alloc.machine.hop_dist_ids(
                         routers[m.task_to_node[u] as usize] as usize,
                         routers[m.task_to_node[v] as usize] as usize,
                     ) as f64;
@@ -1066,11 +1050,8 @@ mod tests {
         let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
         let rank_socks = topo.socket_of_ranks(&alloc);
         for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
-            let hcfg = HierConfig {
-                numa: Some(topo),
-                objective,
-                ..cfg(IntraNodeStrategy::MinVolume { passes: 4 })
-            };
+            let mut hcfg = with_numa(cfg(IntraNodeStrategy::MinVolume { passes: 4 }), topo);
+            hcfg.spec.objective = objective;
             let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
             let mut s = m.task_to_rank.clone();
             s.sort_unstable();
@@ -1086,7 +1067,7 @@ mod tests {
             // improving swaps on exactly this evaluator).
             let spec = EvalSpec::new(objective, Some(topo.node_level_costs()));
             let routers = alloc.node_routers();
-            let val = build_eval(&alloc.torus, &routers, &g, &m.task_to_node, spec).value();
+            let val = build_eval(&alloc.machine, &routers, &g, &m.task_to_node, spec).value();
             assert!(
                 val <= m.node_score * (1.0 + 1e-9) + 1e-12,
                 "{objective:?}: refinement worsened the blended value: {val} > {}",
@@ -1112,10 +1093,7 @@ mod tests {
             let mut base = cfg(intra);
             base.max_rotations = 1;
             let d2 = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
-            let d3cfg = HierConfig {
-                numa: Some(topo),
-                ..base.clone()
-            };
+            let d3cfg = with_numa(base.clone(), topo);
             let d3 = map_hierarchical(&g, &g.coords, &alloc, &d3cfg, &NativeBackend);
             assert_eq!(d3.task_to_node, d2.task_to_node, "{intra:?}");
             assert_eq!(d3.task_to_rank, d2.task_to_rank, "{intra:?}");
@@ -1137,10 +1115,7 @@ mod tests {
         .unwrap();
         let g = stencil_graph(&[16], false, 1.0);
         let topo = NumaTopology::new(2, 2, 0.5, 0.0, 1.0);
-        let hcfg = HierConfig {
-            numa: Some(topo),
-            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
-        };
+        let hcfg = with_numa(cfg(IntraNodeStrategy::MinVolume { passes: 2 }), topo);
         let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
         let mut s = m.task_to_rank.clone();
         s.sort_unstable();
@@ -1201,10 +1176,7 @@ mod tests {
         let alloc = toy_alloc();
         let g = stencil_graph(&[8, 4, 4], false, 1.0);
         let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
-        let hcfg = HierConfig {
-            numa: Some(topo),
-            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
-        };
+        let hcfg = with_numa(cfg(IntraNodeStrategy::MinVolume { passes: 2 }), topo);
         let baseline = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
         let (traced, events) =
             obs::capture(|| map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend));
@@ -1241,13 +1213,12 @@ mod tests {
     }
 
     fn vcfg(target_tasks: usize) -> HierConfig {
-        HierConfig {
-            coarsen: Some(CoarsenConfig {
-                target_tasks,
-                ..CoarsenConfig::default()
-            }),
-            ..cfg(IntraNodeStrategy::MinVolume { passes: 2 })
-        }
+        let mut c = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
+        c.spec.coarsen = Some(CoarsenConfig {
+            target_tasks,
+            ..CoarsenConfig::default()
+        });
+        c
     }
 
     #[test]
@@ -1286,10 +1257,8 @@ mod tests {
         let g = stencil_graph(&[8, 4, 4], false, 1.0);
         let base = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
         let direct = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
-        let with_coarsen = HierConfig {
-            coarsen: Some(CoarsenConfig::default()),
-            ..base
-        };
+        let mut with_coarsen = base;
+        with_coarsen.spec.coarsen = Some(CoarsenConfig::default());
         let v = map_hierarchical(&g, &g.coords, &alloc, &with_coarsen, &NativeBackend);
         assert!(v.coarsen_levels.is_empty());
         assert_eq!(v.task_to_rank, direct.task_to_rank);
@@ -1309,19 +1278,12 @@ mod tests {
         let g = stencil_graph(&[16], false, 1.0);
         let base = cfg(IntraNodeStrategy::MinVolume { passes: 2 });
         let direct = map_hierarchical(&g, &g.coords, &alloc, &base, &NativeBackend);
-        let v = map_hierarchical(
-            &g,
-            &g.coords,
-            &alloc,
-            &HierConfig {
-                coarsen: Some(CoarsenConfig {
-                    target_tasks: 1,
-                    ..CoarsenConfig::default()
-                }),
-                ..base
-            },
-            &NativeBackend,
-        );
+        let mut coarse = base;
+        coarse.spec.coarsen = Some(CoarsenConfig {
+            target_tasks: 1,
+            ..CoarsenConfig::default()
+        });
+        let v = map_hierarchical(&g, &g.coords, &alloc, &coarse, &NativeBackend);
         assert!(v.coarsen_levels.is_empty(), "heterogeneous must skip");
         assert_eq!(v.task_to_rank, direct.task_to_rank);
     }
@@ -1332,10 +1294,7 @@ mod tests {
         let g = stencil_graph(&[8, 4, 4], false, 1.0); // 128 tasks
         let topo = NumaTopology::new(2, 4, 0.5, 0.0, 1.0);
         let rank_socks = topo.socket_of_ranks(&alloc);
-        let hcfg = HierConfig {
-            numa: Some(topo),
-            ..vcfg(16)
-        };
+        let hcfg = with_numa(vcfg(16), topo);
         let m = map_hierarchical(&g, &g.coords, &alloc, &hcfg, &NativeBackend);
         assert!(!m.coarsen_levels.is_empty(), "expected the V-cycle path");
         let mut s = m.task_to_rank.clone();

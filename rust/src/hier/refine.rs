@@ -43,7 +43,7 @@
 //! of the hierarchical mapper — is bit-identical at every thread count.
 
 use crate::apps::TaskGraph;
-use crate::machine::Torus;
+use crate::machine::Topology;
 use crate::objective::{
     build_eval, Adjacency, EvalScratch, EvalSpec, IncrementalEval, ObjectiveKind,
 };
@@ -62,13 +62,13 @@ pub fn internode_weighted_hops(
     graph: &TaskGraph,
     node_of: &[u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
 ) -> f64 {
     let mut total = 0f64;
     for e in &graph.edges {
         let (a, b) = (node_of[e.u as usize], node_of[e.v as usize]);
         if a != b {
-            let h = torus.hop_dist_ids(
+            let h = net.hop_dist_ids(
                 node_routers[a as usize] as usize,
                 node_routers[b as usize] as usize,
             ) as f64;
@@ -86,7 +86,7 @@ pub fn min_volume_refine(
     graph: &TaskGraph,
     node_of: &mut [u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     passes: usize,
     par: Parallelism,
 ) -> usize {
@@ -94,7 +94,7 @@ pub fn min_volume_refine(
         graph,
         node_of,
         node_routers,
-        torus,
+        net,
         passes,
         par,
         EvalSpec::default(),
@@ -110,7 +110,7 @@ pub fn min_volume_refine_numa(
     graph: &TaskGraph,
     node_of: &mut [u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     passes: usize,
     par: Parallelism,
     costs: crate::machine::NumaNodeCosts,
@@ -119,7 +119,7 @@ pub fn min_volume_refine_numa(
         graph,
         node_of,
         node_routers,
-        torus,
+        net,
         passes,
         par,
         EvalSpec::new(ObjectiveKind::WeightedHops, Some(costs)),
@@ -133,7 +133,7 @@ pub fn min_volume_refine_with(
     graph: &TaskGraph,
     node_of: &mut [u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     passes: usize,
     par: Parallelism,
     objective: ObjectiveKind,
@@ -142,7 +142,7 @@ pub fn min_volume_refine_with(
         graph,
         node_of,
         node_routers,
-        torus,
+        net,
         passes,
         par,
         EvalSpec::new(objective, None),
@@ -158,7 +158,7 @@ pub fn min_volume_refine_eval(
     graph: &TaskGraph,
     node_of: &mut [u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     passes: usize,
     par: Parallelism,
     spec: EvalSpec,
@@ -168,7 +168,7 @@ pub fn min_volume_refine_eval(
     if nn < 2 || graph.edges.is_empty() {
         return 0;
     }
-    let mut eval = build_eval(torus, node_routers, graph, node_of, spec);
+    let mut eval = build_eval(net, node_routers, graph, node_of, spec);
     refine_loop(graph, node_of, nn, passes, par, &mut eval)
 }
 
@@ -450,7 +450,7 @@ mod tests {
         };
         // Node-level pseudo-allocation to score assignments against.
         let alloc = Allocation {
-            torus: torus.clone(),
+            machine: torus.clone().into(),
             core_router: routers.clone(),
             core_node: (0..4u32).collect(),
             ranks_per_node: 1,

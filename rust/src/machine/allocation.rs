@@ -7,6 +7,7 @@
 //! distinguish intra-node from network communication.
 
 use super::rank_order::{bgq_rank_placement, gemini_curve_order, RankOrderError};
+use super::topology::{Network, Topology};
 use super::torus::Torus;
 use crate::geom::Coords;
 use crate::testutil::Rng;
@@ -22,8 +23,9 @@ use crate::testutil::Rng;
 /// per-node structure always lives in `core_node`.
 #[derive(Clone, Debug)]
 pub struct Allocation {
-    /// The machine (or job block) network.
-    pub torus: Torus,
+    /// The machine (or job block) network — any [`Topology`]
+    /// implementation; torus-only features gate on [`Network::as_torus`].
+    pub machine: Network,
     /// Router id per rank.
     pub core_router: Vec<u32>,
     /// Node id per rank (nodes may share a router: 2 nodes/Gemini on XK7).
@@ -165,10 +167,11 @@ impl Allocation {
     /// default rank order. `ranks_per_node` is set to the largest node
     /// size (the nominal capacity the node-level mapper balances against).
     pub fn heterogeneous(
-        torus: Torus,
+        machine: impl Into<Network>,
         node_routers: &[u32],
         node_sizes: &[usize],
     ) -> Result<Allocation, AllocError> {
+        let machine = machine.into();
         if node_routers.len() != node_sizes.len() {
             return Err(AllocError::BadShape(format!(
                 "{} routers for {} node sizes",
@@ -185,11 +188,11 @@ impl Allocation {
         if let Some((node, &r)) = node_routers
             .iter()
             .enumerate()
-            .find(|&(_, &r)| r as usize >= torus.num_routers())
+            .find(|&(_, &r)| r as usize >= machine.num_routers())
         {
             return Err(AllocError::BadShape(format!(
-                "node {node}: router {r} outside the {}-router torus",
-                torus.num_routers()
+                "node {node}: router {r} outside the {}-router network",
+                machine.num_routers()
             )));
         }
         let total: usize = node_sizes.iter().sum();
@@ -202,24 +205,26 @@ impl Allocation {
             }
         }
         Ok(Allocation {
-            torus,
+            machine,
             core_router,
             core_node,
             ranks_per_node: node_sizes.iter().copied().max().unwrap(),
         })
     }
 
-    /// Router coordinates of every rank as f64 points — the `pcoords` input
-    /// of Algorithm 1. Ranks in the same node share coordinates; MJ's
-    /// deterministic tie-breaking keeps them in the same part.
+    /// Geometric embedding of every rank's router as f64 points — the
+    /// `pcoords` input of Algorithm 1 ([`Topology::embed_coords`]; for a
+    /// torus these are the literal router coordinates). Ranks in the same
+    /// node share coordinates; MJ's deterministic tie-breaking keeps them
+    /// in the same part.
     pub fn proc_coords(&self) -> Coords {
-        let dim = self.torus.dim();
+        let dim = self.machine.embed_dim();
         let mut axes = vec![Vec::with_capacity(self.num_ranks()); dim];
-        let mut buf = vec![0usize; dim];
+        let mut buf = vec![0f64; dim];
         for &r in &self.core_router {
-            self.torus.coords_into(r as usize, &mut buf);
+            self.machine.embed_coords(r as usize, &mut buf);
             for d in 0..dim {
-                axes[d].push(buf[d] as f64);
+                axes[d].push(buf[d]);
             }
         }
         Coords::from_axes(axes)
@@ -244,18 +249,18 @@ impl Allocation {
         routers
     }
 
-    /// Router coordinates of every **node** as f64 points — the machine
-    /// side of the hierarchical (node-level) mapper, one point per node
-    /// instead of one per rank.
+    /// Geometric embedding of every **node**'s router as f64 points — the
+    /// machine side of the hierarchical (node-level) mapper, one point per
+    /// node instead of one per rank.
     pub fn node_coords(&self) -> Coords {
-        let dim = self.torus.dim();
+        let dim = self.machine.embed_dim();
         let routers = self.node_routers();
         let mut axes = vec![Vec::with_capacity(routers.len()); dim];
-        let mut buf = vec![0usize; dim];
+        let mut buf = vec![0f64; dim];
         for &r in &routers {
-            self.torus.coords_into(r as usize, &mut buf);
+            self.machine.embed_coords(r as usize, &mut buf);
             for d in 0..dim {
-                axes[d].push(buf[d] as f64);
+                axes[d].push(buf[d]);
             }
         }
         Coords::from_axes(axes)
@@ -282,11 +287,11 @@ impl Allocation {
         perm: &str,
     ) -> Result<Allocation, AllocError> {
         let routers = bgq_rank_placement(&block, ranks_per_node, perm)?;
-        let torus = Torus::torus(&block);
+        let machine = Network::torus(&block);
         // On BG/Q one compute node attaches to each router.
         let core_node = routers.iter().map(|&r| r as u32).collect();
         Ok(Allocation {
-            torus,
+            machine,
             core_router: routers.iter().map(|&r| r as u32).collect(),
             core_node,
             ranks_per_node,
@@ -382,7 +387,7 @@ impl SparseAllocator {
             }
         }
         Allocation {
-            torus: self.machine.clone(),
+            machine: self.machine.clone().into(),
             core_router,
             core_node,
             ranks_per_node: self.ranks_per_node,
@@ -438,13 +443,10 @@ mod tests {
             for w in group.windows(2) {
                 assert!(w[0] < w[1]);
             }
-            // Node coordinates are the router's torus coordinates.
-            let want: Vec<f64> = alloc
-                .torus
-                .coords_of(routers[node] as usize)
-                .into_iter()
-                .map(|c| c as f64)
-                .collect();
+            // Node coordinates are the router's embedding (its torus
+            // coordinates here), read through the scratch entry point.
+            let mut want = vec![0f64; alloc.machine.embed_dim()];
+            alloc.machine.embed_coords(routers[node] as usize, &mut want);
             assert_eq!(coords.point_vec(node), want);
         }
     }

@@ -1,0 +1,351 @@
+//! Dragonfly network model (groups of all-to-all routers, all-to-all
+//! global links between groups).
+//!
+//! `Dragonfly::new(groups, routers_per_group, terminals_per_router)` has
+//! `groups * routers_per_group` routers, id `g * routers_per_group + r`.
+//! Within a group every router pair is directly linked (one local hop);
+//! each ordered group pair `(g, h)` has one directed global link, owned by
+//! router `h % routers_per_group` of group `g` (the gateway), landing on
+//! router `g % routers_per_group` of group `h`.
+//!
+//! **Distance** is minimal-path with the global hop priced at a
+//! configurable integer [`global_cost`](Dragonfly::with_global_cost)
+//! (default 2 — global cables are long): `local? + global_cost + local?`.
+//!
+//! **Routing** is minimal (local → global → local) by default. With
+//! [`with_valiant`](Dragonfly::with_valiant) the *routed load* path set
+//! detours inter-group traffic through the deterministic intermediate
+//! group `(g_src + g_dst) % groups` (one-hop Valiant load spreading);
+//! distance pricing stays minimal either way, so hop-based objectives are
+//! unaffected and only routed congestion sees the spread paths.
+//!
+//! **Embedding** (what the geometric sweep partitions): `(group, router)`
+//! as two axes, group first. Groups are the dominant locality boundary
+//! (crossing one always pays `global_cost`), so cuts separate groups
+//! before routers within a group.
+//!
+//! **Links**: dense index `router * (R + G) + port`; ports `0..R` are local
+//! (port = peer router index in the group, the self-port unused), ports
+//! `R..R+G` are global (port − R = destination group, the self-group slot
+//! unused on non-gateways and for the own group). Class 0 = local,
+//! class 1 = global, dir always 0 (dragonfly links have no natural ± pair;
+//! the second direction slot stays empty in per-class stats). Bandwidth is
+//! uniform 1.0 on both classes.
+
+use super::topology::Topology;
+
+/// Dragonfly: `groups` fully-connected groups of `routers_per_group`
+/// routers, one directed global link per ordered group pair.
+#[derive(Clone, Debug)]
+pub struct Dragonfly {
+    groups: usize,
+    routers_per_group: usize,
+    /// Compute endpoints per router — informational (capacity planning /
+    /// service validation); routing and distance are router-level.
+    terminals_per_router: usize,
+    global_cost: u64,
+    valiant: bool,
+}
+
+impl Dragonfly {
+    pub fn new(groups: usize, routers_per_group: usize, terminals_per_router: usize) -> Dragonfly {
+        assert!(groups >= 1, "dragonfly needs at least one group");
+        assert!(routers_per_group >= 1, "dragonfly needs at least one router per group");
+        assert!(terminals_per_router >= 1, "terminals_per_router must be >= 1");
+        groups
+            .checked_mul(routers_per_group)
+            .and_then(|n| n.checked_mul(routers_per_group + groups))
+            .expect("dragonfly size overflow");
+        Dragonfly {
+            groups,
+            routers_per_group,
+            terminals_per_router,
+            global_cost: 2,
+            valiant: false,
+        }
+    }
+
+    /// Price of the global hop in [`Topology::hop_dist_ids`] (integer,
+    /// >= 1; default 2).
+    pub fn with_global_cost(mut self, global_cost: u64) -> Dragonfly {
+        assert!(global_cost >= 1, "global_cost must be >= 1");
+        self.global_cost = global_cost;
+        self
+    }
+
+    /// Route inter-group load through the deterministic one-hop-Valiant
+    /// intermediate group. Affects [`Topology::route_ids`] only, never
+    /// distances.
+    pub fn with_valiant(mut self, valiant: bool) -> Dragonfly {
+        self.valiant = valiant;
+        self
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    pub fn routers_per_group(&self) -> usize {
+        self.routers_per_group
+    }
+
+    pub fn terminals_per_router(&self) -> usize {
+        self.terminals_per_router
+    }
+
+    pub fn global_cost(&self) -> u64 {
+        self.global_cost
+    }
+
+    pub fn valiant(&self) -> bool {
+        self.valiant
+    }
+
+    /// Ports per router: `routers_per_group` local + `groups` global.
+    #[inline]
+    fn ports(&self) -> usize {
+        self.routers_per_group + self.groups
+    }
+
+    #[inline]
+    fn id(&self, g: usize, r: usize) -> usize {
+        g * self.routers_per_group + r
+    }
+
+    #[inline]
+    fn split(&self, id: usize) -> (usize, usize) {
+        (id / self.routers_per_group, id % self.routers_per_group)
+    }
+
+    /// Gateway router (index within `from`) owning the global link
+    /// `from -> to`.
+    #[inline]
+    fn gateway(&self, to: usize) -> usize {
+        to % self.routers_per_group
+    }
+
+    #[inline]
+    fn local_link(&self, id: usize, peer_r: usize) -> usize {
+        id * self.ports() + peer_r
+    }
+
+    #[inline]
+    fn global_link(&self, id: usize, to_group: usize) -> usize {
+        id * self.ports() + self.routers_per_group + to_group
+    }
+
+    /// Minimal route `a -> b`: local to the gateway, global, local to the
+    /// destination — skipping degenerate hops.
+    fn route_minimal(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize)) {
+        let (g1, r1) = self.split(a);
+        let (g2, r2) = self.split(b);
+        if g1 == g2 {
+            if r1 != r2 {
+                visit(self.local_link(a, r2));
+            }
+            return;
+        }
+        let gw_out = self.gateway(g2); // gateway in g1 toward g2
+        if r1 != gw_out {
+            visit(self.local_link(a, gw_out));
+        }
+        visit(self.global_link(self.id(g1, gw_out), g2));
+        let landing = self.gateway(g1); // arrival router in g2
+        if landing != r2 {
+            visit(self.local_link(self.id(g2, landing), r2));
+        }
+    }
+}
+
+impl Topology for Dragonfly {
+    fn num_routers(&self) -> usize {
+        self.groups * self.routers_per_group
+    }
+
+    fn hop_dist_ids(&self, a: usize, b: usize) -> u64 {
+        let (g1, r1) = self.split(a);
+        let (g2, r2) = self.split(b);
+        if g1 == g2 {
+            return u64::from(r1 != r2);
+        }
+        u64::from(r1 != self.gateway(g2))
+            + self.global_cost
+            + u64::from(self.gateway(g1) != r2)
+    }
+
+    fn num_directed_links(&self) -> usize {
+        self.num_routers() * self.ports()
+    }
+
+    fn route_ids(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize)) {
+        let (g1, _) = self.split(a);
+        let (g2, _) = self.split(b);
+        if self.valiant && g1 != g2 {
+            let vg = (g1 + g2) % self.groups;
+            if vg != g1 && vg != g2 {
+                // Land the detour on g2's eventual gateway so the second
+                // minimal leg starts exactly where the first one ends.
+                let v = self.id(vg, self.gateway(g2));
+                self.route_minimal(a, v, visit);
+                self.route_minimal(v, b, visit);
+                return;
+            }
+        }
+        self.route_minimal(a, b, visit);
+    }
+
+    fn for_each_link(&self, visit: &mut dyn FnMut(usize, usize, usize, f64)) {
+        for id in 0..self.num_routers() {
+            let (g, r) = self.split(id);
+            for p in 0..self.routers_per_group {
+                if p != r {
+                    visit(self.local_link(id, p), 0, 0, 1.0);
+                }
+            }
+            for h in 0..self.groups {
+                if h != g && r == self.gateway(h) {
+                    visit(self.global_link(id, h), 1, 0, 1.0);
+                }
+            }
+        }
+    }
+
+    fn num_link_classes(&self) -> usize {
+        2
+    }
+
+    fn embed_dim(&self) -> usize {
+        2
+    }
+
+    fn embed_coords(&self, id: usize, out: &mut [f64]) {
+        let (g, r) = self.split(id);
+        out[0] = g as f64;
+        out[1] = r as f64;
+    }
+
+    fn coord_dim(&self) -> usize {
+        2
+    }
+
+    fn router_of_coords(&self, coords: &[usize]) -> Option<usize> {
+        match coords {
+            [g, r] if *g < self.groups && *r < self.routers_per_group => Some(self.id(*g, *r)),
+            _ => None,
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "dragonfly"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distances_price_the_global_hop() {
+        let d = Dragonfly::new(4, 4, 2); // default global_cost = 2
+        // Same router / same group.
+        assert_eq!(d.hop_dist_ids(0, 0), 0);
+        assert_eq!(d.hop_dist_ids(0, 3), 1);
+        // Gateway to gateway: router 1 of g0 owns the link to g1 (1%4),
+        // landing on router 0 of g1 (0%4). id(0,1)=1 -> id(1,0)=4.
+        assert_eq!(d.hop_dist_ids(1, 4), 2);
+        // Full local-global-local.
+        assert_eq!(d.hop_dist_ids(0, 7), 1 + 2 + 1);
+        // Custom pricing.
+        let d5 = Dragonfly::new(4, 4, 2).with_global_cost(5);
+        assert_eq!(d5.hop_dist_ids(0, 7), 1 + 5 + 1);
+    }
+
+    #[test]
+    fn minimal_route_is_local_global_local() {
+        let d = Dragonfly::new(3, 4, 1);
+        // a = (0, 0), b = (2, 3): gateway in g0 toward g2 is router 2,
+        // landing router in g2 is 0.
+        let mut links = Vec::new();
+        d.route_ids(0, 11, &mut |l| links.push(l));
+        let p = d.ports(); // 7
+        assert_eq!(
+            links,
+            vec![
+                0 * p + 2,                 // local (0,0) -> (0,2)
+                2 * p + 4 + 2,             // global (0,2) -> g2
+                8 * p + 3,                 // local (2,0) -> (2,3)
+            ]
+        );
+        // Hop count (unpriced) is 3; priced distance is 1 + 2 + 1.
+        assert_eq!(d.hop_dist_ids(0, 11), 4);
+    }
+
+    #[test]
+    fn valiant_detours_but_distance_stays_minimal() {
+        let base = Dragonfly::new(5, 3, 1);
+        let v = base.clone().with_valiant(true);
+        // a = (0, 0), b = (3, 1): vg = 3 % 5 = 3 == g2 -> falls back to
+        // minimal. Pick b = (2, 1) instead: vg = 2 -> also g2. Use
+        // a = (1, 0), b = (4, 1): vg = 0, a detour.
+        let (a, b) = (base.id(1, 0), base.id(4, 1));
+        let (mut direct, mut detour) = (Vec::new(), Vec::new());
+        base.route_ids(a, b, &mut |l| direct.push(l));
+        v.route_ids(a, b, &mut |l| detour.push(l));
+        assert!(detour.len() > direct.len(), "{detour:?} vs {direct:?}");
+        assert_eq!(v.hop_dist_ids(a, b), base.hop_dist_ids(a, b));
+        // No link repeats on the detour.
+        let mut seen = std::collections::HashSet::new();
+        assert!(detour.iter().all(|l| seen.insert(*l)));
+        // Intra-group traffic never detours.
+        let (mut d1, mut d2) = (Vec::new(), Vec::new());
+        base.route_ids(0, 1, &mut |l| d1.push(l));
+        v.route_ids(0, 1, &mut |l| d2.push(l));
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn link_enumeration_counts() {
+        let d = Dragonfly::new(4, 3, 1);
+        // Local: 12 routers * 2 peers = 24. Global: 4*3 ordered group
+        // pairs = 12. Dense space: 12 * (3 + 4) = 84.
+        assert_eq!(d.num_directed_links(), 84);
+        let (mut local, mut global) = (0usize, 0usize);
+        d.for_each_link(&mut |_, class, dir, bw| {
+            assert_eq!(dir, 0);
+            assert_eq!(bw, 1.0);
+            match class {
+                0 => local += 1,
+                1 => global += 1,
+                _ => panic!("class {class}"),
+            }
+        });
+        assert_eq!(local, 24);
+        assert_eq!(global, 12);
+    }
+
+    #[test]
+    fn embedding_and_coords_are_group_router() {
+        let d = Dragonfly::new(4, 4, 2);
+        let mut out = [0f64; 2];
+        d.embed_coords(d.id(2, 3), &mut out);
+        assert_eq!(out, [2.0, 3.0]);
+        assert_eq!(d.router_of_coords(&[2, 3]), Some(11));
+        assert_eq!(d.router_of_coords(&[4, 0]), None);
+        assert_eq!(d.router_of_coords(&[0, 4]), None);
+        assert_eq!(d.router_of_coords(&[1]), None);
+    }
+
+    #[test]
+    fn route_length_matches_unpriced_hops_when_global_cost_is_one() {
+        // With global_cost = 1 the priced distance equals the link count of
+        // the minimal route.
+        let d = Dragonfly::new(4, 4, 1).with_global_cost(1);
+        for a in 0..16 {
+            for b in 0..16 {
+                let mut n = 0u64;
+                d.route_ids(a, b, &mut |_| n += 1);
+                assert_eq!(n, d.hop_dist_ids(a, b), "{a}->{b}");
+            }
+        }
+    }
+}

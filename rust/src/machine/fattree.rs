@@ -1,0 +1,269 @@
+//! Fat-tree (k-ary tree) network model.
+//!
+//! A `FatTree::new(levels, radix)` is a complete `radix`-ary tree of
+//! `levels` switch levels below the root; the `radix^levels` leaves are the
+//! routers compute nodes attach to. Distance between two leaves is
+//! `2 * (levels above the nearest common ancestor)` — up to the NCA, down
+//! again — matching the classic static fat-tree hop count.
+//!
+//! **Embedding** (what the geometric sweep partitions): each leaf maps to
+//! its `levels` base-`radix` digits, most-significant (top-level pod)
+//! first. Leaves sharing a pod prefix are co-located along the leading
+//! axes, so multisection cuts separate top-level pods before subpods —
+//! geometric locality in the embedding is subtree locality in the tree,
+//! which is exactly what minimizes up/down traffic.
+//!
+//! **Links**: every non-root tree node `m` (heap-style numbering, root 0)
+//! owns two directed links — up `2(m-1)` toward its parent and down
+//! `2(m-1)+1` from its parent. Link class = the child node's level - 1
+//! (`levels` classes: class 0 = links below the root), dir 0 = up,
+//! 1 = down. Bandwidth is uniform 1.0 (an ideal fully-provisioned
+//! fat-tree; congestion contrast comes from path multiplicity, not link
+//! speeds).
+
+use super::topology::Topology;
+
+/// Complete k-ary fat-tree; routers are the leaves.
+#[derive(Clone, Debug)]
+pub struct FatTree {
+    levels: usize,
+    radix: usize,
+    /// `radix^l` for `l in 0..=levels`.
+    pows: Vec<usize>,
+    /// First tree-node index of each level: `offset[l] = (k^l - 1)/(k - 1)`,
+    /// plus a final entry holding the total node count.
+    offsets: Vec<usize>,
+}
+
+impl FatTree {
+    /// A tree of `levels >= 1` switch levels with `radix >= 2` children per
+    /// switch: `radix^levels` leaf routers.
+    pub fn new(levels: usize, radix: usize) -> FatTree {
+        assert!(levels >= 1, "fat-tree needs at least one level");
+        assert!(radix >= 2, "fat-tree radix must be >= 2");
+        let mut pows = Vec::with_capacity(levels + 1);
+        let mut p = 1usize;
+        for _ in 0..=levels {
+            pows.push(p);
+            p = p.checked_mul(radix).expect("fat-tree size overflow");
+        }
+        let mut offsets = Vec::with_capacity(levels + 2);
+        let mut off = 0usize;
+        for l in 0..=levels + 1 {
+            offsets.push(off);
+            if l <= levels {
+                off += pows[l];
+            }
+        }
+        FatTree {
+            levels,
+            radix,
+            pows,
+            offsets,
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.levels
+    }
+
+    pub fn radix(&self) -> usize {
+        self.radix
+    }
+
+    /// Total switch/leaf nodes in the tree.
+    fn num_nodes(&self) -> usize {
+        self.offsets[self.levels + 1]
+    }
+
+    /// Tree-node index of leaf `x`'s ancestor at `level` (0 = root,
+    /// `levels` = the leaf itself).
+    #[inline]
+    fn ancestor(&self, leaf: usize, level: usize) -> usize {
+        self.offsets[level] + leaf / self.pows[self.levels - level]
+    }
+
+    /// Level of the nearest common ancestor of two leaves.
+    #[inline]
+    fn nca_level(&self, a: usize, b: usize) -> usize {
+        let mut l = self.levels;
+        let (mut a, mut b) = (a, b);
+        while a != b {
+            a /= self.radix;
+            b /= self.radix;
+            l -= 1;
+        }
+        l
+    }
+
+    /// Level of tree node `m`.
+    #[inline]
+    fn level_of(&self, m: usize) -> usize {
+        // levels is small (a handful); linear scan beats binary search.
+        let mut l = 0usize;
+        while self.offsets[l + 1] <= m {
+            l += 1;
+        }
+        l
+    }
+}
+
+impl Topology for FatTree {
+    fn num_routers(&self) -> usize {
+        self.pows[self.levels]
+    }
+
+    fn hop_dist_ids(&self, a: usize, b: usize) -> u64 {
+        2 * (self.levels - self.nca_level(a, b)) as u64
+    }
+
+    fn num_directed_links(&self) -> usize {
+        2 * (self.num_nodes() - 1)
+    }
+
+    fn route_ids(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize)) {
+        if a == b {
+            return;
+        }
+        let nca = self.nca_level(a, b);
+        // Ascend: up-links of a's ancestors, leaf-side first.
+        for level in (nca + 1..=self.levels).rev() {
+            let m = self.ancestor(a, level);
+            visit(2 * (m - 1));
+        }
+        // Descend: down-links of b's ancestors, NCA-side first.
+        for level in nca + 1..=self.levels {
+            let m = self.ancestor(b, level);
+            visit(2 * (m - 1) + 1);
+        }
+    }
+
+    fn for_each_link(&self, visit: &mut dyn FnMut(usize, usize, usize, f64)) {
+        for m in 1..self.num_nodes() {
+            let class = self.level_of(m) - 1;
+            visit(2 * (m - 1), class, 0, 1.0);
+            visit(2 * (m - 1) + 1, class, 1, 1.0);
+        }
+    }
+
+    fn num_link_classes(&self) -> usize {
+        self.levels
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.levels
+    }
+
+    fn embed_coords(&self, id: usize, out: &mut [f64]) {
+        // Base-radix digits, most-significant (top pod) first.
+        let mut r = id;
+        for l in (0..self.levels).rev() {
+            out[l] = (r % self.radix) as f64;
+            r /= self.radix;
+        }
+    }
+
+    fn coord_dim(&self) -> usize {
+        1
+    }
+
+    fn router_of_coords(&self, coords: &[usize]) -> Option<usize> {
+        match coords {
+            [leaf] if *leaf < self.pows[self.levels] => Some(*leaf),
+            _ => None,
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "fattree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_is_twice_levels_above_nca() {
+        // 2-level binary tree: leaves 0..4.
+        let t = FatTree::new(2, 2);
+        assert_eq!(t.num_routers(), 4);
+        assert_eq!(t.hop_dist_ids(0, 0), 0);
+        assert_eq!(t.hop_dist_ids(0, 1), 2); // siblings: NCA one level up
+        assert_eq!(t.hop_dist_ids(0, 2), 4); // NCA = root
+        assert_eq!(t.hop_dist_ids(1, 3), 4);
+        assert_eq!(t.hop_dist_ids(2, 3), 2);
+    }
+
+    #[test]
+    fn route_length_matches_distance_and_is_up_then_down() {
+        let t = FatTree::new(3, 3);
+        for (a, b) in [(0usize, 1usize), (0, 26), (5, 14), (7, 7), (13, 12)] {
+            let mut links = Vec::new();
+            t.route_ids(a, b, &mut |l| links.push(l));
+            assert_eq!(links.len() as u64, t.hop_dist_ids(a, b), "{a}->{b}");
+            // Up-links (even index) strictly before down-links (odd).
+            let first_down = links.iter().position(|l| l % 2 == 1);
+            if let Some(fd) = first_down {
+                assert!(links[..fd].iter().all(|l| l % 2 == 0));
+                assert!(links[fd..].iter().all(|l| l % 2 == 1));
+            }
+        }
+    }
+
+    #[test]
+    fn link_space_is_dense_and_fully_used() {
+        let t = FatTree::new(2, 3);
+        // 13 tree nodes -> 24 directed links, all existing.
+        assert_eq!(t.num_directed_links(), 24);
+        let mut seen = vec![false; 24];
+        t.for_each_link(&mut |l, class, dir, bw| {
+            assert!(!seen[l]);
+            seen[l] = true;
+            assert!(class < 2);
+            assert_eq!(l % 2, dir);
+            assert_eq!(bw, 1.0);
+        });
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn embedding_is_pod_digits_msb_first() {
+        let t = FatTree::new(2, 4);
+        let mut out = [0f64; 2];
+        t.embed_coords(0, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+        t.embed_coords(7, &mut out); // 7 = 1*4 + 3
+        assert_eq!(out, [1.0, 3.0]);
+        t.embed_coords(14, &mut out); // 14 = 3*4 + 2
+        assert_eq!(out, [3.0, 2.0]);
+    }
+
+    #[test]
+    fn coords_name_leaves() {
+        let t = FatTree::new(2, 4);
+        assert_eq!(t.router_of_coords(&[11]), Some(11));
+        assert_eq!(t.router_of_coords(&[16]), None);
+        assert_eq!(t.router_of_coords(&[1, 2]), None);
+    }
+
+    #[test]
+    fn sibling_routes_share_no_links_with_far_routes_start() {
+        // A sibling route stays below the level-1 switch; a cross-pod route
+        // must climb to the root.
+        let t = FatTree::new(2, 2);
+        let mut sib = Vec::new();
+        t.route_ids(0, 1, &mut |l| sib.push(l));
+        assert_eq!(sib.len(), 2);
+        let mut far = Vec::new();
+        t.route_ids(0, 3, &mut |l| far.push(l));
+        assert_eq!(far.len(), 4);
+        // The far route's second up-link is a level-0-class link.
+        let mut class_of = std::collections::HashMap::new();
+        t.for_each_link(&mut |l, c, _, _| {
+            class_of.insert(l, c);
+        });
+        assert_eq!(class_of[&far[1]], 0);
+        assert_eq!(class_of[&far[0]], 1);
+    }
+}

@@ -21,14 +21,45 @@
 //! objective consume. Allocations may be heterogeneous (different rank
 //! counts per node, [`Allocation::heterogeneous`]); consistency violations
 //! surface as structured [`AllocError`]s instead of silent truncation.
+//!
+//! # Topologies and their geometric embeddings
+//!
+//! The network behind an [`Allocation`] is a [`Network`] — any
+//! implementation of the [`Topology`] trait ([`topology`] module). The
+//! scoring stack (hop distances, routed per-link congestion) is
+//! topology-agnostic; what each network must additionally provide is a
+//! **coordinate embedding** for the geometric sweep, and the choice of
+//! embedding is where the mapping research lives:
+//!
+//! * **Torus** — the embedding is the literal router coordinates. Geometric
+//!   proximity = hop proximity (up to wraparound, which [`crate::mapping::shift`]
+//!   repairs), so this is the paper's setting unchanged.
+//! * **Fat-tree** ([`FatTree`], levels × radix) — leaves embed as their
+//!   base-radix pod digits, most-significant level first. Distance in the
+//!   tree is `2·(levels above the nearest common ancestor)`, a purely
+//!   hierarchical quantity: the digit embedding makes every multisection
+//!   cut a subtree boundary, so cutting coarse axes first keeps traffic
+//!   under the lowest possible common ancestor.
+//! * **Dragonfly** ([`Dragonfly`], groups × routers/group) — routers embed
+//!   as `(group, router)`. Crossing a group always pays the (configurable)
+//!   `global_cost`, so the group axis dominates and the sweep packs
+//!   communicating tasks into groups before spreading within them; routed
+//!   loads can optionally take deterministic one-hop-Valiant detours to
+//!   model load-spread global links.
 
 pub mod allocation;
+pub mod dragonfly;
+pub mod fattree;
 pub mod numa;
 pub mod presets;
 pub mod rank_order;
+pub mod topology;
 pub mod torus;
 
 pub use allocation::{AllocError, Allocation, SparseAllocator};
+pub use dragonfly::Dragonfly;
+pub use fattree::FatTree;
 pub use numa::{NumaNodeCosts, NumaTopology};
 pub use presets::{bgq_block, cray_xk7, titan_full};
+pub use topology::{Network, Topology};
 pub use torus::{BwModel, Torus};

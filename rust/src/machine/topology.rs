@@ -1,0 +1,454 @@
+//! The [`Topology`] abstraction behind the machine model: what the scoring
+//! stack actually consumes from a network, as a trait — plus [`Network`],
+//! the concrete closed enum of implementations that allocations store.
+//!
+//! The paper's machinery needs surprisingly little from the interconnect:
+//!
+//! * a router count and a **hop distance** between router ids (the
+//!   WeightedHops objective, NUMA pricing, hierarchical node sweeps),
+//! * a **per-link path enumeration** for routed congestion — a visitor
+//!   yielding stable dense directed-link indices along the deterministic
+//!   route from `a` to `b` ([`Topology::route_ids`]),
+//! * a stable **link enumeration** with per-link bandwidth and a coarse
+//!   `(class, direction)` tag for reporting ([`Topology::for_each_link`]),
+//! * a **coordinate embedding** per router that feeds the geometric
+//!   multisection sweep ([`Topology::embed_coords`]) — the research-y part:
+//!   the embedding decides what "geometric locality" means on a network
+//!   that is not a grid.
+//!
+//! [`Torus`] is one implementation (the paper's machines); [`FatTree`] and
+//! [`Dragonfly`] open the topology axis. All scoring code dispatches
+//! through `&dyn Topology` (or through [`Network`], which delegates with
+//! static dispatch per arm), and the torus arm performs the exact
+//! arithmetic, in the exact order, of the pre-trait code — torus results
+//! are bit-identical at every thread count.
+
+use super::dragonfly::Dragonfly;
+use super::fattree::FatTree;
+use super::torus::{BwModel, Torus};
+
+/// What the mapping/scoring stack consumes from an interconnect. All
+/// methods are object-safe; implementations are immutable and `Sync` so one
+/// instance is shared by every sweep/refinement worker.
+pub trait Topology: Sync {
+    /// Number of routers (the targets task ranks are pinned to). Router ids
+    /// are dense `0..num_routers()`.
+    fn num_routers(&self) -> usize;
+
+    /// Minimal-path hop distance between two router ids, in (integer)
+    /// priced hops. Symmetric; zero iff `a == b` (self-distance).
+    fn hop_dist_ids(&self, a: usize, b: usize) -> u64;
+
+    /// Size of the dense directed-link index space. Indices returned by
+    /// [`route_ids`](Topology::route_ids) / visited by
+    /// [`for_each_link`](Topology::for_each_link) are `< num_directed_links()`.
+    /// The space may contain unused slots (mesh boundaries, dragonfly
+    /// self-ports); routing never yields them.
+    fn num_directed_links(&self) -> usize;
+
+    /// Walk the deterministic route from router `a` to router `b`, invoking
+    /// `visit(link)` for every directed link traversed, in path order.
+    /// The route realizes `hop_dist_ids(a, b)` hops on the torus and
+    /// fat-tree; dragonfly may detour (one-hop Valiant) when configured —
+    /// distance pricing stays minimal either way.
+    fn route_ids(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize));
+
+    /// Enumerate every *existing* directed link once, in a stable order,
+    /// as `visit(link, class, dir, bandwidth)`. `class < num_link_classes()`
+    /// is the reporting bucket (torus: dimension; fat-tree: child level;
+    /// dragonfly: local/global), `dir` is 0 or 1 within the class.
+    fn for_each_link(&self, visit: &mut dyn FnMut(usize, usize, usize, f64));
+
+    /// Number of link classes [`for_each_link`](Topology::for_each_link)
+    /// reports (per-class stats shape).
+    fn num_link_classes(&self) -> usize;
+
+    /// Dimensionality of the geometric embedding.
+    fn embed_dim(&self) -> usize;
+
+    /// Write the geometric embedding of router `id` into
+    /// `out[..embed_dim()]`. This is what the multisection sweep partitions;
+    /// see the per-implementation docs for the embedding choice.
+    fn embed_coords(&self, id: usize, out: &mut [f64]);
+
+    /// Number of integer coordinates that name a router externally (the
+    /// service's per-rank coordinate columns): torus = `dim()`, fat-tree =
+    /// 1 (leaf rank), dragonfly = 2 (group, router).
+    fn coord_dim(&self) -> usize;
+
+    /// Resolve external integer coordinates to a router id; `None` if out
+    /// of range. Inverse of the external naming, not of `embed_coords`.
+    fn router_of_coords(&self, coords: &[usize]) -> Option<usize>;
+
+    /// Short protocol name of the topology family ("torus" | "fattree" |
+    /// "dragonfly").
+    fn kind_name(&self) -> &'static str;
+}
+
+impl Topology for Torus {
+    fn num_routers(&self) -> usize {
+        Torus::num_routers(self)
+    }
+
+    fn hop_dist_ids(&self, a: usize, b: usize) -> u64 {
+        Torus::hop_dist_ids(self, a, b)
+    }
+
+    fn num_directed_links(&self) -> usize {
+        Torus::num_directed_links(self)
+    }
+
+    fn route_ids(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize)) {
+        // Same coordinate decode + dimension-ordered walk the routed
+        // accumulator always performed; stack buffers for the common case.
+        let d = self.dim();
+        if d <= 8 {
+            let (mut ca, mut cb) = ([0usize; 8], [0usize; 8]);
+            self.coords_into(a, &mut ca[..d]);
+            self.coords_into(b, &mut cb[..d]);
+            self.route(&ca[..d], &cb[..d], |id, dm, dir| {
+                visit(self.link_index(id, dm, dir))
+            });
+        } else {
+            let (mut ca, mut cb) = (vec![0usize; d], vec![0usize; d]);
+            self.coords_into(a, &mut ca);
+            self.coords_into(b, &mut cb);
+            self.route(&ca, &cb, |id, dm, dir| visit(self.link_index(id, dm, dir)));
+        }
+    }
+
+    fn for_each_link(&self, visit: &mut dyn FnMut(usize, usize, usize, f64)) {
+        // Exactly the historical router -> dim -> dir iteration (with the
+        // mesh-boundary skip) that LinkCosts and the metrics summary used:
+        // their f64 accumulation order — and therefore every reported
+        // value — is unchanged on the torus.
+        let dim = self.dim();
+        let mut coords = vec![0usize; dim];
+        for router in 0..Torus::num_routers(self) {
+            self.coords_into(router, &mut coords);
+            for d in 0..dim {
+                for dir in 0..2 {
+                    if !self.wrap[d] {
+                        let c = coords[d];
+                        if (dir == 0 && c + 1 == self.sizes[d]) || (dir == 1 && c == 0) {
+                            continue; // mesh boundary: no outward link
+                        }
+                    }
+                    let bw = self.link_bandwidth(&coords, d, if dir == 0 { 1 } else { -1 });
+                    visit(self.link_index(router, d, dir), d, dir, bw);
+                }
+            }
+        }
+    }
+
+    fn num_link_classes(&self) -> usize {
+        self.dim()
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.dim()
+    }
+
+    fn embed_coords(&self, id: usize, out: &mut [f64]) {
+        // The torus embedding is its own integer coordinates — identical to
+        // the pre-trait `coords_into` + cast path.
+        let mut r = id;
+        for (d, &s) in self.sizes.iter().enumerate() {
+            out[d] = (r % s) as f64;
+            r /= s;
+        }
+    }
+
+    fn coord_dim(&self) -> usize {
+        self.dim()
+    }
+
+    fn router_of_coords(&self, coords: &[usize]) -> Option<usize> {
+        if coords.len() != self.dim() {
+            return None;
+        }
+        for (d, &c) in coords.iter().enumerate() {
+            if c >= self.sizes[d] {
+                return None;
+            }
+        }
+        Some(self.id_of(coords))
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "torus"
+    }
+}
+
+/// The closed set of network models an [`crate::machine::Allocation`] can
+/// hold. Scoring code that works for any topology takes `&dyn Topology` (or
+/// `&Network`, which implements the trait by enum delegation — static
+/// dispatch per arm); torus-only features (coordinate shifting, bandwidth
+/// scaling, the box transform, BG/Q blocks, the f32 WeightedHops kernel)
+/// gate on [`Network::as_torus`].
+#[derive(Clone, Debug)]
+pub enum Network {
+    Torus(Torus),
+    FatTree(FatTree),
+    Dragonfly(Dragonfly),
+}
+
+impl Network {
+    /// Fully-wrapped torus with uniform bandwidth 1 (mirrors
+    /// [`Torus::torus`]).
+    pub fn torus(sizes: &[usize]) -> Network {
+        Network::Torus(Torus::torus(sizes))
+    }
+
+    /// Unwrapped mesh with uniform bandwidth 1 (mirrors [`Torus::mesh`]).
+    pub fn mesh(sizes: &[usize]) -> Network {
+        Network::Torus(Torus::mesh(sizes))
+    }
+
+    /// Torus with explicit wrap flags and bandwidth model (mirrors
+    /// [`Torus::new`]).
+    pub fn new(sizes: Vec<usize>, wrap: Vec<bool>, bw: BwModel) -> Network {
+        Network::Torus(Torus::new(sizes, wrap, bw))
+    }
+
+    /// The torus inside, if this network is one. Torus-only code paths
+    /// (coordinate transforms, BG/Q allocation, the batched f32 kernel)
+    /// gate on this.
+    pub fn as_torus(&self) -> Option<&Torus> {
+        match self {
+            Network::Torus(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// View as a trait object (handy where a field stores `&dyn Topology`).
+    pub fn topo(&self) -> &dyn Topology {
+        match self {
+            Network::Torus(t) => t,
+            Network::FatTree(f) => f,
+            Network::Dragonfly(d) => d,
+        }
+    }
+}
+
+impl From<Torus> for Network {
+    fn from(t: Torus) -> Network {
+        Network::Torus(t)
+    }
+}
+
+impl From<FatTree> for Network {
+    fn from(f: FatTree) -> Network {
+        Network::FatTree(f)
+    }
+}
+
+impl From<Dragonfly> for Network {
+    fn from(d: Dragonfly) -> Network {
+        Network::Dragonfly(d)
+    }
+}
+
+macro_rules! delegate {
+    ($self:ident, $t:ident => $e:expr) => {
+        match $self {
+            Network::Torus($t) => $e,
+            Network::FatTree($t) => $e,
+            Network::Dragonfly($t) => $e,
+        }
+    };
+}
+
+impl Topology for Network {
+    fn num_routers(&self) -> usize {
+        delegate!(self, t => t.num_routers())
+    }
+
+    fn hop_dist_ids(&self, a: usize, b: usize) -> u64 {
+        delegate!(self, t => Topology::hop_dist_ids(t, a, b))
+    }
+
+    fn num_directed_links(&self) -> usize {
+        delegate!(self, t => Topology::num_directed_links(t))
+    }
+
+    fn route_ids(&self, a: usize, b: usize, visit: &mut dyn FnMut(usize)) {
+        delegate!(self, t => t.route_ids(a, b, visit))
+    }
+
+    fn for_each_link(&self, visit: &mut dyn FnMut(usize, usize, usize, f64)) {
+        delegate!(self, t => t.for_each_link(visit))
+    }
+
+    fn num_link_classes(&self) -> usize {
+        delegate!(self, t => t.num_link_classes())
+    }
+
+    fn embed_dim(&self) -> usize {
+        delegate!(self, t => t.embed_dim())
+    }
+
+    fn embed_coords(&self, id: usize, out: &mut [f64]) {
+        delegate!(self, t => t.embed_coords(id, out))
+    }
+
+    fn coord_dim(&self) -> usize {
+        delegate!(self, t => t.coord_dim())
+    }
+
+    fn router_of_coords(&self, coords: &[usize]) -> Option<usize> {
+        delegate!(self, t => t.router_of_coords(coords))
+    }
+
+    fn kind_name(&self) -> &'static str {
+        delegate!(self, t => t.kind_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trait-conformance suite: every implementation must satisfy the
+    /// contracts the scoring stack leans on.
+    fn check_conformance(topo: &dyn Topology) {
+        let n = topo.num_routers();
+        assert!(n >= 1);
+        let nlinks = topo.num_directed_links();
+        // Distance: identity, symmetry, triangle inequality on minimal
+        // routes (sampled pairs/triples to keep the suite fast).
+        let stride = (n / 12).max(1);
+        let sample: Vec<usize> = (0..n).step_by(stride).collect();
+        for &a in &sample {
+            assert_eq!(topo.hop_dist_ids(a, a), 0, "self-distance at {a}");
+            for &b in &sample {
+                let d = topo.hop_dist_ids(a, b);
+                assert_eq!(d, topo.hop_dist_ids(b, a), "symmetry {a}<->{b}");
+                if a != b {
+                    assert!(d > 0, "distinct routers at distance 0: {a},{b}");
+                }
+                for &c in &sample {
+                    assert!(
+                        d <= topo.hop_dist_ids(a, c) + topo.hop_dist_ids(c, b),
+                        "triangle violated: d({a},{b}) > d({a},{c}) + d({c},{b})"
+                    );
+                }
+            }
+        }
+        // Routes yield in-range link indices and never repeat a link.
+        for &a in &sample {
+            for &b in &sample {
+                let mut seen = std::collections::HashSet::new();
+                topo.route_ids(a, b, &mut |l| {
+                    assert!(l < nlinks, "route link {l} out of range {nlinks}");
+                    assert!(seen.insert(l), "route {a}->{b} repeats link {l}");
+                });
+                if a == b {
+                    assert!(seen.is_empty(), "self-route {a} traverses links");
+                }
+            }
+        }
+        // Link enumeration: indices bijective (no slot visited twice), in
+        // range, classes in range, bandwidths positive.
+        let mut seen = vec![false; nlinks];
+        let classes = topo.num_link_classes();
+        let mut count = 0usize;
+        topo.for_each_link(&mut |l, class, dir, bw| {
+            assert!(l < nlinks);
+            assert!(!seen[l], "link {l} enumerated twice");
+            seen[l] = true;
+            assert!(class < classes);
+            assert!(dir < 2);
+            assert!(bw > 0.0);
+            count += 1;
+        });
+        assert!(count > 0 || n == 1);
+        // Every routed link is an enumerated link.
+        for &a in &sample {
+            for &b in &sample {
+                topo.route_ids(a, b, &mut |l| {
+                    assert!(seen[l], "route {a}->{b} uses unenumerated link {l}");
+                });
+            }
+        }
+        // Embedding has the declared arity and is finite.
+        let mut out = vec![f64::NAN; topo.embed_dim()];
+        for &a in &sample {
+            topo.embed_coords(a, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()), "embedding of {a}");
+        }
+    }
+
+    #[test]
+    fn torus_conforms() {
+        check_conformance(&Torus::torus(&[4, 3, 2]));
+        check_conformance(&Torus::mesh(&[5, 4]));
+        check_conformance(&Torus::torus(&[1, 6])); // size-1 dimension
+    }
+
+    #[test]
+    fn fattree_conforms() {
+        check_conformance(&FatTree::new(2, 4));
+        check_conformance(&FatTree::new(3, 2));
+    }
+
+    #[test]
+    fn dragonfly_conforms() {
+        check_conformance(&Dragonfly::new(4, 4, 2));
+        check_conformance(&Dragonfly::new(3, 5, 1).with_global_cost(3));
+        check_conformance(&Dragonfly::new(5, 3, 1).with_valiant(true));
+    }
+
+    #[test]
+    fn network_delegates_to_torus_bit_for_bit() {
+        // The Network wrapper must be transparent: identical distances,
+        // routes, link enumeration, and embeddings.
+        let t = Torus::new(vec![4, 3], vec![true, false], BwModel::PerDim(vec![2.0, 4.0]));
+        let net: Network = t.clone().into();
+        assert_eq!(net.num_routers(), Torus::num_routers(&t));
+        assert_eq!(
+            Topology::num_directed_links(&net),
+            Torus::num_directed_links(&t)
+        );
+        for a in 0..Torus::num_routers(&t) {
+            for b in 0..Torus::num_routers(&t) {
+                assert_eq!(
+                    Topology::hop_dist_ids(&net, a, b),
+                    Torus::hop_dist_ids(&t, a, b)
+                );
+                let (mut la, mut lb) = (Vec::new(), Vec::new());
+                net.route_ids(a, b, &mut |l| la.push(l));
+                Topology::route_ids(&t, a, b, &mut |l| lb.push(l));
+                assert_eq!(la, lb);
+            }
+        }
+        let (mut ea, mut eb) = (Vec::new(), Vec::new());
+        net.for_each_link(&mut |l, c, d, bw| ea.push((l, c, d, bw.to_bits())));
+        Topology::for_each_link(&t, &mut |l, c, d, bw| eb.push((l, c, d, bw.to_bits())));
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn torus_route_ids_matches_route_plus_link_index() {
+        let t = Torus::torus(&[4, 3, 5]);
+        for (a, b) in [(0usize, 37usize), (11, 11), (59, 3), (20, 41)] {
+            let mut via_ids = Vec::new();
+            Topology::route_ids(&t, a, b, &mut |l| via_ids.push(l));
+            let mut via_route = Vec::new();
+            t.route(&t.coords_of(a), &t.coords_of(b), |id, d, dir| {
+                via_route.push(t.link_index(id, d, dir))
+            });
+            assert_eq!(via_ids, via_route);
+        }
+    }
+
+    #[test]
+    fn network_constructors_mirror_torus() {
+        assert!(matches!(Network::torus(&[4]), Network::Torus(_)));
+        assert!(matches!(Network::mesh(&[4]), Network::Torus(_)));
+        let n = Network::new(vec![2, 2], vec![true, false], BwModel::Uniform(3.0));
+        assert_eq!(n.as_torus().unwrap().wrap, vec![true, false]);
+        assert!(Network::from(FatTree::new(2, 2)).as_torus().is_none());
+        assert_eq!(Network::from(Dragonfly::new(2, 2, 1)).kind_name(), "dragonfly");
+    }
+}

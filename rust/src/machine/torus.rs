@@ -293,4 +293,102 @@ mod tests {
         let t = Torus::torus(&[4]);
         assert_eq!(t.signed_dist(0, 0, 2), 2); // exactly half: positive
     }
+
+    #[test]
+    fn signed_dist_antisymmetric_off_ties() {
+        // |signed_dist(a,b)| == |signed_dist(b,a)| always; the signs are
+        // opposite except at the exact-half tie on an even ring (both
+        // positive by the tie-break rule). A mesh is exactly antisymmetric.
+        for size in [3usize, 4, 5, 8] {
+            let t = Torus::torus(&[size]);
+            let m = Torus::mesh(&[size]);
+            for a in 0..size {
+                for b in 0..size {
+                    let (f, r) = (t.signed_dist(0, a, b), t.signed_dist(0, b, a));
+                    assert_eq!(f.unsigned_abs(), r.unsigned_abs(), "{size}: {a}->{b}");
+                    let tie = size % 2 == 0 && f.unsigned_abs() as usize * 2 == size;
+                    if tie {
+                        assert!(f > 0 && r > 0, "{size}: {a}->{b} tie must go positive");
+                    } else {
+                        assert_eq!(f, -r, "{size}: {a}->{b}");
+                    }
+                    assert_eq!(m.signed_dist(0, a, b), -m.signed_dist(0, b, a));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrap_shortcut_beats_mesh_beyond_half() {
+        for size in [5usize, 6, 9] {
+            let t = Torus::torus(&[size]);
+            let m = Torus::mesh(&[size]);
+            for a in 0..size {
+                for b in 0..size {
+                    let (tw, mw) = (t.hop_dist(&[a], &[b]), m.hop_dist(&[a], &[b]));
+                    assert!(tw <= mw);
+                    assert!(tw as usize * 2 <= size, "{size}: {a}->{b} over half");
+                    if mw as usize * 2 <= size {
+                        assert_eq!(tw, mw, "{size}: {a}->{b} under half must agree");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn size_one_dims_are_degenerate() {
+        // Size-1 dimensions contribute nothing: distances ignore them, ids
+        // round-trip, and routes never step along them (wrapped or not).
+        let t = Torus::new(vec![1, 4, 1], vec![true, false, true], BwModel::Uniform(1.0));
+        assert_eq!(t.num_routers(), 4);
+        for id in 0..4 {
+            assert_eq!(t.id_of(&t.coords_of(id)), id);
+        }
+        assert_eq!(t.signed_dist(0, 0, 0), 0);
+        assert_eq!(t.hop_dist(&[0, 0, 0], &[0, 3, 0]), 3);
+        let mut dims = Vec::new();
+        t.route(&[0, 0, 0], &[0, 3, 0], |_, d, _| dims.push(d));
+        assert_eq!(dims, vec![1, 1, 1]);
+        // The all-size-1 corner: a single router, zero everywhere.
+        let unit = Torus::torus(&[1, 1]);
+        assert_eq!(unit.num_routers(), 1);
+        assert_eq!(unit.hop_dist_ids(0, 0), 0);
+        let mut steps = 0usize;
+        unit.route(&[0, 0], &[0, 0], |_, _, _| steps += 1);
+        assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn link_index_route_roundtrip() {
+        // link_index is a dense injection over (router, dim, dir), and the
+        // (id, dim, dir) triples route() visits decode back exactly: no two
+        // distinct hops of one dimension-ordered path share a link slot.
+        let t = Torus::torus(&[3, 4, 2]);
+        let nd = t.dim();
+        let mut seen = vec![false; t.num_directed_links()];
+        for r in 0..t.num_routers() {
+            for d in 0..nd {
+                for dir in 0..2 {
+                    let l = t.link_index(r, d, dir);
+                    assert!(l < t.num_directed_links());
+                    assert!(!seen[l], "duplicate slot ({r},{d},{dir})");
+                    seen[l] = true;
+                    // Decode the dense index back.
+                    assert_eq!(l % 2, dir);
+                    assert_eq!((l / 2) % nd, d);
+                    assert_eq!(l / (2 * nd), r);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "link space must be exactly covered");
+        let (a, b) = ([2, 0, 1], [0, 3, 0]);
+        let mut path = Vec::new();
+        t.route(&a, &b, |id, d, dir| path.push(t.link_index(id, d, dir)));
+        assert_eq!(path.len() as u64, t.hop_dist(&a, &b));
+        let mut uniq = path.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), path.len(), "a minimal route repeats no link");
+    }
 }

@@ -77,6 +77,55 @@ impl MapConfig {
     }
 }
 
+/// The shared mapping knobs every pipeline level consumes: what to
+/// optimize (`objective` × `numa`), the worker-thread budget, and the
+/// optional multilevel coarsening pre-pass. [`rotations::SweepConfig`],
+/// [`pipeline::Z2Config`], and [`crate::hier::HierConfig`] each embed one
+/// `MapSpec` (and convert from one via `From`), so these knobs are
+/// declared — and documented — exactly once instead of once per config.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MapSpec {
+    /// What the mapper minimizes. `WeightedHops` (the paper's Eqn. 3)
+    /// scores through the batched f32 kernel backend on torus machines;
+    /// routed objectives — and every objective on non-torus topologies —
+    /// score through the sequential f64 evaluator, so results stay
+    /// bit-identical at every thread count either way.
+    pub objective: crate::objective::ObjectiveKind,
+    /// NUMA model of a node: when set, node-level scoring prices
+    /// still-unsplit intra-node edges at the topology's socket cost, and
+    /// the hierarchical mapper runs at depth 3 (socket split + refinement
+    /// inside each node). See [`crate::objective::EvalSpec::validate`]
+    /// for the supported `objective` × `numa` combinations.
+    pub numa: Option<crate::machine::NumaTopology>,
+    /// Worker threads: `0` = auto (`TASKMAP_THREADS` or the machine's
+    /// parallelism), `1` = the sequential reference path. Every mapper
+    /// is bit-identical at every thread count.
+    pub threads: usize,
+    /// Multilevel coarsening V-cycle in front of the node-level sweep
+    /// ([`crate::coarsen`]); implies hierarchical mode in the Z2
+    /// pipeline. Ignored by the flat rotation sweep itself.
+    pub coarsen: Option<crate::coarsen::CoarsenConfig>,
+}
+
+impl MapSpec {
+    /// The thread budget as a [`Parallelism`].
+    pub fn parallelism(&self) -> Parallelism {
+        match self.threads {
+            0 => Parallelism::auto(),
+            n => Parallelism::threads(n),
+        }
+    }
+
+    /// The unified-evaluator spec: the objective plus the node-level
+    /// NUMA costs derived from the topology (if any).
+    pub fn eval_spec(&self) -> crate::objective::eval::EvalSpec {
+        crate::objective::eval::EvalSpec::new(
+            self.objective,
+            self.numa.map(|t| t.node_level_costs()),
+        )
+    }
+}
+
 /// Chop a coordinate set into `np` balanced parts along the Hilbert curve,
 /// writing part ids into `part`.
 fn hilbert_partition_into(coords: &Coords, np: usize, part: &mut Vec<u32>) {

@@ -14,13 +14,13 @@
 //! partitioning processors) is `drop_proc_dims: vec![4]`.
 //!
 //! Strategies with `max_rotations > 1` run the parallel rotation sweep
-//! (`Z2Config::threads`, 0 = auto); the chosen mapping is bit-identical at
-//! every thread count, so strategy outputs stay exactly reproducible.
+//! ([`MapSpec::threads`], 0 = auto); the chosen mapping is bit-identical
+//! at every thread count, so strategy outputs stay exactly reproducible.
 
 use super::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
 use super::shift::shift_torus_coords;
 use super::transforms::{bandwidth_scale, box_transform};
-use super::MapConfig;
+use super::{MapConfig, MapSpec};
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
 use crate::machine::Allocation;
@@ -44,30 +44,28 @@ pub struct Z2Config {
     pub shift: bool,
     /// Rotation-sweep candidate cap (1 = identity rotation only).
     pub max_rotations: usize,
-    /// Worker threads for the rotation sweep: `0` = auto
-    /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = sequential.
-    /// The mapping is bit-identical at every thread count.
-    pub threads: usize,
-    /// What the strategy optimizes: the rotation sweep scores candidates
-    /// under this objective, and (in hierarchical mode) `MinVolume`
-    /// refinement computes its swap gains against it. `WeightedHops` is
-    /// the paper's default.
-    pub objective: crate::objective::ObjectiveKind,
+    /// The shared knobs: objective × NUMA pricing, worker threads, and the
+    /// coarsening pre-pass. `spec.coarsen` implies hierarchical mode —
+    /// when set without `hier`, the default `MinVolume` intra-node
+    /// strategy is used.
+    pub spec: MapSpec,
     /// Hierarchical node→core mode: when set, the strategy runs the
     /// two-level [`crate::hier`] mapper (node-level MJ sweep + the given
     /// intra-node strategy) instead of the flat rank-level partition.
     /// `ordering`/`longest_dim`/`uneven_prime`/`shift`/`drop_proc_dims`/
-    /// `max_rotations`/`threads` all carry over to the node level;
+    /// `max_rotations`/`spec` all carry over to the node level;
     /// `bw_scale` and `box_transform` are rank-level transforms and are
     /// ignored in hierarchical mode.
     pub hier: Option<crate::hier::IntraNodeStrategy>,
-    /// Multilevel coarsening V-cycle in front of the node-level sweep
-    /// ([`crate::coarsen`]): implies hierarchical mode — when set without
-    /// `hier`, the default `MinVolume` intra-node strategy is used. The
-    /// task graph is coarsened to the configured size budget, the sweep
-    /// solves the coarsest instance, and per-level refinement polishes the
-    /// projected mapping on the way back up.
-    pub coarsen: Option<crate::coarsen::CoarsenConfig>,
+}
+
+impl From<MapSpec> for Z2Config {
+    fn from(spec: MapSpec) -> Self {
+        Z2Config {
+            spec,
+            ..Z2Config::z2_1()
+        }
+    }
 }
 
 impl Z2Config {
@@ -82,10 +80,8 @@ impl Z2Config {
             drop_proc_dims: vec![],
             shift: true,
             max_rotations: 36,
-            threads: 0,
-            objective: crate::objective::ObjectiveKind::WeightedHops,
+            spec: MapSpec::default(),
             hier: None,
-            coarsen: None,
         }
     }
 
@@ -123,15 +119,17 @@ impl Z2Config {
 }
 
 /// Prepare processor coordinates per the strategy: box transform or
-/// (shift + bandwidth scale), then axis dropping.
+/// (shift + bandwidth scale), then axis dropping. The shift and bandwidth
+/// scale consume torus geometry and are skipped on non-torus machines
+/// (their embeddings already encode the hierarchy — see
+/// [`crate::machine::Topology::embed_coords`]).
 pub fn prepare_proc_coords(alloc: &Allocation, cfg: &Z2Config) -> Coords {
-    let torus = &alloc.torus;
     let mut pcoords = alloc.proc_coords();
     if let Some((boxes, outer_scale)) = cfg.box_transform {
         // Box transform consumes raw integer coordinates; the box grid
         // already encodes the machine hierarchy, so no shift on top.
         pcoords = box_transform(&pcoords, boxes, outer_scale);
-    } else {
+    } else if let Some(torus) = alloc.machine.as_torus() {
         if cfg.shift {
             shift_torus_coords(&mut pcoords, &torus.sizes, &torus.wrap);
         }
@@ -158,7 +156,7 @@ pub fn z2_map(
     cfg: &Z2Config,
     backend: &dyn WhopsBackend,
 ) -> Vec<u32> {
-    if cfg.hier.is_some() || cfg.coarsen.is_some() {
+    if cfg.hier.is_some() || cfg.spec.coarsen.is_some() {
         let intra = cfg
             .hier
             .unwrap_or(crate::hier::IntraNodeStrategy::MinVolume { passes: 4 });
@@ -168,9 +166,7 @@ pub fn z2_map(
             shift: cfg.shift,
             drop_node_dims: cfg.drop_proc_dims.clone(),
             max_rotations: cfg.max_rotations,
-            threads: cfg.threads,
-            objective: cfg.objective,
-            coarsen: cfg.coarsen,
+            spec: cfg.spec,
             ..crate::hier::HierConfig::default()
         };
         return crate::hier::map_hierarchical(graph, tcoords, alloc, &hcfg, backend)
@@ -183,8 +179,7 @@ pub fn z2_map(
     }
     let sweep = SweepConfig {
         max_candidates: cfg.max_rotations,
-        threads: cfg.threads,
-        objective: cfg.objective,
+        spec: cfg.spec,
         ..Default::default()
     };
     rotation_sweep(graph, tcoords, &pcoords, alloc, &map_cfg, &sweep, backend).task_to_rank
@@ -253,7 +248,7 @@ pub fn part_centroids(coords: &Coords, part_of: &[u32], num_parts: usize) -> Coo
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
-    use crate::machine::{Allocation, SparseAllocator, Torus};
+    use crate::machine::{Allocation, Network, SparseAllocator, Torus};
     use crate::mapping::rotations::NativeBackend;
     use crate::metrics::eval_hops;
 
@@ -335,7 +330,7 @@ mod tests {
         for hier in [None, Some(crate::hier::IntraNodeStrategy::MinVolume { passes: 2 })] {
             let mut cfg = Z2Config::z2_1();
             cfg.max_rotations = 4;
-            cfg.objective = ObjectiveKind::MaxLinkLoad;
+            cfg.spec.objective = ObjectiveKind::MaxLinkLoad;
             cfg.hier = hier;
             let m = z2_map(&g, &g.coords, &alloc, &cfg, &NativeBackend);
             let mut s = m.clone();
@@ -374,7 +369,7 @@ mod tests {
         // Tasks in the same SFC part must land on the same rank.
         let g = stencil_graph(&[8, 8], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[4, 4]),
+            machine: Network::torus(&[4, 4]),
             core_router: (0..16u32).collect(),
             core_node: (0..16u32).collect(),
             ranks_per_node: 1,

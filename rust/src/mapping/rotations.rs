@@ -3,7 +3,7 @@
 //! dimensions are visited, so up to `td!·pd!` axis-permutation candidates
 //! are generated and the one with the lowest objective value wins —
 //! WeightedHops (Eqn. 3) by default, or any routed
-//! [`crate::objective::ObjectiveKind`] via [`SweepConfig::objective`].
+//! [`crate::objective::ObjectiveKind`] via [`MapSpec::objective`].
 //!
 //! In the paper each MPI process computes one rotation and an Allreduce
 //! picks the winner; here the sweep fans the candidates out across a
@@ -26,21 +26,24 @@
 //!
 //! WeightedHops scoring runs on the `batched_weighted_hops` kernel —
 //! either the AOT artifact runtime (`runtime::PjrtBackend`) or the
-//! bit-equivalent native fallback. Every other objective combination —
-//! routed (`MaxLinkLoad`, `CongestionBlend`), NUMA node-level pricing, and
-//! the blended routed × NUMA spec — scores each candidate with one
-//! sequential f64 pass through the unified evaluator
-//! ([`crate::objective::eval`], per-worker
-//! [`crate::metrics::LinkAccumulator`] scratch); either way a candidate's
-//! score is a pure function of its mapping, so the sweep stays
-//! bit-identical at every thread count.
+//! bit-equivalent native fallback — when the allocation's machine is a
+//! torus (the kernel encodes torus geometry directly). Every other
+//! combination — routed objectives (`MaxLinkLoad`, `CongestionBlend`),
+//! NUMA node-level pricing, the blended routed × NUMA spec, and *any*
+//! objective on a non-torus [`crate::machine::Topology`] (fat-tree,
+//! dragonfly) — scores each candidate with one sequential f64 pass
+//! through the unified evaluator ([`crate::objective::eval`], per-worker
+//! [`crate::metrics::LinkAccumulator`] scratch) or a plain
+//! `Σ w · hop_dist` loop; either way a candidate's score is a pure
+//! function of its mapping, so the sweep stays bit-identical at every
+//! thread count.
 
 use super::{
-    map_tasks_with_proc, MapConfig, MappingScratch, ProcPartitionCache,
+    map_tasks_with_proc, MapConfig, MapSpec, MappingScratch, ProcPartitionCache,
 };
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
-use crate::machine::{Allocation, NumaNodeCosts};
+use crate::machine::{Allocation, Topology};
 use crate::metrics::native::batched_weighted_hops_native_par;
 use crate::metrics::LinkAccumulator;
 use crate::mj::MjScratch;
@@ -137,24 +140,10 @@ pub struct SweepConfig {
     /// Edge-chunk size for batched scoring (bounds peak memory and matches
     /// the AOT artifact padding).
     pub chunk_edges: usize,
-    /// Worker threads for the candidate fan-out: `0` = auto
-    /// (`TASKMAP_THREADS` or the machine's parallelism), `1` = the
-    /// sequential reference path. The result is identical either way.
-    pub threads: usize,
-    /// What the sweep minimizes. `WeightedHops` scores through the batched
-    /// f32 kernel backend (the paper's path); routed objectives score
-    /// through the f64 routed-link evaluator.
-    pub objective: ObjectiveKind,
-    /// NUMA node-level pricing (the depth-3 hierarchical mapper's node
-    /// sweep): intra-node edges cost a flat `socket` — the upper bound the
-    /// later socket split tightens — on top of the network term. Under
-    /// `WeightedHops` the `hop` factor additionally scales the network
-    /// term; under the routed objectives the blended evaluator layers the
-    /// socket term onto the routed link latencies (`hop` must be 1 there —
-    /// see [`crate::objective::EvalSpec::validate`]). Scored sequentially
-    /// in f64 per candidate, so the sweep stays bit-identical at every
-    /// thread count.
-    pub numa: Option<NumaNodeCosts>,
+    /// The shared knobs: objective × NUMA pricing and the worker-thread
+    /// budget ([`MapSpec::coarsen`] is ignored here — coarsening wraps the
+    /// sweep from [`crate::hier`], it does not run inside it).
+    pub spec: MapSpec,
 }
 
 impl Default for SweepConfig {
@@ -162,19 +151,23 @@ impl Default for SweepConfig {
         SweepConfig {
             max_candidates: 36,
             chunk_edges: 32768,
-            threads: 0,
-            objective: ObjectiveKind::WeightedHops,
-            numa: None,
+            spec: MapSpec::default(),
+        }
+    }
+}
+
+impl From<MapSpec> for SweepConfig {
+    fn from(spec: MapSpec) -> Self {
+        SweepConfig {
+            spec,
+            ..Default::default()
         }
     }
 }
 
 impl SweepConfig {
     fn parallelism(&self) -> Parallelism {
-        match self.threads {
-            0 => Parallelism::auto(),
-            n => Parallelism::threads(n),
-        }
+        self.spec.parallelism()
     }
 }
 
@@ -184,7 +177,7 @@ pub struct SweepResult {
     pub task_to_rank: Vec<u32>,
     /// Index of the winning candidate.
     pub chosen: usize,
-    /// Objective value per candidate ([`SweepConfig::objective`];
+    /// Objective value per candidate ([`MapSpec::objective`];
     /// WeightedHops by default).
     pub scores: Vec<f64>,
     /// The (task_perm, proc_perm) of each candidate.
@@ -248,11 +241,11 @@ impl ObjectiveScratch {
 }
 
 /// Per-sweep candidate scorer, collapsed onto the unified evaluator: the
-/// plain-WeightedHops spec keeps the kernel-backend path (and its f32
-/// accumulation semantics, so default-objective sweeps score exactly as
-/// before); every other [`EvalSpec`] combination — routed, NUMA, and the
-/// blended routed × NUMA — evaluates through one sequential f64 pass per
-/// candidate in [`crate::objective::eval`].
+/// plain-WeightedHops spec on a torus machine keeps the kernel-backend
+/// path (and its f32 accumulation semantics, so default-objective torus
+/// sweeps score exactly as before); every other [`EvalSpec`] combination —
+/// routed, NUMA, the blended routed × NUMA, and any spec on a non-torus
+/// topology — evaluates through one sequential f64 pass per candidate.
 enum CandidateScorer<'a> {
     Whops(BatchScorer<'a>),
     Eval {
@@ -271,18 +264,18 @@ impl<'a> CandidateScorer<'a> {
         alloc: &'a Allocation,
         sweep: &SweepConfig,
     ) -> CandidateScorer<'a> {
-        let spec = EvalSpec::new(sweep.objective, sweep.numa);
+        let spec = sweep.spec.eval_spec();
         if let Err(e) = spec.validate() {
             panic!("unsupported sweep objective combination: {e}");
         }
-        if spec == EvalSpec::default() {
+        if spec == EvalSpec::default() && alloc.machine.as_torus().is_some() {
             return CandidateScorer::Whops(BatchScorer::new(graph, alloc, sweep.chunk_edges));
         }
         let costs = spec
             .objective
             .get()
             .needs_routing()
-            .then(|| LinkCosts::new(&alloc.torus));
+            .then(|| LinkCosts::new(&alloc.machine));
         CandidateScorer::Eval {
             graph,
             alloc,
@@ -307,6 +300,22 @@ impl<'a> CandidateScorer<'a> {
                 spec,
                 costs,
             } => match (spec.objective, spec.numa) {
+                (ObjectiveKind::WeightedHops, None) => {
+                    // Plain WeightedHops on a non-torus topology: one
+                    // sequential f64 pass in edge order over the machine's
+                    // hop metric (intra-node edges share a router, so they
+                    // price at zero exactly like the kernel path).
+                    let machine = &alloc.machine;
+                    graph
+                        .edges
+                        .iter()
+                        .map(|e| {
+                            let qa = alloc.core_router[mapping[e.u as usize] as usize] as usize;
+                            let qb = alloc.core_router[mapping[e.v as usize] as usize] as usize;
+                            e.w * machine.hop_dist_ids(qa, qb) as f64
+                        })
+                        .sum()
+                }
                 (ObjectiveKind::WeightedHops, Some(c)) => {
                     numa_node_score(graph, mapping, alloc, c)
                 }
@@ -314,7 +323,7 @@ impl<'a> CandidateScorer<'a> {
                     let costs = costs.as_ref().expect("routed objectives build LinkCosts");
                     let acc = scratch
                         .routed
-                        .get_or_insert_with(|| LinkAccumulator::new(&alloc.torus));
+                        .get_or_insert_with(|| LinkAccumulator::new(&alloc.machine));
                     match numa {
                         None => kind.get().score_one(graph, mapping, alloc, costs, acc),
                         Some(c) => blended_candidate_score(
@@ -343,10 +352,13 @@ pub struct BatchScorer<'a> {
 
 impl<'a> BatchScorer<'a> {
     pub fn new(graph: &'a TaskGraph, alloc: &Allocation, chunk_edges: usize) -> Self {
-        let d = alloc.torus.dim();
-        let dims: Vec<f32> = alloc.torus.sizes.iter().map(|&s| s as f32).collect();
-        let wrap: Vec<f32> = alloc
-            .torus
+        let torus = alloc
+            .machine
+            .as_torus()
+            .expect("BatchScorer consumes torus geometry; non-torus sweeps use the f64 evaluator");
+        let d = torus.dim();
+        let dims: Vec<f32> = torus.sizes.iter().map(|&s| s as f32).collect();
+        let wrap: Vec<f32> = torus
             .wrap
             .iter()
             .map(|&w| if w { 1.0 } else { 0.0 })
@@ -355,9 +367,7 @@ impl<'a> BatchScorer<'a> {
         let mut rank_coords = vec![0f32; nranks * d];
         let mut buf = vec![0usize; d];
         for rank in 0..nranks {
-            alloc
-                .torus
-                .coords_into(alloc.core_router[rank] as usize, &mut buf);
+            torus.coords_into(alloc.core_router[rank] as usize, &mut buf);
             for k in 0..d {
                 rank_coords[rank * d + k] = buf[k] as f32;
             }
@@ -477,7 +487,7 @@ pub fn score_mappings_par(
 /// under [`SweepConfig::objective`]. `pcoords` are the (possibly
 /// transformed) processor coordinates used for partitioning; scoring always
 /// uses the true router coordinates from `alloc`. Candidates fan out across
-/// `sweep.threads` workers; the result is bit-identical at every thread
+/// [`MapSpec::threads`] workers; the result is bit-identical at every thread
 /// count.
 pub fn rotation_sweep(
     graph: &TaskGraph,
@@ -571,12 +581,12 @@ pub fn rotation_sweep(
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
-    use crate::machine::{Allocation, Torus};
+    use crate::machine::{Allocation, Network, NumaNodeCosts, NumaTopology};
     use crate::metrics::eval_hops;
 
     fn line_alloc(n: usize) -> Allocation {
         Allocation {
-            torus: Torus::torus(&[n]),
+            machine: Network::torus(&[n]),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -689,7 +699,7 @@ mod tests {
         // candidate whose score equals the min of all scores.
         let g = stencil_graph(&[4, 8], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[8, 4]),
+            machine: Network::torus(&[8, 4]),
             core_router: (0..32u32).collect(),
             core_node: (0..32u32).collect(),
             ranks_per_node: 1,
@@ -718,7 +728,7 @@ mod tests {
         // the worst one (otherwise the sweep is pointless).
         let g = stencil_graph(&[2, 16], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[16, 2]),
+            machine: Network::torus(&[16, 2]),
             core_router: (0..32u32).collect(),
             core_node: (0..32u32).collect(),
             ranks_per_node: 1,
@@ -748,7 +758,7 @@ mod tests {
         use crate::objective::ObjectiveKind;
         let g = stencil_graph(&[2, 16], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[16, 2]),
+            machine: Network::torus(&[16, 2]),
             core_router: (0..32u32).collect(),
             core_node: (0..32u32).collect(),
             ranks_per_node: 1,
@@ -759,7 +769,10 @@ mod tests {
         };
         for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
             let sweep = SweepConfig {
-                objective,
+                spec: MapSpec {
+                    objective,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let res = rotation_sweep(
@@ -791,7 +804,7 @@ mod tests {
         let g = stencil_graph(&[2, 16], false, 1.0);
         // 16 nodes of 2 ranks each on a 16-ring.
         let alloc = Allocation {
-            torus: Torus::torus(&[16]),
+            machine: Network::torus(&[16]),
             core_router: (0..32u32).map(|r| r / 2).collect(),
             core_node: (0..32u32).map(|r| r / 2).collect(),
             ranks_per_node: 2,
@@ -800,8 +813,12 @@ mod tests {
             hop: 1.0,
             socket: 0.5,
         };
+        // node_level_costs() of this topology is exactly `costs`.
         let sweep = SweepConfig {
-            numa: Some(costs),
+            spec: MapSpec {
+                numa: Some(NumaTopology::new(1, 2, 0.5, 0.0, 1.0)),
+                ..Default::default()
+            },
             ..Default::default()
         };
         let map_cfg = MapConfig {
@@ -835,7 +852,7 @@ mod tests {
         let g = stencil_graph(&[2, 16], false, 1.0);
         // 16 nodes of 2 ranks each on a 16-ring.
         let alloc = Allocation {
-            torus: Torus::torus(&[16]),
+            machine: Network::torus(&[16]),
             core_router: (0..32u32).map(|r| r / 2).collect(),
             core_node: (0..32u32).map(|r| r / 2).collect(),
             ranks_per_node: 2,
@@ -846,8 +863,11 @@ mod tests {
         };
         for objective in [ObjectiveKind::MaxLinkLoad, ObjectiveKind::CongestionBlend] {
             let sweep = SweepConfig {
-                objective,
-                numa: Some(costs),
+                spec: MapSpec {
+                    objective,
+                    numa: Some(NumaTopology::new(1, 2, 0.5, 0.0, 1.0)),
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let map_cfg = MapConfig {
@@ -865,8 +885,8 @@ mod tests {
             );
             let min = res.scores.iter().cloned().fold(f64::INFINITY, f64::min);
             assert_eq!(res.scores[res.chosen], min, "{objective:?}");
-            let link_costs = LinkCosts::new(&alloc.torus);
-            let mut acc = LinkAccumulator::new(&alloc.torus);
+            let link_costs = LinkCosts::new(&alloc.machine);
+            let mut acc = LinkAccumulator::new(&alloc.machine);
             let want = blended_candidate_score(
                 &g,
                 &res.task_to_rank,
@@ -884,7 +904,7 @@ mod tests {
     fn sweep_parallel_bit_identical_and_matches_direct_mapping() {
         let g = stencil_graph(&[4, 8], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[8, 4]),
+            machine: Network::torus(&[8, 4]),
             core_router: (0..32u32).collect(),
             core_node: (0..32u32).collect(),
             ranks_per_node: 1,
@@ -895,7 +915,10 @@ mod tests {
             ..Default::default()
         };
         let mk = |threads| SweepConfig {
-            threads,
+            spec: MapSpec {
+                threads,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let seq = rotation_sweep(&g, &g.coords, &p, &alloc, &map_cfg, &mk(1), &NativeBackend);
@@ -921,7 +944,7 @@ mod tests {
     fn sweep_emits_candidate_instants_in_index_order() {
         let g = stencil_graph(&[4, 8], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[8, 4]),
+            machine: Network::torus(&[8, 4]),
             core_router: (0..32u32).collect(),
             core_node: (0..32u32).collect(),
             ranks_per_node: 1,
@@ -935,7 +958,10 @@ mod tests {
                 &alloc,
                 &MapConfig::default(),
                 &SweepConfig {
-                    threads: 2,
+                    spec: MapSpec {
+                        threads: 2,
+                        ..Default::default()
+                    },
                     ..Default::default()
                 },
                 &NativeBackend,

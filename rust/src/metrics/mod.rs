@@ -4,8 +4,10 @@
 //! Evaluation takes a task graph, a task-to-rank assignment, and an
 //! `Allocation` (which ties ranks to nodes and routers). Messages between
 //! ranks in the same node never enter the network (zero hops, no link
-//! data); messages between nodes follow dimension-ordered shortest-path
-//! routing (static routing, single path — the Section 3 assumptions).
+//! data); messages between nodes follow the topology's deterministic
+//! routing — dimension-ordered on the torus (static routing, single path —
+//! the Section 3 assumptions), up/down on the fat-tree, minimal (or
+//! one-hop-Valiant) on the dragonfly.
 //!
 //! # Parallel evaluation
 //!
@@ -22,7 +24,7 @@
 pub mod native;
 
 use crate::apps::TaskGraph;
-use crate::machine::Allocation;
+use crate::machine::{Allocation, Topology};
 use crate::par::{self, Parallelism};
 
 /// Default edge-chunk size for [`eval_full`]'s parallel fan-out. The chunk
@@ -64,11 +66,14 @@ pub struct LinkMetrics {
     /// Number of directed links that exist in the topology (mesh boundary
     /// routers lack the outward link).
     pub num_links: usize,
-    /// Per (dimension, direction): [dim][0]=+, [dim][1]=-.
+    /// Per (link class, direction). On the torus the class is the dimension
+    /// and `[dim][0]`=+, `[dim][1]`=-; the fat-tree classes are tree levels
+    /// (0 = below the root) with dir 0=up/1=down; the dragonfly has class
+    /// 0=local, 1=global with a single direction slot 0.
     pub per_dim: Vec<[DimStats; 2]>,
 }
 
-/// Aggregates for one (dimension, direction) link class.
+/// Aggregates for one (link class, direction) bucket.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DimStats {
     pub max_data: f64,
@@ -80,10 +85,7 @@ pub struct DimStats {
 /// Evaluate hop metrics only (cheap: no routing, no link arrays).
 pub fn eval_hops(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) -> Metrics {
     assert_eq!(task_to_rank.len(), graph.num_tasks);
-    let torus = &alloc.torus;
-    let dim = torus.dim();
-    let mut ca = vec![0usize; dim];
-    let mut cb = vec![0usize; dim];
+    let machine = &alloc.machine;
     let mut total_hops = 0f64;
     let mut weighted_hops = 0f64;
     let mut messages = 0u64;
@@ -95,9 +97,7 @@ pub fn eval_hops(graph: &TaskGraph, task_to_rank: &[u32], alloc: &Allocation) ->
         }
         messages += 2;
         let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
-        torus.coords_into(qa, &mut ca);
-        torus.coords_into(qb, &mut cb);
-        let h = torus.hop_dist(&ca, &cb) as f64;
+        let h = machine.hop_dist_ids(qa, qb) as f64;
         total_hops += h;
         weighted_hops += e.w * h;
     }
@@ -139,11 +139,9 @@ struct EvalPartial {
     load: Vec<(u32, f64)>,
 }
 
-/// Per-worker scratch: coordinate buffers plus the dense link accumulator
-/// that turns each chunk's routed loads into a sparse partial.
+/// Per-worker scratch: the dense link accumulator that turns each chunk's
+/// routed loads into a sparse partial.
 struct EvalScratch {
-    ca: Vec<usize>,
-    cb: Vec<usize>,
     acc: LinkAccumulator,
 }
 
@@ -159,9 +157,8 @@ pub fn eval_full_chunked(
     chunk_edges: usize,
 ) -> Metrics {
     assert_eq!(task_to_rank.len(), graph.num_tasks);
-    let torus = &alloc.torus;
-    let dim = torus.dim();
-    let nlinks = torus.num_directed_links();
+    let machine = &alloc.machine;
+    let nlinks = machine.num_directed_links();
     let ne = graph.edges.len();
     let chunk = chunk_edges.max(1);
     let chunks: Vec<usize> = (0..ne.div_ceil(chunk)).collect();
@@ -169,9 +166,7 @@ pub fn eval_full_chunked(
         par,
         &chunks,
         || EvalScratch {
-            ca: vec![0usize; dim],
-            cb: vec![0usize; dim],
-            acc: LinkAccumulator::new(torus),
+            acc: LinkAccumulator::new(machine),
         },
         |s, _i, &c| {
             let lo = c * chunk;
@@ -182,7 +177,7 @@ pub fn eval_full_chunked(
                 messages: 0,
                 load: Vec::new(),
             };
-            let EvalScratch { ca, cb, acc } = s;
+            let EvalScratch { acc } = s;
             acc.reset();
             for e in &graph.edges[lo..hi] {
                 let ra = task_to_rank[e.u as usize] as usize;
@@ -193,12 +188,10 @@ pub fn eval_full_chunked(
                 p.messages += 2;
                 let (qa, qb) =
                     (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
-                torus.coords_into(qa, ca);
-                torus.coords_into(qb, cb);
-                let h = torus.hop_dist(ca, cb) as f64;
+                let h = machine.hop_dist_ids(qa, qb) as f64;
                 p.hops += h;
                 p.weighted_hops += e.w * h;
-                acc.add_routed(torus, ca, cb, e.w);
+                acc.add_pair(machine, qa, qb, e.w);
             }
             // Extract the chunk's sparse loads (first-touch order, like the
             // accumulation itself); the reset at chunk start keeps the
@@ -230,66 +223,54 @@ pub fn eval_full_chunked(
         weighted_hops,
         total_messages: messages,
         num_edges: ne,
-        link: Some(summarize_links(torus, &load)),
+        link: Some(summarize_links(machine, &load)),
     }
 }
 
-/// Reduce a per-directed-link load array into `LinkMetrics`.
-pub fn summarize_links(torus: &crate::machine::Torus, load: &[f64]) -> LinkMetrics {
-    let dim = torus.dim();
-    let nr = torus.num_routers();
+/// Reduce a per-directed-link load array into `LinkMetrics`. Links are
+/// visited in the topology's [`Topology::for_each_link`] order — on the
+/// torus that is the historical router → dimension → direction iteration,
+/// so aggregates are bit-identical to the pre-trait implementation.
+pub fn summarize_links(topo: &dyn Topology, load: &[f64]) -> LinkMetrics {
+    let nclasses = topo.num_link_classes();
     let mut lm = LinkMetrics {
-        per_dim: vec![[DimStats::default(); 2]; dim],
+        per_dim: vec![[DimStats::default(); 2]; nclasses],
         ..Default::default()
     };
     let mut total = 0f64;
-    let mut counts = vec![[0usize; 2]; dim];
-    let mut sums = vec![[0f64; 2]; dim];
-    let mut lat_sums = vec![[0f64; 2]; dim];
-    let mut coords = vec![0usize; dim];
-    for router in 0..nr {
-        torus.coords_into(router, &mut coords);
-        for d in 0..dim {
-            for dir in 0..2 {
-                // Mesh boundaries: the outward link does not exist.
-                if !torus.wrap[d] {
-                    let c = coords[d];
-                    if (dir == 0 && c + 1 == torus.sizes[d]) || (dir == 1 && c == 0) {
-                        continue;
-                    }
-                }
-                let data = load[torus.link_index(router, d, dir)];
-                let bw = torus.link_bandwidth(&coords, d, if dir == 0 { 1 } else { -1 });
-                let lat = data / bw;
-                let s = &mut lm.per_dim[d][dir];
-                if data > s.max_data {
-                    s.max_data = data;
-                }
-                if lat > s.max_latency {
-                    s.max_latency = lat;
-                }
-                sums[d][dir] += data;
-                lat_sums[d][dir] += lat;
-                counts[d][dir] += 1;
-                total += data;
-                if data > lm.max_data {
-                    lm.max_data = data;
-                }
-                if lat > lm.max_latency {
-                    lm.max_latency = lat;
-                }
-            }
+    let mut counts = vec![[0usize; 2]; nclasses];
+    let mut sums = vec![[0f64; 2]; nclasses];
+    let mut lat_sums = vec![[0f64; 2]; nclasses];
+    topo.for_each_link(&mut |l, class, dir, bw| {
+        let data = load[l];
+        let lat = data / bw;
+        let s = &mut lm.per_dim[class][dir];
+        if data > s.max_data {
+            s.max_data = data;
         }
-    }
+        if lat > s.max_latency {
+            s.max_latency = lat;
+        }
+        sums[class][dir] += data;
+        lat_sums[class][dir] += lat;
+        counts[class][dir] += 1;
+        total += data;
+        if data > lm.max_data {
+            lm.max_data = data;
+        }
+        if lat > lm.max_latency {
+            lm.max_latency = lat;
+        }
+    });
     let total_links: usize = counts.iter().map(|c| c[0] + c[1]).sum();
     lm.avg_data = total / total_links.max(1) as f64;
     lm.num_links = total_links;
-    for d in 0..dim {
+    for class in 0..nclasses {
         for dir in 0..2 {
-            let n = counts[d][dir].max(1) as f64;
-            lm.per_dim[d][dir].avg_data = sums[d][dir] / n;
-            lm.per_dim[d][dir].avg_latency = lat_sums[d][dir] / n;
-            lm.sum_latency += lat_sums[d][dir];
+            let n = counts[class][dir].max(1) as f64;
+            lm.per_dim[class][dir].avg_data = sums[class][dir] / n;
+            lm.per_dim[class][dir].avg_latency = lat_sums[class][dir] / n;
+            lm.sum_latency += lat_sums[class][dir];
         }
     }
     lm
@@ -301,29 +282,25 @@ pub fn summarize_links(torus: &crate::machine::Torus, load: &[f64]) -> LinkMetri
 /// allocation and reset in O(touched) instead of O(links).
 ///
 /// [`add_pair`](LinkAccumulator::add_pair) is the O(path-length) primitive
-/// everything else builds on: it walks the dimension-ordered route between
-/// two routers in both directions and adds a (possibly negative) volume to
-/// every link traversed — exactly the per-edge inner loop of [`eval_full`],
-/// exposed so the [`crate::objective`] layer can re-route single edges
-/// incrementally instead of re-evaluating whole mappings.
+/// everything else builds on: it walks the topology's deterministic route
+/// between two routers in both directions and adds a (possibly negative)
+/// volume to every link traversed — exactly the per-edge inner loop of
+/// [`eval_full`], exposed so the [`crate::objective`] layer can re-route
+/// single edges incrementally instead of re-evaluating whole mappings.
 pub struct LinkAccumulator {
     load: Vec<f64>,
     /// Dedup marker per link: `touched` holds each link at most once even
     /// when deltas cancel back to exactly 0.0.
     mark: Vec<bool>,
     touched: Vec<u32>,
-    ca: Vec<usize>,
-    cb: Vec<usize>,
 }
 
 impl LinkAccumulator {
-    pub fn new(torus: &crate::machine::Torus) -> Self {
+    pub fn new(topo: &dyn Topology) -> Self {
         LinkAccumulator {
-            load: vec![0f64; torus.num_directed_links()],
-            mark: vec![false; torus.num_directed_links()],
+            load: vec![0f64; topo.num_directed_links()],
+            mark: vec![false; topo.num_directed_links()],
             touched: Vec::new(),
-            ca: vec![0usize; torus.dim()],
-            cb: vec![0usize; torus.dim()],
         }
     }
 
@@ -347,68 +324,34 @@ impl LinkAccumulator {
         self.load[link]
     }
 
-    /// Add `w` (may be negative) along the dimension-ordered routes
-    /// `qa -> qb` **and** `qb -> qa` (both endpoints send). O(path length).
-    pub fn add_pair(&mut self, torus: &crate::machine::Torus, qa: usize, qb: usize, w: f64) {
-        torus.coords_into(qa, &mut self.ca);
-        torus.coords_into(qb, &mut self.cb);
-        accumulate_routes(
-            torus,
-            &self.ca,
-            &self.cb,
-            w,
-            &mut self.load,
-            &mut self.mark,
-            &mut self.touched,
-        );
+    /// Add `w` (may be negative) along the deterministic routes `qa -> qb`
+    /// **and** `qb -> qa` (both endpoints send). O(path length).
+    pub fn add_pair(&mut self, topo: &dyn Topology, qa: usize, qb: usize, w: f64) {
+        let load = &mut self.load;
+        let mark = &mut self.mark;
+        let touched = &mut self.touched;
+        let mut visit = |l: usize| {
+            if !mark[l] {
+                mark[l] = true;
+                touched.push(l as u32);
+            }
+            load[l] += w;
+        };
+        topo.route_ids(qa, qb, &mut visit);
+        topo.route_ids(qb, qa, &mut visit);
     }
-
-    /// [`add_pair`](LinkAccumulator::add_pair) with the endpoint
-    /// coordinates already materialized (callers that also need them for
-    /// hop distances avoid recomputing them here).
-    pub fn add_routed(
-        &mut self,
-        torus: &crate::machine::Torus,
-        ca: &[usize],
-        cb: &[usize],
-        w: f64,
-    ) {
-        accumulate_routes(torus, ca, cb, w, &mut self.load, &mut self.mark, &mut self.touched);
-    }
-}
-
-/// Shared body of the [`LinkAccumulator`] route accumulation.
-fn accumulate_routes(
-    torus: &crate::machine::Torus,
-    ca: &[usize],
-    cb: &[usize],
-    w: f64,
-    load: &mut [f64],
-    mark: &mut [bool],
-    touched: &mut Vec<u32>,
-) {
-    let mut visit = |id: usize, d: usize, dir: usize| {
-        let l = torus.link_index(id, d, dir);
-        if !mark[l] {
-            mark[l] = true;
-            touched.push(l as u32);
-        }
-        load[l] += w;
-    };
-    torus.route(ca, cb, &mut visit);
-    torus.route(cb, ca, &mut visit);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
-    use crate::machine::{Allocation, Torus};
+    use crate::machine::{Allocation, Network};
 
     /// One rank per router on a ring of `n`, identity placement.
     fn ring_alloc(n: usize) -> Allocation {
         Allocation {
-            torus: Torus::torus(&[n]),
+            machine: Network::torus(&[n]),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -443,7 +386,7 @@ mod tests {
         // Two ranks per node: tasks 0,1 in node 0 communicate for free.
         let g = stencil_graph(&[4], false, 1.0);
         let alloc = Allocation {
-            torus: Torus::torus(&[2]),
+            machine: Network::torus(&[2]),
             core_router: vec![0, 0, 1, 1],
             core_node: vec![0, 0, 1, 1],
             ranks_per_node: 2,
@@ -462,7 +405,7 @@ mod tests {
         use crate::par::Parallelism;
         let g = stencil_graph(&[6, 6], true, 1.7);
         let alloc = Allocation {
-            torus: Torus::torus(&[6, 6]),
+            machine: Network::torus(&[6, 6]),
             core_router: (0..36u32).collect(),
             core_node: (0..36u32).collect(),
             ranks_per_node: 1,
@@ -482,7 +425,7 @@ mod tests {
         // hierarchical mapper exploits.
         let g = stencil_graph(&[4], false, 9.0); // chain 0-1-2-3
         let alloc = Allocation {
-            torus: Torus::torus(&[4]),
+            machine: Network::torus(&[4]),
             core_router: vec![0, 0, 2, 2],
             core_node: vec![0, 0, 1, 1],
             ranks_per_node: 2,
@@ -493,7 +436,7 @@ mod tests {
         assert_eq!(m.total_hops, 2.0); // routers 0 -> 2 on a 4-ring
         // Now collapse everything into single nodes: all metrics vanish.
         let all_intra = Allocation {
-            torus: Torus::torus(&[4]),
+            machine: Network::torus(&[4]),
             core_router: vec![0, 0, 0, 0],
             core_node: vec![0, 0, 0, 0],
             ranks_per_node: 4,
@@ -525,9 +468,9 @@ mod tests {
     #[test]
     fn latency_uses_bandwidth() {
         use crate::machine::BwModel;
-        let torus = Torus::new(vec![4], vec![true], BwModel::Uniform(2.0));
+        let machine = Network::new(vec![4], vec![true], BwModel::Uniform(2.0));
         let alloc = Allocation {
-            torus,
+            machine,
             core_router: vec![0, 1, 2, 3],
             core_node: vec![0, 1, 2, 3],
             ranks_per_node: 1,
@@ -541,9 +484,9 @@ mod tests {
     #[test]
     fn mesh_boundary_links_excluded_from_avg() {
         // 1D mesh of 4 routers: 3 undirected = 6 directed links exist.
-        let torus = Torus::mesh(&[4]);
+        let machine = Network::mesh(&[4]);
         let alloc = Allocation {
-            torus,
+            machine,
             core_router: vec![0, 1, 2, 3],
             core_node: vec![0, 1, 2, 3],
             ranks_per_node: 1,

@@ -79,7 +79,7 @@
 
 use super::{CongestionState, LinkCosts, NumaMetrics, ObjectiveKind};
 use crate::apps::TaskGraph;
-use crate::machine::{Allocation, NumaNodeCosts, NumaTopology, Torus};
+use crate::machine::{Allocation, NumaNodeCosts, NumaTopology, Topology};
 use crate::metrics::{LinkAccumulator, Metrics};
 
 /// Which evaluator to build: the network objective plus the optional
@@ -294,11 +294,11 @@ pub trait IncrementalEval: Sync {
 /// configurable `diag` for same-node pairs (0 in the pure Section 3 model;
 /// the flat NUMA socket cost at depth 3). A dense table while `nn²` stays
 /// cheap (the common case — the whole point of the hierarchy is
-/// `nn << nranks`), else computed on the fly from the torus.
+/// `nn << nranks`), else computed on the fly from the topology.
 struct NodeHops<'a> {
     nn: usize,
     table: Option<Vec<f64>>,
-    torus: &'a Torus,
+    topo: &'a dyn Topology,
     routers: &'a [u32],
     scale: f64,
     diag: f64,
@@ -309,7 +309,7 @@ struct NodeHops<'a> {
 const MAX_TABLE_ENTRIES: usize = 1 << 22;
 
 impl<'a> NodeHops<'a> {
-    fn build(torus: &'a Torus, routers: &'a [u32], scale: f64, diag: f64) -> NodeHops<'a> {
+    fn build(topo: &'a dyn Topology, routers: &'a [u32], scale: f64, diag: f64) -> NodeHops<'a> {
         let nn = routers.len();
         let table = if nn * nn <= MAX_TABLE_ENTRIES {
             // The fill seeds every diagonal entry with `diag`; only the
@@ -317,7 +317,7 @@ impl<'a> NodeHops<'a> {
             let mut hops = vec![diag; nn * nn];
             for a in 0..nn {
                 for b in (a + 1)..nn {
-                    let h = torus.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64
+                    let h = topo.hop_dist_ids(routers[a] as usize, routers[b] as usize) as f64
                         * scale;
                     hops[a * nn + b] = h;
                     hops[b * nn + a] = h;
@@ -330,7 +330,7 @@ impl<'a> NodeHops<'a> {
         NodeHops {
             nn,
             table,
-            torus,
+            topo,
             routers,
             scale,
             diag,
@@ -343,7 +343,7 @@ impl<'a> NodeHops<'a> {
             Some(t) => t[a as usize * self.nn + b as usize],
             None if a == b => self.diag,
             None => {
-                self.torus.hop_dist_ids(
+                self.topo.hop_dist_ids(
                     self.routers[a as usize] as usize,
                     self.routers[b as usize] as usize,
                 ) as f64
@@ -375,7 +375,7 @@ pub struct HopEval<'a> {
 
 impl<'a> HopEval<'a> {
     pub fn build(
-        torus: &'a Torus,
+        topo: &'a dyn Topology,
         routers: &'a [u32],
         graph: &TaskGraph,
         node_of: &[u32],
@@ -383,7 +383,7 @@ impl<'a> HopEval<'a> {
         diag: f64,
     ) -> HopEval<'a> {
         assert_eq!(node_of.len(), graph.num_tasks);
-        let hops = NodeHops::build(torus, routers, scale, diag);
+        let hops = NodeHops::build(topo, routers, scale, diag);
         let mut value = 0f64;
         for e in &graph.edges {
             value += e.w * hops.get(node_of[e.u as usize], node_of[e.v as usize]);
@@ -549,14 +549,14 @@ pub struct RoutedEval<'a> {
 
 impl<'a> RoutedEval<'a> {
     pub fn build(
-        torus: &'a Torus,
+        topo: &'a dyn Topology,
         routers: &'a [u32],
         graph: &TaskGraph,
         node_of: &[u32],
         kind: ObjectiveKind,
         intra_cost: Option<f64>,
     ) -> RoutedEval<'a> {
-        let state = CongestionState::build(torus, routers, graph, node_of, kind);
+        let state = CongestionState::build(topo, routers, graph, node_of, kind);
         let intra_weight = if intra_cost.is_some() {
             intra_node_weight(graph, node_of)
         } else {
@@ -581,7 +581,7 @@ impl IncrementalEval for RoutedEval<'_> {
 
     fn full_eval(&self, graph: &TaskGraph, node_of: &[u32]) -> f64 {
         let fresh =
-            CongestionState::build(self.state.torus, self.state.routers, graph, node_of, self.kind);
+            CongestionState::build(self.state.topo, self.state.routers, graph, node_of, self.kind);
         match self.intra_cost {
             None => fresh.value(),
             Some(c) => fresh.value() + c * intra_node_weight(graph, node_of),
@@ -598,7 +598,7 @@ impl IncrementalEval for RoutedEval<'_> {
     ) -> SwapEval {
         let acc = scratch
             .routed
-            .get_or_insert_with(|| LinkAccumulator::new(self.state.torus));
+            .get_or_insert_with(|| LinkAccumulator::new(self.state.topo));
         let (net_gain, new_max, new_sum) =
             self.state
                 .swap_eval(node_of, u, b, adj.neighbors(u), adj.neighbors(b), acc);
@@ -650,7 +650,7 @@ pub enum Eval<'a> {
 /// `node_of` (task `t` on node `node_of[t]`, node `x` at router
 /// `routers[x]`).
 pub fn build_eval<'a>(
-    torus: &'a Torus,
+    topo: &'a dyn Topology,
     routers: &'a [u32],
     graph: &TaskGraph,
     node_of: &[u32],
@@ -658,13 +658,13 @@ pub fn build_eval<'a>(
 ) -> Eval<'a> {
     match (spec.objective, spec.numa) {
         (ObjectiveKind::WeightedHops, None) => {
-            Eval::Hops(HopEval::build(torus, routers, graph, node_of, 1.0, 0.0))
+            Eval::Hops(HopEval::build(topo, routers, graph, node_of, 1.0, 0.0))
         }
         (ObjectiveKind::WeightedHops, Some(c)) => {
-            Eval::Hops(HopEval::build(torus, routers, graph, node_of, c.hop, c.socket))
+            Eval::Hops(HopEval::build(topo, routers, graph, node_of, c.hop, c.socket))
         }
         (kind, numa) => Eval::Routed(RoutedEval::build(
-            torus,
+            topo,
             routers,
             graph,
             node_of,
@@ -745,7 +745,7 @@ pub fn numa_node_score(
     costs: NumaNodeCosts,
 ) -> f64 {
     assert_eq!(mapping.len(), graph.num_tasks);
-    let torus = &alloc.torus;
+    let machine = &alloc.machine;
     let mut total = 0f64;
     for e in &graph.edges {
         let ra = mapping[e.u as usize] as usize;
@@ -753,7 +753,7 @@ pub fn numa_node_score(
         if alloc.core_node[ra] == alloc.core_node[rb] {
             total += costs.socket * e.w;
         } else {
-            let h = torus.hop_dist_ids(
+            let h = machine.hop_dist_ids(
                 alloc.core_router[ra] as usize,
                 alloc.core_router[rb] as usize,
             );
@@ -811,6 +811,7 @@ pub fn combined_value(
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
+    use crate::machine::Torus;
 
     fn chain_setup() -> (TaskGraph, Torus, Vec<u32>, Vec<u32>) {
         let g = stencil_graph(&[16], false, 2.0);

@@ -69,7 +69,7 @@ pub mod eval;
 pub mod numa;
 
 use crate::apps::TaskGraph;
-use crate::machine::{Allocation, Torus};
+use crate::machine::{Allocation, Topology};
 use crate::metrics::{eval_hops, LinkAccumulator, Metrics};
 use crate::par::{self, Parallelism};
 
@@ -152,11 +152,11 @@ pub trait Objective: Sync {
         alloc: &Allocation,
         par: Parallelism,
     ) -> Vec<f64> {
-        let costs = LinkCosts::new(&alloc.torus);
+        let costs = LinkCosts::new(&alloc.machine);
         par::map_with(
             par,
             mappings,
-            || LinkAccumulator::new(&alloc.torus),
+            || LinkAccumulator::new(&alloc.machine),
             |scratch, _i, m| self.score_one(graph, m, alloc, &costs, scratch),
         )
     }
@@ -280,27 +280,13 @@ pub struct LinkCosts {
 }
 
 impl LinkCosts {
-    pub fn new(torus: &Torus) -> LinkCosts {
-        let dim = torus.dim();
-        let mut inv_bw = vec![0f64; torus.num_directed_links()];
+    pub fn new(topo: &dyn Topology) -> LinkCosts {
+        let mut inv_bw = vec![0f64; topo.num_directed_links()];
         let mut num_links = 0usize;
-        let mut coords = vec![0usize; dim];
-        for router in 0..torus.num_routers() {
-            torus.coords_into(router, &mut coords);
-            for d in 0..dim {
-                for dir in 0..2 {
-                    if !torus.wrap[d] {
-                        let c = coords[d];
-                        if (dir == 0 && c + 1 == torus.sizes[d]) || (dir == 1 && c == 0) {
-                            continue; // mesh boundary: no outward link
-                        }
-                    }
-                    let bw = torus.link_bandwidth(&coords, d, if dir == 0 { 1 } else { -1 });
-                    inv_bw[torus.link_index(router, d, dir)] = 1.0 / bw;
-                    num_links += 1;
-                }
-            }
-        }
+        topo.for_each_link(&mut |l, _class, _dir, bw| {
+            inv_bw[l] = 1.0 / bw;
+            num_links += 1;
+        });
         LinkCosts { inv_bw, num_links }
     }
 
@@ -340,7 +326,7 @@ pub(crate) fn routed_summary_with_intra(
     acc: &mut LinkAccumulator,
 ) -> (LinkSummary, f64) {
     assert_eq!(mapping.len(), graph.num_tasks);
-    let torus = &alloc.torus;
+    let machine = &alloc.machine;
     acc.reset();
     let mut weighted_hops = 0f64;
     let mut intra_weight = 0f64;
@@ -352,8 +338,8 @@ pub(crate) fn routed_summary_with_intra(
             continue; // intra-node: never enters the network
         }
         let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
-        weighted_hops += e.w * torus.hop_dist_ids(qa, qb) as f64;
-        acc.add_pair(torus, qa, qb, e.w);
+        weighted_hops += e.w * machine.hop_dist_ids(qa, qb) as f64;
+        acc.add_pair(machine, qa, qb, e.w);
     }
     let mut max_latency = 0f64;
     let mut sum_latency = 0f64;
@@ -388,7 +374,7 @@ pub(crate) fn routed_summary_with_intra(
 /// itself improves). The cached objective value therefore always equals a
 /// full re-evaluation of the current assignment, modulo f64 rounding.
 pub struct CongestionState<'a> {
-    torus: &'a Torus,
+    topo: &'a dyn Topology,
     routers: &'a [u32],
     costs: LinkCosts,
     obj: &'static dyn Objective,
@@ -406,7 +392,7 @@ impl<'a> CongestionState<'a> {
     /// Build the state for `node_of` over `graph`. `kind` must be a routed
     /// objective ([`Objective::needs_routing`]).
     pub fn build(
-        torus: &'a Torus,
+        topo: &'a dyn Topology,
         routers: &'a [u32],
         graph: &TaskGraph,
         node_of: &[u32],
@@ -419,21 +405,21 @@ impl<'a> CongestionState<'a> {
             obj.name()
         );
         assert_eq!(node_of.len(), graph.num_tasks);
-        let costs = LinkCosts::new(torus);
-        let mut acc = LinkAccumulator::new(torus);
+        let costs = LinkCosts::new(topo);
+        let mut acc = LinkAccumulator::new(topo);
         for e in &graph.edges {
             let (a, b) = (node_of[e.u as usize], node_of[e.v as usize]);
             if a != b {
                 let (qa, qb) = (routers[a as usize] as usize, routers[b as usize] as usize);
-                acc.add_pair(torus, qa, qb, e.w);
+                acc.add_pair(topo, qa, qb, e.w);
             }
         }
         let mut state = CongestionState {
-            torus,
+            topo,
             routers,
             costs,
             obj,
-            load: vec![0f64; torus.num_directed_links()],
+            load: vec![0f64; topo.num_directed_links()],
             sum_latency: 0.0,
             max_latency: 0.0,
             rescans: std::cell::Cell::new(0),
@@ -536,10 +522,10 @@ impl<'a> CongestionState<'a> {
             }
             let x = node_of[n as usize];
             if x != a {
-                acc.add_pair(self.torus, ra, router(x), -w);
+                acc.add_pair(self.topo, ra, router(x), -w);
             }
             if x != bn {
-                acc.add_pair(self.torus, rbn, router(x), w);
+                acc.add_pair(self.topo, rbn, router(x), w);
             }
         }
         for (n, w) in nbrs_b {
@@ -548,10 +534,10 @@ impl<'a> CongestionState<'a> {
             }
             let x = node_of[n as usize];
             if x != bn {
-                acc.add_pair(self.torus, rbn, router(x), -w);
+                acc.add_pair(self.topo, rbn, router(x), -w);
             }
             if x != a {
-                acc.add_pair(self.torus, ra, router(x), w);
+                acc.add_pair(self.topo, ra, router(x), w);
             }
         }
     }
@@ -631,12 +617,12 @@ impl<'a> CongestionState<'a> {
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
-    use crate::machine::{Allocation, BwModel};
+    use crate::machine::{Allocation, BwModel, Network, Torus};
     use crate::metrics::eval_full;
 
     fn ring_alloc(n: usize) -> Allocation {
         Allocation {
-            torus: Torus::torus(&[n]),
+            machine: Network::torus(&[n]),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -670,15 +656,15 @@ mod tests {
         // full eval_full run (the engines share the routing model).
         let g = stencil_graph(&[4, 4], false, 2.5);
         let alloc = Allocation {
-            torus: Torus::new(vec![4, 4], vec![true, true], BwModel::PerDim(vec![2.0, 4.0])),
+            machine: Network::new(vec![4, 4], vec![true, true], BwModel::PerDim(vec![2.0, 4.0])),
             core_router: (0..16u32).collect(),
             core_node: (0..16u32).collect(),
             ranks_per_node: 1,
         };
         let m: Vec<u32> = (0..16u32).map(|i| (i * 5) % 16).collect();
         let full = eval_full(&g, &m, &alloc);
-        let costs = LinkCosts::new(&alloc.torus);
-        let mut acc = LinkAccumulator::new(&alloc.torus);
+        let costs = LinkCosts::new(&alloc.machine);
+        let mut acc = LinkAccumulator::new(&alloc.machine);
         for kind in ObjectiveKind::ALL {
             let got = kind.get().score_one(&g, &m, &alloc, &costs, &mut acc);
             let want = kind.value_from_metrics(&full);

@@ -26,7 +26,7 @@
 
 use super::{LinkSummary, Objective};
 use crate::apps::TaskGraph;
-use crate::machine::{Allocation, NumaTopology, Torus};
+use crate::machine::{Allocation, NumaTopology, Topology};
 use crate::metrics::LinkAccumulator;
 use crate::objective::LinkCosts;
 
@@ -50,7 +50,7 @@ pub struct NumaMetrics {
 #[inline]
 fn pair_cost(
     topo: &NumaTopology,
-    torus: &Torus,
+    net: &dyn Topology,
     node_routers: &[u32],
     na: u32,
     sa: u32,
@@ -64,7 +64,7 @@ fn pair_cost(
             topo.socket_cost
         }
     } else {
-        let h = torus.hop_dist_ids(
+        let h = net.hop_dist_ids(
             node_routers[na as usize] as usize,
             node_routers[nb as usize] as usize,
         );
@@ -80,7 +80,7 @@ pub fn eval_numa_placement(
     node_of: &[u32],
     sock_of: &[u32],
     node_routers: &[u32],
-    torus: &Torus,
+    net: &dyn Topology,
     topo: &NumaTopology,
 ) -> NumaMetrics {
     assert_eq!(node_of.len(), graph.num_tasks);
@@ -91,7 +91,7 @@ pub fn eval_numa_placement(
         let (na, nb) = (node_of[u], node_of[v]);
         if na != nb {
             m.network_weighted_hops += e.w
-                * torus.hop_dist_ids(
+                * net.hop_dist_ids(
                     node_routers[na as usize] as usize,
                     node_routers[nb as usize] as usize,
                 ) as f64;
@@ -127,7 +127,7 @@ pub fn eval_numa(
         &node_of,
         &sock_of,
         &alloc.node_routers(),
-        &alloc.torus,
+        &alloc.machine,
         topo,
     )
 }
@@ -142,7 +142,7 @@ pub fn eval_numa(
 #[allow(clippy::too_many_arguments)]
 pub fn placement_swap_gain(
     topo: &NumaTopology,
-    torus: &Torus,
+    net: &dyn Topology,
     node_routers: &[u32],
     node_of: &[u32],
     sock_of: &[u32],
@@ -160,8 +160,8 @@ pub fn placement_swap_gain(
         }
         let (nx, sx) = (node_of[n as usize], sock_of[n as usize]);
         gain += w
-            * (pair_cost(topo, torus, node_routers, nu, su, nx, sx)
-                - pair_cost(topo, torus, node_routers, nb, sb, nx, sx));
+            * (pair_cost(topo, net, node_routers, nu, su, nx, sx)
+                - pair_cost(topo, net, node_routers, nb, sb, nx, sx));
     }
     for (n, w) in nbrs_b {
         if n as usize == u {
@@ -169,8 +169,8 @@ pub fn placement_swap_gain(
         }
         let (nx, sx) = (node_of[n as usize], sock_of[n as usize]);
         gain += w
-            * (pair_cost(topo, torus, node_routers, nb, sb, nx, sx)
-                - pair_cost(topo, torus, node_routers, nu, su, nx, sx));
+            * (pair_cost(topo, net, node_routers, nb, sb, nx, sx)
+                - pair_cost(topo, net, node_routers, nu, su, nx, sx));
     }
     gain
 }
@@ -224,7 +224,7 @@ mod tests {
     use super::*;
     use crate::apps::{Edge, TaskGraph};
     use crate::geom::Coords;
-    use crate::machine::Allocation;
+    use crate::machine::{Allocation, Torus};
     use crate::par::Parallelism;
 
     /// 2 nodes x 2 sockets x 2 ranks on a 4-ring (routers 0 and 2).
@@ -300,10 +300,10 @@ mod tests {
             adj[e.v as usize].push((e.u, e.w));
         }
         for (u, b) in [(0usize, 2usize), (0, 4), (1, 7), (3, 5)] {
-            let before = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.torus, &t);
+            let before = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.machine, &t);
             let gain = placement_swap_gain(
                 &t,
-                &a.torus,
+                &a.machine,
                 &routers,
                 &node_of,
                 &sock_of,
@@ -314,7 +314,7 @@ mod tests {
             );
             node_of.swap(u, b);
             sock_of.swap(u, b);
-            let after = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.torus, &t);
+            let after = eval_numa_placement(&g, &node_of, &sock_of, &routers, &a.machine, &t);
             assert!(
                 (gain - (before.value - after.value)).abs() < 1e-12,
                 "swap ({u},{b}): gain {gain} vs delta {}",

@@ -23,7 +23,7 @@
 //! per-network-dimension attribution for Figs 12 and 15.
 
 use crate::apps::TaskGraph;
-use crate::machine::Allocation;
+use crate::machine::{Allocation, Topology};
 use crate::metrics;
 
 /// Model constants. One calibration for all experiments (per DESIGN.md §6):
@@ -95,20 +95,23 @@ pub fn comm_time(
     alloc: &Allocation,
     model: &CommModel,
 ) -> CommTime {
-    let torus = &alloc.torus;
-    let dim = torus.dim();
+    let net = &alloc.machine;
+    let torus = net.as_torus();
+    // Per-message hop attribution buckets: torus dimensions, or the
+    // topology's link classes (tree levels / local-global) otherwise.
+    let dim = torus.map_or(net.num_link_classes(), |t| t.dim());
     let nranks = alloc.num_ranks();
     let nnodes = alloc.num_nodes().max(1);
 
     // Pass 1: link loads (shared with the metrics engine).
-    let mut load = vec![0f64; torus.num_directed_links()];
+    let mut load = vec![0f64; net.num_directed_links()];
     // Per-rank message and weighted-hop aggregates; per-node injected bytes.
     let mut rank_alpha_hops = vec![0f64; nranks];
     let mut node_bytes = vec![0f64; nnodes];
     let mut per_dim_msg = vec![0f64; dim];
     let mut weighted_hops_bytes = 0f64;
-    let mut ca = vec![0usize; dim];
-    let mut cb = vec![0usize; dim];
+    let mut ca = vec![0usize; torus.map_or(0, |t| t.dim())];
+    let mut cb = vec![0usize; ca.len()];
     for e in &graph.edges {
         let ra = task_to_rank[e.u as usize] as usize;
         let rb = task_to_rank[e.v as usize] as usize;
@@ -116,20 +119,26 @@ pub fn comm_time(
             continue;
         }
         let (qa, qb) = (alloc.core_router[ra] as usize, alloc.core_router[rb] as usize);
-        torus.coords_into(qa, &mut ca);
-        torus.coords_into(qb, &mut cb);
-        torus.route(&ca, &cb, |id, d, dir| {
-            load[torus.link_index(id, d, dir)] += e.w;
-        });
-        torus.route(&cb, &ca, |id, d, dir| {
-            load[torus.link_index(id, d, dir)] += e.w;
-        });
-        let mut hops_total = 0f64;
-        for d in 0..dim {
-            let h = torus.signed_dist(d, ca[d], cb[d]).unsigned_abs() as f64;
-            hops_total += h;
-            per_dim_msg[d] += 2.0 * (model.alpha + h * model.t_hop);
-        }
+        net.route_ids(qa, qb, &mut |l| load[l] += e.w);
+        net.route_ids(qb, qa, &mut |l| load[l] += e.w);
+        let hops_total = if let Some(torus) = torus {
+            torus.coords_into(qa, &mut ca);
+            torus.coords_into(qb, &mut cb);
+            let mut hops = 0f64;
+            for d in 0..dim {
+                let h = torus.signed_dist(d, ca[d], cb[d]).unsigned_abs() as f64;
+                hops += h;
+                per_dim_msg[d] += 2.0 * (model.alpha + h * model.t_hop);
+            }
+            hops
+        } else {
+            // No per-dimension structure: attribute the whole message to
+            // the bucket of the path's first link class (class 0 when the
+            // pair shares a router).
+            let h = net.hop_dist_ids(qa, qb) as f64;
+            per_dim_msg[0] += 2.0 * (model.alpha + h * model.t_hop);
+            h
+        };
         let msg_cost = model.alpha + hops_total * model.t_hop;
         rank_alpha_hops[ra] += msg_cost;
         rank_alpha_hops[rb] += msg_cost;
@@ -139,7 +148,7 @@ pub fn comm_time(
     }
 
     // Serialization per link -> max + per-dim maxima.
-    let lm = metrics::summarize_links(torus, &load);
+    let lm = metrics::summarize_links(net, &load);
     let t_serial = lm.max_latency / model.bw_unit;
     let per_dim_serial: Vec<[f64; 2]> = lm
         .per_dim
@@ -156,17 +165,32 @@ pub fn comm_time(
     let t_msg = rank_alpha_hops.iter().cloned().fold(0.0, f64::max);
 
     // Aggregate link capacity of the allocated region: each allocated node
-    // contributes its router's 2·dim directed links at the mean bandwidth.
-    let mut bw_sum = 0f64;
-    let mut bw_cnt = 0usize;
-    for d in 0..dim {
-        for c in 0..torus.sizes[d] {
-            bw_sum += torus.bw.bandwidth(d, c);
-            bw_cnt += 1;
+    // contributes its router's share of directed links at the mean
+    // bandwidth. The torus keeps its historical per-(dimension, coordinate)
+    // average so pre-trait outputs are bit-identical.
+    let (avg_bw, links_per_router) = if let Some(torus) = torus {
+        let mut bw_sum = 0f64;
+        let mut bw_cnt = 0usize;
+        for d in 0..dim {
+            for c in 0..torus.sizes[d] {
+                bw_sum += torus.bw.bandwidth(d, c);
+                bw_cnt += 1;
+            }
         }
-    }
-    let avg_bw = bw_sum / bw_cnt.max(1) as f64 * model.bw_unit;
-    let capacity = (nnodes * 2 * dim) as f64 * avg_bw;
+        (bw_sum / bw_cnt.max(1) as f64, (2 * dim) as f64)
+    } else {
+        let mut bw_sum = 0f64;
+        let mut bw_cnt = 0usize;
+        net.for_each_link(&mut |_l, _class, _dir, bw| {
+            bw_sum += bw;
+            bw_cnt += 1;
+        });
+        (
+            bw_sum / bw_cnt.max(1) as f64,
+            bw_cnt as f64 / net.num_routers().max(1) as f64,
+        )
+    };
+    let capacity = nnodes as f64 * links_per_router * (avg_bw * model.bw_unit);
     let t_volume = model.congestion * weighted_hops_bytes / capacity;
 
     let total = (model.rounds) * (t_serial.max(t_inject).max(t_volume) + t_msg);
@@ -191,11 +215,11 @@ pub fn comm_time(
 mod tests {
     use super::*;
     use crate::apps::stencil::stencil_graph;
-    use crate::machine::{Allocation, Torus};
+    use crate::machine::{Allocation, Network};
 
     fn ring_alloc(n: usize) -> Allocation {
         Allocation {
-            torus: Torus::torus(&[n]),
+            machine: Network::torus(&[n]),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -231,7 +255,7 @@ mod tests {
         let g = stencil_graph(&[4], false, 1e6);
         // All four ranks in one node.
         let alloc = Allocation {
-            torus: Torus::torus(&[2]),
+            machine: Network::torus(&[2]),
             core_router: vec![0, 0, 0, 0],
             core_node: vec![0, 0, 0, 0],
             ranks_per_node: 4,
@@ -262,7 +286,7 @@ mod tests {
     fn per_dim_attribution_sums() {
         let g = stencil_graph(&[4, 4], true, 1e5);
         let alloc = Allocation {
-            torus: Torus::torus(&[4, 4]),
+            machine: Network::torus(&[4, 4]),
             core_router: (0..16u32).collect(),
             core_node: (0..16u32).collect(),
             ranks_per_node: 1,

@@ -22,7 +22,7 @@ fn scenario(l: u32, td: usize, pd: usize, ordering: PartOrdering) -> (TaskGraph,
     let torus = Torus::mesh(&pdims);
     let n = torus.num_routers();
     let alloc = Allocation {
-        torus,
+        machine: torus.into(),
         core_router: (0..n as u32).collect(),
         core_node: (0..n as u32).collect(),
         ranks_per_node: 1,
@@ -47,7 +47,7 @@ fn scenario(l: u32, td: usize, pd: usize, ordering: PartOrdering) -> (TaskGraph,
 
 /// Total measured hops over all edges.
 fn total_hops(graph: &TaskGraph, alloc: &Allocation, m: &[u32]) -> u64 {
-    let torus = &alloc.torus;
+    let torus = alloc.machine.as_torus().expect("mesh allocation");
     let mut total = 0u64;
     for e in &graph.edges {
         total += torus.hop_dist_ids(
@@ -234,7 +234,7 @@ fn fig5_z_order_1d_hops() {
     // hops (text just above "Another example of the structured case").
     let (g, a, m) = scenario(6, 1, 2, PartOrdering::Z);
     let hop = |u: usize, v: usize| {
-        a.torus.hop_dist_ids(
+        a.machine.as_torus().unwrap().hop_dist_ids(
             a.core_router[m[u] as usize] as usize,
             a.core_router[m[v] as usize] as usize,
         )

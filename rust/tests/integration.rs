@@ -154,7 +154,7 @@ fn shifted_mapping_improves_seam_straddling_allocation() {
     // Routers 14,15,0,1 around the seam; 4 ranks per router-node.
     let routers = [14u32, 15, 0, 1];
     let alloc = Allocation {
-        torus: machine,
+        machine: machine.into(),
         core_router: routers.iter().flat_map(|&r| [r; 4]).collect(),
         core_node: (0..4u32).flat_map(|n| [n; 4]).collect(),
         ranks_per_node: 4,
@@ -178,7 +178,7 @@ fn table1_style_mapping_all_orderings_bijective() {
     let tg = stencil_graph(&[32, 16], false, 1.0);
     let nodes = Torus::torus(&[8, 8, 8]);
     let alloc = Allocation {
-        torus: nodes,
+        machine: nodes.into(),
         core_router: (0..512u32).collect(),
         core_node: (0..512u32).collect(),
         ranks_per_node: 1,
@@ -212,7 +212,7 @@ fn uneven_prime_avoids_splitting_nodes_early() {
     // tasks forming one contiguous cluster.
     let machine = Torus::torus(&[8, 1, 1]);
     let alloc = Allocation {
-        torus: machine,
+        machine: machine.into(),
         core_router: (0..3u32).flat_map(|r| [r; 16]).collect(),
         core_node: (0..3u32).flat_map(|n| [n; 16]).collect(),
         ranks_per_node: 16,
@@ -292,7 +292,10 @@ fn numa_depth3_end_to_end_on_minighost() {
     let cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 4 },
         max_rotations: 8,
-        numa: Some(topo),
+        spec: taskmap::mapping::MapSpec {
+            numa: Some(topo),
+            ..Default::default()
+        },
         ..HierConfig::default()
     };
     let m = map_hierarchical(&graph, &graph.coords, &alloc, &cfg, &NativeBackend);
@@ -324,7 +327,7 @@ fn numa_depth3_end_to_end_on_minighost() {
     );
     let cross =
         |sk: &[u32]| {
-            eval_numa_placement(&graph, &m.task_to_node, sk, &routers, &alloc.torus, &topo)
+            eval_numa_placement(&graph, &m.task_to_node, sk, &routers, &alloc.machine, &topo)
                 .socket_weight
         };
     assert!(

@@ -52,8 +52,11 @@ fn run_map(graph: &TaskGraph, alloc: &Allocation, threads: usize) -> HierMapping
     let cfg = HierConfig {
         intra: IntraNodeStrategy::MinVolume { passes: 2 },
         max_rotations: 4,
-        threads,
-        numa: Some(NumaTopology::new(2, 4, 0.5, 0.0, 1.0)),
+        spec: taskmap::mapping::MapSpec {
+            threads,
+            numa: Some(NumaTopology::new(2, 4, 0.5, 0.0, 1.0)),
+            ..Default::default()
+        },
         ..HierConfig::default()
     };
     map_hierarchical(graph, &graph.coords, alloc, &cfg, &NativeBackend)

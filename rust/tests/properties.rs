@@ -5,7 +5,7 @@
 use taskmap::apps::stencil::stencil_graph;
 use taskmap::machine::{Allocation, BwModel, SparseAllocator, Torus};
 use taskmap::mapping::shift::shift_dim;
-use taskmap::mapping::{map_tasks, MapConfig};
+use taskmap::mapping::{map_tasks, MapConfig, MapSpec};
 use taskmap::metrics::native::batched_weighted_hops_native;
 use taskmap::metrics::{eval_full, eval_hops};
 use taskmap::mj::{mj_partition, MjConfig};
@@ -155,7 +155,7 @@ fn prop_native_whops_matches_eval_hops() {
         let torus = Torus::torus(&sizes);
         let n = torus.num_routers();
         let alloc = Allocation {
-            torus: torus.clone(),
+            machine: torus.clone().into(),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -210,7 +210,7 @@ fn prop_data_conservation() {
         let lm = m.link.unwrap();
         // Recompute total link data from per-dim averages * link counts is
         // lossy; instead recompute expected total directly.
-        let torus = &alloc.torus;
+        let torus = alloc.machine.as_torus().expect("torus allocation");
         let mut expected = 0f64;
         for e in &graph.edges {
             let (ra, rb) = (mapping[e.u as usize] as usize, mapping[e.v as usize] as usize);
@@ -350,7 +350,7 @@ fn prop_rotation_sweep_parallel_bit_identical() {
         let n = tx * ty;
         let g = stencil_graph(&[tx, ty], rng.bool(), rng.range(1, 5) as f64);
         let alloc = Allocation {
-            torus: Torus::torus(&[ty, tx]),
+            machine: Torus::torus(&[ty, tx]).into(),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -367,8 +367,10 @@ fn prop_rotation_sweep_parallel_bit_identical() {
         let sweep = |threads: usize| SweepConfig {
             max_candidates: 4,
             chunk_edges: 7,
-            threads,
-            ..Default::default()
+            spec: MapSpec {
+                threads,
+                ..MapSpec::default()
+            },
         };
         let seq = rotation_sweep(
             &g,
@@ -419,7 +421,7 @@ fn prop_score_mappings_parallel_bit_identical() {
         let n = k * k;
         let g = stencil_graph(&[k, k], rng.bool(), rng.f64_range(0.5, 4.0));
         let alloc = Allocation {
-            torus: Torus::torus(&[k, k]),
+            machine: Torus::torus(&[k, k]).into(),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -514,7 +516,10 @@ fn prop_hier_mapping_parallel_bit_identical_and_bijective() {
         let mk = |threads: usize| HierConfig {
             intra,
             max_rotations: 4,
-            threads,
+            spec: MapSpec {
+                threads,
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
@@ -537,6 +542,74 @@ fn prop_hier_mapping_parallel_bit_identical_and_bijective() {
 }
 
 #[test]
+fn prop_nontorus_hier_mapping_thread_invariant_and_bijective() {
+    // The same determinism contract off the torus: the hierarchical
+    // mapper on a fat-tree and a dragonfly must reproduce the sequential
+    // result exactly at every thread budget and stay a bijection. This is
+    // the end-to-end pin that the Topology abstraction did not smuggle
+    // thread-count-dependent float ordering into the non-torus paths.
+    use taskmap::hier::{map_hierarchical, HierConfig, IntraNodeStrategy};
+    use taskmap::machine::{Dragonfly, FatTree, Network, Topology};
+    use taskmap::mapping::rotations::NativeBackend;
+    let dense = |machine: Network, rpn: usize| {
+        let nr = machine.num_routers();
+        let mut core_router = Vec::with_capacity(nr * rpn);
+        let mut core_node = Vec::with_capacity(nr * rpn);
+        for r in 0..nr {
+            for _ in 0..rpn {
+                core_router.push(r as u32);
+                core_node.push(r as u32);
+            }
+        }
+        Allocation {
+            machine,
+            core_router,
+            core_node,
+            ranks_per_node: rpn,
+        }
+    };
+    check("non-torus hier parallel == sequential", 6, |rng| {
+        let rpn = rng.range(1, 4);
+        let machine: Network = if rng.below(2) == 0 {
+            FatTree::new(rng.range(2, 4), 2 + rng.below(2)).into()
+        } else {
+            Dragonfly::new(rng.range(2, 5), rng.range(2, 4), 1)
+                .with_global_cost(1 + rng.below(3) as u64)
+                .with_valiant(rng.below(2) == 1)
+                .into()
+        };
+        let alloc = dense(machine, rpn);
+        let nt = alloc.num_ranks();
+        let graph = stencil_graph(&[nt], false, rng.f64_range(0.5, 3.0));
+        let mk = |threads: usize| {
+            let mut cfg = HierConfig {
+                intra: IntraNodeStrategy::MinVolume { passes: 2 },
+                max_rotations: 4,
+                ..HierConfig::default()
+            };
+            cfg.spec.threads = threads;
+            cfg
+        };
+        let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
+        for &threads in THREAD_COUNTS.iter().skip(1) {
+            let par = map_hierarchical(&graph, &graph.coords, &alloc, &mk(threads), &NativeBackend);
+            if par.task_to_rank != seq.task_to_rank {
+                return Err(format!(
+                    "{} rank mapping diverged at threads={threads}",
+                    alloc.machine.kind_name()
+                ));
+            }
+        }
+        let mut s = seq.task_to_rank.clone();
+        s.sort_unstable();
+        if s != (0..nt as u32).collect::<Vec<_>>() {
+            return Err(format!("{} not a bijection", alloc.machine.kind_name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_routed_objective_sweep_parallel_bit_identical() {
     // Acceptance pin (a): congestion-objective scoring is bit-identical at
     // every thread count, through the full rotation sweep — same chosen
@@ -549,7 +622,7 @@ fn prop_routed_objective_sweep_parallel_bit_identical() {
         let n = tx * ty;
         let g = stencil_graph(&[tx, ty], rng.bool(), rng.f64_range(0.5, 4.0));
         let alloc = Allocation {
-            torus: Torus::torus(&[ty, tx]),
+            machine: Torus::torus(&[ty, tx]).into(),
             core_router: (0..n as u32).collect(),
             core_node: (0..n as u32).collect(),
             ranks_per_node: 1,
@@ -568,8 +641,11 @@ fn prop_routed_objective_sweep_parallel_bit_identical() {
         };
         let sweep = |threads: usize| SweepConfig {
             max_candidates: 4,
-            threads,
-            objective,
+            spec: MapSpec {
+                threads,
+                objective,
+                ..MapSpec::default()
+            },
             ..Default::default()
         };
         let seq = rotation_sweep(&g, &g.coords, &p, &alloc, &map_cfg, &sweep(1), &NativeBackend);
@@ -625,8 +701,11 @@ fn prop_hier_congestion_objective_parallel_bit_identical() {
         let mk = |threads: usize| HierConfig {
             intra: IntraNodeStrategy::MinVolume { passes: 3 },
             max_rotations: 4,
-            threads,
-            objective,
+            spec: MapSpec {
+                threads,
+                objective,
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
@@ -680,7 +759,7 @@ fn prop_congestion_swap_gains_equal_full_reevaluation() {
         }
         // The node-level pseudo-allocation eval_full scores against.
         let alloc = Allocation {
-            torus: torus.clone(),
+            machine: torus.clone().into(),
             core_router: routers.clone(),
             core_node: (0..nn as u32).collect(),
             ranks_per_node: 1,
@@ -750,8 +829,11 @@ fn prop_numa_depth3_parallel_bit_identical_and_bijective() {
         let mk = |threads: usize| HierConfig {
             intra,
             max_rotations: 4,
-            threads,
-            numa: Some(topo),
+            spec: MapSpec {
+                threads,
+                numa: Some(topo),
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
@@ -822,8 +904,11 @@ fn prop_hetero_depth3_balanced_and_bit_identical() {
         let mk = |threads: usize| HierConfig {
             intra,
             max_rotations: 4,
-            threads,
-            numa: Some(topo),
+            spec: MapSpec {
+                threads,
+                numa: Some(topo),
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
@@ -981,9 +1066,12 @@ fn prop_blended_depth3_parallel_bit_identical() {
         let mk = |threads: usize| HierConfig {
             intra,
             max_rotations: 4,
-            threads,
-            objective,
-            numa: Some(topo),
+            spec: MapSpec {
+                threads,
+                objective,
+                numa: Some(topo),
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&graph, &graph.coords, &alloc, &mk(1), &NativeBackend);
@@ -1277,11 +1365,14 @@ fn prop_vcycle_mapping_thread_invariant_and_balanced() {
         let cfg = |threads: usize| HierConfig {
             intra: IntraNodeStrategy::MinVolume { passes: 2 },
             max_rotations: 2,
-            threads,
-            coarsen: Some(CoarsenConfig {
-                target_tasks: nn,
-                ..CoarsenConfig::default()
-            }),
+            spec: MapSpec {
+                threads,
+                coarsen: Some(CoarsenConfig {
+                    target_tasks: nn,
+                    ..CoarsenConfig::default()
+                }),
+                ..MapSpec::default()
+            },
             ..HierConfig::default()
         };
         let seq = map_hierarchical(&g, &g.coords, &alloc, &cfg(1), &NativeBackend);
