@@ -1,9 +1,14 @@
 //! Bench: the hardened mapping service — request round-trip latency over
-//! TCP (ping / flat map / hierarchical map), and a saturation smoke test
+//! TCP (ping / flat map / hierarchical map), a saturation smoke test
 //! that floods a deliberately tiny pool and reports sustained throughput,
-//! shed fraction, and the time-to-shed (how fast overload is answered).
-//! Results append to `BENCH_mapping.json` (override with
-//! `TASKMAP_BENCH_OUT`).
+//! shed fraction, and the time-to-shed (how fast overload is answered),
+//! plus the result-cache legs (cold vs hot round trips and their speedup
+//! ratio) and the batching legs (compatible-request throughput with and
+//! without a batch window). Results append to `BENCH_mapping.json`
+//! (override with `TASKMAP_BENCH_OUT`).
+//!
+//! The pre-existing rtt legs pin `"cache":false` so their trajectory keeps
+//! measuring the compute path, not the cache.
 //!
 //! `--smoke` runs a miniature configuration (seconds, CI-sized) whose
 //! entries are recorded under `.../smoke` names so they never clobber the
@@ -42,7 +47,11 @@ fn map_req(n: usize) -> Json {
 }
 
 /// A hierarchical map request: an n-task chain onto n/2 ranks, 2 per node.
-fn hier_req(n: usize) -> Json {
+/// `variant` scales the edge weights, producing distinct-but-compatible
+/// requests (same allocation and config: one batch group, different cache
+/// keys).
+fn hier_req_variant(n: usize, variant: usize) -> Json {
+    let w = 1.0 + variant as f64 * 0.25;
     let tcoords = Json::Arr(
         (0..n)
             .map(|i| Json::Arr(vec![Json::Num(i as f64)]))
@@ -55,7 +64,13 @@ fn hier_req(n: usize) -> Json {
     );
     let edges = Json::Arr(
         (0..n - 1)
-            .map(|i| Json::Arr(vec![Json::Num(i as f64), Json::Num((i + 1) as f64)]))
+            .map(|i| {
+                Json::Arr(vec![
+                    Json::Num(i as f64),
+                    Json::Num((i + 1) as f64),
+                    Json::Num(w),
+                ])
+            })
             .collect(),
     );
     Json::obj(vec![
@@ -71,6 +86,19 @@ fn hier_req(n: usize) -> Json {
             ]),
         ),
     ])
+}
+
+fn hier_req(n: usize) -> Json {
+    hier_req_variant(n, 0)
+}
+
+/// Pin `"cache":false` onto a map request (the rtt legs measure compute,
+/// not the cache).
+fn uncached(mut req: Json) -> Json {
+    if let Json::Obj(m) = &mut req {
+        m.insert("cache".to_string(), Json::Bool(false));
+    }
+    req
 }
 
 /// Flood a tiny pool (1 worker, 2 queue slots) with `burst`-sized waves of
@@ -149,6 +177,127 @@ fn saturation(rec: &mut BenchRecorder, suffix: &str, burst: usize, waves: usize)
     svc.stop();
 }
 
+/// Cold vs hot round trips for one hierarchical request: cold opts out of
+/// the cache every iteration (full recompute), hot repeats the identical
+/// request against the default cache (one miss, then lookup + clone). The
+/// speedup ratio and the reconciling hit/miss counters are recorded.
+fn cache_legs(rec: &mut BenchRecorder, suffix: &str, n: usize) {
+    let svc = Service::start("127.0.0.1:0").expect("bind");
+    let mut client = Client::connect(svc.addr).expect("connect");
+    let cold_req = uncached(hier_req(n));
+    let r_cold = bench_quick(&format!("service/cache/cold/tasks={n}{suffix}"), || {
+        client.request(&cold_req).expect("cold hier map")
+    });
+    rec.record(&r_cold, &[("tasks", n as f64)]);
+    let hot_req = hier_req(n);
+    let r_hot = bench_quick(&format!("service/cache/hot/tasks={n}{suffix}"), || {
+        client.request(&hot_req).expect("hot hier map")
+    });
+    rec.record(&r_hot, &[("tasks", n as f64)]);
+    let speedup = r_cold.per_iter_ns() / r_hot.per_iter_ns();
+    rec.record_scalar(
+        &format!("service/cache/speedup/tasks={n}{suffix}"),
+        "ratio",
+        speedup,
+    );
+    let stats = svc.stats();
+    let cache = stats.get("cache").expect("cache section");
+    let field = |k: &str| cache.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let (hits, misses, bypass) = (field("hits"), field("misses"), field("bypass"));
+    println!(
+        "cache{suffix}: tasks={n} cold {:.1}us hot {:.1}us speedup {speedup:.1}x \
+         (hits {hits}, misses {misses}, bypass {bypass})",
+        r_cold.per_iter_ns() / 1e3,
+        r_hot.per_iter_ns() / 1e3,
+    );
+    rec.record_scalar(&format!("service/cache/hits{suffix}"), "count", hits);
+    rec.record_scalar(&format!("service/cache/misses{suffix}"), "count", misses);
+    svc.stop();
+}
+
+/// Throughput of `jobs x waves` distinct-but-compatible hierarchical
+/// requests fired concurrently per wave.
+fn compatible_wave_throughput(
+    addr: std::net::SocketAddr,
+    jobs: usize,
+    waves: usize,
+    tasks: usize,
+) -> f64 {
+    let start = Instant::now();
+    for w in 0..waves {
+        let barrier = Arc::new(Barrier::new(jobs));
+        let handles: Vec<_> = (0..jobs)
+            .map(|j| {
+                let barrier = Arc::clone(&barrier);
+                let req = hier_req_variant(tasks, w * jobs + j);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let resp = Client::connect(addr)
+                        .expect("connect")
+                        .request(&req)
+                        .expect("batched hier map");
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    (jobs * waves) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Batching throughput: the same compatible-request workload against a
+/// plain service and against one with a short batch window, plus the
+/// coalescing counters (`flushes + coalesced == jobs` must reconcile).
+fn batch_legs(rec: &mut BenchRecorder, suffix: &str, jobs: usize, waves: usize, tasks: usize) {
+    let solo = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            cache_capacity: 0,
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("bind");
+    let solo_rate = compatible_wave_throughput(solo.addr, jobs, waves, tasks);
+    solo.stop();
+    let batched = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            cache_capacity: 0,
+            batch_window: std::time::Duration::from_millis(4),
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("bind");
+    let batched_rate = compatible_wave_throughput(batched.addr, jobs, waves, tasks);
+    let stats = batched.stats();
+    let b = stats.get("batch").expect("batch section");
+    let field = |k: &str| b.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let (njobs, flushes, coalesced) = (field("jobs"), field("flushes"), field("coalesced"));
+    assert_eq!(flushes + coalesced, njobs, "{stats:?}");
+    println!(
+        "batch{suffix}: {jobs}x{waves} tasks={tasks}: solo {solo_rate:.0}/s, \
+         batched {batched_rate:.0}/s ({coalesced} of {njobs} jobs coalesced in {flushes} flushes)"
+    );
+    rec.record_scalar(
+        &format!("service/batch/unbatched/answered_per_s{suffix}"),
+        "rate",
+        solo_rate,
+    );
+    rec.record_scalar(
+        &format!("service/batch/batched/answered_per_s{suffix}"),
+        "rate",
+        batched_rate,
+    );
+    rec.record_scalar(
+        &format!("service/batch/coalesced_fraction{suffix}"),
+        "fraction",
+        if njobs > 0.0 { coalesced / njobs } else { 0.0 },
+    );
+    batched.stop();
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let suffix = if smoke { "/smoke" } else { "" };
@@ -156,7 +305,8 @@ fn main() {
     println!("== mapping service (bounded pool) ==");
 
     // Round-trip latency on a persistent connection against a
-    // default-sized pool.
+    // default-sized pool. `"cache":false` keeps these legs on the compute
+    // path now that the service caches map replies by default.
     let svc = Service::start("127.0.0.1:0").expect("bind");
     let mut client = Client::connect(svc.addr).expect("connect");
     let ping = ping_req();
@@ -165,17 +315,24 @@ fn main() {
     });
     rec.record(&r, &[]);
     let n = if smoke { 64 } else { 512 };
-    let req = map_req(n);
+    let req = uncached(map_req(n));
     let r = bench_quick(&format!("service/rtt/map/tasks={n}{suffix}"), || {
         client.request(&req).expect("map")
     });
     rec.record(&r, &[("tasks", n as f64)]);
-    let req = hier_req(n);
+    let req = uncached(hier_req(n));
     let r = bench_quick(&format!("service/rtt/hier/tasks={n}{suffix}"), || {
         client.request(&req).expect("hier map")
     });
     rec.record(&r, &[("tasks", n as f64)]);
     svc.stop();
+
+    // Result cache: cold vs hot, and the hit/miss ledger.
+    cache_legs(&mut rec, suffix, n);
+
+    // Batching: compatible-request throughput with and without a window.
+    let (jobs, bwaves) = if smoke { (4, 3) } else { (8, 8) };
+    batch_legs(&mut rec, suffix, jobs, bwaves, n);
 
     // Saturation: overload must be answered, not buffered.
     let (burst, waves) = if smoke { (16, 4) } else { (48, 16) };

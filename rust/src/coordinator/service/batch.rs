@@ -1,0 +1,406 @@
+//! Window batching for compatible small hierarchical `map` requests.
+//!
+//! Compatible = same batching fingerprint: the request object minus its
+//! task set (`"tcoords"`/`"edges"`) and control fields — i.e. the same
+//! allocation, topology, objective, numa, hier, and coarsen config.
+//! Requests landing inside a short window are queued per fingerprint; the
+//! first arrival becomes the flush leader, sleeps out the window, then
+//! fans every queued graph through **one**
+//! [`crate::hier::map_hierarchical_batch`] invocation, amortizing the
+//! allocation-derived state (node coords, node-level allocation) and the
+//! proc-side partition memo across the whole batch while the per-worker
+//! sweep scratch arenas do what they always do. Followers park on a
+//! per-job slot, bounded by their own deadlines.
+//!
+//! Batched mappings are **bit-identical** to solo execution — see
+//! `map_hierarchical_batch`'s contract — so batching trades latency
+//! (up to one window) for throughput without changing a single reply
+//! byte. It is off by default ([`super::ServiceConfig::batch_window`] =
+//! zero) and the flush leader is panic-isolated: an unwind mid-flush
+//! resolves every unfilled slot to a structured failure (the
+//! [`FlushGuard`] RAII below), so followers never hang on a dead leader.
+
+use crate::apps::TaskGraph;
+use crate::hier::{map_hierarchical_batch, HierConfig, HierJob};
+use crate::machine::Allocation;
+use crate::mapping::rotations::NativeBackend;
+use crate::obs;
+use crate::par::{Deadline, DeadlineExceeded};
+use crate::testutil::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// How often parked followers re-check their deadline.
+const WAIT_POLL: Duration = Duration::from_millis(5);
+
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// What a submitted job resolves to.
+pub enum BatchOutcome {
+    /// The batched pipeline's mapping — bit-identical to a solo run.
+    Mapped(Box<crate::hier::HierMapping>),
+    /// This job's own compute budget expired inside the pipeline.
+    Deadline(DeadlineExceeded),
+    /// The flush leader unwound before filling this slot.
+    LeaderFailed,
+    /// This job's budget expired while parked waiting for the flush.
+    WaitExpired,
+}
+
+enum SlotState {
+    Pending,
+    Done(Result<crate::hier::HierMapping, DeadlineExceeded>),
+    LeaderFailed,
+}
+
+/// Per-job rendezvous between a parked submitter and the flush leader.
+struct Slot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: Mutex::new(SlotState::Pending),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, s: SlotState) {
+        let mut g = lock_ok(&self.state);
+        if matches!(*g, SlotState::Pending) {
+            *g = s;
+        }
+        drop(g);
+        self.ready.notify_all();
+    }
+}
+
+struct PendingJob {
+    graph: TaskGraph,
+    deadline: Deadline,
+    slot: Arc<Slot>,
+}
+
+#[derive(Default)]
+struct GroupState {
+    jobs: Vec<PendingJob>,
+    /// A leader is sleeping out the window for this group.
+    leader: bool,
+    /// The group was flushed and removed from the map; late pushers that
+    /// still hold its `Arc` must re-fetch instead of enqueueing into a
+    /// group nobody will ever flush again.
+    closed: bool,
+}
+
+#[derive(Default)]
+struct Group {
+    state: Mutex<GroupState>,
+}
+
+/// The batching stage: per-fingerprint queues with window-flush leaders.
+pub struct Batcher {
+    window: Duration,
+    max_tasks: usize,
+    groups: Mutex<HashMap<u64, Arc<Group>>>,
+    jobs: AtomicU64,
+    flushes: AtomicU64,
+    coalesced: AtomicU64,
+    leader_failures: AtomicU64,
+}
+
+impl Batcher {
+    pub fn new(window: Duration, max_tasks: usize) -> Batcher {
+        Batcher {
+            window,
+            max_tasks,
+            groups: Mutex::new(HashMap::new()),
+            jobs: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            leader_failures: AtomicU64::new(0),
+        }
+    }
+
+    /// Largest task count eligible for batching (big sweeps dominate their
+    /// own runtime; batching them would only add window latency).
+    pub fn max_tasks(&self) -> usize {
+        self.max_tasks
+    }
+
+    /// Enqueue one hierarchical map job under its compatibility `key` and
+    /// block until it resolves. The first submitter per open group leads:
+    /// it sleeps out the window, flushes everything queued by then through
+    /// one `map_hierarchical_batch` call, and fills every slot.
+    pub fn submit(
+        &self,
+        key: u64,
+        graph: TaskGraph,
+        deadline: Deadline,
+        alloc: &Allocation,
+        cfg: &HierConfig,
+    ) -> BatchOutcome {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::new(Slot::new());
+        let mut pending = Some(PendingJob {
+            graph,
+            deadline,
+            slot: Arc::clone(&slot),
+        });
+        let leader_of = loop {
+            let group = {
+                let mut groups = lock_ok(&self.groups);
+                Arc::clone(groups.entry(key).or_default())
+            };
+            let mut st = lock_ok(&group.state);
+            if st.closed {
+                // Lost the race against this group's flush; the map entry
+                // is gone, so retry against a fresh group.
+                continue;
+            }
+            st.jobs.push(pending.take().expect("pushed at most once"));
+            if st.leader {
+                break None;
+            }
+            st.leader = true;
+            break Some(group);
+        };
+
+        if let Some(group) = leader_of {
+            self.lead_flush(key, &group, alloc, cfg);
+        }
+        self.wait(&slot, deadline)
+    }
+
+    /// Leader path: sleep out the window, atomically close + detach the
+    /// group, run the batch, fill the slots.
+    fn lead_flush(&self, key: u64, group: &Arc<Group>, alloc: &Allocation, cfg: &HierConfig) {
+        std::thread::sleep(self.window);
+        let taken: Vec<PendingJob> = {
+            // groups → state nesting; `submit` never holds state while
+            // taking groups, so the order is consistent crate-wide.
+            let mut groups = lock_ok(&self.groups);
+            let mut st = lock_ok(&group.state);
+            st.closed = true;
+            if let Some(current) = groups.get(&key) {
+                if Arc::ptr_eq(current, group) {
+                    groups.remove(&key);
+                }
+            }
+            std::mem::take(&mut st.jobs)
+        };
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        if taken.len() > 1 {
+            self.coalesced
+                .fetch_add(taken.len() as u64 - 1, Ordering::Relaxed);
+        }
+        if obs::recording() {
+            obs::metrics().add("service.batch.jobs", taken.len() as u64);
+        }
+        let mut span = obs::span("batch.flush");
+        span.record("jobs", taken.len() as f64);
+
+        // Panic isolation: if the mapping library unwinds mid-flush, every
+        // slot not yet filled resolves to LeaderFailed — followers get a
+        // structured internal error, never a hang. (The leader's own
+        // request surfaces the panic through the handler's catch_unwind.)
+        let mut guard = FlushGuard {
+            batcher: self,
+            slots: taken.iter().map(|j| Arc::clone(&j.slot)).collect(),
+            armed: true,
+        };
+        let jobs: Vec<HierJob<'_>> = taken
+            .iter()
+            .map(|j| HierJob {
+                graph: &j.graph,
+                tcoords: &j.graph.coords,
+                deadline: j.deadline,
+            })
+            .collect();
+        let results = map_hierarchical_batch(&jobs, alloc, cfg, &NativeBackend);
+        for (job, result) in taken.iter().zip(results) {
+            job.slot.fill(SlotState::Done(result));
+        }
+        guard.armed = false;
+    }
+
+    /// Park on `slot` until it fills or `deadline` expires.
+    fn wait(&self, slot: &Slot, deadline: Deadline) -> BatchOutcome {
+        let mut g = lock_ok(&slot.state);
+        loop {
+            match std::mem::replace(&mut *g, SlotState::Pending) {
+                SlotState::Done(Ok(m)) => return BatchOutcome::Mapped(Box::new(m)),
+                SlotState::Done(Err(e)) => return BatchOutcome::Deadline(e),
+                SlotState::LeaderFailed => return BatchOutcome::LeaderFailed,
+                SlotState::Pending => {}
+            }
+            if deadline.expired() {
+                return BatchOutcome::WaitExpired;
+            }
+            g = match slot.ready.wait_timeout(g, WAIT_POLL) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
+    /// The `batch` section of `{"op":"stats"}`.
+    pub fn stats_json(&self) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("window_ms", Json::Num(self.window.as_secs_f64() * 1e3)),
+            ("max_tasks", Json::Num(self.max_tasks as f64)),
+            ("jobs", n(&self.jobs)),
+            ("flushes", n(&self.flushes)),
+            ("coalesced", n(&self.coalesced)),
+            ("leader_failures", n(&self.leader_failures)),
+        ])
+    }
+}
+
+/// Fills every slot of an unwinding flush with `LeaderFailed`.
+struct FlushGuard<'a> {
+    batcher: &'a Batcher,
+    slots: Vec<Arc<Slot>>,
+    armed: bool,
+}
+
+impl Drop for FlushGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        self.batcher.leader_failures.fetch_add(1, Ordering::Relaxed);
+        for slot in &self.slots {
+            slot.fill(SlotState::LeaderFailed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::stencil::stencil_graph;
+    use crate::hier::map_hierarchical_budgeted;
+    use crate::machine::Network;
+    use crate::mapping::MapSpec;
+
+    fn small_alloc(nodes: usize, rpn: usize) -> Allocation {
+        let machine = Network::torus(&[nodes]);
+        Allocation {
+            core_router: (0..nodes as u32).flat_map(|n| vec![n; rpn]).collect(),
+            core_node: (0..nodes as u32).flat_map(|n| vec![n; rpn]).collect(),
+            ranks_per_node: rpn,
+            machine,
+        }
+    }
+
+    fn cfg() -> HierConfig {
+        HierConfig {
+            spec: MapSpec {
+                threads: 1,
+                ..MapSpec::default()
+            },
+            ..HierConfig::default()
+        }
+    }
+
+    #[test]
+    fn batched_results_bit_identical_to_solo() {
+        let alloc = small_alloc(4, 2);
+        let cfg = cfg();
+        let graphs: Vec<TaskGraph> = [(2usize, 4usize), (4, 2), (2, 2)]
+            .iter()
+            .map(|&(x, y)| stencil_graph(&[x, y], false, 1.0))
+            .collect();
+        let jobs: Vec<HierJob<'_>> = graphs
+            .iter()
+            .map(|g| HierJob {
+                graph: g,
+                tcoords: &g.coords,
+                deadline: Deadline::unlimited(),
+            })
+            .collect();
+        let batched = map_hierarchical_batch(&jobs, &alloc, &cfg, &NativeBackend);
+        for (g, b) in graphs.iter().zip(batched) {
+            let solo = map_hierarchical_budgeted(
+                g,
+                &g.coords,
+                &alloc,
+                &cfg,
+                &NativeBackend,
+                Deadline::unlimited(),
+            )
+            .expect("unlimited");
+            let b = b.expect("unlimited");
+            assert_eq!(b.task_to_rank, solo.task_to_rank);
+            assert_eq!(b.task_to_node, solo.task_to_node);
+            assert_eq!(b.node_score.to_bits(), solo.node_score.to_bits());
+        }
+    }
+
+    #[test]
+    fn concurrent_submits_coalesce_into_one_flush() {
+        let alloc = Arc::new(small_alloc(4, 1));
+        let cfg = Arc::new(cfg());
+        let b = Arc::new(Batcher::new(Duration::from_millis(40), 1024));
+        let mut joins = Vec::new();
+        for i in 0..3usize {
+            let (b, alloc, cfg) = (Arc::clone(&b), Arc::clone(&alloc), Arc::clone(&cfg));
+            joins.push(std::thread::spawn(move || {
+                let g = stencil_graph(&[2 + i, 2], false, 1.0);
+                let solo = map_hierarchical_budgeted(
+                    &g,
+                    &g.coords,
+                    &alloc,
+                    &cfg,
+                    &NativeBackend,
+                    Deadline::unlimited(),
+                )
+                .expect("unlimited");
+                match b.submit(7, g, Deadline::unlimited(), &alloc, &cfg) {
+                    BatchOutcome::Mapped(m) => {
+                        assert_eq!(m.task_to_rank, solo.task_to_rank)
+                    }
+                    _ => panic!("batched job must map"),
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let stats = b.stats_json();
+        assert_eq!(stats.get("jobs"), Some(&Json::Num(3.0)));
+        // All three raced the same 40ms window; at least one flush ran and
+        // jobs − flushes were coalesced (exact split is scheduling-
+        // dependent, the counters always reconcile).
+        let flushes = stats.get("flushes").and_then(Json::as_f64).unwrap();
+        let coalesced = stats.get("coalesced").and_then(Json::as_f64).unwrap();
+        assert!(flushes >= 1.0);
+        assert_eq!(flushes + coalesced, 3.0);
+    }
+
+    #[test]
+    fn late_submit_after_flush_gets_a_fresh_group() {
+        let alloc = small_alloc(4, 1);
+        let cfg = cfg();
+        let b = Batcher::new(Duration::from_millis(1), 1024);
+        for _ in 0..2 {
+            let g = stencil_graph(&[2, 2], false, 1.0);
+            match b.submit(9, g, Deadline::unlimited(), &alloc, &cfg) {
+                BatchOutcome::Mapped(_) => {}
+                _ => panic!("sequential submits must both map"),
+            }
+        }
+        assert_eq!(b.stats_json().get("flushes"), Some(&Json::Num(2.0)));
+        assert!(lock_ok(&b.groups).is_empty(), "flushed groups are removed");
+    }
+}

@@ -1,0 +1,469 @@
+//! Content-addressed result cache for `op:"map"` replies.
+//!
+//! Keyed on the canonical fingerprint of the *full request identity*
+//! ([`crate::util::fingerprint`] over the request object minus the
+//! `"cache"`/`"profile"` control fields): task coords, weights, edges,
+//! allocation — heterogeneous node sizes included — topology, objective,
+//! numa, hier, and coarsen config all land in the key, so two requests
+//! share an entry only when they describe the same computation. Every
+//! mapping path in the crate is bit-identical at every thread count, so a
+//! cached reply is byte-for-byte the reply a cold run would produce —
+//! caching is pure routing, never an approximation.
+//!
+//! Shape:
+//!
+//! * **Sharded** — the key picks a shard (after one extra splitmix64 round
+//!   so low-entropy fingerprints still spread), each shard is an
+//!   independently locked map; workers on different keys rarely contend.
+//! * **Capacity-bounded LRU** — a global logical clock stamps entries on
+//!   insert and on hit; when a shard overflows its slice of the capacity,
+//!   the stalest *ready* entry is evicted (in-flight entries are never
+//!   evicted). Shards are small (capacity/shards entries), so the O(shard)
+//!   eviction scan is a few dozen comparisons.
+//! * **Single-flight** — the first miss installs an in-flight [`Flight`]
+//!   and computes; concurrent identical requests park on its condvar
+//!   (bounded by their own deadlines) instead of running N sweeps. The
+//!   leader's [`LeaderGuard`] is RAII: if the leader unwinds before
+//!   completing (an injected `service.cache.leader.panic`, say), `Drop`
+//!   removes the in-flight entry and resolves waiters to
+//!   [`FlightOutcome::Failed`] — followers get a structured `internal`
+//!   error, never a hang, and the poisoned key is recomputed from scratch
+//!   by the next request.
+//!
+//! Error replies (`"ok":false`) propagate to coalesced waiters — they
+//! asked for the identical computation and get its actual outcome — but
+//! are **never stored**: a deadline blip must not serve failures to the
+//! future.
+
+use crate::obs;
+use crate::testutil::json::Json;
+use crate::util::hash::splitmix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::par::Deadline;
+
+/// How often parked followers re-check their deadline.
+const WAIT_POLL: Duration = Duration::from_millis(5);
+
+/// Mutex lock that shrugs off poisoning: cache state is a `Json` clone +
+/// counters, valid at every step, so a panicking holder leaves nothing
+/// half-written worth propagating.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    entries: HashMap<u64, Entry>,
+}
+
+enum Entry {
+    /// A completed reply, LRU-stamped.
+    Ready { resp: Json, stamp: u64 },
+    /// A computation in progress; identical requests park on it.
+    InFlight(Arc<Flight>),
+}
+
+/// What a single-flight leader eventually tells its followers.
+#[derive(Clone)]
+pub enum FlightOutcome {
+    /// The leader's reply (success or a structured error), verbatim.
+    Reply(Json),
+    /// The leader unwound before producing a reply.
+    Failed,
+}
+
+/// Rendezvous for requests coalesced onto one in-flight computation.
+pub struct Flight {
+    outcome: Mutex<Option<FlightOutcome>>,
+    ready: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            outcome: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn resolve(&self, out: FlightOutcome) {
+        let mut g = lock_ok(&self.outcome);
+        if g.is_none() {
+            *g = Some(out);
+        }
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    /// Park until the leader publishes an outcome, or `deadline` expires
+    /// (`None` — the caller turns that into `deadline_exceeded`).
+    pub fn wait(&self, deadline: Deadline) -> Option<FlightOutcome> {
+        let mut g = lock_ok(&self.outcome);
+        loop {
+            if let Some(out) = g.as_ref() {
+                return Some(out.clone());
+            }
+            if deadline.expired() {
+                return None;
+            }
+            g = match self.ready.wait_timeout(g, WAIT_POLL) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+}
+
+/// Result of [`MapCache::lookup_or_begin`].
+pub enum Lookup<'a> {
+    /// Ready entry: the reply to send, already cloned out of the shard.
+    Hit(Json),
+    /// An identical request is in flight; park on it.
+    Wait(Arc<Flight>),
+    /// This request leads the computation; it must call
+    /// [`LeaderGuard::complete`] (or unwind and let `Drop` clean up).
+    Miss(LeaderGuard<'a>),
+}
+
+/// Sharded, capacity-bounded, single-flight LRU of map replies.
+pub struct MapCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity: usize,
+    shard_capacity: usize,
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    bypass: AtomicU64,
+    leader_failures: AtomicU64,
+}
+
+impl MapCache {
+    /// `capacity` total ready entries across `shards` shards (both clamped
+    /// to at least 1; a capacity-0 cache is represented by not
+    /// constructing one).
+    pub fn new(capacity: usize, shards: usize) -> MapCache {
+        let capacity = capacity.max(1);
+        let nshards = shards.clamp(1, capacity);
+        MapCache {
+            shards: (0..nshards).map(|_| Mutex::new(Shard::default())).collect(),
+            capacity,
+            shard_capacity: capacity.div_ceil(nshards),
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bypass: AtomicU64::new(0),
+            leader_failures: AtomicU64::new(0),
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(splitmix64(key) % self.shards.len() as u64) as usize]
+    }
+
+    fn count(name: &'static str) {
+        if obs::recording() {
+            obs::metrics().add(name, 1);
+        }
+    }
+
+    /// One cache transaction: hit (LRU-bumped reply clone), coalesce onto
+    /// an in-flight computation, or become the leader for this key.
+    pub fn lookup_or_begin(&self, key: u64) -> Lookup<'_> {
+        let mut span = obs::span("cache.lookup");
+        let mut shard = lock_ok(self.shard(key));
+        match shard.entries.get_mut(&key) {
+            Some(Entry::Ready { resp, stamp }) => {
+                *stamp = self.tick();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                span.record("hit", 1.0);
+                Self::count("service.cache.hit");
+                Lookup::Hit(resp.clone())
+            }
+            Some(Entry::InFlight(flight)) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                span.record("coalesced", 1.0);
+                Self::count("service.cache.coalesced");
+                Lookup::Wait(Arc::clone(flight))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                span.record("hit", 0.0);
+                Self::count("service.cache.miss");
+                let flight = Arc::new(Flight::new());
+                shard
+                    .entries
+                    .insert(key, Entry::InFlight(Arc::clone(&flight)));
+                Lookup::Miss(LeaderGuard {
+                    cache: self,
+                    key,
+                    flight,
+                    done: false,
+                })
+            }
+        }
+    }
+
+    /// A request skipped the cache (`"cache":false` or `"profile":true`).
+    pub fn note_bypass(&self) {
+        self.bypass.fetch_add(1, Ordering::Relaxed);
+        Self::count("service.cache.bypass");
+    }
+
+    /// Evict stalest ready entries until `shard` fits its capacity slice.
+    /// In-flight entries are pinned; if a shard is somehow all in-flight
+    /// it may transiently exceed capacity rather than drop live waiters.
+    fn evict_excess(&self, shard: &mut Shard) {
+        while shard.entries.len() > self.shard_capacity {
+            let victim = shard
+                .entries
+                .iter()
+                .filter_map(|(k, e)| match e {
+                    Entry::Ready { stamp, .. } => Some((*stamp, *k)),
+                    Entry::InFlight(_) => None,
+                })
+                .min();
+            let Some((_, k)) = victim else { break };
+            shard.entries.remove(&k);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            Self::count("service.cache.eviction");
+        }
+    }
+
+    /// The `cache` section of `{"op":"stats"}`.
+    pub fn stats_json(&self) -> Json {
+        let entries: usize = self
+            .shards
+            .iter()
+            .map(|s| lock_ok(s).entries.len())
+            .sum();
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("shards", Json::Num(self.shards.len() as f64)),
+            ("entries", Json::Num(entries as f64)),
+            ("hits", n(&self.hits)),
+            ("misses", n(&self.misses)),
+            ("coalesced", n(&self.coalesced)),
+            ("inserts", n(&self.inserts)),
+            ("evictions", n(&self.evictions)),
+            ("bypass", n(&self.bypass)),
+            ("leader_failures", n(&self.leader_failures)),
+        ])
+    }
+
+    /// Hits counter (for tests/benches reconciling against stats).
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII handle held by the request that owns an in-flight computation.
+pub struct LeaderGuard<'a> {
+    cache: &'a MapCache,
+    key: u64,
+    flight: Arc<Flight>,
+    done: bool,
+}
+
+impl LeaderGuard<'_> {
+    /// Is this guard's flight still the one installed under the key? A
+    /// leader failure may have been replaced by a newer computation; never
+    /// clobber someone else's entry.
+    fn owns_entry(&self, shard: &Shard) -> bool {
+        matches!(
+            shard.entries.get(&self.key),
+            Some(Entry::InFlight(f)) if Arc::ptr_eq(f, &self.flight)
+        )
+    }
+
+    /// Publish the computed reply to coalesced waiters and — when it is a
+    /// success — store it in the LRU. Error replies reach the waiters
+    /// (they coalesced onto exactly this computation) but are never
+    /// cached.
+    pub fn complete(mut self, resp: &Json) {
+        self.done = true;
+        let store = resp.get("ok") == Some(&Json::Bool(true));
+        {
+            let mut span = obs::span("cache.insert");
+            span.record("stored", if store { 1.0 } else { 0.0 });
+            let mut shard = lock_ok(self.cache.shard(self.key));
+            if self.owns_entry(&shard) {
+                if store {
+                    let stamp = self.cache.tick();
+                    shard.entries.insert(
+                        self.key,
+                        Entry::Ready {
+                            resp: resp.clone(),
+                            stamp,
+                        },
+                    );
+                    self.cache.inserts.fetch_add(1, Ordering::Relaxed);
+                    MapCache::count("service.cache.insert");
+                    self.cache.evict_excess(&mut shard);
+                } else {
+                    shard.entries.remove(&self.key);
+                }
+            }
+        }
+        self.flight.resolve(FlightOutcome::Reply(resp.clone()));
+    }
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // The leader unwound before completing: un-poison the key and fail
+        // the waiters over to a structured error instead of a hang.
+        self.cache.leader_failures.fetch_add(1, Ordering::Relaxed);
+        MapCache::count("service.cache.leader_failure");
+        {
+            let mut shard = lock_ok(self.cache.shard(self.key));
+            if self.owns_entry(&shard) {
+                shard.entries.remove(&self.key);
+            }
+        }
+        self.flight.resolve(FlightOutcome::Failed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn ok_reply(tag: f64) -> Json {
+        Json::obj(vec![("ok", Json::Bool(true)), ("tag", Json::Num(tag))])
+    }
+
+    #[test]
+    fn miss_then_hit_returns_the_stored_reply() {
+        let c = MapCache::new(8, 2);
+        let Lookup::Miss(leader) = c.lookup_or_begin(1) else {
+            panic!("first lookup must miss");
+        };
+        leader.complete(&ok_reply(7.0));
+        match c.lookup_or_begin(1) {
+            Lookup::Hit(resp) => assert_eq!(resp, ok_reply(7.0)),
+            _ => panic!("second lookup must hit"),
+        }
+        assert_eq!(c.hit_count(), 1);
+    }
+
+    #[test]
+    fn error_replies_propagate_but_are_not_stored() {
+        let c = MapCache::new(8, 1);
+        let Lookup::Miss(leader) = c.lookup_or_begin(3) else {
+            panic!("miss");
+        };
+        let err = Json::obj(vec![("ok", Json::Bool(false))]);
+        leader.complete(&err);
+        assert!(matches!(c.lookup_or_begin(3), Lookup::Miss(_)));
+    }
+
+    #[test]
+    fn dropped_leader_unpoisons_and_fails_waiters() {
+        let c = MapCache::new(8, 1);
+        let Lookup::Miss(leader) = c.lookup_or_begin(5) else {
+            panic!("miss");
+        };
+        let Lookup::Wait(flight) = c.lookup_or_begin(5) else {
+            panic!("second identical request must coalesce");
+        };
+        drop(leader); // simulated panic-unwind
+        match flight.wait(Deadline::unlimited()) {
+            Some(FlightOutcome::Failed) => {}
+            _ => panic!("waiter must observe the failure"),
+        }
+        // Key is clean again — next request recomputes.
+        assert!(matches!(c.lookup_or_begin(5), Lookup::Miss(_)));
+        assert_eq!(c.stats_json().get("leader_failures"), Some(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn followers_receive_the_leaders_reply() {
+        let c = Arc::new(MapCache::new(8, 1));
+        let Lookup::Miss(leader) = c.lookup_or_begin(9) else {
+            panic!("miss");
+        };
+        let got = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            let got = Arc::clone(&got);
+            joins.push(std::thread::spawn(move || {
+                let Lookup::Wait(flight) = c.lookup_or_begin(9) else {
+                    panic!("must coalesce while in flight");
+                };
+                match flight.wait(Deadline::unlimited()) {
+                    Some(FlightOutcome::Reply(resp)) => {
+                        assert_eq!(resp, ok_reply(1.0));
+                        got.fetch_add(1, Ordering::SeqCst);
+                    }
+                    _ => panic!("must see the reply"),
+                }
+            }));
+        }
+        // Let followers park, then publish.
+        std::thread::sleep(Duration::from_millis(20));
+        leader.complete(&ok_reply(1.0));
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::SeqCst), 4);
+        assert_eq!(c.stats_json().get("coalesced"), Some(&Json::Num(4.0)));
+    }
+
+    #[test]
+    fn lru_evicts_stalest_ready_entry() {
+        let c = MapCache::new(2, 1);
+        for key in [1u64, 2] {
+            let Lookup::Miss(leader) = c.lookup_or_begin(key) else {
+                panic!("miss");
+            };
+            leader.complete(&ok_reply(key as f64));
+        }
+        // Touch key 1 so key 2 is stalest, then overflow.
+        assert!(matches!(c.lookup_or_begin(1), Lookup::Hit(_)));
+        let Lookup::Miss(leader) = c.lookup_or_begin(3) else {
+            panic!("miss");
+        };
+        leader.complete(&ok_reply(3.0));
+        assert!(matches!(c.lookup_or_begin(1), Lookup::Hit(_)));
+        assert!(matches!(c.lookup_or_begin(3), Lookup::Hit(_)));
+        assert!(matches!(c.lookup_or_begin(2), Lookup::Miss(_)));
+        assert_eq!(c.stats_json().get("evictions"), Some(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn follower_wait_respects_deadline() {
+        let c = MapCache::new(8, 1);
+        let Lookup::Miss(_leader) = c.lookup_or_begin(11) else {
+            panic!("miss");
+        };
+        let Lookup::Wait(flight) = c.lookup_or_begin(11) else {
+            panic!("coalesce");
+        };
+        assert!(flight
+            .wait(Deadline::within(Duration::from_millis(15)))
+            .is_none());
+    }
+}

@@ -42,15 +42,24 @@ pub struct RequestCtx {
     pub diag: Arc<Diagnostics>,
     /// Pool view sampled when the request started (for `stats`).
     pub pool: Option<PoolSnapshot>,
+    /// Content-addressed result cache for `map` replies (`None` when
+    /// disabled via [`super::ServiceConfig::cache_capacity`] = 0).
+    pub cache: Option<Arc<super::cache::MapCache>>,
+    /// Window batcher for compatible small hierarchical `map` requests
+    /// (`None` unless [`super::ServiceConfig::batch_window`] is set).
+    pub batcher: Option<Arc<super::batch::Batcher>>,
 }
 
 impl Default for RequestCtx {
-    /// Direct (non-service) callers: unlimited budget, private telemetry.
+    /// Direct (non-service) callers: unlimited budget, private telemetry,
+    /// no cache or batching.
     fn default() -> RequestCtx {
         RequestCtx {
             deadline: Deadline::unlimited(),
             diag: Arc::new(Diagnostics::new()),
             pool: None,
+            cache: None,
+            batcher: None,
         }
     }
 }
@@ -59,7 +68,7 @@ impl Default for RequestCtx {
 /// ignoring unknown fields would let typos change production mapping runs.
 const MAP_FIELDS: &[&str] = &[
     "op", "tcoords", "pcoords", "ordering", "longest_dim", "uneven_prime", "edges", "torus",
-    "hier", "objective", "numa", "bgq", "coarsen", "profile", "topology",
+    "hier", "objective", "numa", "bgq", "coarsen", "profile", "topology", "cache",
 ];
 const EVAL_FIELDS: &[&str] = &[
     "op", "map", "edges", "pcoords", "torus", "ranks_per_node", "objective", "numa", "bgq",
@@ -159,10 +168,14 @@ fn dispatch(op: &str, req: &Json, ctx: &RequestCtx) -> Json {
     faults::failpoint("service.handler.panic");
     match op {
         "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-        "stats" => check_fields(req, STATS_FIELDS, "stats")
-            .unwrap_or_else(|| ctx.diag.snapshot_json(ctx.pool)),
-        "map" => check_fields(req, MAP_FIELDS, "map")
-            .unwrap_or_else(|| with_profile(req, "service.map", || handle_map(req, ctx))),
+        "stats" => check_fields(req, STATS_FIELDS, "stats").unwrap_or_else(|| {
+            let mut resp = ctx.diag.snapshot_json(ctx.pool);
+            super::attach_cache_stats(&mut resp, ctx.cache.as_deref(), ctx.batcher.as_deref());
+            resp
+        }),
+        "map" => {
+            check_fields(req, MAP_FIELDS, "map").unwrap_or_else(|| handle_map_cached(req, ctx))
+        }
         "eval" => check_fields(req, EVAL_FIELDS, "eval")
             .unwrap_or_else(|| with_profile(req, "service.eval", || handle_eval(req, ctx))),
         "trace" => check_fields(req, TRACE_FIELDS, "trace").unwrap_or_else(handle_trace),
@@ -758,6 +771,51 @@ fn finish_alloc(
     })
 }
 
+/// Top-level object keys excluded from the *batching compatibility* key:
+/// the per-request task set plus the cache-control fields. Two requests
+/// sharing this fingerprint ask for different graphs mapped under the
+/// same allocation/topology/objective/numa/hier/coarsen config — exactly
+/// what [`crate::hier::map_hierarchical_batch`] fans through one
+/// invocation.
+const BATCH_COMPAT_SKIP: &[&str] = &["tcoords", "edges", "cache", "profile"];
+
+/// Run the hierarchical pipeline for one request — through the service's
+/// batching stage when one is configured and the request is small enough,
+/// solo otherwise. Batched results are bit-identical to solo execution
+/// (see `map_hierarchical_batch`), so the reply never says which path ran.
+/// `Err` carries the finished error reply.
+fn run_hier(
+    req: &Json,
+    ctx: &RequestCtx,
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    cfg: &HierConfig,
+) -> Result<crate::hier::HierMapping, Json> {
+    if let Some(batcher) = ctx.batcher.as_deref() {
+        if graph.num_tasks <= batcher.max_tasks() {
+            use super::batch::BatchOutcome;
+            let key = crate::util::fingerprint::fingerprint_excluding(req, BATCH_COMPAT_SKIP);
+            return match batcher.submit(key, graph.clone(), ctx.deadline, alloc, cfg) {
+                BatchOutcome::Mapped(m) => Ok(*m),
+                BatchOutcome::Deadline(e) => {
+                    Err(ServiceError::deadline_exceeded(&e.to_string()).to_json())
+                }
+                BatchOutcome::WaitExpired => Err(ServiceError::deadline_exceeded(
+                    "compute budget exhausted waiting for the batch window to flush",
+                )
+                .to_json()),
+                BatchOutcome::LeaderFailed => Err(ServiceError::internal(
+                    "batch flush leader failed before computing this request; retry",
+                )
+                .to_json()),
+            };
+        }
+    }
+    map_hierarchical_budgeted(graph, tcoords, alloc, cfg, &NativeBackend, ctx.deadline)
+        .map_err(|e| ServiceError::deadline_exceeded(&e.to_string()).to_json())
+}
+
 /// The `"hier"` extension of `op:map`: two-level node→core mapping. The
 /// top-level `ordering`/`longest_dim`/`uneven_prime` knobs (already parsed
 /// into `map_cfg`) configure the node-level partition.
@@ -870,16 +928,9 @@ fn handle_map_hier(
         edges,
         coords: tcoords.clone(),
     };
-    let m = match map_hierarchical_budgeted(
-        &graph,
-        tcoords,
-        &alloc,
-        &cfg,
-        &NativeBackend,
-        ctx.deadline,
-    ) {
+    let m = match run_hier(req, ctx, &graph, tcoords, &alloc, &cfg) {
         Ok(m) => m,
-        Err(e) => return ServiceError::deadline_exceeded(&e.to_string()).to_json(),
+        Err(resp) => return resp,
     };
     // Combined breakdown: the final mapping's value under the requested
     // objective × numa composition (see `objective::combined_value`), the
@@ -1062,6 +1113,62 @@ fn parse_bool(req: &Json, key: &str, default: bool) -> Result<bool, Json> {
         None => Ok(default),
         Some(Json::Bool(b)) => Ok(*b),
         Some(_) => Err(err(&format!("{key} must be a boolean"))),
+    }
+}
+
+/// Top-level object keys excluded from the cache key: the cache-control
+/// flag itself and `"profile"` (profiled replies carry a fresh trace id,
+/// so they are computed fresh and never cached). Everything else — task
+/// coords/weights/edges, allocation, topology, objective, numa, hier,
+/// coarsen — is request identity and lands in the fingerprint.
+const CACHE_KEY_SKIP: &[&str] = &["cache", "profile"];
+
+/// The `map` entry point behind the result cache: hit → the stored reply
+/// verbatim (bit-identical to a cold run, so hits are unmarked); identical
+/// request in flight → coalesce onto it; miss → lead the computation and
+/// publish. `"cache":false`, `"profile":true`, or a service without a
+/// cache bypass straight to the handler. Both control fields are strictly
+/// validated *before* any lookup so a cache hit can never mask an
+/// `invalid_request`.
+fn handle_map_cached(req: &Json, ctx: &RequestCtx) -> Json {
+    use super::cache::{FlightOutcome, Lookup};
+    let use_cache = match parse_bool(req, "cache", true) {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    let profiled = match parse_bool(req, "profile", false) {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    let run = || with_profile(req, "service.map", || handle_map(req, ctx));
+    let Some(cache) = ctx.cache.as_deref() else {
+        return run();
+    };
+    faults::failpoint("service.cache.lookup");
+    if !use_cache || profiled {
+        cache.note_bypass();
+        return run();
+    }
+    let key = crate::util::fingerprint::fingerprint_excluding(req, CACHE_KEY_SKIP);
+    match cache.lookup_or_begin(key) {
+        Lookup::Hit(resp) => resp,
+        Lookup::Wait(flight) => match flight.wait(ctx.deadline) {
+            Some(FlightOutcome::Reply(resp)) => resp,
+            Some(FlightOutcome::Failed) => ServiceError::internal(
+                "coalesced onto an identical in-flight request whose leader failed; retry",
+            )
+            .to_json(),
+            None => ServiceError::deadline_exceeded(
+                "compute budget exhausted waiting for an identical in-flight request",
+            )
+            .to_json(),
+        },
+        Lookup::Miss(leader) => {
+            faults::failpoint("service.cache.leader.panic");
+            let resp = run();
+            leader.complete(&resp);
+            resp
+        }
     }
 }
 

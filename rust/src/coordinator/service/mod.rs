@@ -148,6 +148,7 @@
 //! | `bgq`                  | map (hier), eval | `{"block":[a,b,c,d,e], "ranks_per_node":T, "order":"ABCDET"}` | replaces `pcoords`/`torus`/`ranks_per_node`; conflicts with `"topology"` |
 //! | `coarsen`              | map (hier) | `{"target_tasks":N, "max_levels":L, "matching":"heavy_edge"\|"geometric"}` | all optional; needs non-empty `"edges"`  |
 //! | `profile`              | map, eval  | bool                                  | attach `"trace_id"` + per-phase `"profile"` breakdown       |
+//! | `cache`                | map        | bool                                  | default true; `false` bypasses the result cache for this request |
 //!
 //! Success responses: `map` → `"map"` (+ `"nodes"`, `"sockets"`,
 //! `"socket_swaps"`, `"coarsen_levels"`, `"topology"` when applicable);
@@ -183,6 +184,45 @@
 //! worker. Handlers run under `catch_unwind`: a library panic becomes a
 //! structured `internal` error, the message lands in the diagnostics ring
 //! buffer, and the worker lives on.
+//!
+//! # Result cache & request batching
+//!
+//! Every parallel path in the library is bit-identical to its
+//! sequential counterpart, so a `map` reply is a pure function of the
+//! request content. The service exploits that with a sharded,
+//! capacity-bounded LRU **result cache** keyed on a canonical
+//! fingerprint of the full request identity
+//! ([`crate::util::fingerprint`]) — task coordinates/weights/edges,
+//! allocation (including heterogeneous node sizes), topology,
+//! objective, NUMA, hier and coarsen config all feed the key; `"cache"`
+//! and `"profile"` do not. A repeated request is answered from memory;
+//! concurrent identical requests are **single-flighted** — one leader
+//! computes, followers wait and receive the same bytes. Only `ok:true`
+//! replies are stored; a leader that fails (panic, deadline) un-poisons
+//! the entry and followers get a retryable-by-resubmit `internal` /
+//! `deadline_exceeded` error, never a poisoned reply. Cached replies
+//! are bit-identical to cold execution at every worker count. Sizing:
+//! [`ServiceConfig::cache_capacity`] (0 disables),
+//! [`ServiceConfig::cache_shards`]. Per-request opt-out:
+//! `"cache":false`. `"profile":true` also bypasses (a trace id is
+//! per-execution).
+//!
+//! **Batching** ([`ServiceConfig::batch_window`], default off):
+//! compatible small hierarchical `map` requests — same
+//! allocation/topology/config fingerprint, different task sets, at most
+//! [`ServiceConfig::batch_max_tasks`] tasks each — arriving within the
+//! window are queued and fanned through **one** shared-setup sweep
+//! invocation ([`crate::hier::map_hierarchical_batch`]): the node-level
+//! allocation, router table and rotation partitions are prepared once
+//! and reused across the group. Each caller still receives exactly the
+//! reply a solo run would have produced — batching is a
+//! setup-amortization, never a result change. Per flush of `n` jobs the
+//! `coalesced` counter grows by `n-1`, so
+//! `flushes + coalesced == jobs` always reconciles.
+//!
+//! Both stages are observable: `cache.lookup` / `cache.insert` /
+//! `batch.flush` spans, `service.cache.*` / `service.batch.*` metrics
+//! counters, and `"cache"` / `"batch"` sections in `{"op":"stats"}`.
 //!
 //! # Error taxonomy
 //!
@@ -233,6 +273,14 @@
 //! | `pool`           | worker-pool view (attached when the request arrives   |
 //! |                  | through the service; direct [`handle_request`] calls  |
 //! |                  | have no pool to report)                               |
+//! | `cache`          | result-cache counters (present when the cache is on): |
+//! |                  | `capacity`/`shards`/`entries` plus monotonic `hits`/  |
+//! |                  | `misses`/`coalesced`/`inserts`/`evictions`/`bypass`/  |
+//! |                  | `leader_failures`                                     |
+//! | `batch`          | batching counters (present when batching is on):      |
+//! |                  | `window_ms`/`max_tasks` plus monotonic `jobs`/        |
+//! |                  | `flushes`/`coalesced`/`leader_failures`; the invariant|
+//! |                  | `flushes + coalesced == jobs` always holds            |
 //!
 //! The pre-histogram fields (`count`/`total_us`/`max_us`/`mean_us` and
 //! everything top-level) are unchanged, so existing consumers keep
@@ -270,19 +318,24 @@
 //!
 //! The handlers and lifecycle carry named failpoints
 //! (`"service.handler"`, `"service.handler.panic"`, `"service.accept"`,
-//! `"service.shutdown"`) wired to the deterministic, seeded
+//! `"service.shutdown"`, `"service.cache.lookup"`,
+//! `"service.cache.leader.panic"`) wired to the deterministic, seeded
 //! [`crate::testutil::faults`] harness. They are inert unless a test
 //! installs a [`FaultPlan`](crate::testutil::faults::FaultPlan) — the
 //! chaos suite (`tests/chaos.rs`) uses them to prove the invariants above
 //! under injected panics, stalls, and overload, bit-reproducibly at every
 //! thread count.
 
+mod batch;
+mod cache;
 mod client;
 mod diagnostics;
 mod errors;
 mod handlers;
 mod pool;
 
+pub use batch::{BatchOutcome, Batcher};
+pub use cache::{Flight, FlightOutcome, LeaderGuard, Lookup, MapCache};
 pub use client::{request_with_retry, Client, RetryPolicy};
 pub use diagnostics::{Diagnostics, PoolSnapshot};
 pub use errors::{error_kind, error_message, error_retry_after_ms, ErrorKind, ServiceError};
@@ -323,6 +376,20 @@ pub struct ServiceConfig {
     /// Grace period for in-flight connections at shutdown before their
     /// sockets are force-closed.
     pub drain_timeout: Duration,
+    /// Result-cache capacity in entries (`ok:true` map replies). 0
+    /// disables the cache entirely. Replies served from the cache are
+    /// bit-identical to cold execution, so the cache is on by default.
+    pub cache_capacity: usize,
+    /// Lock shards for the result cache (clamped to `[1, capacity]`).
+    pub cache_shards: usize,
+    /// Batching window for compatible small hierarchical `map`
+    /// requests. `Duration::ZERO` (the default) disables batching —
+    /// it trades up to one window of added latency for shared-setup
+    /// throughput, so it is opt-in.
+    pub batch_window: Duration,
+    /// Largest task count eligible for batching; bigger requests run
+    /// solo (their setup cost is already amortized by their size).
+    pub batch_max_tasks: usize,
 }
 
 impl Default for ServiceConfig {
@@ -337,6 +404,10 @@ impl Default for ServiceConfig {
             request_budget: Duration::from_secs(30),
             retry_after_ms: 50,
             drain_timeout: Duration::from_secs(5),
+            cache_capacity: 256,
+            cache_shards: 8,
+            batch_window: Duration::ZERO,
+            batch_max_tasks: 2048,
         }
     }
 }
@@ -361,6 +432,8 @@ pub struct Service {
     accept: Option<std::thread::JoinHandle<()>>,
     pool: Option<WorkerPool>,
     diag: Arc<Diagnostics>,
+    cache: Option<Arc<MapCache>>,
+    batcher: Option<Arc<Batcher>>,
 }
 
 impl Service {
@@ -379,7 +452,12 @@ impl Service {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let diag = Arc::new(Diagnostics::new());
-        let pool = WorkerPool::start(cfg.clone(), Arc::clone(&diag));
+        let cache = (cfg.cache_capacity > 0)
+            .then(|| Arc::new(MapCache::new(cfg.cache_capacity, cfg.cache_shards)));
+        let batcher = (!cfg.batch_window.is_zero())
+            .then(|| Arc::new(Batcher::new(cfg.batch_window, cfg.batch_max_tasks)));
+        let pool =
+            WorkerPool::start(cfg.clone(), Arc::clone(&diag), cache.clone(), batcher.clone());
         let shared = pool.shared();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
@@ -419,13 +497,17 @@ impl Service {
             accept: Some(accept),
             pool: Some(pool),
             diag,
+            cache,
+            batcher,
         })
     }
 
     /// A point-in-time stats snapshot (same schema as `{"op":"stats"}`).
     pub fn stats(&self) -> crate::testutil::json::Json {
         let pool = self.pool.as_ref().map(|p| p.shared().snapshot());
-        self.diag.snapshot_json(pool)
+        let mut resp = self.diag.snapshot_json(pool);
+        attach_cache_stats(&mut resp, self.cache.as_deref(), self.batcher.as_deref());
+        resp
     }
 
     /// Graceful shutdown: stop accepting, drain in-flight work up to
@@ -448,6 +530,24 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown_impl();
+    }
+}
+
+/// Merge `"cache"` / `"batch"` sections into a stats reply. Absent
+/// stages contribute nothing, so consumers can feature-detect by key.
+fn attach_cache_stats(
+    resp: &mut crate::testutil::json::Json,
+    cache: Option<&MapCache>,
+    batcher: Option<&Batcher>,
+) {
+    use crate::testutil::json::Json;
+    if let Json::Obj(map) = resp {
+        if let Some(c) = cache {
+            map.insert("cache".to_string(), c.stats_json());
+        }
+        if let Some(b) = batcher {
+            map.insert("batch".to_string(), b.stats_json());
+        }
     }
 }
 

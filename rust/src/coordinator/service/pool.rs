@@ -14,6 +14,8 @@
 //! under `catch_unwind`, so neither a stalled client nor a library panic
 //! can take a worker out of the pool.
 
+use super::batch::Batcher;
+use super::cache::MapCache;
 use super::diagnostics::{Diagnostics, PoolSnapshot};
 use super::errors::{err, ServiceError};
 use super::handlers::{self, RequestCtx};
@@ -55,6 +57,11 @@ pub(super) struct PoolShared {
     conns: Mutex<HashMap<u64, TcpStream>>,
     next_conn_id: AtomicU64,
     diag: Arc<Diagnostics>,
+    /// Shared result cache for `map` requests (None = disabled).
+    cache: Option<Arc<MapCache>>,
+    /// Shared batching stage for compatible small `map` requests
+    /// (None = disabled).
+    batcher: Option<Arc<Batcher>>,
 }
 
 impl PoolShared {
@@ -99,7 +106,12 @@ pub(super) struct WorkerPool {
 }
 
 impl WorkerPool {
-    pub(super) fn start(cfg: ServiceConfig, diag: Arc<Diagnostics>) -> WorkerPool {
+    pub(super) fn start(
+        cfg: ServiceConfig,
+        diag: Arc<Diagnostics>,
+        cache: Option<Arc<MapCache>>,
+        batcher: Option<Arc<Batcher>>,
+    ) -> WorkerPool {
         let workers = cfg.resolved_workers();
         let shared = Arc::new(PoolShared {
             cfg,
@@ -111,6 +123,8 @@ impl WorkerPool {
             conns: Mutex::new(HashMap::new()),
             next_conn_id: AtomicU64::new(0),
             diag,
+            cache,
+            batcher,
         });
         let handles = (0..workers)
             .map(|_| {
@@ -236,6 +250,8 @@ fn serve_conn(shared: &PoolShared, stream: TcpStream) {
                     deadline: Deadline::within(shared.cfg.request_budget),
                     diag: Arc::clone(&shared.diag),
                     pool: Some(shared.snapshot()),
+                    cache: shared.cache.clone(),
+                    batcher: shared.batcher.clone(),
                 };
                 let resp = handlers::handle_request_with(&line, &ctx);
                 if write_reply(&mut writer, &resp).is_err() {

@@ -80,7 +80,7 @@ use crate::apps::TaskGraph;
 use crate::coarsen::{self, CoarsenConfig};
 use crate::geom::Coords;
 use crate::machine::{Allocation, NumaTopology, Topology};
-use crate::mapping::rotations::{rotation_sweep, SweepConfig, WhopsBackend};
+use crate::mapping::rotations::{rotation_sweep_cached, SweepCache, SweepConfig, WhopsBackend};
 use crate::mapping::shift::shift_torus_coords;
 use crate::mapping::{MapConfig, MapSpec};
 use crate::objective::{build_eval, Adjacency, EvalSpec, IncrementalEval, ObjectiveKind};
@@ -309,19 +309,95 @@ pub fn map_hierarchical_budgeted(
     backend: &dyn WhopsBackend,
     deadline: Deadline,
 ) -> Result<HierMapping, DeadlineExceeded> {
+    let shared = HierShared::new(alloc, cfg);
+    map_hierarchical_shared(graph, tcoords, alloc, &shared, cfg, backend, deadline)
+}
+
+/// Allocation-derived state shared across the hier pipeline — and, through
+/// [`map_hierarchical_batch`], across several graphs mapped onto the same
+/// allocation: the node-level allocation, node router ids, prepared node
+/// coordinates, and a cross-sweep [`SweepCache`] of proc-side partitions.
+/// Everything here is a pure function of `(alloc, cfg)` (partitions
+/// additionally of the per-graph task count, which is part of the cache
+/// key), so sharing it across jobs can never change a mapping bit.
+struct HierShared {
+    node_alloc: Allocation,
+    node_routers: Vec<u32>,
+    ncoords: Coords,
+    sweep_cache: SweepCache,
+}
+
+impl HierShared {
+    fn new(alloc: &Allocation, cfg: &HierConfig) -> HierShared {
+        let node_alloc = node_level_alloc(alloc);
+        let node_routers = alloc.node_routers();
+        let mut ncoords = prepare_node_coords(alloc, cfg);
+        if node_alloc.num_ranks() != ncoords.len() {
+            // Heterogeneous: one coordinate row per pseudo-rank slot.
+            ncoords = expand_node_coords(&ncoords, &node_alloc);
+        }
+        HierShared {
+            node_alloc,
+            node_routers,
+            ncoords,
+            sweep_cache: SweepCache::new(),
+        }
+    }
+}
+
+/// One job of [`map_hierarchical_batch`]: a task graph (whose `coords` are
+/// the partitioning coordinates), the same coordinates as a [`Coords`]
+/// view, and the per-request compute budget.
+pub struct HierJob<'a> {
+    pub graph: &'a TaskGraph,
+    pub tcoords: &'a Coords,
+    pub deadline: Deadline,
+}
+
+/// Map several task graphs onto the *same* allocation with the *same*
+/// config, sharing the allocation-derived state ([`HierShared`]) and the
+/// proc-side partition memo across jobs — the service's batching stage
+/// fans compatible small requests through this. Each job's mapping is
+/// **bit-identical** to a solo [`map_hierarchical_budgeted`] call: the
+/// shared state is a pure function of `(alloc, cfg)` and cached proc
+/// partitions are pure functions of `(alloc, cfg, task count,
+/// permutation)`, so amortization is routing, not approximation. Jobs run
+/// in order; each result carries its own deadline verdict.
+pub fn map_hierarchical_batch(
+    jobs: &[HierJob<'_>],
+    alloc: &Allocation,
+    cfg: &HierConfig,
+    backend: &dyn WhopsBackend,
+) -> Vec<Result<HierMapping, DeadlineExceeded>> {
+    let shared = HierShared::new(alloc, cfg);
+    jobs.iter()
+        .map(|j| {
+            map_hierarchical_shared(j.graph, j.tcoords, alloc, &shared, cfg, backend, j.deadline)
+        })
+        .collect()
+}
+
+/// The pipeline body behind [`map_hierarchical_budgeted`] and
+/// [`map_hierarchical_batch`], running against caller-built [`HierShared`]
+/// state.
+fn map_hierarchical_shared(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    alloc: &Allocation,
+    shared: &HierShared,
+    cfg: &HierConfig,
+    backend: &dyn WhopsBackend,
+    deadline: Deadline,
+) -> Result<HierMapping, DeadlineExceeded> {
     assert_eq!(tcoords.len(), graph.num_tasks);
     let spec = cfg.spec.eval_spec();
     if let Err(e) = spec.validate() {
         panic!("unsupported objective x numa combination: {e}");
     }
     let par = cfg.parallelism();
-    let node_alloc = node_level_alloc(alloc);
-    let node_routers = alloc.node_routers();
-    let mut ncoords = prepare_node_coords(alloc, cfg);
-    if node_alloc.num_ranks() != ncoords.len() {
-        // Heterogeneous: one coordinate row per pseudo-rank slot.
-        ncoords = expand_node_coords(&ncoords, &node_alloc);
-    }
+    let node_alloc = &shared.node_alloc;
+    let node_routers = &shared.node_routers;
+    let ncoords = &shared.ncoords;
 
     // Level 1: the task→node assignment — the direct rotation sweep (+
     // MinVolume refinement), or, with `cfg.coarsen` on an eligible input,
@@ -338,15 +414,16 @@ pub fn map_hierarchical_budgeted(
             vres = vcycle_assign(
                 graph,
                 tcoords,
-                &ncoords,
-                &node_alloc,
-                &node_routers,
+                ncoords,
+                node_alloc,
+                node_routers,
                 alloc,
                 ccfg,
                 cfg,
                 spec,
                 par,
                 backend,
+                &shared.sweep_cache,
                 deadline,
             )?;
         }
@@ -357,14 +434,15 @@ pub fn map_hierarchical_budgeted(
             let (node_of, score, swaps) = sweep_assign(
                 graph,
                 tcoords,
-                &ncoords,
-                &node_alloc,
-                &node_routers,
+                ncoords,
+                node_alloc,
+                node_routers,
                 &alloc.machine,
                 cfg,
                 spec,
                 par,
                 backend,
+                &shared.sweep_cache,
                 deadline,
             )?;
             (node_of, score, swaps, Vec::new())
@@ -451,6 +529,7 @@ fn sweep_assign(
     spec: EvalSpec,
     par: Parallelism,
     backend: &dyn WhopsBackend,
+    cache: &SweepCache,
     deadline: Deadline,
 ) -> Result<(Vec<u32>, f64, usize), DeadlineExceeded> {
     let sweep_cfg = SweepConfig {
@@ -460,7 +539,7 @@ fn sweep_assign(
     };
     deadline.check("hier.sweep")?;
     let mut sweep_span = crate::obs::span("hier.sweep");
-    let sweep = rotation_sweep(
+    let sweep = rotation_sweep_cached(
         graph,
         tcoords,
         ncoords,
@@ -468,6 +547,7 @@ fn sweep_assign(
         &cfg.node_map,
         &sweep_cfg,
         backend,
+        cache,
     );
     let node_score = sweep.scores[sweep.chosen];
     sweep_span.record("node_score", node_score);
@@ -530,6 +610,7 @@ fn vcycle_assign(
     spec: EvalSpec,
     par: Parallelism,
     backend: &dyn WhopsBackend,
+    cache: &SweepCache,
     deadline: Deadline,
 ) -> Result<Option<(Vec<u32>, f64, usize, Vec<usize>)>, DeadlineExceeded> {
     let nn = alloc.num_nodes();
@@ -558,6 +639,7 @@ fn vcycle_assign(
         spec,
         par,
         backend,
+        cache,
         deadline,
     )?;
 

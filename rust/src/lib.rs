@@ -1,3 +1,7 @@
+// The `simd` feature routes `metrics::native::whops_row` through
+// `std::simd::f32x8` (nightly-only `portable_simd`); the default build
+// never sees this attribute.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # taskmap — geometric partitioning and ordering strategies for task
 //! mapping on parallel computers
 //!
@@ -85,3 +89,4 @@ pub mod runtime;
 pub mod sfc;
 pub mod simulate;
 pub mod testutil;
+pub mod util;

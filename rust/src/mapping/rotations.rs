@@ -17,7 +17,8 @@
 //! Per-candidate cost is kept allocation-free in steady state:
 //! * the processor-side partition is memoized per distinct processor-axis
 //!   permutation (candidates share up to `td!` of them) in a
-//!   [`ProcPartitionCache`],
+//!   [`SweepCache`] (keyed by task count + permutation, shareable across
+//!   sweeps on the same allocation),
 //! * task partitions run through per-worker [`MappingScratch`] arenas and
 //!   the zero-copy permuted-axes MJ entry point,
 //! * scoring streams edge chunks through per-worker [`ScoreScratch`]
@@ -39,7 +40,8 @@
 //! thread count.
 
 use super::{
-    map_tasks_with_proc, MapConfig, MapSpec, MappingScratch, ProcPartitionCache,
+    map_tasks_with_proc, prepare_proc_partition, MapConfig, MapSpec, MappingScratch,
+    ProcPartition,
 };
 use crate::apps::TaskGraph;
 use crate::geom::Coords;
@@ -483,6 +485,67 @@ pub fn score_mappings_par(
     })
 }
 
+/// Cross-sweep memo of proc-side partitions for a fixed
+/// `(pcoords, map_cfg)` context. Unlike [`super::ProcPartitionCache`] —
+/// which is
+/// scoped to one sweep and keys on the permutation alone — the task count
+/// is part of the key, so a single cache can serve several sweeps over
+/// *different* graphs against the same allocation (the service's batching
+/// stage). A partition is a pure function of `(pcoords, pperm, tnum,
+/// cfg)`, so a memoized entry is bit-identical to a freshly computed one
+/// and reuse can never change a mapping.
+#[derive(Default)]
+pub struct SweepCache {
+    entries: std::sync::Mutex<
+        std::collections::HashMap<(usize, Vec<usize>), std::sync::Arc<ProcPartition>>,
+    >,
+}
+
+impl SweepCache {
+    pub fn new() -> SweepCache {
+        SweepCache::default()
+    }
+
+    pub fn get(&self, tnum: usize, pperm: &[usize]) -> Option<std::sync::Arc<ProcPartition>> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(&(tnum, pperm.to_vec()))
+            .cloned()
+    }
+
+    /// Lookup, computing and caching on miss (outside the lock; concurrent
+    /// misses may compute twice — the results are identical, either wins).
+    pub fn get_or_compute(
+        &self,
+        pcoords: &Coords,
+        pperm: &[usize],
+        tnum: usize,
+        cfg: &MapConfig,
+        par: Parallelism,
+        scratch: &mut MjScratch,
+    ) -> std::sync::Arc<ProcPartition> {
+        if let Some(hit) = self.get(tnum, pperm) {
+            return hit;
+        }
+        let computed = prepare_proc_partition(pcoords, pperm, tnum, cfg, par, scratch);
+        self.entries
+            .lock()
+            .unwrap()
+            .entry((tnum, pperm.to_vec()))
+            .or_insert_with(|| std::sync::Arc::new(computed))
+            .clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// The full rotation sweep: generate candidates, map, score, pick the best
 /// under [`SweepConfig::objective`]. `pcoords` are the (possibly
 /// transformed) processor coordinates used for partitioning; scoring always
@@ -498,20 +561,47 @@ pub fn rotation_sweep(
     sweep: &SweepConfig,
     backend: &dyn WhopsBackend,
 ) -> SweepResult {
+    rotation_sweep_cached(
+        graph,
+        tcoords,
+        pcoords,
+        alloc,
+        map_cfg,
+        sweep,
+        backend,
+        &SweepCache::new(),
+    )
+}
+
+/// [`rotation_sweep`] with a caller-held [`SweepCache`]: proc-side
+/// partitions missing from the cache are computed and left in it, so
+/// consecutive sweeps against the same `(pcoords, map_cfg)` — the batched
+/// service path — skip phase 1 entirely after the first graph of each task
+/// count. With a fresh cache this *is* `rotation_sweep`.
+#[allow(clippy::too_many_arguments)]
+pub fn rotation_sweep_cached(
+    graph: &TaskGraph,
+    tcoords: &Coords,
+    pcoords: &Coords,
+    alloc: &Allocation,
+    map_cfg: &MapConfig,
+    sweep: &SweepConfig,
+    backend: &dyn WhopsBackend,
+    cache: &SweepCache,
+) -> SweepResult {
     let par = sweep.parallelism();
     let candidates = candidate_rotations(tcoords.dim(), pcoords.dim(), sweep.max_candidates);
     let tnum = tcoords.len();
 
     // Phase 1: the processor-side partition depends only on the proc
-    // permutation, so compute it once per distinct permutation (in
-    // parallel) and memoize.
+    // permutation (and the task count), so compute it once per distinct
+    // permutation (in parallel) and memoize.
     let mut distinct: Vec<Vec<usize>> = Vec::new();
     for (_, pp) in &candidates {
         if !distinct.iter().any(|q| q == pp) {
             distinct.push(pp.clone());
         }
     }
-    let cache = ProcPartitionCache::new();
     par::map_with(par, &distinct, MjScratch::new, |scratch, _i, pp| {
         cache.get_or_compute(pcoords, pp, tnum, map_cfg, Parallelism::sequential(), scratch);
     });
@@ -533,7 +623,9 @@ pub fn rotation_sweep(
         || (MappingScratch::new(), ObjectiveScratch::new()),
         |(map_scratch, score_scratch), _i, (tp, pp)| {
             let t0 = recording.then(std::time::Instant::now);
-            let proc = cache.get(pp).expect("proc partition precomputed in phase 1");
+            let proc = cache
+                .get(tnum, pp)
+                .expect("proc partition precomputed in phase 1");
             let mapping = map_tasks_with_proc(
                 tcoords,
                 tp,

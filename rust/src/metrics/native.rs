@@ -104,11 +104,64 @@ fn score_row(
 }
 
 /// Lanes of the unrolled accumulator: 8 independent partial sums match the
-/// f32x8 width the SIMD roadmap item targets, and break the loop-carried
+/// f32x8 width of the explicit-SIMD path, and break the loop-carried
 /// `acc` dependency so LLVM can keep 8 FMAs in flight.
 const LANES: usize = 8;
 
+/// One edge's weighted hop count. Shared by the scalar lanes and by the
+/// SIMD path's remainder loop, so both kernels price the tail with the
+/// exact same instruction sequence.
+#[inline(always)]
+fn edge_whops<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    dims_a: &[f32; D],
+    mesh: &[bool; D],
+    ei: usize,
+    wei: f32,
+) -> f32 {
+    let off = ei * D;
+    let mut hops = 0f32;
+    for k in 0..D {
+        let ad = (src[off + k] - dst[off + k]).abs();
+        let th = ad.min(dims_a[k] - ad);
+        hops += if mesh[k] { ad } else { th };
+    }
+    wei * hops
+}
+
+/// Default row kernel: autovectorizable 8-lane unroll.
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
 fn whops_row<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    e: usize,
+) -> f32 {
+    whops_row_scalar::<D>(src, dst, w, dims, wrap, e)
+}
+
+/// Row kernel under `--features simd`: explicit `std::simd` f32x8 lanes
+/// with the identical accumulation grouping, so results stay bit-for-bit
+/// equal to the default build.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn whops_row<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    e: usize,
+) -> f32 {
+    whops_row_simd::<D>(src, dst, w, dims, wrap, e)
+}
+
+#[cfg_attr(feature = "simd", allow(dead_code))] // simd builds keep it as the test arbiter
+fn whops_row_scalar<const D: usize>(
     src: &[f32],
     dst: &[f32],
     w: &[f32],
@@ -121,24 +174,6 @@ fn whops_row<const D: usize>(
     for k in 0..D {
         dims_a[k] = dims[k];
         mesh[k] = wrap[k] <= 0.0;
-    }
-    #[inline(always)]
-    fn edge_whops<const D: usize>(
-        src: &[f32],
-        dst: &[f32],
-        dims_a: &[f32; D],
-        mesh: &[bool; D],
-        ei: usize,
-        wei: f32,
-    ) -> f32 {
-        let off = ei * D;
-        let mut hops = 0f32;
-        for k in 0..D {
-            let ad = (src[off + k] - dst[off + k]).abs();
-            let th = ad.min(dims_a[k] - ad);
-            hops += if mesh[k] { ad } else { th };
-        }
-        wei * hops
     }
     // Manual 8-lane unroll: lane `j` accumulates edges `ei + j` of each
     // full block, the remainder runs scalar, and the lanes reduce pairwise
@@ -159,6 +194,62 @@ fn whops_row<const D: usize>(
         tail += edge_whops::<D>(src, dst, &dims_a, &mesh, ei, w[ei]);
     }
     (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// Explicit `std::simd` twin of [`whops_row_scalar`] (nightly-only;
+/// `--features simd`). SIMD lane `j` performs exactly the operations
+/// scalar lane `j` performs, in the same order — per lane: subtract, abs,
+/// (torus axes) min against `dims - ad`, accumulate `hops` axis by axis,
+/// multiply by the edge weight, add into the lane accumulator — and the
+/// final reduction uses the identical fixed pairwise tree, so every
+/// result bit matches the default build. All IEEE-exact ops, no FMA
+/// contraction, no reassociation.
+#[cfg(feature = "simd")]
+fn whops_row_simd<const D: usize>(
+    src: &[f32],
+    dst: &[f32],
+    w: &[f32],
+    dims: &[f32],
+    wrap: &[f32],
+    e: usize,
+) -> f32 {
+    use std::simd::f32x8;
+    use std::simd::num::SimdFloat;
+    let mut dims_a = [0f32; D];
+    let mut mesh = [false; D];
+    for k in 0..D {
+        dims_a[k] = dims[k];
+        mesh[k] = wrap[k] <= 0.0;
+    }
+    let mut acc = f32x8::splat(0.0);
+    let blocks = e / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        let mut hops = f32x8::splat(0.0);
+        for k in 0..D {
+            // Gather the k-th coordinate of the block's 8 edges (stride D).
+            let mut sa = [0f32; LANES];
+            let mut ta = [0f32; LANES];
+            for j in 0..LANES {
+                let off = (base + j) * D + k;
+                sa[j] = src[off];
+                ta[j] = dst[off];
+            }
+            let ad = (f32x8::from_array(sa) - f32x8::from_array(ta)).abs();
+            hops += if mesh[k] {
+                ad
+            } else {
+                ad.simd_min(f32x8::splat(dims_a[k]) - ad)
+            };
+        }
+        acc += f32x8::from_slice(&w[base..base + LANES]) * hops;
+    }
+    let mut tail = 0f32;
+    for ei in blocks * LANES..e {
+        tail += edge_whops::<D>(src, dst, &dims_a, &mesh, ei, w[ei]);
+    }
+    let a = acc.to_array();
+    (((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))) + tail
 }
 
 fn whops_row_dyn(
@@ -248,6 +339,51 @@ mod tests {
                 (got as f64 - want).abs() <= 1e-3 + want.abs() * 1e-5,
                 "e={e}: {got} vs {want}"
             );
+        }
+    }
+
+    /// `--features simd` acceptance: the explicit f32x8 kernel must be
+    /// bit-for-bit equal to the scalar 8-lane unroll across block
+    /// boundaries (full blocks, tails, tail-only, large), mixed
+    /// torus/mesh axes, and every const-D dispatch arm exercised here.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_row_kernel_bit_identical_to_scalar() {
+        use crate::testutil::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for d in [1usize, 2, 3, 6] {
+            let dims: Vec<f32> = (0..d).map(|k| (3 + 2 * k) as f32).collect();
+            let wrap: Vec<f32> = (0..d).map(|k| if k % 2 == 0 { 1.0 } else { 0.0 }).collect();
+            for e in [0usize, 1, 7, 8, 9, 16, 37, 1000] {
+                let coord = |rng: &mut Rng, k: usize| rng.below(dims[k % d] as usize) as f32;
+                let src: Vec<f32> = (0..e * d).map(|k| coord(&mut rng, k)).collect();
+                let dst: Vec<f32> = (0..e * d).map(|k| coord(&mut rng, k)).collect();
+                let w: Vec<f32> = (0..e).map(|_| rng.f64_range(0.0, 4.0) as f32).collect();
+                let (scalar, simd) = match d {
+                    1 => (
+                        whops_row_scalar::<1>(&src, &dst, &w, &dims, &wrap, e),
+                        whops_row_simd::<1>(&src, &dst, &w, &dims, &wrap, e),
+                    ),
+                    2 => (
+                        whops_row_scalar::<2>(&src, &dst, &w, &dims, &wrap, e),
+                        whops_row_simd::<2>(&src, &dst, &w, &dims, &wrap, e),
+                    ),
+                    3 => (
+                        whops_row_scalar::<3>(&src, &dst, &w, &dims, &wrap, e),
+                        whops_row_simd::<3>(&src, &dst, &w, &dims, &wrap, e),
+                    ),
+                    6 => (
+                        whops_row_scalar::<6>(&src, &dst, &w, &dims, &wrap, e),
+                        whops_row_simd::<6>(&src, &dst, &w, &dims, &wrap, e),
+                    ),
+                    _ => unreachable!(),
+                };
+                assert_eq!(
+                    scalar.to_bits(),
+                    simd.to_bits(),
+                    "d={d} e={e}: scalar {scalar} vs simd {simd}"
+                );
+            }
         }
     }
 

@@ -24,6 +24,7 @@
 //! harness runs them on multiple threads; tests that need *no* faults but
 //! must not see another test's plan install an empty plan to hold the lock.
 
+use crate::util::hash::{fnv1a_raw, splitmix64, GOLDEN};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
@@ -138,29 +139,12 @@ impl FaultPlan {
     }
 }
 
-const FNV_OFFSET: u64 = 0xcbf29ce484222325;
-const FNV_PRIME: u64 = 0x100000001b3;
-const GOLDEN: u64 = 0x9E3779B97F4A7C15;
-
-fn fnv1a(s: &str) -> u64 {
-    let mut h = FNV_OFFSET;
-    for b in s.as_bytes() {
-        h ^= u64::from(*b);
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
-
-fn splitmix64(mut z: u64) -> u64 {
-    z = z.wrapping_add(GOLDEN);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
-}
-
 /// Pure decision function: does hit number `hit` of `site` fire under `seed`
 /// with probability `probability`? This is the whole determinism story —
 /// no state, so any (seed, site, hit) triple always answers the same.
+/// The hash primitives live in [`crate::util::hash`] now, but the decision
+/// value is bit-for-bit what it always was (`fnv1a_raw` is the historical
+/// un-avalanched FNV-1a), so pinned chaos seeds keep their fire counts.
 pub fn would_fire(seed: u64, site: &str, hit: u64, probability: f64) -> bool {
     if probability <= 0.0 {
         return false;
@@ -168,7 +152,7 @@ pub fn would_fire(seed: u64, site: &str, hit: u64, probability: f64) -> bool {
     if probability >= 1.0 {
         return true;
     }
-    let h = splitmix64(seed ^ fnv1a(site) ^ hit.wrapping_mul(GOLDEN));
+    let h = splitmix64(seed ^ fnv1a_raw(site) ^ hit.wrapping_mul(GOLDEN));
     // Same 53-bit uniform construction as testutil::rng::Rng::f64.
     let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
     u < probability

@@ -1,0 +1,167 @@
+//! Canonical 64-bit content fingerprints over [`Json`] values.
+//!
+//! The service's result cache and batching stage key on *request
+//! identity*: two requests with the same fingerprint must describe the
+//! same computation. [`Json`] objects are `BTreeMap`s, so key order is
+//! already canonical; the walk below adds a type tag per node plus
+//! explicit lengths so distinct shapes can't collide by concatenation
+//! (e.g. `["ab"]` vs `["a","b"]`), and normalizes `-0.0` to `0.0` so the
+//! two JSON spellings of zero — which every numeric consumer in the crate
+//! treats identically — share a key.
+//!
+//! This is FNV-1a + a splitmix64 avalanche, not a cryptographic hash: a
+//! 64-bit collision between two *different* requests is possible in
+//! principle but needs ~2^32 distinct live entries to become likely —
+//! the cache holds a few hundred. Keys never leave the process.
+
+use super::hash::Fnv1a;
+use crate::testutil::json::Json;
+
+const TAG_NULL: u8 = 0;
+const TAG_FALSE: u8 = 1;
+const TAG_TRUE: u8 = 2;
+const TAG_NUM: u8 = 3;
+const TAG_STR: u8 = 4;
+const TAG_ARR: u8 = 5;
+const TAG_OBJ: u8 = 6;
+
+fn walk(v: &Json, h: &mut Fnv1a) {
+    match v {
+        Json::Null => h.write_u8(TAG_NULL),
+        Json::Bool(false) => h.write_u8(TAG_FALSE),
+        Json::Bool(true) => h.write_u8(TAG_TRUE),
+        Json::Num(n) => {
+            h.write_u8(TAG_NUM);
+            let n = if *n == 0.0 { 0.0 } else { *n };
+            h.write_u64(n.to_bits());
+        }
+        Json::Str(s) => {
+            h.write_u8(TAG_STR);
+            h.write_str(s);
+        }
+        Json::Arr(items) => {
+            h.write_u8(TAG_ARR);
+            h.write_u64(items.len() as u64);
+            for item in items {
+                walk(item, h);
+            }
+        }
+        Json::Obj(map) => {
+            h.write_u8(TAG_OBJ);
+            h.write_u64(map.len() as u64);
+            for (k, item) in map {
+                h.write_str(k);
+                walk(item, h);
+            }
+        }
+    }
+}
+
+/// Canonical fingerprint of a full [`Json`] value.
+pub fn fingerprint(v: &Json) -> u64 {
+    let mut h = Fnv1a::new();
+    walk(v, &mut h);
+    h.finish()
+}
+
+/// Fingerprint of `v` with the named *top-level object keys* left out.
+///
+/// The service uses this to exclude fields that don't change the computed
+/// mapping from the cache key (`"cache"`, `"profile"`), and to exclude the
+/// per-request task set (`"tcoords"`, `"edges"`) from the batching
+/// compatibility key. For non-object values the skip list is irrelevant
+/// and this equals [`fingerprint`].
+pub fn fingerprint_excluding(v: &Json, skip: &[&str]) -> u64 {
+    let Json::Obj(map) = v else {
+        return fingerprint(v);
+    };
+    let mut h = Fnv1a::new();
+    h.write_u8(TAG_OBJ);
+    let kept = map.iter().filter(|(k, _)| !skip.contains(&k.as_str()));
+    h.write_u64(kept.clone().count() as u64);
+    for (k, item) in kept {
+        h.write_str(k);
+        walk(item, &mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::json::Json;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).expect("test JSON parses")
+    }
+
+    #[test]
+    fn equal_values_share_a_fingerprint_regardless_of_key_order() {
+        let a = parse(r#"{"op":"map","tcoords":[[0,0],[1,0]],"torus":true}"#);
+        let b = parse(r#"{"torus":true,"op":"map","tcoords":[[0,0],[1,0]]}"#);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn distinct_shapes_do_not_collide_by_concatenation() {
+        let pairs = [
+            (r#"["ab"]"#, r#"["a","b"]"#),
+            (r#"{"a":1,"b":2}"#, r#"{"a":1}"#),
+            (r#"[1,2]"#, r#"[[1,2]]"#),
+            (r#""1""#, r#"1"#),
+            (r#"[0]"#, r#"[false]"#),
+            (r#"null"#, r#"[]"#),
+        ];
+        for (x, y) in pairs {
+            assert_ne!(
+                fingerprint(&parse(x)),
+                fingerprint(&parse(y)),
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_zero_normalizes() {
+        assert_eq!(
+            fingerprint(&Json::Num(0.0)),
+            fingerprint(&Json::Num(-0.0))
+        );
+        assert_ne!(fingerprint(&Json::Num(0.0)), fingerprint(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn excluding_ignores_only_the_named_top_level_keys() {
+        let a = parse(r#"{"op":"map","cache":false,"profile":true,"torus":true}"#);
+        let b = parse(r#"{"op":"map","torus":true}"#);
+        let skip = ["cache", "profile"];
+        assert_eq!(
+            fingerprint_excluding(&a, &skip),
+            fingerprint_excluding(&b, &skip)
+        );
+        assert_eq!(fingerprint_excluding(&b, &skip), fingerprint(&b));
+        // A *nested* "cache" key is data, not a control field.
+        let c = parse(r#"{"op":"map","hier":{"cache":1},"torus":true}"#);
+        let d = parse(r#"{"op":"map","hier":{},"torus":true}"#);
+        assert_ne!(
+            fingerprint_excluding(&c, &skip),
+            fingerprint_excluding(&d, &skip)
+        );
+    }
+
+    #[test]
+    fn task_set_excluded_key_groups_compatible_requests() {
+        let a = parse(r#"{"op":"map","tcoords":[[0,0]],"torus":true,"ordering":"hilbert"}"#);
+        let b = parse(r#"{"op":"map","tcoords":[[1,1],[2,2]],"torus":true,"ordering":"hilbert"}"#);
+        let c = parse(r#"{"op":"map","tcoords":[[0,0]],"torus":false,"ordering":"hilbert"}"#);
+        let skip = ["tcoords", "edges", "cache", "profile"];
+        assert_eq!(
+            fingerprint_excluding(&a, &skip),
+            fingerprint_excluding(&b, &skip)
+        );
+        assert_ne!(
+            fingerprint_excluding(&a, &skip),
+            fingerprint_excluding(&c, &skip)
+        );
+    }
+}

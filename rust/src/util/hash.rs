@@ -1,0 +1,129 @@
+//! FNV-1a and splitmix64: the crate's two non-cryptographic mixing
+//! primitives, shared by fault-injection decisions (`testutil::faults`),
+//! RNG stream seeding (`testutil::rng`) and request fingerprinting
+//! ([`super::fingerprint`]).
+//!
+//! The constants and round functions are the canonical published ones;
+//! `testutil::faults::would_fire`'s decision sequence is a pure function of
+//! them, so they must never change (chaos seeds pin exact fire counts).
+
+/// 64-bit FNV-1a offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// 64-bit FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+/// The golden-ratio increment used by splitmix64 (and to decorrelate
+/// composite hash inputs).
+pub const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// FNV-1a over a string's UTF-8 bytes.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(s.as_bytes());
+    h.finish()
+}
+
+/// splitmix64 finalizer: one strong 64→64-bit mix (advances by [`GOLDEN`]
+/// first, matching the published generator's output for state `z`).
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Streaming FNV-1a hasher for composite keys (the fingerprint module
+/// feeds type tags, lengths, and payload bytes through one of these).
+#[derive(Clone, Debug)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a { state: FNV_OFFSET }
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.state ^= u64::from(b);
+        self.state = self.state.wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for b in bytes {
+            self.write_u8(*b);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    /// Finish with a splitmix64 avalanche so short inputs still spread
+    /// over all 64 bits (plain FNV-1a is weak in the high bits).
+    pub fn finish(&self) -> u64 {
+        splitmix64(self.state)
+    }
+
+    /// Raw FNV-1a state without the final mix — what the historical
+    /// `fnv1a(site)` helper returned; `would_fire` depends on this value.
+    pub fn finish_raw(&self) -> u64 {
+        self.state
+    }
+}
+
+/// FNV-1a over a string *without* the final avalanche — byte-for-byte the
+/// function `testutil::faults` always used for site names.
+pub fn fnv1a_raw(s: &str) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(s.as_bytes());
+    h.finish_raw()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit vectors.
+        assert_eq!(fnv1a_raw(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_raw("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_raw("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn splitmix64_matches_reference_sequence() {
+        // First three outputs of the published splitmix64 generator
+        // seeded with 1234567: state advances by GOLDEN each call, and
+        // our finalizer form gives output k as splitmix64(seed + k*GOLDEN).
+        let seed = 1234567u64;
+        let expect = [
+            0x599ed017fb08fc85u64,
+            0x2c73f08458540fa5u64,
+            0x883ebce5a3f27c77u64,
+        ];
+        for (k, e) in expect.iter().enumerate() {
+            assert_eq!(splitmix64(seed.wrapping_add(GOLDEN * k as u64)), *e);
+        }
+    }
+
+    #[test]
+    fn streaming_hasher_matches_oneshot() {
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish_raw(), fnv1a_raw("foobar"));
+        assert_eq!(h.finish(), fnv1a("foobar"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities with no dependencies on the rest of the crate.
+//!
+//! * [`hash`] — the FNV-1a / splitmix64 mixing primitives previously
+//!   duplicated between `testutil::faults` and `testutil::rng`, now the
+//!   single hash implementation for fault-decision seeding, RNG stream
+//!   setup, and request fingerprinting.
+//! * [`fingerprint`] — a canonical 64-bit content fingerprint over
+//!   [`crate::testutil::json::Json`] values, used by the service's result
+//!   cache and batching stage to key on full request identity.
+
+pub mod fingerprint;
+pub mod hash;

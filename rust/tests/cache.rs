@@ -1,0 +1,215 @@
+//! Determinism suite for the service result cache and request batching.
+//!
+//! The whole point of caching/batching a mapping service whose parallel
+//! paths are bit-identical to sequential execution: a cached, coalesced,
+//! or batched reply must be **exactly** the reply a cold, solo run would
+//! have produced — at every worker count, for every op family (flat map,
+//! hierarchical, hierarchical + coarsening, non-torus topology). These
+//! tests pin that, plus the counter bookkeeping (`hits`/`misses`/
+//! `inserts`/`bypass`, `flushes + coalesced == jobs`), the per-request
+//! `"cache":false` opt-out, and strict validation of the `"cache"` field.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use taskmap::coordinator::service::{error_kind, Client, ErrorKind, Service, ServiceConfig};
+use taskmap::testutil::json::Json;
+
+fn svc(workers: usize, cache_capacity: usize, batch_window_ms: u64) -> Service {
+    Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers,
+            cache_capacity,
+            batch_window: Duration::from_millis(batch_window_ms),
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// 8 tasks on a 4x2 grid, optionally shifted so each `variant` is a
+/// distinct task set over the same allocation.
+fn grid_tcoords(variant: usize) -> String {
+    let rows: Vec<String> = (0..8)
+        .map(|i| {
+            let t = (i + variant) % 8;
+            format!("[{}.0,{}.0]", t / 2, t % 2)
+        })
+        .collect();
+    rows.join(",")
+}
+
+/// A ring over the 8 tasks with variant-scaled weights.
+fn ring_edges(variant: usize) -> String {
+    let rows: Vec<String> = (0..8)
+        .map(|i| {
+            let w = (variant + 1) as f64 * ((i % 3) as f64 + 1.0);
+            format!("[{},{},{w}]", i, (i + 1) % 8)
+        })
+        .collect();
+    rows.join(",")
+}
+
+/// 2x2 torus, 2 ranks per node.
+const TORUS_PCOORDS: &str = "[0,0],[0,0],[0,1],[0,1],[1,0],[1,0],[1,1],[1,1]";
+
+fn req_flat() -> Json {
+    let t: Vec<String> = (0..8).map(|i| format!("[{i}.0]")).collect();
+    let p: Vec<String> = (0..8).map(|i| format!("[{}.0]", 7 - i)).collect();
+    Json::parse(&format!(
+        r#"{{"op":"map","tcoords":[{}],"pcoords":[{}]}}"#,
+        t.join(","),
+        p.join(",")
+    ))
+    .unwrap()
+}
+
+/// Hierarchical map over the torus allocation; `extra` splices additional
+/// top-level fields (e.g. `,"cache":false`).
+fn req_hier_with(variant: usize, extra: &str) -> Json {
+    Json::parse(&format!(
+        concat!(
+            r#"{{"op":"map","tcoords":[{}],"pcoords":[{}],"edges":[{}],"#,
+            r#""hier":{{"ranks_per_node":2,"strategy":"minvol","rotations":4}}{}}}"#
+        ),
+        grid_tcoords(variant),
+        TORUS_PCOORDS,
+        ring_edges(variant),
+        extra
+    ))
+    .unwrap()
+}
+
+fn req_hier() -> Json {
+    req_hier_with(0, "")
+}
+
+fn req_hier_coarsen() -> Json {
+    req_hier_with(0, r#","coarsen":{"target_tasks":4}"#)
+}
+
+/// The same workload on a 2-level radix-2 fat-tree (4 leaves).
+fn req_hier_fattree() -> Json {
+    Json::parse(&format!(
+        concat!(
+            r#"{{"op":"map","tcoords":[{}],"pcoords":[[0],[0],[1],[1],[2],[2],[3],[3]],"#,
+            r#""edges":[{}],"hier":{{"ranks_per_node":2,"strategy":"minvol","rotations":4}},"#,
+            r#""topology":{{"fattree":{{"levels":2,"radix":2}}}}}}"#
+        ),
+        grid_tcoords(0),
+        ring_edges(0)
+    ))
+    .unwrap()
+}
+
+#[test]
+fn cached_replies_bit_identical_to_cold_across_worker_counts() {
+    let reqs = [req_flat(), req_hier(), req_hier_coarsen(), req_hier_fattree()];
+    for &workers in &[1usize, 2, 8] {
+        let off = svc(workers, 0, 0);
+        let on = svc(workers, 256, 0);
+        let mut c_off = Client::connect(off.addr).unwrap();
+        let mut c_on = Client::connect(on.addr).unwrap();
+        for req in &reqs {
+            let cold = c_off.request(req).unwrap();
+            assert_eq!(cold.get("ok"), Some(&Json::Bool(true)), "{cold:?}");
+            let miss = c_on.request(req).unwrap();
+            let hit = c_on.request(req).unwrap();
+            assert_eq!(miss, cold, "workers={workers}: miss path must equal cache-off");
+            assert_eq!(hit, cold, "workers={workers}: cached reply must be identical");
+        }
+        // Cache-off stats carry no cache section; cache-on counters
+        // reconcile exactly: each request missed once, hit once.
+        assert!(off.stats().get("cache").is_none());
+        let s = on.stats();
+        let cache = s.get("cache").expect("stats carry a cache section");
+        let n = reqs.len() as f64;
+        let field = |k: &str| cache.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(field("misses"), n, "{s:?}");
+        assert_eq!(field("hits"), n, "{s:?}");
+        assert_eq!(field("inserts"), n, "{s:?}");
+        assert_eq!(field("entries"), n, "{s:?}");
+        assert_eq!(field("evictions"), 0.0, "{s:?}");
+        assert_eq!(field("bypass"), 0.0, "{s:?}");
+        on.stop();
+        off.stop();
+    }
+}
+
+#[test]
+fn cache_opt_out_bypasses_and_validation_stays_strict() {
+    let on = svc(2, 256, 0);
+    let mut c = Client::connect(on.addr).unwrap();
+    // Warm the entry, then opt out: the reply is still identical (pure
+    // function) but comes from a fresh computation — bypass advances,
+    // hits do not.
+    let warm = c.request(&req_hier()).unwrap();
+    assert_eq!(warm.get("ok"), Some(&Json::Bool(true)), "{warm:?}");
+    let fresh = c.request(&req_hier_with(0, r#","cache":false"#)).unwrap();
+    assert_eq!(fresh, warm, "opt-out recomputes the identical reply");
+    let s = on.stats();
+    let cache = s.get("cache").unwrap();
+    assert_eq!(cache.get("bypass").and_then(|v| v.as_f64()), Some(1.0), "{s:?}");
+    assert_eq!(cache.get("hits").and_then(|v| v.as_f64()), Some(0.0), "{s:?}");
+    // A malformed "cache" value is a structured validation error — even
+    // though the entry is warm, validation runs first.
+    let bad = c.request(&req_hier_with(0, r#","cache":"yes""#)).unwrap();
+    assert_eq!(error_kind(&bad), Some(ErrorKind::InvalidRequest), "{bad:?}");
+    // "cache" is a map-only field: eval rejects it.
+    let eval = Json::parse(concat!(
+        r#"{"op":"eval","map":[0,1,2,3],"edges":[[0,1,2.5]],"#,
+        r#""pcoords":[[0,0],[0,0],[1,0],[1,0]],"ranks_per_node":2,"cache":false}"#
+    ))
+    .unwrap();
+    let resp = c.request(&eval).unwrap();
+    assert_eq!(error_kind(&resp), Some(ErrorKind::InvalidRequest), "{resp:?}");
+    on.stop();
+}
+
+#[test]
+fn batched_replies_bit_identical_to_unbatched_across_worker_counts() {
+    // Three compatible requests: same allocation + hier config (one batch
+    // group), different task graphs.
+    let variants: Vec<Json> = (0..3).map(|v| req_hier_with(v, "")).collect();
+    for &workers in &[1usize, 2, 8] {
+        let solo = svc(workers, 0, 0); // no cache, no batching
+        let batched = svc(workers, 0, 25); // no cache, 25 ms batch window
+        let mut c = Client::connect(solo.addr).unwrap();
+        let want: Vec<Json> = variants
+            .iter()
+            .map(|r| {
+                let resp = c.request(r).unwrap();
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                resp
+            })
+            .collect();
+        let barrier = Arc::new(Barrier::new(variants.len()));
+        let handles: Vec<_> = variants
+            .iter()
+            .cloned()
+            .map(|req| {
+                let barrier = Arc::clone(&barrier);
+                let addr = batched.addr;
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    Client::connect(addr).unwrap().request(&req).unwrap()
+                })
+            })
+            .collect();
+        let got: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g, w, "workers={workers}: batched reply must equal solo");
+        }
+        // The flush accounting always reconciles; how much actually
+        // coalesced depends on timing, which the invariant absorbs.
+        let s = batched.stats();
+        let b = s.get("batch").expect("stats carry a batch section");
+        let field = |k: &str| b.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(field("jobs"), variants.len() as f64, "{s:?}");
+        assert_eq!(field("flushes") + field("coalesced"), field("jobs"), "{s:?}");
+        assert!(solo.stats().get("batch").is_none());
+        batched.stop();
+        solo.stop();
+    }
+}

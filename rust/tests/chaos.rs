@@ -462,6 +462,132 @@ fn retry_client_rides_out_transient_overload() {
     svc.stop();
 }
 
+/// A small hierarchical map request — the cached/batched op family.
+fn hier_map_req() -> Json {
+    Json::parse(concat!(
+        r#"{"op":"map","tcoords":[[0,0],[0,1],[1,0],[1,1]],"#,
+        r#""pcoords":[[0,0],[0,0],[1,0],[1,0]],"#,
+        r#""edges":[[0,1,2.5],[2,3,1.0]],"hier":{"ranks_per_node":2}}"#
+    ))
+    .unwrap()
+}
+
+#[test]
+fn cache_leader_panic_fails_over_cleanly_and_never_poisons_the_cache() {
+    // Arm exactly one panic at the cache-miss leader site: the first
+    // request to win the single-flight slot dies mid-compute while
+    // identical requests are coalesced behind it.
+    let guard = install(FaultPlan::new(fault_seed()).site_limited(
+        "service.cache.leader.panic",
+        FaultAction::Panic,
+        1.0,
+        1,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 4,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    const CLIENTS: usize = 4;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let mut client = Client::connect(addr).unwrap();
+                client.request(&hier_map_req()).unwrap()
+            })
+        })
+        .collect();
+    // Invariant: every follower is answered — an internal error (leader
+    // died while they waited) or a fresh successful computation — never a
+    // hang and never a poisoned reply.
+    let (mut oks, mut internals) = (0usize, 0usize);
+    for h in handles {
+        let resp = h.join().unwrap();
+        if resp.get("ok") == Some(&Json::Bool(true)) {
+            assert!(resp.get("map").is_some(), "{resp:?}");
+            oks += 1;
+        } else {
+            assert_eq!(error_kind(&resp), Some(ErrorKind::Internal), "{resp:?}");
+            internals += 1;
+        }
+    }
+    assert_eq!(oks + internals, CLIENTS);
+    assert!(
+        internals >= 1,
+        "the panicking leader itself must surface an internal error"
+    );
+    assert_eq!(guard.plan().fires("service.cache.leader.panic"), 1);
+    // The failed flight was un-poisoned: a fresh identical request
+    // computes (or hits a successfully recomputed entry), and a repeat is
+    // served from the cache bit-identically.
+    let mut client = Client::connect(addr).unwrap();
+    let first = client.request(&hier_map_req()).unwrap();
+    assert_eq!(first.get("ok"), Some(&Json::Bool(true)), "{first:?}");
+    let second = client.request(&hier_map_req()).unwrap();
+    assert_eq!(first, second, "cached reply must match the computed one");
+    let s = stats(addr);
+    let cache = s.get("cache").expect("stats carry a cache section");
+    assert_eq!(
+        cache.get("leader_failures").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "{s:?}"
+    );
+    assert!(
+        cache.get("hits").and_then(|v| v.as_f64()).unwrap() >= 1.0,
+        "{s:?}"
+    );
+    svc.stop();
+}
+
+#[test]
+fn slow_cache_lookups_still_answer_every_request() {
+    // A stalled lookup path (e.g. shard-lock contention) must delay, not
+    // drop or corrupt: every request is answered with the identical reply
+    // and the hit/miss accounting stays exact.
+    let guard = install(FaultPlan::new(fault_seed()).site(
+        "service.cache.lookup",
+        FaultAction::SleepMs(20),
+        1.0,
+    ));
+    let svc = Service::start_with(
+        "127.0.0.1:0",
+        ServiceConfig {
+            workers: 2,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(svc.addr).unwrap();
+    const REQS: usize = 4;
+    let mut replies = Vec::new();
+    for _ in 0..REQS {
+        let resp = client.request(&hier_map_req()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        replies.push(resp);
+    }
+    assert!(
+        replies.windows(2).all(|w| w[0] == w[1]),
+        "cached replies must be identical to the cold one"
+    );
+    assert_eq!(guard.plan().hits("service.cache.lookup"), REQS as u64);
+    let s = stats(svc.addr);
+    let cache = s.get("cache").expect("stats carry a cache section");
+    assert_eq!(cache.get("misses").and_then(|v| v.as_f64()), Some(1.0), "{s:?}");
+    assert_eq!(
+        cache.get("hits").and_then(|v| v.as_f64()),
+        Some((REQS - 1) as f64),
+        "{s:?}"
+    );
+    svc.stop();
+}
+
 #[test]
 fn fault_decisions_reproduce_bit_for_bit_across_pool_sizes() {
     let seed = fault_seed();
